@@ -1,0 +1,107 @@
+//! Use case 1 (paper §1): DDoS white/blacklisting in the switch —
+//! the accuracy-vs-SRAM comparison against exact-match lookup tables
+//! (experiment E8).
+//!
+//! Uses the JAX-trained model from `make artifacts`. Sweeps the LUT's
+//! SRAM budget to show the crossover the paper's motivation predicts:
+//! point entries cannot cover subnet-structured attackers, while the
+//! BNN generalizes from ~4 kbit of weights.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example ddos_filter
+//! ```
+
+use n2net::apps::DdosFilter;
+use n2net::baseline::LutClassifier;
+use n2net::bnn;
+use n2net::net::{TraceGenerator, TraceKind};
+use n2net::rmt::ChipConfig;
+use n2net::runtime::Oracle;
+use n2net::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Oracle::default_dir();
+    let (model, doc) = bnn::load_weights(dir.join("weights.json"))?;
+    println!(
+        "trained model: {}b -> {:?}, python test accuracy {:.2}%",
+        model.spec.in_bits,
+        model.spec.layer_sizes,
+        doc.metrics.test_accuracy_packed * 100.0
+    );
+    println!(
+        "blacklist structure: {} attacker subnets (/12../20)\n",
+        doc.ddos.subnets.len()
+    );
+
+    // The in-switch BNN filter.
+    let mut filter = DdosFilter::new(&model, ChipConfig::rmt(), doc.ddos.clone())?;
+    let n_packets = 4000;
+    let mut gen = TraceGenerator::new(1234);
+    let trace = gen.generate(&TraceKind::Ddos { ddos: doc.ddos.clone() }, n_packets);
+    let bnn_eval = filter.evaluate(&trace)?;
+    println!(
+        "BNN on switch: accuracy {:.2}%  FPR {:.2}%  FNR {:.2}%  (weights: {} bits)",
+        bnn_eval.accuracy * 100.0,
+        bnn_eval.false_positive_rate * 100.0,
+        bnn_eval.false_negative_rate * 100.0,
+        filter.compiled.resources.weight_bits,
+    );
+    let t = filter.compiled.chip.timing(&filter.compiled.program);
+    println!(
+        "modeled line rate: {:.0} M packets/s classified in-network\n",
+        t.pps / 1e6
+    );
+
+    // LUT baseline across SRAM budgets (E8's crossover series).
+    println!("exact-match LUT baseline vs SRAM budget:");
+    println!(
+        "{:>14} {:>10} {:>10} {:>8} {:>8}",
+        "SRAM (bits)", "entries", "accuracy", "FPR", "FNR"
+    );
+    let mut rng = Rng::seed_from_u64(55);
+    for budget_bits in [
+        4_096usize, // what the BNN uses
+        65_536,
+        1_048_576,  // 1 Mbit
+        11_562_500, // one element's full SRAM
+    ] {
+        let mut lut = LutClassifier::with_budget_bits(budget_bits);
+        lut.populate_from(&doc.ddos, &mut rng);
+        let (mut fp, mut fng, mut pos, mut neg, mut correct) = (0, 0, 0usize, 0usize, 0usize);
+        for (&k, &l) in trace.keys.iter().zip(&trace.labels) {
+            let p = lut.classify(k);
+            if p == l {
+                correct += 1;
+            }
+            if l == 1 {
+                pos += 1;
+                if p == 0 {
+                    fng += 1;
+                }
+            } else {
+                neg += 1;
+                if p == 1 {
+                    fp += 1;
+                }
+            }
+        }
+        println!(
+            "{:>14} {:>10} {:>9.2}% {:>7.2}% {:>7.2}%",
+            budget_bits,
+            lut.n_entries(),
+            correct as f64 / n_packets as f64 * 100.0,
+            fp as f64 / neg.max(1) as f64 * 100.0,
+            fng as f64 / pos.max(1) as f64 * 100.0,
+        );
+    }
+
+    println!(
+        "\nE8 takeaway: the attacker population (~{} /12../20 subnets ≈ millions of\n\
+         addresses) cannot be enumerated in point entries — even 1 Mbit of SRAM\n\
+         leaves the LUT near chance on unseen attackers, while the {}-bit BNN\n\
+         generalizes across each subnet at line rate.",
+        doc.ddos.subnets.len(),
+        filter.compiled.resources.weight_bits,
+    );
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Use case 2 (paper §1): the switch writes the BNN output into the
+//! header as a *hint* the downstream servers use for load balancing /
+//! data placement (cf. Sharma et al., NSDI'17 — the paper's ref [15]).
+//!
+//! The BNN's output bits select a server queue: packets with similar
+//! header features land together (locality), flows stay affine, and the
+//! population spreads. Compared against plain flow hashing.
+//!
+//! ```bash
+//! cargo run --release --example lb_hints
+//! ```
+
+use n2net::apps::lb_hints::{hash_route_report, HintRouter};
+use n2net::bnn::BnnModel;
+use n2net::net::{TraceGenerator, TraceKind};
+use n2net::rmt::ChipConfig;
+
+fn main() -> anyhow::Result<()> {
+    // A compact BNN producing a 16-bit feature vector; the low 2 bits
+    // select one of 4 server queues.
+    let model = BnnModel::random(32, &[16], 77);
+    let hint_bits = 2;
+    let mut router = HintRouter::new(&model, ChipConfig::rmt(), hint_bits)?;
+    println!(
+        "hint router: {}b IP -> {} neurons, {} hint bits -> {} servers",
+        model.spec.in_bits,
+        model.spec.layer_sizes[0],
+        hint_bits,
+        1 << hint_bits
+    );
+    print!("{}", router.compiled.resource_report());
+    println!();
+
+    let mut gen = TraceGenerator::new(31);
+    for (name, kind, n) in [
+        ("uniform IPs", TraceKind::UniformIps, 8000),
+        ("zipf flows (100)", TraceKind::ZipfFlows { n_flows: 100 }, 8000),
+    ] {
+        let trace = gen.generate(&kind, n);
+        let bnn = router.evaluate(&trace)?;
+        let hash = hash_route_report(&trace, hint_bits);
+        println!("--- workload: {name} ({n} packets) ---");
+        println!("  {}", bnn.render("BNN hints "));
+        println!("  {}", hash.render("flow hash "));
+    }
+
+    println!(
+        "\nthe BNN hint is computed at line rate inside the switch and carried\n\
+         in the header — the server reads a single field instead of re-running\n\
+         its own classifier (the paper's \"hints to a more complex processor\")."
+    );
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Multi-model extension: one pipeline program, several BNNs — a packet
+//! header field selects the weights per packet (tenant / policy id).
+//!
+//! The paper pre-configures one model's weights into the element SRAMs;
+//! the match stage makes that SRAM *addressable*: keying the XNOR
+//! elements' tables on a model-id container serves many models from the
+//! same 30-element program at the same line rate, paying only table
+//! entries (SRAM), not pipeline stages.
+//!
+//! ```bash
+//! cargo run --release --example multi_tenant
+//! ```
+
+use n2net::bnn::{self, BnnModel, PackedBits};
+use n2net::compiler::{Compiler, CompilerOptions, InputEncoding, MultiModelOptions};
+use n2net::rmt::{ChipConfig, Pipeline};
+use n2net::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // Three tenants, one architecture. (32+16 rather than the paper's
+    // full-capacity 64+32: reserving a PHV container for the tenant id
+    // costs one container, and 64 parallel neurons use all 128 — with
+    // the id reserved, the 64+32 shape still compiles but spills to two
+    // passes. A real constraint, worth knowing.)
+    let tenants: Vec<(u32, BnnModel)> = vec![
+        (1001, BnnModel::random(32, &[32, 16], 11)),
+        (2002, BnnModel::random(32, &[32, 16], 22)),
+        (3003, BnnModel::random(32, &[32, 16], 33)),
+    ];
+
+    let opts = CompilerOptions {
+        // Packet: [tenant id u32 LE][activation words LE].
+        input: InputEncoding::PayloadLe { offset: 4 },
+        ..Default::default()
+    };
+    let compiled = Compiler::new(ChipConfig::rmt(), opts)
+        .compile_multi(&tenants, MultiModelOptions { id_offset: 0 })?;
+
+    println!("one program, {} tenants:", tenants.len());
+    print!("{}", compiled.resource_report());
+    println!(
+        "(same {} elements as a single-model deployment — extra models cost \
+         SRAM entries, not stages)\n",
+        compiled.program.n_elements()
+    );
+
+    let mut pipe = Pipeline::new(
+        ChipConfig::rmt(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        false,
+    )?;
+
+    // Same activation vector, three tenants → three different answers,
+    // each bit-exact with that tenant's reference model.
+    let mut rng = Rng::seed_from_u64(9);
+    let x = PackedBits::random(32, &mut rng);
+    println!("activations: {x:?}");
+    for (id, model) in &tenants {
+        let mut pkt = id.to_le_bytes().to_vec();
+        for w in x.words() {
+            pkt.extend_from_slice(&w.to_le_bytes());
+        }
+        let out = compiled.read_output(&pipe.process_packet(&pkt)?);
+        let expect = bnn::forward(model, &x);
+        assert_eq!(out, expect);
+        println!(
+            "tenant {id}: output {:08x} (≡ tenant's reference model ✓)",
+            out.words()[0]
+        );
+    }
+    println!("\nall tenants served by the same pipeline at line rate.");
+    Ok(())
+}

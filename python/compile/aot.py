@@ -1,0 +1,173 @@
+"""AOT export: train -> weights.json + model.hlo.txt (+ meta.json).
+
+Interchange format is HLO **text**, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (all consumed by the Rust side):
+
+* ``model.hlo.txt``  — packed BNN forward pass, fixed batch; lowered from
+  the same jaxpr the pytest suite validates (Pallas kernel, interpret
+  mode). Executed from Rust via PJRT as the golden oracle.
+* ``weights.json``   — packed per-layer weights + BnnSpec + the DDoS
+  distribution parameters + training metrics. Input to the N2Net
+  compiler (rust/src/compiler) and the Rust trace generator.
+* ``meta.json``      — artifact shape manifest for the Rust runtime
+  (batch, words, output arities), so shape handling is data-driven.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset, model, train
+from .kernels import ref
+
+ORACLE_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forward(spec: model.BnnSpec, batch: int) -> str:
+    """Lower the packed forward pass with weights as *parameters*.
+
+    Signature of the lowered function:
+    (x_packed u32[batch, W0], w_0 u32[M_0, W_0], ..., w_{L-1}) ->
+    tuple(final_popcount i32[batch, M_last], sign_packed_0, ..., sign_packed_L-1)
+    — per-layer packed sign bits so Rust can cross-check every pipeline
+    layer, not just the output.
+
+    Weights MUST be parameters, not closed-over constants: the HLO text
+    printer elides large constants (`constant({...})`), which the old
+    XLA 0.5.1 text parser then reads back as garbage. Parameters also
+    mean one artifact serves any weights of the same architecture — the
+    Rust runtime feeds the weights it loaded from weights.json.
+    """
+
+    def fwd(x_packed, *wts):
+        pop, signs = model.forward_packed(spec, list(wts), x_packed)
+        return (pop, *signs)
+
+    x_spec = jax.ShapeDtypeStruct((batch, ref.n_words(spec.in_bits)), jnp.uint32)
+    w_specs = [
+        jax.ShapeDtypeStruct((m, ref.n_words(n)), jnp.uint32)
+        for (m, n) in spec.layer_shapes()
+    ]
+    lowered = jax.jit(fwd).lower(x_spec, *w_specs)
+    text = to_hlo_text(lowered)
+    if "constant({...}" in text:
+        raise RuntimeError(
+            "HLO text contains elided large constants — they would load as "
+            "garbage in the Rust runtime; keep weights as parameters"
+        )
+    return text
+
+
+def export(out_dir: str, cfg: train.TrainConfig | None = None, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = cfg or train.TrainConfig()
+    if verbose:
+        print(f"[aot] training {cfg.spec.layer_sizes} BNN on synthetic DDoS task")
+    _params, packed, metrics, ddos = train.train(cfg, verbose=verbose)
+
+    weights_doc = {
+        "format": "n2net-weights-v1",
+        "spec": {
+            "in_bits": cfg.spec.in_bits,
+            "layer_sizes": list(cfg.spec.layer_sizes),
+        },
+        "layers": [
+            {
+                "neurons": m,
+                "in_bits": n,
+                "threshold": (n + 1) // 2,
+                "weights_packed": [[int(v) for v in row] for row in w],
+            }
+            for (m, n), w in zip(cfg.spec.layer_shapes(), packed)
+        ],
+        "ddos": ddos.to_json(),
+        "metrics": metrics,
+    }
+    wpath = os.path.join(out_dir, "weights.json")
+    with open(wpath, "w") as f:
+        json.dump(weights_doc, f)
+    if verbose:
+        print(f"[aot] wrote {wpath}")
+
+    hlo = lower_forward(cfg.spec, ORACLE_BATCH)
+    hpath = os.path.join(out_dir, "model.hlo.txt")
+    with open(hpath, "w") as f:
+        f.write(hlo)
+    if verbose:
+        print(f"[aot] wrote {hpath} ({len(hlo)} chars)")
+
+    # Golden vectors: a few inputs + expected outputs so the Rust runtime
+    # test can assert numerics without re-running python.
+    rng = np.random.default_rng(99)
+    ips, labels = dataset.sample(ddos, ORACLE_BATCH, rng=rng)
+    xp = jnp.asarray(dataset.ip_to_packed(ips))
+    pop, signs = model.forward_packed(
+        cfg.spec, [jnp.asarray(w) for w in packed], xp
+    )
+    golden = {
+        "input_packed": [[int(v) for v in row] for row in np.asarray(xp)],
+        "labels": [int(v) for v in labels],
+        "final_popcount": [[int(v) for v in row] for row in np.asarray(pop)],
+        "sign_packed": [
+            [[int(v) for v in row] for row in np.asarray(s)] for s in signs
+        ],
+    }
+
+    meta = {
+        "format": "n2net-meta-v1",
+        "oracle_batch": ORACLE_BATCH,
+        "in_words": ref.n_words(cfg.spec.in_bits),
+        # Weight parameters, in call order after x: [neurons, words] each.
+        "weight_shapes": [
+            [m, ref.n_words(n)] for (m, n) in cfg.spec.layer_shapes()
+        ],
+        "outputs": {
+            "final_popcount": [ORACLE_BATCH, cfg.spec.layer_sizes[-1]],
+            "sign_packed": [
+                [ORACLE_BATCH, ref.n_words(m)] for m in cfg.spec.layer_sizes
+            ],
+        },
+        "golden": golden,
+    }
+    mpath = os.path.join(out_dir, "meta.json")
+    with open(mpath, "w") as f:
+        json.dump(meta, f)
+    if verbose:
+        print(f"[aot] wrote {mpath}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the HLO artifact; siblings written next to it")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    cfg = train.TrainConfig()
+    if args.steps is not None:
+        cfg.steps = args.steps
+    export(out_dir, cfg)
+
+
+if __name__ == "__main__":
+    main()

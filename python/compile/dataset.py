@@ -1,0 +1,119 @@
+"""Synthetic DDoS blacklist workload (paper §1, use case 1).
+
+The paper motivates N2Net with "large white/blacklist indexes for Denial
+of Service protection": classify a packet from header bits (here the 32-bit
+destination... source IPv4 address of the attacker) instead of enumerating
+every address in a lookup table.
+
+We synthesize a *structured* attacker population — a set of CIDR subnets
+(botnets cluster in address space) plus per-address noise — so that a tiny
+model can learn it but an exact-match table cannot compress it. The same
+generator parameters are exported to `artifacts/weights.json` and re-read
+by the Rust trace generator (`rust/src/net/tracegen.rs`), so the Python
+training set and the Rust packet traces are drawn from the same
+distribution (identical seeds produce identical label functions; the label
+function itself is deterministic given the subnet list).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Subnet:
+    """IPv4 CIDR block: `prefix` holds the network bits, left-aligned."""
+
+    prefix: int  # u32, host bits zero
+    prefix_len: int  # 0..32
+
+    def contains(self, ip: np.ndarray) -> np.ndarray:
+        if self.prefix_len == 0:
+            return np.ones_like(ip, dtype=bool)
+        mask = np.uint32(0xFFFFFFFF) << np.uint32(32 - self.prefix_len)
+        return (ip & mask) == np.uint32(self.prefix)
+
+    def to_json(self) -> dict:
+        return {"prefix": int(self.prefix), "prefix_len": self.prefix_len}
+
+
+@dataclasses.dataclass(frozen=True)
+class DdosSpec:
+    """Parameters of the synthetic blacklist distribution."""
+
+    subnets: tuple[Subnet, ...]
+    attack_fraction: float = 0.5
+    seed: int = 1234
+
+    def to_json(self) -> dict:
+        return {
+            "subnets": [s.to_json() for s in self.subnets],
+            "attack_fraction": self.attack_fraction,
+            "seed": self.seed,
+        }
+
+
+def default_spec(n_subnets: int = 12, seed: int = 1234) -> DdosSpec:
+    """Random /12../20 attacker subnets — a few thousand to ~1M hosts each."""
+    rng = np.random.default_rng(seed)
+    subnets = []
+    for _ in range(n_subnets):
+        plen = int(rng.integers(12, 21))
+        net = int(rng.integers(0, 2**32)) & (0xFFFFFFFF << (32 - plen))
+        subnets.append(Subnet(prefix=net & 0xFFFFFFFF, prefix_len=plen))
+    return DdosSpec(subnets=tuple(subnets), seed=seed)
+
+
+def label_ips(spec: DdosSpec, ips: np.ndarray) -> np.ndarray:
+    """1 = attacker (blacklisted), 0 = benign."""
+    bad = np.zeros(ips.shape, dtype=bool)
+    for s in spec.subnets:
+        bad |= s.contains(ips)
+    return bad.astype(np.uint32)
+
+
+def sample(
+    spec: DdosSpec, n: int, *, rng: np.random.Generator | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Draw `n` (ip, label) pairs: ~attack_fraction from attacker subnets.
+
+    Returns (ips u32 [n], labels u32 [n]).
+    """
+    if rng is None:
+        rng = np.random.default_rng(spec.seed)
+    n_attack = int(n * spec.attack_fraction)
+    n_benign = n - n_attack
+    # Attackers: pick a subnet, randomize host bits.
+    idx = rng.integers(0, len(spec.subnets), n_attack)
+    ips_a = np.empty(n_attack, dtype=np.uint32)
+    for i, s in enumerate(spec.subnets):
+        sel = idx == i
+        host_bits = 32 - s.prefix_len
+        hosts = rng.integers(0, 2**host_bits, sel.sum(), dtype=np.uint64)
+        ips_a[sel] = (np.uint32(s.prefix) | hosts.astype(np.uint32))
+    # Benign: uniform, resampled out of attacker space (rejection).
+    ips_b = rng.integers(0, 2**32, n_benign, dtype=np.uint32)
+    for _ in range(16):
+        bad = label_ips(spec, ips_b).astype(bool)
+        if not bad.any():
+            break
+        ips_b[bad] = rng.integers(0, 2**32, int(bad.sum()), dtype=np.uint32)
+    ips = np.concatenate([ips_a, ips_b])
+    perm = rng.permutation(n)
+    ips = ips[perm]
+    return ips, label_ips(spec, ips)
+
+
+def ip_to_pm1(ips: np.ndarray) -> np.ndarray:
+    """u32 IPs -> [n, 32] float {-1,+1}, bit 0 (LSB) first — matches the
+    packed-bit convention in kernels/ref.py."""
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = (ips[:, None] >> shifts) & np.uint32(1)
+    return bits.astype(np.float32) * 2.0 - 1.0
+
+
+def ip_to_packed(ips: np.ndarray) -> np.ndarray:
+    """u32 IPs -> [n, 1] packed uint32 (the IP *is* the packed vector)."""
+    return ips.reshape(-1, 1).astype(np.uint32)

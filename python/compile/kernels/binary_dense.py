@@ -1,0 +1,165 @@
+"""L1 Pallas kernel: bit-packed XNOR-popcount-SIGN binary dense layer.
+
+This is the compute hot-spot of the paper, expressed for TPU-style
+execution (see DESIGN.md §Hardware-Adaptation):
+
+* the switching chip evaluates a neuron by XNOR-ing a packed activation
+  vector against packed weights held in element SRAM, then popcounting
+  via the HAKMEM tree and thresholding (SIGN);
+* the TPU analogue is a *lane-parallel SWAR kernel*: activations and
+  weights packed 32 bits/uint32 word, XNOR on the VPU, the same HAKMEM
+  reduction per word (constant 5-step SWAR instead of a data-dependent
+  loop), then an integer threshold compare. No MXU — the arithmetic is
+  bitwise, which maps to the vector unit.
+
+Tiling: grid = (B / block_b, M / block_m); each program instance holds an
+x-tile [block_b, W] and a w-tile [block_m, W] in VMEM and produces a
+[block_b, block_m] popcount + sign tile. The packed-word axis W is kept
+innermost and fully resident (W <= 64 words for the paper's largest
+2048-bit activations).
+
+``interpret=True`` always: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is established here and the AOT artifact lowers
+through the same jaxpr.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+WORD = 32
+
+def swar_popcount(v: jnp.ndarray) -> jnp.ndarray:
+    """Per-element popcount of a uint32 array via the SWAR tree.
+
+    Identical arithmetic shape to the switch pipeline's POPCNT step
+    (mask/shift/add tree — HAKMEM 169 / Hacker's Delight 5-2), except the
+    final two levels are fused by the multiply trick — the switch cannot
+    multiply, the VPU can. Constants are Python ints so Pallas traces
+    them as literals rather than captured consts.
+    """
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & 0x55555555)
+    v = (v & 0x33333333) + ((v >> 2) & 0x33333333)
+    v = (v + (v >> 4)) & 0x0F0F0F0F
+    return ((v * 0x01010101) >> 24).astype(jnp.int32)
+
+
+def _binary_dense_kernel(x_ref, w_ref, masks_ref, pop_ref, sign_ref, *, thresh):
+    """One (block_b, block_m) tile: XNOR -> SWAR popcount -> threshold."""
+    x = x_ref[...]  # [bb, W] uint32
+    w = w_ref[...]  # [bm, W] uint32
+    masks = masks_ref[...]  # [W] uint32, tail-word validity
+    # Broadcast XNOR over the (batch, neuron) cross product; mask the tail
+    # word so padding bits never count.
+    xnor = (~(x[:, None, :] ^ w[None, :, :])) & masks  # [bb, bm, W]
+    pop = jnp.sum(swar_popcount(xnor), axis=-1)  # [bb, bm] int32
+    pop_ref[...] = pop
+    sign_ref[...] = (pop >= thresh).astype(jnp.uint32)
+
+
+def _pad_to(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = a.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(a, pads)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bits", "block_b", "block_m", "interpret")
+)
+def binary_dense(
+    x_packed: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    *,
+    n_bits: int,
+    block_b: int = 128,
+    block_m: int = 128,
+    interpret: bool = True,
+):
+    """Binary dense layer on packed operands.
+
+    Args:
+      x_packed: [B, W] uint32 packed activations (W = ceil(n_bits/32)).
+      w_packed: [M, W] uint32 packed weights, one row per neuron.
+      n_bits: logical activation width (16..2048 in the paper).
+      block_b / block_m: VMEM tile sizes; clamped to the padded problem.
+      interpret: Pallas interpret mode (must stay True off-TPU).
+
+    Returns:
+      (popcount [B, M] int32, sign_bits [B, M] uint32).
+    """
+    if x_packed.ndim != 2 or w_packed.ndim != 2:
+        raise ValueError("x_packed and w_packed must be rank-2 (packed)")
+    nw = ref.n_words(n_bits)
+    if x_packed.shape[1] != nw or w_packed.shape[1] != nw:
+        raise ValueError(
+            f"packed width mismatch: n_bits={n_bits} needs {nw} words, "
+            f"got x:{x_packed.shape[1]} w:{w_packed.shape[1]}"
+        )
+    b, m = x_packed.shape[0], w_packed.shape[0]
+    bb = min(block_b, max(b, 1))
+    bm = min(block_m, max(m, 1))
+    xp = _pad_to(x_packed.astype(jnp.uint32), 0, bb)
+    wp = _pad_to(w_packed.astype(jnp.uint32), 0, bm)
+    bp, mp = xp.shape[0], wp.shape[0]
+
+    masks = jnp.asarray(ref.word_masks(n_bits))
+    thresh = (n_bits + 1) // 2
+    kernel = functools.partial(_binary_dense_kernel, thresh=thresh)
+
+    pop, sign = pl.pallas_call(
+        kernel,
+        grid=(bp // bb, mp // bm),
+        in_specs=[
+            pl.BlockSpec((bb, nw), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, nw), lambda i, j: (j, 0)),
+            pl.BlockSpec((nw,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, mp), jnp.int32),
+            jax.ShapeDtypeStruct((bp, mp), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(xp, wp, masks)
+    return pop[:b, :m], sign[:b, :m]
+
+
+def binary_dense_sign(
+    x_packed: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    *,
+    n_bits: int,
+    **kw,
+) -> jnp.ndarray:
+    """Sign bits only — the layer output the switch pipeline folds."""
+    _, sign = binary_dense(x_packed, w_packed, n_bits=n_bits, **kw)
+    return sign
+
+
+def vmem_footprint_bytes(block_b: int, block_m: int, n_bits: int) -> int:
+    """Estimated VMEM residency of one program instance (DESIGN.md §9).
+
+    x-tile + w-tile + xnor broadcast + two output tiles, 4 B each element.
+    Used by the perf pass to keep tiles under the 16 MiB VMEM budget.
+    """
+    w = ref.n_words(n_bits)
+    x_tile = block_b * w
+    w_tile = block_m * w
+    xnor = block_b * block_m * w
+    outs = 2 * block_b * block_m
+    return 4 * (x_tile + w_tile + xnor + outs)

@@ -1,0 +1,142 @@
+"""Pure-jnp correctness oracles for the N2Net binary-dense kernel.
+
+Bit conventions (shared with the Rust side, see rust/src/bnn/bitpack.rs):
+
+* A logical bit-vector of ``n_bits`` is packed little-endian into
+  ``ceil(n_bits / 32)`` uint32 words: logical bit *i* lives in word
+  ``i // 32`` at bit position ``i % 32``.
+* Bit value 1 encodes +1, bit value 0 encodes -1 (BinaryNet convention).
+* A binary-dense neuron computes ``sign(sum_i x_i * w_i)`` over +-1 values,
+  which over bits is ``popcount(XNOR(x, w)) >= ceil(n_bits / 2)`` — the
+  paper's SIGN step ("bigger or equal to half the length of the
+  activations vector").
+
+Everything here is deliberately written with the *dumbest possible*
+jnp: unpack to individual bits, compare as floats. These functions are the
+trusted baseline the Pallas kernel (and, transitively, the Rust RMT
+pipeline and the PJRT artifact) are checked against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32
+_MASK32 = np.uint32(0xFFFFFFFF)
+
+
+def n_words(n_bits: int) -> int:
+    """Number of uint32 words needed to hold ``n_bits`` packed bits."""
+    return (n_bits + WORD - 1) // WORD
+
+
+def tail_mask(n_bits: int) -> np.uint32:
+    """Mask of valid bits in the last packed word (all-ones if aligned)."""
+    rem = n_bits % WORD
+    if rem == 0:
+        return _MASK32
+    return np.uint32((1 << rem) - 1)
+
+
+def word_masks(n_bits: int) -> np.ndarray:
+    """Per-word validity masks, shape [n_words(n_bits)] uint32."""
+    w = n_words(n_bits)
+    m = np.full(w, _MASK32, dtype=np.uint32)
+    m[-1] = tail_mask(n_bits)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+def pack_bits(bits: jnp.ndarray, n_bits: int | None = None) -> jnp.ndarray:
+    """Pack a [..., n_bits] array of {0,1} into [..., n_words] uint32.
+
+    Little-endian within each word: bits[..., 0] -> word 0, bit 0.
+    """
+    bits = jnp.asarray(bits, dtype=jnp.uint32)
+    if n_bits is None:
+        n_bits = bits.shape[-1]
+    w = n_words(n_bits)
+    pad = w * WORD - n_bits
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    bits = bits.reshape(bits.shape[:-1] + (w, WORD))
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits(words: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Unpack [..., n_words] uint32 into [..., n_bits] of {0,1} uint32."""
+    words = jnp.asarray(words, dtype=jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (words.shape[-1] * WORD,))
+    return bits[..., :n_bits]
+
+
+def bits_to_pm1(bits: jnp.ndarray) -> jnp.ndarray:
+    """{0,1} -> {-1,+1} float32."""
+    return jnp.asarray(bits, jnp.float32) * 2.0 - 1.0
+
+
+def pm1_to_bits(x: jnp.ndarray) -> jnp.ndarray:
+    """Floats -> {0,1} uint32 (>= 0 maps to 1: sign(0) := +1 convention)."""
+    return (jnp.asarray(x) >= 0).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# popcount oracle
+# ---------------------------------------------------------------------------
+
+def popcount_ref(words: jnp.ndarray) -> jnp.ndarray:
+    """Per-word popcount via full bit-unpack. [..., w] uint32 -> int32."""
+    words = jnp.asarray(words, dtype=jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return jnp.sum(bits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# binary dense oracles
+# ---------------------------------------------------------------------------
+
+def binary_dense_popcount_ref(
+    x_packed: jnp.ndarray, w_packed: jnp.ndarray, n_bits: int
+) -> jnp.ndarray:
+    """XNOR-popcount pre-activation.
+
+    x_packed: [B, w] uint32, w_packed: [M, w] uint32 -> [B, M] int32 with
+    values in [0, n_bits]: the number of agreeing (+1*+1 or -1*-1) positions.
+    """
+    masks = jnp.asarray(word_masks(n_bits))
+    xnor = ~(x_packed[:, None, :] ^ w_packed[None, :, :]) & masks
+    return jnp.sum(popcount_ref(xnor), axis=-1).astype(jnp.int32)
+
+
+def binary_dense_ref(
+    x_packed: jnp.ndarray, w_packed: jnp.ndarray, n_bits: int
+) -> jnp.ndarray:
+    """Full binary dense layer on packed operands -> sign bits [B, M] uint32.
+
+    y_j = 1  iff  popcount(xnor) >= ceil(n_bits / 2).
+    """
+    pop = binary_dense_popcount_ref(x_packed, w_packed, n_bits)
+    thresh = (n_bits + 1) // 2
+    return (pop >= thresh).astype(jnp.uint32)
+
+
+def binary_dense_float_ref(
+    x_bits: jnp.ndarray, w_bits: jnp.ndarray
+) -> jnp.ndarray:
+    """The same layer computed in +-1 float arithmetic (textbook BinaryNet).
+
+    x_bits: [B, n] {0,1}, w_bits: [M, n] {0,1} -> sign bits [B, M] uint32.
+    sign(sum x*w) with sign(0) := +1; equals the packed path for even n
+    (the paper's sizes are all powers of two) and for odd n both sides use
+    the >= ceil(n/2) threshold, which is the same predicate.
+    """
+    acc = bits_to_pm1(x_bits) @ bits_to_pm1(w_bits).T
+    return pm1_to_bits(acc)

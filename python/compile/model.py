@@ -1,0 +1,199 @@
+"""L2: the N2Net BNN model — packed inference graph + float STE training graph.
+
+Two views of the same network:
+
+* ``forward_packed`` — the *deployment* forward pass: bit-packed uint32
+  activations, XNOR-popcount-SIGN per layer via the L1 Pallas kernel
+  (`kernels.binary_dense`). This is the function `aot.py` lowers to HLO
+  text; the Rust runtime executes it via PJRT as the golden oracle for
+  the switch-pipeline implementation.
+* ``forward_float`` / ``loss_fn`` — the *training* surrogate: float
+  weights, sign binarization with a straight-through estimator
+  (BinaryNet, Courbariaux & Bengio 2016 — the paper's ref [4]). Ordinary
+  matmuls, so XLA can use the MXU; only used at build time.
+
+The BNN shapes follow the paper: every activation vector width must be a
+power of two in [16, 2048] (Table 1's rows), because the switch-side
+POPCNT tree and PHV layout assume it. The *output* of the last layer is
+exempt (a classifier head may have 1 neuron).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import binary_dense as bd
+from .kernels import ref
+
+MIN_BITS = 16
+MAX_BITS = 2048  # half the 512 B PHV, paper §2 Evaluation
+
+
+@dataclasses.dataclass(frozen=True)
+class BnnSpec:
+    """Architecture of a fully-connected BNN.
+
+    in_bits: width of the input activation vector (e.g. 32 for an IPv4
+      destination address). layer_sizes: neurons per layer; each hidden
+      layer's size becomes the next layer's activation width, so hidden
+      sizes must be valid activation widths.
+    """
+
+    in_bits: int
+    layer_sizes: tuple[int, ...]
+
+    def __post_init__(self):
+        widths = (self.in_bits, *self.layer_sizes[:-1])
+        for w in widths:
+            if not (MIN_BITS <= w <= MAX_BITS and (w & (w - 1)) == 0):
+                raise ValueError(
+                    f"activation width {w} invalid: must be a power of two "
+                    f"in [{MIN_BITS}, {MAX_BITS}] (paper Table 1)"
+                )
+        if not self.layer_sizes:
+            raise ValueError("need at least one layer")
+        if self.layer_sizes[-1] < 1:
+            raise ValueError("output layer needs >= 1 neuron")
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_sizes)
+
+    def layer_in_bits(self, i: int) -> int:
+        return self.in_bits if i == 0 else self.layer_sizes[i - 1]
+
+    def layer_shapes(self) -> list[tuple[int, int]]:
+        """[(neurons, in_bits)] per layer."""
+        return [(m, self.layer_in_bits(i)) for i, m in enumerate(self.layer_sizes)]
+
+    def weight_bits_total(self) -> int:
+        """Total weight storage in bits (what the element SRAM must hold)."""
+        return sum(m * n for m, n in self.layer_shapes())
+
+
+# ---------------------------------------------------------------------------
+# Packed (deployment) forward
+# ---------------------------------------------------------------------------
+
+def init_packed_weights(
+    spec: BnnSpec, seed: int = 0
+) -> list[np.ndarray]:
+    """Random packed weights, one [M, n_words(in_bits)] uint32 array/layer."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for m, n in spec.layer_shapes():
+        w = rng.integers(0, 2**32, (m, ref.n_words(n)), dtype=np.uint32)
+        w &= ref.word_masks(n)
+        out.append(w)
+    return out
+
+
+def forward_packed(
+    spec: BnnSpec,
+    weights_packed: Sequence[jnp.ndarray],
+    x_packed: jnp.ndarray,
+    *,
+    block_b: int = 128,
+    block_m: int = 128,
+):
+    """Deployment forward pass on packed operands.
+
+    Args:
+      weights_packed: per-layer [M_l, W_l] uint32.
+      x_packed: [B, W_0] uint32.
+
+    Returns:
+      (final_popcount [B, M_last] int32, layer_sign_bits: list of packed
+      [B, n_words(M_l)] uint32 — one per layer, the exact bits the switch
+      pipeline's folding step produces).
+    """
+    if len(weights_packed) != spec.n_layers:
+        raise ValueError("weights/spec layer count mismatch")
+    act = x_packed
+    layer_signs_packed = []
+    pop = None
+    for i, wp in enumerate(weights_packed):
+        n = spec.layer_in_bits(i)
+        pop, sign = bd.binary_dense(
+            act, wp, n_bits=n, block_b=block_b, block_m=block_m
+        )
+        sp = ref.pack_bits(sign, spec.layer_sizes[i])
+        layer_signs_packed.append(sp)
+        act = sp
+    return pop, layer_signs_packed
+
+
+# ---------------------------------------------------------------------------
+# Float (training) forward — straight-through estimator
+# ---------------------------------------------------------------------------
+
+def ste_sign(x: jnp.ndarray) -> jnp.ndarray:
+    """sign(x) in {-1,+1} forward (sign(0)=+1), identity-in-[-1,1] backward."""
+    clipped = jnp.clip(x, -1.0, 1.0)
+    binar = jnp.where(x >= 0, 1.0, -1.0)
+    return clipped + jax.lax.stop_gradient(binar - clipped)
+
+
+def init_float_params(spec: BnnSpec, key: jax.Array) -> list[jnp.ndarray]:
+    """Glorot-ish float weights, one [M, n] array per layer."""
+    params = []
+    for m, n in spec.layer_shapes():
+        key, sub = jax.random.split(key)
+        params.append(jax.random.normal(sub, (m, n)) * (1.0 / np.sqrt(n)))
+    return params
+
+
+def forward_float(
+    spec: BnnSpec, params: Sequence[jnp.ndarray], x_pm1: jnp.ndarray
+) -> jnp.ndarray:
+    """Training forward: x_pm1 [B, in_bits] in {-1,+1} -> logits [B, M_last].
+
+    Hidden layers binarize weights and activations with the STE; the last
+    layer binarizes weights only and returns the scaled pre-activation as
+    the logit (standard BinaryNet head).
+    """
+    act = x_pm1
+    for i, w in enumerate(params):
+        wb = ste_sign(w)
+        pre = act @ wb.T / np.sqrt(w.shape[1])
+        if i < spec.n_layers - 1:
+            act = ste_sign(pre)
+        else:
+            return pre
+    raise AssertionError("unreachable")
+
+
+def loss_fn(
+    spec: BnnSpec,
+    params: Sequence[jnp.ndarray],
+    x_pm1: jnp.ndarray,
+    y: jnp.ndarray,
+) -> jnp.ndarray:
+    """Binary logistic loss on the final neuron (y in {0,1}, [B])."""
+    logits = forward_float(spec, params, x_pm1)[:, 0]
+    ypm = y.astype(jnp.float32) * 2.0 - 1.0
+    return jnp.mean(jax.nn.softplus(-ypm * logits))
+
+
+def binarize_params(
+    spec: BnnSpec, params: Sequence[jnp.ndarray]
+) -> list[np.ndarray]:
+    """Float params -> packed uint32 weights (the deployment artifact)."""
+    out = []
+    for (m, n), w in zip(spec.layer_shapes(), params):
+        bits = (np.asarray(w) >= 0).astype(np.uint32)
+        out.append(np.asarray(ref.pack_bits(jnp.asarray(bits), n), dtype=np.uint32))
+    return out
+
+
+def predict_packed(
+    spec: BnnSpec, weights_packed: Sequence[jnp.ndarray], x_packed: jnp.ndarray
+) -> jnp.ndarray:
+    """Deployment-side class prediction: final layer sign bit 0. [B] uint32."""
+    _, signs = forward_packed(spec, weights_packed, x_packed)
+    return signs[-1][:, 0] & jnp.uint32(1)

@@ -1,0 +1,115 @@
+"""Build-time BNN training (straight-through estimator, hand-rolled Adam).
+
+Trains the paper's use-case model — a fully-connected BNN over the 32-bit
+IP activation vector (§2 Evaluation: "e.g., the destination IP address of
+the packet", layers of 64 and 32 neurons) plus a 1-neuron readout — on the
+synthetic DDoS blacklist task, then binarizes and packs the weights for
+the N2Net compiler.
+
+Runs only under `make artifacts`; nothing here is on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset, model
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    spec: model.BnnSpec = dataclasses.field(
+        default_factory=lambda: model.BnnSpec(in_bits=32, layer_sizes=(64, 32, 1))
+    )
+    n_train: int = 16384
+    n_test: int = 4096
+    batch_size: int = 256
+    steps: int = 1500
+    lr: float = 3e-3
+    seed: int = 7
+
+
+def adam_init(params: Sequence[jnp.ndarray]):
+    zeros = [jnp.zeros_like(p) for p in params]
+    return {"m": zeros, "v": [jnp.zeros_like(p) for p in params], "t": jnp.int32(0)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = [b1 * m_ + (1 - b1) * g for m_, g in zip(state["m"], grads)]
+    v = [b2 * v_ + (1 - b2) * g * g for v_, g in zip(state["v"], grads)]
+    mhat = [m_ / (1 - b1**t) for m_ in m]
+    vhat = [v_ / (1 - b2**t) for v_ in v]
+    new_params = [
+        p - lr * mh / (jnp.sqrt(vh) + eps) for p, mh, vh in zip(params, mhat, vhat)
+    ]
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train(
+    cfg: TrainConfig, ddos: dataset.DdosSpec | None = None, verbose: bool = True
+):
+    """Returns (float params, packed weights, metrics dict)."""
+    if ddos is None:
+        ddos = dataset.default_spec(seed=cfg.seed * 31 + 3)
+    rng = np.random.default_rng(cfg.seed)
+    ips_tr, y_tr = dataset.sample(ddos, cfg.n_train, rng=rng)
+    ips_te, y_te = dataset.sample(ddos, cfg.n_test, rng=rng)
+    x_tr = dataset.ip_to_pm1(ips_tr)
+    x_te = dataset.ip_to_pm1(ips_te)
+
+    key = jax.random.PRNGKey(cfg.seed)
+    params = model.init_float_params(cfg.spec, key)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, xb, yb):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg.spec, p, xb, yb)
+        )(params)
+        params, opt = adam_update(params, grads, opt, cfg.lr)
+        return params, opt, loss
+
+    n = x_tr.shape[0]
+    losses = []
+    for i in range(cfg.steps):
+        idx = rng.integers(0, n, cfg.batch_size)
+        params, opt, loss = step(
+            params, opt, jnp.asarray(x_tr[idx]), jnp.asarray(y_tr[idx])
+        )
+        losses.append(float(loss))
+        if verbose and (i % 250 == 0 or i == cfg.steps - 1):
+            print(f"  step {i:5d}  loss {float(loss):.4f}")
+
+    # Deployment metrics come from the *packed* model — the thing that
+    # actually ships to the switch — not the float surrogate.
+    packed = model.binarize_params(cfg.spec, params)
+    pk = [jnp.asarray(w) for w in packed]
+    pred_tr = np.asarray(
+        model.predict_packed(cfg.spec, pk, jnp.asarray(dataset.ip_to_packed(ips_tr)))
+    )
+    pred_te = np.asarray(
+        model.predict_packed(cfg.spec, pk, jnp.asarray(dataset.ip_to_packed(ips_te)))
+    )
+    acc_tr = float((pred_tr == y_tr).mean())
+    acc_te = float((pred_te == y_te).mean())
+    metrics = {
+        "train_accuracy_packed": acc_tr,
+        "test_accuracy_packed": acc_te,
+        "final_loss": losses[-1],
+        "loss_curve": losses[:: max(1, len(losses) // 100)],
+        "steps": cfg.steps,
+    }
+    if verbose:
+        print(f"  packed accuracy: train {acc_tr:.4f}  test {acc_te:.4f}")
+    return params, packed, metrics, ddos
+
+
+if __name__ == "__main__":
+    train(TrainConfig())

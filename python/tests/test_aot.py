@@ -1,0 +1,117 @@
+"""AOT export tests: HLO text sanity and artifact consistency."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, dataset, model
+from compile.kernels import ref
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def small_spec():
+    return model.BnnSpec(in_bits=32, layer_sizes=(16, 1))
+
+
+def test_lower_forward_uses_parameters_not_constants():
+    """The weights MUST be HLO parameters: the text printer elides large
+    constants (`constant({...})`), which the old XLA parser would read
+    back as garbage (this bug was found the hard way — see aot.py)."""
+    hlo = aot.lower_forward(small_spec(), batch=8)
+    assert "constant({...}" not in hlo
+    # ENTRY takes x + one parameter per layer.
+    entry = hlo[hlo.index("ENTRY") :]
+    first_block = entry[: entry.index("ROOT")]
+    assert first_block.count("parameter(") == 1 + 2
+
+
+def test_lowered_hlo_shapes():
+    hlo = aot.lower_forward(small_spec(), batch=8)
+    assert "u32[8,1]" in hlo  # x packed
+    assert "u32[16,1]" in hlo  # layer 0 weights
+    assert "u32[1,1]" in hlo  # layer 1 weights
+    assert "s32[8,1]" in hlo  # final popcount
+
+
+def test_export_and_reload(tmp_path):
+    from compile import train
+
+    cfg = train.TrainConfig(steps=30, n_train=1024, n_test=256, seed=11)
+    out = str(tmp_path)
+    aot.export(out, cfg, verbose=False)
+    for f in ["weights.json", "model.hlo.txt", "meta.json"]:
+        assert os.path.exists(os.path.join(out, f)), f
+
+    weights = json.load(open(os.path.join(out, "weights.json")))
+    assert weights["format"] == "n2net-weights-v1"
+    assert [l["neurons"] for l in weights["layers"]] == [64, 32, 1]
+
+    meta = json.load(open(os.path.join(out, "meta.json")))
+    assert meta["oracle_batch"] == aot.ORACLE_BATCH
+    assert meta["weight_shapes"] == [[64, 1], [32, 2], [1, 1]]
+
+    # Golden vectors recompute identically from the stored weights.
+    spec = model.BnnSpec(
+        in_bits=weights["spec"]["in_bits"],
+        layer_sizes=tuple(weights["spec"]["layer_sizes"]),
+    )
+    wts = [
+        jnp.asarray(np.array(l["weights_packed"], dtype=np.uint32))
+        for l in weights["layers"]
+    ]
+    g = meta["golden"]
+    x = jnp.asarray(np.array(g["input_packed"], dtype=np.uint32))
+    pop, signs = model.forward_packed(spec, wts, x)
+    np.testing.assert_array_equal(np.asarray(pop), np.array(g["final_popcount"]))
+    for got, expect in zip(signs, g["sign_packed"]):
+        np.testing.assert_array_equal(np.asarray(got), np.array(expect))
+
+
+def test_real_artifacts_consistent_if_present():
+    """When `make artifacts` has run, the checked-in goldens must agree
+    with a fresh recomputation (guards against stale artifacts)."""
+    wpath = os.path.join(ARTIFACTS, "weights.json")
+    mpath = os.path.join(ARTIFACTS, "meta.json")
+    if not (os.path.exists(wpath) and os.path.exists(mpath)):
+        import pytest
+
+        pytest.skip("artifacts not built")
+    weights = json.load(open(wpath))
+    meta = json.load(open(mpath))
+    spec = model.BnnSpec(
+        in_bits=weights["spec"]["in_bits"],
+        layer_sizes=tuple(weights["spec"]["layer_sizes"]),
+    )
+    wts = [
+        jnp.asarray(np.array(l["weights_packed"], dtype=np.uint32))
+        for l in weights["layers"]
+    ]
+    g = meta["golden"]
+    x = jnp.asarray(np.array(g["input_packed"], dtype=np.uint32))
+    pop, _signs = model.forward_packed(spec, wts, x)
+    np.testing.assert_array_equal(np.asarray(pop), np.array(g["final_popcount"]))
+    # Labels in the golden block match the stored DDoS distribution.
+    d = weights["ddos"]
+    subnets = [
+        dataset.Subnet(prefix=s["prefix"], prefix_len=s["prefix_len"])
+        for s in d["subnets"]
+    ]
+    spec_d = dataset.DdosSpec(
+        subnets=tuple(subnets),
+        attack_fraction=d["attack_fraction"],
+        seed=d["seed"],
+    )
+    ips = np.array([row[0] for row in g["input_packed"]], dtype=np.uint32)
+    np.testing.assert_array_equal(
+        dataset.label_ips(spec_d, ips), np.array(g["labels"], dtype=np.uint32)
+    )
+
+
+def test_hlo_text_deterministic():
+    a = aot.lower_forward(small_spec(), batch=4)
+    b = aot.lower_forward(small_spec(), batch=4)
+    assert a == b

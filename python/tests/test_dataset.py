@@ -1,0 +1,56 @@
+"""Synthetic DDoS distribution tests (mirrored by rust net/tracegen)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import dataset
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def test_subnet_containment():
+    s = dataset.Subnet(prefix=0xC0A80000, prefix_len=16)  # 192.168/16
+    ips = np.array([0xC0A80001, 0xC0A8FFFF, 0xC0A90000, 0x01020304], dtype=np.uint32)
+    np.testing.assert_array_equal(s.contains(ips), [True, True, False, False])
+
+
+def test_zero_length_prefix_matches_all():
+    s = dataset.Subnet(prefix=0, prefix_len=0)
+    assert s.contains(np.array([0, 2**32 - 1], dtype=np.uint32)).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sample_labels_are_ground_truth(seed):
+    spec = dataset.default_spec(n_subnets=6, seed=seed)
+    ips, labels = dataset.sample(spec, 500, rng=np.random.default_rng(seed))
+    np.testing.assert_array_equal(labels, dataset.label_ips(spec, ips))
+
+
+def test_attack_fraction_respected():
+    spec = dataset.default_spec(seed=3)
+    _ips, labels = dataset.sample(spec, 4000)
+    frac = labels.mean()
+    # Rejection sampling of benign IPs can only leave attackers at ~50%.
+    assert 0.42 <= frac <= 0.58, frac
+
+
+def test_ip_bit_encoding_consistency():
+    ips = np.array([0b1011, 1 << 31], dtype=np.uint32)
+    pm1 = dataset.ip_to_pm1(ips)
+    # bit 0 first (LSB-first, matching the packed-word convention).
+    np.testing.assert_array_equal(pm1[0, :4], [1.0, 1.0, -1.0, 1.0])
+    assert pm1[1, 31] == 1.0 and pm1[1, 0] == -1.0
+    packed = dataset.ip_to_packed(ips)
+    np.testing.assert_array_equal(packed[:, 0], ips)
+
+
+def test_spec_json_roundtrip_fields():
+    spec = dataset.default_spec(n_subnets=4, seed=9)
+    doc = spec.to_json()
+    assert len(doc["subnets"]) == 4
+    for s in doc["subnets"]:
+        assert 12 <= s["prefix_len"] <= 20
+        # host bits must be zero in the stored prefix
+        mask = (0xFFFFFFFF << (32 - s["prefix_len"])) & 0xFFFFFFFF
+        assert s["prefix"] & ~mask == 0

@@ -1,0 +1,146 @@
+"""L1 kernel correctness: Pallas binary_dense vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path — hypothesis
+sweeps shapes, widths and block sizes; every case must match ref.py
+exactly (integer outputs, no tolerance).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binary_dense as bd
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+def rand_packed(rng, rows, n_bits):
+    w = ref.n_words(n_bits)
+    x = rng.integers(0, 2**32, (rows, w), dtype=np.uint32)
+    return x & ref.word_masks(n_bits)
+
+
+# ---------------------------------------------------------------------------
+# swar popcount
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=64))
+def test_swar_popcount_matches_bit_count(words):
+    arr = jnp.asarray(np.array(words, dtype=np.uint32))
+    got = np.asarray(bd.swar_popcount(arr))
+    expect = np.array([bin(w).count("1") for w in words], dtype=np.int32)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_swar_popcount_extremes():
+    arr = jnp.asarray(np.array([0, 0xFFFFFFFF, 0x80000000, 1], dtype=np.uint32))
+    np.testing.assert_array_equal(np.asarray(bd.swar_popcount(arr)), [0, 32, 1, 1])
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+@given(
+    st.integers(1, 100),
+    st.integers(0, 2**64 - 1),
+)
+def test_pack_unpack_roundtrip(n_bits, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (3, n_bits), dtype=np.uint32)
+    packed = ref.pack_bits(jnp.asarray(bits), n_bits)
+    back = ref.unpack_bits(packed, n_bits)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+def test_pack_layout_little_endian():
+    # bit 0 -> word 0 bit 0; bit 33 -> word 1 bit 1.
+    bits = np.zeros(64, dtype=np.uint32)
+    bits[0] = 1
+    bits[33] = 1
+    packed = np.asarray(ref.pack_bits(jnp.asarray(bits), 64))
+    assert packed[0] == 1
+    assert packed[1] == 2
+
+
+# ---------------------------------------------------------------------------
+# binary dense kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@given(
+    n_bits=st.sampled_from([16, 32, 48, 64, 128, 256, 2048]),
+    batch=st.integers(1, 9),
+    neurons=st.integers(1, 17),
+    block_b=st.sampled_from([2, 4, 128]),
+    block_m=st.sampled_from([3, 8, 128]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_kernel_matches_oracle(n_bits, batch, neurons, block_b, block_m, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rand_packed(rng, batch, n_bits))
+    w = jnp.asarray(rand_packed(rng, neurons, n_bits))
+    pop, sign = bd.binary_dense(x, w, n_bits=n_bits, block_b=block_b, block_m=block_m)
+    np.testing.assert_array_equal(
+        np.asarray(pop), np.asarray(ref.binary_dense_popcount_ref(x, w, n_bits))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sign), np.asarray(ref.binary_dense_ref(x, w, n_bits))
+    )
+
+
+@given(
+    n_bits=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_kernel_matches_float_semantics(n_bits, seed):
+    """Packed XNOR-popcount-sign == textbook ±1 BinaryNet layer."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rand_packed(rng, 5, n_bits))
+    w = jnp.asarray(rand_packed(rng, 7, n_bits))
+    sign = bd.binary_dense_sign(x, w, n_bits=n_bits)
+    xb = ref.unpack_bits(x, n_bits)
+    wb = ref.unpack_bits(w, n_bits)
+    np.testing.assert_array_equal(
+        np.asarray(sign), np.asarray(ref.binary_dense_float_ref(xb, wb))
+    )
+
+
+def test_kernel_identity_and_inverse_weights():
+    # Weight row == input -> full agreement (popcount = n, fires).
+    # Weight row == ~input -> zero agreement (does not fire).
+    rng = np.random.default_rng(0)
+    x = rand_packed(rng, 1, 64)
+    w = np.concatenate([x, ~x & ref.word_masks(64)], axis=0)
+    pop, sign = bd.binary_dense(jnp.asarray(x), jnp.asarray(w), n_bits=64)
+    np.testing.assert_array_equal(np.asarray(pop), [[64, 0]])
+    np.testing.assert_array_equal(np.asarray(sign), [[1, 0]])
+
+
+def test_threshold_tie_fires():
+    # popcount == ceil(n/2) must fire (sign(0) := +1, paper's ">= half").
+    n = 32
+    # Agreement on exactly 16 bits.
+    x = np.array([[0x0000FFFF]], dtype=np.uint32)
+    w = np.array([[0xFFFFFFFF]], dtype=np.uint32)
+    pop, sign = bd.binary_dense(jnp.asarray(x), jnp.asarray(w), n_bits=n)
+    assert np.asarray(pop)[0, 0] == 16
+    assert np.asarray(sign)[0, 0] == 1
+
+
+def test_wrong_width_raises():
+    x = jnp.zeros((2, 2), jnp.uint32)
+    w = jnp.zeros((3, 1), jnp.uint32)
+    with pytest.raises(ValueError):
+        bd.binary_dense(x, w, n_bits=32)
+    with pytest.raises(ValueError):
+        bd.binary_dense(jnp.zeros((2,), jnp.uint32), w, n_bits=32)
+
+
+def test_vmem_footprint_model():
+    # DESIGN.md §9: default tiles stay within the 16 MiB VMEM budget for
+    # the paper's largest activation width.
+    assert bd.vmem_footprint_bytes(128, 128, 2048) <= 16 * 2**20
+    assert bd.vmem_footprint_bytes(128, 128, 32) < bd.vmem_footprint_bytes(128, 128, 2048)

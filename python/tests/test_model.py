@@ -1,0 +1,137 @@
+"""L2 model tests: spec validation, packed forward, STE training graph."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import dataset, model
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# spec validation (mirrors rust/src/bnn/model.rs)
+# ---------------------------------------------------------------------------
+
+def test_spec_validation():
+    model.BnnSpec(in_bits=32, layer_sizes=(64, 32, 1))  # ok
+    model.BnnSpec(in_bits=2048, layer_sizes=(1,))  # ok
+    with pytest.raises(ValueError):
+        model.BnnSpec(in_bits=48, layer_sizes=(16,))  # not pow2
+    with pytest.raises(ValueError):
+        model.BnnSpec(in_bits=8, layer_sizes=(16,))  # below min
+    with pytest.raises(ValueError):
+        model.BnnSpec(in_bits=4096, layer_sizes=(16,))  # above max
+    with pytest.raises(ValueError):
+        model.BnnSpec(in_bits=32, layer_sizes=(48, 16))  # bad hidden width
+    with pytest.raises(ValueError):
+        model.BnnSpec(in_bits=32, layer_sizes=())
+
+
+def test_layer_shapes_and_weight_bits():
+    spec = model.BnnSpec(in_bits=32, layer_sizes=(64, 32, 1))
+    assert spec.layer_shapes() == [(64, 32), (32, 64), (1, 32)]
+    assert spec.weight_bits_total() == 64 * 32 + 32 * 64 + 32
+
+
+# ---------------------------------------------------------------------------
+# packed forward
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**32 - 1))
+def test_forward_packed_layerwise_equals_manual(seed):
+    spec = model.BnnSpec(in_bits=32, layer_sizes=(16, 16))
+    wts = [jnp.asarray(w) for w in model.init_packed_weights(spec, seed=seed % 1000)]
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 2**32, (4, 1), dtype=np.uint32))
+    pop, signs = model.forward_packed(spec, wts, x)
+    # Manual layer-by-layer with the oracle.
+    act = x
+    for i, w in enumerate(wts):
+        n = spec.layer_in_bits(i)
+        s = ref.binary_dense_ref(act, w, n)
+        sp = ref.pack_bits(s, spec.layer_sizes[i])
+        np.testing.assert_array_equal(np.asarray(signs[i]), np.asarray(sp))
+        act = sp
+    # Final popcount from the oracle too.
+    expect_pop = ref.binary_dense_popcount_ref(signs[0], wts[1], 16)
+    np.testing.assert_array_equal(np.asarray(pop), np.asarray(expect_pop))
+
+
+def test_predict_packed_is_final_bit():
+    spec = model.BnnSpec(in_bits=32, layer_sizes=(16, 1))
+    wts = [jnp.asarray(w) for w in model.init_packed_weights(spec, seed=3)]
+    x = jnp.asarray(np.arange(8, dtype=np.uint32).reshape(-1, 1))
+    pred = model.predict_packed(spec, wts, x)
+    _, signs = model.forward_packed(spec, wts, x)
+    np.testing.assert_array_equal(np.asarray(pred), np.asarray(signs[-1][:, 0] & 1))
+
+
+def test_forward_packed_rejects_mismatched_weights():
+    spec = model.BnnSpec(in_bits=32, layer_sizes=(16, 1))
+    wts = [jnp.asarray(w) for w in model.init_packed_weights(spec, seed=3)]
+    with pytest.raises(ValueError):
+        model.forward_packed(spec, wts[:1], jnp.zeros((2, 1), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# STE training graph
+# ---------------------------------------------------------------------------
+
+def test_ste_sign_forward_and_gradient():
+    x = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0])
+    y = model.ste_sign(x)
+    np.testing.assert_array_equal(np.asarray(y), [-1, -1, 1, 1, 1])
+    # Straight-through: gradient is identity inside [-1,1], zero outside.
+    g = jax.grad(lambda v: model.ste_sign(v).sum())(x)
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+def test_binarize_params_matches_float_signs():
+    spec = model.BnnSpec(in_bits=32, layer_sizes=(16,))
+    key = jax.random.PRNGKey(0)
+    params = model.init_float_params(spec, key)
+    packed = model.binarize_params(spec, params)
+    bits = ref.unpack_bits(jnp.asarray(packed[0]), 32)
+    np.testing.assert_array_equal(
+        np.asarray(bits), (np.asarray(params[0]) >= 0).astype(np.uint32)
+    )
+
+
+def test_float_and_packed_forward_agree_after_binarization():
+    """The deployment (packed) model equals the float model evaluated
+    with hard-binarized weights/activations."""
+    spec = model.BnnSpec(in_bits=32, layer_sizes=(16, 1))
+    key = jax.random.PRNGKey(1)
+    params = model.init_float_params(spec, key)
+    packed = [jnp.asarray(w) for w in model.binarize_params(spec, params)]
+    rng = np.random.default_rng(2)
+    ips = rng.integers(0, 2**32, 32, dtype=np.uint32)
+    x_packed = jnp.asarray(dataset.ip_to_packed(ips))
+    pred_packed = np.asarray(model.predict_packed(spec, packed, x_packed))
+    # Float path with hard sign at every stage.
+    x = jnp.asarray(dataset.ip_to_pm1(ips))
+    act = x
+    for i, w in enumerate(params):
+        wb = np.where(np.asarray(w) >= 0, 1.0, -1.0)
+        pre = act @ wb.T
+        if i < spec.n_layers - 1:
+            act = jnp.where(pre >= 0, 1.0, -1.0)
+        else:
+            pred_float = (np.asarray(pre[:, 0]) >= 0).astype(np.uint32)
+    np.testing.assert_array_equal(pred_packed, pred_float)
+
+
+def test_training_reduces_loss():
+    from compile import train
+
+    cfg = train.TrainConfig(steps=120, n_train=2048, n_test=512, seed=5)
+    _params, packed, metrics, _ddos = train.train(cfg, verbose=False)
+    assert metrics["final_loss"] < 0.7  # below chance-level logloss
+    assert metrics["test_accuracy_packed"] > 0.6
+    assert len(packed) == 3
+    assert packed[0].shape == (64, 1)

@@ -1,0 +1,84 @@
+//! E4/E9 bench: end-to-end engine throughput on the DDoS workload —
+//! the two-layer use-case model served through the multi-worker engine,
+//! plus batcher-policy sensitivity.
+//!
+//! `cargo bench --bench e2e`
+
+use n2net::bnn::BnnModel;
+use n2net::compiler::{Compiler, CompilerOptions, InputEncoding};
+use n2net::coordinator::{Batch, BatchPolicy, Batcher, Engine, EngineConfig, RouterPolicy};
+use n2net::net::packet::IPV4_SRC_OFFSET;
+use n2net::net::{TraceGenerator, TraceKind};
+use n2net::rmt::ChipConfig;
+use n2net::util::bench::{default_bencher, format_rate, keep, Report};
+
+fn main() {
+    println!("# E4/E9 — end-to-end engine throughput");
+    // The paper's use-case model (+1-bit head for classification).
+    let model = BnnModel::random(32, &[64, 32, 1], 2024);
+    let opts = CompilerOptions {
+        input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
+        ..Default::default()
+    };
+
+    let mut gen = TraceGenerator::new(8);
+    let ddos = n2net::bnn::io::DdosDoc {
+        subnets: vec![n2net::bnn::io::SubnetDoc { prefix: 0xC0A80000, prefix_len: 16 }],
+        attack_fraction: 0.5,
+        seed: 2,
+    };
+    let trace = gen.generate(&TraceKind::Ddos { ddos }, 8192);
+
+    let b = default_bencher();
+    let mut report = Report::new("engine trace throughput (8192-packet trace per iter)");
+    report.header();
+    for workers in [1usize, 2, 4] {
+        let compiled = Compiler::new(ChipConfig::rmt(), opts.clone())
+            .compile(&model)
+            .unwrap();
+        let engine = Engine::new(
+            compiled,
+            EngineConfig { n_workers: workers, router: RouterPolicy::RoundRobin },
+        );
+        let stats = b.run(
+            &format!("engine workers={workers}"),
+            trace.packets.len() as f64,
+            || {
+                keep(engine.process_trace(&trace.packets).unwrap());
+            },
+        );
+        println!(
+            "    -> sustained {}",
+            format_rate(stats.items_per_sec())
+        );
+        report.add(stats);
+    }
+
+    // Modeled ASIC for the same program.
+    let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model).unwrap();
+    let t = compiled.chip.timing(&compiled.program);
+    println!(
+        "\nmodeled ASIC for this program: {:.0} M packets/s ({} elements, {} pass)",
+        t.pps / 1e6,
+        t.elements,
+        t.passes
+    );
+
+    // Batcher policy sensitivity (size bound only; the simulator is
+    // offline so deadlines don't trigger).
+    let mut report = Report::new("batcher formation cost");
+    report.header();
+    for size in [64usize, 256, 1024] {
+        let mut batcher = Batcher::new(BatchPolicy {
+            max_size: size,
+            max_delay: std::time::Duration::from_millis(10),
+        });
+        let mut i = 0usize;
+        let stats = b.run(&format!("batcher max_size={size}"), 1.0, || {
+            let out: Option<Batch> = batcher.push(trace.packets[i & 8191].clone());
+            i += 1;
+            keep(out);
+        });
+        report.add(stats);
+    }
+}

@@ -1,0 +1,111 @@
+//! E8 bench: BNN vs exact-match LUT — accuracy per SRAM bit on the DDoS
+//! workload, plus lookup/classify cost in the simulator.
+//!
+//! Uses the trained artifact model when available (`make artifacts`),
+//! else a random one (accuracy column then only shows the LUT trend).
+//!
+//! `cargo bench --bench memory_baseline`
+
+use n2net::baseline::LutClassifier;
+use n2net::bnn::io::{DdosDoc, SubnetDoc};
+use n2net::bnn::{self, BnnModel};
+use n2net::compiler::{Compiler, CompilerOptions, InputEncoding};
+use n2net::net::packet::IPV4_SRC_OFFSET;
+use n2net::net::{TraceGenerator, TraceKind};
+use n2net::rmt::{ChipConfig, Pipeline};
+use n2net::runtime::Oracle;
+use n2net::util::bench::{default_bencher, keep, Report};
+use n2net::util::rng::Rng;
+
+fn fallback_ddos() -> DdosDoc {
+    DdosDoc {
+        subnets: vec![
+            SubnetDoc { prefix: 0xC0A80000, prefix_len: 16 },
+            SubnetDoc { prefix: 0x0A400000, prefix_len: 12 },
+        ],
+        attack_fraction: 0.5,
+        seed: 1,
+    }
+}
+
+fn main() {
+    let dir = Oracle::default_dir();
+    let (model, ddos, trained) = match bnn::load_weights(dir.join("weights.json")) {
+        Ok((m, doc)) => (m, doc.ddos, true),
+        Err(_) => (BnnModel::random(32, &[64, 32, 1], 9), fallback_ddos(), false),
+    };
+    println!(
+        "# E8 — accuracy per SRAM bit ({} model)",
+        if trained { "trained" } else { "random" }
+    );
+
+    let mut gen = TraceGenerator::new(42);
+    let trace = gen.generate(&TraceKind::Ddos { ddos: ddos.clone() }, 4000);
+
+    // BNN accuracy via the reference forward (same bits as the switch).
+    let bnn_acc = trace
+        .keys
+        .iter()
+        .zip(&trace.labels)
+        .filter(|(&k, &l)| {
+            bnn::forward(&model, &bnn::PackedBits::from_u32(k)).get(0) as u32 == l
+        })
+        .count() as f64
+        / trace.keys.len() as f64;
+    let bnn_bits = model.spec.weight_bits_total();
+    println!("\n{:>14} {:>12} {:>10}", "SRAM bits", "classifier", "accuracy");
+    println!("{:>14} {:>12} {:>9.2}%", bnn_bits, "BNN", bnn_acc * 100.0);
+
+    let mut rng = Rng::seed_from_u64(7);
+    for budget in [bnn_bits, 16 * bnn_bits, 256 * bnn_bits, 11_562_500] {
+        let mut lut = LutClassifier::with_budget_bits(budget);
+        lut.populate_from(&ddos, &mut rng);
+        let acc = lut.accuracy(&trace.keys, &trace.labels);
+        println!(
+            "{:>14} {:>12} {:>9.2}%",
+            budget,
+            format!("LUT({})", lut.n_entries()),
+            acc * 100.0
+        );
+    }
+
+    // Measured per-packet cost: BNN pipeline vs LUT match stage on the
+    // same simulator.
+    let b = default_bencher();
+    let mut report = Report::new("per-packet classification cost (simulator)");
+    report.header();
+
+    let opts = CompilerOptions {
+        input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
+        ..Default::default()
+    };
+    let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model).unwrap();
+    let mut pipe = Pipeline::new(
+        ChipConfig::rmt(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        true,
+    )
+    .unwrap();
+    let frame = &trace.packets[0];
+    let s = b.run("BNN pipeline classify", 1.0, || {
+        keep(pipe.process_packet(frame).unwrap());
+    });
+    report.add(s);
+
+    let mut lut = LutClassifier::with_budget_bits(1_048_576);
+    lut.populate_from(&ddos, &mut rng);
+    let keys = trace.keys.clone();
+    let mut i = 0usize;
+    let s = b.run("LUT exact-match classify", 1.0, || {
+        let k = keys[i % keys.len()];
+        i += 1;
+        keep(lut.classify(k));
+    });
+    report.add(s);
+
+    println!(
+        "\n(the ASIC model makes both free at line rate — the point of E8 is\n\
+         the accuracy column: structure generalizes, enumeration does not)"
+    );
+}

@@ -1,0 +1,94 @@
+//! L3 hot-path microbenchmarks — the §Perf instrument (DESIGN.md §9).
+//!
+//! Measures the simulator's inner loops in isolation:
+//!   * element execution (per element, per op)
+//!   * full per-packet pipeline traversal (the use-case model)
+//!   * parsing
+//!   * PHV allocation vs reuse
+//!
+//! `cargo bench --bench pipeline_hotpath`
+
+use n2net::bnn::BnnModel;
+use n2net::compiler::{Compiler, CompilerOptions, InputEncoding};
+use n2net::net::packet::PacketBuilder;
+use n2net::rmt::{ChipConfig, Phv, Pipeline};
+use n2net::util::bench::{default_bencher, keep, Report};
+
+fn main() {
+    let chip = ChipConfig::rmt();
+    // The paper's use-case model: 32b -> 64 -> 32, 30 elements.
+    let model = BnnModel::random(32, &[64, 32], 3);
+    let opts = CompilerOptions {
+        input: InputEncoding::PayloadLe {
+            offset: n2net::net::N2NET_PAYLOAD_OFFSET,
+        },
+        ..Default::default()
+    };
+    let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
+    let n_elements = compiled.program.n_elements();
+    let total_ops: usize = compiled
+        .program
+        .elements
+        .iter()
+        .map(|e| e.slot_cost())
+        .sum();
+    println!(
+        "# L3 hot path — use-case model: {n_elements} elements, {total_ops} op slots"
+    );
+
+    let b = default_bencher();
+    let mut report = Report::new("simulator inner loops");
+    report.header();
+
+    // Full packet: parse + 30 elements.
+    let frame = PacketBuilder::default().build_activations(&[0xDEADBEEF]);
+    let mut pipe = Pipeline::new(
+        chip.clone(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        false,
+    )
+    .unwrap();
+    let s = b.run("process_packet (parse+30 elem)", 1.0, || {
+        keep(pipe.process_packet(&frame).unwrap());
+    });
+    let per_elem = s.median_ns / n_elements as f64;
+    let per_op = s.median_ns / total_ops as f64;
+    report.add(s);
+
+    // PHV-reuse path (no per-packet allocation).
+    let mut phv = Phv::zeroed(&chip.phv);
+    compiled
+        .parser
+        .parse(&frame, &mut phv, &chip.phv)
+        .unwrap();
+    let template = phv.clone();
+    let s = b.run("process_phv (30 elem, PHV reused)", 1.0, || {
+        phv.clone_from(&template);
+        pipe.process_phv(&mut phv);
+        keep(phv.read(n2net::rmt::ContainerId(0)));
+    });
+    report.add(s);
+
+    // Parser alone.
+    let mut phv2 = Phv::zeroed(&chip.phv);
+    let s = b.run("parser only", 1.0, || {
+        compiled.parser.parse(&frame, &mut phv2, &chip.phv).unwrap();
+    });
+    report.add(s);
+
+    // PHV allocation cost (what process_packet pays per packet).
+    let s = b.run("Phv::zeroed alloc", 1.0, || {
+        keep(Phv::zeroed(&chip.phv));
+    });
+    report.add(s);
+
+    println!(
+        "\nderived: ~{:.0} ns/element, ~{:.1} ns/op-slot",
+        per_elem, per_op
+    );
+    println!(
+        "target (DESIGN.md §9): ≥1 M packets/s single-core for this model \
+         (≤1000 ns/packet)"
+    );
+}

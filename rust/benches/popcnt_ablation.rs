@@ -1,0 +1,98 @@
+//! E5/E7 bench: POPCNT implementation ablation.
+//!
+//! * E7 — naive unrolled loop vs the HAKMEM tree: element counts
+//!   ("a naive implementation ... may require a potentially big number
+//!   of elements") plus measured simulator cost of both programs.
+//! * E5 — §3 native-POPCNT chip: Table 1's 12-25 collapses to 5-10 and
+//!   parallel capacity doubles.
+//!
+//! `cargo bench --bench popcnt_ablation`
+
+use n2net::baseline::naive_popcount_program;
+use n2net::bnn::{BnnModel, PackedBits};
+use n2net::compiler::popcount::{naive_elements, tree_elements};
+use n2net::compiler::{elements_for_layer, Compiler, CompilerOptions, InputEncoding};
+use n2net::rmt::{ChipConfig, ContainerId, PacketParser, Pipeline};
+use n2net::util::bench::{default_bencher, Report};
+use n2net::util::rng::Rng;
+
+fn main() {
+    println!("# E5/E7 — POPCNT ablation");
+    println!(
+        "{:>10} {:>10} {:>10} {:>16} {:>18}",
+        "act bits", "naive el.", "tree el.", "layer el. (tree)", "layer el. (native)"
+    );
+    for n in [16usize, 32, 64, 128, 256, 512, 1024, 2048] {
+        println!(
+            "{:>10} {:>10} {:>10} {:>16} {:>18}",
+            n,
+            naive_elements(n),
+            tree_elements(n),
+            elements_for_layer(n, &ChipConfig::rmt()),
+            elements_for_layer(n, &ChipConfig::rmt_with_popcnt()),
+        );
+    }
+    // §3 claims.
+    assert_eq!(elements_for_layer(16, &ChipConfig::rmt_with_popcnt()), 5);
+    assert_eq!(elements_for_layer(2048, &ChipConfig::rmt_with_popcnt()), 10);
+    println!("§3 range 5-10 reproduced ✓");
+    println!(
+        "naive@2048 needs {} recirculation passes (vs 1 for the tree layer)\n",
+        naive_popcount_program(2048).0.passes(&ChipConfig::rmt())
+    );
+
+    let b = default_bencher();
+    let mut report = Report::new("measured simulator cost per packet");
+    report.header();
+
+    // Naive popcount programs (pure popcount of one vector).
+    for n in [32usize, 256, 2048] {
+        let (prog, _acc) = naive_popcount_program(n);
+        let chip = ChipConfig::rmt();
+        let mut pipe = Pipeline::new(chip.clone(), prog, PacketParser::default(), true).unwrap();
+        let mut rng = Rng::seed_from_u64(1);
+        let v = PackedBits::random(n, &mut rng);
+        let mut phv = pipe.fresh_phv();
+        let cfg = pipe.chip().phv.clone();
+        let stats = b.run(&format!("naive popcount N={n}"), 1.0, || {
+            for (k, &wd) in v.words().iter().enumerate() {
+                phv.write(ContainerId(k as u16), wd, &cfg);
+            }
+            pipe.process_phv(&mut phv);
+        });
+        report.add(stats);
+    }
+
+    // Full BNN layer (tree) on stock vs native chip.
+    for (name, chip) in [
+        ("tree/stock", ChipConfig::rmt()),
+        ("native §3", ChipConfig::rmt_with_popcnt()),
+    ] {
+        for n in [32usize, 256, 2048] {
+            let p = n2net::compiler::layout::max_parallel_neurons(&chip, n).min(2048 / n);
+            let model = BnnModel::random(n, &[p.max(1)], 5);
+            let opts = CompilerOptions {
+                input: InputEncoding::PayloadLe { offset: 0 },
+                ..Default::default()
+            };
+            let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
+            let mut pipe = Pipeline::new(
+                chip.clone(),
+                compiled.program.clone(),
+                compiled.parser.clone(),
+                true,
+            )
+            .unwrap();
+            let mut rng = Rng::seed_from_u64(2);
+            let x = PackedBits::random(n, &mut rng);
+            let mut pkt = Vec::new();
+            for w in x.words() {
+                pkt.extend_from_slice(&w.to_le_bytes());
+            }
+            let stats = b.run(&format!("layer {name} N={n}"), 1.0, || {
+                let _ = pipe.process_packet(&pkt).unwrap();
+            });
+            report.add(stats);
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! E1 bench: regenerate Table 1 (both chip variants) and measure the
+//! compiler itself (model → pipeline program) across activation widths.
+//!
+//! `cargo bench --bench table1`
+
+use n2net::bnn::BnnModel;
+use n2net::compiler::layout::max_parallel_neurons;
+use n2net::compiler::{render_table1, table1, Compiler, CompilerOptions, InputEncoding};
+use n2net::rmt::ChipConfig;
+use n2net::util::bench::{default_bencher, keep, Report};
+
+fn main() {
+    println!("# E1 — Table 1 regeneration");
+    println!("\n## stock RMT chip (paper values)");
+    print!("{}", render_table1(&ChipConfig::rmt()));
+    println!("\n## + native POPCNT (§3: 5-10 range, 2x parallelism)");
+    print!("{}", render_table1(&ChipConfig::rmt_with_popcnt()));
+
+    // Assert the paper's numbers inside the bench too — a bench that
+    // silently regenerates the wrong table is worse than none.
+    let paper = [
+        (16, 128, 12),
+        (32, 64, 14),
+        (64, 32, 16),
+        (128, 16, 18),
+        (256, 8, 20),
+        (512, 4, 22),
+        (1024, 2, 24),
+        (2048, 1, 25),
+    ];
+    for (row, (n, p, e)) in table1(&ChipConfig::rmt()).iter().zip(paper) {
+        assert_eq!(
+            (row.activation_bits, row.parallel_neurons, row.elements),
+            (n, p, e)
+        );
+    }
+    println!("table matches the paper exactly ✓");
+
+    // Compiler latency per width (single maximal group, like Table 1;
+    // 16b capped at 64 parallel on the uniform-32b PHV, see DESIGN.md).
+    let b = default_bencher();
+    let mut report = Report::new("compiler latency (model -> pipeline program)");
+    report.header();
+    let chip = ChipConfig::rmt();
+    for n in [16usize, 32, 64, 128, 256, 512, 1024, 2048] {
+        let p = if n == 16 { 64 } else { max_parallel_neurons(&chip, n) };
+        let model = BnnModel::random(n, &[p], 7);
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiler = Compiler::new(chip.clone(), opts);
+        let stats = b.run(&format!("compile N={n} M={p}"), 1.0, || {
+            keep(compiler.compile(&model).unwrap());
+        });
+        report.add(stats);
+    }
+}

@@ -1,0 +1,79 @@
+//! E3 bench: the paper's throughput-scaling series — modeled ASIC rate
+//! (960 Mpps × parallel neurons) alongside the *measured* software
+//! simulator rate for the same programs.
+//!
+//! `cargo bench --bench throughput`
+
+use n2net::analysis::throughput::throughput_table;
+use n2net::bnn::{BnnModel, PackedBits};
+use n2net::compiler::layout::max_parallel_neurons;
+use n2net::compiler::{Compiler, CompilerOptions, InputEncoding};
+use n2net::rmt::{ChipConfig, Pipeline};
+use n2net::util::bench::{default_bencher, format_rate, Report};
+use n2net::util::rng::Rng;
+
+fn main() {
+    let chip = ChipConfig::rmt();
+    println!("# E3 — throughput scaling");
+    println!(
+        "{:>10} {:>10} {:>9} {:>14} {:>16}",
+        "act bits", "parallel", "elements", "ASIC Mpps", "ASIC neurons/s"
+    );
+    for r in throughput_table(&chip) {
+        println!(
+            "{:>10} {:>10} {:>9} {:>14.0} {:>16}",
+            r.activation_bits,
+            r.parallel_neurons,
+            r.elements,
+            r.pps / 1e6,
+            format_rate(r.neurons_per_sec)
+        );
+    }
+    // Paper headline: 960 M neurons/s at 2048 b activations.
+    let r2048 = throughput_table(&chip)
+        .into_iter()
+        .find(|r| r.activation_bits == 2048)
+        .unwrap();
+    assert_eq!(r2048.neurons_per_sec, 960e6);
+    println!("paper headline reproduced: 960 M neurons/s @ 2048 b ✓");
+
+    // Measured software-simulator packet rate per configuration.
+    let b = default_bencher();
+    let mut report = Report::new("software simulator packet rate (measured, per config)");
+    report.header();
+    for n in [16usize, 32, 64, 256, 1024, 2048] {
+        let p = if n == 16 { 64 } else { max_parallel_neurons(&chip, n) };
+        let model = BnnModel::random(n, &[p], 11);
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
+        let mut pipe = Pipeline::new(
+            chip.clone(),
+            compiled.program.clone(),
+            compiled.parser.clone(),
+            true,
+        )
+        .unwrap();
+        // Pre-build a packet ring so packet construction isn't measured.
+        let mut rng = Rng::seed_from_u64(4);
+        let packets: Vec<Vec<u8>> = (0..64)
+            .map(|_| {
+                let x = PackedBits::random(n, &mut rng);
+                let mut pkt = Vec::new();
+                for w in x.words() {
+                    pkt.extend_from_slice(&w.to_le_bytes());
+                }
+                pkt
+            })
+            .collect();
+        let mut i = 0usize;
+        let stats = b.run(&format!("simulate N={n} M={p} (pkt/iter)"), 1.0, || {
+            let pkt = &packets[i & 63];
+            i += 1;
+            let _ = pipe.process_packet(pkt).unwrap();
+        });
+        report.add(stats);
+    }
+}

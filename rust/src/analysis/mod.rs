@@ -1,0 +1,8 @@
+//! Analytical models behind the paper's §2-Evaluation and §3 numbers:
+//! throughput scaling (E3) and the chip-area estimate (E6).
+
+pub mod area;
+pub mod throughput;
+
+pub use area::{area_report, AreaModel, AreaReport};
+pub use throughput::{throughput_table, ThroughputRow};

@@ -1,0 +1,120 @@
+//! Throughput scaling (paper §2-Evaluation, last two paragraphs):
+//!
+//! * "an RMT pipeline can process 960 million packets per second. Since
+//!   we encode in one packet our activations, N2Net enables the
+//!   processing of 960 million neurons per second, when using 2048b
+//!   activations. Processing smaller activations enables higher
+//!   throughput because of parallel processing."
+//! * the two-layer use case: "960 million two-layers-BNNs per second,
+//!   using 32b activations ... and two layers of 64 and 32 neurons."
+
+use crate::bnn::BnnSpec;
+use crate::compiler::layout::max_parallel_neurons;
+use crate::compiler::{elements_for_layer, Compiler, CompilerOptions};
+use crate::rmt::ChipConfig;
+
+/// One row of the throughput table (per activation width).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ThroughputRow {
+    pub activation_bits: usize,
+    pub parallel_neurons: usize,
+    pub elements: usize,
+    /// Packets/s at line rate for a single-group program (1 pass).
+    pub pps: f64,
+    /// Neurons evaluated per second = pps × parallel.
+    pub neurons_per_sec: f64,
+}
+
+/// Throughput across Table 1's activation widths.
+pub fn throughput_table(chip: &ChipConfig) -> Vec<ThroughputRow> {
+    [16usize, 32, 64, 128, 256, 512, 1024, 2048]
+        .into_iter()
+        .map(|n| {
+            let parallel = max_parallel_neurons(chip, n);
+            let elements = elements_for_layer(n, chip);
+            let passes = elements.div_ceil(chip.n_elements).max(1);
+            let pps = chip.line_rate_pps() / passes as f64;
+            ThroughputRow {
+                activation_bits: n,
+                parallel_neurons: parallel,
+                elements,
+                pps,
+                neurons_per_sec: pps * parallel as f64,
+            }
+        })
+        .collect()
+}
+
+/// Modeled end-to-end inference rate for a whole BNN (validates E4 via
+/// an actual compile — element counts come from the emitted program).
+pub fn model_inference_rate(spec: &BnnSpec, chip: &ChipConfig) -> crate::error::Result<f64> {
+    let model = crate::bnn::BnnModel::random(spec.in_bits, &spec.layer_sizes, 0);
+    let compiled =
+        Compiler::new(chip.clone(), CompilerOptions::default()).compile(&model)?;
+    Ok(compiled.resources.inferences_per_sec)
+}
+
+/// Render the throughput table.
+pub fn render(chip: &ChipConfig) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:>10} {:>10} {:>9} {:>12} {:>16}",
+        "act bits", "parallel", "elements", "Mpps", "Gneurons/s"
+    );
+    for r in throughput_table(chip) {
+        let _ = writeln!(
+            s,
+            "{:>10} {:>10} {:>9} {:>12.0} {:>16.2}",
+            r.activation_bits,
+            r.parallel_neurons,
+            r.elements,
+            r.pps / 1e6,
+            r.neurons_per_sec / 1e9
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_headline_2048() {
+        // E3: 960 M neurons/s at 2048 b.
+        let rows = throughput_table(&ChipConfig::rmt());
+        let r2048 = rows.iter().find(|r| r.activation_bits == 2048).unwrap();
+        assert_eq!(r2048.pps, 960e6);
+        assert_eq!(r2048.neurons_per_sec, 960e6);
+    }
+
+    #[test]
+    fn smaller_activations_scale_up() {
+        let rows = throughput_table(&ChipConfig::rmt());
+        let r32 = rows.iter().find(|r| r.activation_bits == 32).unwrap();
+        assert_eq!(r32.parallel_neurons, 64);
+        assert_eq!(r32.neurons_per_sec, 960e6 * 64.0); // 61.4 G/s
+        // Monotone decreasing in activation width.
+        for w in rows.windows(2) {
+            assert!(w[0].neurons_per_sec >= w[1].neurons_per_sec);
+        }
+    }
+
+    #[test]
+    fn two_layer_use_case_at_line_rate() {
+        // E4: "960 million two-layers-BNNs per second".
+        let spec = BnnSpec::new(32, &[64, 32]).unwrap();
+        let rate = model_inference_rate(&spec, &ChipConfig::rmt()).unwrap();
+        assert_eq!(rate, 960e6);
+    }
+
+    #[test]
+    fn deep_model_recirculates() {
+        // 14 + 16 + 14 = 44 elements > 32 ⇒ 2 passes ⇒ half line rate.
+        let spec = BnnSpec::new(32, &[64, 32, 32]).unwrap();
+        let rate = model_inference_rate(&spec, &ChipConfig::rmt()).unwrap();
+        assert_eq!(rate, 480e6);
+    }
+}

@@ -1,0 +1,223 @@
+//! DDoS white/blacklist filtering on the switch (paper use case 1).
+//!
+//! A trained BNN classifies each packet by its IPv4 source address at
+//! line rate; the comparison against the exact-match LUT baseline under
+//! an SRAM budget is experiment E8 (accuracy per SRAM byte — the
+//! paper's §1 motivation that "a NN can better fit the data at hand,
+//! potentially reducing the memory requirements at the cost of extra
+//! computation").
+
+use crate::bnn::io::DdosDoc;
+use crate::bnn::BnnModel;
+use crate::baseline::LutClassifier;
+use crate::compiler::{CompiledModel, Compiler, CompilerOptions, InputEncoding};
+use crate::error::Result;
+use crate::net::packet::IPV4_SRC_OFFSET;
+use crate::net::{Trace, TraceGenerator, TraceKind};
+use crate::rmt::{ChipConfig, Pipeline};
+use crate::util::rng::Rng;
+
+/// The in-switch DDoS filter: a compiled BNN classifying on src IP.
+pub struct DdosFilter {
+    pub compiled: CompiledModel,
+    pipeline: Pipeline,
+    pub ddos: DdosDoc,
+}
+
+/// Evaluation results for one classifier.
+#[derive(Clone, Debug)]
+pub struct ClassifierEval {
+    pub accuracy: f64,
+    pub false_positive_rate: f64,
+    pub false_negative_rate: f64,
+    pub sram_bits: usize,
+}
+
+/// E8 report: BNN vs LUT under a memory budget.
+#[derive(Clone, Debug)]
+pub struct DdosReport {
+    pub n_packets: usize,
+    pub bnn: ClassifierEval,
+    pub lut: ClassifierEval,
+}
+
+impl DdosFilter {
+    /// Compile `model` for src-IP classification on `chip`.
+    pub fn new(model: &BnnModel, chip: ChipConfig, ddos: DdosDoc) -> Result<Self> {
+        let opts = CompilerOptions {
+            input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(chip.clone(), opts).compile(model)?;
+        let pipeline = Pipeline::new(
+            chip,
+            compiled.program.clone(),
+            compiled.parser.clone(),
+            true,
+        )?;
+        Ok(Self { compiled, pipeline, ddos })
+    }
+
+    /// Classify one frame: 1 = blacklisted. Output bit 0 of the model.
+    pub fn classify_frame(&mut self, frame: &[u8]) -> Result<u32> {
+        let phv = self.pipeline.process_packet(frame)?;
+        Ok(self.compiled.read_output(&phv).get(0) as u32)
+    }
+
+    /// Evaluate on a labeled trace.
+    pub fn evaluate(&mut self, trace: &Trace) -> Result<ClassifierEval> {
+        let mut correct = 0usize;
+        let (mut fp, mut fng, mut pos, mut neg) = (0usize, 0usize, 0usize, 0usize);
+        for (pkt, &label) in trace.packets.iter().zip(&trace.labels) {
+            let pred = self.classify_frame(pkt)?;
+            if pred == label {
+                correct += 1;
+            }
+            if label == 1 {
+                pos += 1;
+                if pred == 0 {
+                    fng += 1;
+                }
+            } else {
+                neg += 1;
+                if pred == 1 {
+                    fp += 1;
+                }
+            }
+        }
+        Ok(ClassifierEval {
+            accuracy: correct as f64 / trace.packets.len().max(1) as f64,
+            false_positive_rate: fp as f64 / neg.max(1) as f64,
+            false_negative_rate: fng as f64 / pos.max(1) as f64,
+            sram_bits: self.compiled.resources.sram_bits,
+        })
+    }
+
+    /// Run the E8 comparison: this BNN vs an exact-match LUT given the
+    /// *same* SRAM budget the BNN's weights consume.
+    pub fn compare_with_lut(
+        &mut self,
+        n_packets: usize,
+        seed: u64,
+    ) -> Result<DdosReport> {
+        let mut gen = TraceGenerator::new(seed);
+        let trace = gen.generate(&TraceKind::Ddos { ddos: self.ddos.clone() }, n_packets);
+
+        let bnn = self.evaluate(&trace)?;
+        // LUT gets the same memory the BNN uses (at least one entry).
+        let budget = bnn.sram_bits.max(self.compiled.resources.weight_bits);
+        let mut lut = LutClassifier::with_budget_bits(budget.max(96));
+        let mut rng = Rng::seed_from_u64(seed ^ 0x1u64);
+        lut.populate_from(&self.ddos, &mut rng);
+        let mut correct = 0usize;
+        let (mut fp, mut fng, mut pos, mut neg) = (0usize, 0usize, 0usize, 0usize);
+        for (&key, &label) in trace.keys.iter().zip(&trace.labels) {
+            let pred = lut.classify(key);
+            if pred == label {
+                correct += 1;
+            }
+            if label == 1 {
+                pos += 1;
+                if pred == 0 {
+                    fng += 1;
+                }
+            } else {
+                neg += 1;
+                if pred == 1 {
+                    fp += 1;
+                }
+            }
+        }
+        Ok(DdosReport {
+            n_packets,
+            bnn,
+            lut: ClassifierEval {
+                accuracy: correct as f64 / n_packets.max(1) as f64,
+                false_positive_rate: fp as f64 / neg.max(1) as f64,
+                false_negative_rate: fng as f64 / pos.max(1) as f64,
+                sram_bits: lut.sram_bits(),
+            },
+        })
+    }
+
+    pub fn pipeline_stats(&self) -> crate::rmt::PipelineStats {
+        self.pipeline.stats()
+    }
+}
+
+impl DdosReport {
+    pub fn render(&self) -> String {
+        format!(
+            "E8: DDoS classification over {} packets\n\
+             {:<6} {:>10} {:>8} {:>8} {:>14}\n\
+             {:<6} {:>9.2}% {:>7.2}% {:>7.2}% {:>12} b\n\
+             {:<6} {:>9.2}% {:>7.2}% {:>7.2}% {:>12} b\n",
+            self.n_packets,
+            "", "accuracy", "FPR", "FNR", "SRAM",
+            "BNN",
+            self.bnn.accuracy * 100.0,
+            self.bnn.false_positive_rate * 100.0,
+            self.bnn.false_negative_rate * 100.0,
+            self.bnn.sram_bits,
+            "LUT",
+            self.lut.accuracy * 100.0,
+            self.lut.false_positive_rate * 100.0,
+            self.lut.false_negative_rate * 100.0,
+            self.lut.sram_bits,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::io::SubnetDoc;
+
+    fn test_ddos() -> DdosDoc {
+        DdosDoc {
+            subnets: vec![SubnetDoc { prefix: 0xC0A80000, prefix_len: 16 }],
+            attack_fraction: 0.5,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn filter_runs_and_is_deterministic() {
+        let model = BnnModel::random(32, &[16, 1], 3);
+        let mut f = DdosFilter::new(&model, ChipConfig::rmt(), test_ddos()).unwrap();
+        let frame = crate::net::packet::PacketBuilder::default()
+            .src_ip(0xC0A80001)
+            .build_activations(&[0xC0A80001]);
+        let a = f.classify_frame(&frame).unwrap();
+        let b = f.classify_frame(&frame).unwrap();
+        assert_eq!(a, b);
+        assert!(a <= 1);
+    }
+
+    #[test]
+    fn switch_classification_equals_reference_model() {
+        // The switch's per-packet prediction must equal bnn::forward on
+        // the src IP for every packet.
+        let model = BnnModel::random(32, &[32, 1], 5);
+        let ddos = test_ddos();
+        let mut f = DdosFilter::new(&model, ChipConfig::rmt(), ddos.clone()).unwrap();
+        let mut gen = TraceGenerator::new(11);
+        let trace = gen.generate(&TraceKind::Ddos { ddos }, 100);
+        for (pkt, &key) in trace.packets.iter().zip(&trace.keys) {
+            let pred = f.classify_frame(pkt).unwrap();
+            let x = crate::bnn::PackedBits::from_u32(key);
+            let expect = crate::bnn::forward(&model, &x).get(0) as u32;
+            assert_eq!(pred, expect, "ip {key:#x}");
+        }
+    }
+
+    #[test]
+    fn report_renders() {
+        let model = BnnModel::random(32, &[16, 1], 7);
+        let mut f = DdosFilter::new(&model, ChipConfig::rmt(), test_ddos()).unwrap();
+        let r = f.compare_with_lut(200, 9).unwrap();
+        assert!(r.render().contains("E8"));
+        assert!(r.bnn.accuracy >= 0.0 && r.bnn.accuracy <= 1.0);
+        assert!(r.lut.accuracy >= 0.0 && r.lut.accuracy <= 1.0);
+    }
+}

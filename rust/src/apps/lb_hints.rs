@@ -1,0 +1,166 @@
+//! Load-balancing hints (paper use case 2): the switch runs the BNN and
+//! encodes the classification outcome in the header as a *hint* for the
+//! downstream server — "e.g., on how to handle the packet's payload to
+//! optimize data locality/cache coherency or to support load balancing"
+//! (paper §1, citing Sharma et al., NSDI'17).
+//!
+//! Here the BNN's output bits select one of `2^h` server queues, so
+//! packets with similar header features land on the same server (data
+//! locality) while the population spreads across queues. The report
+//! compares queue balance and flow affinity against a plain hash.
+
+use crate::bnn::BnnModel;
+use crate::compiler::{CompiledModel, Compiler, CompilerOptions, InputEncoding};
+use crate::error::Result;
+use crate::net::packet::IPV4_SRC_OFFSET;
+use crate::net::Trace;
+use crate::rmt::{ChipConfig, Pipeline};
+
+/// The hint router: BNN output bits → server queue index.
+pub struct HintRouter {
+    pub compiled: CompiledModel,
+    pipeline: Pipeline,
+    /// Hint width: queue = low `hint_bits` of the model output.
+    pub hint_bits: usize,
+}
+
+/// Balance/affinity report for a routing policy.
+#[derive(Clone, Debug)]
+pub struct LbReport {
+    pub n_servers: usize,
+    pub queue_counts: Vec<usize>,
+    /// max/mean queue occupancy (1.0 = perfectly balanced).
+    pub imbalance: f64,
+    /// Fraction of repeated-key packets routed to the same server as
+    /// their first occurrence (locality; 1.0 for deterministic policies).
+    pub affinity: f64,
+}
+
+impl HintRouter {
+    pub fn new(model: &BnnModel, chip: ChipConfig, hint_bits: usize) -> Result<Self> {
+        assert!(hint_bits >= 1 && hint_bits <= model.spec.layer_sizes.last().copied().unwrap_or(1));
+        let opts = CompilerOptions {
+            input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(chip.clone(), opts).compile(model)?;
+        let pipeline = Pipeline::new(
+            chip,
+            compiled.program.clone(),
+            compiled.parser.clone(),
+            true,
+        )?;
+        Ok(Self { compiled, pipeline, hint_bits })
+    }
+
+    /// Route one frame to a queue in `[0, 2^hint_bits)`.
+    pub fn route(&mut self, frame: &[u8]) -> Result<usize> {
+        let phv = self.pipeline.process_packet(frame)?;
+        let out = self.compiled.read_output(&phv);
+        let mut hint = 0usize;
+        for b in 0..self.hint_bits {
+            hint |= (out.get(b) as usize) << b;
+        }
+        Ok(hint)
+    }
+
+    /// Route a whole trace and report balance + affinity.
+    pub fn evaluate(&mut self, trace: &Trace) -> Result<LbReport> {
+        let n_servers = 1usize << self.hint_bits;
+        let mut counts = vec![0usize; n_servers];
+        let mut first: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+        let mut repeats = 0usize;
+        let mut affine = 0usize;
+        for (pkt, &key) in trace.packets.iter().zip(&trace.keys) {
+            let q = self.route(pkt)?;
+            counts[q] += 1;
+            match first.get(&key) {
+                Some(&q0) => {
+                    repeats += 1;
+                    if q0 == q {
+                        affine += 1;
+                    }
+                }
+                None => {
+                    first.insert(key, q);
+                }
+            }
+        }
+        let mean = trace.packets.len() as f64 / n_servers as f64;
+        let max = counts.iter().max().copied().unwrap_or(0) as f64;
+        Ok(LbReport {
+            n_servers,
+            queue_counts: counts,
+            imbalance: if mean > 0.0 { max / mean } else { 0.0 },
+            affinity: if repeats > 0 { affine as f64 / repeats as f64 } else { 1.0 },
+        })
+    }
+}
+
+/// Plain hash routing baseline over the same trace.
+pub fn hash_route_report(trace: &Trace, hint_bits: usize) -> LbReport {
+    let n_servers = 1usize << hint_bits;
+    let mut counts = vec![0usize; n_servers];
+    for &key in &trace.keys {
+        // FNV-style mix then mask.
+        let mut h = key as u64 ^ 0xcbf29ce484222325;
+        h = h.wrapping_mul(0x100000001b3);
+        counts[(h as usize) & (n_servers - 1)] += 1;
+    }
+    let mean = trace.keys.len() as f64 / n_servers as f64;
+    let max = counts.iter().max().copied().unwrap_or(0) as f64;
+    LbReport {
+        n_servers,
+        queue_counts: counts,
+        imbalance: if mean > 0.0 { max / mean } else { 0.0 },
+        affinity: 1.0, // hash of the key is trivially affine
+    }
+}
+
+impl LbReport {
+    pub fn render(&self, name: &str) -> String {
+        format!(
+            "{name}: servers={} imbalance(max/mean)={:.2} affinity={:.2} queues={:?}",
+            self.n_servers, self.imbalance, self.affinity, self.queue_counts
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{TraceGenerator, TraceKind};
+
+    #[test]
+    fn routes_are_deterministic_and_bounded() {
+        let model = BnnModel::random(32, &[16], 21);
+        let mut r = HintRouter::new(&model, ChipConfig::rmt(), 3).unwrap();
+        let mut gen = TraceGenerator::new(5);
+        let trace = gen.generate(&TraceKind::UniformIps, 64);
+        for pkt in &trace.packets {
+            let q1 = r.route(pkt).unwrap();
+            let q2 = r.route(pkt).unwrap();
+            assert_eq!(q1, q2);
+            assert!(q1 < 8);
+        }
+    }
+
+    #[test]
+    fn affinity_is_perfect_for_repeated_flows() {
+        let model = BnnModel::random(32, &[16], 22);
+        let mut r = HintRouter::new(&model, ChipConfig::rmt(), 2).unwrap();
+        let mut gen = TraceGenerator::new(6);
+        let trace = gen.generate(&TraceKind::ZipfFlows { n_flows: 20 }, 400);
+        let rep = r.evaluate(&trace).unwrap();
+        assert_eq!(rep.affinity, 1.0); // same IP ⇒ same hint, always
+        assert_eq!(rep.queue_counts.iter().sum::<usize>(), 400);
+    }
+
+    #[test]
+    fn hash_baseline_spreads_uniform_traffic() {
+        let mut gen = TraceGenerator::new(7);
+        let trace = gen.generate(&TraceKind::UniformIps, 4096);
+        let rep = hash_route_report(&trace, 2);
+        assert!(rep.imbalance < 1.2, "imbalance {}", rep.imbalance);
+    }
+}

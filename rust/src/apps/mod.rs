@@ -1,0 +1,16 @@
+//! The paper's use cases (§1) as runnable applications on the simulated
+//! switch:
+//!
+//! * [`ddos`] — "a neural network classifier to implement packet
+//!   classification inside the chip, e.g., to create large
+//!   white/blacklist indexes for Denial of Service protection".
+//! * [`lb_hints`] — "the outcome of the NN classification can be encoded
+//!   in the packet header and used in an end-to-end system, to provide
+//!   'hints' to a more complex processor located in a server ... or to
+//!   support load balancing" (cf. the paper's ref [15]).
+
+pub mod ddos;
+pub mod lb_hints;
+
+pub use ddos::{DdosFilter, DdosReport};
+pub use lb_hints::{HintRouter, LbReport};

@@ -1,0 +1,194 @@
+//! Exact-match lookup-table classifier — what a switch does today.
+//!
+//! The paper's motivation (§1): classification via lookup tables needs
+//! one entry per key, and table SRAM "is the main cost factor in a
+//! network device's switching chip ... accounting for more than half of
+//! the chip's silicon resources". This module implements that baseline
+//! as a real match-action element (so it runs on the simulator) plus a
+//! standalone evaluator with an SRAM budget, enabling the
+//! accuracy-per-byte comparison in experiment E8.
+
+use std::collections::HashSet;
+
+use crate::bnn::io::DdosDoc;
+use crate::rmt::{ChipConfig, ContainerId, MatchStage, TableEntry};
+use crate::util::rng::Rng;
+
+/// SRAM cost model for exact-match entries (mirrors
+/// [`MatchStage::sram_bits`]): key + 1-bit-ish action rounded to a word
+/// + per-entry overhead.
+#[derive(Clone, Copy, Debug)]
+pub struct LutMemoryModel {
+    pub key_bits: usize,
+    pub action_bits: usize,
+    pub overhead_bits: usize,
+}
+
+impl Default for LutMemoryModel {
+    fn default() -> Self {
+        Self { key_bits: 32, action_bits: 32, overhead_bits: 32 }
+    }
+}
+
+impl LutMemoryModel {
+    pub fn bits_per_entry(&self) -> usize {
+        self.key_bits + self.action_bits + self.overhead_bits
+    }
+
+    /// How many entries fit a byte budget.
+    pub fn entries_for_budget(&self, budget_bits: usize) -> usize {
+        budget_bits / self.bits_per_entry()
+    }
+}
+
+/// An exact-match blacklist classifier with bounded SRAM.
+///
+/// Population strategy (the best an operator can do with point entries):
+/// insert the attacker addresses *observed so far* until the table is
+/// full — a FIB-style reactive blacklist.
+#[derive(Clone, Debug)]
+pub struct LutClassifier {
+    entries: HashSet<u32>,
+    pub capacity: usize,
+    pub memory: LutMemoryModel,
+}
+
+impl LutClassifier {
+    pub fn new(capacity: usize) -> Self {
+        Self { entries: HashSet::with_capacity(capacity), capacity, memory: LutMemoryModel::default() }
+    }
+
+    /// Build from an SRAM budget in bits.
+    pub fn with_budget_bits(budget_bits: usize) -> Self {
+        let m = LutMemoryModel::default();
+        Self { entries: HashSet::new(), capacity: m.entries_for_budget(budget_bits), memory: m }
+    }
+
+    /// Observe a labeled key (training phase); inserts attackers until
+    /// capacity. Returns false when the table is full.
+    pub fn observe(&mut self, key: u32, label: u32) -> bool {
+        if label == 0 {
+            return true;
+        }
+        if self.entries.len() >= self.capacity {
+            return false;
+        }
+        self.entries.insert(key);
+        true
+    }
+
+    /// Populate from the DDoS distribution by sampling attacker
+    /// addresses (what an operator's detector would feed it).
+    pub fn populate_from(&mut self, ddos: &DdosDoc, rng: &mut Rng) {
+        let mut gen = crate::net::TraceGenerator::new(rng.next_u64());
+        while self.entries.len() < self.capacity {
+            let ip = gen.attacker_ip(ddos);
+            self.entries.insert(ip);
+        }
+    }
+
+    pub fn n_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// SRAM bits this table consumes.
+    pub fn sram_bits(&self) -> usize {
+        self.entries.len() * self.memory.bits_per_entry()
+    }
+
+    /// Classify: 1 = blacklisted (exact hit), 0 = pass.
+    #[inline]
+    pub fn classify(&self, key: u32) -> u32 {
+        self.entries.contains(&key) as u32
+    }
+
+    /// Accuracy over a labeled key set.
+    pub fn accuracy(&self, keys: &[u32], labels: &[u32]) -> f64 {
+        assert_eq!(keys.len(), labels.len());
+        let correct = keys
+            .iter()
+            .zip(labels)
+            .filter(|(k, l)| self.classify(**k) == **l)
+            .count();
+        correct as f64 / keys.len().max(1) as f64
+    }
+
+    /// Materialize as a real match stage on container `key` (runs on the
+    /// simulator; action data = [label]).
+    pub fn to_match_stage(&self, key: ContainerId) -> MatchStage {
+        let mut t = MatchStage::new(vec![key], vec![0]);
+        for &ip in &self.entries {
+            t.insert(TableEntry { key: vec![ip], action_data: vec![1] }).unwrap();
+        }
+        t
+    }
+
+    /// Does this table fit one element's SRAM on `chip`?
+    pub fn fits(&self, chip: &ChipConfig) -> bool {
+        self.sram_bits() <= chip.sram_bits_per_element
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::io::SubnetDoc;
+
+    fn ddos() -> DdosDoc {
+        DdosDoc {
+            subnets: vec![SubnetDoc { prefix: 0xC0A80000, prefix_len: 16 }],
+            attack_fraction: 0.5,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn classify_hit_miss() {
+        let mut lut = LutClassifier::new(10);
+        assert!(lut.observe(42, 1));
+        assert!(lut.observe(7, 0)); // benign not stored
+        assert_eq!(lut.classify(42), 1);
+        assert_eq!(lut.classify(7), 0);
+        assert_eq!(lut.n_entries(), 1);
+    }
+
+    #[test]
+    fn capacity_bounds() {
+        let mut lut = LutClassifier::new(2);
+        assert!(lut.observe(1, 1));
+        assert!(lut.observe(2, 1));
+        assert!(!lut.observe(3, 1)); // full
+        assert_eq!(lut.n_entries(), 2);
+        assert_eq!(lut.sram_bits(), 2 * 96);
+    }
+
+    #[test]
+    fn budget_sizing() {
+        let lut = LutClassifier::with_budget_bits(96 * 1000);
+        assert_eq!(lut.capacity, 1000);
+    }
+
+    #[test]
+    fn cannot_generalize_across_subnet() {
+        // The structural point of E8: a /16 holds 65536 addresses; a
+        // 1000-entry LUT covers <2% of them, so unseen attacker IPs
+        // pass. (The BNN generalizes — see examples/ddos_filter.rs.)
+        let d = ddos();
+        let mut rng = Rng::seed_from_u64(1);
+        let mut lut = LutClassifier::new(1000);
+        lut.populate_from(&d, &mut rng);
+        let mut gen = crate::net::TraceGenerator::new(99);
+        let misses = (0..1000)
+            .filter(|_| lut.classify(gen.attacker_ip(&d)) == 0)
+            .count();
+        assert!(misses > 900, "unseen attacker miss rate too low: {misses}");
+    }
+
+    #[test]
+    fn match_stage_roundtrip() {
+        let mut lut = LutClassifier::new(4);
+        lut.observe(0xAABBCCDD, 1);
+        let stage = lut.to_match_stage(ContainerId(0));
+        assert_eq!(stage.n_entries(), 1);
+    }
+}

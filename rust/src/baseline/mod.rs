@@ -1,0 +1,14 @@
+//! Baselines the paper argues against or mentions.
+//!
+//! * [`lut`] — the incumbent: an exact-match lookup-table classifier
+//!   with the SRAM cost model ("lookup tables need to be filled with
+//!   entries that enumerate the set of values ... the amount of memory
+//!   used for the tables is hard to increase", paper §1).
+//! * [`naive`] — the naive unrolled POPCNT pipeline (§2: "may require a
+//!   potentially big number of elements"), used by the ablation bench.
+
+pub mod lut;
+pub mod naive;
+
+pub use lut::{LutClassifier, LutMemoryModel};
+pub use naive::naive_popcount_program;

@@ -1,0 +1,73 @@
+//! The naive unrolled POPCNT (paper §2: "A naive implementation using an
+//! unrolled for cycle that counts over the vector bits may require a
+//! potentially big number of elements").
+//!
+//! One element per bit: each element folds one extracted bit into the
+//! accumulator (`acc += (x >> i) & 1`, an add-with-shifted-operand).
+//! Cost: N elements vs. the tree's 2·log₂(N) — the ablation that
+//! justifies the paper's tree design (experiment E7).
+
+use crate::bnn::bitpack::n_words;
+use crate::rmt::{ContainerId, Element, MicroOp, Program, Src, StepKind};
+
+/// Build a program that popcounts an `n_bits` vector held in containers
+/// `[0 .. n_words)`, leaving the count in the accumulator container
+/// (the one right after the vector).
+pub fn naive_popcount_program(n_bits: usize) -> (Program, ContainerId) {
+    let w = n_words(n_bits);
+    let acc = ContainerId(w as u16);
+    let mut elements = Vec::with_capacity(n_bits);
+    for i in 0..n_bits {
+        let word = ContainerId((i / 32) as u16);
+        let bit = (i % 32) as u8;
+        elements.push(Element::new(
+            format!("naive-popcnt/bit{i}"),
+            StepKind::Other,
+            vec![MicroOp::AddExtract {
+                dst: acc,
+                acc: Src::Container(acc),
+                a: Src::Container(word),
+                bit,
+            }],
+        ));
+    }
+    (Program::new(elements), acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::PackedBits;
+    use crate::rmt::{ChipConfig, PacketParser, Pipeline};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn naive_counts_correctly() {
+        let mut rng = Rng::seed_from_u64(2);
+        for n_bits in [16usize, 32, 64] {
+            let (prog, acc) = naive_popcount_program(n_bits);
+            assert_eq!(prog.n_elements(), n_bits); // the "big number"
+            let chip = ChipConfig::rmt();
+            let mut pipe =
+                Pipeline::new(chip, prog, PacketParser::default(), true).unwrap();
+            let cfg = pipe.chip().phv.clone();
+            for _ in 0..10 {
+                let v = PackedBits::random(n_bits, &mut rng);
+                let mut phv = pipe.fresh_phv();
+                for (k, &wd) in v.words().iter().enumerate() {
+                    phv.write(ContainerId(k as u16), wd, &cfg);
+                }
+                pipe.process_phv(&mut phv);
+                assert_eq!(phv.read(acc), v.popcount(), "n_bits={n_bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn naive_needs_recirculation_beyond_32_bits() {
+        let (prog, _) = naive_popcount_program(2048);
+        let chip = ChipConfig::rmt();
+        assert_eq!(prog.passes(&chip), 64); // 2048 elements / 32
+        assert!(prog.validate(&chip, false).is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! Little-endian bit-packed vectors over `u32` words.
+//!
+//! The packing convention is load-bearing: it must match both the Python
+//! oracle (`kernels/ref.py`) and the PHV container layout the compiler
+//! emits (`crate::compiler::layout`), so that the same `u32` words flow
+//! through all three implementations unchanged.
+
+use std::fmt;
+
+/// Word width used throughout (PHV's widest container is also 32 bits).
+pub const WORD: usize = 32;
+
+/// Number of `u32` words needed for `n_bits` packed bits.
+#[inline]
+pub const fn n_words(n_bits: usize) -> usize {
+    n_bits.div_ceil(WORD)
+}
+
+/// Validity mask for the last word (all-ones when `n_bits % 32 == 0`).
+#[inline]
+pub const fn tail_mask(n_bits: usize) -> u32 {
+    let rem = n_bits % WORD;
+    if rem == 0 {
+        u32::MAX
+    } else {
+        (1u32 << rem) - 1
+    }
+}
+
+/// A bit-vector of fixed logical length, packed little-endian into u32s.
+///
+/// Invariant: bits beyond `n_bits` in the last word are always zero.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct PackedBits {
+    words: Vec<u32>,
+    n_bits: usize,
+}
+
+impl PackedBits {
+    /// All-zero (all −1) vector of `n_bits`.
+    pub fn zeros(n_bits: usize) -> Self {
+        Self { words: vec![0; n_words(n_bits)], n_bits }
+    }
+
+    /// From raw words; masks the tail so the invariant holds.
+    pub fn from_words(mut words: Vec<u32>, n_bits: usize) -> Self {
+        words.resize(n_words(n_bits), 0);
+        if let Some(last) = words.last_mut() {
+            *last &= tail_mask(n_bits);
+        }
+        Self { words, n_bits }
+    }
+
+    /// From a slice of logical bits (`0`/`1`), bit 0 first.
+    pub fn from_bits(bits: &[u8]) -> Self {
+        let mut v = Self::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b != 0 {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// A 32-bit value as a 32-bit packed vector (e.g. an IPv4 address).
+    pub fn from_u32(value: u32) -> Self {
+        Self { words: vec![value], n_bits: 32 }
+    }
+
+    /// Uniformly random vector (deterministic per seed).
+    pub fn random(n_bits: usize, rng: &mut crate::util::rng::Rng) -> Self {
+        let mut words: Vec<u32> = (0..n_words(n_bits)).map(|_| rng.next_u32()).collect();
+        if let Some(last) = words.last_mut() {
+            *last &= tail_mask(n_bits);
+        }
+        Self { words, n_bits }
+    }
+
+    /// Logical length in bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n_bits
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n_bits == 0
+    }
+
+    /// Backing words (tail already masked).
+    #[inline]
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Bit `i` as bool.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.n_bits, "bit index {i} out of range {}", self.n_bits);
+        (self.words[i / WORD] >> (i % WORD)) & 1 == 1
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.n_bits, "bit index {i} out of range {}", self.n_bits);
+        let (w, b) = (i / WORD, i % WORD);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// Logical bits as a `Vec<u8>` of `0`/`1`.
+    pub fn to_bits(&self) -> Vec<u8> {
+        (0..self.n_bits).map(|i| self.get(i) as u8).collect()
+    }
+
+    /// XNOR against another vector of the same length (tail re-masked).
+    pub fn xnor(&self, other: &Self) -> Self {
+        assert_eq!(self.n_bits, other.n_bits, "xnor length mismatch");
+        let words: Vec<u32> = self
+            .words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| !(a ^ b))
+            .collect();
+        Self::from_words(words, self.n_bits)
+    }
+
+    /// Number of set bits.
+    #[inline]
+    pub fn popcount(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Number of positions where the two vectors agree (the XNOR-popcount
+    /// pre-activation of a binary neuron).
+    #[inline]
+    pub fn agreement(&self, other: &Self) -> u32 {
+        debug_assert_eq!(self.n_bits, other.n_bits);
+        let full: u32 = self
+            .words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (!(a ^ b)).count_ones())
+            .sum();
+        // !(a^b) sets the padding bits of the tail word; subtract them.
+        full - (n_words(self.n_bits) * WORD - self.n_bits) as u32
+    }
+
+    /// Concatenate: `self` occupies the low bits, `other` follows.
+    pub fn concat(&self, other: &Self) -> Self {
+        let mut out = Self::zeros(self.n_bits + other.n_bits);
+        for i in 0..self.n_bits {
+            out.set(i, self.get(i));
+        }
+        for i in 0..other.n_bits {
+            out.set(self.n_bits + i, other.get(i));
+        }
+        out
+    }
+}
+
+impl fmt::Debug for PackedBits {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PackedBits[{}]{{", self.n_bits)?;
+        for (i, w) in self.words.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{w:08x}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn n_words_and_masks() {
+        assert_eq!(n_words(16), 1);
+        assert_eq!(n_words(32), 1);
+        assert_eq!(n_words(33), 2);
+        assert_eq!(n_words(2048), 64);
+        assert_eq!(tail_mask(16), 0xFFFF);
+        assert_eq!(tail_mask(32), u32::MAX);
+        assert_eq!(tail_mask(33), 1);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = PackedBits::zeros(100);
+        v.set(0, true);
+        v.set(31, true);
+        v.set(32, true);
+        v.set(99, true);
+        assert!(v.get(0) && v.get(31) && v.get(32) && v.get(99));
+        assert!(!v.get(1) && !v.get(98));
+        assert_eq!(v.popcount(), 4);
+    }
+
+    #[test]
+    fn from_bits_matches_from_words() {
+        let bits: Vec<u8> = (0..48).map(|i| (i % 3 == 0) as u8).collect();
+        let a = PackedBits::from_bits(&bits);
+        assert_eq!(a.to_bits(), bits);
+    }
+
+    #[test]
+    fn tail_invariant_enforced() {
+        let v = PackedBits::from_words(vec![u32::MAX], 16);
+        assert_eq!(v.words()[0], 0xFFFF);
+        assert_eq!(v.popcount(), 16);
+    }
+
+    #[test]
+    fn xnor_agreement_identity() {
+        let mut rng = Rng::seed_from_u64(7);
+        for n in [16usize, 32, 48, 129, 2048] {
+            let a = PackedBits::random(n, &mut rng);
+            let b = PackedBits::random(n, &mut rng);
+            // agreement == popcount of tail-masked xnor
+            assert_eq!(a.agreement(&b), a.xnor(&b).popcount(), "n={n}");
+            // self-agreement is n
+            assert_eq!(a.agreement(&a), n as u32);
+        }
+    }
+
+    #[test]
+    fn concat_layout() {
+        let a = PackedBits::from_bits(&[1, 0, 1]);
+        let b = PackedBits::from_bits(&[1, 1]);
+        let c = a.concat(&b);
+        assert_eq!(c.to_bits(), vec![1, 0, 1, 1, 1]);
+    }
+}

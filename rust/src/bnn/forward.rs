@@ -1,0 +1,125 @@
+//! Trusted reference forward pass.
+//!
+//! This is the crate's ground truth: it evaluates the BNN with ordinary
+//! CPU arithmetic (`u32::count_ones`), independent of both the RMT
+//! pipeline implementation and the PJRT artifact. All three must agree
+//! bit-for-bit (integration tests + proptest enforce this).
+
+use super::bitpack::PackedBits;
+use super::model::BnnModel;
+
+/// Per-layer record of a forward pass.
+#[derive(Clone, Debug)]
+pub struct LayerTrace {
+    /// XNOR-popcount pre-activation per neuron (0..=in_bits).
+    pub popcounts: Vec<u32>,
+    /// Packed sign bits — the layer output the folding step builds.
+    pub signs: PackedBits,
+}
+
+/// One layer: packed activations -> (popcounts, packed sign bits).
+pub fn layer_forward(layer: &crate::bnn::BnnLayer, x: &PackedBits) -> LayerTrace {
+    assert_eq!(
+        x.len(),
+        layer.in_bits,
+        "activation width {} != layer in_bits {}",
+        x.len(),
+        layer.in_bits
+    );
+    let mut popcounts = Vec::with_capacity(layer.n_neurons());
+    let mut signs = PackedBits::zeros(layer.n_neurons());
+    for (j, w) in layer.neurons.iter().enumerate() {
+        let pop = x.agreement(w);
+        popcounts.push(pop);
+        if pop >= layer.threshold {
+            signs.set(j, true);
+        }
+    }
+    LayerTrace { popcounts, signs }
+}
+
+/// Full forward pass; returns only the final layer's packed sign bits.
+pub fn forward(model: &BnnModel, x: &PackedBits) -> PackedBits {
+    forward_trace(model, x).last().unwrap().signs.clone()
+}
+
+/// Full forward pass with per-layer traces (for cross-checking every
+/// intermediate against the pipeline and the oracle).
+pub fn forward_trace(model: &BnnModel, x: &PackedBits) -> Vec<LayerTrace> {
+    let mut traces = Vec::with_capacity(model.layers.len());
+    let mut act = x.clone();
+    for layer in &model.layers {
+        let t = layer_forward(layer, &act);
+        act = t.signs.clone();
+        traces.push(t);
+    }
+    traces
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{BnnLayer, BnnModel, BnnSpec};
+
+    /// Naive float ±1 implementation to check the packed one against.
+    fn float_layer(x: &PackedBits, rows: &[PackedBits]) -> Vec<u8> {
+        rows.iter()
+            .map(|w| {
+                let acc: i64 = (0..x.len())
+                    .map(|i| {
+                        let xv = if x.get(i) { 1i64 } else { -1 };
+                        let wv = if w.get(i) { 1i64 } else { -1 };
+                        xv * wv
+                    })
+                    .sum();
+                (acc >= 0) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn packed_equals_float_reference() {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(3);
+        for n in [16usize, 32, 128] {
+            let x = PackedBits::random(n, &mut rng);
+            let rows: Vec<PackedBits> =
+                (0..20).map(|_| PackedBits::random(n, &mut rng)).collect();
+            let layer = BnnLayer::new(n, rows.clone()).unwrap();
+            let t = layer_forward(&layer, &x);
+            assert_eq!(t.signs.to_bits(), float_layer(&x, &rows), "n={n}");
+        }
+    }
+
+    #[test]
+    fn popcount_range_and_threshold() {
+        let layer = BnnLayer::new(
+            32,
+            vec![PackedBits::from_u32(0), PackedBits::from_u32(u32::MAX)],
+        )
+        .unwrap();
+        let x = PackedBits::from_u32(u32::MAX);
+        let t = layer_forward(&layer, &x);
+        assert_eq!(t.popcounts, vec![0, 32]);
+        assert_eq!(t.signs.to_bits(), vec![0, 1]);
+    }
+
+    #[test]
+    fn multilayer_chaining_widths() {
+        let m = BnnModel::random(32, &[64, 32, 1], 5);
+        let x = PackedBits::from_u32(0xDEADBEEF);
+        let traces = forward_trace(&m, &x);
+        assert_eq!(traces.len(), 3);
+        assert_eq!(traces[0].signs.len(), 64);
+        assert_eq!(traces[1].signs.len(), 32);
+        assert_eq!(traces[2].signs.len(), 1);
+        assert_eq!(forward(&m, &x), traces[2].signs);
+    }
+
+    #[test]
+    fn spec_mismatch_panics() {
+        let m = BnnModel::random(32, &[16], 0);
+        let x = PackedBits::zeros(64);
+        assert!(std::panic::catch_unwind(|| forward(&m, &x)).is_err());
+        let _ = BnnSpec::new(32, &[16]).unwrap(); // silence unused import
+    }
+}

@@ -1,0 +1,278 @@
+//! Loading the JAX-trained weights artifact (`artifacts/weights.json`).
+//!
+//! The JSON schema is produced by `python/compile/aot.py` (format
+//! `n2net-weights-v1`) and carries: the `BnnSpec`, per-layer packed
+//! weight rows, the synthetic-DDoS distribution parameters (so Rust
+//! trace generation reproduces the training distribution), and training
+//! metrics for reporting. Parsed with the in-crate JSON substrate
+//! ([`crate::util::json`]).
+
+use std::path::Path;
+
+use super::bitpack::PackedBits;
+use super::model::{BnnLayer, BnnModel, BnnSpec};
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// One layer entry of the weights document.
+#[derive(Debug, Clone)]
+pub struct LayerDoc {
+    pub neurons: usize,
+    pub in_bits: usize,
+    pub threshold: u32,
+    pub weights_packed: Vec<Vec<u32>>,
+}
+
+/// Subnet of the synthetic DDoS distribution.
+#[derive(Debug, Clone, Copy)]
+pub struct SubnetDoc {
+    pub prefix: u32,
+    pub prefix_len: u8,
+}
+
+impl SubnetDoc {
+    /// Does `ip` fall inside this CIDR block?
+    pub fn contains(&self, ip: u32) -> bool {
+        if self.prefix_len == 0 {
+            return true;
+        }
+        let mask = u32::MAX << (32 - self.prefix_len as u32);
+        (ip & mask) == self.prefix
+    }
+}
+
+/// DDoS distribution parameters (mirrors `python/compile/dataset.py`).
+#[derive(Debug, Clone)]
+pub struct DdosDoc {
+    pub subnets: Vec<SubnetDoc>,
+    pub attack_fraction: f64,
+    pub seed: u64,
+}
+
+impl DdosDoc {
+    /// Ground-truth label of an IP: 1 = attacker (blacklisted).
+    pub fn label(&self, ip: u32) -> u32 {
+        self.subnets.iter().any(|s| s.contains(ip)) as u32
+    }
+}
+
+/// Training metrics recorded by `train.py`.
+#[derive(Debug, Clone)]
+pub struct MetricsDoc {
+    pub train_accuracy_packed: f64,
+    pub test_accuracy_packed: f64,
+    pub final_loss: f64,
+    pub loss_curve: Vec<f64>,
+    pub steps: usize,
+}
+
+/// The full `weights.json` document.
+#[derive(Debug, Clone)]
+pub struct WeightsDoc {
+    pub in_bits: usize,
+    pub layer_sizes: Vec<usize>,
+    pub layers: Vec<LayerDoc>,
+    pub ddos: DdosDoc,
+    pub metrics: MetricsDoc,
+}
+
+impl WeightsDoc {
+    /// Parse + semantic checks.
+    pub fn from_path(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                path.as_ref().display()
+            ))
+        })?;
+        Self::from_json(&text)
+    }
+
+    /// Parse from a JSON string.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        if v.req_str("format")? != "n2net-weights-v1" {
+            return Err(Error::Artifact(format!(
+                "unsupported weights format {:?}",
+                v.req_str("format")?
+            )));
+        }
+        let spec = v.req("spec")?;
+        let in_bits = spec.req_usize("in_bits")?;
+        let layer_sizes: Vec<usize> = spec
+            .req_array("layer_sizes")?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| Error::Artifact("bad layer size".into())))
+            .collect::<Result<_>>()?;
+
+        let layers = v
+            .req_array("layers")?
+            .iter()
+            .map(|l| {
+                let rows = l
+                    .req_array("weights_packed")?
+                    .iter()
+                    .map(|row| {
+                        row.as_array()
+                            .ok_or_else(|| Error::Artifact("weight row not array".into()))?
+                            .iter()
+                            .map(|x| {
+                                x.as_u32().ok_or_else(|| {
+                                    Error::Artifact("weight word not u32".into())
+                                })
+                            })
+                            .collect::<Result<Vec<u32>>>()
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(LayerDoc {
+                    neurons: l.req_usize("neurons")?,
+                    in_bits: l.req_usize("in_bits")?,
+                    threshold: l.req_u64("threshold")? as u32,
+                    weights_packed: rows,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let d = v.req("ddos")?;
+        let subnets = d
+            .req_array("subnets")?
+            .iter()
+            .map(|s| {
+                Ok(SubnetDoc {
+                    prefix: s
+                        .req_u64("prefix")?
+                        .try_into()
+                        .map_err(|_| Error::Artifact("prefix overflow".into()))?,
+                    prefix_len: s.req_u64("prefix_len")? as u8,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let ddos = DdosDoc {
+            subnets,
+            attack_fraction: d.req_f64("attack_fraction")?,
+            seed: d.req_u64("seed")?,
+        };
+
+        let m = v.req("metrics")?;
+        let metrics = MetricsDoc {
+            train_accuracy_packed: m.req_f64("train_accuracy_packed")?,
+            test_accuracy_packed: m.req_f64("test_accuracy_packed")?,
+            final_loss: m.req_f64("final_loss")?,
+            loss_curve: m
+                .get("loss_curve")
+                .and_then(Value::as_array)
+                .map(|a| a.iter().filter_map(Value::as_f64).collect())
+                .unwrap_or_default(),
+            steps: m.req_usize("steps")?,
+        };
+
+        Ok(WeightsDoc { in_bits, layer_sizes, layers, ddos, metrics })
+    }
+
+    /// Materialize the BNN model, validating every invariant.
+    pub fn to_model(&self) -> Result<BnnModel> {
+        let spec = BnnSpec::new(self.in_bits, &self.layer_sizes)?;
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.neurons != l.weights_packed.len() {
+                return Err(Error::Artifact(format!(
+                    "layer {i}: neurons={} but {} weight rows",
+                    l.neurons,
+                    l.weights_packed.len()
+                )));
+            }
+            let expect_thresh = (l.in_bits as u32).div_ceil(2);
+            if l.threshold != expect_thresh {
+                return Err(Error::Artifact(format!(
+                    "layer {i}: threshold {} != ceil(in_bits/2) = {expect_thresh}",
+                    l.threshold
+                )));
+            }
+            let rows = l
+                .weights_packed
+                .iter()
+                .map(|row| PackedBits::from_words(row.clone(), l.in_bits))
+                .collect();
+            layers.push(BnnLayer::new(l.in_bits, rows)?);
+        }
+        BnnModel::new(spec, layers)
+    }
+}
+
+/// Convenience: load + materialize in one call.
+pub fn load_weights(path: impl AsRef<Path>) -> Result<(BnnModel, WeightsDoc)> {
+    let doc = WeightsDoc::from_path(path)?;
+    let model = doc.to_model()?;
+    Ok((model, doc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        let rows: Vec<String> = (0..16).map(|i| format!("[{i}]")).collect();
+        format!(
+            r#"{{
+            "format": "n2net-weights-v1",
+            "spec": {{"in_bits": 32, "layer_sizes": [16, 1]}},
+            "layers": [
+                {{"neurons": 16, "in_bits": 32, "threshold": 16,
+                  "weights_packed": [{}]}},
+                {{"neurons": 1, "in_bits": 16, "threshold": 8,
+                  "weights_packed": [[43981]]}}
+            ],
+            "ddos": {{"subnets": [{{"prefix": 3232235520, "prefix_len": 16}}],
+                      "attack_fraction": 0.5, "seed": 1}},
+            "metrics": {{"train_accuracy_packed": 0.9, "test_accuracy_packed": 0.88,
+                         "final_loss": 0.3, "loss_curve": [], "steps": 10}}
+        }}"#,
+            rows.join(",")
+        )
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let doc = WeightsDoc::from_json(&sample_json()).unwrap();
+        let model = doc.to_model().unwrap();
+        assert_eq!(model.spec.layer_sizes, vec![16, 1]);
+        assert_eq!(model.layers[1].neurons[0].words()[0], 0xABCD);
+        assert_eq!(doc.ddos.subnets.len(), 1);
+        assert!(doc.ddos.subnets[0].contains(0xC0A80001)); // 192.168.0.1
+        assert!(!doc.ddos.subnets[0].contains(0xC0A90001));
+        assert_eq!(doc.ddos.label(0xC0A80001), 1);
+    }
+
+    #[test]
+    fn bad_threshold_rejected() {
+        let bad = sample_json().replace("\"threshold\": 16", "\"threshold\": 5");
+        let doc = WeightsDoc::from_json(&bad).unwrap();
+        assert!(doc.to_model().is_err());
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        let bad = sample_json().replace("n2net-weights-v1", "v999");
+        assert!(WeightsDoc::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_artifact_error() {
+        match load_weights("/nonexistent/weights.json") {
+            Err(Error::Artifact(msg)) => assert!(msg.contains("make artifacts")),
+            other => panic!("expected Artifact error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn real_artifact_loads_if_present() {
+        // Exercised fully when `make artifacts` has run; skip otherwise.
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../artifacts/weights.json");
+        if p.exists() {
+            let (model, doc) = load_weights(&p).unwrap();
+            assert_eq!(model.spec.in_bits, 32);
+            assert!(doc.metrics.test_accuracy_packed > 0.5);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Bit-packed BNN substrate.
+//!
+//! Shared conventions with the Python side (`python/compile/kernels/ref.py`):
+//! logical bit *i* of a vector lives in word `i / 32` at position `i % 32`
+//! (little-endian); bit 1 encodes +1, bit 0 encodes −1; a neuron fires
+//! (`+1`) iff `popcount(XNOR(x, w)) >= ceil(n/2)`.
+//!
+//! [`forward`] is the *trusted* reference implementation (it uses the CPU
+//! popcount intrinsic); the RMT pipeline ([`crate::rmt`]) and the PJRT
+//! oracle ([`crate::runtime`]) are both checked bit-for-bit against it.
+
+pub mod bitpack;
+pub mod forward;
+pub mod io;
+pub mod model;
+
+pub use bitpack::PackedBits;
+pub use forward::{forward, forward_trace, layer_forward, LayerTrace};
+pub use io::{load_weights, WeightsDoc};
+pub use model::{BnnLayer, BnnModel, BnnSpec, MAX_BITS, MIN_BITS};

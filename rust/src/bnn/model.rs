@@ -1,0 +1,234 @@
+//! BNN architecture description and packed weights.
+//!
+//! Mirrors `python/compile/model.py::BnnSpec` — the validation rules are
+//! the paper's architectural constraints: every *activation* width (input
+//! width and each hidden layer's size) must be a power of two in
+//! `[16, 2048]`, because the PHV holds at most 2048 activation bits
+//! (512 B / 2 after the duplication step) and the POPCNT tree assumes
+//! power-of-two widths (Table 1's rows).
+
+use super::bitpack::{n_words, tail_mask, PackedBits};
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Smallest activation width in Table 1.
+pub const MIN_BITS: usize = 16;
+/// Largest activation width in Table 1 (half the 512 B PHV).
+pub const MAX_BITS: usize = 2048;
+
+/// Architecture of a fully-connected BNN.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BnnSpec {
+    /// Input activation vector width in bits.
+    pub in_bits: usize,
+    /// Neurons per layer, in order.
+    pub layer_sizes: Vec<usize>,
+}
+
+impl BnnSpec {
+    /// Validated constructor.
+    pub fn new(in_bits: usize, layer_sizes: &[usize]) -> Result<Self> {
+        let spec = Self { in_bits, layer_sizes: layer_sizes.to_vec() };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Check the paper's architectural constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.layer_sizes.is_empty() {
+            return Err(Error::InvalidModel("need at least one layer".into()));
+        }
+        let mut widths = vec![self.in_bits];
+        widths.extend(&self.layer_sizes[..self.layer_sizes.len() - 1]);
+        for &w in &widths {
+            if !(MIN_BITS..=MAX_BITS).contains(&w) || !w.is_power_of_two() {
+                return Err(Error::InvalidModel(format!(
+                    "activation width {w} must be a power of two in \
+                     [{MIN_BITS}, {MAX_BITS}] (paper Table 1)"
+                )));
+            }
+        }
+        let last = *self.layer_sizes.last().unwrap();
+        if last == 0 {
+            return Err(Error::InvalidModel("output layer needs >= 1 neuron".into()));
+        }
+        Ok(())
+    }
+
+    /// Number of layers.
+    pub fn n_layers(&self) -> usize {
+        self.layer_sizes.len()
+    }
+
+    /// Activation width feeding layer `i`.
+    pub fn layer_in_bits(&self, i: usize) -> usize {
+        if i == 0 {
+            self.in_bits
+        } else {
+            self.layer_sizes[i - 1]
+        }
+    }
+
+    /// `(neurons, in_bits)` per layer.
+    pub fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        (0..self.n_layers())
+            .map(|i| (self.layer_sizes[i], self.layer_in_bits(i)))
+            .collect()
+    }
+
+    /// Total packed weight storage in bits (the element-SRAM demand).
+    pub fn weight_bits_total(&self) -> usize {
+        self.layer_shapes().iter().map(|(m, n)| m * n).sum()
+    }
+}
+
+/// One layer's packed weights.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BnnLayer {
+    /// Activation width (bits) this layer consumes.
+    pub in_bits: usize,
+    /// One packed weight row per neuron, each of `in_bits` logical bits.
+    pub neurons: Vec<PackedBits>,
+    /// SIGN threshold: `ceil(in_bits / 2)` (paper: "bigger or equal to
+    /// half the length of the activations vector").
+    pub threshold: u32,
+}
+
+impl BnnLayer {
+    /// Build from packed rows; validates row widths.
+    pub fn new(in_bits: usize, neurons: Vec<PackedBits>) -> Result<Self> {
+        for (j, r) in neurons.iter().enumerate() {
+            if r.len() != in_bits {
+                return Err(Error::InvalidModel(format!(
+                    "layer expects {in_bits}-bit rows, neuron {j} has {}",
+                    r.len()
+                )));
+            }
+        }
+        Ok(Self { in_bits, neurons, threshold: (in_bits as u32).div_ceil(2) })
+    }
+
+    /// Number of neurons (output bits) in this layer.
+    pub fn n_neurons(&self) -> usize {
+        self.neurons.len()
+    }
+}
+
+/// A complete BNN: spec + per-layer packed weights.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BnnModel {
+    pub spec: BnnSpec,
+    pub layers: Vec<BnnLayer>,
+}
+
+impl BnnModel {
+    /// Assemble and cross-validate spec against weights.
+    pub fn new(spec: BnnSpec, layers: Vec<BnnLayer>) -> Result<Self> {
+        spec.validate()?;
+        if layers.len() != spec.n_layers() {
+            return Err(Error::InvalidModel(format!(
+                "spec has {} layers, weights have {}",
+                spec.n_layers(),
+                layers.len()
+            )));
+        }
+        for (i, l) in layers.iter().enumerate() {
+            if l.in_bits != spec.layer_in_bits(i) {
+                return Err(Error::InvalidModel(format!(
+                    "layer {i}: spec in_bits {} != weights in_bits {}",
+                    spec.layer_in_bits(i),
+                    l.in_bits
+                )));
+            }
+            if l.n_neurons() != spec.layer_sizes[i] {
+                return Err(Error::InvalidModel(format!(
+                    "layer {i}: spec neurons {} != weight rows {}",
+                    spec.layer_sizes[i],
+                    l.n_neurons()
+                )));
+            }
+        }
+        Ok(Self { spec, layers })
+    }
+
+    /// Deterministic random model (tests, benchmarks).
+    pub fn random(in_bits: usize, layer_sizes: &[usize], seed: u64) -> Self {
+        let spec = BnnSpec::new(in_bits, layer_sizes).expect("invalid random spec");
+        let mut rng = Rng::seed_from_u64(seed);
+        let layers = spec
+            .layer_shapes()
+            .into_iter()
+            .map(|(m, n)| {
+                let rows = (0..m).map(|_| PackedBits::random(n, &mut rng)).collect();
+                BnnLayer::new(n, rows).unwrap()
+            })
+            .collect();
+        Self { spec, layers }
+    }
+
+    /// Packed words of every weight row of layer `i`, flattened row-major
+    /// (one `n_words(in_bits)` stride per neuron) — what the compiler bakes
+    /// into element action immediates.
+    pub fn layer_weight_words(&self, i: usize) -> Vec<u32> {
+        let l = &self.layers[i];
+        let stride = n_words(l.in_bits);
+        let mut out = Vec::with_capacity(l.n_neurons() * stride);
+        for row in &l.neurons {
+            out.extend_from_slice(row.words());
+            debug_assert_eq!(row.words().len(), stride);
+            debug_assert_eq!(row.words().last().map_or(0, |w| w & !tail_mask(l.in_bits)), 0);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validation() {
+        assert!(BnnSpec::new(32, &[64, 32, 1]).is_ok());
+        assert!(BnnSpec::new(32, &[2048]).is_ok());
+        // 48 is not a power of two
+        assert!(BnnSpec::new(48, &[16]).is_err());
+        // 8 below MIN_BITS
+        assert!(BnnSpec::new(8, &[16]).is_err());
+        // 4096 above MAX_BITS
+        assert!(BnnSpec::new(4096, &[16]).is_err());
+        // hidden layer size 48 becomes an invalid activation width
+        assert!(BnnSpec::new(32, &[48, 16]).is_err());
+        // but an odd *final* layer is fine (classifier head)
+        assert!(BnnSpec::new(32, &[64, 3]).is_ok());
+        assert!(BnnSpec::new(32, &[]).is_err());
+    }
+
+    #[test]
+    fn shapes_and_totals() {
+        let s = BnnSpec::new(32, &[64, 32, 1]).unwrap();
+        assert_eq!(s.layer_shapes(), vec![(64, 32), (32, 64), (1, 32)]);
+        assert_eq!(s.weight_bits_total(), 64 * 32 + 32 * 64 + 32);
+        assert_eq!(s.layer_in_bits(0), 32);
+        assert_eq!(s.layer_in_bits(2), 32);
+    }
+
+    #[test]
+    fn random_model_consistent() {
+        let m = BnnModel::random(64, &[32, 16], 1);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0].n_neurons(), 32);
+        assert_eq!(m.layers[0].threshold, 32);
+        assert_eq!(m.layer_weight_words(0).len(), 32 * 2);
+        // Determinism
+        let m2 = BnnModel::random(64, &[32, 16], 1);
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn model_weight_mismatch_rejected() {
+        let spec = BnnSpec::new(32, &[16]).unwrap();
+        let bad_layer =
+            BnnLayer::new(32, vec![PackedBits::zeros(32); 8]).unwrap();
+        assert!(BnnModel::new(spec, vec![bad_layer]).is_err());
+    }
+}

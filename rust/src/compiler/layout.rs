@@ -1,0 +1,345 @@
+//! PHV container allocation for the compiled BNN.
+//!
+//! Per layer the schedule needs (all in 32-bit containers):
+//!
+//! * an **A region**: P replica groups of W words — replicas, then
+//!   in-place popcount partials, finally the output vector (fold reuses
+//!   `A[0..]` once the partials are dead);
+//! * a **B region** of the same size: the duplicated copy the POPCNT
+//!   tree masks/shifts (absent in the native-POPCNT variant);
+//! * for multi-round layers (M > P): a preserved **source region** and a
+//!   **Y accumulation region** at the top of the PHV, because the source
+//!   must survive round after round.
+//!
+//! Capacity follows the paper: activation bits ≤ 2048 ( = PHV/2, "since
+//! we perform the duplication step") on the stock chip, ≤ 4096 with the
+//! §3 native-POPCNT extension (no duplication).
+
+use crate::bnn::bitpack::n_words;
+use crate::bnn::BnnSpec;
+use crate::error::{Error, Result};
+use crate::rmt::{ChipConfig, ContainerId};
+
+/// Where the model's input activation vector comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputEncoding {
+    /// Packed little-endian u32 words at a byte offset in the packet
+    /// (the N2Net header encoding; offset 42 = after Eth+IPv4+UDP).
+    PayloadLe { offset: usize },
+    /// A single 32-bit big-endian field (e.g. the IPv4 source address at
+    /// offset 26, paper §2: "e.g., the destination IP address").
+    /// Requires `in_bits == 32`.
+    BigEndianField { offset: usize },
+}
+
+impl Default for InputEncoding {
+    fn default() -> Self {
+        InputEncoding::PayloadLe { offset: crate::net::N2NET_PAYLOAD_OFFSET }
+    }
+}
+
+/// Container plan for one layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerPlan {
+    pub layer: usize,
+    /// Activation width consumed (bits) and its word count.
+    pub in_bits: usize,
+    pub w_words: usize,
+    /// Neurons in this layer.
+    pub neurons: usize,
+    /// Neurons processed per round (the paper's "parallel neurons").
+    pub parallel: usize,
+    /// Rounds = ⌈neurons / parallel⌉ (1 for every paper-sized layer).
+    pub rounds: usize,
+    /// Whether this layer needs the replication step.
+    pub needs_replication: bool,
+    /// A-region base container (replica group g at `a_base + g·W`).
+    pub a_base: u16,
+    /// B-region base (duplicated copy); `None` in the native variant.
+    pub b_base: Option<u16>,
+    /// Where this layer reads its input activation group.
+    pub src: Vec<ContainerId>,
+    /// Where this layer's packed output lands.
+    pub out: Vec<ContainerId>,
+    /// Elements this layer's schedule occupies.
+    pub elements: usize,
+}
+
+/// Whole-model container plan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelLayout {
+    pub layers: Vec<LayerPlan>,
+    /// Total elements across layers.
+    pub total_elements: usize,
+    /// Final output containers (packed sign bits of the last layer).
+    pub output: Vec<ContainerId>,
+    /// Output width in bits (= last layer's neuron count).
+    pub output_bits: usize,
+}
+
+/// Architectural cap on parallel neurons for an activation width
+/// (Table 1 row 2): `activation capacity / N`, where capacity is half
+/// the PHV on the stock chip (duplication) and the full PHV with native
+/// POPCNT (§3: "immediately doubling ... the neurons executed in
+/// parallel").
+pub fn max_parallel_neurons(chip: &ChipConfig, n_bits: usize) -> usize {
+    let cap_bits = if chip.native_popcnt {
+        chip.phv.total_bits()
+    } else {
+        chip.phv.total_bits() / 2
+    };
+    (cap_bits / n_bits).max(1)
+}
+
+/// Elements used by one layer round (paper §2 Evaluation):
+/// `3 + 2·log₂(N)` (+1 replication) on the stock chip;
+/// `4 + log₂(W)` (+1 replication) with native POPCNT (§3's 5–10 range).
+pub fn elements_per_round(n_bits: usize, replicated: bool, native_popcnt: bool) -> usize {
+    let base = if native_popcnt {
+        // XNOR + POPCNT + cross-word sum tree + SIGN + fold
+        4 + n_words(n_bits).trailing_zeros() as usize
+    } else {
+        3 + 2 * n_bits.trailing_zeros() as usize
+    };
+    base + replicated as usize
+}
+
+/// Plan container allocation for a model on a chip.
+pub fn plan(spec: &BnnSpec, chip: &ChipConfig, max_parallel: Option<usize>) -> Result<ModelLayout> {
+    spec.validate()?;
+    let c32 = chip.phv.containers32();
+    let n32 = c32.len();
+    // The compiler allocates 32-bit containers only; map logical slot k
+    // to the k-th 32-bit container (identity on the uniform32 PHV).
+    let slot = |k: usize| -> Result<ContainerId> {
+        c32.get(k).copied().ok_or_else(|| {
+            Error::ResourceExhausted(format!(
+                "layout needs 32-bit container slot {k}, chip has {n32}"
+            ))
+        })
+    };
+
+    let mut layers = Vec::with_capacity(spec.n_layers());
+    let mut total_elements = 0usize;
+    // Input of layer 0 conventionally parses into A[0..W).
+    let mut src_slots: Vec<usize> = (0..n_words(spec.in_bits)).collect();
+
+    for (i, &m) in spec.layer_sizes.iter().enumerate() {
+        let n = spec.layer_in_bits(i);
+        let w = n_words(n);
+        let arch_p = max_parallel_neurons(chip, n);
+        let mut p = arch_p.min(m);
+        if let Some(cap) = max_parallel {
+            p = p.min(cap.max(1));
+        }
+        let mut rounds = m.div_ceil(p);
+        let out_words = n_words(m);
+
+        // Container feasibility. Single-round: A (+B) regions start at
+        // slot 0 and may clobber the source mid-element (snapshot
+        // semantics make that safe). Multi-round: the source and the
+        // accumulated output must live above the work regions.
+        //
+        // Note (DESIGN.md §Hardware-Adaptation): Table 1's bit-capacity
+        // admits 128 parallel 16-bit neurons, which on the real chip
+        // pack two-per-16b-container; the uniform-32b model instead
+        // spills past 64 parallel 16-bit groups into extra rounds.
+        let copies = if chip.native_popcnt { 1 } else { 2 };
+        if rounds == 1 && copies * p * w > n32 {
+            // Bits fit but containers don't — force the multi-round path.
+            rounds = 2;
+        }
+        if rounds > 1 {
+            // Reserve top slots: [n32 - w .. n32) = source,
+            // [n32 - w - out_words .. n32 - w) = Y accumulator.
+            let reserved = w + out_words;
+            let avail = n32
+                .checked_sub(reserved)
+                .ok_or_else(|| Error::ResourceExhausted("PHV too small".into()))?;
+            while p > 1 && copies * p * w > avail {
+                p -= 1;
+            }
+            if copies * p * w > avail {
+                return Err(Error::ResourceExhausted(format!(
+                    "layer {i}: cannot fit even one neuron round (N={n})"
+                )));
+            }
+            rounds = m.div_ceil(p);
+        }
+
+        let a_base = 0usize;
+        let b_base = (!chip.native_popcnt).then_some(p * w);
+        let (src_base, out_base) = if rounds > 1 {
+            (n32 - w, n32 - w - out_words)
+        } else {
+            // Source is wherever the previous layer left it (or parse
+            // target); output reuses A[0..out_words).
+            (usize::MAX, 0)
+        };
+
+        // Where this layer reads from: previous out slots (or parse).
+        // Multi-round layers relocate the source to the top (the
+        // schedule emits the relocation inside the replication element).
+        let src: Vec<ContainerId> = src_slots
+            .iter()
+            .map(|&k| slot(k))
+            .collect::<Result<_>>()?;
+        if src.len() != w {
+            return Err(Error::InvalidModel(format!(
+                "layer {i}: source group has {} words, expected {w}",
+                src.len()
+            )));
+        }
+
+        let needs_replication = p > 1 || src_slots != (a_base..a_base + w).collect::<Vec<_>>() || rounds > 1;
+        let elements = rounds
+            * elements_per_round(n, needs_replication || rounds > 1, chip.native_popcnt)
+            // A multi-round layer replicates every round; single-round
+            // already accounted.
+            ;
+
+        let out_slots: Vec<usize> = if rounds > 1 {
+            (out_base..out_base + out_words).collect()
+        } else {
+            (0..out_words).collect()
+        };
+        let out: Vec<ContainerId> = out_slots
+            .iter()
+            .map(|&k| slot(k))
+            .collect::<Result<_>>()?;
+
+        layers.push(LayerPlan {
+            layer: i,
+            in_bits: n,
+            w_words: w,
+            neurons: m,
+            parallel: p,
+            rounds,
+            needs_replication,
+            a_base: slot(a_base)?.0,
+            b_base: match b_base {
+                Some(b) => Some(slot(b)?.0),
+                None => None,
+            },
+            src,
+            out: out.clone(),
+            elements,
+        });
+        total_elements += elements;
+        let _ = src_base; // (slot indices already materialized above)
+        src_slots = out_slots;
+    }
+
+    let last = layers.last().unwrap();
+    Ok(ModelLayout {
+        output: last.out.clone(),
+        output_bits: last.neurons,
+        total_elements,
+        layers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_parallel_capacity() {
+        let chip = ChipConfig::rmt();
+        // Paper Table 1, row "Parallel neur. (max)".
+        let expect = [
+            (16, 128),
+            (32, 64),
+            (64, 32),
+            (128, 16),
+            (256, 8),
+            (512, 4),
+            (1024, 2),
+            (2048, 1),
+        ];
+        for (n, p) in expect {
+            assert_eq!(max_parallel_neurons(&chip, n), p, "N={n}");
+        }
+        // §3: native POPCNT doubles capacity.
+        let chip2 = ChipConfig::rmt_with_popcnt();
+        for (n, p) in expect {
+            assert_eq!(max_parallel_neurons(&chip2, n), 2 * p, "N={n} native");
+        }
+    }
+
+    #[test]
+    fn table1_element_counts() {
+        // Paper Table 1, row "Elements number" (includes replication for
+        // every width that allows >1 parallel neuron, i.e. all but 2048).
+        let expect = [
+            (16, 12),
+            (32, 14),
+            (64, 16),
+            (128, 18),
+            (256, 20),
+            (512, 22),
+            (1024, 24),
+            (2048, 25),
+        ];
+        for (n, e) in expect {
+            let replicated = n < 2048;
+            assert_eq!(elements_per_round(n, replicated, false), e, "N={n}");
+        }
+    }
+
+    #[test]
+    fn native_popcnt_element_range_is_5_to_10() {
+        // §3: "this would change the 12-25 elements range of Table 1 to
+        // a 5-10 range".
+        assert_eq!(elements_per_round(16, true, true), 5);
+        assert_eq!(elements_per_round(2048, false, true), 10);
+    }
+
+    #[test]
+    fn two_layer_use_case_fits_single_pass() {
+        // §2 Evaluation: 32b activations, layers of 64 and 32 neurons.
+        let spec = BnnSpec::new(32, &[64, 32]).unwrap();
+        let chip = ChipConfig::rmt();
+        let l = plan(&spec, &chip, None).unwrap();
+        assert_eq!(l.layers[0].parallel, 64);
+        assert_eq!(l.layers[0].rounds, 1);
+        assert_eq!(l.layers[0].elements, 14); // paper: "14 out of the 32"
+        assert_eq!(l.layers[1].parallel, 32);
+        assert_eq!(l.layers[1].elements, 16); // 3 + 2·log2(64) + repl
+        assert_eq!(l.total_elements, 30);
+        assert!(l.total_elements <= chip.n_elements);
+    }
+
+    #[test]
+    fn single_neuron_2048_no_replication() {
+        let spec = BnnSpec::new(2048, &[1]).unwrap();
+        let chip = ChipConfig::rmt();
+        let l = plan(&spec, &chip, None).unwrap();
+        assert_eq!(l.layers[0].parallel, 1);
+        assert!(!l.layers[0].needs_replication);
+        assert_eq!(l.layers[0].elements, 25); // Table 1 last column
+    }
+
+    #[test]
+    fn multi_round_layer_shrinks_parallel() {
+        // 128 neurons over 32b: capacity 64 ⇒ 2 rounds, source preserved.
+        let spec = BnnSpec::new(32, &[128]).unwrap();
+        let chip = ChipConfig::rmt();
+        let l = plan(&spec, &chip, None).unwrap();
+        let l0 = &l.layers[0];
+        assert!(l0.rounds >= 2);
+        assert!(l0.parallel * l0.rounds >= 128);
+        // Reserved top slots: source + output don't overlap work regions.
+        let work_top = 2 * l0.parallel * l0.w_words;
+        assert!(work_top <= 128 - l0.w_words - 4);
+    }
+
+    #[test]
+    fn max_parallel_override() {
+        let spec = BnnSpec::new(32, &[64]).unwrap();
+        let chip = ChipConfig::rmt();
+        let l = plan(&spec, &chip, Some(16)).unwrap();
+        assert_eq!(l.layers[0].parallel, 16);
+        assert_eq!(l.layers[0].rounds, 4);
+    }
+}

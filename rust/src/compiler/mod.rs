@@ -1,0 +1,38 @@
+//! The N2Net compiler — the paper's contribution: given a BNN model
+//! description, generate the switching-chip configuration that
+//! implements its forward pass (paper §2, Fig. 2).
+//!
+//! Pipeline-program generation follows the paper's five steps per layer:
+//!
+//! 1. **Replication** — copy the activation group P× across the PHV so P
+//!    neurons execute in parallel (P = activation-capacity / N).
+//! 2. **XNOR + duplication** — XNOR each replica with that neuron's
+//!    packed weights; write the result twice (A and B copies) because
+//!    the POPCNT tree needs two independently-maskable operands.
+//! 3. **POPCNT** — the HAKMEM tree: per level one mask/shift element and
+//!    one sum element (2·log₂(N) elements total).
+//! 4. **SIGN** — compare the count against ⌈N/2⌉ (one element).
+//! 5. **Folding** — concatenate the P sign bits into the output
+//!    activation vector (one element), which feeds the next layer.
+//!
+//! Element count per layer group: `3 + 2·log₂(N)`, plus the replication
+//! element when P > 1 — exactly Table 1 ([`resources::table1`] prints it,
+//! and the test suite re-counts it from emitted programs).
+//!
+//! The [`popcount`] module also implements the paper's two alternatives:
+//! the *naive* unrolled popcount (§2: "may require a potentially big
+//! number of elements") and the *native-POPCNT* hardware extension (§3:
+//! element range drops to 5–10 and the duplication step disappears,
+//! doubling parallel-neuron capacity).
+
+pub mod layout;
+pub mod p4gen;
+pub mod popcount;
+pub mod resources;
+pub mod schedule;
+
+pub use layout::{InputEncoding, LayerPlan, ModelLayout};
+pub use resources::{
+    elements_for_layer, render_table1, table1, ResourceReport, Table1Row,
+};
+pub use schedule::{CompiledModel, Compiler, CompilerOptions, MultiModelOptions};

@@ -1,0 +1,173 @@
+//! P4-like code generation ("N2Net ... creating a P4 description that
+//! modifies/replicates the above five steps as needed", paper §2).
+//!
+//! The emitted text is a P4-16-styled rendering of the compiled pipeline
+//! program: headers, parser states, one action per element, and a
+//! straight-line `apply` block. It is documentation-grade output — our
+//! executable target is the simulator ([`crate::rmt`]); a real P4 target
+//! would require a vendor backend. The emission is deterministic so
+//! tests can golden-match fragments.
+
+use std::fmt::Write as _;
+
+use crate::rmt::alu::{MicroOp, Src};
+use crate::rmt::{PacketParser, Program};
+
+/// Render a compiled program as a P4-like document.
+pub fn render(program: &Program, parser: &PacketParser, model_name: &str) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "// N2Net-generated P4 program for model {model_name:?}");
+    let _ = writeln!(s, "// elements: {}", program.n_elements());
+    let _ = writeln!(s);
+    let _ = writeln!(s, "header n2net_activations_t {{");
+    let max_off = parser.min_packet_len();
+    let _ = writeln!(s, "    // parsed bytes: 0..{max_off}");
+    for (i, e) in parser.extracts.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    bit<{}> f{i}; // offset {}, {}-endian -> {}",
+            e.width_bytes as usize * 8,
+            e.offset,
+            if e.big_endian { "big" } else { "little" },
+            e.dst
+        );
+    }
+    let _ = writeln!(s, "}}");
+    let _ = writeln!(s);
+    let _ = writeln!(s, "parser N2NetParser(packet_in pkt, out headers_t hdr) {{");
+    let _ = writeln!(s, "    state start {{ pkt.extract(hdr.activations); transition accept; }}");
+    let _ = writeln!(s, "}}");
+    let _ = writeln!(s);
+
+    for (i, e) in program.elements.iter().enumerate() {
+        let act = action_name(i, &e.label);
+        let _ = writeln!(s, "// element {i}: step {}", e.step.name());
+        if let Some(t) = &e.match_stage {
+            let _ = writeln!(
+                s,
+                "table tbl_{act} {{ // {} entries, {} action-data words",
+                t.n_entries(),
+                t.default_action_data.len()
+            );
+            let _ = writeln!(s, "    actions = {{ {act}; }}");
+            let _ = writeln!(s, "    default_action = {act}();");
+            let _ = writeln!(s, "}}");
+        }
+        let _ = writeln!(s, "action {act}() {{");
+        for op in &e.ops {
+            let _ = writeln!(s, "    {};", render_op(op));
+        }
+        let _ = writeln!(s, "}}");
+        let _ = writeln!(s);
+    }
+
+    let _ = writeln!(s, "control N2NetPipeline(inout headers_t hdr) {{");
+    let _ = writeln!(s, "    apply {{");
+    for (i, e) in program.elements.iter().enumerate() {
+        let act = action_name(i, &e.label);
+        if e.match_stage.is_some() {
+            let _ = writeln!(s, "        tbl_{act}.apply();");
+        } else {
+            let _ = writeln!(s, "        {act}();");
+        }
+    }
+    let _ = writeln!(s, "    }}");
+    let _ = writeln!(s, "}}");
+    s
+}
+
+fn action_name(i: usize, label: &str) -> String {
+    let sanitized: String = label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    format!("e{i}_{sanitized}")
+}
+
+fn render_src(s: &Src) -> String {
+    match s {
+        Src::Container(c) => format!("phv.{c}"),
+        Src::Imm(v) => format!("32w{v:#x}"),
+        Src::ActionData(i) => format!("ad_{i}"),
+    }
+}
+
+fn render_op(op: &MicroOp) -> String {
+    match op {
+        MicroOp::Alu { dst, op, a, b } => {
+            let a = render_src(a);
+            let b = render_src(b);
+            let expr = match op {
+                crate::rmt::AluOp::Mov => a,
+                crate::rmt::AluOp::Not => format!("~{a}"),
+                crate::rmt::AluOp::And => format!("{a} & {b}"),
+                crate::rmt::AluOp::Or => format!("{a} | {b}"),
+                crate::rmt::AluOp::Xor => format!("{a} ^ {b}"),
+                crate::rmt::AluOp::Xnor => format!("~({a} ^ {b})"),
+                crate::rmt::AluOp::Shl => format!("{a} << {b}"),
+                crate::rmt::AluOp::Shr => format!("{a} >> {b}"),
+                crate::rmt::AluOp::Add => format!("{a} + {b}"),
+                crate::rmt::AluOp::Sub => format!("{a} - {b}"),
+                crate::rmt::AluOp::SetGe => format!("({a} >= {b}) ? 32w1 : 32w0"),
+                crate::rmt::AluOp::Min => format!("min({a}, {b})"),
+                crate::rmt::AluOp::Max => format!("max({a}, {b})"),
+                crate::rmt::AluOp::Popcnt => format!("popcnt({a} & {b})"),
+            };
+            format!("phv.{dst} = {expr}")
+        }
+        MicroOp::ShrAnd { dst, a, shift, mask } => {
+            format!("phv.{dst} = ({} >> {shift}) & 32w{mask:#x}", render_src(a))
+        }
+        MicroOp::AddExtract { dst, acc, a, bit } => {
+            format!(
+                "phv.{dst} = {} + (({} >> {bit}) & 32w1)",
+                render_src(acc),
+                render_src(a)
+            )
+        }
+        MicroOp::Gather { dst, srcs, accumulate } => {
+            let mut parts: Vec<String> = if *accumulate {
+                vec![format!("phv.{dst}")]
+            } else {
+                Vec::new()
+            };
+            parts.extend(
+                srcs.iter()
+                    .map(|g| format!("((phv.{} & 32w1) << {})", g.from, g.bit)),
+            );
+            format!("phv.{dst} = {}", parts.join(" | "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::BnnModel;
+    use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
+    use crate::rmt::ChipConfig;
+
+    #[test]
+    fn p4_rendering_structure() {
+        let model = BnnModel::random(32, &[16], 1);
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model).unwrap();
+        let p4 = render(&compiled.program, &compiled.parser, "test-model");
+        assert!(p4.contains("parser N2NetParser"));
+        assert!(p4.contains("control N2NetPipeline"));
+        assert!(p4.contains("~(")); // xnor
+        assert!(p4.contains(">=")); // sign
+        assert!(p4.contains("apply {"));
+        // Deterministic output.
+        let p4b = render(&compiled.program, &compiled.parser, "test-model");
+        assert_eq!(p4, p4b);
+        // One action per element.
+        assert_eq!(
+            p4.matches("action e").count(),
+            compiled.program.n_elements()
+        );
+    }
+}

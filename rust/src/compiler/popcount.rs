@@ -1,0 +1,166 @@
+//! POPCNT schedule generation: the HAKMEM tree (paper §2, citing [1]),
+//! the naive unrolled baseline, and the native-primitive variant (§3).
+//!
+//! The tree counts set bits by summing partial counts level by level:
+//! in-word levels halve the field width per step
+//! (`x = (x & m) + ((x >> s) & m)`), cross-word levels add container
+//! pairs. Each level costs exactly two pipeline elements — one
+//! mask/shift element operating on the two copies in parallel, one sum
+//! element — which is where Table 1's `2·log₂(N)` comes from.
+
+use crate::bnn::bitpack::{n_words, tail_mask};
+
+/// One level of the POPCNT tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// In-word SWAR level: `A & mask_a` ∥ `(B >> shift) & mask_b`.
+    InWord { shift: u8, mask_a: u32, mask_b: u32 },
+    /// Cross-word level: add containers at pair distance `stride/2`.
+    Cross { stride: usize },
+}
+
+/// Standard SWAR mask for field width `w` ∈ {2,4,8,16,32}: runs of w/2
+/// ones every w bits.
+pub const fn swar_mask(w: u32) -> u32 {
+    match w {
+        2 => 0x5555_5555,
+        4 => 0x3333_3333,
+        8 => 0x0F0F_0F0F,
+        16 => 0x00FF_00FF,
+        32 => 0x0000_FFFF,
+        _ => panic!("swar width must be 2,4,8,16,32"),
+    }
+}
+
+/// The full level sequence for an `n_bits` vector (a power of two).
+/// Length is exactly `log₂(n_bits)` — the paper's tree depth.
+pub fn tree_levels(n_bits: usize) -> Vec<Level> {
+    assert!(n_bits.is_power_of_two() && n_bits >= 2, "n_bits={n_bits}");
+    let mut levels = Vec::new();
+    let tail = tail_mask(n_bits);
+    let in_word = n_bits.min(32);
+    let mut w = 2u32;
+    while w <= in_word as u32 {
+        let m = swar_mask(w);
+        let s = (w / 2) as u8;
+        // Level 1 also kills the tail garbage the XNOR left above
+        // `n_bits` (XNOR of equal zero bits yields ones): fold the tail
+        // mask into the level's masks instead of spending an element.
+        let (ma, mb) = if w == 2 {
+            (m & tail, m & (tail >> s))
+        } else {
+            (m, m)
+        };
+        levels.push(Level::InWord { shift: s, mask_a: ma, mask_b: mb });
+        w *= 2;
+    }
+    let words = n_words(n_bits);
+    let mut stride = 2usize;
+    while stride <= words {
+        levels.push(Level::Cross { stride });
+        stride *= 2;
+    }
+    levels
+}
+
+/// Number of *elements* the tree costs: 2 per level (mask + sum).
+pub fn tree_elements(n_bits: usize) -> usize {
+    2 * tree_levels(n_bits).len()
+}
+
+/// Elements the naive unrolled loop costs (§2: "a naive implementation
+/// using an unrolled for cycle that counts over the vector bits may
+/// require a potentially big number of elements"): one accumulate
+/// element per bit — each element's ALU can fold one extracted bit into
+/// the accumulator (add-with-shifted-operand), so N bits = N elements.
+pub fn naive_elements(n_bits: usize) -> usize {
+    n_bits
+}
+
+/// Software reference of the tree (used by tests to verify the level
+/// specs independently of the pipeline).
+pub fn tree_reference(words: &[u32], n_bits: usize) -> u32 {
+    let mut a: Vec<u64> = words.iter().map(|&w| w as u64).collect();
+    let mut b = a.clone();
+    for level in tree_levels(n_bits) {
+        match level {
+            Level::InWord { shift, mask_a, mask_b } => {
+                for i in 0..a.len() {
+                    let na = a[i] & mask_a as u64;
+                    let nb = (b[i] >> shift) & mask_b as u64;
+                    let sum = na + nb;
+                    a[i] = sum;
+                    b[i] = sum;
+                }
+            }
+            Level::Cross { stride } => {
+                let mut k = 0;
+                while k < a.len() {
+                    let sum = a[k] + a[k + stride / 2];
+                    a[k] = sum;
+                    b[k] = sum;
+                    k += stride;
+                }
+            }
+        }
+    }
+    a[0] as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn masks_are_standard() {
+        assert_eq!(swar_mask(2), 0x55555555);
+        assert_eq!(swar_mask(4), 0x33333333);
+        assert_eq!(swar_mask(8), 0x0F0F0F0F);
+        assert_eq!(swar_mask(16), 0x00FF00FF);
+        assert_eq!(swar_mask(32), 0x0000FFFF);
+    }
+
+    #[test]
+    fn level_counts_match_paper() {
+        // depth log2(N) ⇒ 2·log2(N) elements.
+        for (n, d) in [(16, 4), (32, 5), (64, 6), (2048, 11)] {
+            assert_eq!(tree_levels(n).len(), d, "N={n}");
+            assert_eq!(tree_elements(n), 2 * d);
+        }
+        assert_eq!(naive_elements(2048), 2048);
+    }
+
+    #[test]
+    fn tree_reference_equals_count_ones() {
+        let mut rng = Rng::seed_from_u64(11);
+        for n in [16usize, 32, 64, 128, 1024, 2048] {
+            let w = n_words(n);
+            for _ in 0..50 {
+                let mut words: Vec<u32> = (0..w).map(|_| rng.next_u32()).collect();
+                // Simulate XNOR garbage above the tail: set high bits.
+                if n < 32 {
+                    words[0] |= !tail_mask(n);
+                }
+                let expect: u32 = words
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &x)| {
+                        let valid = if i == w - 1 { tail_mask(n) } else { u32::MAX };
+                        (x & valid).count_ones()
+                    })
+                    .sum();
+                assert_eq!(tree_reference(&words, n), expect, "N={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn tail_garbage_killed_at_level_one() {
+        // all-garbage high half of a 16-bit vector must not count.
+        let words = [0xFFFF_0000u32];
+        assert_eq!(tree_reference(&words, 16), 0);
+        let words2 = [0xFFFF_FFFFu32];
+        assert_eq!(tree_reference(&words2, 16), 16);
+    }
+}

@@ -1,0 +1,729 @@
+//! Program emission: BNN model → RMT pipeline program (Fig. 2).
+//!
+//! See the module docs of [`crate::compiler`] for the five-step schedule
+//! and [`crate::compiler::layout`] for container allocation. Weights are
+//! stored in the elements' SRAM as action data by default ("BNN are
+//! relatively small models whose weights fit in the pipeline element's
+//! SRAMs, however, we are required to pre-configure the weights" — the
+//! BrainWave-style pre-configuration the paper describes), so SRAM
+//! accounting is real; `weights_as_immediates` bakes them into the VLIW
+//! word instead.
+
+use crate::bnn::bitpack::{n_words, tail_mask, PackedBits};
+use crate::bnn::BnnModel;
+use crate::error::{Error, Result};
+use crate::rmt::alu::GatherSrc;
+use crate::rmt::{
+    AluOp, ChipConfig, ContainerId, Element, MatchStage, MicroOp, PacketParser, Phv,
+    Program, Src, StepKind,
+};
+
+use super::layout::{self, InputEncoding, ModelLayout};
+use super::popcount::{tree_levels, Level};
+use super::resources::ResourceReport;
+
+/// Compiler options.
+#[derive(Clone, Debug)]
+pub struct CompilerOptions {
+    /// Where the input activation vector is parsed from.
+    pub input: InputEncoding,
+    /// Allow programs longer than the physical pipeline (recirculation).
+    pub allow_recirculation: bool,
+    /// Bake weights into action immediates instead of element SRAM.
+    pub weights_as_immediates: bool,
+    /// Cap parallel neurons below the architectural maximum (ablations).
+    pub max_parallel: Option<usize>,
+}
+
+impl Default for CompilerOptions {
+    fn default() -> Self {
+        Self {
+            input: InputEncoding::default(),
+            allow_recirculation: true,
+            weights_as_immediates: false,
+            max_parallel: None,
+        }
+    }
+}
+
+/// Multi-model deployment: several BNNs of the *same architecture* are
+/// installed at once; a packet header field selects which one's weights
+/// the XNOR elements use (the match stage keys on the model-id
+/// container — this is what the element SRAM tables are *for*, and how
+/// a switch serves many tenants/policies with one pipeline program).
+#[derive(Clone, Debug)]
+pub struct MultiModelOptions {
+    /// Byte offset of the 32-bit little-endian model id in the packet.
+    pub id_offset: usize,
+}
+
+struct MultiCtx {
+    /// Container holding the parsed model id (top 32-bit container).
+    id_container: ContainerId,
+    /// (model id, weights) — index 0 is also the table-miss default.
+    models: Vec<(u32, BnnModel)>,
+}
+
+/// The N2Net compiler.
+pub struct Compiler {
+    chip: ChipConfig,
+    opts: CompilerOptions,
+    multi: Option<MultiCtx>,
+}
+
+/// A compiled model: executable program + everything needed to run and
+/// inspect it.
+pub struct CompiledModel {
+    pub program: Program,
+    pub parser: PacketParser,
+    pub layout: ModelLayout,
+    pub chip: ChipConfig,
+    pub resources: ResourceReport,
+    /// Output width in bits (= last layer neurons).
+    pub output_bits: usize,
+}
+
+impl Compiler {
+    pub fn new(chip: ChipConfig, opts: CompilerOptions) -> Self {
+        Self { chip, opts, multi: None }
+    }
+
+    /// Convenience: default options on the stock RMT chip.
+    pub fn rmt() -> Self {
+        Self::new(ChipConfig::rmt(), CompilerOptions::default())
+    }
+
+    /// Compile several same-architecture models into ONE pipeline
+    /// program whose weights are selected per packet by a model-id
+    /// header field (see [`MultiModelOptions`]). The first model is the
+    /// default on table miss.
+    pub fn compile_multi(
+        mut self,
+        models: &[(u32, BnnModel)],
+        mm: MultiModelOptions,
+    ) -> Result<CompiledModel> {
+        let Some((_, first)) = models.first() else {
+            return Err(Error::InvalidModel("compile_multi needs >= 1 model".into()));
+        };
+        for (id, m) in models {
+            if m.spec != first.spec {
+                return Err(Error::InvalidModel(format!(
+                    "model {id}: architecture differs from the first model \
+                     (multi-model requires identical specs)"
+                )));
+            }
+        }
+        if self.opts.weights_as_immediates {
+            return Err(Error::Config(
+                "multi-model requires table-stored weights".into(),
+            ));
+        }
+        // Reserve the top 32-bit container for the model id: plan the
+        // layout against a one-container-smaller PHV so nothing else
+        // lands there.
+        let c32 = self.chip.phv.containers32();
+        let id_container = *c32.last().ok_or_else(|| {
+            Error::ResourceExhausted("no 32-bit container for the model id".into())
+        })?;
+        let reduced = ChipConfig {
+            phv: crate::rmt::PhvConfig::new(vec![32; c32.len() - 1])?,
+            ..self.chip.clone()
+        };
+        let lay = layout::plan(&first.spec, &reduced, self.opts.max_parallel)?;
+        self.multi = Some(MultiCtx { id_container, models: models.to_vec() });
+
+        let model0 = models[0].1.clone();
+        let mut compiled = self.compile_with_layout(&model0, lay)?;
+        // Parser additionally extracts the model id.
+        compiled.parser.extracts.push(crate::rmt::Extract {
+            offset: mm.id_offset,
+            width_bytes: 4,
+            big_endian: false,
+            dst: id_container,
+        });
+        compiled.parser.validate(&self.chip.phv)?;
+        Ok(compiled)
+    }
+
+    /// Compile a model into a pipeline program.
+    pub fn compile(&self, model: &BnnModel) -> Result<CompiledModel> {
+        let lay = layout::plan(&model.spec, &self.chip, self.opts.max_parallel)?;
+        self.compile_with_layout(model, lay)
+    }
+
+    fn compile_with_layout(
+        &self,
+        model: &BnnModel,
+        lay: ModelLayout,
+    ) -> Result<CompiledModel> {
+        let mut elements = Vec::with_capacity(lay.total_elements);
+
+        for plan in &lay.layers {
+            self.emit_layer(model, plan, &mut elements)?;
+        }
+
+        let program = Program::new(elements);
+        program.validate(&self.chip, self.opts.allow_recirculation)?;
+
+        let parser = self.build_parser(&model.spec, &lay)?;
+        let resources = ResourceReport::for_program(&program, &self.chip, &model.spec);
+        Ok(CompiledModel {
+            program,
+            parser,
+            output_bits: lay.output_bits,
+            layout: lay,
+            chip: self.chip.clone(),
+            resources,
+        })
+    }
+
+    fn build_parser(
+        &self,
+        spec: &crate::bnn::BnnSpec,
+        lay: &ModelLayout,
+    ) -> Result<PacketParser> {
+        let src = &lay.layers[0].src;
+        let mut parser = PacketParser::default();
+        match self.opts.input {
+            InputEncoding::PayloadLe { offset } => {
+                parser.extract_words_le(offset, src);
+            }
+            InputEncoding::BigEndianField { offset } => {
+                if spec.in_bits != 32 {
+                    return Err(Error::Config(format!(
+                        "BigEndianField input needs in_bits=32, model has {}",
+                        spec.in_bits
+                    )));
+                }
+                parser.extracts.push(crate::rmt::Extract {
+                    offset,
+                    width_bytes: 4,
+                    big_endian: true,
+                    dst: src[0],
+                });
+            }
+        }
+        Ok(parser)
+    }
+
+    /// Emit all rounds of one layer.
+    fn emit_layer(
+        &self,
+        model: &BnnModel,
+        plan: &layout::LayerPlan,
+        out: &mut Vec<Element>,
+    ) -> Result<()> {
+        let li = plan.layer;
+        let w = plan.w_words;
+        let n = plan.in_bits;
+        let native = self.chip.native_popcnt;
+        let a = |slot: usize| ContainerId(plan.a_base + slot as u16);
+        let b = |slot: usize| -> ContainerId {
+            ContainerId(plan.b_base.expect("B region in native mode") + slot as u16)
+        };
+        // Multi-round layers keep the preserved source at the top slots
+        // (see layout); the preserved copy target:
+        let preserved_src: Option<Vec<ContainerId>> = (plan.rounds > 1).then(|| {
+            let n32 = self.chip.phv.containers32().len();
+            (n32 - w..n32).map(|k| self.chip.phv.containers32()[k]).collect()
+        });
+
+        for round in 0..plan.rounds {
+            let first = round * plan.parallel;
+            let count = plan.parallel.min(plan.neurons - first);
+            let src: &[ContainerId] = if round == 0 {
+                &plan.src
+            } else {
+                preserved_src.as_ref().unwrap()
+            };
+
+            // ---- Step 1: Replication --------------------------------
+            let in_place = src
+                .iter()
+                .enumerate()
+                .all(|(k, &c)| c == a(k));
+            if plan.needs_replication || plan.rounds > 1 {
+                let mut ops = Vec::new();
+                for g in 0..count {
+                    if g == 0 && in_place {
+                        continue; // replica 0 is the source itself
+                    }
+                    for wd in 0..w {
+                        ops.push(MicroOp::alu(
+                            a(g * w + wd),
+                            AluOp::Mov,
+                            Src::Container(src[wd]),
+                            Src::Imm(0),
+                        ));
+                    }
+                }
+                // Round 0 of a multi-round layer also preserves the
+                // source at the top of the PHV for later rounds.
+                if round == 0 {
+                    if let Some(ps) = &preserved_src {
+                        for wd in 0..w {
+                            if ps[wd] != src[wd] {
+                                ops.push(MicroOp::alu(
+                                    ps[wd],
+                                    AluOp::Mov,
+                                    Src::Container(src[wd]),
+                                    Src::Imm(0),
+                                ));
+                            }
+                        }
+                    }
+                }
+                if !ops.is_empty() {
+                    out.push(Element::new(
+                        format!("L{li}/r{round}/replicate"),
+                        StepKind::Replication,
+                        ops,
+                    ));
+                } else if plan.needs_replication {
+                    // Degenerate case (P=1, already in place): the plan
+                    // reserved an element; emit an explicit no-op mov to
+                    // keep element counts aligned with the plan.
+                    out.push(Element::new(
+                        format!("L{li}/r{round}/replicate"),
+                        StepKind::Replication,
+                        vec![MicroOp::alu(
+                            a(0),
+                            AluOp::Mov,
+                            Src::Container(a(0)),
+                            Src::Imm(0),
+                        )],
+                    ));
+                }
+            }
+
+            // ---- Step 2: XNOR + duplication -------------------------
+            // Weight words for this round, flattened (action data layout:
+            // neuron g, word wd at index g·w + wd).
+            let mut wdata = Vec::with_capacity(count * w);
+            for g in 0..count {
+                let row: &PackedBits = &model.layers[li].neurons[first + g];
+                wdata.extend_from_slice(row.words());
+            }
+            let wsrc = |g: usize, wd: usize| -> Src {
+                if self.opts.weights_as_immediates {
+                    Src::Imm(wdata[g * w + wd])
+                } else {
+                    Src::ActionData((g * w + wd) as u16)
+                }
+            };
+            let mut ops = Vec::new();
+            for g in 0..count {
+                for wd in 0..w {
+                    let c = a(g * w + wd);
+                    ops.push(MicroOp::alu(c, AluOp::Xnor, Src::Container(c), wsrc(g, wd)));
+                    if !native {
+                        ops.push(MicroOp::alu(
+                            b(g * w + wd),
+                            AluOp::Xnor,
+                            Src::Container(c),
+                            wsrc(g, wd),
+                        ));
+                    }
+                }
+            }
+            let label = format!("L{li}/r{round}/xnor-dup");
+            if self.opts.weights_as_immediates {
+                out.push(Element::new(label, StepKind::XnorDup, ops));
+            } else {
+                // Default (single-model / table-miss) weights, plus one
+                // entry per installed model in multi-model mode.
+                let mut stage = match &self.multi {
+                    None => MatchStage::new(vec![], wdata.clone()),
+                    Some(m) => MatchStage::new(vec![m.id_container], wdata.clone()),
+                };
+                if let Some(m) = &self.multi {
+                    for (id, mm) in &m.models {
+                        let mut data = Vec::with_capacity(count * w);
+                        for g in 0..count {
+                            data.extend_from_slice(
+                                mm.layers[li].neurons[first + g].words(),
+                            );
+                        }
+                        stage.insert(crate::rmt::TableEntry {
+                            key: vec![*id],
+                            action_data: data,
+                        })?;
+                    }
+                }
+                out.push(Element::with_table(label, StepKind::XnorDup, stage, ops));
+            }
+
+            // ---- Step 3: POPCNT -------------------------------------
+            if native {
+                self.emit_native_popcnt(plan, count, round, out, &a);
+            } else {
+                self.emit_tree_popcnt(plan, count, round, out, &a, &b);
+            }
+
+            // ---- Step 4: SIGN ---------------------------------------
+            let thresh = (n as u32).div_ceil(2);
+            let sign_dst = |g: usize| -> ContainerId {
+                if native {
+                    a(g * w)
+                } else {
+                    b(g * w)
+                }
+            };
+            let mut ops = Vec::new();
+            for g in 0..count {
+                ops.push(MicroOp::alu(
+                    sign_dst(g),
+                    AluOp::SetGe,
+                    Src::Container(a(g * w)),
+                    Src::Imm(thresh),
+                ));
+            }
+            out.push(Element::new(
+                format!("L{li}/r{round}/sign"),
+                StepKind::Sign,
+                ops,
+            ));
+
+            // ---- Step 5: Folding ------------------------------------
+            // Gather sign bits into the output containers; multi-round
+            // layers accumulate across rounds.
+            let mut per_container: Vec<(usize, Vec<GatherSrc>)> = Vec::new();
+            for g in 0..count {
+                let q = first + g; // global neuron index = output bit
+                let (ci, bit) = (q / 32, (q % 32) as u8);
+                match per_container.iter_mut().find(|(c, _)| *c == ci) {
+                    Some((_, v)) => v.push(GatherSrc { from: sign_dst(g), bit }),
+                    None => per_container
+                        .push((ci, vec![GatherSrc { from: sign_dst(g), bit }])),
+                }
+            }
+            let ops = per_container
+                .into_iter()
+                .map(|(ci, srcs)| MicroOp::Gather {
+                    dst: plan.out[ci],
+                    srcs,
+                    // Accumulate only into containers an earlier round of
+                    // THIS layer already wrote (output bits are assigned
+                    // contiguously from 0, so container ci has earlier
+                    // bits iff its first bit index is below `first`).
+                    // A fresh container must be overwritten, not OR-ed:
+                    // it may hold garbage from a previous layer's regions.
+                    accumulate: plan.rounds > 1 && ci * 32 < first,
+                })
+                .collect();
+            out.push(Element::new(
+                format!("L{li}/r{round}/fold"),
+                StepKind::Fold,
+                ops,
+            ));
+        }
+        Ok(())
+    }
+
+    /// Tree POPCNT (stock chip): per level, a mask/shift element over the
+    /// A and B copies in parallel, then a sum element that re-duplicates.
+    fn emit_tree_popcnt(
+        &self,
+        plan: &layout::LayerPlan,
+        count: usize,
+        round: usize,
+        out: &mut Vec<Element>,
+        a: &dyn Fn(usize) -> ContainerId,
+        b: &dyn Fn(usize) -> ContainerId,
+    ) {
+        let li = plan.layer;
+        let w = plan.w_words;
+        for (lvl, level) in tree_levels(plan.in_bits).iter().enumerate() {
+            match *level {
+                Level::InWord { shift, mask_a, mask_b } => {
+                    // Mask element: A &= mask_a ; B = (B >> shift) & mask_b.
+                    // The A ops and B ops are emitted as two homogeneous
+                    // blocks (not interleaved) so the executor can
+                    // vectorize each as one strided run (§Perf).
+                    let mut ops = Vec::new();
+                    for g in 0..count {
+                        for wd in 0..w {
+                            let ca = a(g * w + wd);
+                            ops.push(MicroOp::alu(
+                                ca,
+                                AluOp::And,
+                                Src::Container(ca),
+                                Src::Imm(mask_a),
+                            ));
+                        }
+                    }
+                    for g in 0..count {
+                        for wd in 0..w {
+                            let cb = b(g * w + wd);
+                            ops.push(MicroOp::ShrAnd {
+                                dst: cb,
+                                a: Src::Container(cb),
+                                shift,
+                                mask: mask_b,
+                            });
+                        }
+                    }
+                    out.push(Element::new(
+                        format!("L{li}/r{round}/popcnt-l{lvl}/mask"),
+                        StepKind::PopcntMask,
+                        ops,
+                    ));
+                    // Sum element: A += B, duplicated into B.
+                    let mut ops = Vec::new();
+                    for g in 0..count {
+                        for wd in 0..w {
+                            let (ca, cb) = (a(g * w + wd), b(g * w + wd));
+                            ops.push(MicroOp::alu(
+                                ca,
+                                AluOp::Add,
+                                Src::Container(ca),
+                                Src::Container(cb),
+                            ));
+                            ops.push(MicroOp::alu(
+                                cb,
+                                AluOp::Add,
+                                Src::Container(ca),
+                                Src::Container(cb),
+                            ));
+                        }
+                    }
+                    out.push(Element::new(
+                        format!("L{li}/r{round}/popcnt-l{lvl}/sum"),
+                        StepKind::PopcntSum,
+                        ops,
+                    ));
+                }
+                Level::Cross { stride } => {
+                    // Gather element: B[k·stride] = A[k·stride + stride/2].
+                    let mut ops = Vec::new();
+                    for g in 0..count {
+                        let mut k = 0;
+                        while k < w {
+                            ops.push(MicroOp::alu(
+                                b(g * w + k),
+                                AluOp::Mov,
+                                Src::Container(a(g * w + k + stride / 2)),
+                                Src::Imm(0),
+                            ));
+                            k += stride;
+                        }
+                    }
+                    out.push(Element::new(
+                        format!("L{li}/r{round}/popcnt-l{lvl}/mask"),
+                        StepKind::PopcntMask,
+                        ops,
+                    ));
+                    // Sum element: A[k·stride] += B[k·stride] (+ dup).
+                    let mut ops = Vec::new();
+                    for g in 0..count {
+                        let mut k = 0;
+                        while k < w {
+                            let (ca, cb) = (a(g * w + k), b(g * w + k));
+                            ops.push(MicroOp::alu(
+                                ca,
+                                AluOp::Add,
+                                Src::Container(ca),
+                                Src::Container(cb),
+                            ));
+                            ops.push(MicroOp::alu(
+                                cb,
+                                AluOp::Add,
+                                Src::Container(ca),
+                                Src::Container(cb),
+                            ));
+                            k += stride;
+                        }
+                    }
+                    out.push(Element::new(
+                        format!("L{li}/r{round}/popcnt-l{lvl}/sum"),
+                        StepKind::PopcntSum,
+                        ops,
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Native-POPCNT variant (§3): one popcount element, then a
+    /// cross-word add tree of log₂(W) elements. No B copy at all.
+    fn emit_native_popcnt(
+        &self,
+        plan: &layout::LayerPlan,
+        count: usize,
+        round: usize,
+        out: &mut Vec<Element>,
+        a: &dyn Fn(usize) -> ContainerId,
+    ) {
+        let li = plan.layer;
+        let w = plan.w_words;
+        let tail = tail_mask(plan.in_bits);
+        let mut ops = Vec::new();
+        for g in 0..count {
+            for wd in 0..w {
+                let c = a(g * w + wd);
+                let mask = if wd == w - 1 { tail } else { u32::MAX };
+                ops.push(MicroOp::alu(
+                    c,
+                    AluOp::Popcnt,
+                    Src::Container(c),
+                    Src::Imm(mask),
+                ));
+            }
+        }
+        out.push(Element::new(
+            format!("L{li}/r{round}/popcnt-native"),
+            StepKind::PopcntNative,
+            ops,
+        ));
+        // Pairwise add tree across words.
+        let mut stride = 2usize;
+        while stride <= w {
+            let mut ops = Vec::new();
+            for g in 0..count {
+                let mut k = 0;
+                while k < w {
+                    let dst = a(g * w + k);
+                    ops.push(MicroOp::alu(
+                        dst,
+                        AluOp::Add,
+                        Src::Container(dst),
+                        Src::Container(a(g * w + k + stride / 2)),
+                    ));
+                    k += stride;
+                }
+            }
+            out.push(Element::new(
+                format!("L{li}/r{round}/popcnt-sum-s{stride}"),
+                StepKind::PopcntSum,
+                ops,
+            ));
+            stride *= 2;
+        }
+        let _ = n_words(plan.in_bits);
+    }
+}
+
+impl CompiledModel {
+    /// Read the model's packed output bits from a processed PHV.
+    pub fn read_output(&self, phv: &Phv) -> PackedBits {
+        let words = phv.read_group(&self.layout.output);
+        PackedBits::from_words(words, self.output_bits)
+    }
+
+    /// Human-readable resource summary.
+    pub fn resource_report(&self) -> String {
+        self.resources.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn;
+    use crate::rmt::Pipeline;
+    use crate::util::rng::Rng;
+
+    /// Compile + run one packet through the simulated pipeline and
+    /// compare against the trusted reference forward.
+    fn check_model(model: &BnnModel, chip: ChipConfig, seed: u64) {
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(chip.clone(), opts).compile(model).unwrap();
+        let mut pipe = Pipeline::new(
+            chip,
+            compiled.program.clone(),
+            compiled.parser.clone(),
+            true,
+        )
+        .unwrap();
+        let mut rng = Rng::seed_from_u64(seed);
+        for _ in 0..20 {
+            let x = PackedBits::random(model.spec.in_bits, &mut rng);
+            let mut pkt = Vec::new();
+            for wd in x.words() {
+                pkt.extend_from_slice(&wd.to_le_bytes());
+            }
+            let phv = pipe.process_packet(&pkt).unwrap();
+            let got = compiled.read_output(&phv);
+            let expect = bnn::forward(model, &x);
+            assert_eq!(got, expect, "input {x:?}");
+        }
+    }
+
+    #[test]
+    fn single_layer_small() {
+        check_model(&BnnModel::random(32, &[16], 1), ChipConfig::rmt(), 10);
+    }
+
+    #[test]
+    fn single_layer_16bit_tail() {
+        check_model(&BnnModel::random(16, &[16], 2), ChipConfig::rmt(), 11);
+    }
+
+    #[test]
+    fn wide_activation_2048() {
+        check_model(&BnnModel::random(2048, &[1], 3), ChipConfig::rmt(), 12);
+    }
+
+    #[test]
+    fn two_layer_use_case() {
+        check_model(&BnnModel::random(32, &[64, 32], 4), ChipConfig::rmt(), 13);
+    }
+
+    #[test]
+    fn three_layer_classifier() {
+        check_model(&BnnModel::random(32, &[64, 32, 1], 5), ChipConfig::rmt(), 14);
+    }
+
+    #[test]
+    fn native_popcnt_variant() {
+        check_model(&BnnModel::random(32, &[64, 32], 6), ChipConfig::rmt_with_popcnt(), 15);
+        check_model(&BnnModel::random(2048, &[1], 7), ChipConfig::rmt_with_popcnt(), 16);
+    }
+
+    #[test]
+    fn multi_round_layer() {
+        check_model(&BnnModel::random(32, &[128, 16], 8), ChipConfig::rmt(), 17);
+    }
+
+    #[test]
+    fn weights_as_immediates_equivalent() {
+        let model = BnnModel::random(64, &[32], 9);
+        let chip = ChipConfig::rmt();
+        let mk = |imm: bool| {
+            let opts = CompilerOptions {
+                input: InputEncoding::PayloadLe { offset: 0 },
+                weights_as_immediates: imm,
+                ..Default::default()
+            };
+            Compiler::new(chip.clone(), opts).compile(&model).unwrap()
+        };
+        let c1 = mk(false);
+        let c2 = mk(true);
+        assert_eq!(c1.program.n_elements(), c2.program.n_elements());
+        // SRAM: table-stored weights consume SRAM, immediates don't.
+        let s1 = c1.program.stats(&chip);
+        let s2 = c2.program.stats(&chip);
+        assert!(s1.sram_bits > s2.sram_bits);
+    }
+
+    #[test]
+    fn element_counts_match_plan() {
+        for (in_bits, layers) in [
+            (16usize, vec![16usize]),
+            (32, vec![64, 32]),
+            (256, vec![8]),
+            (2048, vec![1]),
+        ] {
+            let model = BnnModel::random(in_bits, &layers, 21);
+            let compiled = Compiler::rmt().compile(&model).unwrap();
+            assert_eq!(
+                compiled.program.n_elements(),
+                compiled.layout.total_elements,
+                "in_bits={in_bits} layers={layers:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Packet batching: accumulate until `max_size` or `max_delay`, then
+//! flush. The switch itself processes packet-at-a-time, but the software
+//! simulator amortizes per-batch overheads (and the serving examples
+//! report per-batch latency percentiles).
+
+use std::time::{Duration, Instant};
+
+/// Batch formation policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_size: usize,
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_size: 256, max_delay: Duration::from_micros(200) }
+    }
+}
+
+/// A formed batch: packet indices into the source stream plus payloads.
+#[derive(Clone, Debug, Default)]
+pub struct Batch {
+    pub first_index: usize,
+    pub packets: Vec<Vec<u8>>,
+    pub formed_in: Duration,
+}
+
+/// Incremental batcher over a packet stream.
+pub struct Batcher {
+    policy: BatchPolicy,
+    current: Vec<Vec<u8>>,
+    first_index: usize,
+    next_index: usize,
+    started: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, current: Vec::new(), first_index: 0, next_index: 0, started: None }
+    }
+
+    /// Push one packet; returns a full batch when the size bound is hit.
+    pub fn push(&mut self, packet: Vec<u8>) -> Option<Batch> {
+        if self.current.is_empty() {
+            self.started = Some(Instant::now());
+            self.first_index = self.next_index;
+        }
+        self.current.push(packet);
+        self.next_index += 1;
+        if self.current.len() >= self.policy.max_size {
+            return Some(self.flush_inner());
+        }
+        None
+    }
+
+    /// Deadline check: flush if the oldest packet has waited too long.
+    pub fn poll_deadline(&mut self) -> Option<Batch> {
+        match self.started {
+            Some(t) if !self.current.is_empty() && t.elapsed() >= self.policy.max_delay => {
+                Some(self.flush_inner())
+            }
+            _ => None,
+        }
+    }
+
+    /// Flush whatever is pending (stream end).
+    pub fn flush(&mut self) -> Option<Batch> {
+        if self.current.is_empty() {
+            None
+        } else {
+            Some(self.flush_inner())
+        }
+    }
+
+    fn flush_inner(&mut self) -> Batch {
+        let formed_in = self.started.map(|t| t.elapsed()).unwrap_or_default();
+        self.started = None;
+        Batch {
+            first_index: self.first_index,
+            packets: std::mem::take(&mut self.current),
+            formed_in,
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.current.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_bound_flushes() {
+        let mut b = Batcher::new(BatchPolicy { max_size: 3, max_delay: Duration::from_secs(1) });
+        assert!(b.push(vec![1]).is_none());
+        assert!(b.push(vec![2]).is_none());
+        let batch = b.push(vec![3]).unwrap();
+        assert_eq!(batch.packets.len(), 3);
+        assert_eq!(batch.first_index, 0);
+        // Next batch indexes continue.
+        assert!(b.push(vec![4]).is_none());
+        let rest = b.flush().unwrap();
+        assert_eq!(rest.first_index, 3);
+        assert_eq!(rest.packets.len(), 1);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn deadline_flushes() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_size: 100,
+            max_delay: Duration::from_millis(1),
+        });
+        b.push(vec![1]);
+        std::thread::sleep(Duration::from_millis(3));
+        let batch = b.poll_deadline().unwrap();
+        assert_eq!(batch.packets.len(), 1);
+        assert!(batch.formed_in >= Duration::from_millis(1));
+        assert!(b.poll_deadline().is_none());
+    }
+}

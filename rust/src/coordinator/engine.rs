@@ -1,0 +1,208 @@
+//! The multi-worker serving engine.
+//!
+//! N workers each own a full simulated pipeline (a real deployment has
+//! one physical pipeline per switch; the engine models a rack of N2Net
+//! switches or, equivalently, uses host parallelism to push the software
+//! simulator toward line rate). A router shards packets across workers —
+//! round-robin for throughput or by flow key for state affinity.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::compiler::CompiledModel;
+use crate::error::Result;
+use crate::rmt::{ChipConfig, Pipeline};
+use crate::telemetry::EngineMetrics;
+
+/// How packets map to workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// i-th packet → worker i mod N (max throughput).
+    RoundRobin,
+    /// By IPv4 source (flow affinity): same flow, same worker.
+    FlowHash,
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub n_workers: usize,
+    pub router: RouterPolicy,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            n_workers: std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(4),
+            router: RouterPolicy::RoundRobin,
+        }
+    }
+}
+
+/// Result of an engine run.
+#[derive(Clone, Debug)]
+pub struct EngineReport {
+    /// Output classification bit per input packet (same order).
+    pub outputs: Vec<u32>,
+    /// Host wall-clock packets/second achieved by the simulator.
+    pub sim_pps: f64,
+    /// What the modeled ASIC would do (line rate / passes).
+    pub modeled_pps: f64,
+    pub n_packets: usize,
+    pub parse_errors: u64,
+}
+
+/// The serving engine: compiled model + worker pool.
+pub struct Engine {
+    chip: ChipConfig,
+    compiled: Arc<CompiledModel>,
+    config: EngineConfig,
+    pub metrics: Arc<EngineMetrics>,
+}
+
+impl Engine {
+    pub fn new(compiled: CompiledModel, config: EngineConfig) -> Self {
+        Self {
+            chip: compiled.chip.clone(),
+            compiled: Arc::new(compiled),
+            config,
+            metrics: Arc::new(EngineMetrics::default()),
+        }
+    }
+
+    pub fn compiled(&self) -> &CompiledModel {
+        &self.compiled
+    }
+
+    fn worker_pipeline(&self) -> Result<Pipeline> {
+        Pipeline::new(
+            self.chip.clone(),
+            self.compiled.program.clone(),
+            self.compiled.parser.clone(),
+            true,
+        )
+    }
+
+    /// Which worker handles packet `i` (FlowHash reads the IPv4 src).
+    fn route(&self, i: usize, pkt: &[u8]) -> usize {
+        match self.config.router {
+            RouterPolicy::RoundRobin => i % self.config.n_workers,
+            RouterPolicy::FlowHash => {
+                let key = crate::net::packet::parse_src_ip(pkt).unwrap_or(i as u32);
+                let mut h = key as u64 ^ 0xcbf29ce484222325;
+                h = h.wrapping_mul(0x100000001b3);
+                (h as usize) % self.config.n_workers
+            }
+        }
+    }
+
+    /// Process a full trace; outputs preserve input order. The engine
+    /// shards packets to workers, each running its own pipeline.
+    pub fn process_trace(&self, packets: &[Vec<u8>]) -> Result<EngineReport> {
+        let n_workers = self.config.n_workers.max(1);
+        // Shard: per worker, the (index, packet) list it owns.
+        let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_workers];
+        for (i, pkt) in packets.iter().enumerate() {
+            shards[self.route(i, pkt)].push(i);
+        }
+        let t0 = Instant::now();
+        let mut outputs = vec![0u32; packets.len()];
+        let mut parse_errors = 0u64;
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for shard in &shards {
+                let compiled = Arc::clone(&self.compiled);
+                let metrics = Arc::clone(&self.metrics);
+                let mut pipe = self.worker_pipeline()?;
+                let handle = scope.spawn(move || -> (Vec<(usize, u32)>, u64) {
+                    let mut out = Vec::with_capacity(shard.len());
+                    let t_batch = Instant::now();
+                    for &i in shard {
+                        metrics.packets_in.inc();
+                        match pipe.process_packet(&packets[i]) {
+                            Ok(phv) => {
+                                let bit = compiled.read_output(&phv).get(0) as u32;
+                                metrics.packets_classified.inc();
+                                out.push((i, bit));
+                            }
+                            Err(_) => {
+                                metrics.parse_errors.inc();
+                                metrics.packets_dropped.inc();
+                                out.push((i, 0));
+                            }
+                        }
+                    }
+                    metrics.batch_latency.record(t_batch.elapsed());
+                    (out, pipe.stats().parse_errors)
+                });
+                handles.push(handle);
+            }
+            for h in handles {
+                let (outs, errs) = h.join().expect("worker panicked");
+                parse_errors += errs;
+                for (i, bit) in outs {
+                    outputs[i] = bit;
+                }
+            }
+            Ok(())
+        })?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        let modeled = self.chip.timing(&self.compiled.program);
+        Ok(EngineReport {
+            outputs,
+            sim_pps: packets.len() as f64 / elapsed.max(1e-12),
+            modeled_pps: modeled.pps,
+            n_packets: packets.len(),
+            parse_errors,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{self, BnnModel, PackedBits};
+    use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
+    use crate::net::{TraceGenerator, TraceKind};
+
+    fn engine_for(model: &BnnModel, router: RouterPolicy) -> Engine {
+        let opts = CompilerOptions {
+            input: InputEncoding::BigEndianField {
+                offset: crate::net::packet::IPV4_SRC_OFFSET,
+            },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(model).unwrap();
+        Engine::new(compiled, EngineConfig { n_workers: 3, router })
+    }
+
+    #[test]
+    fn outputs_preserve_order_and_match_reference() {
+        let model = BnnModel::random(32, &[16, 1], 31);
+        for router in [RouterPolicy::RoundRobin, RouterPolicy::FlowHash] {
+            let engine = engine_for(&model, router);
+            let mut gen = TraceGenerator::new(17);
+            let trace = gen.generate(&TraceKind::UniformIps, 200);
+            let report = engine.process_trace(&trace.packets).unwrap();
+            assert_eq!(report.outputs.len(), 200);
+            for (i, &key) in trace.keys.iter().enumerate() {
+                let expect = bnn::forward(&model, &PackedBits::from_u32(key)).get(0) as u32;
+                assert_eq!(report.outputs[i], expect, "router {router:?} pkt {i}");
+            }
+            assert_eq!(report.modeled_pps, 960e6);
+            assert!(report.sim_pps > 0.0);
+        }
+    }
+
+    #[test]
+    fn malformed_packets_dropped_not_fatal() {
+        let model = BnnModel::random(32, &[16], 33);
+        let engine = engine_for(&model, RouterPolicy::RoundRobin);
+        let packets = vec![vec![0u8; 4], vec![0u8; 2]];
+        let report = engine.process_trace(&packets).unwrap();
+        assert_eq!(report.outputs, vec![0, 0]);
+        assert_eq!(engine.metrics.packets_dropped.get(), 2);
+    }
+}

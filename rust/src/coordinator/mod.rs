@@ -1,0 +1,18 @@
+//! L3 serving loop: the leader process that drives simulated switch
+//! pipelines over packet streams.
+//!
+//! Note on async: the offline build environment has no tokio, so the
+//! engine is thread-based (`std::thread::scope` workers + channels) —
+//! for a CPU-bound cycle-level simulator this is the faithful design
+//! anyway: one OS thread per simulated pipeline, no I/O waits to hide.
+//!
+//! * [`batcher`] — size/deadline batching of an incoming packet stream.
+//! * [`engine`]  — multi-worker engine: each worker owns one simulated
+//!   pipeline instance; a router shards packets (round-robin or by flow
+//!   key) across workers; metrics via [`crate::telemetry`].
+
+pub mod batcher;
+pub mod engine;
+
+pub use batcher::{Batch, Batcher, BatchPolicy};
+pub use engine::{Engine, EngineConfig, EngineReport, RouterPolicy};

@@ -1,0 +1,48 @@
+//! Crate-wide error type. Every fallible public API returns [`Result`];
+//! the simulator and compiler never panic on user input.
+
+use thiserror::Error;
+
+/// Unified error for compilation, simulation, I/O and runtime failures.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// BNN model violates an architectural constraint (widths, sizes).
+    #[error("invalid model: {0}")]
+    InvalidModel(String),
+
+    /// The compiled program does not fit the chip (elements, PHV, SRAM).
+    #[error("resource exhausted: {0}")]
+    ResourceExhausted(String),
+
+    /// A pipeline program failed a legality check.
+    #[error("illegal program: {0}")]
+    IllegalProgram(String),
+
+    /// Packet could not be parsed / is malformed for the configured parser.
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// Weights / artifact files are missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Configuration error (CLI, serving).
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

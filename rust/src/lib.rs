@@ -1,0 +1,65 @@
+//! # N2Net — In-network Neural Networks
+//!
+//! A reproduction of *"In-network Neural Networks"* (Siracusano & Bifulco,
+//! NEC Laboratories Europe, 2018): running the forward pass of binary
+//! neural networks (BNNs) inside a programmable switching chip's
+//! match-action pipeline, at line rate.
+//!
+//! Since an RMT/Tofino ASIC is not available, this crate implements the
+//! complete stack in software (see `DESIGN.md` for the substitution
+//! argument):
+//!
+//! * [`rmt`] — a cycle-level simulator of an RMT switching chip: 512 B
+//!   packet header vector (PHV), programmable parser, 32 match-action
+//!   elements with a VLIW action ISA restricted to the primitives real
+//!   chips have (bitwise logic, shifts, simple adds — **no** multiply,
+//!   **no** popcount).
+//! * [`compiler`] — the paper's contribution: compile a BNN description
+//!   into an RMT pipeline program via the five-step schedule
+//!   (replication, XNOR + duplication, tree POPCNT, SIGN, folding), with
+//!   exact resource accounting (Table 1) and P4-like codegen.
+//! * [`bnn`] — bit-packed BNN substrate: tensors, a trusted reference
+//!   forward pass, and weight loading from the JAX training pipeline.
+//! * [`net`] — packet substrate: Ethernet/IPv4/UDP headers, the N2Net
+//!   activation encoding, and workload/trace generators.
+//! * [`apps`] — the paper's use cases: DDoS white/blacklisting and
+//!   load-balancing hints.
+//! * [`baseline`] — what the paper argues against: exact-match lookup
+//!   table classifiers with an SRAM cost model, and the naive unrolled
+//!   POPCNT.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas model
+//!   (`artifacts/model.hlo.txt`) used as a bit-exact golden oracle.
+//! * [`coordinator`] — the L3 serving loop: packet engine, batching,
+//!   stats.
+//! * [`analysis`] — throughput / chip-area models behind the paper's
+//!   §2-Evaluation and §3-Challenges numbers.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use n2net::bnn::BnnModel;
+//! use n2net::compiler::{Compiler, CompilerOptions};
+//! use n2net::rmt::ChipConfig;
+//!
+//! // A 2-layer BNN over 32-bit activations (the paper's use-case shape).
+//! let model = BnnModel::random(32, &[64, 32], 42);
+//! let compiled = Compiler::new(ChipConfig::rmt(), CompilerOptions::default())
+//!     .compile(&model)
+//!     .unwrap();
+//! println!("{}", compiled.resource_report());
+//! ```
+
+pub mod analysis;
+pub mod apps;
+pub mod baseline;
+pub mod bnn;
+pub mod compiler;
+pub mod coordinator;
+pub mod error;
+pub mod net;
+pub mod rmt;
+pub mod runtime;
+pub mod telemetry;
+pub mod util;
+
+pub use error::{Error, Result};

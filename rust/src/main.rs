@@ -1,0 +1,370 @@
+//! n2net — leader binary: compile BNNs to switch pipelines, run the
+//! simulator, and regenerate every number in the paper.
+//!
+//! ```text
+//! n2net report table1|throughput|popcnt-ablation|area|usecase|memory|all
+//! n2net compile [--in-bits N] [--layers 64,32] [--native-popcnt]
+//!               [--schedule] [--p4 FILE] [--seed S]
+//! n2net run     [--packets N] [--workers W] [--seed S] [--artifacts DIR]
+//! n2net serve   [--packets N] [--workers W] [--router flow|rr]
+//! n2net selftest [--artifacts DIR]
+//! ```
+
+use anyhow::{bail, Context};
+use n2net::analysis;
+use n2net::apps::DdosFilter;
+use n2net::bnn::{self, BnnModel};
+use n2net::compiler::{
+    p4gen, render_table1, Compiler, CompilerOptions, InputEncoding,
+};
+use n2net::coordinator::{Engine, EngineConfig, RouterPolicy};
+use n2net::net::{TraceGenerator, TraceKind};
+use n2net::rmt::ChipConfig;
+use n2net::runtime::Oracle;
+use n2net::util::cli::Args;
+
+const VALUE_OPTS: &[&str] = &[
+    "in-bits", "layers", "seed", "packets", "workers", "router", "artifacts",
+    "p4", "steps",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let args = match Args::parse(argv, VALUE_OPTS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: n2net <report|compile|run|serve|selftest> [options]\n\
+         see `n2net report all` for every paper artifact"
+    );
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("report") => cmd_report(args),
+        Some("compile") => cmd_compile(args),
+        Some("run") => cmd_run(args),
+        Some("serve") => cmd_serve(args),
+        Some("selftest") => cmd_selftest(args),
+        other => {
+            print_usage();
+            bail!("unknown subcommand {other:?}");
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> std::path::PathBuf {
+    args.opt("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Oracle::default_dir)
+}
+
+fn chip_for(args: &Args) -> ChipConfig {
+    if args.has_flag("native-popcnt") {
+        ChipConfig::rmt_with_popcnt()
+    } else {
+        ChipConfig::rmt()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// report — regenerate the paper's tables/claims (experiments E1..E8)
+// ---------------------------------------------------------------------------
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let all = which == "all";
+    let mut matched = all;
+    if all || which == "table1" {
+        matched = true;
+        println!("== E1: Table 1 (stock RMT chip) ==");
+        print!("{}", render_table1(&ChipConfig::rmt()));
+        println!();
+    }
+    if all || which == "throughput" {
+        matched = true;
+        println!("== E3: throughput scaling (960 Mpps line rate) ==");
+        print!("{}", analysis::throughput::render(&ChipConfig::rmt()));
+        println!();
+    }
+    if all || which == "popcnt-ablation" {
+        matched = true;
+        report_popcnt_ablation();
+    }
+    if all || which == "area" {
+        matched = true;
+        println!("== E6: chip-area analysis (paper §3) ==");
+        print!("{}", analysis::area::render(&ChipConfig::rmt()));
+        println!();
+    }
+    if all || which == "usecase" {
+        matched = true;
+        report_usecase()?;
+    }
+    if all || which == "memory" {
+        matched = true;
+        report_memory(args)?;
+    }
+    if !matched {
+        bail!("unknown report {which:?}");
+    }
+    Ok(())
+}
+
+fn report_popcnt_ablation() {
+    use n2net::compiler::popcount::{naive_elements, tree_elements};
+    println!("== E5/E7: POPCNT implementation ablation (elements per neuron group) ==");
+    println!(
+        "{:>10} {:>8} {:>8} {:>18} {:>18}",
+        "act bits", "naive", "tree", "layer (tree)", "layer (native §3)"
+    );
+    for n in [16usize, 32, 64, 128, 256, 512, 1024, 2048] {
+        let stock = n2net::compiler::elements_for_layer(n, &ChipConfig::rmt());
+        let native = n2net::compiler::elements_for_layer(n, &ChipConfig::rmt_with_popcnt());
+        println!(
+            "{:>10} {:>8} {:>8} {:>18} {:>18}",
+            n,
+            naive_elements(n),
+            tree_elements(n),
+            stock,
+            native
+        );
+    }
+    println!("paper: tree keeps Table 1 in 12-25; native POPCNT cuts it to 5-10\n");
+}
+
+fn report_usecase() -> anyhow::Result<()> {
+    println!("== E4: two-layer use case (32b activations, layers 64+32) ==");
+    let model = BnnModel::random(32, &[64, 32], 4242);
+    let compiled = Compiler::rmt().compile(&model)?;
+    print!("{}", compiled.resource_report());
+    let t = compiled.chip.timing(&compiled.program);
+    println!(
+        "⇒ {:.0} M two-layer-BNN inferences/s at line rate (paper: 960 M)\n",
+        t.pps / 1e6
+    );
+    Ok(())
+}
+
+fn report_memory(args: &Args) -> anyhow::Result<()> {
+    println!("== E8: BNN vs exact-match LUT under equal SRAM (DDoS use case) ==");
+    let dir = artifacts_dir(args);
+    let (model, doc) = bnn::load_weights(dir.join("weights.json"))
+        .context("E8 needs trained weights; run `make artifacts`")?;
+    let mut filter = DdosFilter::new(&model, ChipConfig::rmt(), doc.ddos.clone())?;
+    let n = args.opt_usize("packets", 4000)?;
+    let report = filter.compare_with_lut(n, args.opt_u64("seed", 7)?)?;
+    print!("{}", report.render());
+    println!(
+        "(trained BNN test accuracy from python: {:.2}%)\n",
+        doc.metrics.test_accuracy_packed * 100.0
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// compile — inspect a model's pipeline program
+// ---------------------------------------------------------------------------
+
+fn cmd_compile(args: &Args) -> anyhow::Result<()> {
+    let in_bits = args.opt_usize("in-bits", 32)?;
+    let layers = args.opt_usize_list("layers", &[64, 32])?;
+    let seed = args.opt_u64("seed", 0)?;
+    let chip = chip_for(args);
+    let model = BnnModel::random(in_bits, &layers, seed);
+    let compiled = Compiler::new(chip, CompilerOptions::default()).compile(&model)?;
+    println!(
+        "compiled BNN {in_bits}b -> {layers:?} ({} weight bits)",
+        model.spec.weight_bits_total()
+    );
+    print!("{}", compiled.resource_report());
+    if args.has_flag("schedule") {
+        println!("\nper-element schedule (Fig. 2):");
+        print!("{}", compiled.program.schedule_listing());
+    }
+    if let Some(path) = args.opt("p4") {
+        let p4 = p4gen::render(&compiled.program, &compiled.parser, "n2net-model");
+        std::fs::write(path, &p4)?;
+        println!("wrote P4 description to {path}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// run — end-to-end on the trained model, cross-checked vs PJRT oracle
+// ---------------------------------------------------------------------------
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let (model, doc) = bnn::load_weights(dir.join("weights.json"))?;
+    let n = args.opt_usize("packets", 2000)?;
+    let seed = args.opt_u64("seed", 1)?;
+
+    println!(
+        "model: {}b -> {:?} (trained, test acc {:.2}%)",
+        model.spec.in_bits,
+        model.spec.layer_sizes,
+        doc.metrics.test_accuracy_packed * 100.0
+    );
+
+    let opts = CompilerOptions {
+        input: InputEncoding::BigEndianField {
+            offset: n2net::net::packet::IPV4_SRC_OFFSET,
+        },
+        ..Default::default()
+    };
+    let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model)?;
+    print!("{}", compiled.resource_report());
+
+    let engine = Engine::new(
+        compiled,
+        EngineConfig {
+            n_workers: args.opt_usize("workers", 4)?,
+            router: RouterPolicy::RoundRobin,
+        },
+    );
+    let mut gen = TraceGenerator::new(seed);
+    let trace = gen.generate(&TraceKind::Ddos { ddos: doc.ddos.clone() }, n);
+    let report = engine.process_trace(&trace.packets)?;
+
+    // Accuracy vs ground truth.
+    let correct = report
+        .outputs
+        .iter()
+        .zip(&trace.labels)
+        .filter(|(p, l)| p == l)
+        .count();
+    println!(
+        "switch accuracy: {:.2}% over {} packets",
+        correct as f64 / n as f64 * 100.0,
+        n
+    );
+    println!(
+        "simulator: {:.2} M packets/s host | modeled ASIC: {:.0} M packets/s",
+        report.sim_pps / 1e6,
+        report.modeled_pps / 1e6
+    );
+
+    // Cross-check a sample against the PJRT oracle.
+    let oracle = Oracle::load(&dir).context("loading PJRT oracle")?;
+    let sample: Vec<Vec<u32>> = trace.keys.iter().take(256).map(|&k| vec![k]).collect();
+    let oracle_bits = oracle.classify(&sample)?;
+    let agree = oracle_bits
+        .iter()
+        .zip(&report.outputs)
+        .filter(|(a, b)| a == b)
+        .count();
+    println!(
+        "oracle agreement: {agree}/{} (PJRT-compiled JAX model vs switch pipeline)",
+        sample.len()
+    );
+    if agree != sample.len() {
+        bail!("switch pipeline diverged from the AOT oracle");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// serve — sustained engine run with metrics
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let (model, doc) = bnn::load_weights(dir.join("weights.json"))?;
+    let n = args.opt_usize("packets", 100_000)?;
+    let router = match args.opt("router").unwrap_or("rr") {
+        "flow" => RouterPolicy::FlowHash,
+        _ => RouterPolicy::RoundRobin,
+    };
+    let opts = CompilerOptions {
+        input: InputEncoding::BigEndianField {
+            offset: n2net::net::packet::IPV4_SRC_OFFSET,
+        },
+        ..Default::default()
+    };
+    let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model)?;
+    let engine = Engine::new(
+        compiled,
+        EngineConfig { n_workers: args.opt_usize("workers", 4)?, router },
+    );
+    let mut gen = TraceGenerator::new(args.opt_u64("seed", 3)?);
+    let trace = gen.generate(&TraceKind::Ddos { ddos: doc.ddos.clone() }, n);
+    let report = engine.process_trace(&trace.packets)?;
+    println!(
+        "served {} packets at {:.2} M/s (host) — modeled ASIC {:.0} M/s",
+        report.n_packets,
+        report.sim_pps / 1e6,
+        report.modeled_pps / 1e6
+    );
+    println!("{}", engine.metrics.render());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// selftest — artifact + bridge health
+// ---------------------------------------------------------------------------
+
+fn cmd_selftest(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    println!("artifacts: {}", dir.display());
+    let (model, doc) = bnn::load_weights(dir.join("weights.json"))?;
+    println!(
+        "weights: {}b -> {:?}, {} subnets, test acc {:.2}%",
+        model.spec.in_bits,
+        model.spec.layer_sizes,
+        doc.ddos.subnets.len(),
+        doc.metrics.test_accuracy_packed * 100.0
+    );
+    let oracle = Oracle::load(&dir)?;
+    println!("oracle: platform={} layers={}", oracle.platform(), oracle.n_layers());
+    oracle.self_test().context("golden self-test")?;
+    println!("golden self-test: OK (bit-exact)");
+
+    // Switch-pipeline cross-check on 64 random inputs.
+    let compiled = Compiler::new(
+        ChipConfig::rmt(),
+        CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        },
+    )
+    .compile(&model)?;
+    let mut pipe = n2net::rmt::Pipeline::new(
+        ChipConfig::rmt(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        true,
+    )?;
+    let mut rng = n2net::util::rng::Rng::seed_from_u64(99);
+    let inputs: Vec<Vec<u32>> = (0..64).map(|_| vec![rng.next_u32()]).collect();
+    let oracle_bits = oracle.classify(&inputs)?;
+    for (inp, &expect) in inputs.iter().zip(&oracle_bits) {
+        let mut pkt = Vec::new();
+        for w in inp {
+            pkt.extend_from_slice(&w.to_le_bytes());
+        }
+        let phv = pipe.process_packet(&pkt)?;
+        let got = compiled.read_output(&phv).get(0) as u32;
+        if got != expect {
+            bail!("pipeline/oracle divergence on input {inp:?}");
+        }
+    }
+    println!("pipeline ≡ oracle on 64 random inputs: OK");
+    println!("selftest PASSED");
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Packet substrate: header formats, the N2Net activation encoding, and
+//! workload/trace generation.
+//!
+//! The paper assumes "the BNN activations are encoded in a portion of
+//! the packet header" (§2). We define a concrete encoding: a UDP packet
+//! whose payload carries the packed activation words little-endian
+//! (`N2NET_PAYLOAD_OFFSET`), plus the alternative of classifying
+//! directly on the IPv4 source/destination address (the paper's "e.g.,
+//! the destination IP address of the packet").
+
+pub mod packet;
+pub mod tracegen;
+
+pub use packet::{
+    EthernetHeader, Ipv4Header, PacketBuilder, UdpHeader, ETH_HEADER_LEN,
+    IPV4_DST_OFFSET, IPV4_HEADER_LEN, IPV4_SRC_OFFSET, UDP_HEADER_LEN,
+};
+pub use tracegen::{Trace, TraceGenerator, TraceKind};
+
+/// Byte offset of the packed activation words in an N2Net packet:
+/// Ethernet (14) + IPv4 (20) + UDP (8).
+pub const N2NET_PAYLOAD_OFFSET: usize = ETH_HEADER_LEN + IPV4_HEADER_LEN + UDP_HEADER_LEN;

@@ -1,0 +1,214 @@
+//! Workload generation: labeled packet traces drawn from the same
+//! distributions the Python training pipeline uses.
+//!
+//! The DDoS trace mirrors `python/compile/dataset.py` — attacker IPs
+//! from the CIDR subnets recorded in `weights.json`, benign IPs uniform
+//! outside them — so a model trained in JAX can be evaluated on Rust
+//! traces against the *same* label function. The generators also
+//! produce uniform and Zipf-flow traces for throughput benchmarks.
+
+use crate::bnn::io::DdosDoc;
+use crate::bnn::PackedBits;
+use crate::net::packet::PacketBuilder;
+use crate::util::rng::Rng;
+
+/// What distribution a trace is drawn from.
+#[derive(Clone, Debug)]
+pub enum TraceKind {
+    /// DDoS mix: `attack_fraction` of packets from attacker subnets.
+    Ddos { ddos: DdosDoc },
+    /// Uniformly random source IPs.
+    UniformIps,
+    /// Zipf-distributed flows over `n_flows` source IPs (exponent ~1).
+    ZipfFlows { n_flows: usize },
+    /// Random packed activation payloads of `n_bits` (header-encoded).
+    RandomActivations { n_bits: usize },
+}
+
+/// A generated trace: frames plus ground-truth labels where applicable.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub packets: Vec<Vec<u8>>,
+    /// Ground truth (1 = attacker) for DDoS traces; empty otherwise.
+    pub labels: Vec<u32>,
+    /// The raw classification keys (source IPs or packed word 0).
+    pub keys: Vec<u32>,
+}
+
+/// Seeded trace generator.
+pub struct TraceGenerator {
+    rng: Rng,
+}
+
+impl TraceGenerator {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::seed_from_u64(seed) }
+    }
+
+    /// Generate `n` frames of the given kind.
+    pub fn generate(&mut self, kind: &TraceKind, n: usize) -> Trace {
+        match kind {
+            TraceKind::Ddos { ddos } => self.ddos(ddos, n),
+            TraceKind::UniformIps => self.uniform(n),
+            TraceKind::ZipfFlows { n_flows } => self.zipf(*n_flows, n),
+            TraceKind::RandomActivations { n_bits } => self.activations(*n_bits, n),
+        }
+    }
+
+    /// Sample one attacker IP: uniform subnet, uniform host bits.
+    pub fn attacker_ip(&mut self, ddos: &DdosDoc) -> u32 {
+        let s = ddos.subnets[self.rng.gen_range(0, ddos.subnets.len())];
+        let host_bits = 32 - s.prefix_len as u32;
+        let host = if host_bits == 0 {
+            0
+        } else if host_bits == 32 {
+            self.rng.next_u32()
+        } else {
+            self.rng.next_u32() & ((1u32 << host_bits) - 1)
+        };
+        s.prefix | host
+    }
+
+    /// Sample one benign IP (rejection sampling out of attacker space).
+    pub fn benign_ip(&mut self, ddos: &DdosDoc) -> u32 {
+        for _ in 0..64 {
+            let ip = self.rng.next_u32();
+            if ddos.label(ip) == 0 {
+                return ip;
+            }
+        }
+        // Degenerate blacklist covering ~everything; give up gracefully.
+        self.rng.next_u32()
+    }
+
+    fn ddos(&mut self, ddos: &DdosDoc, n: usize) -> Trace {
+        let mut packets = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        let mut keys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let attack = self.rng.gen_bool(ddos.attack_fraction);
+            let ip = if attack { self.attacker_ip(ddos) } else { self.benign_ip(ddos) };
+            let label = ddos.label(ip);
+            packets.push(PacketBuilder::default().src_ip(ip).build_activations(&[ip]));
+            labels.push(label);
+            keys.push(ip);
+        }
+        Trace { packets, labels, keys }
+    }
+
+    fn uniform(&mut self, n: usize) -> Trace {
+        let mut packets = Vec::with_capacity(n);
+        let mut keys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let ip = self.rng.next_u32();
+            packets.push(PacketBuilder::default().src_ip(ip).build_activations(&[ip]));
+            keys.push(ip);
+        }
+        Trace { packets, labels: Vec::new(), keys }
+    }
+
+    fn zipf(&mut self, n_flows: usize, n: usize) -> Trace {
+        // Flow weights ∝ 1/rank; sample by inverse-CDF over cumulative sums.
+        let flows: Vec<u32> = (0..n_flows).map(|_| self.rng.next_u32()).collect();
+        let weights: Vec<f64> = (1..=n_flows).map(|r| 1.0 / r as f64).collect();
+        let total: f64 = weights.iter().sum();
+        let mut cdf = Vec::with_capacity(n_flows);
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w / total;
+            cdf.push(acc);
+        }
+        let mut packets = Vec::with_capacity(n);
+        let mut keys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let u = self.rng.gen_f64();
+            let idx = cdf.partition_point(|&c| c < u).min(n_flows - 1);
+            let ip = flows[idx];
+            packets.push(PacketBuilder::default().src_ip(ip).build_activations(&[ip]));
+            keys.push(ip);
+        }
+        Trace { packets, labels: Vec::new(), keys }
+    }
+
+    fn activations(&mut self, n_bits: usize, n: usize) -> Trace {
+        let mut packets = Vec::with_capacity(n);
+        let mut keys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = PackedBits::random(n_bits, &mut self.rng);
+            packets.push(PacketBuilder::default().build_activations(v.words()));
+            keys.push(v.words()[0]);
+        }
+        Trace { packets, labels: Vec::new(), keys }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::io::SubnetDoc;
+
+    fn test_ddos() -> DdosDoc {
+        DdosDoc {
+            subnets: vec![
+                SubnetDoc { prefix: 0xC0A80000, prefix_len: 16 },
+                SubnetDoc { prefix: 0x0A000000, prefix_len: 8 },
+            ],
+            attack_fraction: 0.5,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn ddos_labels_are_ground_truth() {
+        let ddos = test_ddos();
+        let mut gen = TraceGenerator::new(42);
+        let t = gen.generate(&TraceKind::Ddos { ddos: ddos.clone() }, 500);
+        assert_eq!(t.packets.len(), 500);
+        for (k, l) in t.keys.iter().zip(&t.labels) {
+            assert_eq!(ddos.label(*k), *l);
+        }
+        // Roughly half attackers.
+        let attackers: u32 = t.labels.iter().sum();
+        assert!((150..350).contains(&attackers), "attackers={attackers}");
+    }
+
+    #[test]
+    fn attacker_ips_in_subnets_benign_outside() {
+        let ddos = test_ddos();
+        let mut gen = TraceGenerator::new(7);
+        for _ in 0..100 {
+            assert_eq!(ddos.label(gen.attacker_ip(&ddos)), 1);
+            assert_eq!(ddos.label(gen.benign_ip(&ddos)), 0);
+        }
+    }
+
+    #[test]
+    fn trace_is_deterministic_per_seed() {
+        let ddos = test_ddos();
+        let t1 = TraceGenerator::new(9).generate(&TraceKind::Ddos { ddos: ddos.clone() }, 50);
+        let t2 = TraceGenerator::new(9).generate(&TraceKind::Ddos { ddos }, 50);
+        assert_eq!(t1.keys, t2.keys);
+        assert_eq!(t1.packets, t2.packets);
+    }
+
+    #[test]
+    fn zipf_concentrates_mass() {
+        let mut gen = TraceGenerator::new(3);
+        let t = gen.generate(&TraceKind::ZipfFlows { n_flows: 100 }, 2000);
+        let mut counts = std::collections::HashMap::new();
+        for k in &t.keys {
+            *counts.entry(*k).or_insert(0usize) += 1;
+        }
+        let max = counts.values().max().copied().unwrap();
+        // Rank-1 flow carries ~1/H(100) ≈ 19% of traffic.
+        assert!(max > 2000 / 10, "max flow count {max}");
+    }
+
+    #[test]
+    fn activation_payload_width() {
+        let mut gen = TraceGenerator::new(5);
+        let t = gen.generate(&TraceKind::RandomActivations { n_bits: 128 }, 3);
+        let expected = crate::net::N2NET_PAYLOAD_OFFSET + 16;
+        assert!(t.packets.iter().all(|p| p.len() == expected));
+    }
+}

@@ -1,0 +1,488 @@
+//! The action ALU: the micro-op ISA of one RISC action processor.
+//!
+//! The paper (§2): *"these processors implement only simple operations,
+//! such as bitwise logic, shifts and simple arithmetic (e.g., increment,
+//! sum)"*. That is exactly this ISA — note the **absence** of multiply
+//! and popcount. Two extensions:
+//!
+//! * [`AluOp::Popcnt`] — the §3-Challenges hardware proposal ("a simple
+//!   POPCNT primitive on 32b operands requires few additional logic
+//!   gates"). Only legal when `ChipConfig::native_popcnt` is set; the
+//!   default RMT config rejects programs that use it.
+//! * [`MicroOp::Gather`] — bit concatenation used by the paper's
+//!   1-element *folding* step. In hardware this is wiring (the deparser /
+//!   crossbar reassembles the PHV every stage anyway), not arithmetic;
+//!   we charge one VLIW op slot per *source* bit against the element's
+//!   224-op budget, so it is not a free lunch.
+
+use super::phv::{ContainerId, Phv, PhvConfig};
+use crate::error::{Error, Result};
+
+/// An operand: a PHV container, a static immediate (configuration
+/// constant), or a word of the *action data* returned by the element's
+/// match stage (e.g. a neuron's packed weight word selected per-packet —
+/// the multi-model extension).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Src {
+    Container(ContainerId),
+    Imm(u32),
+    ActionData(u16),
+}
+
+impl Src {
+    #[inline]
+    fn eval(self, phv: &Phv, action_data: &[u32]) -> u32 {
+        match self {
+            Src::Container(id) => phv.read(id),
+            Src::Imm(v) => v,
+            // Out-of-range action data reads as 0 (validated statically;
+            // the runtime check would be dead weight on the hot path).
+            Src::ActionData(i) => action_data.get(i as usize).copied().unwrap_or(0),
+        }
+    }
+}
+
+impl std::fmt::Display for Src {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Src::Container(id) => write!(f, "{id}"),
+            Src::Imm(v) => write!(f, "{v:#x}"),
+            Src::ActionData(i) => write!(f, "ad[{i}]"),
+        }
+    }
+}
+
+/// Binary/unary ALU functions available to an action processor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AluOp {
+    /// dst = a
+    Mov,
+    /// dst = !a
+    Not,
+    /// dst = a & b
+    And,
+    /// dst = a | b
+    Or,
+    /// dst = a ^ b
+    Xor,
+    /// dst = !(a ^ b) — the BNN multiply
+    Xnor,
+    /// dst = a << b (b < 32; larger shifts yield 0, like hardware)
+    Shl,
+    /// dst = a >> b (logical)
+    Shr,
+    /// dst = a + b (wrapping — containers are fixed-width registers)
+    Add,
+    /// dst = a - b (wrapping)
+    Sub,
+    /// dst = (a >= b) ? 1 : 0 (unsigned) — the SIGN step's comparator
+    SetGe,
+    /// dst = min(a, b) (unsigned)
+    Min,
+    /// dst = max(a, b) (unsigned)
+    Max,
+    /// dst = popcount(a & b) — §3 hardware extension, gated by chip
+    /// config. `b` is the operand mask (a popcount unit over a bit-slice
+    /// is the same wiring as the full-width one).
+    Popcnt,
+}
+
+impl AluOp {
+    /// Does this op read the `b` operand?
+    pub fn uses_b(self) -> bool {
+        !matches!(self, AluOp::Mov | AluOp::Not)
+    }
+
+    /// Pure evaluation.
+    #[inline]
+    pub fn eval(self, a: u32, b: u32) -> u32 {
+        match self {
+            AluOp::Mov => a,
+            AluOp::Not => !a,
+            AluOp::And => a & b,
+            AluOp::Or => a | b,
+            AluOp::Xor => a ^ b,
+            AluOp::Xnor => !(a ^ b),
+            AluOp::Shl => {
+                if b >= 32 {
+                    0
+                } else {
+                    a << b
+                }
+            }
+            AluOp::Shr => {
+                if b >= 32 {
+                    0
+                } else {
+                    a >> b
+                }
+            }
+            AluOp::Add => a.wrapping_add(b),
+            AluOp::Sub => a.wrapping_sub(b),
+            AluOp::SetGe => (a >= b) as u32,
+            AluOp::Min => a.min(b),
+            AluOp::Max => a.max(b),
+            AluOp::Popcnt => (a & b).count_ones(),
+        }
+    }
+}
+
+/// One source bit of a gather: take the LSB of `from`, place at `bit`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GatherSrc {
+    pub from: ContainerId,
+    pub bit: u8,
+}
+
+/// One VLIW micro-op: computes a value and writes one container.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MicroOp {
+    /// dst = op(a, b)
+    Alu {
+        dst: ContainerId,
+        op: AluOp,
+        a: Src,
+        b: Src,
+    },
+    /// dst = (a >> shift) & mask — field extraction. RMT action units
+    /// (and Tofino's) combine a barrel shift with a mask in one
+    /// operation; the paper's POPCNT mask-level relies on it ("the first
+    /// element performs shift/bitwise AND in parallel on the two copies").
+    ShrAnd {
+        dst: ContainerId,
+        a: Src,
+        shift: u8,
+        mask: u32,
+    },
+    /// dst = acc + ((a >> bit) & 1) — ARM-style add-with-shifted-operand,
+    /// used only by the *naive* unrolled POPCNT baseline (paper §2:
+    /// "a naive implementation using an unrolled for cycle").
+    AddExtract {
+        dst: ContainerId,
+        acc: Src,
+        a: Src,
+        bit: u8,
+    },
+    /// dst = OR over srcs of (LSB(src.from) << src.bit) — the folding
+    /// step. `accumulate` additionally ORs the previous dst value
+    /// (multi-round layers building one output vector across rounds).
+    Gather {
+        dst: ContainerId,
+        srcs: Vec<GatherSrc>,
+        accumulate: bool,
+    },
+}
+
+impl MicroOp {
+    /// Convenience constructor for ALU forms.
+    pub fn alu(dst: ContainerId, op: AluOp, a: Src, b: Src) -> Self {
+        MicroOp::Alu { dst, op, a, b }
+    }
+
+    /// Destination container.
+    pub fn dst(&self) -> ContainerId {
+        match self {
+            MicroOp::Alu { dst, .. }
+            | MicroOp::ShrAnd { dst, .. }
+            | MicroOp::AddExtract { dst, .. }
+            | MicroOp::Gather { dst, .. } => *dst,
+        }
+    }
+
+    /// VLIW op-slot cost against the per-element budget: ALU ops cost 1,
+    /// a gather costs one slot per source bit (each source occupies a
+    /// crossbar read port).
+    pub fn slot_cost(&self) -> usize {
+        match self {
+            MicroOp::Alu { .. } | MicroOp::ShrAnd { .. } | MicroOp::AddExtract { .. } => 1,
+            MicroOp::Gather { srcs, .. } => srcs.len().max(1),
+        }
+    }
+
+    /// Containers this op reads.
+    pub fn reads(&self) -> Vec<ContainerId> {
+        let push_src = |v: &mut Vec<ContainerId>, s: &Src| {
+            if let Src::Container(id) = s {
+                v.push(*id);
+            }
+        };
+        match self {
+            MicroOp::Alu { op, a, b, .. } => {
+                let mut v = Vec::new();
+                push_src(&mut v, a);
+                if op.uses_b() {
+                    push_src(&mut v, b);
+                }
+                v
+            }
+            MicroOp::ShrAnd { a, .. } => {
+                let mut v = Vec::new();
+                push_src(&mut v, a);
+                v
+            }
+            MicroOp::AddExtract { acc, a, .. } => {
+                let mut v = Vec::new();
+                push_src(&mut v, acc);
+                push_src(&mut v, a);
+                v
+            }
+            MicroOp::Gather { dst, srcs, accumulate } => {
+                let mut v: Vec<ContainerId> = srcs.iter().map(|s| s.from).collect();
+                if *accumulate {
+                    v.push(*dst);
+                }
+                v
+            }
+        }
+    }
+
+    /// Evaluate against the element's *input* PHV snapshot and the action
+    /// data selected by its match stage.
+    #[inline]
+    pub fn eval(&self, phv: &Phv, action_data: &[u32]) -> u32 {
+        match self {
+            MicroOp::Alu { op, a, b, .. } => {
+                op.eval(a.eval(phv, action_data), b.eval(phv, action_data))
+            }
+            MicroOp::ShrAnd { a, shift, mask, .. } => {
+                let v = a.eval(phv, action_data);
+                (if *shift >= 32 { 0 } else { v >> shift }) & mask
+            }
+            MicroOp::AddExtract { acc, a, bit, .. } => {
+                let av = a.eval(phv, action_data);
+                acc.eval(phv, action_data)
+                    .wrapping_add((av >> bit) & 1)
+            }
+            MicroOp::Gather { dst, srcs, accumulate } => {
+                let mut v = if *accumulate { phv.read(*dst) } else { 0 };
+                for s in srcs {
+                    v |= (phv.read(s.from) & 1) << s.bit;
+                }
+                v
+            }
+        }
+    }
+
+    /// Highest action-data index referenced (for static validation).
+    pub fn max_action_data_idx(&self) -> Option<u16> {
+        let idx = |s: &Src| match s {
+            Src::ActionData(i) => Some(*i),
+            _ => None,
+        };
+        let max2 = |x: Option<u16>, y: Option<u16>| match (x, y) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, None) => a,
+            (None, b) => b,
+        };
+        match self {
+            MicroOp::Alu { op, a, b, .. } => {
+                let mut m = idx(a);
+                if op.uses_b() {
+                    m = max2(m, idx(b));
+                }
+                m
+            }
+            MicroOp::ShrAnd { a, .. } => idx(a),
+            MicroOp::AddExtract { acc, a, .. } => max2(idx(acc), idx(a)),
+            MicroOp::Gather { .. } => None,
+        }
+    }
+
+    /// Static checks against a PHV config (`native_popcnt` gates Popcnt).
+    pub fn validate(&self, config: &PhvConfig, native_popcnt: bool) -> Result<()> {
+        match self {
+            MicroOp::Alu { dst, op, a, b } => {
+                config.check(*dst)?;
+                if let Src::Container(id) = a {
+                    config.check(*id)?;
+                }
+                if op.uses_b() {
+                    if let Src::Container(id) = b {
+                        config.check(*id)?;
+                    }
+                }
+                if *op == AluOp::Popcnt && !native_popcnt {
+                    return Err(Error::IllegalProgram(
+                        "Popcnt is not an RMT primitive (enable the §3 \
+                         hardware extension via ChipConfig::rmt_with_popcnt)"
+                            .into(),
+                    ));
+                }
+                Ok(())
+            }
+            MicroOp::ShrAnd { dst, a, shift, .. } => {
+                config.check(*dst)?;
+                if let Src::Container(id) = a {
+                    config.check(*id)?;
+                }
+                if *shift >= 32 {
+                    return Err(Error::IllegalProgram(format!(
+                        "ShrAnd shift {shift} >= 32"
+                    )));
+                }
+                Ok(())
+            }
+            MicroOp::AddExtract { dst, acc, a, bit } => {
+                config.check(*dst)?;
+                for s in [acc, a] {
+                    if let Src::Container(id) = s {
+                        config.check(*id)?;
+                    }
+                }
+                if *bit >= 32 {
+                    return Err(Error::IllegalProgram(format!(
+                        "AddExtract bit {bit} >= 32"
+                    )));
+                }
+                Ok(())
+            }
+            MicroOp::Gather { dst, srcs, .. } => {
+                config.check(*dst)?;
+                if srcs.is_empty() {
+                    return Err(Error::IllegalProgram("empty gather".into()));
+                }
+                for s in srcs {
+                    config.check(s.from)?;
+                    if s.bit as usize >= config.width(*dst) as usize {
+                        return Err(Error::IllegalProgram(format!(
+                            "gather bit {} exceeds {} width",
+                            s.bit,
+                            config.width(*dst)
+                        )));
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for MicroOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MicroOp::Alu { dst, op, a, b } => {
+                if op.uses_b() {
+                    write!(f, "{dst} = {op:?}({a}, {b})")
+                } else {
+                    write!(f, "{dst} = {op:?}({a})")
+                }
+            }
+            MicroOp::ShrAnd { dst, a, shift, mask } => {
+                write!(f, "{dst} = ({a} >> {shift}) & {mask:#x}")
+            }
+            MicroOp::AddExtract { dst, acc, a, bit } => {
+                write!(f, "{dst} = {acc} + {a}[{bit}]")
+            }
+            MicroOp::Gather { dst, srcs, accumulate } => {
+                write!(f, "{dst} {}= gather(", if *accumulate { "|" } else { "" })?;
+                for (i, s) in srcs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{}[0]->{}", s.from, s.bit)?;
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alu_semantics() {
+        assert_eq!(AluOp::Xnor.eval(0b1100, 0b1010), !(0b1100u32 ^ 0b1010));
+        assert_eq!(AluOp::Add.eval(u32::MAX, 1), 0); // wrapping
+        assert_eq!(AluOp::Shl.eval(1, 35), 0); // oversized shift -> 0
+        assert_eq!(AluOp::Shr.eval(0x80000000, 31), 1);
+        assert_eq!(AluOp::SetGe.eval(5, 5), 1);
+        assert_eq!(AluOp::SetGe.eval(4, 5), 0);
+        assert_eq!(AluOp::Popcnt.eval(0xF0F0F0F0, u32::MAX), 16);
+        assert_eq!(AluOp::Popcnt.eval(0xF0F0F0F0, 0xFFFF), 8); // masked slice
+        assert_eq!(AluOp::Min.eval(3, 9), 3);
+        assert_eq!(AluOp::Max.eval(3, 9), 9);
+        assert_eq!(AluOp::Sub.eval(0, 1), u32::MAX);
+    }
+
+    #[test]
+    fn popcnt_gated_by_config() {
+        let c = PhvConfig::uniform32();
+        let op = MicroOp::alu(
+            ContainerId(0),
+            AluOp::Popcnt,
+            Src::Container(ContainerId(1)),
+            Src::Imm(0),
+        );
+        assert!(op.validate(&c, false).is_err());
+        assert!(op.validate(&c, true).is_ok());
+    }
+
+    #[test]
+    fn gather_eval_and_cost() {
+        let c = PhvConfig::uniform32();
+        let mut phv = Phv::zeroed(&c);
+        phv.write(ContainerId(1), 1, &c);
+        phv.write(ContainerId(2), 0, &c);
+        phv.write(ContainerId(3), 0xFFFF_FFFF, &c); // LSB = 1
+        let g = MicroOp::Gather {
+            dst: ContainerId(0),
+            srcs: vec![
+                GatherSrc { from: ContainerId(1), bit: 0 },
+                GatherSrc { from: ContainerId(2), bit: 1 },
+                GatherSrc { from: ContainerId(3), bit: 5 },
+            ],
+            accumulate: false,
+        };
+        assert_eq!(g.eval(&phv, &[]), 0b100001);
+        assert_eq!(g.slot_cost(), 3);
+        assert!(g.validate(&c, false).is_ok());
+    }
+
+    #[test]
+    fn gather_bit_bounds_checked() {
+        let c = PhvConfig::rmt_mixed();
+        // dst is an 8-bit container; bit 9 must be rejected.
+        let g = MicroOp::Gather {
+            dst: ContainerId(0),
+            srcs: vec![GatherSrc { from: ContainerId(160), bit: 9 }],
+            accumulate: false,
+        };
+        assert!(g.validate(&c, false).is_err());
+    }
+
+    #[test]
+    fn reads_tracking() {
+        let op = MicroOp::alu(
+            ContainerId(0),
+            AluOp::Add,
+            Src::Container(ContainerId(1)),
+            Src::Container(ContainerId(2)),
+        );
+        assert_eq!(op.reads(), vec![ContainerId(1), ContainerId(2)]);
+        let mov = MicroOp::alu(
+            ContainerId(0),
+            AluOp::Mov,
+            Src::Container(ContainerId(1)),
+            Src::Container(ContainerId(9)), // b unused by Mov
+        );
+        assert_eq!(mov.reads(), vec![ContainerId(1)]);
+    }
+
+    #[test]
+    fn action_data_src() {
+        let c = PhvConfig::uniform32();
+        let phv = Phv::zeroed(&c);
+        let op = MicroOp::alu(
+            ContainerId(0),
+            AluOp::Xnor,
+            Src::Container(ContainerId(1)),
+            Src::ActionData(1),
+        );
+        assert_eq!(op.eval(&phv, &[0xAAAA, 0x5555]), !(0u32 ^ 0x5555));
+        assert_eq!(op.max_action_data_idx(), Some(1));
+        // Missing action data reads as 0.
+        assert_eq!(op.eval(&phv, &[]), !0u32);
+    }
+}

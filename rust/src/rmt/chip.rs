@@ -1,0 +1,120 @@
+//! Chip-level architectural parameters and the timing model.
+//!
+//! Numbers are the paper's (§2): 32 pipeline elements, 224 parallel
+//! operations per element, 512 B PHV, 960 M packets/s line rate. SRAM
+//! per element follows the RMT paper's provisioning (~11.3 Mb/stage).
+
+use super::phv::PhvConfig;
+use super::program::Program;
+
+/// Static configuration of a switching chip.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChipConfig {
+    /// Physical match-action elements in the pipeline (paper: 32).
+    pub n_elements: usize,
+    /// VLIW op-slot budget per element (paper: 224 parallel operations).
+    pub max_ops_per_element: usize,
+    /// PHV layout (default: 128 × 32 b = 512 B).
+    pub phv: PhvConfig,
+    /// Pipeline clock; 1 packet/cycle ⇒ 960 Mpps (paper §2 Evaluation).
+    pub clock_hz: f64,
+    /// SRAM available to each element's match stage, in bits.
+    /// RMT: 370 Mb total across 32 stages ≈ 11.56 Mb/stage.
+    pub sram_bits_per_element: usize,
+    /// §3 hardware extension: native 32-bit POPCNT primitive.
+    pub native_popcnt: bool,
+}
+
+impl ChipConfig {
+    /// The paper's baseline RMT chip.
+    pub fn rmt() -> Self {
+        Self {
+            n_elements: 32,
+            max_ops_per_element: 224,
+            phv: PhvConfig::uniform32(),
+            clock_hz: 960e6,
+            sram_bits_per_element: 370_000_000 / 32,
+            native_popcnt: false,
+        }
+    }
+
+    /// The §3-Challenges proposal: same chip + a 32 b POPCNT primitive.
+    /// (Its second consequence — no duplication step, so 2× parallel
+    /// neurons — falls out of the compiler not needing the B copy.)
+    pub fn rmt_with_popcnt() -> Self {
+        Self { native_popcnt: true, ..Self::rmt() }
+    }
+
+    /// Authentic mixed-container PHV variant (experiments).
+    pub fn rmt_mixed_phv() -> Self {
+        Self { phv: PhvConfig::rmt_mixed(), ..Self::rmt() }
+    }
+
+    /// Line rate in packets/second (fully pipelined, 1 pkt/cycle).
+    pub fn line_rate_pps(&self) -> f64 {
+        self.clock_hz
+    }
+
+    /// Timing of a program on this chip.
+    pub fn timing(&self, program: &Program) -> TimingReport {
+        let passes = program.passes(self);
+        let pps = self.line_rate_pps() / passes as f64;
+        TimingReport {
+            elements: program.n_elements(),
+            passes,
+            pps,
+            latency_ns: program.n_elements() as f64 / self.clock_hz * 1e9,
+        }
+    }
+}
+
+/// Modeled line-rate performance of a program.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimingReport {
+    /// Elements the program occupies (across passes).
+    pub elements: usize,
+    /// Recirculation passes.
+    pub passes: usize,
+    /// Sustained packets/second (line rate / passes).
+    pub pps: f64,
+    /// Per-packet pipeline latency (1 cycle/element).
+    pub latency_ns: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmt::element::Element;
+    use crate::rmt::program::StepKind;
+
+    #[test]
+    fn paper_constants() {
+        let c = ChipConfig::rmt();
+        assert_eq!(c.n_elements, 32);
+        assert_eq!(c.max_ops_per_element, 224);
+        assert_eq!(c.phv.total_bits(), 4096);
+        assert_eq!(c.line_rate_pps(), 960e6); // paper: 960 Mpps
+        assert!(!c.native_popcnt);
+        assert!(ChipConfig::rmt_with_popcnt().native_popcnt);
+    }
+
+    #[test]
+    fn timing_model() {
+        let c = ChipConfig::rmt();
+        let mk = |n: usize| {
+            Program::new(
+                (0..n)
+                    .map(|i| Element::new(format!("e{i}"), StepKind::Other, vec![]))
+                    .collect(),
+            )
+        };
+        let t = c.timing(&mk(14));
+        assert_eq!(t.passes, 1);
+        assert_eq!(t.pps, 960e6);
+        assert!((t.latency_ns - 14.0 / 960e6 * 1e9).abs() < 1e-9);
+        // 40 elements -> 2 passes -> half line rate.
+        let t2 = c.timing(&mk(40));
+        assert_eq!(t2.passes, 2);
+        assert_eq!(t2.pps, 480e6);
+    }
+}

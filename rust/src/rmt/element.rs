@@ -1,0 +1,219 @@
+//! One match-action pipeline element: optional table lookup, then a VLIW
+//! action word with **snapshot semantics** — every micro-op reads the
+//! element's *input* PHV, all writes land together at the element's
+//! output (this is how real RMT stages behave: the action units operate
+//! in parallel on the stage's input crossbar).
+//!
+//! Constraints enforced here (paper §2 Evaluation): at most one write
+//! per container per element, and at most `max_ops` (224) op slots.
+
+use super::alu::MicroOp;
+use super::phv::{Phv, PhvConfig};
+use super::program::StepKind;
+use super::table::MatchStage;
+use crate::error::{Error, Result};
+
+/// A configured pipeline element.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Element {
+    /// Human-readable label, e.g. `"L0/popcnt-lvl2/sum"` (Fig. 2 traces).
+    pub label: String,
+    /// Which of the paper's five steps this element implements.
+    pub step: StepKind,
+    /// Optional match stage supplying action data.
+    pub match_stage: Option<MatchStage>,
+    /// The VLIW action word.
+    pub ops: Vec<MicroOp>,
+}
+
+impl Element {
+    /// Table-less element.
+    pub fn new(label: impl Into<String>, step: StepKind, ops: Vec<MicroOp>) -> Self {
+        Self { label: label.into(), step, match_stage: None, ops }
+    }
+
+    /// Element with a match stage.
+    pub fn with_table(
+        label: impl Into<String>,
+        step: StepKind,
+        table: MatchStage,
+        ops: Vec<MicroOp>,
+    ) -> Self {
+        Self { label: label.into(), step, match_stage: Some(table), ops }
+    }
+
+    /// Total VLIW op-slot cost.
+    pub fn slot_cost(&self) -> usize {
+        self.ops.iter().map(MicroOp::slot_cost).sum()
+    }
+
+    /// SRAM bits this element's table consumes.
+    pub fn sram_bits(&self, config: &PhvConfig) -> usize {
+        self.match_stage.as_ref().map_or(0, |t| t.sram_bits(config))
+    }
+
+    /// Static legality: container ranges, write-once, op budget,
+    /// popcnt gating, action-data arity.
+    pub fn validate(
+        &self,
+        config: &PhvConfig,
+        max_ops: usize,
+        native_popcnt: bool,
+    ) -> Result<()> {
+        if let Some(t) = &self.match_stage {
+            t.validate(config)?;
+        }
+        let cost = self.slot_cost();
+        if cost > max_ops {
+            return Err(Error::IllegalProgram(format!(
+                "element {:?}: {cost} op slots > budget {max_ops}",
+                self.label
+            )));
+        }
+        let mut written = vec![false; config.n_containers()];
+        for op in &self.ops {
+            op.validate(config, native_popcnt)?;
+            let d = op.dst().index();
+            if written[d] {
+                return Err(Error::IllegalProgram(format!(
+                    "element {:?}: container c{d} written twice (one op per \
+                     field per element, paper §2)",
+                    self.label
+                )));
+            }
+            written[d] = true;
+            // Action-data references must be satisfiable by the table.
+            if let Some(maxi) = op.max_action_data_idx() {
+                let arity = self
+                    .match_stage
+                    .as_ref()
+                    .map(|t| t.default_action_data.len())
+                    .unwrap_or(0);
+                if (maxi as usize) >= arity {
+                    return Err(Error::IllegalProgram(format!(
+                        "element {:?}: op reads ad[{maxi}] but action-data \
+                         arity is {arity}",
+                        self.label
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute on a PHV (reads snapshot, commits all writes at once).
+    ///
+    /// `scratch` is a reusable buffer of (dst, value) pairs to keep the
+    /// hot path allocation-free.
+    pub fn execute(
+        &self,
+        phv: &mut Phv,
+        config: &PhvConfig,
+        scratch: &mut Vec<(u16, u32)>,
+    ) {
+        let empty: &[u32] = &[];
+        let action_data = match &self.match_stage {
+            Some(t) => t.lookup(phv),
+            None => empty,
+        };
+        scratch.clear();
+        for op in &self.ops {
+            scratch.push((op.dst().0, op.eval(phv, action_data)));
+        }
+        for &(dst, v) in scratch.iter() {
+            phv.write(super::phv::ContainerId(dst), v, config);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmt::alu::{AluOp, Src};
+    use crate::rmt::phv::ContainerId;
+    use crate::rmt::table::TableEntry;
+
+    fn cfg() -> PhvConfig {
+        PhvConfig::uniform32()
+    }
+
+    #[test]
+    fn snapshot_semantics_swap() {
+        // Classic VLIW test: swap two containers in ONE element.
+        let c = cfg();
+        let e = Element::new(
+            "swap",
+            StepKind::Other,
+            vec![
+                MicroOp::alu(ContainerId(0), AluOp::Mov, Src::Container(ContainerId(1)), Src::Imm(0)),
+                MicroOp::alu(ContainerId(1), AluOp::Mov, Src::Container(ContainerId(0)), Src::Imm(0)),
+            ],
+        );
+        let mut phv = Phv::zeroed(&c);
+        phv.write(ContainerId(0), 0xAAAA, &c);
+        phv.write(ContainerId(1), 0x5555, &c);
+        let mut scratch = Vec::new();
+        e.execute(&mut phv, &c, &mut scratch);
+        assert_eq!(phv.read(ContainerId(0)), 0x5555);
+        assert_eq!(phv.read(ContainerId(1)), 0xAAAA);
+    }
+
+    #[test]
+    fn write_once_enforced() {
+        let c = cfg();
+        let e = Element::new(
+            "double-write",
+            StepKind::Other,
+            vec![
+                MicroOp::alu(ContainerId(0), AluOp::Mov, Src::Imm(1), Src::Imm(0)),
+                MicroOp::alu(ContainerId(0), AluOp::Mov, Src::Imm(2), Src::Imm(0)),
+            ],
+        );
+        assert!(e.validate(&c, 224, false).is_err());
+    }
+
+    #[test]
+    fn op_budget_enforced() {
+        let c = cfg();
+        let ops: Vec<MicroOp> = (0..128)
+            .map(|i| MicroOp::alu(ContainerId(i), AluOp::Mov, Src::Imm(1), Src::Imm(0)))
+            .collect();
+        let e = Element::new("wide", StepKind::Other, ops);
+        assert!(e.validate(&c, 224, false).is_ok());
+        assert!(e.validate(&c, 100, false).is_err());
+        assert_eq!(e.slot_cost(), 128);
+    }
+
+    #[test]
+    fn table_action_data_flows_to_ops() {
+        let c = cfg();
+        let mut t = MatchStage::new(vec![ContainerId(10)], vec![0xDEAD]);
+        t.insert(TableEntry { key: vec![7], action_data: vec![0xBEEF] }).unwrap();
+        let e = Element::with_table(
+            "lookup",
+            StepKind::Other,
+            t,
+            vec![MicroOp::alu(ContainerId(0), AluOp::Mov, Src::ActionData(0), Src::Imm(0))],
+        );
+        assert!(e.validate(&c, 224, false).is_ok());
+        let mut phv = Phv::zeroed(&c);
+        let mut scratch = Vec::new();
+        phv.write(ContainerId(10), 7, &c);
+        e.execute(&mut phv, &c, &mut scratch);
+        assert_eq!(phv.read(ContainerId(0)), 0xBEEF); // hit
+        phv.write(ContainerId(10), 8, &c);
+        e.execute(&mut phv, &c, &mut scratch);
+        assert_eq!(phv.read(ContainerId(0)), 0xDEAD); // miss -> default
+    }
+
+    #[test]
+    fn action_data_arity_validated() {
+        let c = cfg();
+        let e = Element::new(
+            "no-table-but-ad",
+            StepKind::Other,
+            vec![MicroOp::alu(ContainerId(0), AluOp::Mov, Src::ActionData(0), Src::Imm(0))],
+        );
+        assert!(e.validate(&c, 224, false).is_err());
+    }
+}

@@ -1,0 +1,874 @@
+//! Precompiled pipeline executor — the §Perf hot path (DESIGN.md §9).
+//!
+//! [`super::element::Element::execute`] interprets `MicroOp` enums with
+//! a scratch-commit per element; that is the *reference* executor (unit
+//! tests exercise it directly). This module compiles a validated
+//! [`Program`] once into a flat tape of 16-byte POD ops and runs that
+//! instead:
+//!
+//! * operands pre-resolved: action data from **keyless** match stages
+//!   (how the N2Net compiler stores weights) is folded into immediates
+//!   at build time — no lookup, no indirection per packet;
+//! * peephole fusion of the schedule's duplicated-write pairs
+//!   (`XNOR`+dup, `SUM`+dup) into single two-destination ops, which also
+//!   makes their elements dependency-free;
+//! * per element, ops are topologically ordered so every read happens
+//!   before its source container is overwritten; elements where that
+//!   succeeds stream writes directly into the PHV (no scratch). Elements
+//!   with dependency cycles or keyed tables fall back to a two-phase
+//!   value-slab commit (still allocation-free).
+//!
+//! Equivalence with the reference executor is enforced by unit tests
+//! here and by every integration/property test (the `Pipeline` runs
+//! this executor).
+
+use super::alu::{AluOp, MicroOp, Src};
+use super::chip::ChipConfig;
+use super::phv::Phv;
+use super::program::Program;
+
+/// Dense opcodes for the flat tape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+enum Op {
+    Mov = 0,
+    Not,
+    And,
+    Or,
+    Xor,
+    Xnor,
+    Shl,
+    Shr,
+    Add,
+    Sub,
+    SetGe,
+    Min,
+    Max,
+    Popcnt,
+    /// dst = (a >> shift) & mask   (shift packed in `b_aux`)
+    ShrAnd,
+    /// dst = acc + ((a >> bit) & 1) (bit packed in `b_aux`; acc is `a2`)
+    AddExtract,
+    /// dst = [accumulate? old dst] | OR of gather side-table slice
+    Gather,
+    /// Fused: dst = !(a ^ b); dst2 = same value (XNOR + duplication)
+    XnorDup2,
+    /// Fused: dst = a + b; dst2 = same value (POPCNT sum + duplication)
+    AddDup2,
+}
+
+/// Operand kinds after resolution.
+const K_CONT: u8 = 0;
+const K_IMM: u8 = 1;
+const K_AD: u8 = 2; // action data (keyed tables only)
+
+/// One flat op. 20 bytes, POD, contiguous.
+#[derive(Clone, Copy, Debug)]
+struct FlatOp {
+    op: Op,
+    a_kind: u8,
+    b_kind: u8,
+    b_aux: u8, // shift / bit / accumulate flag
+    dst: u16,
+    dst2: u16, // fused second destination (or dst)
+    a: u32,    // container index or immediate
+    b: u32,
+}
+
+/// Gather side table entry range is stored in (a = offset, b = len).
+#[derive(Clone, Copy, Debug)]
+struct GatherSrcFlat {
+    from: u16,
+    bit: u8,
+}
+
+/// How a run fetches its `b` operand.
+#[derive(Clone, Copy, Debug)]
+enum RunB {
+    /// Strided container: `b0 + i·sb`.
+    Cont { b0: u32, sb: i32 },
+    /// Per-iteration immediates at `b_vals[off + i]`.
+    Imms { off: u32 },
+}
+
+/// A strided homogeneous op run — the N2Net schedule emits its per-
+/// neuron work as long arithmetic progressions over containers, which
+/// execute here as tight loops with the opcode match hoisted out.
+#[derive(Clone, Copy, Debug)]
+struct Run {
+    op: Op,
+    n: u32,
+    a0: u32,
+    sa: i32,
+    b: RunB,
+    d0: u32,
+    sd: i32,
+    d20: u32,
+    sd2: i32,
+    b_aux: u8,
+}
+
+/// Execution chunk of an element.
+enum Seg {
+    /// Generic tape slice `[start, end)`.
+    Ops(u32, u32),
+    /// Vectorized run.
+    Run(Run),
+}
+
+/// One compiled element.
+struct FlatElement {
+    /// Range into `ops`.
+    start: u32,
+    end: u32,
+    /// Segments (only used when `stream`; runs need direct writes).
+    segs: Vec<Seg>,
+    /// Writes can stream directly into the PHV (dependency-ordered).
+    stream: bool,
+    /// Index into `tables` when the element has a keyed match stage.
+    table: Option<u32>,
+}
+
+/// A compiled, executable pipeline program.
+pub struct CompiledProgram {
+    ops: Vec<FlatOp>,
+    gather_srcs: Vec<GatherSrcFlat>,
+    elements: Vec<FlatElement>,
+    /// Keyed match stages (rare path), cloned from the program.
+    tables: Vec<super::table::MatchStage>,
+    /// Two-phase scratch: values + destination ids, sized to the widest
+    /// element.
+    slab: Vec<u32>,
+    /// Per-container write masks (uniform lookup, no match on width).
+    masks: Vec<u32>,
+    /// All containers are full 32-bit (the default uniform PHV): skip
+    /// write masking entirely.
+    no_masking: bool,
+    /// Per-iteration `b` immediates for runs (e.g. weight words).
+    b_vals: Vec<u32>,
+}
+
+impl CompiledProgram {
+    /// Compile a validated program for a chip.
+    pub fn compile(program: &Program, chip: &ChipConfig) -> Self {
+        let masks: Vec<u32> = (0..chip.phv.n_containers())
+            .map(|i| chip.phv.mask(super::phv::ContainerId(i as u16)))
+            .collect();
+        let mut ops = Vec::new();
+        let mut gather_srcs = Vec::new();
+        let mut elements = Vec::with_capacity(program.elements.len());
+        let mut tables = Vec::new();
+        let mut max_width = 0usize;
+
+        for e in &program.elements {
+            // Keyless match stages: fold their action data into imms.
+            let (baked_ad, table_idx): (Option<&[u32]>, Option<u32>) = match &e.match_stage {
+                None => (None, None),
+                Some(t) if t.key_containers.is_empty() && t.n_entries() == 0 => {
+                    (Some(&t.default_action_data), None)
+                }
+                Some(t) => {
+                    tables.push(t.clone());
+                    (None, Some(tables.len() as u32 - 1))
+                }
+            };
+
+            let start = ops.len() as u32;
+            flatten_element(&e.ops, baked_ad, &mut ops, &mut gather_srcs);
+            fuse_dup_pairs(&mut ops, start as usize);
+            let end = ops.len() as u32;
+            let stream =
+                table_idx.is_none() && order_for_streaming(&mut ops[start as usize..end as usize]);
+            max_width = max_width.max((end - start) as usize);
+            elements.push(FlatElement { start, end, segs: Vec::new(), stream, table: table_idx });
+        }
+
+        let no_masking = masks.iter().all(|&m| m == u32::MAX);
+        // Vectorize: split each streaming element into strided runs +
+        // generic remainders (only profitable on the unmasked PHV —
+        // runs bypass per-container masks).
+        let mut b_vals = Vec::new();
+        if no_masking {
+            for el in &mut elements {
+                if el.stream {
+                    el.segs = segment_runs(
+                        &ops[el.start as usize..el.end as usize],
+                        el.start,
+                        &mut b_vals,
+                    );
+                }
+            }
+        }
+        CompiledProgram {
+            ops,
+            gather_srcs,
+            elements,
+            tables,
+            slab: vec![0; max_width],
+            masks,
+            no_masking,
+            b_vals,
+        }
+    }
+
+    /// Execute the whole program on a PHV.
+    ///
+    /// Safety note: every container index in the tape was validated
+    /// against the PHV size when the program was validated (a
+    /// precondition of [`Self::compile`], enforced by `Pipeline::new`),
+    /// so the inner loop uses unchecked indexing; `debug_assert!`s keep
+    /// the invariant visible in debug builds.
+    #[inline]
+    pub fn run(&mut self, phv: &mut Phv) {
+        let regs = phv.regs_mut();
+        for el in &self.elements {
+            let ops = &self.ops[el.start as usize..el.end as usize];
+            let empty: &[u32] = &[];
+            let ad: &[u32] = match el.table {
+                None => empty,
+                Some(t) => {
+                    let table = &self.tables[t as usize];
+                    lookup_table(table, regs)
+                }
+            };
+            if el.stream {
+                if self.no_masking {
+                    if el.segs.is_empty() {
+                        for op in ops {
+                            let v = eval(op, regs, ad, &self.gather_srcs);
+                            store2_raw(regs, op, v);
+                        }
+                    } else {
+                        for seg in &el.segs {
+                            match seg {
+                                Seg::Run(r) => exec_run(r, regs, &self.b_vals),
+                                Seg::Ops(s, e) => {
+                                    for op in &self.ops[*s as usize..*e as usize] {
+                                        let v = eval(op, regs, ad, &self.gather_srcs);
+                                        store2_raw(regs, op, v);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    for op in ops {
+                        let v = eval(op, regs, ad, &self.gather_srcs);
+                        store2(regs, &self.masks, op, v);
+                    }
+                }
+            } else {
+                for (k, op) in ops.iter().enumerate() {
+                    debug_assert!(k < self.slab.len());
+                    unsafe { *self.slab.get_unchecked_mut(k) = eval(op, regs, ad, &self.gather_srcs) };
+                }
+                for (k, op) in ops.iter().enumerate() {
+                    let v = unsafe { *self.slab.get_unchecked(k) };
+                    store2(regs, &self.masks, op, v);
+                }
+            }
+        }
+    }
+
+    /// Number of elements that stream (perf introspection).
+    pub fn n_streaming(&self) -> usize {
+        self.elements.iter().filter(|e| e.stream).count()
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.elements.len()
+    }
+}
+
+/// Minimum length for a vectorized run.
+const MIN_RUN: usize = 8;
+
+/// Partition a streaming element's tape into strided runs + remainders.
+fn segment_runs(ops: &[FlatOp], base: u32, b_vals: &mut Vec<u32>) -> Vec<Seg> {
+    let mut segs = Vec::new();
+    let mut i = 0usize;
+    let mut plain_start = 0usize;
+    while i < ops.len() {
+        let run_len = max_run_len(&ops[i..]);
+        if run_len >= MIN_RUN {
+            if plain_start < i {
+                segs.push(Seg::Ops(base + plain_start as u32, base + i as u32));
+            }
+            let o0 = &ops[i];
+            let o1 = &ops[i + 1];
+            let b = if o0.b_kind == K_CONT {
+                RunB::Cont { b0: o0.b, sb: o1.b as i32 - o0.b as i32 }
+            } else {
+                let off = b_vals.len() as u32;
+                b_vals.extend(ops[i..i + run_len].iter().map(|o| o.b));
+                RunB::Imms { off }
+            };
+            segs.push(Seg::Run(Run {
+                op: o0.op,
+                n: run_len as u32,
+                a0: o0.a,
+                sa: o1.a as i32 - o0.a as i32,
+                b,
+                d0: o0.dst as u32,
+                sd: o1.dst as i32 - o0.dst as i32,
+                d20: o0.dst2 as u32,
+                sd2: o1.dst2 as i32 - o0.dst2 as i32,
+                b_aux: o0.b_aux,
+            }));
+            i += run_len;
+            plain_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    if plain_start < ops.len() {
+        segs.push(Seg::Ops(base + plain_start as u32, base + ops.len() as u32));
+    }
+    segs
+}
+
+/// Longest strided homogeneous prefix of `ops` (same opcode/kinds/aux,
+/// constant strides on a, dst, dst2, and b-if-container). Gathers and
+/// immediate-`a` ops never vectorize.
+fn max_run_len(ops: &[FlatOp]) -> usize {
+    if ops.len() < 2 {
+        return ops.len().min(1);
+    }
+    let o0 = &ops[0];
+    // Gathers use the side table; Shl/Shr need the >=32 guard; imm-`a`
+    // ops have no strided source. None vectorize.
+    if matches!(o0.op, Op::Gather | Op::Shl | Op::Shr) || o0.a_kind != K_CONT {
+        return 1;
+    }
+    let o1 = &ops[1];
+    let compatible = |x: &FlatOp| {
+        x.op == o0.op && x.a_kind == K_CONT && x.b_kind == o0.b_kind && x.b_aux == o0.b_aux
+    };
+    if !compatible(o1) {
+        return 1;
+    }
+    let sa = o1.a as i64 - o0.a as i64;
+    let sd = o1.dst as i64 - o0.dst as i64;
+    let sd2 = o1.dst2 as i64 - o0.dst2 as i64;
+    let sb = o1.b as i64 - o0.b as i64;
+    let mut n = 2usize;
+    while n < ops.len() {
+        let p = &ops[n - 1];
+        let c = &ops[n];
+        if !compatible(c)
+            || c.a as i64 - p.a as i64 != sa
+            || c.dst as i64 - p.dst as i64 != sd
+            || c.dst2 as i64 - p.dst2 as i64 != sd2
+            || (o0.b_kind == K_CONT && c.b as i64 - p.b as i64 != sb)
+        {
+            break;
+        }
+        n += 1;
+    }
+    n
+}
+
+/// Execute one strided run: the opcode match is hoisted out of the loop.
+#[inline]
+fn exec_run(r: &Run, regs: &mut [u32], b_vals: &[u32]) {
+    macro_rules! go {
+        ($f:expr) => {{
+            let n = r.n as i64;
+            match r.b {
+                RunB::Imms { off } => {
+                    for i in 0..n {
+                        let a = unsafe {
+                            *regs.get_unchecked((r.a0 as i64 + r.sa as i64 * i) as usize)
+                        };
+                        let b = unsafe { *b_vals.get_unchecked((off as i64 + i) as usize) };
+                        let v = $f(a, b);
+                        unsafe {
+                            *regs.get_unchecked_mut((r.d0 as i64 + r.sd as i64 * i) as usize) = v;
+                            *regs.get_unchecked_mut((r.d20 as i64 + r.sd2 as i64 * i) as usize) = v;
+                        }
+                    }
+                }
+                RunB::Cont { b0, sb } => {
+                    for i in 0..n {
+                        let a = unsafe {
+                            *regs.get_unchecked((r.a0 as i64 + r.sa as i64 * i) as usize)
+                        };
+                        let b = unsafe {
+                            *regs.get_unchecked((b0 as i64 + sb as i64 * i) as usize)
+                        };
+                        let v = $f(a, b);
+                        unsafe {
+                            *regs.get_unchecked_mut((r.d0 as i64 + r.sd as i64 * i) as usize) = v;
+                            *regs.get_unchecked_mut((r.d20 as i64 + r.sd2 as i64 * i) as usize) = v;
+                        }
+                    }
+                }
+            }
+        }};
+    }
+    let aux = r.b_aux;
+    match r.op {
+        Op::Mov => go!(|a: u32, _b: u32| a),
+        Op::Not => go!(|a: u32, _b: u32| !a),
+        Op::And => go!(|a: u32, b: u32| a & b),
+        Op::Or => go!(|a: u32, b: u32| a | b),
+        Op::Xor => go!(|a: u32, b: u32| a ^ b),
+        Op::Xnor | Op::XnorDup2 => go!(|a: u32, b: u32| !(a ^ b)),
+        Op::Add | Op::AddDup2 => go!(|a: u32, b: u32| a.wrapping_add(b)),
+        Op::Sub => go!(|a: u32, b: u32| a.wrapping_sub(b)),
+        Op::SetGe => go!(|a: u32, b: u32| (a >= b) as u32),
+        Op::Min => go!(|a: u32, b: u32| a.min(b)),
+        Op::Max => go!(|a: u32, b: u32| a.max(b)),
+        Op::Popcnt => go!(|a: u32, b: u32| (a & b).count_ones()),
+        Op::ShrAnd => go!(|a: u32, b: u32| (a >> aux) & b),
+        Op::AddExtract => go!(|a: u32, b: u32| b.wrapping_add((a >> aux) & 1)),
+        // Oversized Shl/Shr shifts and gathers never form runs (Shl/Shr
+        // are safe to vectorize only with the <32 guard; keep generic).
+        Op::Shl | Op::Shr | Op::Gather => unreachable!("non-vectorizable op in run"),
+    }
+}
+
+/// Unmasked double-store (all-32-bit PHV; indices validated at compile).
+#[inline(always)]
+fn store2_raw(regs: &mut [u32], op: &FlatOp, v: u32) {
+    let d = op.dst as usize;
+    let d2 = op.dst2 as usize;
+    debug_assert!(d < regs.len() && d2 < regs.len());
+    unsafe {
+        *regs.get_unchecked_mut(d) = v;
+        *regs.get_unchecked_mut(d2) = v;
+    }
+}
+
+/// Masked double-store (unchecked: indices validated at compile time).
+#[inline(always)]
+fn store2(regs: &mut [u32], masks: &[u32], op: &FlatOp, v: u32) {
+    let d = op.dst as usize;
+    let d2 = op.dst2 as usize;
+    debug_assert!(d < regs.len() && d2 < regs.len());
+    unsafe {
+        *regs.get_unchecked_mut(d) = v & masks.get_unchecked(d);
+        *regs.get_unchecked_mut(d2) = v & masks.get_unchecked(d2);
+    }
+}
+
+#[cold]
+fn lookup_table<'a>(table: &'a super::table::MatchStage, regs: &[u32]) -> &'a [u32] {
+    // Keyed lookup (rare path, e.g. multi-model selection).
+    let key: Vec<u32> = table
+        .key_containers
+        .iter()
+        .map(|c| regs[c.index()])
+        .collect();
+    table.lookup_key(&key)
+}
+
+#[inline(always)]
+fn operand(kind: u8, raw: u32, regs: &[u32], ad: &[u32]) -> u32 {
+    match kind {
+        K_CONT => {
+            debug_assert!((raw as usize) < regs.len());
+            unsafe { *regs.get_unchecked(raw as usize) }
+        }
+        K_IMM => raw,
+        _ => ad.get(raw as usize).copied().unwrap_or(0),
+    }
+}
+
+#[inline(always)]
+fn eval(op: &FlatOp, regs: &[u32], ad: &[u32], gsrcs: &[GatherSrcFlat]) -> u32 {
+    let a = operand(op.a_kind, op.a, regs, ad);
+    match op.op {
+        Op::Mov => a,
+        Op::Not => !a,
+        Op::Xnor | Op::XnorDup2 => !(a ^ operand(op.b_kind, op.b, regs, ad)),
+        Op::Add | Op::AddDup2 => a.wrapping_add(operand(op.b_kind, op.b, regs, ad)),
+        Op::And => a & operand(op.b_kind, op.b, regs, ad),
+        Op::Or => a | operand(op.b_kind, op.b, regs, ad),
+        Op::Xor => a ^ operand(op.b_kind, op.b, regs, ad),
+        Op::Shl => {
+            let b = operand(op.b_kind, op.b, regs, ad);
+            if b >= 32 {
+                0
+            } else {
+                a << b
+            }
+        }
+        Op::Shr => {
+            let b = operand(op.b_kind, op.b, regs, ad);
+            if b >= 32 {
+                0
+            } else {
+                a >> b
+            }
+        }
+        Op::Sub => a.wrapping_sub(operand(op.b_kind, op.b, regs, ad)),
+        Op::SetGe => (a >= operand(op.b_kind, op.b, regs, ad)) as u32,
+        Op::Min => a.min(operand(op.b_kind, op.b, regs, ad)),
+        Op::Max => a.max(operand(op.b_kind, op.b, regs, ad)),
+        Op::Popcnt => (a & operand(op.b_kind, op.b, regs, ad)).count_ones(),
+        Op::ShrAnd => (a >> op.b_aux) & op.b,
+        Op::AddExtract => {
+            // acc in (b_kind, b); a extracted at bit b_aux.
+            operand(op.b_kind, op.b, regs, ad).wrapping_add((a >> op.b_aux) & 1)
+        }
+        Op::Gather => {
+            let mut v = if op.b_aux != 0 { regs[op.dst as usize] } else { 0 };
+            let s = op.a as usize;
+            let n = op.b as usize;
+            for g in &gsrcs[s..s + n] {
+                v |= (regs[g.from as usize] & 1) << g.bit;
+            }
+            v
+        }
+    }
+}
+
+fn src_flat(s: &Src) -> (u8, u32) {
+    match s {
+        Src::Container(c) => (K_CONT, c.0 as u32),
+        Src::Imm(v) => (K_IMM, *v),
+        Src::ActionData(i) => (K_AD, *i as u32),
+    }
+}
+
+/// Resolve a `Src`, folding baked action data into immediates.
+fn src_resolved(s: &Src, baked: Option<&[u32]>) -> (u8, u32) {
+    match (s, baked) {
+        (Src::ActionData(i), Some(ad)) => {
+            (K_IMM, ad.get(*i as usize).copied().unwrap_or(0))
+        }
+        _ => src_flat(s),
+    }
+}
+
+fn alu_opcode(op: AluOp) -> Op {
+    match op {
+        AluOp::Mov => Op::Mov,
+        AluOp::Not => Op::Not,
+        AluOp::And => Op::And,
+        AluOp::Or => Op::Or,
+        AluOp::Xor => Op::Xor,
+        AluOp::Xnor => Op::Xnor,
+        AluOp::Shl => Op::Shl,
+        AluOp::Shr => Op::Shr,
+        AluOp::Add => Op::Add,
+        AluOp::Sub => Op::Sub,
+        AluOp::SetGe => Op::SetGe,
+        AluOp::Min => Op::Min,
+        AluOp::Max => Op::Max,
+        AluOp::Popcnt => Op::Popcnt,
+    }
+}
+
+fn flatten_element(
+    micro: &[MicroOp],
+    baked: Option<&[u32]>,
+    ops: &mut Vec<FlatOp>,
+    gsrcs: &mut Vec<GatherSrcFlat>,
+) {
+    for m in micro {
+        match m {
+            MicroOp::Alu { dst, op, a, b } => {
+                let (ak, av) = src_resolved(a, baked);
+                let (bk, bv) = if op.uses_b() {
+                    src_resolved(b, baked)
+                } else {
+                    (K_IMM, 0)
+                };
+                ops.push(FlatOp {
+                    op: alu_opcode(*op),
+                    a_kind: ak,
+                    b_kind: bk,
+                    b_aux: 0,
+                    dst: dst.0,
+                    dst2: dst.0,
+                    a: av,
+                    b: bv,
+                });
+            }
+            MicroOp::ShrAnd { dst, a, shift, mask } => {
+                let (ak, av) = src_resolved(a, baked);
+                ops.push(FlatOp {
+                    op: Op::ShrAnd,
+                    a_kind: ak,
+                    b_kind: K_IMM,
+                    b_aux: *shift,
+                    dst: dst.0,
+                    dst2: dst.0,
+                    a: av,
+                    b: *mask,
+                });
+            }
+            MicroOp::AddExtract { dst, acc, a, bit } => {
+                let (ak, av) = src_resolved(a, baked);
+                let (bk, bv) = src_resolved(acc, baked);
+                ops.push(FlatOp {
+                    op: Op::AddExtract,
+                    a_kind: ak,
+                    b_kind: bk,
+                    b_aux: *bit,
+                    dst: dst.0,
+                    dst2: dst.0,
+                    a: av,
+                    b: bv,
+                });
+            }
+            MicroOp::Gather { dst, srcs, accumulate } => {
+                let off = gsrcs.len() as u32;
+                for s in srcs {
+                    gsrcs.push(GatherSrcFlat { from: s.from.0, bit: s.bit });
+                }
+                ops.push(FlatOp {
+                    op: Op::Gather,
+                    a_kind: K_IMM,
+                    b_kind: K_IMM,
+                    b_aux: *accumulate as u8,
+                    dst: dst.0,
+                    dst2: dst.0,
+                    a: off,
+                    b: srcs.len() as u32,
+                });
+            }
+        }
+    }
+}
+
+/// Fuse (op -> dstA) + (same op, same operands -> dstB) pairs that the
+/// N2Net schedule emits for duplication: `Xnor` where the second op
+/// reads the first's dst with identical other operand, and `Add` sum
+/// pairs `A=A+B; B=A+B`.
+fn fuse_dup_pairs(ops: &mut Vec<FlatOp>, start: usize) {
+    let mut out: Vec<FlatOp> = Vec::with_capacity(ops.len() - start);
+    let body = ops.split_off(start);
+    let mut i = 0;
+    while i < body.len() {
+        let cur = body[i];
+        if i + 1 < body.len() {
+            let nxt = body[i + 1];
+            // XNOR dup: cur: d = !(C_a ^ w); nxt: d2 = !(C_d... the
+            // emitted pattern is nxt reading the SAME source container
+            // and weight (schedule emits both from the replica).
+            let same_binary = |x: &FlatOp, y: &FlatOp, op: Op| {
+                x.op == op
+                    && y.op == op
+                    && x.a_kind == y.a_kind
+                    && x.b_kind == y.b_kind
+                    && x.a == y.a
+                    && x.b == y.b
+                    && x.dst != y.dst
+            };
+            // Emitted xnor-dup: A[c] = Xnor(A[c], w); B[c] = Xnor(A[c], w)
+            // — identical operands, two destinations.
+            if same_binary(&cur, &nxt, Op::Xnor) || same_binary(&cur, &nxt, Op::Add) {
+                let mut fused = cur;
+                fused.op = if cur.op == Op::Xnor { Op::XnorDup2 } else { Op::AddDup2 };
+                fused.dst2 = nxt.dst;
+                out.push(fused);
+                i += 2;
+                continue;
+            }
+        }
+        out.push(cur);
+        i += 1;
+    }
+    ops.extend(out);
+}
+
+/// Try to order `ops` so that no op reads a container a *previous* op
+/// wrote (own-dst reads allowed at the op itself). Kahn's algorithm on
+/// write→read edges; returns false (leaving order unchanged) on cycles.
+fn order_for_streaming(ops: &mut [FlatOp]) -> bool {
+    // This module never sees the gather side table here; gathers are
+    // conservative: a gather that reads any written container forces
+    // the slab path unless ordering fixes it, which the generic
+    // dependency edges below handle — except gather reads need the
+    // side table. Keep it simple: treat gather elements as non-stream.
+    if ops.iter().any(|o| o.op == Op::Gather) {
+        return false;
+    }
+    let n = ops.len();
+    if n == 0 {
+        return true;
+    }
+    // Fast path: the emitted order is usually already read-before-write
+    // clean (fusion removed the A→B duplication dependency). Keeping it
+    // intact preserves the strided runs `segment_runs` vectorizes.
+    {
+        let mut written = std::collections::HashSet::new();
+        let mut ok = true;
+        'scan: for o in ops.iter() {
+            if o.a_kind == K_CONT && written.contains(&(o.a as u16)) {
+                ok = false;
+                break 'scan;
+            }
+            if o.b_kind == K_CONT && written.contains(&(o.b as u16)) {
+                ok = false;
+                break 'scan;
+            }
+            written.insert(o.dst);
+            written.insert(o.dst2);
+        }
+        if ok {
+            return true;
+        }
+    }
+    // writer[container] -> op index (write-once per element, but fused
+    // ops have two dsts).
+    let mut writer: std::collections::HashMap<u16, usize> = std::collections::HashMap::new();
+    for (i, o) in ops.iter().enumerate() {
+        writer.insert(o.dst, i);
+        writer.insert(o.dst2, i);
+    }
+    // Edge j -> i: op i writes something op j reads, j must run first.
+    let mut indeg = vec![0usize; n];
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut reads: Vec<u16> = Vec::new();
+    for (j, o) in ops.iter().enumerate() {
+        reads.clear();
+        if o.a_kind == K_CONT {
+            reads.push(o.a as u16);
+        }
+        if o.b_kind == K_CONT {
+            reads.push(o.b as u16);
+        }
+        for &r in &reads {
+            if let Some(&i) = writer.get(&r) {
+                if i != j {
+                    adj[j].push(i);
+                    indeg[i] += 1;
+                }
+            }
+        }
+    }
+    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(i) = queue.pop() {
+        order.push(i);
+        for &k in &adj[i] {
+            indeg[k] -= 1;
+            if indeg[k] == 0 {
+                queue.push(k);
+            }
+        }
+    }
+    if order.len() != n {
+        return false; // cycle
+    }
+    let sorted: Vec<FlatOp> = order.iter().map(|&i| ops[i]).collect();
+    ops.copy_from_slice(&sorted);
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{self, BnnModel, PackedBits};
+    use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
+    use crate::util::rng::Rng;
+
+    /// The compiled executor must agree with the reference element
+    /// interpreter on every model shape the compiler can emit.
+    #[test]
+    fn compiled_equals_reference_executor() {
+        let mut rng = Rng::seed_from_u64(99);
+        for (chip, in_bits, layers) in [
+            (ChipConfig::rmt(), 32usize, vec![64usize, 32]),
+            (ChipConfig::rmt(), 16, vec![16]),
+            (ChipConfig::rmt(), 2048, vec![1]),
+            (ChipConfig::rmt(), 32, vec![128, 16]),
+            (ChipConfig::rmt_with_popcnt(), 32, vec![64, 32]),
+            (ChipConfig::rmt_with_popcnt(), 256, vec![32, 5]),
+        ] {
+            let model = BnnModel::random(in_bits, &layers, rng.next_u64());
+            let opts = CompilerOptions {
+                input: InputEncoding::PayloadLe { offset: 0 },
+                ..Default::default()
+            };
+            let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
+            let mut exec = CompiledProgram::compile(&compiled.program, &chip);
+            for _ in 0..5 {
+                let x = PackedBits::random(in_bits, &mut rng);
+                // Reference path.
+                let mut phv_ref = Phv::zeroed(&chip.phv);
+                let mut pkt = Vec::new();
+                for w in x.words() {
+                    pkt.extend_from_slice(&w.to_le_bytes());
+                }
+                compiled.parser.parse(&pkt, &mut phv_ref, &chip.phv).unwrap();
+                let mut phv_fast = phv_ref.clone();
+                let mut scratch = Vec::new();
+                for e in &compiled.program.elements {
+                    e.execute(&mut phv_ref, &chip.phv, &mut scratch);
+                }
+                // Compiled path.
+                exec.run(&mut phv_fast);
+                assert_eq!(
+                    phv_ref, phv_fast,
+                    "executor divergence in_bits={in_bits} layers={layers:?}"
+                );
+                // And both equal the model.
+                assert_eq!(
+                    compiled.read_output(&phv_fast),
+                    bnn::forward(&model, &x)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fusion_and_streaming_cover_the_schedule() {
+        let model = BnnModel::random(32, &[64, 32], 5);
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let chip = ChipConfig::rmt();
+        let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
+        let exec = CompiledProgram::compile(&compiled.program, &chip);
+        // After XNOR/SUM fusion the tape should be much smaller than the
+        // raw op count, and most elements stream.
+        let raw_ops: usize = compiled
+            .program
+            .elements
+            .iter()
+            .map(|e| e.ops.len())
+            .sum();
+        assert!(exec.ops.len() < raw_ops, "{} !< {raw_ops}", exec.ops.len());
+        assert!(
+            exec.n_streaming() * 10 >= exec.n_elements() * 8,
+            "only {}/{} elements stream",
+            exec.n_streaming(),
+            exec.n_elements()
+        );
+    }
+
+    #[test]
+    fn keyed_table_path_still_works() {
+        use crate::rmt::alu::{AluOp, MicroOp, Src};
+        use crate::rmt::{ContainerId, Element, MatchStage, Program, StepKind, TableEntry};
+        let chip = ChipConfig::rmt();
+        let mut t = MatchStage::new(vec![ContainerId(0)], vec![7]);
+        t.insert(TableEntry { key: vec![5], action_data: vec![42] }).unwrap();
+        let prog = Program::new(vec![Element::with_table(
+            "lut",
+            StepKind::Other,
+            t,
+            vec![MicroOp::alu(
+                ContainerId(1),
+                AluOp::Mov,
+                Src::ActionData(0),
+                Src::Imm(0),
+            )],
+        )]);
+        let mut exec = CompiledProgram::compile(&prog, &chip);
+        let mut phv = Phv::zeroed(&chip.phv);
+        phv.write(ContainerId(0), 5, &chip.phv);
+        exec.run(&mut phv);
+        assert_eq!(phv.read(ContainerId(1)), 42);
+        let mut phv = Phv::zeroed(&chip.phv);
+        phv.write(ContainerId(0), 6, &chip.phv);
+        exec.run(&mut phv);
+        assert_eq!(phv.read(ContainerId(1)), 7); // default on miss
+    }
+}

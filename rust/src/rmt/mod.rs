@@ -1,0 +1,46 @@
+//! Cycle-level simulator of an RMT programmable switching chip
+//! (Bosshart et al., SIGCOMM'13 — the paper's reference architecture,
+//! Fig. 1).
+//!
+//! Modeled architecture:
+//!
+//! * **PHV** ([`phv`]): the packet header vector — 4096 bits of
+//!   containers the parser fills and the pipeline transforms.
+//! * **Parser** ([`parser`]): programmable byte-range extraction from the
+//!   packet into PHV containers.
+//! * **Match-action elements** ([`element`], [`table`], [`alu`]): each of
+//!   the 32 pipeline elements optionally matches PHV fields against an
+//!   SRAM table, then applies one VLIW action word — at most one write
+//!   per container and at most 224 micro-ops, each restricted to the
+//!   primitives real switch ALUs have (bitwise logic, shifts, add/sub,
+//!   compare). There is **no multiply and no popcount** (the optional
+//!   [`alu::AluOp::Popcnt`] models the paper's §3 hardware extension and
+//!   is rejected unless the chip config enables it).
+//! * **Pipeline** ([`pipeline`], [`program`]): executes elements in
+//!   order with VLIW snapshot semantics, supports recirculation passes,
+//!   and enforces program legality.
+//! * **Chip** ([`chip`]): architectural parameters + the timing model
+//!   (fully pipelined, 1 packet/cycle at 960 MHz ⇒ 960 Mpps line rate).
+//!
+//! See DESIGN.md §Hardware-Adaptation for the two deliberate
+//! idealizations (uniform 32-bit containers; the `GatherBits`
+//! concatenation op used by the paper's 1-element folding step).
+
+pub mod alu;
+pub mod chip;
+pub mod element;
+pub mod exec;
+pub mod parser;
+pub mod phv;
+pub mod pipeline;
+pub mod program;
+pub mod table;
+
+pub use alu::{AluOp, MicroOp, Src};
+pub use chip::{ChipConfig, TimingReport};
+pub use element::Element;
+pub use parser::{Extract, PacketParser};
+pub use phv::{ContainerId, Phv, PhvConfig};
+pub use pipeline::{Pipeline, PipelineStats};
+pub use program::{Program, StepKind};
+pub use table::{MatchStage, TableEntry};

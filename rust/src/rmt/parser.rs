@@ -1,0 +1,171 @@
+//! The programmable parser: extracts header byte ranges into PHV
+//! containers ("the header is parsed as soon as a packet is received,
+//! and the parsed activations vector is placed in a PHV's field",
+//! paper §2).
+
+use super::phv::{ContainerId, Phv, PhvConfig};
+use crate::error::{Error, Result};
+
+/// One field extraction: `width_bytes` bytes at `offset` into `dst`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Extract {
+    /// Byte offset from the start of the packet.
+    pub offset: usize,
+    /// 1..=4 bytes.
+    pub width_bytes: u8,
+    /// Network byte order (true, e.g. IP addresses) or little-endian
+    /// (false, e.g. N2Net packed activation words).
+    pub big_endian: bool,
+    /// Destination container.
+    pub dst: ContainerId,
+}
+
+/// A configured parser: an ordered list of extractions.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PacketParser {
+    pub extracts: Vec<Extract>,
+}
+
+impl PacketParser {
+    pub fn new(extracts: Vec<Extract>) -> Self {
+        Self { extracts }
+    }
+
+    /// Append extraction of `n_words` little-endian u32 words starting at
+    /// `offset` into consecutive containers `dsts[0..n_words]` — the
+    /// N2Net activation-vector encoding.
+    pub fn extract_words_le(&mut self, offset: usize, dsts: &[ContainerId]) {
+        for (k, &dst) in dsts.iter().enumerate() {
+            self.extracts.push(Extract {
+                offset: offset + 4 * k,
+                width_bytes: 4,
+                big_endian: false,
+                dst,
+            });
+        }
+    }
+
+    /// Minimum packet length this parser needs.
+    pub fn min_packet_len(&self) -> usize {
+        self.extracts
+            .iter()
+            .map(|e| e.offset + e.width_bytes as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Static checks.
+    pub fn validate(&self, config: &PhvConfig) -> Result<()> {
+        for e in &self.extracts {
+            config.check(e.dst)?;
+            if !(1..=4).contains(&e.width_bytes) {
+                return Err(Error::Parse(format!(
+                    "extract width {} bytes not in 1..=4",
+                    e.width_bytes
+                )));
+            }
+            if (e.width_bytes as usize * 8) > config.width(e.dst) as usize {
+                return Err(Error::Parse(format!(
+                    "extract of {} bytes does not fit {}-bit container {}",
+                    e.width_bytes,
+                    config.width(e.dst),
+                    e.dst
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a packet into a PHV.
+    pub fn parse(&self, packet: &[u8], phv: &mut Phv, config: &PhvConfig) -> Result<()> {
+        for e in &self.extracts {
+            let end = e.offset + e.width_bytes as usize;
+            if packet.len() < end {
+                return Err(Error::Parse(format!(
+                    "packet too short: {} bytes, extract needs {end}",
+                    packet.len()
+                )));
+            }
+            let bytes = &packet[e.offset..end];
+            let mut v = 0u32;
+            if e.big_endian {
+                for &b in bytes {
+                    v = (v << 8) | b as u32;
+                }
+            } else {
+                for (k, &b) in bytes.iter().enumerate() {
+                    v |= (b as u32) << (8 * k);
+                }
+            }
+            phv.write(e.dst, v, config);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endianness() {
+        let cfg = PhvConfig::uniform32();
+        let mut phv = Phv::zeroed(&cfg);
+        let pkt = [0x01u8, 0x02, 0x03, 0x04];
+        let p = PacketParser::new(vec![
+            Extract { offset: 0, width_bytes: 4, big_endian: true, dst: ContainerId(0) },
+            Extract { offset: 0, width_bytes: 4, big_endian: false, dst: ContainerId(1) },
+            Extract { offset: 1, width_bytes: 2, big_endian: true, dst: ContainerId(2) },
+        ]);
+        p.validate(&cfg).unwrap();
+        p.parse(&pkt, &mut phv, &cfg).unwrap();
+        assert_eq!(phv.read(ContainerId(0)), 0x01020304);
+        assert_eq!(phv.read(ContainerId(1)), 0x04030201);
+        assert_eq!(phv.read(ContainerId(2)), 0x0203);
+    }
+
+    #[test]
+    fn words_le_layout_matches_bitpack() {
+        // The packed-bits convention: word k at byte offset 4k, LE.
+        let cfg = PhvConfig::uniform32();
+        let mut phv = Phv::zeroed(&cfg);
+        let words = [0xDEADBEEFu32, 0x01234567];
+        let mut pkt = Vec::new();
+        for w in words {
+            pkt.extend_from_slice(&w.to_le_bytes());
+        }
+        let mut p = PacketParser::default();
+        p.extract_words_le(0, &[ContainerId(0), ContainerId(1)]);
+        p.parse(&pkt, &mut phv, &cfg).unwrap();
+        assert_eq!(phv.read(ContainerId(0)), 0xDEADBEEF);
+        assert_eq!(phv.read(ContainerId(1)), 0x01234567);
+        assert_eq!(p.min_packet_len(), 8);
+    }
+
+    #[test]
+    fn short_packet_is_parse_error() {
+        let cfg = PhvConfig::uniform32();
+        let mut phv = Phv::zeroed(&cfg);
+        let p = PacketParser::new(vec![Extract {
+            offset: 10,
+            width_bytes: 4,
+            big_endian: false,
+            dst: ContainerId(0),
+        }]);
+        let err = p.parse(&[0u8; 8], &mut phv, &cfg).unwrap_err();
+        assert!(matches!(err, Error::Parse(_)));
+    }
+
+    #[test]
+    fn width_vs_container_checked() {
+        let cfg = PhvConfig::rmt_mixed();
+        // 4 bytes into an 8-bit container: invalid.
+        let p = PacketParser::new(vec![Extract {
+            offset: 0,
+            width_bytes: 4,
+            big_endian: false,
+            dst: ContainerId(0),
+        }]);
+        assert!(p.validate(&cfg).is_err());
+    }
+}

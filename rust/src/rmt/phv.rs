@@ -1,0 +1,223 @@
+//! The Packet Header Vector: the 512 B of parsed header state that flows
+//! through the pipeline ("an RMT chip parses several 100s bytes of its
+//! header ... written to a packet header vector", paper §2).
+//!
+//! The real RMT PHV is a mix of 64×8b + 96×16b + 64×32b containers
+//! (= 4096 bits, 224 containers). The paper's own arithmetic abstracts
+//! the mix away (it counts *bits*: 2048-bit activations + a same-size
+//! duplicate = the whole PHV), so the default config here models the PHV
+//! as **128 uniform 32-bit containers** and keeps the 224-op VLIW budget
+//! separately (see `ChipConfig`). The authentic mixed layout is also
+//! constructible for experiments ([`PhvConfig::rmt_mixed`]).
+
+use crate::error::{Error, Result};
+
+/// Index of one PHV container.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ContainerId(pub u16);
+
+impl ContainerId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for ContainerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "c{}", self.0)
+    }
+}
+
+/// Static container layout of a PHV.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PhvConfig {
+    /// Width in bits of each container (8, 16, or 32).
+    widths: Vec<u8>,
+}
+
+impl PhvConfig {
+    /// Build from explicit widths.
+    pub fn new(widths: Vec<u8>) -> Result<Self> {
+        for (i, w) in widths.iter().enumerate() {
+            if ![8, 16, 32].contains(w) {
+                return Err(Error::Config(format!(
+                    "container {i}: width {w} not in {{8,16,32}}"
+                )));
+            }
+        }
+        Ok(Self { widths })
+    }
+
+    /// Default model: 128 uniform 32-bit containers = 4096 bits = 512 B.
+    pub fn uniform32() -> Self {
+        Self { widths: vec![32; 128] }
+    }
+
+    /// Authentic RMT mix: 64×8b, 96×16b, 64×32b (ids in that order).
+    pub fn rmt_mixed() -> Self {
+        let mut widths = vec![8u8; 64];
+        widths.extend(std::iter::repeat(16u8).take(96));
+        widths.extend(std::iter::repeat(32u8).take(64));
+        Self { widths }
+    }
+
+    /// Number of containers.
+    #[inline]
+    pub fn n_containers(&self) -> usize {
+        self.widths.len()
+    }
+
+    /// Width in bits of container `id`.
+    #[inline]
+    pub fn width(&self, id: ContainerId) -> u8 {
+        self.widths[id.index()]
+    }
+
+    /// Value mask of container `id`.
+    #[inline]
+    pub fn mask(&self, id: ContainerId) -> u32 {
+        match self.widths[id.index()] {
+            32 => u32::MAX,
+            w => (1u32 << w) - 1,
+        }
+    }
+
+    /// Total PHV capacity in bits (512 B = 4096 b for both stock configs).
+    pub fn total_bits(&self) -> usize {
+        self.widths.iter().map(|&w| w as usize).sum()
+    }
+
+    /// Validate a container id.
+    pub fn check(&self, id: ContainerId) -> Result<()> {
+        if id.index() < self.widths.len() {
+            Ok(())
+        } else {
+            Err(Error::IllegalProgram(format!(
+                "{id} out of range ({} containers)",
+                self.widths.len()
+            )))
+        }
+    }
+
+    /// Ids of all 32-bit containers (what the compiler allocates from).
+    pub fn containers32(&self) -> Vec<ContainerId> {
+        (0..self.widths.len())
+            .filter(|&i| self.widths[i] == 32)
+            .map(|i| ContainerId(i as u16))
+            .collect()
+    }
+}
+
+/// A live PHV: one `u32` register per container (short containers use the
+/// low bits; writes are masked to the container width).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Phv {
+    regs: Vec<u32>,
+}
+
+impl Phv {
+    /// All-zero PHV for a config.
+    pub fn zeroed(config: &PhvConfig) -> Self {
+        Self { regs: vec![0; config.n_containers()] }
+    }
+
+    /// Read container `id` (zero-extended to u32).
+    #[inline]
+    pub fn read(&self, id: ContainerId) -> u32 {
+        self.regs[id.index()]
+    }
+
+    /// Write container `id`, masking to its width.
+    #[inline]
+    pub fn write(&mut self, id: ContainerId, value: u32, config: &PhvConfig) {
+        self.regs[id.index()] = value & config.mask(id);
+    }
+
+    /// Raw registers (tests, debug dumps).
+    pub fn regs(&self) -> &[u32] {
+        &self.regs
+    }
+
+    /// Mutable raw registers — the compiled executor's fast path.
+    /// Callers are responsible for container-width masking
+    /// (`crate::rmt::exec` applies the precomputed masks itself).
+    pub fn regs_mut(&mut self) -> &mut [u32] {
+        &mut self.regs
+    }
+
+    /// Read a group of containers as packed little-endian words (the
+    /// layout convention of `bnn::bitpack`): group word *k* = container
+    /// `ids[k]`.
+    pub fn read_group(&self, ids: &[ContainerId]) -> Vec<u32> {
+        ids.iter().map(|&id| self.read(id)).collect()
+    }
+
+    /// Write packed words into a group of containers.
+    pub fn write_group(&mut self, ids: &[ContainerId], words: &[u32], config: &PhvConfig) {
+        assert_eq!(ids.len(), words.len(), "group width mismatch");
+        for (&id, &w) in ids.iter().zip(words) {
+            self.write(id, w, config);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform32_shape() {
+        let c = PhvConfig::uniform32();
+        assert_eq!(c.n_containers(), 128);
+        assert_eq!(c.total_bits(), 4096); // 512 B, paper §2 Evaluation
+        assert_eq!(c.width(ContainerId(0)), 32);
+        assert_eq!(c.mask(ContainerId(5)), u32::MAX);
+        assert_eq!(c.containers32().len(), 128);
+    }
+
+    #[test]
+    fn rmt_mixed_shape() {
+        let c = PhvConfig::rmt_mixed();
+        assert_eq!(c.n_containers(), 224); // the paper's 224 parallel ops
+        assert_eq!(c.total_bits(), 4096);
+        assert_eq!(c.width(ContainerId(0)), 8);
+        assert_eq!(c.width(ContainerId(64)), 16);
+        assert_eq!(c.width(ContainerId(160)), 32);
+        assert_eq!(c.containers32().len(), 64);
+    }
+
+    #[test]
+    fn writes_masked_to_width() {
+        let c = PhvConfig::rmt_mixed();
+        let mut phv = Phv::zeroed(&c);
+        phv.write(ContainerId(0), 0xFFFF_FFFF, &c); // 8-bit container
+        assert_eq!(phv.read(ContainerId(0)), 0xFF);
+        phv.write(ContainerId(64), 0xFFFF_FFFF, &c); // 16-bit container
+        assert_eq!(phv.read(ContainerId(64)), 0xFFFF);
+        phv.write(ContainerId(160), 0xFFFF_FFFF, &c); // 32-bit container
+        assert_eq!(phv.read(ContainerId(160)), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn group_roundtrip() {
+        let c = PhvConfig::uniform32();
+        let mut phv = Phv::zeroed(&c);
+        let ids = [ContainerId(3), ContainerId(7), ContainerId(2)];
+        phv.write_group(&ids, &[0xA, 0xB, 0xC], &c);
+        assert_eq!(phv.read_group(&ids), vec![0xA, 0xB, 0xC]);
+    }
+
+    #[test]
+    fn invalid_width_rejected() {
+        assert!(PhvConfig::new(vec![8, 13]).is_err());
+        assert!(PhvConfig::new(vec![8, 16, 32]).is_ok());
+    }
+
+    #[test]
+    fn out_of_range_check() {
+        let c = PhvConfig::uniform32();
+        assert!(c.check(ContainerId(127)).is_ok());
+        assert!(c.check(ContainerId(128)).is_err());
+    }
+}

@@ -1,0 +1,196 @@
+//! A pipeline program: the ordered element configurations the compiler
+//! emits, plus whole-program legality checks and resource statistics.
+
+use super::chip::ChipConfig;
+use super::element::Element;
+use crate::error::{Error, Result};
+
+/// Which of the paper's five processing steps (Fig. 2) an element
+/// implements — used by traces, the Fig. 2 reproduction, and resource
+/// accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StepKind {
+    /// Step 1: replicate the activation group P× across the PHV.
+    Replication,
+    /// Step 2: XNOR with weights + duplication into the B copy.
+    XnorDup,
+    /// Step 3a: POPCNT tree — mask/shift level.
+    PopcntMask,
+    /// Step 3b: POPCNT tree — sum level (re-duplicates).
+    PopcntSum,
+    /// Step 3 (§3 hardware variant): native POPCNT.
+    PopcntNative,
+    /// Step 4: SIGN threshold compare.
+    Sign,
+    /// Step 5: fold sign bits into the output activation vector.
+    Fold,
+    /// Non-BNN housekeeping (parsing glue, app logic, baselines).
+    Other,
+}
+
+impl StepKind {
+    /// Display name matching the paper's vocabulary.
+    pub fn name(self) -> &'static str {
+        match self {
+            StepKind::Replication => "Replication",
+            StepKind::XnorDup => "XNOR+Duplication",
+            StepKind::PopcntMask => "POPCNT(mask)",
+            StepKind::PopcntSum => "POPCNT(sum)",
+            StepKind::PopcntNative => "POPCNT(native)",
+            StepKind::Sign => "SIGN",
+            StepKind::Fold => "Folding",
+            StepKind::Other => "other",
+        }
+    }
+}
+
+/// Aggregate resource usage of a program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProgramStats {
+    pub n_elements: usize,
+    /// Recirculation passes needed: ceil(n_elements / chip elements).
+    pub passes: usize,
+    /// Max op slots used in any element.
+    pub max_slots_used: usize,
+    /// Total SRAM bits across all match stages.
+    pub sram_bits: usize,
+    /// Elements per step kind, in program order of first appearance.
+    pub per_step: Vec<(StepKind, usize)>,
+}
+
+/// An executable pipeline program.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Program {
+    pub elements: Vec<Element>,
+}
+
+impl Program {
+    pub fn new(elements: Vec<Element>) -> Self {
+        Self { elements }
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.elements.len()
+    }
+
+    /// Recirculation passes on a given chip (a program longer than the
+    /// physical pipeline re-enters it; each pass costs one pipeline
+    /// traversal of throughput).
+    pub fn passes(&self, chip: &ChipConfig) -> usize {
+        self.elements.len().div_ceil(chip.n_elements).max(1)
+    }
+
+    /// Whole-program legality against a chip configuration.
+    ///
+    /// `allow_recirculation=false` additionally requires the program to
+    /// fit a single pass (the paper's single-pass feasibility claims).
+    pub fn validate(&self, chip: &ChipConfig, allow_recirculation: bool) -> Result<()> {
+        if self.elements.is_empty() {
+            return Err(Error::IllegalProgram("empty program".into()));
+        }
+        for e in &self.elements {
+            e.validate(&chip.phv, chip.max_ops_per_element, chip.native_popcnt)?;
+            let sram = e.sram_bits(&chip.phv);
+            if sram > chip.sram_bits_per_element {
+                return Err(Error::ResourceExhausted(format!(
+                    "element {:?}: table needs {sram} SRAM bits > {} available",
+                    e.label, chip.sram_bits_per_element
+                )));
+            }
+        }
+        if !allow_recirculation && self.elements.len() > chip.n_elements {
+            return Err(Error::ResourceExhausted(format!(
+                "program needs {} elements > {} pipeline elements \
+                 (enable recirculation or shrink the model)",
+                self.elements.len(),
+                chip.n_elements
+            )));
+        }
+        Ok(())
+    }
+
+    /// Resource statistics.
+    pub fn stats(&self, chip: &ChipConfig) -> ProgramStats {
+        let mut per_step: Vec<(StepKind, usize)> = Vec::new();
+        for e in &self.elements {
+            if let Some(entry) = per_step.iter_mut().find(|(k, _)| *k == e.step) {
+                entry.1 += 1;
+            } else {
+                per_step.push((e.step, 1));
+            }
+        }
+        ProgramStats {
+            n_elements: self.elements.len(),
+            passes: self.passes(chip),
+            max_slots_used: self
+                .elements
+                .iter()
+                .map(Element::slot_cost)
+                .max()
+                .unwrap_or(0),
+            sram_bits: self.elements.iter().map(|e| e.sram_bits(&chip.phv)).sum(),
+            per_step,
+        }
+    }
+
+    /// Pretty listing of the per-element schedule (the Fig. 2 trace).
+    pub fn schedule_listing(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for (i, e) in self.elements.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "element {i:>2}  [{:<18}] {:<28} {} ops",
+                e.step.name(),
+                e.label,
+                e.slot_cost()
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmt::alu::{AluOp, MicroOp, Src};
+    use crate::rmt::phv::ContainerId;
+
+    fn mov_elem(label: &str, n: usize) -> Element {
+        let ops = (0..n)
+            .map(|i| {
+                MicroOp::alu(ContainerId(i as u16), AluOp::Mov, Src::Imm(1), Src::Imm(0))
+            })
+            .collect();
+        Element::new(label, StepKind::Other, ops)
+    }
+
+    #[test]
+    fn passes_and_fit() {
+        let chip = ChipConfig::rmt();
+        let p = Program::new((0..40).map(|i| mov_elem(&format!("e{i}"), 1)).collect());
+        assert_eq!(p.passes(&chip), 2);
+        assert!(p.validate(&chip, false).is_err());
+        assert!(p.validate(&chip, true).is_ok());
+        let q = Program::new((0..32).map(|i| mov_elem(&format!("e{i}"), 1)).collect());
+        assert_eq!(q.passes(&chip), 1);
+        assert!(q.validate(&chip, false).is_ok());
+    }
+
+    #[test]
+    fn empty_program_rejected() {
+        let chip = ChipConfig::rmt();
+        assert!(Program::default().validate(&chip, true).is_err());
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let chip = ChipConfig::rmt();
+        let p = Program::new(vec![mov_elem("a", 3), mov_elem("b", 7)]);
+        let s = p.stats(&chip);
+        assert_eq!(s.n_elements, 2);
+        assert_eq!(s.max_slots_used, 7);
+        assert_eq!(s.per_step, vec![(StepKind::Other, 2)]);
+        assert!(p.schedule_listing().contains("element  1"));
+    }
+}

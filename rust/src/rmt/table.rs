@@ -1,0 +1,147 @@
+//! Match stage: the lookup-table half of a match-action element.
+//!
+//! "Each element has a limited amount of memory to implement lookup
+//! tables (the match part)" (paper §2). Tables map a key — the
+//! concatenated values of selected PHV containers — to *action data*:
+//! a vector of u32 immediates the action word can reference. This is
+//! how N2Net's multi-model extension selects per-model weights, and how
+//! the baseline exact-match classifier is built.
+//!
+//! SRAM cost model (RMT paper): each entry stores key + action data +
+//! ~4 B overhead (validity, instruction pointer). An element has
+//! `ChipConfig::sram_bits_per_element` available.
+
+use std::collections::HashMap;
+
+use super::phv::{ContainerId, Phv, PhvConfig};
+use crate::error::{Error, Result};
+
+/// One table entry: exact-match key -> action data words.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TableEntry {
+    pub key: Vec<u32>,
+    pub action_data: Vec<u32>,
+}
+
+/// An exact-match table over a set of PHV containers.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MatchStage {
+    /// Containers whose values form the lookup key (in order).
+    pub key_containers: Vec<ContainerId>,
+    /// Exact-match entries.
+    entries: HashMap<Vec<u32>, Vec<u32>>,
+    /// Action data returned on miss (also used by table-less elements
+    /// whose ops still want shared immediates).
+    pub default_action_data: Vec<u32>,
+}
+
+impl MatchStage {
+    pub fn new(key_containers: Vec<ContainerId>, default_action_data: Vec<u32>) -> Self {
+        Self { key_containers, entries: HashMap::new(), default_action_data }
+    }
+
+    /// Insert an entry; key length must match the key container count.
+    pub fn insert(&mut self, entry: TableEntry) -> Result<()> {
+        if entry.key.len() != self.key_containers.len() {
+            return Err(Error::IllegalProgram(format!(
+                "table key arity {} != {} key containers",
+                entry.key.len(),
+                self.key_containers.len()
+            )));
+        }
+        self.entries.insert(entry.key, entry.action_data);
+        Ok(())
+    }
+
+    /// Number of installed entries.
+    pub fn n_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Look up the current PHV; returns matched action data or default.
+    pub fn lookup<'a>(&'a self, phv: &Phv) -> &'a [u32] {
+        if self.key_containers.is_empty() {
+            return &self.default_action_data;
+        }
+        let key: Vec<u32> = self.key_containers.iter().map(|&c| phv.read(c)).collect();
+        self.lookup_key(&key)
+    }
+
+    /// Look up a pre-extracted key (compiled-executor path).
+    pub fn lookup_key<'a>(&'a self, key: &[u32]) -> &'a [u32] {
+        self.entries
+            .get(key)
+            .map(|v| v.as_slice())
+            .unwrap_or(&self.default_action_data)
+    }
+
+    /// SRAM bits consumed: entries × (key bits + action-data bits +
+    /// 32 bits bookkeeping overhead per entry).
+    pub fn sram_bits(&self, config: &PhvConfig) -> usize {
+        let key_bits: usize = self
+            .key_containers
+            .iter()
+            .map(|&c| config.width(c) as usize)
+            .sum();
+        let data_bits = self
+            .entries
+            .values()
+            .map(|v| v.len() * 32)
+            .max()
+            .unwrap_or(self.default_action_data.len() * 32);
+        self.entries.len() * (key_bits + data_bits + 32)
+            + self.default_action_data.len() * 32
+    }
+
+    /// Static checks.
+    pub fn validate(&self, config: &PhvConfig) -> Result<()> {
+        for &c in &self.key_containers {
+            config.check(c)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_hit_miss_default() {
+        let cfg = PhvConfig::uniform32();
+        let mut t = MatchStage::new(vec![ContainerId(0)], vec![99]);
+        t.insert(TableEntry { key: vec![7], action_data: vec![1, 2] }).unwrap();
+        let mut phv = Phv::zeroed(&cfg);
+        phv.write(ContainerId(0), 7, &cfg);
+        assert_eq!(t.lookup(&phv), &[1, 2]);
+        phv.write(ContainerId(0), 8, &cfg);
+        assert_eq!(t.lookup(&phv), &[99]);
+        assert_eq!(t.n_entries(), 1);
+    }
+
+    #[test]
+    fn keyless_stage_returns_default() {
+        let cfg = PhvConfig::uniform32();
+        let t = MatchStage::new(vec![], vec![5, 6]);
+        let phv = Phv::zeroed(&cfg);
+        assert_eq!(t.lookup(&phv), &[5, 6]);
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let mut t = MatchStage::new(vec![ContainerId(0), ContainerId(1)], vec![]);
+        assert!(t.insert(TableEntry { key: vec![1], action_data: vec![] }).is_err());
+    }
+
+    #[test]
+    fn sram_accounting_scales_with_entries() {
+        let cfg = PhvConfig::uniform32();
+        let mut t = MatchStage::new(vec![ContainerId(0)], vec![]);
+        let base = t.sram_bits(&cfg);
+        for i in 0..100 {
+            t.insert(TableEntry { key: vec![i], action_data: vec![0, 0] }).unwrap();
+        }
+        // 100 entries × (32 key + 64 data + 32 overhead) = 12800
+        assert_eq!(t.sram_bits(&cfg) - base, 100 * (32 + 64 + 32));
+    }
+}

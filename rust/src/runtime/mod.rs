@@ -1,0 +1,55 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas model.
+//!
+//! The Python side (`python/compile/aot.py`) lowers the packed BNN
+//! forward pass to HLO *text* at build time; this module loads that text
+//! with `HloModuleProto::from_text_file`, compiles it on the PJRT CPU
+//! client, and executes it from Rust. Python is never on this path.
+//!
+//! Primary consumer: [`Oracle`] — the bit-exact golden reference the
+//! switch-pipeline implementation is validated against (and the
+//! "server-side model" comparator in the serving examples).
+
+pub mod oracle;
+
+pub use oracle::{Oracle, OracleMeta, OracleOutput};
+
+use crate::error::Result;
+
+/// Thin wrapper around a PJRT CPU client plus one compiled executable.
+pub struct PjrtModel {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtModel {
+    /// Load HLO text from `path`, compile it on a fresh CPU client.
+    pub fn load_hlo_text(path: &std::path::Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| crate::Error::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Self { client, exe })
+    }
+
+    /// Backend platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute with literal inputs; returns the decomposed output tuple
+    /// (jax lowers with `return_tuple=True`, so there is always a tuple).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Like [`Self::execute`] but borrowing the inputs (avoids cloning
+    /// long-lived weight literals on every call).
+    pub fn execute_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}

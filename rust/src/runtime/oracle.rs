@@ -1,0 +1,331 @@
+//! The golden oracle: the JAX/Pallas BNN executed via PJRT.
+//!
+//! `Oracle` batches packed activation vectors through the AOT artifact
+//! and returns per-layer packed sign bits + final popcounts — exactly the
+//! values the RMT pipeline and the Rust reference forward produce, so all
+//! three implementations can be compared bit-for-bit.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+use super::PjrtModel;
+
+/// `meta.json` — artifact shape manifest written by `aot.py`.
+#[derive(Debug, Clone)]
+pub struct OracleMeta {
+    /// Fixed batch the HLO was lowered with; inputs are padded to it.
+    pub oracle_batch: usize,
+    /// Packed words per input vector.
+    pub in_words: usize,
+    /// Weight parameter shapes, in call order after x: `[neurons, words]`.
+    pub weight_shapes: Vec<(usize, usize)>,
+    /// `[batch, last_layer_neurons]`.
+    pub final_popcount_shape: (usize, usize),
+    /// Per layer: `[batch, n_words(layer_neurons)]`.
+    pub sign_packed_shapes: Vec<(usize, usize)>,
+    /// Golden vectors for self-test.
+    pub golden: GoldenDoc,
+}
+
+/// Golden inputs + expected outputs baked by `aot.py`.
+#[derive(Debug, Clone)]
+pub struct GoldenDoc {
+    pub input_packed: Vec<Vec<u32>>,
+    pub labels: Vec<u32>,
+    pub final_popcount: Vec<Vec<i32>>,
+    pub sign_packed: Vec<Vec<Vec<u32>>>,
+}
+
+fn mat_u32(v: &Value, key: &str) -> Result<Vec<Vec<u32>>> {
+    v.req_array(key)?
+        .iter()
+        .map(|row| {
+            row.as_array()
+                .ok_or_else(|| Error::Artifact(format!("{key}: row not array")))?
+                .iter()
+                .map(|x| x.as_u32().ok_or_else(|| Error::Artifact(format!("{key}: not u32"))))
+                .collect()
+        })
+        .collect()
+}
+
+fn mat_i32(v: &Value, key: &str) -> Result<Vec<Vec<i32>>> {
+    v.req_array(key)?
+        .iter()
+        .map(|row| {
+            row.as_array()
+                .ok_or_else(|| Error::Artifact(format!("{key}: row not array")))?
+                .iter()
+                .map(|x| {
+                    x.as_i64()
+                        .and_then(|i| i32::try_from(i).ok())
+                        .ok_or_else(|| Error::Artifact(format!("{key}: not i32")))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl OracleMeta {
+    /// Parse `meta.json`.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        if v.req_str("format")? != "n2net-meta-v1" {
+            return Err(Error::Artifact(format!(
+                "bad meta format {:?}",
+                v.req_str("format")?
+            )));
+        }
+        let weight_shapes = v
+            .req_array("weight_shapes")?
+            .iter()
+            .map(|s| {
+                let a = s.as_array().ok_or_else(|| Error::Artifact("bad wshape".into()))?;
+                Ok((
+                    a[0].as_usize().ok_or_else(|| Error::Artifact("bad wshape".into()))?,
+                    a[1].as_usize().ok_or_else(|| Error::Artifact("bad wshape".into()))?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = v.req("outputs")?;
+        let fp = outputs.req_array("final_popcount")?;
+        let final_popcount_shape = (
+            fp[0].as_usize().ok_or_else(|| Error::Artifact("bad shape".into()))?,
+            fp[1].as_usize().ok_or_else(|| Error::Artifact("bad shape".into()))?,
+        );
+        let sign_packed_shapes = outputs
+            .req_array("sign_packed")?
+            .iter()
+            .map(|s| {
+                let a = s.as_array().ok_or_else(|| Error::Artifact("bad shape".into()))?;
+                Ok((
+                    a[0].as_usize().ok_or_else(|| Error::Artifact("bad shape".into()))?,
+                    a[1].as_usize().ok_or_else(|| Error::Artifact("bad shape".into()))?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let g = v.req("golden")?;
+        let golden = GoldenDoc {
+            input_packed: mat_u32(g, "input_packed")?,
+            labels: g.req_u32_array("labels")?,
+            final_popcount: mat_i32(g, "final_popcount")?,
+            sign_packed: g
+                .req_array("sign_packed")?
+                .iter()
+                .enumerate()
+                .map(|(i, _)| -> Result<Vec<Vec<u32>>> {
+                    let layer = &g.req_array("sign_packed")?[i];
+                    layer
+                        .as_array()
+                        .ok_or_else(|| Error::Artifact("sign_packed layer".into()))?
+                        .iter()
+                        .map(|row| {
+                            row.as_array()
+                                .ok_or_else(|| Error::Artifact("sign row".into()))?
+                                .iter()
+                                .map(|x| {
+                                    x.as_u32()
+                                        .ok_or_else(|| Error::Artifact("sign word".into()))
+                                })
+                                .collect()
+                        })
+                        .collect()
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        Ok(OracleMeta {
+            oracle_batch: v.req_usize("oracle_batch")?,
+            in_words: v.req_usize("in_words")?,
+            weight_shapes,
+            final_popcount_shape,
+            sign_packed_shapes,
+            golden,
+        })
+    }
+}
+
+/// One batch worth of oracle outputs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OracleOutput {
+    /// `[b][neuron]` — final-layer XNOR-popcounts.
+    pub final_popcount: Vec<Vec<i32>>,
+    /// `[layer][b][word]` — packed sign bits of every layer.
+    pub sign_packed: Vec<Vec<Vec<u32>>>,
+}
+
+/// AOT-compiled BNN, loaded once, executed many times.
+pub struct Oracle {
+    model: PjrtModel,
+    meta: OracleMeta,
+    /// Weight literals in parameter order (loaded from `weights.json`).
+    weight_literals: Vec<xla::Literal>,
+}
+
+impl Oracle {
+    /// Load `model.hlo.txt` + `meta.json` + `weights.json` from the
+    /// artifacts directory. The HLO takes weights as parameters (large
+    /// constants do not survive the HLO-text interchange), so the oracle
+    /// binds the trained weights once here.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                meta_path.display()
+            ))
+        })?;
+        let meta = OracleMeta::from_json(&text)?;
+        let doc = crate::bnn::WeightsDoc::from_path(dir.join("weights.json"))?;
+        let model = PjrtModel::load_hlo_text(&dir.join("model.hlo.txt"))?;
+        let weight_literals = Self::weight_literals(&meta, &doc)?;
+        Ok(Self { model, meta, weight_literals })
+    }
+
+    fn weight_literals(
+        meta: &OracleMeta,
+        doc: &crate::bnn::WeightsDoc,
+    ) -> Result<Vec<xla::Literal>> {
+        if doc.layers.len() != meta.weight_shapes.len() {
+            return Err(Error::Artifact(format!(
+                "weights.json has {} layers, meta expects {}",
+                doc.layers.len(),
+                meta.weight_shapes.len()
+            )));
+        }
+        doc.layers
+            .iter()
+            .zip(&meta.weight_shapes)
+            .enumerate()
+            .map(|(i, (l, &(m, w)))| {
+                let mut flat = Vec::with_capacity(m * w);
+                if l.weights_packed.len() != m {
+                    return Err(Error::Artifact(format!(
+                        "layer {i}: {} rows != meta {m}",
+                        l.weights_packed.len()
+                    )));
+                }
+                for row in &l.weights_packed {
+                    if row.len() != w {
+                        return Err(Error::Artifact(format!(
+                            "layer {i}: row width {} != meta {w}",
+                            row.len()
+                        )));
+                    }
+                    flat.extend_from_slice(row);
+                }
+                Ok(xla::Literal::vec1(&flat).reshape(&[m as i64, w as i64])?)
+            })
+            .collect()
+    }
+
+    /// Default artifacts directory (workspace-relative), overridable via
+    /// `N2NET_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("N2NET_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| {
+                PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+            })
+    }
+
+    pub fn meta(&self) -> &OracleMeta {
+        &self.meta
+    }
+
+    /// PJRT backend name.
+    pub fn platform(&self) -> String {
+        self.model.platform()
+    }
+
+    /// Number of layers in the compiled model.
+    pub fn n_layers(&self) -> usize {
+        self.meta.sign_packed_shapes.len()
+    }
+
+    /// Run a batch of packed inputs (each `in_words` long). Batches larger
+    /// than the artifact's fixed batch are chunked; smaller ones padded.
+    pub fn run(&self, inputs: &[Vec<u32>]) -> Result<OracleOutput> {
+        for (i, row) in inputs.iter().enumerate() {
+            if row.len() != self.meta.in_words {
+                return Err(Error::Runtime(format!(
+                    "input {i}: expected {} packed words, got {}",
+                    self.meta.in_words,
+                    row.len()
+                )));
+            }
+        }
+        let mut out = OracleOutput {
+            final_popcount: Vec::with_capacity(inputs.len()),
+            sign_packed: vec![Vec::with_capacity(inputs.len()); self.n_layers()],
+        };
+        for chunk in inputs.chunks(self.meta.oracle_batch) {
+            self.run_chunk(chunk, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    fn run_chunk(&self, chunk: &[Vec<u32>], out: &mut OracleOutput) -> Result<()> {
+        let bsz = self.meta.oracle_batch;
+        let w = self.meta.in_words;
+        let mut flat = vec![0u32; bsz * w];
+        for (i, row) in chunk.iter().enumerate() {
+            flat[i * w..(i + 1) * w].copy_from_slice(row);
+        }
+        let lit = xla::Literal::vec1(&flat).reshape(&[bsz as i64, w as i64])?;
+        let mut params: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weight_literals.len());
+        params.push(&lit);
+        params.extend(self.weight_literals.iter());
+        let outputs = self.model.execute_refs(&params)?;
+        if outputs.len() != 1 + self.n_layers() {
+            return Err(Error::Runtime(format!(
+                "artifact returned {} outputs, expected {}",
+                outputs.len(),
+                1 + self.n_layers()
+            )));
+        }
+        // Output 0: final popcounts [bsz, m_last] i32.
+        let m_last = self.meta.final_popcount_shape.1;
+        let pops: Vec<i32> = outputs[0].to_vec()?;
+        for i in 0..chunk.len() {
+            out.final_popcount
+                .push(pops[i * m_last..(i + 1) * m_last].to_vec());
+        }
+        // Outputs 1..: per-layer packed signs [bsz, n_words(m_l)] u32.
+        for (l, lit) in outputs[1..].iter().enumerate() {
+            let lw = self.meta.sign_packed_shapes[l].1;
+            let vals: Vec<u32> = lit.to_vec()?;
+            for i in 0..chunk.len() {
+                out.sign_packed[l].push(vals[i * lw..(i + 1) * lw].to_vec());
+            }
+        }
+        Ok(())
+    }
+
+    /// Final classification bit per input (bit 0 of the last layer).
+    pub fn classify(&self, inputs: &[Vec<u32>]) -> Result<Vec<u32>> {
+        let out = self.run(inputs)?;
+        Ok(out.sign_packed[self.n_layers() - 1]
+            .iter()
+            .map(|row| row[0] & 1)
+            .collect())
+    }
+
+    /// Execute the artifact against the golden vectors baked into
+    /// `meta.json` and verify bit-exact agreement. This is the runtime's
+    /// self-test: it proves the HLO-text → PJRT path reproduces exactly
+    /// what JAX computed at export time.
+    pub fn self_test(&self) -> Result<()> {
+        let g = self.meta.golden.clone();
+        let out = self.run(&g.input_packed)?;
+        if out.final_popcount != g.final_popcount {
+            return Err(Error::Runtime("golden final_popcount mismatch".into()));
+        }
+        if out.sign_packed != g.sign_packed {
+            return Err(Error::Runtime("golden sign_packed mismatch".into()));
+        }
+        Ok(())
+    }
+}

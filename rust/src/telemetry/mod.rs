@@ -1,0 +1,172 @@
+//! Serving metrics: counters and latency histograms for the coordinator.
+//!
+//! Lock-free on the hot path (atomics; histograms use fixed log₂
+//! buckets), aggregated at report time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Power-of-two-bucketed latency histogram: bucket i holds samples in
+/// [2^i, 2^{i+1}) nanoseconds. 48 buckets cover ns → ~3 days.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..48).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let idx = (64 - ns.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Approximate quantile from the log buckets (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 2f64.powi(i as i32 + 1);
+            }
+        }
+        2f64.powi(self.buckets.len() as i32)
+    }
+
+    pub fn render(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.0}ns p50≤{:.0}ns p99≤{:.0}ns",
+            self.count(),
+            self.mean_ns(),
+            self.quantile_ns(0.5),
+            self.quantile_ns(0.99),
+        )
+    }
+}
+
+/// Metrics bundle for a serving engine.
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    pub packets_in: Counter,
+    pub packets_classified: Counter,
+    pub packets_dropped: Counter,
+    pub parse_errors: Counter,
+    pub batch_latency: Histogram,
+}
+
+impl EngineMetrics {
+    pub fn render(&self) -> String {
+        format!(
+            "in={} classified={} dropped={} parse_errors={}\n{}",
+            self.packets_in.get(),
+            self.packets_classified.get(),
+            self.packets_dropped.get(),
+            self.parse_errors.get(),
+            self.batch_latency.render("batch_latency"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent() {
+        let c = std::sync::Arc::new(Counter::default());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for us in [1u64, 10, 100, 1000, 10000] {
+            for _ in 0..100 {
+                h.record(Duration::from_micros(us));
+            }
+        }
+        assert_eq!(h.count(), 500);
+        let p50 = h.quantile_ns(0.5);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= p99);
+        assert!(h.mean_ns() > 0.0);
+        assert!(h.render("x").contains("n=500"));
+    }
+
+    #[test]
+    fn histogram_bucket_sanity() {
+        let h = Histogram::new();
+        h.record(Duration::from_nanos(1500));
+        // 1500ns is in bucket [1024, 2048) -> upper bound 2048.
+        assert_eq!(h.quantile_ns(1.0), 2048.0);
+    }
+}

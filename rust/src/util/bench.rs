@@ -1,0 +1,220 @@
+//! Measurement harness (replaces `criterion` offline).
+//!
+//! Deliberately simple but honest: warmup, fixed-duration sampling,
+//! median/p10/p90 over per-iteration times, and a throughput helper.
+//! All benches in `rust/benches/` print through [`Report`] so the output
+//! format is uniform and grep-able in `bench_output.txt`.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Statistics of one measured case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// Items processed per iteration (for throughput reporting).
+    pub items_per_iter: f64,
+}
+
+impl Stats {
+    /// Items per second at the median iteration time.
+    pub fn items_per_sec(&self) -> f64 {
+        if self.median_ns == 0.0 {
+            return f64::INFINITY;
+        }
+        self.items_per_iter * 1e9 / self.median_ns
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Max recorded samples (batches).
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1200),
+            max_samples: 200,
+        }
+    }
+}
+
+/// Fast profile for CI-ish runs (`N2NET_BENCH_FAST=1`).
+pub fn default_bencher() -> Bencher {
+    if std::env::var_os("N2NET_BENCH_FAST").is_some() {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            max_samples: 50,
+        }
+    } else {
+        Bencher::default()
+    }
+}
+
+impl Bencher {
+    /// Measure `f` (one logical iteration per call); `items` is how many
+    /// work units one call processes (e.g. packets per batch).
+    pub fn run<F: FnMut()>(&self, name: &str, items: f64, mut f: F) -> Stats {
+        // Warmup + calibration: how many calls fit in ~1ms?
+        let wend = Instant::now() + self.warmup;
+        let mut calls_per_ms = 0u64;
+        {
+            let t0 = Instant::now();
+            let mut n = 0u64;
+            while Instant::now() < wend {
+                f();
+                n += 1;
+            }
+            let el = t0.elapsed().as_secs_f64();
+            if el > 0.0 {
+                calls_per_ms = ((n as f64 / el) / 1000.0).max(1.0) as u64;
+            }
+        }
+        let batch = calls_per_ms.max(1);
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let mend = Instant::now() + self.measure;
+        while Instant::now() < mend && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let per_iter = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(per_iter);
+            total_iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if samples.is_empty() {
+                return 0.0;
+            }
+            let idx = ((samples.len() - 1) as f64 * p).round() as usize;
+            samples[idx]
+        };
+        let mean = samples.iter().sum::<f64>() / samples.len().max(1) as f64;
+        Stats {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            median_ns: pct(0.5),
+            p10_ns: pct(0.1),
+            p90_ns: pct(0.9),
+            items_per_iter: items,
+        }
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn keep<T>(v: T) -> T {
+    black_box(v)
+}
+
+/// Uniform table printer for bench binaries.
+pub struct Report {
+    title: String,
+    rows: Vec<Stats>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        println!("\n=== {title} ===");
+        Self { title: title.to_string(), rows: Vec::new() }
+    }
+
+    pub fn add(&mut self, s: Stats) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>14}",
+            s.name,
+            format_ns(s.median_ns),
+            format!("±{}", format_ns((s.p90_ns - s.p10_ns) / 2.0)),
+            format_rate(s.items_per_sec())
+        );
+        self.rows.push(s);
+    }
+
+    pub fn header(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>14}",
+            "case", "median", "p10-p90/2", "items/s"
+        );
+    }
+
+    pub fn rows(&self) -> &[Stats] {
+        &self.rows
+    }
+
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Human-readable rate.
+pub fn format_rate(r: f64) -> String {
+    if !r.is_finite() {
+        return "-".into();
+    }
+    if r >= 1e9 {
+        format!("{:.2}G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}K/s", r / 1e3)
+    } else {
+        format!("{r:.1}/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            max_samples: 10,
+        };
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", 1.0, || {
+            acc = keep(acc.wrapping_add(1));
+        });
+        assert!(s.iters > 0);
+        assert!(s.median_ns >= 0.0);
+        assert!(s.items_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(format_ns(12.0), "12.0ns");
+        assert!(format_ns(1500.0).ends_with("µs"));
+        assert!(format_rate(2e9).ends_with("G/s"));
+        assert!(format_rate(5e3).ends_with("K/s"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Tiny argv parser (replaces `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args;
+//! the binary defines subcommands on top (`main.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: positionals + `--key value` options + `--flags`.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    ///
+    /// `value_opts` lists options that consume a value; anything else
+    /// starting with `--` is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        value_opts: &[&str],
+    ) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&rest) {
+                    let v = it.next().ok_or_else(|| {
+                        Error::Config(format!("--{rest} expects a value"))
+                    })?;
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}={s} is not an integer"))),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}={s} is not an integer"))),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}={s} is not a number"))),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--layers 64,32,1`.
+    pub fn opt_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.opt(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| {
+                        Error::Config(format!("--{name}: bad element {p:?}"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_parse() {
+        let a = Args::parse(
+            argv(&["run", "--trace", "t.bin", "--verbose", "--n=5", "extra"]),
+            &["trace"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.opt("trace"), Some("t.bin"));
+        assert_eq!(a.opt("n"), Some("5"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_options() {
+        let a = Args::parse(argv(&["--n=12", "--layers=64,32,1", "--p=0.5"]), &[]).unwrap();
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+        assert_eq!(a.opt_usize_list("layers", &[]).unwrap(), vec![64, 32, 1]);
+        assert_eq!(a.opt_f64("p", 0.0).unwrap(), 0.5);
+        assert!(Args::parse(argv(&["--n", "x"]), &["n"])
+            .unwrap()
+            .opt_usize("n", 0)
+            .is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(argv(&["--trace"]), &["trace"]).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! In-crate substrates for ecosystem crates unavailable in the offline
+//! build environment (see DESIGN.md §Substitutions):
+//!
+//! * [`rng`]   — deterministic PRNG (SplitMix64 seeding + xoshiro256**),
+//!   replacing `rand`.
+//! * [`json`]  — JSON parser/serializer, replacing `serde_json`.
+//! * [`cli`]   — tiny argv parser, replacing `clap`.
+//! * [`bench`] — measurement harness (warmup, repeats, percentile stats),
+//!   replacing `criterion`.
+//! * [`prop`]  — property-testing driver (random cases + shrinking-lite),
+//!   replacing `proptest`.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,122 @@
+//! Property-testing driver (replaces `proptest` offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` random
+//! seeds; on failure it reports the failing case's seed so the exact
+//! input can be replayed with `replay(seed, ...)`. No shrinking — cases
+//! are generated small-biased instead (sizes drawn log-uniformly), which
+//! in practice keeps counterexamples readable.
+
+use super::rng::Rng;
+
+/// Number of cases, overridable via `N2NET_PROP_CASES`.
+pub fn default_cases() -> usize {
+    std::env::var("N2NET_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `body` for `cases` deterministic seeds derived from `name`.
+///
+/// Panics (failing the enclosing test) with the seed on first failure.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(
+    name: &str,
+    cases: usize,
+    mut body: F,
+) {
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = body(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}): {msg}\n\
+                 replay: n2net::util::prop::replay({seed:#x}, body)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F: FnMut(&mut Rng) -> Result<(), String>>(seed: u64, mut body: F) {
+    let mut rng = Rng::seed_from_u64(seed);
+    if let Err(msg) = body(&mut rng) {
+        panic!("replay({seed:#x}) failed: {msg}");
+    }
+}
+
+/// Log-uniform size in `[lo, hi]` — biases property tests toward small
+/// cases without ever excluding big ones.
+pub fn log_uniform(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    assert!(lo >= 1 && lo <= hi);
+    let llo = (lo as f64).ln();
+    let lhi = (hi as f64).ln();
+    let v = (llo + rng.gen_f64() * (lhi - llo)).exp();
+    (v.round() as usize).clamp(lo, hi)
+}
+
+/// Pick a power of two in `[lo, hi]` (both powers of two) — activation
+/// widths in this codebase are always powers of two.
+pub fn pow2_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+    let lo_exp = lo.trailing_zeros() as usize;
+    let hi_exp = hi.trailing_zeros() as usize;
+    1 << rng.gen_range(lo_exp, hi_exp + 1)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        check("add-commutes", 32, |rng| {
+            let a = rng.next_u32() as u64;
+            let b = rng.next_u32() as u64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn fails_with_seed_reported() {
+        check("always-fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn pow2_in_bounds() {
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..200 {
+            let v = pow2_in(&mut rng, 16, 2048);
+            assert!(v.is_power_of_two() && (16..=2048).contains(&v));
+        }
+    }
+
+    #[test]
+    fn log_uniform_bounds() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut small = 0;
+        for _ in 0..500 {
+            let v = log_uniform(&mut rng, 1, 1000);
+            assert!((1..=1000).contains(&v));
+            if v <= 31 {
+                small += 1;
+            }
+        }
+        // log-uniform: [1,31] covers ~half the log range
+        assert!(small > 100, "small-case bias missing: {small}");
+    }
+}

@@ -1,0 +1,64 @@
+//! E2 — Figure 2 reproduction: the five-step schedule of a 3-neuron BNN.
+//!
+//! The paper's figure shows: (1) Replication, (2) XNOR and Duplication,
+//! (3) POPCNT as mask/sum element pairs, (4) SIGN, (5) Folding. This
+//! test golden-checks the structure of the emitted schedule.
+
+use n2net::bnn::BnnModel;
+use n2net::compiler::{Compiler, CompilerOptions, InputEncoding};
+use n2net::rmt::{ChipConfig, StepKind};
+
+fn compile_fig2() -> n2net::compiler::CompiledModel {
+    let model = BnnModel::random(32, &[3], 2018);
+    let opts = CompilerOptions {
+        input: InputEncoding::PayloadLe { offset: 0 },
+        ..Default::default()
+    };
+    Compiler::new(ChipConfig::rmt(), opts).compile(&model).unwrap()
+}
+
+#[test]
+fn five_step_structure() {
+    let compiled = compile_fig2();
+    let steps: Vec<StepKind> = compiled.program.elements.iter().map(|e| e.step).collect();
+
+    // Step 1: replication first (3 parallel neurons over 32b).
+    assert_eq!(steps[0], StepKind::Replication);
+    // Step 2: XNOR + duplication.
+    assert_eq!(steps[1], StepKind::XnorDup);
+    // Step 3: POPCNT = exactly 2·log2(32) = 10 elements, strictly
+    // alternating mask/sum pairs ("combining two pipeline's elements").
+    let popcnt: Vec<StepKind> = steps[2..12].to_vec();
+    for (i, s) in popcnt.iter().enumerate() {
+        let expect = if i % 2 == 0 { StepKind::PopcntMask } else { StepKind::PopcntSum };
+        assert_eq!(*s, expect, "popcnt element {i}");
+    }
+    // Step 4 and 5.
+    assert_eq!(steps[12], StepKind::Sign);
+    assert_eq!(steps[13], StepKind::Fold);
+    assert_eq!(steps.len(), 14); // Table 1 @32b
+
+    // The XNOR element stores the result twice (duplication): it writes
+    // 2 containers per replica = 6 micro-ops for 3 neurons.
+    let xnor = &compiled.program.elements[1];
+    assert_eq!(xnor.ops.len(), 6, "3 neurons × (A copy + B copy)");
+}
+
+#[test]
+fn schedule_listing_names_paper_steps() {
+    let compiled = compile_fig2();
+    let listing = compiled.program.schedule_listing();
+    for needle in ["Replication", "XNOR+Duplication", "POPCNT(mask)", "POPCNT(sum)", "SIGN", "Folding"] {
+        assert!(listing.contains(needle), "missing {needle} in:\n{listing}");
+    }
+}
+
+#[test]
+fn fig2_model_output_has_three_bits() {
+    let compiled = compile_fig2();
+    assert_eq!(compiled.output_bits, 3);
+    // The folding step produces one container holding the 3-bit Y vector.
+    let fold = compiled.program.elements.last().unwrap();
+    assert_eq!(fold.ops.len(), 1);
+    assert_eq!(fold.ops[0].slot_cost(), 3); // one gathered bit per neuron
+}

@@ -1,0 +1,163 @@
+//! Cross-module integration: apps + engine + compiler + simulator
+//! working together (no artifacts required — these use random models;
+//! the artifact-dependent path is covered by `oracle_roundtrip.rs` and
+//! `examples/e2e_pipeline.rs`).
+
+use n2net::apps::{lb_hints::hash_route_report, DdosFilter, HintRouter};
+use n2net::bnn::io::{DdosDoc, SubnetDoc};
+use n2net::bnn::{self, BnnModel, PackedBits};
+use n2net::compiler::{p4gen, Compiler, CompilerOptions, InputEncoding};
+use n2net::coordinator::{Engine, EngineConfig, RouterPolicy};
+use n2net::net::{TraceGenerator, TraceKind};
+use n2net::rmt::ChipConfig;
+
+fn test_ddos() -> DdosDoc {
+    DdosDoc {
+        subnets: vec![
+            SubnetDoc { prefix: 0xC0A80000, prefix_len: 16 },
+            SubnetDoc { prefix: 0x0A400000, prefix_len: 10 },
+            SubnetDoc { prefix: 0xAC100000, prefix_len: 12 },
+        ],
+        attack_fraction: 0.5,
+        seed: 77,
+    }
+}
+
+#[test]
+fn ddos_filter_agrees_with_reference_on_full_trace() {
+    let model = BnnModel::random(32, &[64, 32, 1], 101);
+    let ddos = test_ddos();
+    let mut filter = DdosFilter::new(&model, ChipConfig::rmt(), ddos.clone()).unwrap();
+    let mut gen = TraceGenerator::new(5);
+    let trace = gen.generate(&TraceKind::Ddos { ddos }, 400);
+    for (pkt, &key) in trace.packets.iter().zip(&trace.keys) {
+        let pred = filter.classify_frame(pkt).unwrap();
+        let expect = bnn::forward(&model, &PackedBits::from_u32(key)).get(0) as u32;
+        assert_eq!(pred, expect);
+    }
+    assert_eq!(filter.pipeline_stats().packets, 400);
+    assert_eq!(filter.pipeline_stats().parse_errors, 0);
+}
+
+#[test]
+fn engine_matches_single_pipeline_across_routers() {
+    let model = BnnModel::random(32, &[32, 16], 103);
+    let mut gen = TraceGenerator::new(9);
+    let trace = gen.generate(&TraceKind::UniformIps, 300);
+    let opts = CompilerOptions {
+        input: InputEncoding::BigEndianField {
+            offset: n2net::net::packet::IPV4_SRC_OFFSET,
+        },
+        ..Default::default()
+    };
+    let mut reference: Option<Vec<u32>> = None;
+    for (workers, router) in [
+        (1, RouterPolicy::RoundRobin),
+        (3, RouterPolicy::RoundRobin),
+        (3, RouterPolicy::FlowHash),
+    ] {
+        let compiled = Compiler::new(ChipConfig::rmt(), opts.clone())
+            .compile(&model)
+            .unwrap();
+        let engine = Engine::new(compiled, EngineConfig { n_workers: workers, router });
+        let report = engine.process_trace(&trace.packets).unwrap();
+        match &reference {
+            None => reference = Some(report.outputs),
+            Some(r) => assert_eq!(
+                &report.outputs, r,
+                "workers={workers} router={router:?} changed outputs"
+            ),
+        }
+    }
+}
+
+#[test]
+fn hint_router_and_hash_cover_all_queues() {
+    let model = BnnModel::random(32, &[16], 107);
+    let mut router = HintRouter::new(&model, ChipConfig::rmt(), 2).unwrap();
+    let mut gen = TraceGenerator::new(21);
+    let trace = gen.generate(&TraceKind::UniformIps, 2000);
+    let rep = router.evaluate(&trace).unwrap();
+    assert_eq!(rep.queue_counts.iter().sum::<usize>(), 2000);
+    let hash = hash_route_report(&trace, 2);
+    assert_eq!(hash.queue_counts.iter().sum::<usize>(), 2000);
+}
+
+#[test]
+fn p4_output_is_complete_for_use_case_model() {
+    let model = BnnModel::random(32, &[64, 32], 109);
+    let compiled = Compiler::rmt().compile(&model).unwrap();
+    let p4 = p4gen::render(&compiled.program, &compiled.parser, "usecase");
+    // One action per element, one table per weight-carrying element.
+    assert_eq!(p4.matches("action e").count(), 30);
+    assert_eq!(p4.matches("table tbl_").count(), 2); // one XNOR table/layer
+    assert!(p4.contains("apply"));
+}
+
+#[test]
+fn recirculation_path_still_correct() {
+    // A deep model (> 32 elements) exercises multi-pass semantics.
+    let model = BnnModel::random(32, &[64, 32, 32, 16], 113);
+    let opts = CompilerOptions {
+        input: InputEncoding::PayloadLe { offset: 0 },
+        ..Default::default()
+    };
+    let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model).unwrap();
+    assert!(compiled.resources.passes > 1, "model should recirculate");
+    let mut pipe = n2net::rmt::Pipeline::new(
+        ChipConfig::rmt(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        true,
+    )
+    .unwrap();
+    let mut rng = n2net::util::rng::Rng::seed_from_u64(3);
+    for _ in 0..10 {
+        let x = PackedBits::random(32, &mut rng);
+        let mut pkt = Vec::new();
+        for w in x.words() {
+            pkt.extend_from_slice(&w.to_le_bytes());
+        }
+        let phv = pipe.process_packet(&pkt).unwrap();
+        assert_eq!(compiled.read_output(&phv), bnn::forward(&model, &x));
+    }
+    // And the throughput model reflects the pass count.
+    let t = pipe.timing();
+    assert_eq!(t.pps, 960e6 / t.passes as f64);
+}
+
+#[test]
+fn oversized_model_is_graceful_error_without_recirculation() {
+    let model = BnnModel::random(32, &[64, 32, 32, 16], 115);
+    let opts = CompilerOptions {
+        input: InputEncoding::PayloadLe { offset: 0 },
+        allow_recirculation: false,
+        ..Default::default()
+    };
+    let msg = match Compiler::new(ChipConfig::rmt(), opts).compile(&model) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("oversized model compiled without recirculation"),
+    };
+    assert!(msg.contains("elements"), "unexpected error: {msg}");
+}
+
+#[test]
+fn malformed_traffic_never_panics_the_engine() {
+    let model = BnnModel::random(32, &[16], 117);
+    let opts = CompilerOptions {
+        input: InputEncoding::BigEndianField {
+            offset: n2net::net::packet::IPV4_SRC_OFFSET,
+        },
+        ..Default::default()
+    };
+    let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model).unwrap();
+    let engine = Engine::new(
+        compiled,
+        EngineConfig { n_workers: 2, router: RouterPolicy::RoundRobin },
+    );
+    // Garbage of every length 0..64.
+    let packets: Vec<Vec<u8>> = (0..64usize).map(|n| vec![0xAA; n]).collect();
+    let report = engine.process_trace(&packets).unwrap();
+    assert_eq!(report.outputs.len(), 64);
+    assert!(engine.metrics.packets_dropped.get() > 0);
+}

@@ -1,0 +1,125 @@
+//! Multi-model extension: several same-architecture BNNs installed in
+//! ONE pipeline program, with per-packet weight selection via a
+//! model-id header field matched in the XNOR elements' tables — the
+//! natural use of the match stage's SRAM ("the values in the PHV are
+//! used to perform table lookups and retrieve the instruction the
+//! processors should apply", paper §2).
+
+use n2net::bnn::{self, BnnModel, PackedBits};
+use n2net::compiler::{
+    Compiler, CompilerOptions, InputEncoding, MultiModelOptions,
+};
+use n2net::rmt::{ChipConfig, Pipeline};
+use n2net::util::rng::Rng;
+
+/// Packet: [model_id LE u32][activation words LE].
+fn frame(id: u32, x: &PackedBits) -> Vec<u8> {
+    let mut pkt = id.to_le_bytes().to_vec();
+    for w in x.words() {
+        pkt.extend_from_slice(&w.to_le_bytes());
+    }
+    pkt
+}
+
+fn compile_three() -> (Vec<(u32, BnnModel)>, n2net::compiler::CompiledModel) {
+    let models: Vec<(u32, BnnModel)> = vec![
+        (7, BnnModel::random(32, &[32, 16], 100)),
+        (13, BnnModel::random(32, &[32, 16], 200)),
+        (99, BnnModel::random(32, &[32, 16], 300)),
+    ];
+    let opts = CompilerOptions {
+        input: InputEncoding::PayloadLe { offset: 4 },
+        ..Default::default()
+    };
+    let compiled = Compiler::new(ChipConfig::rmt(), opts)
+        .compile_multi(&models, MultiModelOptions { id_offset: 0 })
+        .unwrap();
+    (models, compiled)
+}
+
+#[test]
+fn per_packet_model_selection_is_bit_exact() {
+    let (models, compiled) = compile_three();
+    let mut pipe = Pipeline::new(
+        ChipConfig::rmt(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        true,
+    )
+    .unwrap();
+    let mut rng = Rng::seed_from_u64(1);
+    for _ in 0..30 {
+        let x = PackedBits::random(32, &mut rng);
+        for (id, model) in &models {
+            let phv = pipe.process_packet(&frame(*id, &x)).unwrap();
+            let got = compiled.read_output(&phv);
+            let expect = bnn::forward(model, &x);
+            assert_eq!(got, expect, "model {id}, input {x:?}");
+        }
+    }
+}
+
+#[test]
+fn unknown_id_falls_back_to_default_model() {
+    let (models, compiled) = compile_three();
+    let mut pipe = Pipeline::new(
+        ChipConfig::rmt(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        true,
+    )
+    .unwrap();
+    let mut rng = Rng::seed_from_u64(2);
+    let x = PackedBits::random(32, &mut rng);
+    let phv = pipe.process_packet(&frame(0xFFFF_FFFF, &x)).unwrap();
+    // Miss -> default action data = the first model's weights.
+    assert_eq!(compiled.read_output(&phv), bnn::forward(&models[0].1, &x));
+}
+
+#[test]
+fn weight_tables_consume_sram_per_model() {
+    let (_models, compiled) = compile_three();
+    // Single-model compile of the same architecture for comparison.
+    let single = Compiler::new(
+        ChipConfig::rmt(),
+        CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 4 },
+            ..Default::default()
+        },
+    )
+    .compile(&BnnModel::random(32, &[32, 16], 100))
+    .unwrap();
+    assert!(
+        compiled.resources.sram_bits > 2 * single.resources.sram_bits,
+        "3 models must cost more table SRAM than 1: {} vs {}",
+        compiled.resources.sram_bits,
+        single.resources.sram_bits
+    );
+    // Same element count — model count costs SRAM, not pipeline stages.
+    assert_eq!(
+        compiled.program.n_elements(),
+        single.program.n_elements()
+    );
+}
+
+#[test]
+fn mismatched_architectures_rejected() {
+    let models = vec![
+        (1u32, BnnModel::random(32, &[32, 16], 1)),
+        (2u32, BnnModel::random(32, &[16, 16], 2)),
+    ];
+    let err = Compiler::new(ChipConfig::rmt(), CompilerOptions::default())
+        .compile_multi(&models, MultiModelOptions { id_offset: 0 });
+    assert!(err.is_err());
+}
+
+#[test]
+fn layout_never_touches_the_id_container() {
+    let (_models, compiled) = compile_three();
+    let id_slot = ChipConfig::rmt().phv.containers32().last().unwrap().0;
+    for e in &compiled.program.elements {
+        for op in &e.ops {
+            assert_ne!(op.dst().0, id_slot, "element {:?} writes the id", e.label);
+        }
+    }
+}

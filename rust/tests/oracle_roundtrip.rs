@@ -1,0 +1,58 @@
+//! AOT bridge integration: artifacts built by `make artifacts` load and
+//! execute via PJRT, agree with the golden vectors baked at export time,
+//! and agree bit-for-bit with the Rust reference forward pass.
+//!
+//! These tests require `artifacts/` (they are the point of the bridge);
+//! they fail with a clear message if `make artifacts` has not run.
+
+use n2net::bnn::{self, PackedBits};
+use n2net::runtime::Oracle;
+use n2net::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Oracle::default_dir()
+}
+
+#[test]
+fn oracle_loads_and_passes_golden_self_test() {
+    let oracle = Oracle::load(artifacts_dir()).expect("run `make artifacts` first");
+    assert_eq!(oracle.platform(), "cpu");
+    oracle.self_test().expect("golden vectors must match bit-for-bit");
+}
+
+#[test]
+fn oracle_matches_rust_reference_forward() {
+    let oracle = Oracle::load(artifacts_dir()).expect("run `make artifacts` first");
+    let (model, _doc) =
+        bnn::load_weights(artifacts_dir().join("weights.json")).unwrap();
+    assert_eq!(oracle.n_layers(), model.spec.n_layers());
+
+    // 200 random 32-bit inputs — chunking also exercises padding.
+    let mut rng = Rng::seed_from_u64(0xA0A0);
+    let inputs: Vec<Vec<u32>> = (0..200).map(|_| vec![rng.next_u32()]).collect();
+    let out = oracle.run(&inputs).unwrap();
+
+    for (i, input) in inputs.iter().enumerate() {
+        let x = PackedBits::from_u32(input[0]);
+        let traces = bnn::forward_trace(&model, &x);
+        for (l, t) in traces.iter().enumerate() {
+            assert_eq!(
+                out.sign_packed[l][i],
+                t.signs.words().to_vec(),
+                "layer {l} sign bits diverge on input {i} ({:#x})",
+                input[0]
+            );
+        }
+        // Final popcounts too.
+        let last = traces.last().unwrap();
+        let expect: Vec<i32> = last.popcounts.iter().map(|&p| p as i32).collect();
+        assert_eq!(out.final_popcount[i], expect, "popcount diverges on input {i}");
+    }
+}
+
+#[test]
+fn oracle_rejects_wrong_width() {
+    let oracle = Oracle::load(artifacts_dir()).expect("run `make artifacts` first");
+    let err = oracle.run(&[vec![1, 2, 3]]).unwrap_err();
+    assert!(err.to_string().contains("packed words"));
+}
