@@ -70,12 +70,19 @@ fn main() -> anyhow::Result<()> {
     let n_workers = std::thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(4);
     let engine = Engine::new(
         compiled,
-        EngineConfig { n_workers, router: RouterPolicy::RoundRobin },
+        EngineConfig {
+            n_workers,
+            router: RouterPolicy::RoundRobin,
+            ..Default::default()
+        },
     );
     let t0 = Instant::now();
     let report = engine.process_trace(&trace.packets)?;
     let wall = t0.elapsed();
-    println!("\n[3] served {} packets with {n_workers} workers in {:.2?}", N_PACKETS, wall);
+    println!(
+        "\n[3] served {} packets with {n_workers} workers ({} backend) in {:.2?}",
+        N_PACKETS, report.backend, wall
+    );
     println!(
         "    host simulator: {:.2} M packets/s | modeled ASIC: {:.0} M packets/s",
         report.sim_pps / 1e6,

@@ -1,9 +1,11 @@
 //! E4/E9 bench: end-to-end engine throughput on the DDoS workload —
 //! the two-layer use-case model served through the multi-worker engine,
-//! plus batcher-policy sensitivity.
+//! now entirely behind the [`InferenceBackend`] trait: the same serving
+//! loop is measured on the scalar pipeline and the batched SoA tape.
 //!
 //! `cargo bench --bench e2e`
 
+use n2net::backend::BackendKind;
 use n2net::bnn::BnnModel;
 use n2net::compiler::{Compiler, CompilerOptions, InputEncoding};
 use n2net::coordinator::{Batch, BatchPolicy, Batcher, Engine, EngineConfig, RouterPolicy};
@@ -13,7 +15,7 @@ use n2net::rmt::ChipConfig;
 use n2net::util::bench::{default_bencher, format_rate, keep, Report};
 
 fn main() {
-    println!("# E4/E9 — end-to-end engine throughput");
+    println!("# E4/E9 — end-to-end engine throughput (via InferenceBackend)");
     // The paper's use-case model (+1-bit head for classification).
     let model = BnnModel::random(32, &[64, 32, 1], 2024);
     let opts = CompilerOptions {
@@ -32,26 +34,30 @@ fn main() {
     let b = default_bencher();
     let mut report = Report::new("engine trace throughput (8192-packet trace per iter)");
     report.header();
-    for workers in [1usize, 2, 4] {
-        let compiled = Compiler::new(ChipConfig::rmt(), opts.clone())
-            .compile(&model)
-            .unwrap();
-        let engine = Engine::new(
-            compiled,
-            EngineConfig { n_workers: workers, router: RouterPolicy::RoundRobin },
-        );
-        let stats = b.run(
-            &format!("engine workers={workers}"),
-            trace.packets.len() as f64,
-            || {
-                keep(engine.process_trace(&trace.packets).unwrap());
-            },
-        );
-        println!(
-            "    -> sustained {}",
-            format_rate(stats.items_per_sec())
-        );
-        report.add(stats);
+    for backend in [BackendKind::Scalar, BackendKind::Batched] {
+        for workers in [1usize, 2, 4] {
+            let compiled = Compiler::new(ChipConfig::rmt(), opts.clone())
+                .compile(&model)
+                .unwrap();
+            let engine = Engine::new(
+                compiled,
+                EngineConfig {
+                    n_workers: workers,
+                    router: RouterPolicy::RoundRobin,
+                    backend,
+                    ..Default::default()
+                },
+            );
+            let stats = b.run(
+                &format!("{} workers={workers}", backend.name()),
+                trace.packets.len() as f64,
+                || {
+                    keep(engine.process_trace(&trace.packets).unwrap());
+                },
+            );
+            println!("    -> sustained {}", format_rate(stats.items_per_sec()));
+            report.add(stats);
+        }
     }
 
     // Modeled ASIC for the same program.

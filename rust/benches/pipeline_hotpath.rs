@@ -1,18 +1,25 @@
 //! L3 hot-path microbenchmarks — the §Perf instrument (DESIGN.md §9).
 //!
 //! Measures the simulator's inner loops in isolation:
-//!   * element execution (per element, per op)
 //!   * full per-packet pipeline traversal (the use-case model)
+//!   * batched SoA execution at increasing batch sizes (DESIGN.md §10)
 //!   * parsing
 //!   * PHV allocation vs reuse
+//!
+//! Emits machine-readable records to `BENCH_pipeline.json` (pps, batch
+//! size, backend) so the perf trajectory is tracked across PRs.
 //!
 //! `cargo bench --bench pipeline_hotpath`
 
 use n2net::bnn::BnnModel;
 use n2net::compiler::{Compiler, CompilerOptions, InputEncoding};
 use n2net::net::packet::PacketBuilder;
-use n2net::rmt::{ChipConfig, Phv, Pipeline};
-use n2net::util::bench::{default_bencher, keep, Report};
+use n2net::rmt::{BatchedTape, ChipConfig, Phv, Pipeline};
+use n2net::util::bench::{
+    default_bencher, keep, write_bench_json, BenchRecord, Report,
+};
+
+const BENCH_JSON: &str = "BENCH_pipeline.json";
 
 fn main() {
     let chip = ChipConfig::rmt();
@@ -37,10 +44,11 @@ fn main() {
     );
 
     let b = default_bencher();
+    let mut records: Vec<BenchRecord> = Vec::new();
     let mut report = Report::new("simulator inner loops");
     report.header();
 
-    // Full packet: parse + 30 elements.
+    // Full packet: parse + 30 elements, one packet at a time.
     let frame = PacketBuilder::default().build_activations(&[0xDEADBEEF]);
     let mut pipe = Pipeline::new(
         chip.clone(),
@@ -49,12 +57,19 @@ fn main() {
         false,
     )
     .unwrap();
-    let s = b.run("process_packet (parse+30 elem)", 1.0, || {
+    let scalar_stats = b.run("process_packet (parse+30 elem)", 1.0, || {
         keep(pipe.process_packet(&frame).unwrap());
     });
-    let per_elem = s.median_ns / n_elements as f64;
-    let per_op = s.median_ns / total_ops as f64;
-    report.add(s);
+    let per_elem = scalar_stats.median_ns / n_elements as f64;
+    let per_op = scalar_stats.median_ns / total_ops as f64;
+    let scalar_pps = scalar_stats.items_per_sec();
+    records.push(BenchRecord::from_stats(
+        "pipeline_hotpath",
+        "scalar",
+        1,
+        &scalar_stats,
+    ));
+    report.add(scalar_stats);
 
     // PHV-reuse path (no per-packet allocation).
     let mut phv = Phv::zeroed(&chip.phv);
@@ -70,6 +85,44 @@ fn main() {
     });
     report.add(s);
 
+    // Batched SoA execution across batch sizes (same model, same
+    // parse): the op dispatch amortizes over the whole batch.
+    let mut tape = BatchedTape::new(
+        chip.clone(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        false,
+    )
+    .unwrap();
+    let mut speedup_at_64 = 0.0f64;
+    for batch_size in [1usize, 16, 64, 256, 1024] {
+        let packets: Vec<Vec<u8>> = (0..batch_size)
+            .map(|i| {
+                PacketBuilder::default()
+                    .build_activations(&[0xDEADBEEF ^ (i as u32).wrapping_mul(0x9E37)])
+            })
+            .collect();
+        let s = b.run(
+            &format!("batched process_batch (B={batch_size})"),
+            batch_size as f64,
+            || {
+                let out = tape.process_batch(&packets);
+                keep(out.n_ok());
+            },
+        );
+        let pps = s.items_per_sec();
+        if batch_size == 64 {
+            speedup_at_64 = pps / scalar_pps;
+        }
+        records.push(BenchRecord::from_stats(
+            "pipeline_hotpath",
+            "batched",
+            batch_size,
+            &s,
+        ));
+        report.add(s);
+    }
+
     // Parser alone.
     let mut phv2 = Phv::zeroed(&chip.phv);
     let s = b.run("parser only", 1.0, || {
@@ -84,11 +137,17 @@ fn main() {
     report.add(s);
 
     println!(
-        "\nderived: ~{:.0} ns/element, ~{:.1} ns/op-slot",
-        per_elem, per_op
+        "\nderived: ~{:.0} ns/element, ~{:.1} ns/op-slot (scalar), \
+         batched speedup at B=64: {:.2}x",
+        per_elem, per_op, speedup_at_64
     );
     println!(
-        "target (DESIGN.md §9): ≥1 M packets/s single-core for this model \
-         (≤1000 ns/packet)"
+        "target (DESIGN.md §9/§10): ≥1 M packets/s single-core scalar for \
+         this model, ≥2x simulated-pps for the batched path at B≥64"
     );
+
+    match write_bench_json(BENCH_JSON, "pipeline_hotpath", &records) {
+        Ok(()) => println!("wrote {} records to {BENCH_JSON}", records.len()),
+        Err(e) => eprintln!("warning: could not write {BENCH_JSON}: {e}"),
+    }
 }

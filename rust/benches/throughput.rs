@@ -1,6 +1,9 @@
 //! E3 bench: the paper's throughput-scaling series — modeled ASIC rate
 //! (960 Mpps × parallel neurons) alongside the *measured* software
-//! simulator rate for the same programs.
+//! simulator rate for the same programs, on both the scalar per-packet
+//! path and the batched SoA path (DESIGN.md §10).
+//!
+//! Appends machine-readable records to `BENCH_pipeline.json`.
 //!
 //! `cargo bench --bench throughput`
 
@@ -8,9 +11,14 @@ use n2net::analysis::throughput::throughput_table;
 use n2net::bnn::{BnnModel, PackedBits};
 use n2net::compiler::layout::max_parallel_neurons;
 use n2net::compiler::{Compiler, CompilerOptions, InputEncoding};
-use n2net::rmt::{ChipConfig, Pipeline};
-use n2net::util::bench::{default_bencher, format_rate, Report};
+use n2net::rmt::{BatchedTape, ChipConfig, Pipeline};
+use n2net::util::bench::{
+    default_bencher, format_rate, write_bench_json, BenchRecord, Report,
+};
 use n2net::util::rng::Rng;
+
+const BENCH_JSON: &str = "BENCH_pipeline.json";
+const BATCH: usize = 256;
 
 fn main() {
     let chip = ChipConfig::rmt();
@@ -37,9 +45,12 @@ fn main() {
     assert_eq!(r2048.neurons_per_sec, 960e6);
     println!("paper headline reproduced: 960 M neurons/s @ 2048 b ✓");
 
-    // Measured software-simulator packet rate per configuration.
+    // Measured software-simulator packet rate per configuration, scalar
+    // vs batched SoA.
     let b = default_bencher();
-    let mut report = Report::new("software simulator packet rate (measured, per config)");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut report =
+        Report::new("software simulator packet rate (measured, per config)");
     report.header();
     for n in [16usize, 32, 64, 256, 1024, 2048] {
         let p = if n == 16 { 64 } else { max_parallel_neurons(&chip, n) };
@@ -58,7 +69,7 @@ fn main() {
         .unwrap();
         // Pre-build a packet ring so packet construction isn't measured.
         let mut rng = Rng::seed_from_u64(4);
-        let packets: Vec<Vec<u8>> = (0..64)
+        let packets: Vec<Vec<u8>> = (0..BATCH)
             .map(|_| {
                 let x = PackedBits::random(n, &mut rng);
                 let mut pkt = Vec::new();
@@ -69,11 +80,35 @@ fn main() {
             })
             .collect();
         let mut i = 0usize;
-        let stats = b.run(&format!("simulate N={n} M={p} (pkt/iter)"), 1.0, || {
-            let pkt = &packets[i & 63];
+        let stats = b.run(&format!("scalar N={n} M={p} (pkt/iter)"), 1.0, || {
+            let pkt = &packets[i % BATCH];
             i += 1;
             let _ = pipe.process_packet(pkt).unwrap();
         });
+        records.push(BenchRecord::from_stats("throughput", "scalar", 1, &stats));
         report.add(stats);
+
+        let mut tape = BatchedTape::new(
+            chip.clone(),
+            compiled.program.clone(),
+            compiled.parser.clone(),
+            true,
+        )
+        .unwrap();
+        let stats = b.run(
+            &format!("batched N={n} M={p} (B={BATCH})"),
+            BATCH as f64,
+            || {
+                let out = tape.process_batch(&packets);
+                std::hint::black_box(out.n_ok());
+            },
+        );
+        records.push(BenchRecord::from_stats("throughput", "batched", BATCH, &stats));
+        report.add(stats);
+    }
+
+    match write_bench_json(BENCH_JSON, "throughput", &records) {
+        Ok(()) => println!("\nwrote {} records to {BENCH_JSON}", records.len()),
+        Err(e) => eprintln!("warning: could not write {BENCH_JSON}: {e}"),
     }
 }

@@ -6,21 +6,29 @@
 //! paper's §1 motivation that "a NN can better fit the data at hand,
 //! potentially reducing the memory requirements at the cost of extra
 //! computation").
+//!
+//! The filter is written against [`InferenceBackend`], so the same app
+//! code runs on the scalar cycle-level pipeline, the batched SoA tape
+//! (default), or the trusted reference forward; the LUT comparison goes
+//! through the same trait via [`LutBackend`].
 
+use std::sync::Arc;
+
+use crate::backend::{make_backend, BackendKind, InferenceBackend, LutBackend};
+use crate::baseline::LutClassifier;
 use crate::bnn::io::DdosDoc;
 use crate::bnn::BnnModel;
-use crate::baseline::LutClassifier;
 use crate::compiler::{CompiledModel, Compiler, CompilerOptions, InputEncoding};
 use crate::error::Result;
 use crate::net::packet::IPV4_SRC_OFFSET;
 use crate::net::{Trace, TraceGenerator, TraceKind};
-use crate::rmt::{ChipConfig, Pipeline};
+use crate::rmt::ChipConfig;
 use crate::util::rng::Rng;
 
 /// The in-switch DDoS filter: a compiled BNN classifying on src IP.
 pub struct DdosFilter {
-    pub compiled: CompiledModel,
-    pipeline: Pipeline,
+    pub compiled: Arc<CompiledModel>,
+    backend: Box<dyn InferenceBackend>,
     pub ddos: DdosDoc,
 }
 
@@ -41,60 +49,95 @@ pub struct DdosReport {
     pub lut: ClassifierEval,
 }
 
+/// Confusion-matrix rates for a prediction/label pair list.
+fn eval_rates(preds: &[u32], labels: &[u32], sram_bits: usize) -> ClassifierEval {
+    let mut correct = 0usize;
+    let (mut fp, mut fng, mut pos, mut neg) = (0usize, 0usize, 0usize, 0usize);
+    for (&pred, &label) in preds.iter().zip(labels) {
+        if pred == label {
+            correct += 1;
+        }
+        if label == 1 {
+            pos += 1;
+            if pred == 0 {
+                fng += 1;
+            }
+        } else {
+            neg += 1;
+            if pred == 1 {
+                fp += 1;
+            }
+        }
+    }
+    ClassifierEval {
+        accuracy: correct as f64 / preds.len().max(1) as f64,
+        false_positive_rate: fp as f64 / neg.max(1) as f64,
+        false_negative_rate: fng as f64 / pos.max(1) as f64,
+        sram_bits,
+    }
+}
+
 impl DdosFilter {
-    /// Compile `model` for src-IP classification on `chip`.
+    /// Compile `model` for src-IP classification on `chip`, served by
+    /// the default (batched) backend.
     pub fn new(model: &BnnModel, chip: ChipConfig, ddos: DdosDoc) -> Result<Self> {
+        Self::with_backend(model, chip, ddos, BackendKind::default())
+    }
+
+    /// Same, with an explicit backend choice.
+    pub fn with_backend(
+        model: &BnnModel,
+        chip: ChipConfig,
+        ddos: DdosDoc,
+        kind: BackendKind,
+    ) -> Result<Self> {
         let opts = CompilerOptions {
             input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
             ..Default::default()
         };
-        let compiled = Compiler::new(chip.clone(), opts).compile(model)?;
-        let pipeline = Pipeline::new(
-            chip,
-            compiled.program.clone(),
-            compiled.parser.clone(),
-            true,
-        )?;
-        Ok(Self { compiled, pipeline, ddos })
+        let compiled = Arc::new(Compiler::new(chip, opts).compile(model)?);
+        // Only the reference backend needs the weights back; don't
+        // deep-copy the model for the pipeline-driven backends.
+        let backend = if kind == BackendKind::Reference {
+            let model = Arc::new(model.clone());
+            make_backend(kind, &compiled, Some(&model))?
+        } else {
+            make_backend(kind, &compiled, None)?
+        };
+        Ok(Self { compiled, backend, ddos })
+    }
+
+    /// Name of the backend serving this filter.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.caps().name
     }
 
     /// Classify one frame: 1 = blacklisted. Output bit 0 of the model.
+    /// A malformed frame is an error.
     pub fn classify_frame(&mut self, frame: &[u8]) -> Result<u32> {
-        let phv = self.pipeline.process_packet(frame)?;
-        Ok(self.compiled.read_output(&phv).get(0) as u32)
+        Ok(crate::backend::run_one(self.backend.as_mut(), frame)? & 1)
+    }
+
+    /// Classify a whole packet stream in backend-sized batches;
+    /// malformed packets classify as 0 (pass) without failing the run.
+    pub fn classify_trace(&mut self, packets: &[Vec<u8>]) -> Result<Vec<u32>> {
+        let words = crate::backend::run_chunked(self.backend.as_mut(), packets)?;
+        Ok(words.into_iter().map(|w| w & 1).collect())
     }
 
     /// Evaluate on a labeled trace.
     pub fn evaluate(&mut self, trace: &Trace) -> Result<ClassifierEval> {
-        let mut correct = 0usize;
-        let (mut fp, mut fng, mut pos, mut neg) = (0usize, 0usize, 0usize, 0usize);
-        for (pkt, &label) in trace.packets.iter().zip(&trace.labels) {
-            let pred = self.classify_frame(pkt)?;
-            if pred == label {
-                correct += 1;
-            }
-            if label == 1 {
-                pos += 1;
-                if pred == 0 {
-                    fng += 1;
-                }
-            } else {
-                neg += 1;
-                if pred == 1 {
-                    fp += 1;
-                }
-            }
-        }
-        Ok(ClassifierEval {
-            accuracy: correct as f64 / trace.packets.len().max(1) as f64,
-            false_positive_rate: fp as f64 / neg.max(1) as f64,
-            false_negative_rate: fng as f64 / pos.max(1) as f64,
-            sram_bits: self.compiled.resources.sram_bits,
-        })
+        let preds = self.classify_trace(&trace.packets)?;
+        Ok(eval_rates(
+            &preds,
+            &trace.labels,
+            self.compiled.resources.sram_bits,
+        ))
     }
 
     /// Run the E8 comparison: this BNN vs an exact-match LUT given the
-    /// *same* SRAM budget the BNN's weights consume.
+    /// *same* SRAM budget the BNN's weights consume — both behind the
+    /// [`InferenceBackend`] trait.
     pub fn compare_with_lut(
         &mut self,
         n_packets: usize,
@@ -109,39 +152,20 @@ impl DdosFilter {
         let mut lut = LutClassifier::with_budget_bits(budget.max(96));
         let mut rng = Rng::seed_from_u64(seed ^ 0x1u64);
         lut.populate_from(&self.ddos, &mut rng);
-        let mut correct = 0usize;
-        let (mut fp, mut fng, mut pos, mut neg) = (0usize, 0usize, 0usize, 0usize);
-        for (&key, &label) in trace.keys.iter().zip(&trace.labels) {
-            let pred = lut.classify(key);
-            if pred == label {
-                correct += 1;
-            }
-            if label == 1 {
-                pos += 1;
-                if pred == 0 {
-                    fng += 1;
-                }
-            } else {
-                neg += 1;
-                if pred == 1 {
-                    fp += 1;
-                }
-            }
-        }
+        let mut lut_backend = LutBackend::new(lut);
+        let refs: Vec<&[u8]> = trace.packets.iter().map(|p| p.as_slice()).collect();
+        let mut lut_preds = Vec::new();
+        lut_backend.run_batch(&refs, &mut lut_preds)?;
+        let lut_sram = lut_backend.classifier().sram_bits();
         Ok(DdosReport {
             n_packets,
             bnn,
-            lut: ClassifierEval {
-                accuracy: correct as f64 / n_packets.max(1) as f64,
-                false_positive_rate: fp as f64 / neg.max(1) as f64,
-                false_negative_rate: fng as f64 / pos.max(1) as f64,
-                sram_bits: lut.sram_bits(),
-            },
+            lut: eval_rates(&lut_preds, &trace.labels, lut_sram),
         })
     }
 
     pub fn pipeline_stats(&self) -> crate::rmt::PipelineStats {
-        self.pipeline.stats()
+        self.backend.stats()
     }
 }
 
@@ -192,23 +216,35 @@ mod tests {
         let b = f.classify_frame(&frame).unwrap();
         assert_eq!(a, b);
         assert!(a <= 1);
+        assert_eq!(f.backend_name(), "batched");
     }
 
     #[test]
     fn switch_classification_equals_reference_model() {
-        // The switch's per-packet prediction must equal bnn::forward on
-        // the src IP for every packet.
+        // Every backend's per-packet prediction must equal bnn::forward
+        // on the src IP for every packet.
         let model = BnnModel::random(32, &[32, 1], 5);
         let ddos = test_ddos();
-        let mut f = DdosFilter::new(&model, ChipConfig::rmt(), ddos.clone()).unwrap();
         let mut gen = TraceGenerator::new(11);
-        let trace = gen.generate(&TraceKind::Ddos { ddos }, 100);
-        for (pkt, &key) in trace.packets.iter().zip(&trace.keys) {
-            let pred = f.classify_frame(pkt).unwrap();
-            let x = crate::bnn::PackedBits::from_u32(key);
-            let expect = crate::bnn::forward(&model, &x).get(0) as u32;
-            assert_eq!(pred, expect, "ip {key:#x}");
+        let trace = gen.generate(&TraceKind::Ddos { ddos: ddos.clone() }, 100);
+        for kind in [BackendKind::Scalar, BackendKind::Batched, BackendKind::Reference] {
+            let mut f =
+                DdosFilter::with_backend(&model, ChipConfig::rmt(), ddos.clone(), kind)
+                    .unwrap();
+            let preds = f.classify_trace(&trace.packets).unwrap();
+            for (i, &key) in trace.keys.iter().enumerate() {
+                let x = crate::bnn::PackedBits::from_u32(key);
+                let expect = crate::bnn::forward(&model, &x).get(0) as u32;
+                assert_eq!(preds[i], expect, "{} ip {key:#x}", kind.name());
+            }
         }
+    }
+
+    #[test]
+    fn malformed_frame_is_an_error_for_classify_frame() {
+        let model = BnnModel::random(32, &[16, 1], 4);
+        let mut f = DdosFilter::new(&model, ChipConfig::rmt(), test_ddos()).unwrap();
+        assert!(f.classify_frame(&[0u8; 3]).is_err());
     }
 
     #[test]

@@ -8,18 +8,24 @@
 //! packets with similar header features land on the same server (data
 //! locality) while the population spreads across queues. The report
 //! compares queue balance and flow affinity against a plain hash.
+//!
+//! Like [`super::ddos`], the router is written against
+//! [`InferenceBackend`] and batches whole traces through `run_batch`.
 
+use std::sync::Arc;
+
+use crate::backend::{make_backend, BackendKind, InferenceBackend};
 use crate::bnn::BnnModel;
 use crate::compiler::{CompiledModel, Compiler, CompilerOptions, InputEncoding};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::net::packet::IPV4_SRC_OFFSET;
 use crate::net::Trace;
-use crate::rmt::{ChipConfig, Pipeline};
+use crate::rmt::ChipConfig;
 
 /// The hint router: BNN output bits → server queue index.
 pub struct HintRouter {
-    pub compiled: CompiledModel,
-    pipeline: Pipeline,
+    pub compiled: Arc<CompiledModel>,
+    backend: Box<dyn InferenceBackend>,
     /// Hint width: queue = low `hint_bits` of the model output.
     pub hint_bits: usize,
 }
@@ -37,42 +43,71 @@ pub struct LbReport {
 }
 
 impl HintRouter {
+    /// Compile `model` for hint routing, served by the default
+    /// (batched) backend.
     pub fn new(model: &BnnModel, chip: ChipConfig, hint_bits: usize) -> Result<Self> {
-        assert!(hint_bits >= 1 && hint_bits <= model.spec.layer_sizes.last().copied().unwrap_or(1));
+        Self::with_backend(model, chip, hint_bits, BackendKind::default())
+    }
+
+    /// Same, with an explicit backend choice.
+    pub fn with_backend(
+        model: &BnnModel,
+        chip: ChipConfig,
+        hint_bits: usize,
+        kind: BackendKind,
+    ) -> Result<Self> {
+        let out_bits = model.spec.layer_sizes.last().copied().unwrap_or(1);
+        if hint_bits < 1 || hint_bits > out_bits.min(32) {
+            return Err(Error::Config(format!(
+                "hint_bits {hint_bits} not in 1..={} for this model",
+                out_bits.min(32)
+            )));
+        }
         let opts = CompilerOptions {
             input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
             ..Default::default()
         };
-        let compiled = Compiler::new(chip.clone(), opts).compile(model)?;
-        let pipeline = Pipeline::new(
-            chip,
-            compiled.program.clone(),
-            compiled.parser.clone(),
-            true,
-        )?;
-        Ok(Self { compiled, pipeline, hint_bits })
+        let compiled = Arc::new(Compiler::new(chip, opts).compile(model)?);
+        // Only the reference backend needs the weights back; don't
+        // deep-copy the model for the pipeline-driven backends.
+        let backend = if kind == BackendKind::Reference {
+            let model = Arc::new(model.clone());
+            make_backend(kind, &compiled, Some(&model))?
+        } else {
+            make_backend(kind, &compiled, None)?
+        };
+        Ok(Self { compiled, backend, hint_bits })
     }
 
-    /// Route one frame to a queue in `[0, 2^hint_bits)`.
+    /// Low-`hint_bits` mask (hint_bits is validated to be ≤ 32).
+    fn hint_mask(&self) -> u32 {
+        crate::backend::out_mask(self.hint_bits)
+    }
+
+    /// Route one frame to a queue in `[0, 2^hint_bits)`. A malformed
+    /// frame is an error (the switch would drop it, not hint it).
     pub fn route(&mut self, frame: &[u8]) -> Result<usize> {
-        let phv = self.pipeline.process_packet(frame)?;
-        let out = self.compiled.read_output(&phv);
-        let mut hint = 0usize;
-        for b in 0..self.hint_bits {
-            hint |= (out.get(b) as usize) << b;
-        }
-        Ok(hint)
+        let word = crate::backend::run_one(self.backend.as_mut(), frame)?;
+        Ok((word & self.hint_mask()) as usize)
+    }
+
+    /// Route a whole stream in backend-sized batches; malformed packets
+    /// route to queue 0 without failing the run.
+    pub fn route_trace(&mut self, packets: &[Vec<u8>]) -> Result<Vec<usize>> {
+        let mask = self.hint_mask();
+        let words = crate::backend::run_chunked(self.backend.as_mut(), packets)?;
+        Ok(words.into_iter().map(|w| (w & mask) as usize).collect())
     }
 
     /// Route a whole trace and report balance + affinity.
     pub fn evaluate(&mut self, trace: &Trace) -> Result<LbReport> {
         let n_servers = 1usize << self.hint_bits;
+        let queues = self.route_trace(&trace.packets)?;
         let mut counts = vec![0usize; n_servers];
         let mut first: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
         let mut repeats = 0usize;
         let mut affine = 0usize;
-        for (pkt, &key) in trace.packets.iter().zip(&trace.keys) {
-            let q = self.route(pkt)?;
+        for (&q, &key) in queues.iter().zip(&trace.keys) {
             counts[q] += 1;
             match first.get(&key) {
                 Some(&q0) => {
@@ -154,6 +189,37 @@ mod tests {
         let rep = r.evaluate(&trace).unwrap();
         assert_eq!(rep.affinity, 1.0); // same IP ⇒ same hint, always
         assert_eq!(rep.queue_counts.iter().sum::<usize>(), 400);
+    }
+
+    #[test]
+    fn backends_route_identically() {
+        let model = BnnModel::random(32, &[16], 23);
+        let mut gen = TraceGenerator::new(8);
+        let trace = gen.generate(&TraceKind::UniformIps, 128);
+        let mut expect: Option<Vec<usize>> = None;
+        for kind in [BackendKind::Scalar, BackendKind::Batched, BackendKind::Reference] {
+            let mut r =
+                HintRouter::with_backend(&model, ChipConfig::rmt(), 3, kind).unwrap();
+            let queues = r.route_trace(&trace.packets).unwrap();
+            match &expect {
+                None => expect = Some(queues),
+                Some(e) => assert_eq!(e, &queues, "{}", kind.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_frame_is_an_error_for_route() {
+        let model = BnnModel::random(32, &[16], 25);
+        let mut r = HintRouter::new(&model, ChipConfig::rmt(), 2).unwrap();
+        assert!(r.route(&[0u8; 3]).is_err());
+    }
+
+    #[test]
+    fn invalid_hint_width_rejected() {
+        let model = BnnModel::random(32, &[16], 24);
+        assert!(HintRouter::new(&model, ChipConfig::rmt(), 0).is_err());
+        assert!(HintRouter::new(&model, ChipConfig::rmt(), 17).is_err());
     }
 
     #[test]

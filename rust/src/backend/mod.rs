@@ -1,0 +1,503 @@
+//! The unified inference backend abstraction (DESIGN.md §10).
+//!
+//! Everything that can classify packets sits behind one trait —
+//! [`InferenceBackend`] — so the serving engine, the paper's use-case
+//! apps, and the benches are all written once against `run_batch` and
+//! pick an execution strategy at configuration time:
+//!
+//! * [`ScalarPipelineBackend`] — the cycle-level simulator, one packet
+//!   at a time ([`Pipeline`]);
+//! * [`BatchedTapeBackend`] — the SoA batch executor
+//!   ([`BatchedTape`]), the default serving path;
+//! * [`ReferenceBackend`] — the trusted CPU reference forward
+//!   ([`crate::bnn::forward`]), for ground-truth serving and A/B checks;
+//! * [`LutBackend`] — the exact-match lookup-table baseline the paper
+//!   argues against, for apples-to-apples comparisons.
+//!
+//! This seam is where future scaling work plugs in: a multi-chip
+//! sharding backend, an async ingest backend, or a PJRT-offload backend
+//! each only have to implement `run_batch`.
+
+use std::sync::Arc;
+
+use crate::baseline::LutClassifier;
+use crate::bnn::{self, BnnModel, PackedBits};
+use crate::compiler::CompiledModel;
+use crate::error::{Error, Result};
+use crate::net::packet::parse_src_ip;
+use crate::rmt::{BatchedTape, Phv, Pipeline, PipelineStats};
+
+/// Static capabilities a backend reports at configuration time.
+#[derive(Clone, Debug)]
+pub struct BackendCaps {
+    /// Short stable identifier (also the CLI / bench-record name).
+    pub name: &'static str,
+    /// True when `run_batch` executes lanes data-parallel (SoA) rather
+    /// than looping packets.
+    pub data_parallel: bool,
+    /// Batch size the backend amortizes best at (1 for scalar paths).
+    pub preferred_batch: usize,
+    /// What the modeled ASIC would sustain for this program, if the
+    /// backend simulates one.
+    pub modeled_pps: Option<f64>,
+}
+
+/// A packet classifier: raw frames in, one output word per frame out.
+///
+/// Output convention: the low `min(32, output_bits)` packed output bits
+/// of the model (bit 0 = neuron 0 of the last layer). Malformed packets
+/// yield `0` and are counted in [`PipelineStats::parse_errors`] — a
+/// switch drops them without stalling the pipeline, so backends must
+/// not fail the whole batch.
+pub trait InferenceBackend: Send {
+    /// Static capabilities (name, batching, modeled line rate).
+    fn caps(&self) -> BackendCaps;
+
+    /// Classify a batch; clears and fills `out` with one word per
+    /// packet, in order.
+    fn run_batch(&mut self, packets: &[&[u8]], out: &mut Vec<u32>) -> Result<()>;
+
+    /// Cumulative packets / parse errors processed by this backend.
+    fn stats(&self) -> PipelineStats;
+}
+
+/// Which backend implementation to construct (CLI / engine config).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Per-packet cycle-level simulation.
+    Scalar,
+    /// SoA batch execution (default).
+    #[default]
+    Batched,
+    /// Trusted CPU reference forward.
+    Reference,
+    /// Exact-match LUT baseline (constructed via [`LutBackend::new`]).
+    Lut,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Scalar => "scalar",
+            BackendKind::Batched => "batched",
+            BackendKind::Reference => "reference",
+            BackendKind::Lut => "lut",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "scalar" => Ok(BackendKind::Scalar),
+            "batched" => Ok(BackendKind::Batched),
+            "reference" | "ref" => Ok(BackendKind::Reference),
+            "lut" => Ok(BackendKind::Lut),
+            other => Err(Error::Config(format!(
+                "unknown backend {other:?} (expected scalar|batched|reference)"
+            ))),
+        }
+    }
+}
+
+/// Construct a backend for a compiled model. `model` is required only
+/// for [`BackendKind::Reference`] (the pipeline program alone cannot
+/// reproduce the weights once they are baked into tape immediates).
+pub fn make_backend(
+    kind: BackendKind,
+    compiled: &Arc<CompiledModel>,
+    model: Option<&Arc<BnnModel>>,
+) -> Result<Box<dyn InferenceBackend>> {
+    match kind {
+        BackendKind::Scalar => Ok(Box::new(ScalarPipelineBackend::new(Arc::clone(compiled))?)),
+        BackendKind::Batched => Ok(Box::new(BatchedTapeBackend::new(Arc::clone(compiled))?)),
+        BackendKind::Reference => {
+            let model = model.ok_or_else(|| {
+                Error::Config(
+                    "reference backend needs the source BnnModel \
+                     (Engine::with_model / make_backend(.., Some(model)))"
+                        .into(),
+                )
+            })?;
+            Ok(Box::new(ReferenceBackend::new(compiled, Arc::clone(model))?))
+        }
+        BackendKind::Lut => Err(Error::Config(
+            "the LUT baseline is built directly from a populated \
+             LutClassifier via LutBackend::new (it has no compiled model)"
+                .into(),
+        )),
+    }
+}
+
+/// Run a whole packet stream through a backend in preferred-batch-sized
+/// chunks, returning one raw output word per packet (the apps apply
+/// their own bit masks on top). Malformed packets yield 0, per the
+/// trait's convention.
+pub fn run_chunked(
+    backend: &mut dyn InferenceBackend,
+    packets: &[Vec<u8>],
+) -> Result<Vec<u32>> {
+    let chunk = backend.caps().preferred_batch.max(1);
+    let mut words = Vec::with_capacity(packets.len());
+    let mut buf = Vec::new();
+    for c in packets.chunks(chunk) {
+        let refs: Vec<&[u8]> = c.iter().map(|p| p.as_slice()).collect();
+        backend.run_batch(&refs, &mut buf)?;
+        words.extend_from_slice(&buf);
+    }
+    Ok(words)
+}
+
+/// Classify one frame through a backend, treating a malformed frame as
+/// an error (single-packet serving: the switch would drop it, and the
+/// caller should know). Detection rides on the backend's parse-error
+/// counter, since `run_batch` itself maps malformed packets to 0.
+pub fn run_one(backend: &mut dyn InferenceBackend, frame: &[u8]) -> Result<u32> {
+    let errs_before = backend.stats().parse_errors;
+    let mut out = Vec::with_capacity(1);
+    backend.run_batch(&[frame], &mut out)?;
+    if backend.stats().parse_errors > errs_before {
+        return Err(Error::Parse("malformed frame".into()));
+    }
+    Ok(out.first().copied().unwrap_or(0))
+}
+
+/// Low `min(32, output_bits)` mask for the one-word output convention.
+pub fn out_mask(output_bits: usize) -> u32 {
+    if output_bits >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << output_bits) - 1
+    }
+}
+
+/// Read the output word from a packed-bits output.
+fn out_word(bits: &PackedBits, mask: u32) -> u32 {
+    bits.words().first().copied().unwrap_or(0) & mask
+}
+
+// ---------------------------------------------------------------------------
+// Scalar pipeline backend
+// ---------------------------------------------------------------------------
+
+/// Per-packet cycle-level simulation through [`Pipeline`].
+pub struct ScalarPipelineBackend {
+    compiled: Arc<CompiledModel>,
+    pipeline: Pipeline,
+    mask: u32,
+}
+
+impl ScalarPipelineBackend {
+    pub fn new(compiled: Arc<CompiledModel>) -> Result<Self> {
+        let pipeline = Pipeline::new(
+            compiled.chip.clone(),
+            compiled.program.clone(),
+            compiled.parser.clone(),
+            true,
+        )?;
+        let mask = out_mask(compiled.output_bits);
+        Ok(Self { compiled, pipeline, mask })
+    }
+}
+
+impl InferenceBackend for ScalarPipelineBackend {
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            name: "scalar",
+            data_parallel: false,
+            preferred_batch: 1,
+            modeled_pps: Some(self.pipeline.timing().pps),
+        }
+    }
+
+    fn run_batch(&mut self, packets: &[&[u8]], out: &mut Vec<u32>) -> Result<()> {
+        out.clear();
+        out.reserve(packets.len());
+        for pkt in packets {
+            match self.pipeline.process_packet(pkt) {
+                Ok(phv) => out.push(out_word(&self.compiled.read_output(&phv), self.mask)),
+                Err(_) => out.push(0), // counted by the pipeline's stats
+            }
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> PipelineStats {
+        self.pipeline.stats()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched SoA backend
+// ---------------------------------------------------------------------------
+
+/// SoA batch execution through [`BatchedTape`] — one op dispatch per
+/// batch, auto-vectorizable inner loops. The default serving backend.
+pub struct BatchedTapeBackend {
+    compiled: Arc<CompiledModel>,
+    tape: BatchedTape,
+    mask: u32,
+}
+
+impl BatchedTapeBackend {
+    pub fn new(compiled: Arc<CompiledModel>) -> Result<Self> {
+        let tape = BatchedTape::new(
+            compiled.chip.clone(),
+            compiled.program.clone(),
+            compiled.parser.clone(),
+            true,
+        )?;
+        let mask = out_mask(compiled.output_bits);
+        Ok(Self { compiled, tape, mask })
+    }
+}
+
+impl InferenceBackend for BatchedTapeBackend {
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            name: "batched",
+            data_parallel: true,
+            preferred_batch: 256,
+            modeled_pps: Some(self.tape.timing().pps),
+        }
+    }
+
+    fn run_batch(&mut self, packets: &[&[u8]], out: &mut Vec<u32>) -> Result<()> {
+        out.clear();
+        out.reserve(packets.len());
+        let batch = self.tape.process_batch(packets);
+        // The output convention only needs the low ≤32 bits = the first
+        // output container; read it directly (no per-lane allocation).
+        let first_out = self.compiled.layout.output.first().copied();
+        for l in 0..batch.n_lanes() {
+            match (batch.lane_ok(l), first_out) {
+                (true, Some(id)) => out.push(batch.read(l, id) & self.mask),
+                _ => out.push(0),
+            }
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> PipelineStats {
+        self.tape.stats()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference backend
+// ---------------------------------------------------------------------------
+
+/// Trusted CPU reference forward: parses the input activation exactly
+/// like the pipeline (same [`crate::rmt::PacketParser`]), then runs
+/// [`bnn::forward`]. Ground truth for A/B checks and a correctness
+/// fallback when simulation fidelity is not needed.
+pub struct ReferenceBackend {
+    model: Arc<BnnModel>,
+    parser: crate::rmt::PacketParser,
+    phv_config: crate::rmt::PhvConfig,
+    input_ids: Vec<crate::rmt::ContainerId>,
+    in_bits: usize,
+    mask: u32,
+    stats: PipelineStats,
+}
+
+impl ReferenceBackend {
+    pub fn new(compiled: &CompiledModel, model: Arc<BnnModel>) -> Result<Self> {
+        let first = compiled.layout.layers.first().ok_or_else(|| {
+            Error::Config("compiled model has no layers".into())
+        })?;
+        if model.spec.in_bits != first.in_bits {
+            return Err(Error::Config(format!(
+                "reference model takes {} input bits but the compiled \
+                 pipeline parses {}",
+                model.spec.in_bits, first.in_bits
+            )));
+        }
+        Ok(Self {
+            in_bits: first.in_bits,
+            input_ids: first.src.clone(),
+            parser: compiled.parser.clone(),
+            phv_config: compiled.chip.phv.clone(),
+            mask: out_mask(compiled.output_bits),
+            model,
+            stats: PipelineStats::default(),
+        })
+    }
+}
+
+impl InferenceBackend for ReferenceBackend {
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            name: "reference",
+            data_parallel: false,
+            preferred_batch: 1,
+            modeled_pps: None,
+        }
+    }
+
+    fn run_batch(&mut self, packets: &[&[u8]], out: &mut Vec<u32>) -> Result<()> {
+        out.clear();
+        out.reserve(packets.len());
+        for pkt in packets {
+            let mut phv = Phv::zeroed(&self.phv_config);
+            if self.parser.parse(pkt, &mut phv, &self.phv_config).is_err() {
+                self.stats.parse_errors += 1;
+                out.push(0);
+                continue;
+            }
+            let words = phv.read_group(&self.input_ids);
+            let x = PackedBits::from_words(words, self.in_bits);
+            let y = bnn::forward(&self.model, &x);
+            out.push(out_word(&y, self.mask));
+            self.stats.packets += 1;
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> PipelineStats {
+        self.stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LUT baseline backend
+// ---------------------------------------------------------------------------
+
+/// The exact-match lookup-table baseline (paper §1): classifies by the
+/// IPv4 source address against a bounded-SRAM blacklist.
+pub struct LutBackend {
+    lut: LutClassifier,
+    stats: PipelineStats,
+}
+
+impl LutBackend {
+    pub fn new(lut: LutClassifier) -> Self {
+        Self { lut, stats: PipelineStats::default() }
+    }
+
+    pub fn classifier(&self) -> &LutClassifier {
+        &self.lut
+    }
+}
+
+impl InferenceBackend for LutBackend {
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            name: "lut",
+            data_parallel: false,
+            preferred_batch: 1,
+            modeled_pps: None,
+        }
+    }
+
+    fn run_batch(&mut self, packets: &[&[u8]], out: &mut Vec<u32>) -> Result<()> {
+        out.clear();
+        out.reserve(packets.len());
+        for pkt in packets {
+            match parse_src_ip(pkt) {
+                Ok(ip) => {
+                    out.push(self.lut.classify(ip));
+                    self.stats.packets += 1;
+                }
+                Err(_) => {
+                    self.stats.parse_errors += 1;
+                    out.push(0);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> PipelineStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
+    use crate::net::packet::IPV4_SRC_OFFSET;
+    use crate::net::{TraceGenerator, TraceKind};
+    use crate::rmt::ChipConfig;
+
+    fn compiled_for(model: &BnnModel) -> Arc<CompiledModel> {
+        let opts = CompilerOptions {
+            input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
+            ..Default::default()
+        };
+        Arc::new(Compiler::new(ChipConfig::rmt(), opts).compile(model).unwrap())
+    }
+
+    #[test]
+    fn all_model_backends_agree_bit_for_bit() {
+        let model = Arc::new(BnnModel::random(32, &[32, 16], 77));
+        let compiled = compiled_for(&model);
+        let mut gen = TraceGenerator::new(3);
+        let trace = gen.generate(&TraceKind::UniformIps, 100);
+        let refs: Vec<&[u8]> = trace.packets.iter().map(|p| p.as_slice()).collect();
+
+        let mut outs: Vec<Vec<u32>> = Vec::new();
+        for kind in [BackendKind::Scalar, BackendKind::Batched, BackendKind::Reference] {
+            let mut be = make_backend(kind, &compiled, Some(&model)).unwrap();
+            assert_eq!(be.caps().name, kind.name());
+            let mut out = Vec::new();
+            be.run_batch(&refs, &mut out).unwrap();
+            assert_eq!(out.len(), refs.len());
+            assert_eq!(be.stats().packets, refs.len() as u64);
+            outs.push(out);
+        }
+        assert_eq!(outs[0], outs[1], "scalar vs batched");
+        assert_eq!(outs[0], outs[2], "scalar vs reference");
+        // And all agree with the forward on the key.
+        let mask = out_mask(16);
+        for (i, &key) in trace.keys.iter().enumerate() {
+            let expect = out_word(&bnn::forward(&model, &PackedBits::from_u32(key)), mask);
+            assert_eq!(outs[0][i], expect, "packet {i}");
+        }
+    }
+
+    #[test]
+    fn malformed_packets_yield_zero_and_count() {
+        let model = Arc::new(BnnModel::random(32, &[16], 8));
+        let compiled = compiled_for(&model);
+        let short = vec![0u8; 3];
+        let refs: Vec<&[u8]> = vec![&short];
+        for kind in [BackendKind::Scalar, BackendKind::Batched, BackendKind::Reference] {
+            let mut be = make_backend(kind, &compiled, Some(&model)).unwrap();
+            let mut out = Vec::new();
+            be.run_batch(&refs, &mut out).unwrap();
+            assert_eq!(out, vec![0], "{}", kind.name());
+            assert_eq!(be.stats().parse_errors, 1, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn reference_requires_model_and_lut_is_direct() {
+        let model = Arc::new(BnnModel::random(32, &[16], 9));
+        let compiled = compiled_for(&model);
+        assert!(make_backend(BackendKind::Reference, &compiled, None).is_err());
+        assert!(make_backend(BackendKind::Lut, &compiled, Some(&model)).is_err());
+        let mut lut = LutBackend::new(LutClassifier::new(4));
+        let frame = crate::net::packet::PacketBuilder::default()
+            .src_ip(0x0A000001)
+            .build_activations(&[0]);
+        let refs: Vec<&[u8]> = vec![&frame];
+        let mut out = Vec::new();
+        lut.run_batch(&refs, &mut out).unwrap();
+        assert_eq!(out, vec![0]); // empty table: whitelisted
+    }
+
+    #[test]
+    fn kind_parsing_roundtrips() {
+        for kind in [
+            BackendKind::Scalar,
+            BackendKind::Batched,
+            BackendKind::Reference,
+            BackendKind::Lut,
+        ] {
+            assert_eq!(BackendKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(BackendKind::parse("gpu").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Batched);
+    }
+}

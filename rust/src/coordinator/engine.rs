@@ -1,25 +1,38 @@
 //! The multi-worker serving engine.
 //!
-//! N workers each own a full simulated pipeline (a real deployment has
+//! N workers each own a full inference backend (a real deployment has
 //! one physical pipeline per switch; the engine models a rack of N2Net
 //! switches or, equivalently, uses host parallelism to push the software
 //! simulator toward line rate). A router shards packets across workers —
-//! round-robin for throughput or by flow key for state affinity.
+//! round-robin for throughput or by flow key for state affinity — and
+//! each worker pulls size-bounded batches (zero-copy chunks of its
+//! shard) and drives its [`InferenceBackend`] with them, so the whole
+//! serving loop is written against `run_batch` rather than any concrete
+//! executor. Streaming ingest (where packets trickle in and the
+//! deadline half of [`BatchPolicy`] matters) goes through
+//! [`super::batcher::Batcher`] in front of the same backends.
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::backend::{make_backend, BackendKind, InferenceBackend};
+use crate::bnn::BnnModel;
 use crate::compiler::CompiledModel;
 use crate::error::Result;
-use crate::rmt::{ChipConfig, Pipeline};
+use crate::net::packet::flow_hash;
+use crate::rmt::ChipConfig;
 use crate::telemetry::EngineMetrics;
+
+use super::batcher::BatchPolicy;
 
 /// How packets map to workers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RouterPolicy {
     /// i-th packet → worker i mod N (max throughput).
     RoundRobin,
-    /// By IPv4 source (flow affinity): same flow, same worker.
+    /// By parsed flow key (bounds-checked; see
+    /// [`crate::net::packet::parse_flow_key`]): same flow, same worker,
+    /// regardless of where in the stream the packet appears.
     FlowHash,
 }
 
@@ -28,6 +41,10 @@ pub enum RouterPolicy {
 pub struct EngineConfig {
     pub n_workers: usize,
     pub router: RouterPolicy,
+    /// Which [`InferenceBackend`] each worker drives.
+    pub backend: BackendKind,
+    /// Batch formation policy for the worker pull loop.
+    pub batch: BatchPolicy,
 }
 
 impl Default for EngineConfig {
@@ -37,6 +54,8 @@ impl Default for EngineConfig {
                 .map(|n| n.get().min(8))
                 .unwrap_or(4),
             router: RouterPolicy::RoundRobin,
+            backend: BackendKind::default(),
+            batch: BatchPolicy::default(),
         }
     }
 }
@@ -44,7 +63,8 @@ impl Default for EngineConfig {
 /// Result of an engine run.
 #[derive(Clone, Debug)]
 pub struct EngineReport {
-    /// Output classification bit per input packet (same order).
+    /// Output word per input packet (same order): low packed output
+    /// bits of the model, 0 for malformed packets.
     pub outputs: Vec<u32>,
     /// Host wall-clock packets/second achieved by the simulator.
     pub sim_pps: f64,
@@ -52,12 +72,16 @@ pub struct EngineReport {
     pub modeled_pps: f64,
     pub n_packets: usize,
     pub parse_errors: u64,
+    /// Backend that served the trace.
+    pub backend: &'static str,
 }
 
-/// The serving engine: compiled model + worker pool.
+/// The serving engine: compiled model + worker pool of backends.
 pub struct Engine {
     chip: ChipConfig,
     compiled: Arc<CompiledModel>,
+    /// Source model — required by [`BackendKind::Reference`] workers.
+    model: Option<Arc<BnnModel>>,
     config: EngineConfig,
     pub metrics: Arc<EngineMetrics>,
 }
@@ -67,39 +91,67 @@ impl Engine {
         Self {
             chip: compiled.chip.clone(),
             compiled: Arc::new(compiled),
+            model: None,
             config,
             metrics: Arc::new(EngineMetrics::default()),
         }
+    }
+
+    /// Attach the source model (enables the `reference` backend).
+    pub fn with_model(mut self, model: BnnModel) -> Self {
+        self.model = Some(Arc::new(model));
+        self
     }
 
     pub fn compiled(&self) -> &CompiledModel {
         &self.compiled
     }
 
-    fn worker_pipeline(&self) -> Result<Pipeline> {
-        Pipeline::new(
-            self.chip.clone(),
-            self.compiled.program.clone(),
-            self.compiled.parser.clone(),
-            true,
-        )
+    fn worker_backend(&self) -> Result<Box<dyn InferenceBackend>> {
+        make_backend(self.config.backend, &self.compiled, self.model.as_ref())
     }
 
-    /// Which worker handles packet `i` (FlowHash reads the IPv4 src).
+    /// Which worker handles packet `i`.
     fn route(&self, i: usize, pkt: &[u8]) -> usize {
+        let n = self.config.n_workers.max(1);
         match self.config.router {
-            RouterPolicy::RoundRobin => i % self.config.n_workers,
-            RouterPolicy::FlowHash => {
-                let key = crate::net::packet::parse_src_ip(pkt).unwrap_or(i as u32);
-                let mut h = key as u64 ^ 0xcbf29ce484222325;
-                h = h.wrapping_mul(0x100000001b3);
-                (h as usize) % self.config.n_workers
-            }
+            RouterPolicy::RoundRobin => i % n,
+            RouterPolicy::FlowHash => (flow_hash(pkt) % n as u64) as usize,
         }
     }
 
+    /// Run one batch of shard indices through a worker's backend and
+    /// scatter the outputs back to their input positions. Packets are
+    /// passed by reference — the hot path never clones payloads. A
+    /// backend *failure* (not a malformed packet — those yield 0 and a
+    /// parse-error count) aborts the trace rather than fabricating
+    /// outputs.
+    fn drain_batch(
+        backend: &mut dyn InferenceBackend,
+        metrics: &EngineMetrics,
+        packets: &[Vec<u8>],
+        idxs: &[usize],
+        out: &mut Vec<(usize, u32)>,
+        out_buf: &mut Vec<u32>,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let refs: Vec<&[u8]> = idxs.iter().map(|&i| packets[i].as_slice()).collect();
+        let errs_before = backend.stats().parse_errors;
+        backend.run_batch(&refs, out_buf)?;
+        let errs = backend.stats().parse_errors.saturating_sub(errs_before);
+        metrics.parse_errors.add(errs);
+        metrics.packets_dropped.add(errs);
+        metrics.packets_classified.add(refs.len() as u64 - errs.min(refs.len() as u64));
+        for (k, &i) in idxs.iter().enumerate() {
+            out.push((i, out_buf.get(k).copied().unwrap_or(0)));
+        }
+        metrics.batch_latency.record(t0.elapsed());
+        Ok(())
+    }
+
     /// Process a full trace; outputs preserve input order. The engine
-    /// shards packets to workers, each running its own pipeline.
+    /// shards packets to workers; each worker forms batches and calls
+    /// its backend's `run_batch`.
     pub fn process_trace(&self, packets: &[Vec<u8>]) -> Result<EngineReport> {
         let n_workers = self.config.n_workers.max(1);
         // Shard: per worker, the (index, packet) list it owns.
@@ -107,40 +159,45 @@ impl Engine {
         for (i, pkt) in packets.iter().enumerate() {
             shards[self.route(i, pkt)].push(i);
         }
+        // Build every backend up front so configuration errors surface
+        // before any thread spawns.
+        let backends: Vec<Box<dyn InferenceBackend>> = (0..n_workers)
+            .map(|_| self.worker_backend())
+            .collect::<Result<_>>()?;
+        let backend_name = self.config.backend.name();
+
         let t0 = Instant::now();
         let mut outputs = vec![0u32; packets.len()];
         let mut parse_errors = 0u64;
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
-            for shard in &shards {
-                let compiled = Arc::clone(&self.compiled);
+            for (shard, mut backend) in shards.iter().zip(backends) {
                 let metrics = Arc::clone(&self.metrics);
-                let mut pipe = self.worker_pipeline()?;
-                let handle = scope.spawn(move || -> (Vec<(usize, u32)>, u64) {
+                let policy = self.config.batch;
+                let handle = scope.spawn(move || -> Result<(Vec<(usize, u32)>, u64)> {
                     let mut out = Vec::with_capacity(shard.len());
-                    let t_batch = Instant::now();
-                    for &i in shard {
-                        metrics.packets_in.inc();
-                        match pipe.process_packet(&packets[i]) {
-                            Ok(phv) => {
-                                let bit = compiled.read_output(&phv).get(0) as u32;
-                                metrics.packets_classified.inc();
-                                out.push((i, bit));
-                            }
-                            Err(_) => {
-                                metrics.parse_errors.inc();
-                                metrics.packets_dropped.inc();
-                                out.push((i, 0));
-                            }
-                        }
+                    let mut out_buf = Vec::new();
+                    // Offline trace: the whole shard is already here, so
+                    // batches are size-bounded chunks pulled zero-copy
+                    // (the deadline half of [`BatchPolicy`] only matters
+                    // for streaming ingest through [`super::Batcher`]).
+                    for idxs in shard.chunks(policy.max_size.max(1)) {
+                        metrics.packets_in.add(idxs.len() as u64);
+                        Self::drain_batch(
+                            backend.as_mut(),
+                            &metrics,
+                            packets,
+                            idxs,
+                            &mut out,
+                            &mut out_buf,
+                        )?;
                     }
-                    metrics.batch_latency.record(t_batch.elapsed());
-                    (out, pipe.stats().parse_errors)
+                    Ok((out, backend.stats().parse_errors))
                 });
                 handles.push(handle);
             }
             for h in handles {
-                let (outs, errs) = h.join().expect("worker panicked");
+                let (outs, errs) = h.join().expect("worker panicked")?;
                 parse_errors += errs;
                 for (i, bit) in outs {
                     outputs[i] = bit;
@@ -156,6 +213,7 @@ impl Engine {
             modeled_pps: modeled.pps,
             n_packets: packets.len(),
             parse_errors,
+            backend: backend_name,
         })
     }
 }
@@ -165,9 +223,10 @@ mod tests {
     use super::*;
     use crate::bnn::{self, BnnModel, PackedBits};
     use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
+    use crate::net::packet::PacketBuilder;
     use crate::net::{TraceGenerator, TraceKind};
 
-    fn engine_for(model: &BnnModel, router: RouterPolicy) -> Engine {
+    fn engine_for(model: &BnnModel, router: RouterPolicy, backend: BackendKind) -> Engine {
         let opts = CompilerOptions {
             input: InputEncoding::BigEndianField {
                 offset: crate::net::packet::IPV4_SRC_OFFSET,
@@ -175,34 +234,108 @@ mod tests {
             ..Default::default()
         };
         let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(model).unwrap();
-        Engine::new(compiled, EngineConfig { n_workers: 3, router })
+        Engine::new(
+            compiled,
+            EngineConfig {
+                n_workers: 3,
+                router,
+                backend,
+                ..Default::default()
+            },
+        )
+        .with_model(model.clone())
     }
 
     #[test]
     fn outputs_preserve_order_and_match_reference() {
         let model = BnnModel::random(32, &[16, 1], 31);
         for router in [RouterPolicy::RoundRobin, RouterPolicy::FlowHash] {
-            let engine = engine_for(&model, router);
-            let mut gen = TraceGenerator::new(17);
-            let trace = gen.generate(&TraceKind::UniformIps, 200);
-            let report = engine.process_trace(&trace.packets).unwrap();
-            assert_eq!(report.outputs.len(), 200);
-            for (i, &key) in trace.keys.iter().enumerate() {
-                let expect = bnn::forward(&model, &PackedBits::from_u32(key)).get(0) as u32;
-                assert_eq!(report.outputs[i], expect, "router {router:?} pkt {i}");
+            for backend in [
+                BackendKind::Scalar,
+                BackendKind::Batched,
+                BackendKind::Reference,
+            ] {
+                let engine = engine_for(&model, router, backend);
+                let mut gen = TraceGenerator::new(17);
+                let trace = gen.generate(&TraceKind::UniformIps, 200);
+                let report = engine.process_trace(&trace.packets).unwrap();
+                assert_eq!(report.outputs.len(), 200);
+                assert_eq!(report.backend, backend.name());
+                for (i, &key) in trace.keys.iter().enumerate() {
+                    let expect =
+                        bnn::forward(&model, &PackedBits::from_u32(key)).get(0) as u32;
+                    assert_eq!(
+                        report.outputs[i], expect,
+                        "router {router:?} backend {backend:?} pkt {i}"
+                    );
+                }
+                assert_eq!(report.modeled_pps, 960e6);
+                assert!(report.sim_pps > 0.0);
             }
-            assert_eq!(report.modeled_pps, 960e6);
-            assert!(report.sim_pps > 0.0);
         }
     }
 
     #[test]
     fn malformed_packets_dropped_not_fatal() {
         let model = BnnModel::random(32, &[16], 33);
-        let engine = engine_for(&model, RouterPolicy::RoundRobin);
+        let engine = engine_for(&model, RouterPolicy::RoundRobin, BackendKind::Batched);
         let packets = vec![vec![0u8; 4], vec![0u8; 2]];
         let report = engine.process_trace(&packets).unwrap();
         assert_eq!(report.outputs, vec![0, 0]);
         assert_eq!(engine.metrics.packets_dropped.get(), 2);
+        assert_eq!(report.parse_errors, 2);
+    }
+
+    #[test]
+    fn flow_hash_routing_is_index_independent() {
+        // A short (unparseable) packet must land on the same worker no
+        // matter where it appears in the stream — the old code fell
+        // back to the packet *index*, silently degrading affinity.
+        let model = BnnModel::random(32, &[16], 35);
+        let engine = engine_for(&model, RouterPolicy::FlowHash, BackendKind::Batched);
+        let short = vec![0u8; 6];
+        let w0 = engine.route(0, &short);
+        let w1 = engine.route(1, &short);
+        let w2 = engine.route(4242, &short);
+        assert_eq!(w0, w1);
+        assert_eq!(w0, w2);
+        // Same flow key, different payload → same worker at any index.
+        let a = PacketBuilder::default().src_ip(0x0A000001).build_activations(&[1]);
+        let b = PacketBuilder::default().src_ip(0x0A000001).build_activations(&[2]);
+        assert_eq!(engine.route(0, &a), engine.route(99, &b));
+    }
+
+    #[test]
+    fn small_batches_chunk_the_stream() {
+        // A tiny max_size forces many run_batch calls; outputs must
+        // still come back in input order.
+        let model = BnnModel::random(32, &[16, 1], 36);
+        let opts = CompilerOptions {
+            input: InputEncoding::BigEndianField {
+                offset: crate::net::packet::IPV4_SRC_OFFSET,
+            },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model).unwrap();
+        let engine = Engine::new(
+            compiled,
+            EngineConfig {
+                n_workers: 2,
+                batch: BatchPolicy {
+                    max_size: 3,
+                    max_delay: std::time::Duration::from_millis(10),
+                },
+                ..Default::default()
+            },
+        );
+        let mut gen = TraceGenerator::new(19);
+        let trace = gen.generate(&TraceKind::UniformIps, 50);
+        let report = engine.process_trace(&trace.packets).unwrap();
+        for (i, &key) in trace.keys.iter().enumerate() {
+            let expect = bnn::forward(&model, &PackedBits::from_u32(key)).get(0) as u32;
+            assert_eq!(report.outputs[i], expect, "pkt {i}");
+        }
+        // Batches actually formed: ceil(25/3) per worker × 2 workers.
+        assert!(engine.metrics.batch_latency.count() >= 10);
     }
 }

@@ -7,9 +7,11 @@
 //! anyway: one OS thread per simulated pipeline, no I/O waits to hide.
 //!
 //! * [`batcher`] — size/deadline batching of an incoming packet stream.
-//! * [`engine`]  — multi-worker engine: each worker owns one simulated
-//!   pipeline instance; a router shards packets (round-robin or by flow
-//!   key) across workers; metrics via [`crate::telemetry`].
+//! * [`engine`]  — multi-worker engine: each worker owns one
+//!   [`crate::backend::InferenceBackend`] (scalar pipeline, batched SoA
+//!   tape, or reference forward), pulls [`Batch`]es, and calls
+//!   `run_batch`; a router shards packets (round-robin or by bounds-
+//!   checked flow key) across workers; metrics via [`crate::telemetry`].
 
 pub mod batcher;
 pub mod engine;

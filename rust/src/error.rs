@@ -1,41 +1,68 @@
 //! Crate-wide error type. Every fallible public API returns [`Result`];
 //! the simulator and compiler never panic on user input.
+//!
+//! Implemented by hand (no `thiserror`): the offline build environment
+//! has no proc-macro dependencies (DESIGN.md §Substitutions), and the
+//! enum is small enough that the manual `Display`/`Error` impls stay
+//! readable.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for compilation, simulation, I/O and runtime failures.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// BNN model violates an architectural constraint (widths, sizes).
-    #[error("invalid model: {0}")]
     InvalidModel(String),
 
     /// The compiled program does not fit the chip (elements, PHV, SRAM).
-    #[error("resource exhausted: {0}")]
     ResourceExhausted(String),
 
     /// A pipeline program failed a legality check.
-    #[error("illegal program: {0}")]
     IllegalProgram(String),
 
     /// Packet could not be parsed / is malformed for the configured parser.
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// Weights / artifact files are missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Configuration error (CLI, serving).
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidModel(m) => write!(f, "invalid model: {m}"),
+            Error::ResourceExhausted(m) => write!(f, "resource exhausted: {m}"),
+            Error::IllegalProgram(m) => write!(f, "illegal program: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -46,3 +73,22 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::Parse("short".into()).to_string(), "parse error: short");
+        assert_eq!(Error::Config("bad".into()).to_string(), "config error: bad");
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        use std::error::Error as _;
+        let e = Error::from(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

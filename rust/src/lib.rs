@@ -29,8 +29,11 @@
 //!   POPCNT.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas model
 //!   (`artifacts/model.hlo.txt`) used as a bit-exact golden oracle.
+//! * [`backend`] — the unified [`backend::InferenceBackend`] trait:
+//!   scalar pipeline, batched SoA tape, trusted reference forward, and
+//!   the LUT baseline, all behind one `run_batch` seam.
 //! * [`coordinator`] — the L3 serving loop: packet engine, batching,
-//!   stats.
+//!   stats; workers pull batches and drive an [`backend::InferenceBackend`].
 //! * [`analysis`] — throughput / chip-area models behind the paper's
 //!   §2-Evaluation and §3-Challenges numbers.
 //!
@@ -51,6 +54,7 @@
 
 pub mod analysis;
 pub mod apps;
+pub mod backend;
 pub mod baseline;
 pub mod bnn;
 pub mod compiler;

@@ -6,18 +6,21 @@
 //! n2net compile [--in-bits N] [--layers 64,32] [--native-popcnt]
 //!               [--schedule] [--p4 FILE] [--seed S]
 //! n2net run     [--packets N] [--workers W] [--seed S] [--artifacts DIR]
+//!               [--backend scalar|batched|reference]
 //! n2net serve   [--packets N] [--workers W] [--router flow|rr]
+//!               [--backend scalar|batched|reference] [--batch-size B]
 //! n2net selftest [--artifacts DIR]
 //! ```
 
 use anyhow::{bail, Context};
 use n2net::analysis;
 use n2net::apps::DdosFilter;
+use n2net::backend::BackendKind;
 use n2net::bnn::{self, BnnModel};
 use n2net::compiler::{
     p4gen, render_table1, Compiler, CompilerOptions, InputEncoding,
 };
-use n2net::coordinator::{Engine, EngineConfig, RouterPolicy};
+use n2net::coordinator::{BatchPolicy, Engine, EngineConfig, RouterPolicy};
 use n2net::net::{TraceGenerator, TraceKind};
 use n2net::rmt::ChipConfig;
 use n2net::runtime::Oracle;
@@ -25,7 +28,7 @@ use n2net::util::cli::Args;
 
 const VALUE_OPTS: &[&str] = &[
     "in-bits", "layers", "seed", "packets", "workers", "router", "artifacts",
-    "p4", "steps",
+    "p4", "steps", "backend", "batch-size",
 ];
 
 fn main() {
@@ -80,6 +83,32 @@ fn chip_for(args: &Args) -> ChipConfig {
     } else {
         ChipConfig::rmt()
     }
+}
+
+fn backend_for(args: &Args) -> anyhow::Result<BackendKind> {
+    match args.opt("backend") {
+        None => Ok(BackendKind::default()),
+        Some(s) => Ok(BackendKind::parse(s)?),
+    }
+}
+
+fn engine_config_for(args: &Args) -> anyhow::Result<EngineConfig> {
+    let router = match args.opt("router").unwrap_or("rr") {
+        "flow" => RouterPolicy::FlowHash,
+        _ => RouterPolicy::RoundRobin,
+    };
+    let batch = BatchPolicy {
+        max_size: args
+            .opt_usize("batch-size", BatchPolicy::default().max_size)?
+            .max(1),
+        ..BatchPolicy::default()
+    };
+    Ok(EngineConfig {
+        n_workers: args.opt_usize("workers", 4)?,
+        router,
+        backend: backend_for(args)?,
+        batch,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -231,16 +260,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model)?;
     print!("{}", compiled.resource_report());
 
-    let engine = Engine::new(
-        compiled,
-        EngineConfig {
-            n_workers: args.opt_usize("workers", 4)?,
-            router: RouterPolicy::RoundRobin,
-        },
-    );
+    let engine =
+        Engine::new(compiled, engine_config_for(args)?).with_model(model.clone());
     let mut gen = TraceGenerator::new(seed);
     let trace = gen.generate(&TraceKind::Ddos { ddos: doc.ddos.clone() }, n);
     let report = engine.process_trace(&trace.packets)?;
+    println!("backend: {}", report.backend);
 
     // Accuracy vs ground truth.
     let correct = report
@@ -287,10 +312,6 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let dir = artifacts_dir(args);
     let (model, doc) = bnn::load_weights(dir.join("weights.json"))?;
     let n = args.opt_usize("packets", 100_000)?;
-    let router = match args.opt("router").unwrap_or("rr") {
-        "flow" => RouterPolicy::FlowHash,
-        _ => RouterPolicy::RoundRobin,
-    };
     let opts = CompilerOptions {
         input: InputEncoding::BigEndianField {
             offset: n2net::net::packet::IPV4_SRC_OFFSET,
@@ -298,16 +319,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ..Default::default()
     };
     let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model)?;
-    let engine = Engine::new(
-        compiled,
-        EngineConfig { n_workers: args.opt_usize("workers", 4)?, router },
-    );
+    let engine =
+        Engine::new(compiled, engine_config_for(args)?).with_model(model.clone());
     let mut gen = TraceGenerator::new(args.opt_u64("seed", 3)?);
     let trace = gen.generate(&TraceKind::Ddos { ddos: doc.ddos.clone() }, n);
     let report = engine.process_trace(&trace.packets)?;
     println!(
-        "served {} packets at {:.2} M/s (host) — modeled ASIC {:.0} M/s",
+        "served {} packets via {} backend at {:.2} M/s (host) — modeled ASIC {:.0} M/s",
         report.n_packets,
+        report.backend,
         report.sim_pps / 1e6,
         report.modeled_pps / 1e6
     );

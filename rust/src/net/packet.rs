@@ -153,6 +153,82 @@ impl PacketBuilder {
     }
 }
 
+/// A parsed flow key: what routers hash for flow affinity. Ports are
+/// zero for protocols without them (or truncated L4 headers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FlowKey {
+    pub src: u32,
+    pub dst: u32,
+    pub protocol: u8,
+    pub src_port: u16,
+    pub dst_port: u16,
+}
+
+/// Parse the flow key with fully bounds-checked header access. Returns
+/// `None` for frames that are too short, not IPv4 (ethertype), not
+/// version 4, or whose IHL overruns the frame — callers must fall back
+/// to something *stable* (see [`flow_hash`]), never to a per-call value
+/// like a packet index, or flow affinity silently degrades.
+pub fn parse_flow_key(frame: &[u8]) -> Option<FlowKey> {
+    if frame.len() < ETH_HEADER_LEN + IPV4_HEADER_LEN {
+        return None;
+    }
+    // Ethertype must be IPv4 (0x0800).
+    if frame[12] != 0x08 || frame[13] != 0x00 {
+        return None;
+    }
+    let ip = &frame[ETH_HEADER_LEN..];
+    if ip[0] >> 4 != 4 {
+        return None;
+    }
+    let ihl = (ip[0] & 0x0F) as usize * 4;
+    if ihl < IPV4_HEADER_LEN || frame.len() < ETH_HEADER_LEN + ihl {
+        return None;
+    }
+    let be32 = |b: &[u8]| u32::from_be_bytes([b[0], b[1], b[2], b[3]]);
+    let protocol = ip[9];
+    let src = be32(&ip[12..16]);
+    let dst = be32(&ip[16..20]);
+    // Ports only for TCP/UDP with an intact first 4 bytes of L4.
+    let l4 = ETH_HEADER_LEN + ihl;
+    let (src_port, dst_port) = if (protocol == 6 || protocol == 17) && frame.len() >= l4 + 4 {
+        (
+            u16::from_be_bytes([frame[l4], frame[l4 + 1]]),
+            u16::from_be_bytes([frame[l4 + 2], frame[l4 + 3]]),
+        )
+    } else {
+        (0, 0)
+    };
+    Some(FlowKey { src, dst, protocol, src_port, dst_port })
+}
+
+/// Stable flow hash for routing: FNV-1a over the canonical flow key
+/// when the frame parses, otherwise over the raw frame bytes — so an
+/// unparseable frame still maps to the same worker every time it (or a
+/// retransmission of it) appears.
+pub fn flow_hash(frame: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    match parse_flow_key(frame) {
+        Some(k) => {
+            eat(&k.src.to_be_bytes());
+            eat(&k.dst.to_be_bytes());
+            eat(&[k.protocol]);
+            eat(&k.src_port.to_be_bytes());
+            eat(&k.dst_port.to_be_bytes());
+        }
+        None => eat(frame),
+    }
+    h
+}
+
 /// Parse the IPv4 source address out of a frame (validation helper).
 pub fn parse_src_ip(frame: &[u8]) -> Result<u32> {
     if frame.len() < IPV4_SRC_OFFSET + 4 {
@@ -206,5 +282,50 @@ mod tests {
     #[test]
     fn short_frame_rejected() {
         assert!(parse_src_ip(&[0u8; 10]).is_err());
+    }
+
+    #[test]
+    fn flow_key_parses_built_frames() {
+        let f = PacketBuilder::default()
+            .src_ip(0xC0A80101)
+            .dst_ip(0x08080808)
+            .build_activations(&[1, 2]);
+        let k = parse_flow_key(&f).unwrap();
+        assert_eq!(k.src, 0xC0A80101);
+        assert_eq!(k.dst, 0x08080808);
+        assert_eq!(k.protocol, 17);
+        assert_eq!(k.src_port, 4242);
+        assert_eq!(k.dst_port, 4243);
+    }
+
+    #[test]
+    fn flow_key_rejects_garbage_with_bounds_checks() {
+        // Too short for Eth+IPv4.
+        assert!(parse_flow_key(&[0u8; 20]).is_none());
+        // Long enough but not IPv4 ethertype.
+        let mut f = PacketBuilder::default().build(&[]);
+        f[12] = 0x86; // IPv6 ethertype high byte
+        f[13] = 0xDD;
+        assert!(parse_flow_key(&f).is_none());
+        // IPv4 ethertype but bogus version nibble.
+        let mut f = PacketBuilder::default().build(&[]);
+        f[ETH_HEADER_LEN] = 0x65; // version 6
+        assert!(parse_flow_key(&f).is_none());
+        // IHL that overruns the frame.
+        let mut f = PacketBuilder::default().build(&[]);
+        f[ETH_HEADER_LEN] = 0x4F; // IHL 15 -> 60-byte header
+        assert!(parse_flow_key(&f).is_none());
+    }
+
+    #[test]
+    fn flow_hash_is_stable_and_position_independent() {
+        let a = PacketBuilder::default().src_ip(1).build_activations(&[7]);
+        let b = PacketBuilder::default().src_ip(2).build_activations(&[7]);
+        assert_eq!(flow_hash(&a), flow_hash(&a));
+        assert_ne!(flow_hash(&a), flow_hash(&b));
+        // Unparseable frames hash by content, still deterministically.
+        let junk = vec![9u8; 11];
+        assert_eq!(flow_hash(&junk), flow_hash(&junk));
+        assert_ne!(flow_hash(&junk), flow_hash(&[8u8; 11]));
     }
 }

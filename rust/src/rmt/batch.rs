@@ -1,0 +1,359 @@
+//! Batch-of-packets, structure-of-arrays pipeline execution (DESIGN.md
+//! §9-Perf and §10-Batching).
+//!
+//! The scalar [`super::pipeline::Pipeline`] interprets the compiled tape
+//! one packet at a time: every op pays its dispatch cost per packet. A
+//! real N2Net deployment is the opposite regime — billions of packets
+//! per second through one fixed program — so the software simulator
+//! should amortize program traversal over many packets, the way the
+//! ASIC amortizes it over pipeline stages.
+//!
+//! [`PhvBatch`] transposes a batch of PHVs into one `u32` slab per
+//! container (column-major: container `c`, lane `l` at `c·B + l`), and
+//! [`BatchedTape`] runs the precompiled tape **once per op over the
+//! whole batch** via [`super::exec::CompiledProgram::run_soa`] — tight
+//! per-lane inner loops the compiler can auto-vectorize. Recirculation
+//! passes need no special handling (the tape contains every element of
+//! every pass in order), and malformed packets are masked per lane: the
+//! lane is zeroed, flagged, and its outputs never surfaced.
+
+use super::chip::ChipConfig;
+use super::exec::{CompiledProgram, SoaWorkspace};
+use super::parser::PacketParser;
+use super::phv::{ContainerId, Phv, PhvConfig};
+use super::pipeline::PipelineStats;
+use super::program::Program;
+use crate::error::Result;
+
+/// A batch of PHVs in structure-of-arrays (column-major) layout.
+#[derive(Clone, Debug)]
+pub struct PhvBatch {
+    n_lanes: usize,
+    n_containers: usize,
+    /// Container `c`, lane `l` at `cols[c * n_lanes + l]`.
+    cols: Vec<u32>,
+    /// Per-lane parse status: `false` = malformed packet, lane masked.
+    ok: Vec<bool>,
+}
+
+impl PhvBatch {
+    /// All-zero batch of `n_lanes` PHVs (every lane initially valid).
+    pub fn zeroed(config: &PhvConfig, n_lanes: usize) -> Self {
+        Self {
+            n_lanes,
+            n_containers: config.n_containers(),
+            cols: vec![0; config.n_containers() * n_lanes],
+            ok: vec![true; n_lanes],
+        }
+    }
+
+    /// Resize + clear in place (reuses the allocations across batches).
+    pub fn reset(&mut self, n_lanes: usize) {
+        self.n_lanes = n_lanes;
+        self.cols.clear();
+        self.cols.resize(self.n_containers * n_lanes, 0);
+        self.ok.clear();
+        self.ok.resize(n_lanes, true);
+    }
+
+    #[inline]
+    pub fn n_lanes(&self) -> usize {
+        self.n_lanes
+    }
+
+    #[inline]
+    pub fn n_containers(&self) -> usize {
+        self.n_containers
+    }
+
+    /// Did lane `l`'s packet parse successfully?
+    #[inline]
+    pub fn lane_ok(&self, lane: usize) -> bool {
+        self.ok[lane]
+    }
+
+    /// Number of successfully parsed lanes.
+    pub fn n_ok(&self) -> usize {
+        self.ok.iter().filter(|&&b| b).count()
+    }
+
+    /// Read container `id` of lane `lane`.
+    #[inline]
+    pub fn read(&self, lane: usize, id: ContainerId) -> u32 {
+        self.cols[id.index() * self.n_lanes + lane]
+    }
+
+    /// Write container `id` of lane `lane`, masked to container width.
+    #[inline]
+    pub fn write(&mut self, lane: usize, id: ContainerId, value: u32, config: &PhvConfig) {
+        self.cols[id.index() * self.n_lanes + lane] = value & config.mask(id);
+    }
+
+    /// Read a container group of one lane as packed words (the
+    /// [`Phv::read_group`] convention).
+    pub fn read_group(&self, lane: usize, ids: &[ContainerId]) -> Vec<u32> {
+        ids.iter().map(|&id| self.read(lane, id)).collect()
+    }
+
+    /// Zero every container of one lane and mark it malformed.
+    pub fn mask_lane(&mut self, lane: usize) {
+        for c in 0..self.n_containers {
+            self.cols[c * self.n_lanes + lane] = 0;
+        }
+        self.ok[lane] = false;
+    }
+
+    /// Extract one lane as a standalone [`Phv`] (tests, debugging).
+    pub fn lane_phv(&self, lane: usize, config: &PhvConfig) -> Phv {
+        let mut phv = Phv::zeroed(config);
+        for c in 0..self.n_containers {
+            phv.write(
+                ContainerId(c as u16),
+                self.cols[c * self.n_lanes + lane],
+                config,
+            );
+        }
+        phv
+    }
+
+    /// Raw column slab — the SoA executor's entry point.
+    #[inline]
+    pub fn cols_mut(&mut self) -> &mut [u32] {
+        &mut self.cols
+    }
+}
+
+/// A loaded batched pipeline: chip + program + parser, processing whole
+/// batches through the SoA executor. The batched sibling of
+/// [`super::pipeline::Pipeline`], bit-exact with it lane for lane.
+pub struct BatchedTape {
+    chip: ChipConfig,
+    program: Program,
+    parser: PacketParser,
+    exec: CompiledProgram,
+    ws: SoaWorkspace,
+    batch: PhvBatch,
+    stats: PipelineStats,
+}
+
+impl BatchedTape {
+    /// Build and validate — same contract as [`super::Pipeline::new`].
+    pub fn new(
+        chip: ChipConfig,
+        program: Program,
+        parser: PacketParser,
+        allow_recirculation: bool,
+    ) -> Result<Self> {
+        program.validate(&chip, allow_recirculation)?;
+        parser.validate(&chip.phv)?;
+        let exec = CompiledProgram::compile(&program, &chip);
+        let batch = PhvBatch::zeroed(&chip.phv, 0);
+        Ok(Self {
+            chip,
+            program,
+            parser,
+            exec,
+            ws: SoaWorkspace::new(),
+            batch,
+            stats: PipelineStats::default(),
+        })
+    }
+
+    pub fn chip(&self) -> &ChipConfig {
+        &self.chip
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    pub fn stats(&self) -> PipelineStats {
+        self.stats
+    }
+
+    /// Modeled line-rate timing for this pipeline's program.
+    pub fn timing(&self) -> super::chip::TimingReport {
+        self.chip.timing(&self.program)
+    }
+
+    /// Parse a batch of packets and run the program over all lanes at
+    /// once. Malformed packets are masked (lane zeroed + flagged) and
+    /// counted, mirroring what a switch does: drop, keep forwarding.
+    ///
+    /// The returned [`PhvBatch`] borrow is valid until the next call;
+    /// read outputs per lane with [`PhvBatch::read_group`], gated on
+    /// [`PhvBatch::lane_ok`].
+    pub fn process_batch<P: AsRef<[u8]>>(&mut self, packets: &[P]) -> &PhvBatch {
+        let n = packets.len();
+        self.batch.reset(n);
+        for (l, pkt) in packets.iter().enumerate() {
+            if self.parse_lane(pkt.as_ref(), l).is_err() {
+                self.batch.mask_lane(l);
+                self.stats.parse_errors += 1;
+            }
+        }
+        self.exec.run_soa(self.batch.cols_mut(), n, &mut self.ws);
+        let ok = self.batch.n_ok() as u64;
+        self.stats.packets += ok;
+        self.stats.element_executions += ok * self.program.elements.len() as u64;
+        &self.batch
+    }
+
+    /// Parse one packet into one lane (shared extraction decode with the
+    /// scalar parser via [`super::parser::Extract::read_value`]).
+    fn parse_lane(&mut self, packet: &[u8], lane: usize) -> Result<()> {
+        for e in &self.parser.extracts {
+            let v = e.read_value(packet)?;
+            self.batch.write(lane, e.dst, v, &self.chip.phv);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{self, BnnModel, PackedBits};
+    use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
+    use crate::rmt::Pipeline;
+    use crate::util::rng::Rng;
+
+    fn frame_for(x: &PackedBits) -> Vec<u8> {
+        let mut pkt = Vec::with_capacity(x.words().len() * 4);
+        for w in x.words() {
+            pkt.extend_from_slice(&w.to_le_bytes());
+        }
+        pkt
+    }
+
+    #[test]
+    fn batch_matches_scalar_pipeline_and_reference() {
+        let mut rng = Rng::seed_from_u64(7);
+        let chip = ChipConfig::rmt();
+        let model = BnnModel::random(32, &[64, 32], 21);
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
+        let mut scalar = Pipeline::new(
+            chip.clone(),
+            compiled.program.clone(),
+            compiled.parser.clone(),
+            true,
+        )
+        .unwrap();
+        let mut tape = BatchedTape::new(
+            chip.clone(),
+            compiled.program.clone(),
+            compiled.parser.clone(),
+            true,
+        )
+        .unwrap();
+        let inputs: Vec<PackedBits> =
+            (0..33).map(|_| PackedBits::random(32, &mut rng)).collect();
+        let packets: Vec<Vec<u8>> = inputs.iter().map(frame_for).collect();
+        let batch = tape.process_batch(&packets);
+        for (l, x) in inputs.iter().enumerate() {
+            assert!(batch.lane_ok(l));
+            let phv = scalar.process_packet(&packets[l]).unwrap();
+            assert_eq!(
+                batch.lane_phv(l, &chip.phv),
+                phv,
+                "lane {l} diverged from scalar pipeline"
+            );
+            let out = PackedBits::from_words(
+                batch.read_group(l, &compiled.layout.output),
+                compiled.output_bits,
+            );
+            assert_eq!(out, bnn::forward(&model, x), "lane {l}");
+        }
+        assert_eq!(tape.stats().packets, 33);
+        assert_eq!(tape.stats().parse_errors, 0);
+    }
+
+    #[test]
+    fn malformed_lanes_masked_not_fatal() {
+        let chip = ChipConfig::rmt();
+        let model = BnnModel::random(32, &[16], 5);
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
+        let mut tape = BatchedTape::new(
+            chip.clone(),
+            compiled.program.clone(),
+            compiled.parser.clone(),
+            true,
+        )
+        .unwrap();
+        let good = frame_for(&PackedBits::from_u32(0xDEADBEEF));
+        let packets: Vec<Vec<u8>> = vec![good.clone(), vec![0u8; 2], good];
+        let batch = tape.process_batch(&packets);
+        assert!(batch.lane_ok(0));
+        assert!(!batch.lane_ok(1));
+        assert!(batch.lane_ok(2));
+        assert_eq!(batch.n_ok(), 2);
+        // Identical inputs in lanes 0 and 2 give identical outputs.
+        assert_eq!(
+            batch.read_group(0, &compiled.layout.output),
+            batch.read_group(2, &compiled.layout.output)
+        );
+        assert_eq!(tape.stats().parse_errors, 1);
+        assert_eq!(tape.stats().packets, 2);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let chip = ChipConfig::rmt();
+        let model = BnnModel::random(32, &[16], 6);
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
+        let mut tape = BatchedTape::new(
+            chip,
+            compiled.program.clone(),
+            compiled.parser.clone(),
+            true,
+        )
+        .unwrap();
+        let packets: Vec<Vec<u8>> = Vec::new();
+        let batch = tape.process_batch(&packets);
+        assert_eq!(batch.n_lanes(), 0);
+        assert_eq!(tape.stats().packets, 0);
+    }
+
+    #[test]
+    fn batch_reuse_is_stateless() {
+        // Two consecutive batches with the same packet agree (no state
+        // leaks between process_batch calls).
+        let chip = ChipConfig::rmt();
+        let model = BnnModel::random(32, &[32, 16], 9);
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
+        let mut tape = BatchedTape::new(
+            chip,
+            compiled.program.clone(),
+            compiled.parser.clone(),
+            true,
+        )
+        .unwrap();
+        let probe = frame_for(&PackedBits::from_u32(0x12345678));
+        let noise = frame_for(&PackedBits::from_u32(0xFFFF0000));
+        let first = {
+            let b = tape.process_batch(&[probe.clone(), noise.clone()]);
+            b.read_group(0, &compiled.layout.output)
+        };
+        let again = {
+            let b = tape.process_batch(&[noise, probe]);
+            b.read_group(1, &compiled.layout.output)
+        };
+        assert_eq!(first, again);
+    }
+}

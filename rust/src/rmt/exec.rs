@@ -278,6 +278,235 @@ impl CompiledProgram {
     pub fn n_elements(&self) -> usize {
         self.elements.len()
     }
+
+    /// Number of PHV containers this program was compiled against.
+    pub fn n_containers(&self) -> usize {
+        self.masks.len()
+    }
+
+    /// Execute the whole program over a **batch** of PHVs in
+    /// structure-of-arrays layout (DESIGN.md §9): `cols` holds container
+    /// `c`'s value for lane `l` at `cols[c·n_lanes + l]`. Each tape op
+    /// dispatches **once** and then runs a tight per-lane inner loop the
+    /// compiler can auto-vectorize — this is the batched hot path behind
+    /// [`super::batch::BatchedTape`].
+    ///
+    /// Semantics are bit-identical to calling [`Self::run`] on each lane
+    /// separately (enforced by unit tests below and by
+    /// `tests/prop_batch.rs`):
+    ///
+    /// * streaming elements apply ops in tape order, write-through;
+    /// * non-streaming elements evaluate every op against the
+    ///   pre-element state, then commit (VLIW snapshot);
+    /// * keyed match stages fall back to a per-lane scalar two-phase
+    ///   pass (table lookups are data-dependent per packet — the rare
+    ///   path, e.g. multi-model weight selection).
+    ///
+    /// Recirculation needs nothing special here: a multi-pass program
+    /// simply has more elements than the physical pipeline, and the tape
+    /// already contains all of them in order (the pass count only
+    /// affects the *timing model*).
+    pub fn run_soa(&self, cols: &mut [u32], n_lanes: usize, ws: &mut SoaWorkspace) {
+        debug_assert_eq!(cols.len(), self.masks.len() * n_lanes);
+        if n_lanes == 0 {
+            return;
+        }
+        ws.row.resize(n_lanes, 0);
+        ws.slab.resize(self.slab.len() * n_lanes, 0);
+        for el in &self.elements {
+            let ops = &self.ops[el.start as usize..el.end as usize];
+            if let Some(t) = el.table {
+                // Keyed match stage: per-lane scalar fallback, reusing
+                // the scalar `eval`/`store2` for guaranteed equivalence.
+                let table = &self.tables[t as usize];
+                let nc = self.masks.len();
+                ws.lane_regs.resize(nc, 0);
+                ws.lane_slab.resize(ops.len(), 0);
+                for l in 0..n_lanes {
+                    for c in 0..nc {
+                        ws.lane_regs[c] = cols[c * n_lanes + l];
+                    }
+                    let ad = lookup_table(table, &ws.lane_regs);
+                    for (k, op) in ops.iter().enumerate() {
+                        ws.lane_slab[k] = eval(op, &ws.lane_regs, ad, &self.gather_srcs);
+                    }
+                    for (k, op) in ops.iter().enumerate() {
+                        let v = ws.lane_slab[k];
+                        store2(&mut ws.lane_regs, &self.masks, op, v);
+                    }
+                    for c in 0..nc {
+                        cols[c * n_lanes + l] = ws.lane_regs[c];
+                    }
+                }
+            } else if el.stream {
+                for op in ops {
+                    eval_soa(op, cols, n_lanes, &self.gather_srcs, &mut ws.row);
+                    store_soa(cols, n_lanes, &self.masks, op, &ws.row);
+                }
+            } else {
+                for (k, op) in ops.iter().enumerate() {
+                    let out = &mut ws.slab[k * n_lanes..(k + 1) * n_lanes];
+                    eval_soa(op, cols, n_lanes, &self.gather_srcs, out);
+                }
+                for (k, op) in ops.iter().enumerate() {
+                    let row = &ws.slab[k * n_lanes..(k + 1) * n_lanes];
+                    store_soa(cols, n_lanes, &self.masks, op, row);
+                }
+            }
+        }
+    }
+}
+
+/// Reusable scratch for [`CompiledProgram::run_soa`] — kept outside the
+/// program so several batch executors (worker threads) can share one
+/// compiled tape immutably.
+#[derive(Debug, Default)]
+pub struct SoaWorkspace {
+    /// One value row (n_lanes wide) for streaming stores.
+    row: Vec<u32>,
+    /// Two-phase value slab: max-element-width × n_lanes.
+    slab: Vec<u32>,
+    /// Scalar registers for the keyed per-lane fallback.
+    lane_regs: Vec<u32>,
+    /// Scalar two-phase slab for the keyed per-lane fallback.
+    lane_slab: Vec<u32>,
+}
+
+impl SoaWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Evaluate one op for every lane into `out` (length `n`). The opcode
+/// and operand-kind dispatch happen once per batch; the per-lane loops
+/// below are branch-free over contiguous columns.
+#[allow(clippy::needless_range_loop)] // indexed loops over 2-3 parallel slices
+fn eval_soa(op: &FlatOp, cols: &[u32], n: usize, gsrcs: &[GatherSrcFlat], out: &mut [u32]) {
+    debug_assert!(out.len() >= n);
+    // Non-container operand as a scalar (mirrors `operand`: immediates
+    // broadcast; action-data refs without a table resolve to 0).
+    let scalar = |kind: u8, raw: u32| -> u32 { if kind == K_IMM { raw } else { 0 } };
+    macro_rules! col {
+        ($c:expr) => {
+            &cols[$c as usize * n..$c as usize * n + n]
+        };
+    }
+    macro_rules! un {
+        ($f:expr) => {{
+            let f = $f;
+            if op.a_kind == K_CONT {
+                let a = col!(op.a);
+                for l in 0..n {
+                    out[l] = f(a[l]);
+                }
+            } else {
+                let v = f(scalar(op.a_kind, op.a));
+                out[..n].fill(v);
+            }
+        }};
+    }
+    macro_rules! bin {
+        ($f:expr) => {{
+            let f = $f;
+            match (op.a_kind == K_CONT, op.b_kind == K_CONT) {
+                (true, true) => {
+                    let a = col!(op.a);
+                    let b = col!(op.b);
+                    for l in 0..n {
+                        out[l] = f(a[l], b[l]);
+                    }
+                }
+                (true, false) => {
+                    let a = col!(op.a);
+                    let bv = scalar(op.b_kind, op.b);
+                    for l in 0..n {
+                        out[l] = f(a[l], bv);
+                    }
+                }
+                (false, true) => {
+                    let av = scalar(op.a_kind, op.a);
+                    let b = col!(op.b);
+                    for l in 0..n {
+                        out[l] = f(av, b[l]);
+                    }
+                }
+                (false, false) => {
+                    let v = f(scalar(op.a_kind, op.a), scalar(op.b_kind, op.b));
+                    out[..n].fill(v);
+                }
+            }
+        }};
+    }
+    let aux = op.b_aux;
+    match op.op {
+        Op::Mov => un!(|a: u32| a),
+        Op::Not => un!(|a: u32| !a),
+        Op::And => bin!(|a: u32, b: u32| a & b),
+        Op::Or => bin!(|a: u32, b: u32| a | b),
+        Op::Xor => bin!(|a: u32, b: u32| a ^ b),
+        Op::Xnor | Op::XnorDup2 => bin!(|a: u32, b: u32| !(a ^ b)),
+        Op::Add | Op::AddDup2 => bin!(|a: u32, b: u32| a.wrapping_add(b)),
+        Op::Sub => bin!(|a: u32, b: u32| a.wrapping_sub(b)),
+        Op::SetGe => bin!(|a: u32, b: u32| (a >= b) as u32),
+        Op::Min => bin!(|a: u32, b: u32| a.min(b)),
+        Op::Max => bin!(|a: u32, b: u32| a.max(b)),
+        Op::Popcnt => bin!(|a: u32, b: u32| (a & b).count_ones()),
+        Op::Shl => bin!(|a: u32, b: u32| if b >= 32 { 0 } else { a << b }),
+        Op::Shr => bin!(|a: u32, b: u32| if b >= 32 { 0 } else { a >> b }),
+        // dst = (a >> aux) & imm-mask (b is always an immediate here).
+        Op::ShrAnd => {
+            let mask = op.b;
+            un!(|a: u32| (a >> aux) & mask)
+        }
+        // dst = acc(b) + ((a >> aux) & 1).
+        Op::AddExtract => bin!(|a: u32, b: u32| b.wrapping_add((a >> aux) & 1)),
+        Op::Gather => {
+            if op.b_aux != 0 {
+                out[..n].copy_from_slice(col!(op.dst as u32));
+            } else {
+                out[..n].fill(0);
+            }
+            let s = op.a as usize;
+            let cnt = op.b as usize;
+            for g in &gsrcs[s..s + cnt] {
+                let c = col!(g.from as u32);
+                let bit = g.bit;
+                for l in 0..n {
+                    out[l] |= (c[l] & 1) << bit;
+                }
+            }
+        }
+    }
+}
+
+/// Commit one value row to the op's destination column(s), masked to the
+/// container widths (mask is `u32::MAX` on the uniform PHV — the
+/// `copy_from_slice` fast path).
+#[allow(clippy::needless_range_loop)] // indexed loops over parallel slices
+fn store_soa(cols: &mut [u32], n: usize, masks: &[u32], op: &FlatOp, row: &[u32]) {
+    let d = op.dst as usize;
+    let m = masks[d];
+    let dst = &mut cols[d * n..d * n + n];
+    if m == u32::MAX {
+        dst.copy_from_slice(&row[..n]);
+    } else {
+        for l in 0..n {
+            dst[l] = row[l] & m;
+        }
+    }
+    if op.dst2 != op.dst {
+        let d2 = op.dst2 as usize;
+        let m2 = masks[d2];
+        let dst2 = &mut cols[d2 * n..d2 * n + n];
+        if m2 == u32::MAX {
+            dst2.copy_from_slice(&row[..n]);
+        } else {
+            for l in 0..n {
+                dst2[l] = row[l] & m2;
+            }
+        }
+    }
 }
 
 /// Minimum length for a vectorized run.
@@ -841,6 +1070,97 @@ mod tests {
             exec.n_streaming(),
             exec.n_elements()
         );
+    }
+
+    /// SoA batch execution must agree lane-for-lane with the scalar
+    /// executor on every model shape, including the keyed-table path.
+    #[test]
+    fn soa_equals_scalar_executor() {
+        let mut rng = Rng::seed_from_u64(4242);
+        for (chip, in_bits, layers) in [
+            (ChipConfig::rmt(), 32usize, vec![64usize, 32]),
+            (ChipConfig::rmt(), 16, vec![16]),
+            (ChipConfig::rmt(), 32, vec![128, 16]), // recirculating
+            (ChipConfig::rmt_with_popcnt(), 256, vec![32, 5]),
+        ] {
+            let model = BnnModel::random(in_bits, &layers, rng.next_u64());
+            let opts = CompilerOptions {
+                input: InputEncoding::PayloadLe { offset: 0 },
+                ..Default::default()
+            };
+            let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
+            let mut exec = CompiledProgram::compile(&compiled.program, &chip);
+            for n_lanes in [1usize, 2, 7, 64] {
+                // Parse the same inputs into scalar PHVs and SoA columns.
+                let mut scalar_phvs = Vec::with_capacity(n_lanes);
+                let nc = chip.phv.n_containers();
+                let mut cols = vec![0u32; nc * n_lanes];
+                for l in 0..n_lanes {
+                    let x = PackedBits::random(in_bits, &mut rng);
+                    let mut pkt = Vec::new();
+                    for w in x.words() {
+                        pkt.extend_from_slice(&w.to_le_bytes());
+                    }
+                    let mut phv = Phv::zeroed(&chip.phv);
+                    compiled.parser.parse(&pkt, &mut phv, &chip.phv).unwrap();
+                    for c in 0..nc {
+                        cols[c * n_lanes + l] =
+                            phv.read(crate::rmt::ContainerId(c as u16));
+                    }
+                    scalar_phvs.push(phv);
+                }
+                let mut ws = SoaWorkspace::new();
+                exec.run_soa(&mut cols, n_lanes, &mut ws);
+                for phv in scalar_phvs.iter_mut() {
+                    exec.run(phv);
+                }
+                for l in 0..n_lanes {
+                    for c in 0..nc {
+                        assert_eq!(
+                            cols[c * n_lanes + l],
+                            scalar_phvs[l].read(crate::rmt::ContainerId(c as u16)),
+                            "lane {l} container {c} in_bits={in_bits} \
+                             layers={layers:?} n_lanes={n_lanes}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// SoA keyed-table fallback: same hit/miss behavior as scalar.
+    #[test]
+    fn soa_keyed_table_lane_fallback() {
+        use crate::rmt::alu::{AluOp, MicroOp, Src};
+        use crate::rmt::{ContainerId, Element, MatchStage, Program, StepKind, TableEntry};
+        let chip = ChipConfig::rmt();
+        let mut t = MatchStage::new(vec![ContainerId(0)], vec![7]);
+        t.insert(TableEntry { key: vec![5], action_data: vec![42] }).unwrap();
+        let prog = Program::new(vec![Element::with_table(
+            "lut",
+            StepKind::Other,
+            t,
+            vec![MicroOp::alu(
+                ContainerId(1),
+                AluOp::Mov,
+                Src::ActionData(0),
+                Src::Imm(0),
+            )],
+        )]);
+        let exec = CompiledProgram::compile(&prog, &chip);
+        let n_lanes = 3usize;
+        let nc = chip.phv.n_containers();
+        let mut cols = vec![0u32; nc * n_lanes];
+        // Container 0's column is cols[0..3]: lanes hit, miss, hit.
+        cols[0] = 5;
+        cols[1] = 6;
+        cols[2] = 5;
+        let mut ws = SoaWorkspace::new();
+        exec.run_soa(&mut cols, n_lanes, &mut ws);
+        // Container 1's column is cols[3..6].
+        assert_eq!(cols[n_lanes], 42);
+        assert_eq!(cols[n_lanes + 1], 7); // default on miss
+        assert_eq!(cols[n_lanes + 2], 42);
     }
 
     #[test]

@@ -19,6 +19,9 @@
 //! * **Pipeline** ([`pipeline`], [`program`]): executes elements in
 //!   order with VLIW snapshot semantics, supports recirculation passes,
 //!   and enforces program legality.
+//! * **Batch executor** ([`batch`], [`exec`]): the same tape run over a
+//!   batch of packets in structure-of-arrays layout — one op dispatch
+//!   per batch instead of per packet (DESIGN.md §10).
 //! * **Chip** ([`chip`]): architectural parameters + the timing model
 //!   (fully pipelined, 1 packet/cycle at 960 MHz ⇒ 960 Mpps line rate).
 //!
@@ -27,6 +30,7 @@
 //! concatenation op used by the paper's 1-element folding step).
 
 pub mod alu;
+pub mod batch;
 pub mod chip;
 pub mod element;
 pub mod exec;
@@ -37,6 +41,7 @@ pub mod program;
 pub mod table;
 
 pub use alu::{AluOp, MicroOp, Src};
+pub use batch::{BatchedTape, PhvBatch};
 pub use chip::{ChipConfig, TimingReport};
 pub use element::Element;
 pub use parser::{Extract, PacketParser};

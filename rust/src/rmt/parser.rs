@@ -20,6 +20,34 @@ pub struct Extract {
     pub dst: ContainerId,
 }
 
+impl Extract {
+    /// Decode this extraction's value from a packet (bounds-checked).
+    /// Shared by the scalar parse path and the SoA batch parser
+    /// ([`super::batch`]), so endianness handling exists exactly once.
+    #[inline]
+    pub fn read_value(&self, packet: &[u8]) -> Result<u32> {
+        let end = self.offset + self.width_bytes as usize;
+        if packet.len() < end {
+            return Err(Error::Parse(format!(
+                "packet too short: {} bytes, extract needs {end}",
+                packet.len()
+            )));
+        }
+        let bytes = &packet[self.offset..end];
+        let mut v = 0u32;
+        if self.big_endian {
+            for &b in bytes {
+                v = (v << 8) | b as u32;
+            }
+        } else {
+            for (k, &b) in bytes.iter().enumerate() {
+                v |= (b as u32) << (8 * k);
+            }
+        }
+        Ok(v)
+    }
+}
+
 /// A configured parser: an ordered list of extractions.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct PacketParser {
@@ -79,25 +107,7 @@ impl PacketParser {
     /// Parse a packet into a PHV.
     pub fn parse(&self, packet: &[u8], phv: &mut Phv, config: &PhvConfig) -> Result<()> {
         for e in &self.extracts {
-            let end = e.offset + e.width_bytes as usize;
-            if packet.len() < end {
-                return Err(Error::Parse(format!(
-                    "packet too short: {} bytes, extract needs {end}",
-                    packet.len()
-                )));
-            }
-            let bytes = &packet[e.offset..end];
-            let mut v = 0u32;
-            if e.big_endian {
-                for &b in bytes {
-                    v = (v << 8) | b as u32;
-                }
-            } else {
-                for (k, &b) in bytes.iter().enumerate() {
-                    v |= (b as u32) << (8 * k);
-                }
-            }
-            phv.write(e.dst, v, config);
+            phv.write(e.dst, e.read_value(packet)?, config);
         }
         Ok(())
     }

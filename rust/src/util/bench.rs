@@ -161,6 +161,78 @@ impl Report {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Machine-readable bench records (BENCH_pipeline.json)
+// ---------------------------------------------------------------------------
+
+/// One machine-readable measurement: which bench produced it, what case
+/// ran, on which backend, at what batch size, and the resulting rate.
+/// The perf trajectory across PRs is tracked from these records.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub bench: String,
+    pub case: String,
+    pub backend: String,
+    pub batch_size: usize,
+    /// Simulated packets/second at the median iteration time.
+    pub pps: f64,
+    pub median_ns: f64,
+}
+
+impl BenchRecord {
+    /// Build from measured [`Stats`].
+    pub fn from_stats(bench: &str, backend: &str, batch_size: usize, s: &Stats) -> Self {
+        Self {
+            bench: bench.to_string(),
+            case: s.name.clone(),
+            backend: backend.to_string(),
+            batch_size,
+            pps: s.items_per_sec(),
+            median_ns: s.median_ns,
+        }
+    }
+}
+
+/// Merge `records` into the JSON file at `path` (`{"records": [...]}`):
+/// records from *other* bench binaries are preserved, records with this
+/// `bench` name are replaced wholesale — so `pipeline_hotpath` and
+/// `throughput` can both write to `BENCH_pipeline.json` in any order.
+pub fn write_bench_json(
+    path: &str,
+    bench: &str,
+    records: &[BenchRecord],
+) -> crate::error::Result<()> {
+    use crate::util::json::{self, Value};
+    use std::collections::BTreeMap;
+
+    let mut kept: Vec<Value> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(v) = json::parse(&text) {
+            if let Some(arr) = v.get("records").and_then(|r| r.as_array()) {
+                for r in arr {
+                    if r.get("bench").and_then(|b| b.as_str()) != Some(bench) {
+                        kept.push(r.clone());
+                    }
+                }
+            }
+        }
+    }
+    for r in records {
+        let mut m = BTreeMap::new();
+        m.insert("bench".to_string(), Value::Str(r.bench.clone()));
+        m.insert("case".to_string(), Value::Str(r.case.clone()));
+        m.insert("backend".to_string(), Value::Str(r.backend.clone()));
+        m.insert("batch_size".to_string(), Value::Int(r.batch_size as i64));
+        m.insert("pps".to_string(), Value::Float(r.pps));
+        m.insert("median_ns".to_string(), Value::Float(r.median_ns));
+        kept.push(Value::Object(m));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("records".to_string(), Value::Array(kept));
+    std::fs::write(path, format!("{}\n", Value::Object(top)))?;
+    Ok(())
+}
+
 /// Human-readable nanoseconds.
 pub fn format_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -208,6 +280,38 @@ mod tests {
         assert!(s.iters > 0);
         assert!(s.median_ns >= 0.0);
         assert!(s.items_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn bench_json_merges_across_benches() {
+        let dir = std::env::temp_dir().join(format!(
+            "n2net-bench-json-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_pipeline.json");
+        let path = path.to_str().unwrap();
+        let rec = |bench: &str, case: &str, pps: f64| BenchRecord {
+            bench: bench.into(),
+            case: case.into(),
+            backend: "batched".into(),
+            batch_size: 64,
+            pps,
+            median_ns: 100.0,
+        };
+        write_bench_json(path, "a", &[rec("a", "x", 1e6)]).unwrap();
+        write_bench_json(path, "b", &[rec("b", "y", 2e6)]).unwrap();
+        // Re-writing bench "a" replaces its records, keeps "b".
+        write_bench_json(path, "a", &[rec("a", "x2", 3e6)]).unwrap();
+        let v = crate::util::json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        let arr = v.get("records").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        let cases: Vec<&str> = arr
+            .iter()
+            .filter_map(|r| r.get("case").and_then(|c| c.as_str()))
+            .collect();
+        assert!(cases.contains(&"x2") && cases.contains(&"y"), "{cases:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! `examples/e2e_pipeline.rs`).
 
 use n2net::apps::{lb_hints::hash_route_report, DdosFilter, HintRouter};
+use n2net::backend::BackendKind;
 use n2net::bnn::io::{DdosDoc, SubnetDoc};
 use n2net::bnn::{self, BnnModel, PackedBits};
 use n2net::compiler::{p4gen, Compiler, CompilerOptions, InputEncoding};
@@ -56,17 +57,23 @@ fn engine_matches_single_pipeline_across_routers() {
         (3, RouterPolicy::RoundRobin),
         (3, RouterPolicy::FlowHash),
     ] {
-        let compiled = Compiler::new(ChipConfig::rmt(), opts.clone())
-            .compile(&model)
-            .unwrap();
-        let engine = Engine::new(compiled, EngineConfig { n_workers: workers, router });
-        let report = engine.process_trace(&trace.packets).unwrap();
-        match &reference {
-            None => reference = Some(report.outputs),
-            Some(r) => assert_eq!(
-                &report.outputs, r,
-                "workers={workers} router={router:?} changed outputs"
-            ),
+        for backend in [BackendKind::Scalar, BackendKind::Batched] {
+            let compiled = Compiler::new(ChipConfig::rmt(), opts.clone())
+                .compile(&model)
+                .unwrap();
+            let engine = Engine::new(
+                compiled,
+                EngineConfig { n_workers: workers, router, backend, ..Default::default() },
+            );
+            let report = engine.process_trace(&trace.packets).unwrap();
+            match &reference {
+                None => reference = Some(report.outputs),
+                Some(r) => assert_eq!(
+                    &report.outputs, r,
+                    "workers={workers} router={router:?} backend={backend:?} \
+                     changed outputs"
+                ),
+            }
         }
     }
 }
@@ -153,7 +160,11 @@ fn malformed_traffic_never_panics_the_engine() {
     let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model).unwrap();
     let engine = Engine::new(
         compiled,
-        EngineConfig { n_workers: 2, router: RouterPolicy::RoundRobin },
+        EngineConfig {
+            n_workers: 2,
+            router: RouterPolicy::RoundRobin,
+            ..Default::default()
+        },
     );
     // Garbage of every length 0..64.
     let packets: Vec<Vec<u8>> = (0..64usize).map(|n| vec![0xAA; n]).collect();

@@ -1,0 +1,269 @@
+//! Property tests for the batched SoA executor (ISSUE 1 acceptance):
+//!
+//! B1. For ANY valid model, trace, and batch size (including batch = 1
+//!     and recirculating models), [`BatchedTape`] output is bit-exact
+//!     with the scalar [`Pipeline`] — full-PHV equality per lane — and
+//!     with the trusted `bnn::forward` reference.
+//! B2. Malformed packets are masked per lane (flagged + zeroed) where
+//!     the scalar path reports a parse error, without disturbing the
+//!     other lanes.
+//! B3. The keyed-table (multi-model) path is lane-exact too.
+
+use n2net::bnn::{self, BnnModel, PackedBits};
+use n2net::compiler::{
+    Compiler, CompilerOptions, InputEncoding, MultiModelOptions,
+};
+use n2net::rmt::{BatchedTape, ChipConfig, Pipeline};
+use n2net::util::prop::{self, pow2_in};
+use n2net::util::rng::Rng;
+
+fn frame_for(x: &PackedBits) -> Vec<u8> {
+    let mut pkt = Vec::with_capacity(x.words().len() * 4);
+    for w in x.words() {
+        pkt.extend_from_slice(&w.to_le_bytes());
+    }
+    pkt
+}
+
+/// Random feasible spec, biased small for speed (cf. `prop_pipeline`).
+fn random_spec(rng: &mut Rng) -> (usize, Vec<usize>) {
+    let in_bits = pow2_in(rng, 16, 256);
+    let n_layers = 1 + rng.gen_range(0, 2);
+    let mut layers = Vec::new();
+    for i in 0..n_layers {
+        if i + 1 == n_layers {
+            layers.push(1 + rng.gen_range(0, 32));
+        } else {
+            layers.push(pow2_in(rng, 16, 64));
+        }
+    }
+    (in_bits, layers)
+}
+
+/// One random scenario: model + mixed valid/malformed trace + batch
+/// size; checks B1 and B2 against the scalar pipeline and reference.
+fn check_batch_equivalence(chip: ChipConfig, rng: &mut Rng) -> Result<(), String> {
+    let (in_bits, layers) = random_spec(rng);
+    let seed = rng.next_u64();
+    let model = BnnModel::random(in_bits, &layers, seed);
+    let opts = CompilerOptions {
+        input: InputEncoding::PayloadLe { offset: 0 },
+        weights_as_immediates: rng.gen_bool(0.5),
+        ..Default::default()
+    };
+    let compiled = Compiler::new(chip.clone(), opts)
+        .compile(&model)
+        .map_err(|e| format!("compile {in_bits}b->{layers:?}: {e}"))?;
+    let mut scalar = Pipeline::new(
+        chip.clone(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        true,
+    )
+    .map_err(|e| e.to_string())?;
+    let mut tape = BatchedTape::new(
+        chip.clone(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        true,
+    )
+    .map_err(|e| e.to_string())?;
+
+    let batch_size = *[1usize, 2, 7, 33, 64]
+        .get(rng.gen_range(0, 5))
+        .unwrap();
+    let mut inputs: Vec<Option<PackedBits>> = Vec::with_capacity(batch_size);
+    let mut packets: Vec<Vec<u8>> = Vec::with_capacity(batch_size);
+    for _ in 0..batch_size {
+        let x = PackedBits::random(in_bits, rng);
+        let mut frame = frame_for(&x);
+        // ~1 in 6 packets is truncated (malformed).
+        if rng.gen_range(0, 6) == 0 && !frame.is_empty() {
+            frame.truncate(rng.gen_range(0, frame.len()));
+            inputs.push(None);
+        } else {
+            inputs.push(Some(x));
+        }
+        packets.push(frame);
+    }
+
+    let batch = tape.process_batch(&packets);
+    if batch.n_lanes() != batch_size {
+        return Err(format!("lane count {} != {batch_size}", batch.n_lanes()));
+    }
+    for (l, input) in inputs.iter().enumerate() {
+        match input {
+            None => {
+                // B2: malformed — scalar must also reject, lane masked.
+                if batch.lane_ok(l) {
+                    return Err(format!("lane {l}: malformed packet not masked"));
+                }
+                if scalar.process_packet(&packets[l]).is_ok() {
+                    return Err(format!("lane {l}: scalar accepted malformed pkt"));
+                }
+            }
+            Some(x) => {
+                if !batch.lane_ok(l) {
+                    return Err(format!("lane {l}: valid packet masked"));
+                }
+                let phv = scalar
+                    .process_packet(&packets[l])
+                    .map_err(|e| format!("lane {l}: scalar: {e}"))?;
+                // B1: full-PHV equality with the scalar executor.
+                if batch.lane_phv(l, &chip.phv) != phv {
+                    return Err(format!(
+                        "lane {l}: PHV diverged ({in_bits}b->{layers:?} \
+                         seed {seed:#x} batch {batch_size})"
+                    ));
+                }
+                // …and with the reference forward.
+                let got = PackedBits::from_words(
+                    batch.read_group(l, &compiled.layout.output),
+                    compiled.output_bits,
+                );
+                let expect = bnn::forward(&model, x);
+                if got != expect {
+                    return Err(format!(
+                        "lane {l}: output {got:?} != reference {expect:?} \
+                         ({in_bits}b->{layers:?} seed {seed:#x})"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn b1_b2_batched_equals_scalar_and_reference_stock_chip() {
+    prop::check("batch≡scalar/stock", prop::default_cases(), |rng| {
+        check_batch_equivalence(ChipConfig::rmt(), rng)
+    });
+}
+
+#[test]
+fn b1_b2_batched_equals_scalar_and_reference_native_popcnt() {
+    prop::check("batch≡scalar/native", prop::default_cases(), |rng| {
+        check_batch_equivalence(ChipConfig::rmt_with_popcnt(), rng)
+    });
+}
+
+#[test]
+fn b1_recirculating_model_every_batch_size() {
+    // 32b -> [128, 16] needs > 32 elements: multi-round layer 0 plus a
+    // second layer, i.e. a genuine recirculation program.
+    let chip = ChipConfig::rmt();
+    let model = BnnModel::random(32, &[128, 16], 0xBEEF);
+    let opts = CompilerOptions {
+        input: InputEncoding::PayloadLe { offset: 0 },
+        ..Default::default()
+    };
+    let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
+    assert!(
+        compiled.program.n_elements() > chip.n_elements,
+        "model must recirculate for this test to bite"
+    );
+    let mut scalar = Pipeline::new(
+        chip.clone(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        true,
+    )
+    .unwrap();
+    let mut tape = BatchedTape::new(
+        chip.clone(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        true,
+    )
+    .unwrap();
+    let mut rng = Rng::seed_from_u64(99);
+    for batch_size in [1usize, 3, 64, 257] {
+        let inputs: Vec<PackedBits> =
+            (0..batch_size).map(|_| PackedBits::random(32, &mut rng)).collect();
+        let packets: Vec<Vec<u8>> = inputs.iter().map(frame_for).collect();
+        let batch = tape.process_batch(&packets);
+        for (l, x) in inputs.iter().enumerate() {
+            let phv = scalar.process_packet(&packets[l]).unwrap();
+            assert_eq!(
+                batch.lane_phv(l, &chip.phv),
+                phv,
+                "batch {batch_size} lane {l}"
+            );
+            assert_eq!(
+                PackedBits::from_words(
+                    batch.read_group(l, &compiled.layout.output),
+                    compiled.output_bits,
+                ),
+                bnn::forward(&model, x),
+                "batch {batch_size} lane {l} vs reference"
+            );
+        }
+    }
+}
+
+#[test]
+fn b3_multi_model_keyed_tables_lane_exact() {
+    // Keyed match stages (per-packet weight selection) take the
+    // per-lane fallback inside the SoA executor; outputs must still be
+    // lane-exact with the scalar pipeline and each model's reference.
+    let models: Vec<(u32, BnnModel)> = vec![
+        (7, BnnModel::random(32, &[32, 16], 100)),
+        (13, BnnModel::random(32, &[32, 16], 200)),
+        (99, BnnModel::random(32, &[32, 16], 300)),
+    ];
+    let opts = CompilerOptions {
+        input: InputEncoding::PayloadLe { offset: 4 },
+        ..Default::default()
+    };
+    let compiled = Compiler::new(ChipConfig::rmt(), opts)
+        .compile_multi(&models, MultiModelOptions { id_offset: 0 })
+        .unwrap();
+    let chip = ChipConfig::rmt();
+    let mut scalar = Pipeline::new(
+        chip.clone(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        true,
+    )
+    .unwrap();
+    let mut tape = BatchedTape::new(
+        chip.clone(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        true,
+    )
+    .unwrap();
+    let frame = |id: u32, x: &PackedBits| -> Vec<u8> {
+        let mut pkt = id.to_le_bytes().to_vec();
+        for w in x.words() {
+            pkt.extend_from_slice(&w.to_le_bytes());
+        }
+        pkt
+    };
+    let mut rng = Rng::seed_from_u64(1);
+    // Interleave all three model ids in one batch.
+    let mut packets = Vec::new();
+    let mut expected = Vec::new();
+    for _ in 0..10 {
+        for (id, model) in &models {
+            let x = PackedBits::random(32, &mut rng);
+            packets.push(frame(*id, &x));
+            expected.push(bnn::forward(model, &x));
+        }
+    }
+    let batch = tape.process_batch(&packets);
+    for (l, expect) in expected.iter().enumerate() {
+        assert!(batch.lane_ok(l));
+        let phv = scalar.process_packet(&packets[l]).unwrap();
+        assert_eq!(batch.lane_phv(l, &chip.phv), phv, "lane {l}");
+        assert_eq!(
+            &PackedBits::from_words(
+                batch.read_group(l, &compiled.layout.output),
+                compiled.output_bits,
+            ),
+            expect,
+            "lane {l}"
+        );
+    }
+}

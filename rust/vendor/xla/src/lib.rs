@@ -1,0 +1,133 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The build environment has no XLA toolchain, so this crate mirrors the
+//! small API surface `n2net::runtime` consumes and fails — cleanly, at
+//! *runtime*, from `PjRtClient::cpu()` — with an explanatory error. All
+//! downstream code (the PJRT oracle, `n2net run`/`selftest`) compiles
+//! unchanged and reports "PJRT unavailable" instead of linking XLA.
+//!
+//! Swap this path dependency for the real `xla` crate to get the actual
+//! golden-oracle execution; nothing else in the tree changes.
+
+use std::fmt;
+
+/// Error type matching the real crate's role in signatures.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT/XLA is unavailable in this offline build (stub crate at \
+         rust/vendor/xla); install the real `xla` bindings to run the \
+         golden oracle"
+            .to_string(),
+    ))
+}
+
+/// Stub of a host literal (typed array value).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal. The stub keeps no data — any attempt to
+    /// execute or read it back errors.
+    pub fn vec1<T>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Stub of a device buffer returned by execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Stub of an HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// Stub of a computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of the PJRT client. `cpu()` is the single failure point every
+/// runtime path funnels through.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Stub of a compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Matches the real crate's generic-over-input-kind signature.
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::vec1(&[1u32]).reshape(&[1]).is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT"));
+    }
+}
