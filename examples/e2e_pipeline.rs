@@ -2,9 +2,9 @@
 //!
 //!   JAX/Pallas training (build time, `make artifacts`)
 //!     → packed weights + AOT HLO artifact
-//!     → N2Net compiler → RMT pipeline program
+//!     → `deploy::Deployment` (N2Net compiler → RMT pipeline program)
 //!     → simulated switch serves a 50k-packet DDoS trace (multi-worker
-//!       engine)
+//!       engine over the deployment's publication slot)
 //!     → every output cross-checked bit-for-bit against (a) the Rust
 //!       reference forward and (b) the PJRT-executed JAX model
 //!     → accuracy / throughput / latency / memory report.
@@ -19,11 +19,9 @@ use std::time::Instant;
 
 use n2net::bnn::{self, PackedBits};
 use n2net::baseline::LutClassifier;
-use n2net::compiler::{Compiler, CompilerOptions, InputEncoding};
-use n2net::coordinator::{Engine, EngineConfig, RouterPolicy};
-use n2net::net::packet::IPV4_SRC_OFFSET;
+use n2net::coordinator::RouterPolicy;
+use n2net::deploy::{Deployment, FieldExtractor};
 use n2net::net::{TraceGenerator, TraceKind};
-use n2net::rmt::ChipConfig;
 use n2net::runtime::Oracle;
 use n2net::util::rng::Rng;
 
@@ -53,29 +51,23 @@ fn main() -> anyhow::Result<()> {
         println!("    loss curve (0%..100%): {}", probe.join(" → "));
     }
 
-    // ---- 2. Compile onto the switch ----------------------------------
-    let opts = CompilerOptions {
-        input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
-        ..Default::default()
-    };
-    let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model)?;
-    println!("\n[2] compiled to RMT pipeline:");
-    for line in compiled.resource_report().lines() {
+    // ---- 2. Deploy onto the switch -----------------------------------
+    let n_workers = std::thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(4);
+    let deployment = Deployment::builder()
+        .extractor(FieldExtractor::SrcIp)
+        .router(RouterPolicy::RoundRobin)
+        .workers(n_workers)
+        .model("e2e", model.clone())
+        .build()?;
+    println!("\n[2] deployed to RMT pipeline (model v{}):", deployment.version("e2e")?);
+    for line in deployment.compiled("e2e")?.resource_report().lines() {
         println!("    {line}");
     }
 
     // ---- 3. Serve a DDoS trace through the engine --------------------
     let mut gen = TraceGenerator::new(2026);
     let trace = gen.generate(&TraceKind::Ddos { ddos: doc.ddos.clone() }, N_PACKETS);
-    let n_workers = std::thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(4);
-    let engine = Engine::new(
-        compiled,
-        EngineConfig {
-            n_workers,
-            router: RouterPolicy::RoundRobin,
-            ..Default::default()
-        },
-    );
+    let engine = deployment.engine("e2e")?;
     let t0 = Instant::now();
     let report = engine.process_trace(&trace.packets)?;
     let wall = t0.elapsed();

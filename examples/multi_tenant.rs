@@ -1,19 +1,21 @@
 //! Multi-model extension: one pipeline program, several BNNs — a packet
-//! header field selects the weights per packet (tenant / policy id).
+//! header field selects the weights per packet (tenant / policy id) —
+//! now one builder call away: `Deployment::builder().keyed(id_offset)`.
 //!
 //! The paper pre-configures one model's weights into the element SRAMs;
 //! the match stage makes that SRAM *addressable*: keying the XNOR
 //! elements' tables on a model-id container serves many models from the
 //! same 30-element program at the same line rate, paying only table
-//! entries (SRAM), not pipeline stages.
+//! entries (SRAM), not pipeline stages. And because the deployment owns
+//! publication, a tenant's retrained model hot-swaps in at runtime
+//! without touching the other tenants.
 //!
 //! ```bash
 //! cargo run --release --example multi_tenant
 //! ```
 
 use n2net::bnn::{self, BnnModel, PackedBits};
-use n2net::compiler::{Compiler, CompilerOptions, InputEncoding, MultiModelOptions};
-use n2net::rmt::{ChipConfig, Pipeline};
+use n2net::deploy::{Deployment, FieldExtractor};
 use n2net::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -22,21 +24,23 @@ fn main() -> anyhow::Result<()> {
     // costs one container, and 64 parallel neurons use all 128 — with
     // the id reserved, the 64+32 shape still compiles but spills to two
     // passes. A real constraint, worth knowing.)
-    let tenants: Vec<(u32, BnnModel)> = vec![
-        (1001, BnnModel::random(32, &[32, 16], 11)),
-        (2002, BnnModel::random(32, &[32, 16], 22)),
-        (3003, BnnModel::random(32, &[32, 16], 33)),
+    let tenants: Vec<(&str, u32, BnnModel)> = vec![
+        ("tenant-a", 1001, BnnModel::random(32, &[32, 16], 11)),
+        ("tenant-b", 2002, BnnModel::random(32, &[32, 16], 22)),
+        ("tenant-c", 3003, BnnModel::random(32, &[32, 16], 33)),
     ];
 
-    let opts = CompilerOptions {
-        // Packet: [tenant id u32 LE][activation words LE].
-        input: InputEncoding::PayloadLe { offset: 4 },
-        ..Default::default()
-    };
-    let compiled = Compiler::new(ChipConfig::rmt(), opts)
-        .compile_multi(&tenants, MultiModelOptions { id_offset: 0 })?;
+    // Packet: [tenant id u32 LE][activation words LE].
+    let mut builder = Deployment::builder()
+        .extractor(FieldExtractor::PayloadAt { offset: 4 })
+        .keyed(0);
+    for (name, id, model) in &tenants {
+        builder = builder.model_with_id(*name, *id, model.clone());
+    }
+    let deployment = builder.build()?;
 
     println!("one program, {} tenants:", tenants.len());
+    let compiled = deployment.compiled("tenant-a")?;
     print!("{}", compiled.resource_report());
     println!(
         "(same {} elements as a single-model deployment — extra models cost \
@@ -44,31 +48,51 @@ fn main() -> anyhow::Result<()> {
         compiled.program.n_elements()
     );
 
-    let mut pipe = Pipeline::new(
-        ChipConfig::rmt(),
-        compiled.program.clone(),
-        compiled.parser.clone(),
-        false,
-    )?;
+    let mut session = deployment.keyed_session()?;
+    let frame = |id: u32, x: &PackedBits| -> Vec<u8> {
+        let mut pkt = id.to_le_bytes().to_vec();
+        for w in x.words() {
+            pkt.extend_from_slice(&w.to_le_bytes());
+        }
+        pkt
+    };
 
     // Same activation vector, three tenants → three different answers,
     // each bit-exact with that tenant's reference model.
     let mut rng = Rng::seed_from_u64(9);
     let x = PackedBits::random(32, &mut rng);
     println!("activations: {x:?}");
-    for (id, model) in &tenants {
-        let mut pkt = id.to_le_bytes().to_vec();
-        for w in x.words() {
-            pkt.extend_from_slice(&w.to_le_bytes());
-        }
-        let out = compiled.read_output(&pipe.process_packet(&pkt)?);
-        let expect = bnn::forward(model, &x);
-        assert_eq!(out, expect);
+    let mask = n2net::backend::out_mask(16);
+    for (name, id, model) in &tenants {
+        let pkt = frame(*id, &x);
+        let refs: Vec<&[u8]> = vec![&pkt];
+        let mut out = Vec::new();
+        session.classify_batch(&refs, &mut out)?;
+        let expect = bnn::forward(model, &x).words()[0] & mask;
+        assert_eq!(out[0], expect);
+        println!("{name} (id {id}): output {:08x} (≡ tenant's reference model ✓)", out[0]);
+    }
+
+    // Hot-swap tenant-b's retrained model; the other tenants' answers
+    // must not move.
+    let retrained = BnnModel::random(32, &[32, 16], 2222);
+    let v = deployment.swap_model("tenant-b", retrained.clone())?;
+    println!("\nhot-swapped tenant-b's retrained model in as program v{v}");
+    for (name, id, model) in &tenants {
+        let expect_model = if *name == "tenant-b" { &retrained } else { model };
+        let pkt = frame(*id, &x);
+        let refs: Vec<&[u8]> = vec![&pkt];
+        let mut out = Vec::new();
+        session.classify_batch(&refs, &mut out)?;
+        let expect = bnn::forward(expect_model, &x).words()[0] & mask;
+        assert_eq!(out[0], expect);
         println!(
-            "tenant {id}: output {:08x} (≡ tenant's reference model ✓)",
-            out.words()[0]
+            "{name} (id {id}): output {:08x} ({})",
+            out[0],
+            if *name == "tenant-b" { "retrained model ✓" } else { "unchanged ✓" }
         );
     }
+
     println!("\nall tenants served by the same pipeline at line rate.");
     Ok(())
 }

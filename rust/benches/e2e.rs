@@ -1,27 +1,21 @@
 //! E4/E9 bench: end-to-end engine throughput on the DDoS workload —
-//! the two-layer use-case model served through the multi-worker engine,
-//! now entirely behind the [`InferenceBackend`] trait: the same serving
-//! loop is measured on the scalar pipeline and the batched SoA tape.
+//! the two-layer use-case model deployed through
+//! [`n2net::deploy::Deployment`] and served by the multi-worker engine
+//! on the scalar pipeline and the batched SoA tape.
 //!
 //! `cargo bench --bench e2e`
 
 use n2net::backend::BackendKind;
 use n2net::bnn::BnnModel;
-use n2net::compiler::{Compiler, CompilerOptions, InputEncoding};
-use n2net::coordinator::{Batch, BatchPolicy, Batcher, Engine, EngineConfig, RouterPolicy};
-use n2net::net::packet::IPV4_SRC_OFFSET;
+use n2net::coordinator::{Batch, BatchPolicy, Batcher, RouterPolicy};
+use n2net::deploy::{Deployment, FieldExtractor};
 use n2net::net::{TraceGenerator, TraceKind};
-use n2net::rmt::ChipConfig;
 use n2net::util::bench::{default_bencher, format_rate, keep, Report};
 
 fn main() {
-    println!("# E4/E9 — end-to-end engine throughput (via InferenceBackend)");
+    println!("# E4/E9 — end-to-end engine throughput (via deploy::Deployment)");
     // The paper's use-case model (+1-bit head for classification).
     let model = BnnModel::random(32, &[64, 32, 1], 2024);
-    let opts = CompilerOptions {
-        input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
-        ..Default::default()
-    };
 
     let mut gen = TraceGenerator::new(8);
     let ddos = n2net::bnn::io::DdosDoc {
@@ -36,18 +30,15 @@ fn main() {
     report.header();
     for backend in [BackendKind::Scalar, BackendKind::Batched] {
         for workers in [1usize, 2, 4] {
-            let compiled = Compiler::new(ChipConfig::rmt(), opts.clone())
-                .compile(&model)
+            let deployment = Deployment::builder()
+                .extractor(FieldExtractor::SrcIp)
+                .backend(backend)
+                .workers(workers)
+                .router(RouterPolicy::RoundRobin)
+                .model("e2e", model.clone())
+                .build()
                 .unwrap();
-            let engine = Engine::new(
-                compiled,
-                EngineConfig {
-                    n_workers: workers,
-                    router: RouterPolicy::RoundRobin,
-                    backend,
-                    ..Default::default()
-                },
-            );
+            let engine = deployment.engine("e2e").unwrap();
             let stats = b.run(
                 &format!("{} workers={workers}", backend.name()),
                 trace.packets.len() as f64,
@@ -61,7 +52,12 @@ fn main() {
     }
 
     // Modeled ASIC for the same program.
-    let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model).unwrap();
+    let deployment = Deployment::builder()
+        .extractor(FieldExtractor::SrcIp)
+        .model("e2e", model.clone())
+        .build()
+        .unwrap();
+    let compiled = deployment.compiled("e2e").unwrap();
     let t = compiled.chip.timing(&compiled.program);
     println!(
         "\nmodeled ASIC for this program: {:.0} M packets/s ({} elements, {} pass)",

@@ -1,20 +1,26 @@
 //! L3 hot-path microbenchmarks — the §Perf instrument (DESIGN.md §9).
 //!
 //! Measures the simulator's inner loops in isolation:
-//!   * full per-packet pipeline traversal (the use-case model)
-//!   * batched SoA execution at increasing batch sizes (DESIGN.md §10)
-//!   * parsing
-//!   * PHV allocation vs reuse
+//!   * full per-packet classification through a `deploy::Session` on
+//!     the scalar backend (the use-case model)
+//!   * batched SoA classification at increasing batch sizes (§10)
+//!   * parsing / PHV allocation (low-level simulator internals, below
+//!     the deployment API)
+//!
+//! Classifiers are constructed through [`n2net::deploy::Deployment`] —
+//! the same path apps and the CLI use — so the measured cost includes
+//! the session seam (one atomic version peek per batch).
 //!
 //! Emits machine-readable records to `BENCH_pipeline.json` (pps, batch
 //! size, backend) so the perf trajectory is tracked across PRs.
 //!
 //! `cargo bench --bench pipeline_hotpath`
 
+use n2net::backend::BackendKind;
 use n2net::bnn::BnnModel;
-use n2net::compiler::{Compiler, CompilerOptions, InputEncoding};
+use n2net::deploy::{Deployment, FieldExtractor};
 use n2net::net::packet::PacketBuilder;
-use n2net::rmt::{BatchedTape, ChipConfig, Phv, Pipeline};
+use n2net::rmt::{ChipConfig, Phv, Pipeline};
 use n2net::util::bench::{
     default_bencher, keep, write_bench_json, BenchRecord, Report,
 };
@@ -25,13 +31,13 @@ fn main() {
     let chip = ChipConfig::rmt();
     // The paper's use-case model: 32b -> 64 -> 32, 30 elements.
     let model = BnnModel::random(32, &[64, 32], 3);
-    let opts = CompilerOptions {
-        input: InputEncoding::PayloadLe {
-            offset: n2net::net::N2NET_PAYLOAD_OFFSET,
-        },
-        ..Default::default()
-    };
-    let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
+    let deployment = Deployment::builder()
+        .chip(chip.clone())
+        .extractor(FieldExtractor::Payload)
+        .model("usecase", model)
+        .build()
+        .unwrap();
+    let compiled = deployment.compiled("usecase").unwrap();
     let n_elements = compiled.program.n_elements();
     let total_ops: usize = compiled
         .program
@@ -48,17 +54,17 @@ fn main() {
     let mut report = Report::new("simulator inner loops");
     report.header();
 
-    // Full packet: parse + 30 elements, one packet at a time.
+    // Full packet: parse + 30 elements, one packet at a time, through
+    // the scalar session.
     let frame = PacketBuilder::default().build_activations(&[0xDEADBEEF]);
-    let mut pipe = Pipeline::new(
-        chip.clone(),
-        compiled.program.clone(),
-        compiled.parser.clone(),
-        false,
-    )
-    .unwrap();
-    let scalar_stats = b.run("process_packet (parse+30 elem)", 1.0, || {
-        keep(pipe.process_packet(&frame).unwrap());
+    let mut scalar = deployment
+        .session_with("usecase", BackendKind::Scalar)
+        .unwrap();
+    let frame_refs: Vec<&[u8]> = vec![&frame];
+    let mut out = Vec::new();
+    let scalar_stats = b.run("scalar session (parse+30 elem)", 1.0, || {
+        scalar.classify_batch(&frame_refs, &mut out).unwrap();
+        keep(out.first().copied());
     });
     let per_elem = scalar_stats.median_ns / n_elements as f64;
     let per_op = scalar_stats.median_ns / total_ops as f64;
@@ -71,7 +77,15 @@ fn main() {
     ));
     report.add(scalar_stats);
 
-    // PHV-reuse path (no per-packet allocation).
+    // PHV-reuse path (no per-packet allocation) — a low-level simulator
+    // internal below the deployment API.
+    let mut pipe = Pipeline::new(
+        chip.clone(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        false,
+    )
+    .unwrap();
     let mut phv = Phv::zeroed(&chip.phv);
     compiled
         .parser
@@ -85,15 +99,11 @@ fn main() {
     });
     report.add(s);
 
-    // Batched SoA execution across batch sizes (same model, same
+    // Batched SoA classification across batch sizes (same model, same
     // parse): the op dispatch amortizes over the whole batch.
-    let mut tape = BatchedTape::new(
-        chip.clone(),
-        compiled.program.clone(),
-        compiled.parser.clone(),
-        false,
-    )
-    .unwrap();
+    let mut batched = deployment
+        .session_with("usecase", BackendKind::Batched)
+        .unwrap();
     let mut speedup_at_64 = 0.0f64;
     for batch_size in [1usize, 16, 64, 256, 1024] {
         let packets: Vec<Vec<u8>> = (0..batch_size)
@@ -102,12 +112,14 @@ fn main() {
                     .build_activations(&[0xDEADBEEF ^ (i as u32).wrapping_mul(0x9E37)])
             })
             .collect();
+        let refs: Vec<&[u8]> = packets.iter().map(|p| p.as_slice()).collect();
+        let mut out = Vec::new();
         let s = b.run(
-            &format!("batched process_batch (B={batch_size})"),
+            &format!("batched session (B={batch_size})"),
             batch_size as f64,
             || {
-                let out = tape.process_batch(&packets);
-                keep(out.n_ok());
+                batched.classify_batch(&refs, &mut out).unwrap();
+                keep(out.len());
             },
         );
         let pps = s.items_per_sec();
@@ -130,7 +142,7 @@ fn main() {
     });
     report.add(s);
 
-    // PHV allocation cost (what process_packet pays per packet).
+    // PHV allocation cost (what per-packet processing pays).
     let s = b.run("Phv::zeroed alloc", 1.0, || {
         keep(Phv::zeroed(&chip.phv));
     });

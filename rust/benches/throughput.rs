@@ -1,17 +1,19 @@
 //! E3 bench: the paper's throughput-scaling series — modeled ASIC rate
 //! (960 Mpps × parallel neurons) alongside the *measured* software
 //! simulator rate for the same programs, on both the scalar per-packet
-//! path and the batched SoA path (DESIGN.md §10).
+//! path and the batched SoA path (DESIGN.md §10), each served through a
+//! [`n2net::deploy::Deployment`] session (the canonical serving path).
 //!
 //! Appends machine-readable records to `BENCH_pipeline.json`.
 //!
 //! `cargo bench --bench throughput`
 
 use n2net::analysis::throughput::throughput_table;
+use n2net::backend::BackendKind;
 use n2net::bnn::{BnnModel, PackedBits};
 use n2net::compiler::layout::max_parallel_neurons;
-use n2net::compiler::{Compiler, CompilerOptions, InputEncoding};
-use n2net::rmt::{BatchedTape, ChipConfig, Pipeline};
+use n2net::deploy::{Deployment, FieldExtractor};
+use n2net::rmt::ChipConfig;
 use n2net::util::bench::{
     default_bencher, format_rate, write_bench_json, BenchRecord, Report,
 };
@@ -46,7 +48,7 @@ fn main() {
     println!("paper headline reproduced: 960 M neurons/s @ 2048 b ✓");
 
     // Measured software-simulator packet rate per configuration, scalar
-    // vs batched SoA.
+    // vs batched SoA, through deployment sessions.
     let b = default_bencher();
     let mut records: Vec<BenchRecord> = Vec::new();
     let mut report =
@@ -55,18 +57,12 @@ fn main() {
     for n in [16usize, 32, 64, 256, 1024, 2048] {
         let p = if n == 16 { 64 } else { max_parallel_neurons(&chip, n) };
         let model = BnnModel::random(n, &[p], 11);
-        let opts = CompilerOptions {
-            input: InputEncoding::PayloadLe { offset: 0 },
-            ..Default::default()
-        };
-        let compiled = Compiler::new(chip.clone(), opts).compile(&model).unwrap();
-        let mut pipe = Pipeline::new(
-            chip.clone(),
-            compiled.program.clone(),
-            compiled.parser.clone(),
-            true,
-        )
-        .unwrap();
+        let deployment = Deployment::builder()
+            .chip(chip.clone())
+            .extractor(FieldExtractor::PayloadAt { offset: 0 })
+            .model("bench", model)
+            .build()
+            .unwrap();
         // Pre-build a packet ring so packet construction isn't measured.
         let mut rng = Rng::seed_from_u64(4);
         let packets: Vec<Vec<u8>> = (0..BATCH)
@@ -79,28 +75,33 @@ fn main() {
                 pkt
             })
             .collect();
+        let refs: Vec<&[u8]> = packets.iter().map(|p| p.as_slice()).collect();
+
+        let mut scalar = deployment
+            .session_with("bench", BackendKind::Scalar)
+            .unwrap();
         let mut i = 0usize;
+        let mut out = Vec::new();
+        // Fixed-size slot: no per-iteration allocation in the measured loop.
+        let mut one: [&[u8]; 1] = [refs[0]];
         let stats = b.run(&format!("scalar N={n} M={p} (pkt/iter)"), 1.0, || {
-            let pkt = &packets[i % BATCH];
+            one[0] = refs[i % BATCH];
             i += 1;
-            let _ = pipe.process_packet(pkt).unwrap();
+            scalar.classify_batch(&one, &mut out).unwrap();
         });
         records.push(BenchRecord::from_stats("throughput", "scalar", 1, &stats));
         report.add(stats);
 
-        let mut tape = BatchedTape::new(
-            chip.clone(),
-            compiled.program.clone(),
-            compiled.parser.clone(),
-            true,
-        )
-        .unwrap();
+        let mut batched = deployment
+            .session_with("bench", BackendKind::Batched)
+            .unwrap();
+        let mut out = Vec::new();
         let stats = b.run(
             &format!("batched N={n} M={p} (B={BATCH})"),
             BATCH as f64,
             || {
-                let out = tape.process_batch(&packets);
-                std::hint::black_box(out.n_ok());
+                batched.classify_batch(&refs, &mut out).unwrap();
+                std::hint::black_box(out.len());
             },
         );
         records.push(BenchRecord::from_stats("throughput", "batched", BATCH, &stats));

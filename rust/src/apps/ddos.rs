@@ -7,28 +7,43 @@
 //! potentially reducing the memory requirements at the cost of extra
 //! computation").
 //!
-//! The filter is written against [`InferenceBackend`], so the same app
-//! code runs on the scalar cycle-level pipeline, the batched SoA tape
-//! (default), or the trusted reference forward; the LUT comparison goes
-//! through the same trait via [`LutBackend`].
+//! The filter is a thin app over [`crate::deploy::Deployment`]: one
+//! builder call deploys the model behind the typed
+//! [`FieldExtractor::SrcIp`] extractor, and a [`Session`] serves it on
+//! any backend (scalar cycle-level pipeline, batched SoA tape
+//! — the default —, or the trusted reference forward). Because the
+//! deployment owns publication, a retrained model can be hot-swapped in
+//! via [`DdosFilter::swap_model`] without restarting the filter. The
+//! LUT comparison goes through the same [`InferenceBackend`] trait via
+//! [`LutBackend`].
 
 use std::sync::Arc;
 
-use crate::backend::{make_backend, BackendKind, InferenceBackend, LutBackend};
+use crate::backend::{BackendKind, InferenceBackend, LutBackend};
 use crate::baseline::LutClassifier;
 use crate::bnn::io::DdosDoc;
 use crate::bnn::BnnModel;
-use crate::compiler::{CompiledModel, Compiler, CompilerOptions, InputEncoding};
+use crate::compiler::CompiledModel;
+use crate::deploy::{Deployment, FieldExtractor, Session};
 use crate::error::Result;
-use crate::net::packet::IPV4_SRC_OFFSET;
 use crate::net::{Trace, TraceGenerator, TraceKind};
 use crate::rmt::ChipConfig;
 use crate::util::rng::Rng;
 
-/// The in-switch DDoS filter: a compiled BNN classifying on src IP.
+/// Registry name of the filter's model inside its deployment.
+const MODEL: &str = "ddos";
+
+/// The in-switch DDoS filter: a deployed BNN classifying on src IP.
 pub struct DdosFilter {
+    /// The deployment owning compilation and publication (exposed for
+    /// hot-swap demos and stats).
+    pub deployment: Deployment,
+    session: Session,
+    /// Snapshot of the compiled program at deploy time, refreshed by
+    /// [`DdosFilter::swap_model`] — internal resource accounting reads
+    /// the live program through the deployment instead, so a direct
+    /// `deployment.swap_model(..)` cannot skew the evaluation numbers.
     pub compiled: Arc<CompiledModel>,
-    backend: Box<dyn InferenceBackend>,
     pub ddos: DdosDoc,
 }
 
@@ -78,7 +93,7 @@ fn eval_rates(preds: &[u32], labels: &[u32], sram_bits: usize) -> ClassifierEval
 }
 
 impl DdosFilter {
-    /// Compile `model` for src-IP classification on `chip`, served by
+    /// Deploy `model` for src-IP classification on `chip`, served by
     /// the default (batched) backend.
     pub fn new(model: &BnnModel, chip: ChipConfig, ddos: DdosDoc) -> Result<Self> {
         Self::with_backend(model, chip, ddos, BackendKind::default())
@@ -91,48 +106,49 @@ impl DdosFilter {
         ddos: DdosDoc,
         kind: BackendKind,
     ) -> Result<Self> {
-        let opts = CompilerOptions {
-            input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
-            ..Default::default()
-        };
-        let compiled = Arc::new(Compiler::new(chip, opts).compile(model)?);
-        // Only the reference backend needs the weights back; don't
-        // deep-copy the model for the pipeline-driven backends.
-        let backend = if kind == BackendKind::Reference {
-            let model = Arc::new(model.clone());
-            make_backend(kind, &compiled, Some(&model))?
-        } else {
-            make_backend(kind, &compiled, None)?
-        };
-        Ok(Self { compiled, backend, ddos })
+        let deployment = Deployment::builder()
+            .chip(chip)
+            .extractor(FieldExtractor::SrcIp)
+            .backend(kind)
+            .model(MODEL, model.clone())
+            .build()?;
+        let session = deployment.session(MODEL)?;
+        let compiled = deployment.compiled(MODEL)?;
+        Ok(Self { deployment, session, compiled, ddos })
     }
 
     /// Name of the backend serving this filter.
     pub fn backend_name(&self) -> &'static str {
-        self.backend.caps().name
+        self.session.backend_name()
+    }
+
+    /// Hot-swap in a retrained model (same architecture); open
+    /// classification calls pick it up at the next batch boundary.
+    /// Returns the new publication version.
+    pub fn swap_model(&mut self, new_model: &BnnModel) -> Result<u64> {
+        let version = self.deployment.swap_model(MODEL, new_model.clone())?;
+        self.compiled = self.deployment.compiled(MODEL)?;
+        Ok(version)
     }
 
     /// Classify one frame: 1 = blacklisted. Output bit 0 of the model.
     /// A malformed frame is an error.
     pub fn classify_frame(&mut self, frame: &[u8]) -> Result<u32> {
-        Ok(crate::backend::run_one(self.backend.as_mut(), frame)? & 1)
+        Ok(self.session.classify_one(frame)? & 1)
     }
 
     /// Classify a whole packet stream in backend-sized batches;
     /// malformed packets classify as 0 (pass) without failing the run.
     pub fn classify_trace(&mut self, packets: &[Vec<u8>]) -> Result<Vec<u32>> {
-        let words = crate::backend::run_chunked(self.backend.as_mut(), packets)?;
+        let words = self.session.classify_trace(packets)?;
         Ok(words.into_iter().map(|w| w & 1).collect())
     }
 
     /// Evaluate on a labeled trace.
     pub fn evaluate(&mut self, trace: &Trace) -> Result<ClassifierEval> {
         let preds = self.classify_trace(&trace.packets)?;
-        Ok(eval_rates(
-            &preds,
-            &trace.labels,
-            self.compiled.resources.sram_bits,
-        ))
+        let compiled = self.deployment.compiled(MODEL)?;
+        Ok(eval_rates(&preds, &trace.labels, compiled.resources.sram_bits))
     }
 
     /// Run the E8 comparison: this BNN vs an exact-match LUT given the
@@ -147,8 +163,10 @@ impl DdosFilter {
         let trace = gen.generate(&TraceKind::Ddos { ddos: self.ddos.clone() }, n_packets);
 
         let bnn = self.evaluate(&trace)?;
-        // LUT gets the same memory the BNN uses (at least one entry).
-        let budget = bnn.sram_bits.max(self.compiled.resources.weight_bits);
+        // LUT gets the same memory the BNN uses (at least one entry) —
+        // read from the live program so a hot-swap cannot skew E8.
+        let weight_bits = self.deployment.compiled(MODEL)?.resources.weight_bits;
+        let budget = bnn.sram_bits.max(weight_bits);
         let mut lut = LutClassifier::with_budget_bits(budget.max(96));
         let mut rng = Rng::seed_from_u64(seed ^ 0x1u64);
         lut.populate_from(&self.ddos, &mut rng);
@@ -165,7 +183,7 @@ impl DdosFilter {
     }
 
     pub fn pipeline_stats(&self) -> crate::rmt::PipelineStats {
-        self.backend.stats()
+        self.session.stats()
     }
 }
 
@@ -245,6 +263,25 @@ mod tests {
         let model = BnnModel::random(32, &[16, 1], 4);
         let mut f = DdosFilter::new(&model, ChipConfig::rmt(), test_ddos()).unwrap();
         assert!(f.classify_frame(&[0u8; 3]).is_err());
+    }
+
+    #[test]
+    fn retrained_model_hot_swaps_into_a_live_filter() {
+        let model_a = BnnModel::random(32, &[16, 1], 6);
+        let model_b = BnnModel::random(32, &[16, 1], 60);
+        let mut f = DdosFilter::new(&model_a, ChipConfig::rmt(), test_ddos()).unwrap();
+        let mut gen = TraceGenerator::new(12);
+        let trace = gen.generate(&TraceKind::UniformIps, 50);
+        f.classify_trace(&trace.packets).unwrap();
+        let v = f.swap_model(&model_b).unwrap();
+        assert_eq!(v, 2);
+        let preds = f.classify_trace(&trace.packets).unwrap();
+        for (i, &key) in trace.keys.iter().enumerate() {
+            let x = crate::bnn::PackedBits::from_u32(key);
+            let expect = crate::bnn::forward(&model_b, &x).get(0) as u32;
+            assert_eq!(preds[i], expect, "post-swap pkt {i}");
+        }
+        assert_eq!(f.deployment.stats("ddos").unwrap().swaps, 1);
     }
 
     #[test]

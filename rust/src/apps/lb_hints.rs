@@ -9,42 +9,39 @@
 //! locality) while the population spreads across queues. The report
 //! compares queue balance and flow affinity against a plain hash.
 //!
-//! Like [`super::ddos`], the router is written against
-//! [`InferenceBackend`] and batches whole traces through `run_batch`.
+//! Like [`super::ddos`], the router is an app over
+//! [`crate::deploy::Deployment`]: the builder owns compilation behind
+//! the typed [`FieldExtractor::SrcIp`] extractor and a [`Session`]
+//! batches whole traces through the configured backend.
 
 use std::sync::Arc;
 
-use crate::backend::{make_backend, BackendKind, InferenceBackend};
+use crate::backend::BackendKind;
 use crate::bnn::BnnModel;
-use crate::compiler::{CompiledModel, Compiler, CompilerOptions, InputEncoding};
+use crate::compiler::CompiledModel;
+use crate::deploy::{Deployment, FieldExtractor, Session};
 use crate::error::{Error, Result};
-use crate::net::packet::IPV4_SRC_OFFSET;
 use crate::net::Trace;
 use crate::rmt::ChipConfig;
 
+/// Registry name of the router's model inside its deployment.
+const MODEL: &str = "lb";
+
 /// The hint router: BNN output bits → server queue index.
 pub struct HintRouter {
+    /// The deployment owning compilation and publication.
+    pub deployment: Deployment,
+    session: Session,
+    /// Snapshot of the compiled program at deploy time (inspection
+    /// only; read `deployment.compiled("lb")` for the live program).
     pub compiled: Arc<CompiledModel>,
-    backend: Box<dyn InferenceBackend>,
     /// Hint width: queue = low `hint_bits` of the model output.
     pub hint_bits: usize,
 }
 
-/// Balance/affinity report for a routing policy.
-#[derive(Clone, Debug)]
-pub struct LbReport {
-    pub n_servers: usize,
-    pub queue_counts: Vec<usize>,
-    /// max/mean queue occupancy (1.0 = perfectly balanced).
-    pub imbalance: f64,
-    /// Fraction of repeated-key packets routed to the same server as
-    /// their first occurrence (locality; 1.0 for deterministic policies).
-    pub affinity: f64,
-}
-
 impl HintRouter {
-    /// Compile `model` for hint routing, served by the default
-    /// (batched) backend.
+    /// Deploy `model` for hint routing, served by the default (batched)
+    /// backend.
     pub fn new(model: &BnnModel, chip: ChipConfig, hint_bits: usize) -> Result<Self> {
         Self::with_backend(model, chip, hint_bits, BackendKind::default())
     }
@@ -63,20 +60,15 @@ impl HintRouter {
                 out_bits.min(32)
             )));
         }
-        let opts = CompilerOptions {
-            input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
-            ..Default::default()
-        };
-        let compiled = Arc::new(Compiler::new(chip, opts).compile(model)?);
-        // Only the reference backend needs the weights back; don't
-        // deep-copy the model for the pipeline-driven backends.
-        let backend = if kind == BackendKind::Reference {
-            let model = Arc::new(model.clone());
-            make_backend(kind, &compiled, Some(&model))?
-        } else {
-            make_backend(kind, &compiled, None)?
-        };
-        Ok(Self { compiled, backend, hint_bits })
+        let deployment = Deployment::builder()
+            .chip(chip)
+            .extractor(FieldExtractor::SrcIp)
+            .backend(kind)
+            .model(MODEL, model.clone())
+            .build()?;
+        let session = deployment.session(MODEL)?;
+        let compiled = deployment.compiled(MODEL)?;
+        Ok(Self { deployment, session, compiled, hint_bits })
     }
 
     /// Low-`hint_bits` mask (hint_bits is validated to be ≤ 32).
@@ -87,7 +79,7 @@ impl HintRouter {
     /// Route one frame to a queue in `[0, 2^hint_bits)`. A malformed
     /// frame is an error (the switch would drop it, not hint it).
     pub fn route(&mut self, frame: &[u8]) -> Result<usize> {
-        let word = crate::backend::run_one(self.backend.as_mut(), frame)?;
+        let word = self.session.classify_one(frame)?;
         Ok((word & self.hint_mask()) as usize)
     }
 
@@ -95,7 +87,7 @@ impl HintRouter {
     /// route to queue 0 without failing the run.
     pub fn route_trace(&mut self, packets: &[Vec<u8>]) -> Result<Vec<usize>> {
         let mask = self.hint_mask();
-        let words = crate::backend::run_chunked(self.backend.as_mut(), packets)?;
+        let words = self.session.classify_trace(packets)?;
         Ok(words.into_iter().map(|w| (w & mask) as usize).collect())
     }
 
@@ -130,6 +122,18 @@ impl HintRouter {
             affinity: if repeats > 0 { affine as f64 / repeats as f64 } else { 1.0 },
         })
     }
+}
+
+/// Balance/affinity report for a routing policy.
+#[derive(Clone, Debug)]
+pub struct LbReport {
+    pub n_servers: usize,
+    pub queue_counts: Vec<usize>,
+    /// max/mean queue occupancy (1.0 = perfectly balanced).
+    pub imbalance: f64,
+    /// Fraction of repeated-key packets routed to the same server as
+    /// their first occurrence (locality; 1.0 for deterministic policies).
+    pub affinity: f64,
 }
 
 /// Plain hash routing baseline over the same trace.

@@ -93,7 +93,7 @@ impl BackendKind {
             "reference" | "ref" => Ok(BackendKind::Reference),
             "lut" => Ok(BackendKind::Lut),
             other => Err(Error::Config(format!(
-                "unknown backend {other:?} (expected scalar|batched|reference)"
+                "unknown backend {other:?} (expected scalar|batched|reference|lut)"
             ))),
         }
     }
@@ -102,6 +102,11 @@ impl BackendKind {
 /// Construct a backend for a compiled model. `model` is required only
 /// for [`BackendKind::Reference`] (the pipeline program alone cannot
 /// reproduce the weights once they are baked into tape immediates).
+///
+/// This is the **low-level** constructor (DESIGN.md §11): apps, the
+/// CLI, and the benches go through [`crate::deploy::Deployment`], which
+/// owns compilation, the model registry, and runtime hot-swap, and
+/// calls down into this function per published artifact.
 pub fn make_backend(
     kind: BackendKind,
     compiled: &Arc<CompiledModel>,

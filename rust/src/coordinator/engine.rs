@@ -11,16 +11,25 @@
 //! executor. Streaming ingest (where packets trickle in and the
 //! deadline half of [`BatchPolicy`] matters) goes through
 //! [`super::batcher::Batcher`] in front of the same backends.
+//!
+//! Engines come in two flavors (see DESIGN.md §11): the **low-level**
+//! [`Engine::new`] over a fixed [`CompiledModel`] (tests,
+//! simulator-internals work), and [`Engine::from_slot`] over a
+//! [`ModelSlot`] publication slot — what [`crate::deploy::Deployment`]
+//! constructs — where every worker re-checks the slot's version with one
+//! atomic load per batch and rebuilds its backend when a hot-swap was
+//! published, without draining in-flight batches.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::backend::{make_backend, BackendKind, InferenceBackend};
+use crate::baseline::LutClassifier;
 use crate::bnn::BnnModel;
 use crate::compiler::CompiledModel;
+use crate::deploy::{backend_for_artifact, ModelSlot};
 use crate::error::Result;
 use crate::net::packet::flow_hash;
-use crate::rmt::ChipConfig;
 use crate::telemetry::EngineMetrics;
 
 use super::batcher::BatchPolicy;
@@ -74,41 +83,107 @@ pub struct EngineReport {
     pub parse_errors: u64,
     /// Backend that served the trace.
     pub backend: &'static str,
+    /// Highest publication version any worker served during the trace
+    /// (monotone across hot-swaps; 0 for the low-level fixed-program
+    /// engine).
+    pub model_version: u64,
 }
 
-/// The serving engine: compiled model + worker pool of backends.
+/// Where an engine's workers get their program from.
+enum EngineSource {
+    /// Fixed compiled model (the low-level [`Engine::new`] path).
+    Static {
+        compiled: Arc<CompiledModel>,
+        /// Source model — required by [`BackendKind::Reference`] workers.
+        model: Option<Arc<BnnModel>>,
+    },
+    /// A deployment publication slot: hot-swaps picked up per batch.
+    Slot {
+        slot: Arc<ModelSlot>,
+        /// LUT table for [`BackendKind::Lut`] workers.
+        lut: Option<Arc<LutClassifier>>,
+    },
+}
+
+impl EngineSource {
+    /// Current publication version (0 for the fixed-program path, whose
+    /// program can never change).
+    fn version(&self) -> u64 {
+        match self {
+            EngineSource::Static { .. } => 0,
+            EngineSource::Slot { slot, .. } => slot.version(),
+        }
+    }
+
+    /// Snapshot of the currently published program.
+    fn compiled(&self) -> Arc<CompiledModel> {
+        match self {
+            EngineSource::Static { compiled, .. } => Arc::clone(compiled),
+            EngineSource::Slot { slot, .. } => Arc::clone(&slot.load().0.compiled),
+        }
+    }
+
+    /// Build a worker backend from the current program; returns the
+    /// version it was built from.
+    fn backend(&self, kind: BackendKind) -> Result<(Box<dyn InferenceBackend>, u64)> {
+        match self {
+            EngineSource::Static { compiled, model } => {
+                Ok((make_backend(kind, compiled, model.as_ref())?, 0))
+            }
+            EngineSource::Slot { slot, lut } => {
+                let (artifact, version) = slot.load();
+                Ok((backend_for_artifact(kind, &artifact, lut.as_ref())?, version))
+            }
+        }
+    }
+}
+
+/// The serving engine: program source + worker pool of backends.
 pub struct Engine {
-    chip: ChipConfig,
-    compiled: Arc<CompiledModel>,
-    /// Source model — required by [`BackendKind::Reference`] workers.
-    model: Option<Arc<BnnModel>>,
+    source: EngineSource,
     config: EngineConfig,
     pub metrics: Arc<EngineMetrics>,
 }
 
 impl Engine {
+    /// Low-level constructor over a fixed compiled model. Prefer
+    /// [`crate::deploy::Deployment`] (which layers the registry and
+    /// hot-swap on top) unless you are testing the engine itself.
     pub fn new(compiled: CompiledModel, config: EngineConfig) -> Self {
         Self {
-            chip: compiled.chip.clone(),
-            compiled: Arc::new(compiled),
-            model: None,
+            source: EngineSource::Static { compiled: Arc::new(compiled), model: None },
             config,
             metrics: Arc::new(EngineMetrics::default()),
         }
     }
 
-    /// Attach the source model (enables the `reference` backend).
+    /// Attach the source model (enables the `reference` backend on the
+    /// low-level path; slot-based engines carry it in the artifact).
     pub fn with_model(mut self, model: BnnModel) -> Self {
-        self.model = Some(Arc::new(model));
+        if let EngineSource::Static { model: m, .. } = &mut self.source {
+            *m = Some(Arc::new(model));
+        }
         self
     }
 
-    pub fn compiled(&self) -> &CompiledModel {
-        &self.compiled
+    /// Engine over a deployment publication slot: workers re-check the
+    /// slot version per batch and pick up hot-swaps at batch
+    /// boundaries. Constructed by [`crate::deploy::Deployment::engine`].
+    pub fn from_slot(
+        slot: Arc<ModelSlot>,
+        lut: Option<Arc<LutClassifier>>,
+        config: EngineConfig,
+    ) -> Self {
+        Self {
+            source: EngineSource::Slot { slot, lut },
+            config,
+            metrics: Arc::new(EngineMetrics::default()),
+        }
     }
 
-    fn worker_backend(&self) -> Result<Box<dyn InferenceBackend>> {
-        make_backend(self.config.backend, &self.compiled, self.model.as_ref())
+    /// Snapshot of the currently published compiled model.
+    pub fn compiled(&self) -> Arc<CompiledModel> {
+        self.source.compiled()
     }
 
     /// Which worker handles packet `i`.
@@ -151,7 +226,9 @@ impl Engine {
 
     /// Process a full trace; outputs preserve input order. The engine
     /// shards packets to workers; each worker forms batches and calls
-    /// its backend's `run_batch`.
+    /// its backend's `run_batch`, re-checking the program version at
+    /// every batch boundary so a concurrent hot-swap is honored without
+    /// draining in-flight batches.
     pub fn process_trace(&self, packets: &[Vec<u8>]) -> Result<EngineReport> {
         let n_workers = self.config.n_workers.max(1);
         // Shard: per worker, the (index, packet) list it owns.
@@ -161,27 +238,39 @@ impl Engine {
         }
         // Build every backend up front so configuration errors surface
         // before any thread spawns.
-        let backends: Vec<Box<dyn InferenceBackend>> = (0..n_workers)
-            .map(|_| self.worker_backend())
+        let backends: Vec<(Box<dyn InferenceBackend>, u64)> = (0..n_workers)
+            .map(|_| self.source.backend(self.config.backend))
             .collect::<Result<_>>()?;
         let backend_name = self.config.backend.name();
+        let kind = self.config.backend;
+        let source = &self.source;
 
         let t0 = Instant::now();
         let mut outputs = vec![0u32; packets.len()];
         let mut parse_errors = 0u64;
+        let mut model_version = 0u64;
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
-            for (shard, mut backend) in shards.iter().zip(backends) {
+            for (shard, (mut backend, mut version)) in shards.iter().zip(backends) {
                 let metrics = Arc::clone(&self.metrics);
                 let policy = self.config.batch;
-                let handle = scope.spawn(move || -> Result<(Vec<(usize, u32)>, u64)> {
+                let handle = scope.spawn(move || -> Result<(Vec<(usize, u32)>, u64, u64)> {
                     let mut out = Vec::with_capacity(shard.len());
                     let mut out_buf = Vec::new();
+                    let mut retired_errs = 0u64;
                     // Offline trace: the whole shard is already here, so
                     // batches are size-bounded chunks pulled zero-copy
                     // (the deadline half of [`BatchPolicy`] only matters
                     // for streaming ingest through [`super::Batcher`]).
                     for idxs in shard.chunks(policy.max_size.max(1)) {
+                        // Hot-swap pickup: one atomic version peek per
+                        // batch; rebuild only when a swap was published.
+                        if source.version() != version {
+                            retired_errs += backend.stats().parse_errors;
+                            let (fresh, v) = source.backend(kind)?;
+                            backend = fresh;
+                            version = v;
+                        }
                         metrics.packets_in.add(idxs.len() as u64);
                         Self::drain_batch(
                             backend.as_mut(),
@@ -192,13 +281,14 @@ impl Engine {
                             &mut out_buf,
                         )?;
                     }
-                    Ok((out, backend.stats().parse_errors))
+                    Ok((out, retired_errs + backend.stats().parse_errors, version))
                 });
                 handles.push(handle);
             }
             for h in handles {
-                let (outs, errs) = h.join().expect("worker panicked")?;
+                let (outs, errs, version) = h.join().expect("worker panicked")?;
                 parse_errors += errs;
+                model_version = model_version.max(version);
                 for (i, bit) in outs {
                     outputs[i] = bit;
                 }
@@ -206,7 +296,8 @@ impl Engine {
             Ok(())
         })?;
         let elapsed = t0.elapsed().as_secs_f64();
-        let modeled = self.chip.timing(&self.compiled.program);
+        let compiled = self.source.compiled();
+        let modeled = compiled.chip.timing(&compiled.program);
         Ok(EngineReport {
             outputs,
             sim_pps: packets.len() as f64 / elapsed.max(1e-12),
@@ -214,6 +305,7 @@ impl Engine {
             n_packets: packets.len(),
             parse_errors,
             backend: backend_name,
+            model_version,
         })
     }
 }
@@ -225,6 +317,7 @@ mod tests {
     use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
     use crate::net::packet::PacketBuilder;
     use crate::net::{TraceGenerator, TraceKind};
+    use crate::rmt::ChipConfig;
 
     fn engine_for(model: &BnnModel, router: RouterPolicy, backend: BackendKind) -> Engine {
         let opts = CompilerOptions {
@@ -261,6 +354,7 @@ mod tests {
                 let report = engine.process_trace(&trace.packets).unwrap();
                 assert_eq!(report.outputs.len(), 200);
                 assert_eq!(report.backend, backend.name());
+                assert_eq!(report.model_version, 0, "fixed-program engine");
                 for (i, &key) in trace.keys.iter().enumerate() {
                     let expect =
                         bnn::forward(&model, &PackedBits::from_u32(key)).get(0) as u32;

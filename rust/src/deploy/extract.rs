@@ -1,0 +1,140 @@
+//! Typed input-field extraction (DESIGN.md §11).
+//!
+//! The paper leaves "which header bits feed the BNN" open ("e.g., the
+//! destination IP address of the packet", §2). Before this module every
+//! consumer spelled that choice as a raw byte offset
+//! (`InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET }` copied
+//! into apps, benches, and the CLI). [`FieldExtractor`] names the
+//! choices instead and owns the offset arithmetic; the deployment
+//! builder turns one into the compiler's [`InputEncoding`].
+
+use crate::compiler::InputEncoding;
+use crate::error::{Error, Result};
+use crate::net::packet::{IPV4_DST_OFFSET, IPV4_SRC_OFFSET};
+use crate::net::N2NET_PAYLOAD_OFFSET;
+
+/// Where a deployment reads the model's input activation vector from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FieldExtractor {
+    /// IPv4 source address (the DDoS use case). Requires `in_bits == 32`.
+    #[default]
+    SrcIp,
+    /// IPv4 destination address (the paper's §2 example). Requires
+    /// `in_bits == 32`.
+    DstIp,
+    /// Packed little-endian activation words in the N2Net UDP payload
+    /// (offset 42 = after Eth+IPv4+UDP). Any activation width.
+    Payload,
+    /// Packed little-endian activation words at a custom byte offset
+    /// (raw buffers, custom encapsulations).
+    PayloadAt { offset: usize },
+    /// A single 32-bit big-endian header field at a custom byte offset
+    /// (custom header slices). Requires `in_bits == 32`.
+    Field32 { offset: usize },
+}
+
+impl FieldExtractor {
+    /// The compiler encoding this extractor stands for.
+    pub fn encoding(self) -> InputEncoding {
+        match self {
+            FieldExtractor::SrcIp => {
+                InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET }
+            }
+            FieldExtractor::DstIp => {
+                InputEncoding::BigEndianField { offset: IPV4_DST_OFFSET }
+            }
+            FieldExtractor::Payload => {
+                InputEncoding::PayloadLe { offset: N2NET_PAYLOAD_OFFSET }
+            }
+            FieldExtractor::PayloadAt { offset } => InputEncoding::PayloadLe { offset },
+            FieldExtractor::Field32 { offset } => {
+                InputEncoding::BigEndianField { offset }
+            }
+        }
+    }
+
+    /// Human-readable spelling (also the CLI grammar of [`parse`]).
+    ///
+    /// [`parse`]: FieldExtractor::parse
+    pub fn describe(self) -> String {
+        match self {
+            FieldExtractor::SrcIp => "src-ip".into(),
+            FieldExtractor::DstIp => "dst-ip".into(),
+            FieldExtractor::Payload => "payload".into(),
+            FieldExtractor::PayloadAt { offset } => format!("payload@{offset}"),
+            FieldExtractor::Field32 { offset } => format!("field@{offset}"),
+        }
+    }
+
+    /// Parse a CLI spelling: `src-ip`, `dst-ip`, `payload`,
+    /// `payload@OFFSET`, or `field@OFFSET`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let offset_of = |spec: &str| -> Result<usize> {
+            spec.parse().map_err(|_| {
+                Error::Config(format!("bad extractor offset {spec:?} in {s:?}"))
+            })
+        };
+        match s {
+            "src-ip" => Ok(FieldExtractor::SrcIp),
+            "dst-ip" => Ok(FieldExtractor::DstIp),
+            "payload" => Ok(FieldExtractor::Payload),
+            other => {
+                if let Some(spec) = other.strip_prefix("payload@") {
+                    Ok(FieldExtractor::PayloadAt { offset: offset_of(spec)? })
+                } else if let Some(spec) = other.strip_prefix("field@") {
+                    Ok(FieldExtractor::Field32 { offset: offset_of(spec)? })
+                } else {
+                    Err(Error::Config(format!(
+                        "unknown extractor {other:?} \
+                         (expected src-ip|dst-ip|payload|payload@N|field@N)"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extractors_name_the_documented_offsets() {
+        assert_eq!(
+            FieldExtractor::SrcIp.encoding(),
+            InputEncoding::BigEndianField { offset: 26 }
+        );
+        assert_eq!(
+            FieldExtractor::DstIp.encoding(),
+            InputEncoding::BigEndianField { offset: 30 }
+        );
+        assert_eq!(
+            FieldExtractor::Payload.encoding(),
+            InputEncoding::PayloadLe { offset: 42 }
+        );
+        assert_eq!(
+            FieldExtractor::PayloadAt { offset: 4 }.encoding(),
+            InputEncoding::PayloadLe { offset: 4 }
+        );
+        assert_eq!(
+            FieldExtractor::Field32 { offset: 30 }.encoding(),
+            InputEncoding::BigEndianField { offset: 30 }
+        );
+    }
+
+    #[test]
+    fn parse_roundtrips_every_spelling() {
+        for x in [
+            FieldExtractor::SrcIp,
+            FieldExtractor::DstIp,
+            FieldExtractor::Payload,
+            FieldExtractor::PayloadAt { offset: 0 },
+            FieldExtractor::Field32 { offset: 26 },
+        ] {
+            assert_eq!(FieldExtractor::parse(&x.describe()).unwrap(), x);
+        }
+        assert!(FieldExtractor::parse("tcp-flags").is_err());
+        assert!(FieldExtractor::parse("payload@x").is_err());
+        assert_eq!(FieldExtractor::default(), FieldExtractor::SrcIp);
+    }
+}

@@ -1,0 +1,803 @@
+//! `n2net::deploy` — the canonical public API: a switch chip as a
+//! *deployment target* for BNN models (DESIGN.md §11).
+//!
+//! The paper closes by calling N2Net "an interesting building block for
+//! future end-to-end networked systems"; this module is that building
+//! block's front door. One builder call covers every serving scenario:
+//!
+//! * **single model** — `Deployment::builder().model("ddos", m).build()?`
+//! * **multi-model registry** — several `.model(..)` calls; each model
+//!   gets its own compiled program and named publication slot;
+//! * **keyed-table multi-model** — `.keyed(id_offset)` compiles ALL
+//!   registered models into ONE pipeline program via
+//!   [`Compiler::compile_multi`], a packet header field selecting the
+//!   weights per packet (the Brain-on-Switch / model-switching shape);
+//! * **baseline comparison** — [`Deployment::session_with`] opens
+//!   sessions with different [`BackendKind`]s over the same deployment;
+//! * **runtime hot-swap** — [`Deployment::swap_model`] recompiles off
+//!   the hot path and atomically publishes the new artifact to every
+//!   session and engine worker (RCU-style, see [`swap`]), with a
+//!   monotone version counter surfaced in
+//!   [`EngineReport::model_version`](crate::coordinator::EngineReport).
+//!
+//! Input extraction is typed ([`FieldExtractor`]) instead of raw byte
+//! offsets, and classification goes through [`Session`] /
+//! [`KeyedSession`] handles (single-threaded, one per worker) or the
+//! multi-worker [`Engine`](crate::coordinator::Engine) via
+//! [`Deployment::engine`].
+//!
+//! Below this sits the low-level layer — [`crate::backend::make_backend`],
+//! [`Engine::new`](crate::coordinator::Engine::new), raw
+//! [`Compiler`] driving — which stays public for tests and
+//! simulator-internals work but is no longer what apps, benches, or the
+//! CLI wire by hand.
+
+pub mod extract;
+pub mod session;
+pub mod swap;
+
+pub use extract::FieldExtractor;
+pub use session::{KeyedSession, Session};
+pub use swap::{ModelArtifact, ModelCounters, ModelSlot, SwapCell};
+
+pub(crate) use session::backend_for_artifact;
+
+use std::sync::{Arc, Mutex};
+
+use crate::backend::BackendKind;
+use crate::baseline::LutClassifier;
+use crate::bnn::BnnModel;
+use crate::compiler::{
+    CompiledModel, Compiler, CompilerOptions, MultiModelOptions,
+};
+use crate::coordinator::{BatchPolicy, Engine, EngineConfig, EngineReport, RouterPolicy};
+use crate::error::{Error, Result};
+use crate::rmt::ChipConfig;
+
+/// One registered model: its identity, current source weights, and (in
+/// isolated mode) its own publication slot.
+struct DeployEntry {
+    name: String,
+    /// Keyed-table match key (also assigned in isolated mode for
+    /// stable identity; index-based unless given explicitly).
+    id: u32,
+    /// Current source model — what [`Deployment::swap_model`] validates
+    /// against and what keyed recompiles re-read.
+    model: Mutex<Arc<BnnModel>>,
+    /// Per-model publication slot (isolated mode; `None` when keyed).
+    slot: Option<Arc<ModelSlot>>,
+    counters: Arc<ModelCounters>,
+}
+
+/// The shared keyed-table program of a keyed deployment.
+struct KeyedProgram {
+    slot: Arc<ModelSlot>,
+    id_offset: usize,
+}
+
+/// Per-model serving stats snapshot (see [`Deployment::stats`]).
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    pub name: String,
+    /// Packets routed to this model through sessions.
+    pub packets: u64,
+    /// Malformed packets attributed to this model.
+    pub parse_errors: u64,
+    /// Hot-swaps published for this model.
+    pub swaps: u64,
+    /// Current published version of the model's program.
+    pub version: u64,
+}
+
+/// A built deployment: compiled model registry + serving configuration.
+/// Shared freely across threads (`Arc<Deployment>`); open one
+/// [`Session`] per worker thread, or drive the multi-worker engine via
+/// [`Deployment::engine`] / [`Deployment::serve_trace`].
+pub struct Deployment {
+    chip: ChipConfig,
+    /// Compiler options with the extractor's encoding substituted in —
+    /// reused verbatim by hot-swap recompiles.
+    opts: CompilerOptions,
+    backend: BackendKind,
+    extractor: FieldExtractor,
+    entries: Vec<DeployEntry>,
+    keyed: Option<KeyedProgram>,
+    lut: Option<Arc<LutClassifier>>,
+    n_workers: usize,
+    router: RouterPolicy,
+    batch: BatchPolicy,
+    /// Serializes swaps so concurrent `swap_model` calls cannot publish
+    /// an artifact that disagrees with the registry.
+    swap_gate: Mutex<()>,
+}
+
+impl Deployment {
+    /// Start building a deployment (see [`DeploymentBuilder`]).
+    pub fn builder() -> DeploymentBuilder {
+        DeploymentBuilder::default()
+    }
+
+    fn entry(&self, name: &str) -> Result<&DeployEntry> {
+        self.entries.iter().find(|e| e.name == name).ok_or_else(|| {
+            let known: Vec<&str> =
+                self.entries.iter().map(|e| e.name.as_str()).collect();
+            Error::Config(format!(
+                "no model {name:?} in this deployment (registered: {known:?})"
+            ))
+        })
+    }
+
+    /// Names of the registered models, in registration order.
+    pub fn models(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Whether this deployment serves all models from one keyed-table
+    /// program.
+    pub fn is_keyed(&self) -> bool {
+        self.keyed.is_some()
+    }
+
+    /// The backend kind sessions and engines default to.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend
+    }
+
+    /// The typed input extractor this deployment compiles for.
+    pub fn extractor(&self) -> FieldExtractor {
+        self.extractor
+    }
+
+    fn slot_for(&self, entry: &DeployEntry) -> Arc<ModelSlot> {
+        match (&entry.slot, &self.keyed) {
+            (Some(slot), _) => Arc::clone(slot),
+            (None, Some(k)) => Arc::clone(&k.slot),
+            (None, None) => unreachable!("entry without slot in isolated mode"),
+        }
+    }
+
+    /// The currently published compiled program for `name` (the shared
+    /// program in keyed mode) — resource reports, schedule listings.
+    pub fn compiled(&self, name: &str) -> Result<Arc<CompiledModel>> {
+        let entry = self.entry(name)?;
+        Ok(Arc::clone(&self.slot_for(entry).load().0.compiled))
+    }
+
+    /// Current published version of `name`'s program (monotone; starts
+    /// at 1, bumped by every [`Deployment::swap_model`]).
+    pub fn version(&self, name: &str) -> Result<u64> {
+        let entry = self.entry(name)?;
+        Ok(self.slot_for(entry).version())
+    }
+
+    /// Per-model serving stats snapshot.
+    pub fn stats(&self, name: &str) -> Result<ModelStats> {
+        let entry = self.entry(name)?;
+        Ok(ModelStats {
+            name: entry.name.clone(),
+            packets: entry.counters.packets.get(),
+            parse_errors: entry.counters.parse_errors.get(),
+            swaps: entry.counters.swaps.get(),
+            version: self.slot_for(entry).version(),
+        })
+    }
+
+    /// Open a classify session for `name` on the deployment's default
+    /// backend.
+    pub fn session(&self, name: &str) -> Result<Session> {
+        self.session_with(name, self.backend)
+    }
+
+    /// Open a classify session for `name` on an explicit backend — the
+    /// baseline-comparison scenario (e.g. a `reference` session A/B'd
+    /// against the `batched` default over the same deployment).
+    pub fn session_with(&self, name: &str, kind: BackendKind) -> Result<Session> {
+        if self.is_keyed() {
+            return Err(Error::Config(
+                "keyed deployment serves all models from one program: \
+                 use keyed_session()"
+                    .into(),
+            ));
+        }
+        let entry = self.entry(name)?;
+        Session::open(
+            self.slot_for(entry),
+            kind,
+            self.lut.clone(),
+            Some(Arc::clone(&entry.counters)),
+        )
+    }
+
+    /// Open the mixed-model session of a keyed deployment.
+    pub fn keyed_session(&self) -> Result<KeyedSession> {
+        self.keyed_session_with(self.backend)
+    }
+
+    /// Only backends that execute the keyed pipeline program can honor
+    /// per-packet model ids; the reference forward replays ONE model
+    /// and the LUT baseline consults one shared table, so a keyed
+    /// deployment must reject both rather than silently serve the
+    /// default classifier to every tenant.
+    fn check_keyed_backend(kind: BackendKind) -> Result<()> {
+        match kind {
+            BackendKind::Reference => Err(Error::Config(
+                "the reference backend replays a single model's forward pass \
+                 and cannot honor per-packet model ids — use an isolated \
+                 deployment (one session per model) for reference A/B checks"
+                    .into(),
+            )),
+            BackendKind::Lut => Err(Error::Config(
+                "the LUT baseline classifies against one shared table and \
+                 cannot honor per-packet model ids — compare it on an \
+                 isolated deployment instead"
+                    .into(),
+            )),
+            _ => Ok(()),
+        }
+    }
+
+    /// Same, with an explicit backend choice.
+    pub fn keyed_session_with(&self, kind: BackendKind) -> Result<KeyedSession> {
+        Self::check_keyed_backend(kind)?;
+        let keyed = self.keyed.as_ref().ok_or_else(|| {
+            Error::Config(
+                "not a keyed deployment: enable with builder.keyed(id_offset)"
+                    .into(),
+            )
+        })?;
+        let by_id = self
+            .entries
+            .iter()
+            .map(|e| (e.id, Arc::clone(&e.counters)))
+            .collect();
+        KeyedSession::open(
+            Arc::clone(&keyed.slot),
+            kind,
+            self.lut.clone(),
+            keyed.id_offset,
+            by_id,
+        )
+    }
+
+    fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            n_workers: self.n_workers,
+            router: self.router,
+            backend: self.backend,
+            batch: self.batch,
+        }
+    }
+
+    /// A multi-worker engine over `name`'s publication slot. Workers
+    /// pick up hot-swaps at batch boundaries; the engine's report
+    /// carries the serving version.
+    pub fn engine(&self, name: &str) -> Result<Engine> {
+        if self.is_keyed() {
+            return Err(Error::Config(
+                "keyed deployment serves all models from one program: \
+                 use engine_keyed()"
+                    .into(),
+            ));
+        }
+        let entry = self.entry(name)?;
+        Ok(Engine::from_slot(
+            self.slot_for(entry),
+            self.lut.clone(),
+            self.engine_config(),
+        ))
+    }
+
+    /// A multi-worker engine over the shared keyed-table program.
+    pub fn engine_keyed(&self) -> Result<Engine> {
+        Self::check_keyed_backend(self.backend)?;
+        let keyed = self.keyed.as_ref().ok_or_else(|| {
+            Error::Config(
+                "not a keyed deployment: enable with builder.keyed(id_offset)"
+                    .into(),
+            )
+        })?;
+        Ok(Engine::from_slot(
+            Arc::clone(&keyed.slot),
+            self.lut.clone(),
+            self.engine_config(),
+        ))
+    }
+
+    /// Serve a whole trace through a fresh multi-worker engine.
+    pub fn serve_trace(
+        &self,
+        name: &str,
+        packets: &[Vec<u8>],
+    ) -> Result<EngineReport> {
+        self.engine(name)?.process_trace(packets)
+    }
+
+    /// Serve a mixed-model trace through the keyed program.
+    pub fn serve_trace_keyed(&self, packets: &[Vec<u8>]) -> Result<EngineReport> {
+        self.engine_keyed()?.process_trace(packets)
+    }
+
+    /// Runtime hot-swap: replace `name`'s weights with `new_model`
+    /// (same architecture — the pipeline program shape is fixed at
+    /// deploy time), recompiling **off the hot path** and atomically
+    /// publishing the result to every open session and engine worker.
+    /// In-flight batches finish on the old artifact; the next batch
+    /// boundary serves the new one. Returns the new version. On error
+    /// (e.g. a compile failure) the old model keeps serving untouched.
+    pub fn swap_model(&self, name: &str, new_model: BnnModel) -> Result<u64> {
+        let _gate = self.swap_gate.lock().expect("swap gate poisoned");
+        let entry = self.entry(name)?;
+        {
+            let current = entry.model.lock().expect("model lock poisoned");
+            if new_model.spec != current.spec {
+                return Err(Error::InvalidModel(format!(
+                    "hot-swap of {name:?} requires the deployed architecture \
+                     ({}b -> {:?}); got {}b -> {:?} — redeploy for a new \
+                     architecture",
+                    current.spec.in_bits,
+                    current.spec.layer_sizes,
+                    new_model.spec.in_bits,
+                    new_model.spec.layer_sizes,
+                )));
+            }
+        }
+        let new_model = Arc::new(new_model);
+        let version = match (&entry.slot, &self.keyed) {
+            (Some(slot), _) => {
+                // Isolated mode: recompile this model's own program.
+                let compiled = Arc::new(
+                    Compiler::new(self.chip.clone(), self.opts.clone())
+                        .compile(&new_model)?,
+                );
+                *entry.model.lock().expect("model lock poisoned") =
+                    Arc::clone(&new_model);
+                slot.publish(ModelArtifact { model: new_model, compiled })
+            }
+            (None, Some(keyed)) => {
+                // Keyed mode: recompile the whole shared program with the
+                // swapped entry substituted; the registry is only updated
+                // once the compile succeeds.
+                let pairs: Vec<(u32, BnnModel)> = self
+                    .entries
+                    .iter()
+                    .map(|e| {
+                        let m = if e.name == name {
+                            new_model.as_ref().clone()
+                        } else {
+                            e.model.lock().expect("model lock poisoned").as_ref().clone()
+                        };
+                        (e.id, m)
+                    })
+                    .collect();
+                let compiled = Arc::new(
+                    Compiler::new(self.chip.clone(), self.opts.clone())
+                        .compile_multi(
+                            &pairs,
+                            MultiModelOptions { id_offset: keyed.id_offset },
+                        )?,
+                );
+                *entry.model.lock().expect("model lock poisoned") =
+                    Arc::clone(&new_model);
+                let default_model = Arc::new(pairs[0].1.clone());
+                keyed.slot.publish(ModelArtifact { model: default_model, compiled })
+            }
+            (None, None) => unreachable!("entry without slot in isolated mode"),
+        };
+        entry.counters.swaps.inc();
+        Ok(version)
+    }
+}
+
+/// Builder for a [`Deployment`]. Defaults: stock RMT chip, `src-ip`
+/// extraction, `batched` backend, round-robin engine routing.
+pub struct DeploymentBuilder {
+    chip: ChipConfig,
+    extractor: FieldExtractor,
+    backend: BackendKind,
+    opts: CompilerOptions,
+    models: Vec<(String, Option<u32>, BnnModel)>,
+    keyed: Option<usize>,
+    lut: Option<LutClassifier>,
+    n_workers: usize,
+    router: RouterPolicy,
+    batch: BatchPolicy,
+}
+
+impl Default for DeploymentBuilder {
+    fn default() -> Self {
+        let engine = EngineConfig::default();
+        Self {
+            chip: ChipConfig::rmt(),
+            extractor: FieldExtractor::default(),
+            backend: BackendKind::default(),
+            opts: CompilerOptions::default(),
+            models: Vec::new(),
+            keyed: None,
+            lut: None,
+            n_workers: engine.n_workers,
+            router: engine.router,
+            batch: engine.batch,
+        }
+    }
+}
+
+impl DeploymentBuilder {
+    /// Target chip (default: stock RMT; `ChipConfig::rmt_with_popcnt()`
+    /// for the §3 native-POPCNT variant).
+    pub fn chip(mut self, chip: ChipConfig) -> Self {
+        self.chip = chip;
+        self
+    }
+
+    /// Typed input extraction (default: [`FieldExtractor::SrcIp`]).
+    pub fn extractor(mut self, extractor: FieldExtractor) -> Self {
+        self.extractor = extractor;
+        self
+    }
+
+    /// Default backend for sessions and engines (default: batched).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = kind;
+        self
+    }
+
+    /// Register a model under `name` (keyed-table id auto-assigned from
+    /// registration order).
+    pub fn model(mut self, name: impl Into<String>, model: BnnModel) -> Self {
+        self.models.push((name.into(), None, model));
+        self
+    }
+
+    /// Register a model with an explicit keyed-table match id.
+    pub fn model_with_id(
+        mut self,
+        name: impl Into<String>,
+        id: u32,
+        model: BnnModel,
+    ) -> Self {
+        self.models.push((name.into(), Some(id), model));
+        self
+    }
+
+    /// Serve every registered model from ONE keyed-table pipeline
+    /// program ([`Compiler::compile_multi`]); the 32-bit little-endian
+    /// model id at `id_offset` in the packet selects the weights, the
+    /// first registered model being the table-miss default.
+    pub fn keyed(mut self, id_offset: usize) -> Self {
+        self.keyed = Some(id_offset);
+        self
+    }
+
+    /// Attach the exact-match LUT baseline (enables
+    /// [`BackendKind::Lut`] sessions/engines for apples-to-apples
+    /// comparisons).
+    pub fn lut(mut self, lut: LutClassifier) -> Self {
+        self.lut = Some(lut);
+        self
+    }
+
+    /// Engine worker count (default: host parallelism, capped at 8).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.n_workers = n.max(1);
+        self
+    }
+
+    /// Engine packet routing policy.
+    pub fn router(mut self, router: RouterPolicy) -> Self {
+        self.router = router;
+        self
+    }
+
+    /// Engine batch formation policy.
+    pub fn batch(mut self, batch: BatchPolicy) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Escape hatch for compiler knobs (recirculation, immediates,
+    /// parallelism caps). The `input` field is overridden by the
+    /// builder's [`extractor`](DeploymentBuilder::extractor).
+    pub fn compiler_options(mut self, opts: CompilerOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Compile every registered model and assemble the deployment.
+    pub fn build(self) -> Result<Deployment> {
+        if self.models.is_empty() {
+            return Err(Error::Config(
+                "deployment needs at least one model: builder.model(name, model)"
+                    .into(),
+            ));
+        }
+        if self.backend == BackendKind::Lut && self.lut.is_none() {
+            return Err(Error::Config(session::LUT_TABLE_HINT.into()));
+        }
+        if self.keyed.is_some() {
+            Deployment::check_keyed_backend(self.backend)?;
+        }
+        let opts = CompilerOptions { input: self.extractor.encoding(), ..self.opts };
+
+        // Resolve identities: unique names, unique ids (explicit ids
+        // win; auto-assignment skips every explicit id — wherever it
+        // was registered — so mixing model() and model_with_id()
+        // cannot self-collide).
+        let explicit: Vec<u32> = self.models.iter().filter_map(|(_, id, _)| *id).collect();
+        let mut resolved: Vec<(String, u32, BnnModel)> = Vec::new();
+        let mut next_auto = 0u32;
+        for (name, id, model) in self.models {
+            let id = match id {
+                Some(id) => id,
+                None => {
+                    while explicit.contains(&next_auto)
+                        || resolved.iter().any(|(_, k, _)| *k == next_auto)
+                    {
+                        next_auto += 1;
+                    }
+                    let auto = next_auto;
+                    next_auto += 1;
+                    auto
+                }
+            };
+            if resolved.iter().any(|(n, _, _)| *n == name) {
+                return Err(Error::Config(format!(
+                    "duplicate model name {name:?} in deployment"
+                )));
+            }
+            if resolved.iter().any(|(_, k, _)| *k == id) {
+                return Err(Error::Config(format!(
+                    "duplicate model id {id} in deployment"
+                )));
+            }
+            resolved.push((name, id, model));
+        }
+
+        let mut entries = Vec::with_capacity(resolved.len());
+        let keyed = match self.keyed {
+            Some(id_offset) => {
+                // One shared program over every model, weights selected
+                // per packet by the keyed match stage.
+                let pairs: Vec<(u32, BnnModel)> = resolved
+                    .iter()
+                    .map(|(_, id, m)| (*id, m.clone()))
+                    .collect();
+                let compiled = Arc::new(
+                    Compiler::new(self.chip.clone(), opts.clone())
+                        .compile_multi(&pairs, MultiModelOptions { id_offset })?,
+                );
+                let slot = Arc::new(ModelSlot::new(
+                    "keyed-program",
+                    ModelArtifact {
+                        model: Arc::new(pairs[0].1.clone()),
+                        compiled,
+                    },
+                ));
+                for (name, id, model) in resolved {
+                    entries.push(DeployEntry {
+                        name,
+                        id,
+                        model: Mutex::new(Arc::new(model)),
+                        slot: None,
+                        counters: Arc::new(ModelCounters::default()),
+                    });
+                }
+                Some(KeyedProgram { slot, id_offset })
+            }
+            None => {
+                // Isolated mode: one program + publication slot each.
+                for (name, id, model) in resolved {
+                    let model = Arc::new(model);
+                    let compiled = Arc::new(
+                        Compiler::new(self.chip.clone(), opts.clone())
+                            .compile(&model)?,
+                    );
+                    let slot = Arc::new(ModelSlot::new(
+                        name.clone(),
+                        ModelArtifact { model: Arc::clone(&model), compiled },
+                    ));
+                    entries.push(DeployEntry {
+                        name,
+                        id,
+                        model: Mutex::new(model),
+                        slot: Some(slot),
+                        counters: Arc::new(ModelCounters::default()),
+                    });
+                }
+                None
+            }
+        };
+
+        Ok(Deployment {
+            chip: self.chip,
+            opts,
+            backend: self.backend,
+            extractor: self.extractor,
+            entries,
+            keyed,
+            lut: self.lut.map(Arc::new),
+            n_workers: self.n_workers,
+            router: self.router,
+            batch: self.batch,
+            swap_gate: Mutex::new(()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{self, PackedBits};
+    use crate::net::{TraceGenerator, TraceKind};
+
+    fn deployment_for(model: &BnnModel, kind: BackendKind) -> Deployment {
+        Deployment::builder()
+            .extractor(FieldExtractor::SrcIp)
+            .backend(kind)
+            .model("m", model.clone())
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn session_matches_reference_forward() {
+        let model = BnnModel::random(32, &[16, 1], 41);
+        let mut gen = TraceGenerator::new(5);
+        let trace = gen.generate(&TraceKind::UniformIps, 64);
+        for kind in [BackendKind::Scalar, BackendKind::Batched, BackendKind::Reference] {
+            let dep = deployment_for(&model, kind);
+            let mut session = dep.session("m").unwrap();
+            assert_eq!(session.backend_name(), kind.name());
+            let preds = session.classify_trace(&trace.packets).unwrap();
+            for (i, &key) in trace.keys.iter().enumerate() {
+                let expect =
+                    bnn::forward(&model, &PackedBits::from_u32(key)).get(0) as u32;
+                assert_eq!(preds[i] & 1, expect, "{} pkt {i}", kind.name());
+            }
+            let stats = dep.stats("m").unwrap();
+            assert_eq!(stats.packets, 64);
+            assert_eq!(stats.version, 1);
+            assert_eq!(stats.swaps, 0);
+        }
+    }
+
+    #[test]
+    fn swap_publishes_new_weights_to_open_sessions() {
+        let a = BnnModel::random(32, &[16, 1], 1);
+        let b = BnnModel::random(32, &[16, 1], 2);
+        let dep = deployment_for(&a, BackendKind::Batched);
+        let mut session = dep.session("m").unwrap();
+        let mut gen = TraceGenerator::new(6);
+        let trace = gen.generate(&TraceKind::UniformIps, 32);
+        let refs: Vec<&[u8]> = trace.packets.iter().map(|p| p.as_slice()).collect();
+        let mut out = Vec::new();
+
+        assert_eq!(session.classify_batch(&refs, &mut out).unwrap(), 1);
+        for (i, &key) in trace.keys.iter().enumerate() {
+            let expect = bnn::forward(&a, &PackedBits::from_u32(key)).get(0) as u32;
+            assert_eq!(out[i] & 1, expect, "pre-swap pkt {i}");
+        }
+
+        let v = dep.swap_model("m", b.clone()).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(dep.version("m").unwrap(), 2);
+        assert_eq!(session.classify_batch(&refs, &mut out).unwrap(), 2);
+        for (i, &key) in trace.keys.iter().enumerate() {
+            let expect = bnn::forward(&b, &PackedBits::from_u32(key)).get(0) as u32;
+            assert_eq!(out[i] & 1, expect, "post-swap pkt {i}");
+        }
+        assert_eq!(dep.stats("m").unwrap().swaps, 1);
+        // Session stats survive the backend rebuild.
+        assert_eq!(session.stats().packets, 64);
+    }
+
+    #[test]
+    fn swap_rejects_architecture_changes_and_keeps_serving() {
+        let a = BnnModel::random(32, &[16, 1], 3);
+        let dep = deployment_for(&a, BackendKind::Batched);
+        let err = dep.swap_model("m", BnnModel::random(32, &[32, 1], 4));
+        assert!(err.is_err());
+        assert_eq!(dep.version("m").unwrap(), 1, "failed swap must not publish");
+        assert!(dep.swap_model("nope", a.clone()).is_err());
+    }
+
+    #[test]
+    fn engine_surfaces_the_model_version() {
+        let a = BnnModel::random(32, &[16, 1], 7);
+        let b = BnnModel::random(32, &[16, 1], 8);
+        let dep = Deployment::builder()
+            .model("m", a.clone())
+            .workers(2)
+            .build()
+            .unwrap();
+        let mut gen = TraceGenerator::new(9);
+        let trace = gen.generate(&TraceKind::UniformIps, 100);
+        let report = dep.serve_trace("m", &trace.packets).unwrap();
+        assert_eq!(report.model_version, 1);
+        assert_eq!(report.outputs.len(), 100);
+        dep.swap_model("m", b.clone()).unwrap();
+        let report = dep.serve_trace("m", &trace.packets).unwrap();
+        assert_eq!(report.model_version, 2);
+        for (i, &key) in trace.keys.iter().enumerate() {
+            let expect = bnn::forward(&b, &PackedBits::from_u32(key)).get(0) as u32;
+            assert_eq!(report.outputs[i] & 1, expect, "post-swap pkt {i}");
+        }
+    }
+
+    #[test]
+    fn build_validates_registry_and_lut() {
+        assert!(Deployment::builder().build().is_err(), "no models");
+        let m = BnnModel::random(32, &[16], 10);
+        assert!(Deployment::builder()
+            .model("a", m.clone())
+            .model("a", m.clone())
+            .build()
+            .is_err());
+        assert!(Deployment::builder()
+            .model_with_id("a", 7, m.clone())
+            .model_with_id("b", 7, m.clone())
+            .build()
+            .is_err());
+        let err = match Deployment::builder()
+            .backend(BackendKind::Lut)
+            .model("a", m.clone())
+            .build()
+        {
+            Err(e) => e,
+            Ok(_) => panic!("lut backend without a table must fail"),
+        };
+        assert!(err.to_string().contains("lut"), "{err}");
+    }
+
+    #[test]
+    fn isolated_and_keyed_sessions_are_mode_checked() {
+        let m = BnnModel::random(32, &[16], 11);
+        let isolated = Deployment::builder().model("a", m.clone()).build().unwrap();
+        assert!(isolated.keyed_session().is_err());
+        assert!(isolated.engine_keyed().is_err());
+        let keyed = Deployment::builder()
+            .extractor(FieldExtractor::PayloadAt { offset: 4 })
+            .keyed(0)
+            .model("a", m.clone())
+            .model("b", BnnModel::random(32, &[16], 12))
+            .build()
+            .unwrap();
+        assert!(keyed.is_keyed());
+        assert!(keyed.session("a").is_err());
+        assert!(keyed.engine("a").is_err());
+        assert!(keyed.keyed_session().is_ok());
+        // The reference backend replays one model's forward pass — it
+        // cannot honor per-packet ids, so keyed mode rejects it.
+        assert!(keyed.keyed_session_with(BackendKind::Reference).is_err());
+        assert!(Deployment::builder()
+            .extractor(FieldExtractor::PayloadAt { offset: 4 })
+            .keyed(0)
+            .backend(BackendKind::Reference)
+            .model("a", m.clone())
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn auto_ids_skip_explicitly_taken_ones() {
+        let m = BnnModel::random(32, &[16], 13);
+        // "a" takes id 1 explicitly; "b"'s auto id must skip 1.
+        let dep = Deployment::builder()
+            .extractor(FieldExtractor::PayloadAt { offset: 4 })
+            .keyed(0)
+            .model_with_id("a", 1, m.clone())
+            .model("b", BnnModel::random(32, &[16], 14))
+            .build()
+            .unwrap();
+        assert_eq!(dep.models(), vec!["a", "b"]);
+        // Explicit ids registered AFTER an auto model must be avoided
+        // by the auto-assignment too (two-pass resolution).
+        let dep = Deployment::builder()
+            .extractor(FieldExtractor::PayloadAt { offset: 4 })
+            .keyed(0)
+            .model("c", m.clone())
+            .model_with_id("d", 0, BnnModel::random(32, &[16], 15))
+            .build()
+            .unwrap();
+        assert_eq!(dep.models(), vec!["c", "d"]);
+    }
+}

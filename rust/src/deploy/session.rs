@@ -1,0 +1,259 @@
+//! Serving handles over a deployment's published models.
+//!
+//! A [`Session`] is the single-threaded classify handle: it owns one
+//! [`InferenceBackend`] built from the slot's current artifact and
+//! re-checks the slot's version with one atomic load per batch, so a
+//! [`swap`](crate::deploy::Deployment::swap_model) published by any
+//! thread is picked up at the next batch boundary without ever tearing
+//! a batch. Sessions are `Send` (move one into each worker thread);
+//! create one session per thread rather than sharing.
+
+use std::sync::Arc;
+
+use crate::backend::{make_backend, BackendKind, InferenceBackend, LutBackend};
+use crate::baseline::LutClassifier;
+use crate::error::{Error, Result};
+use crate::rmt::PipelineStats;
+
+use super::swap::{ModelArtifact, ModelCounters, ModelSlot};
+
+/// One user-facing hint for the `lut`-without-table misconfiguration,
+/// shared by the build-time check and the session-open path so the
+/// guidance cannot drift.
+pub(crate) const LUT_TABLE_HINT: &str =
+    "backend \"lut\" needs a populated LUT table: pass one to \
+     Deployment::builder().lut(..) (the CLI run/serve paths build \
+     it from the trained DdosDoc blacklist when available)";
+
+/// Build the backend serving one published artifact. This is the only
+/// place the deployment layer calls the low-level
+/// [`crate::backend::make_backend`] constructor.
+pub(crate) fn backend_for_artifact(
+    kind: BackendKind,
+    artifact: &ModelArtifact,
+    lut: Option<&Arc<LutClassifier>>,
+) -> Result<Box<dyn InferenceBackend>> {
+    match kind {
+        BackendKind::Lut => match lut {
+            Some(l) => Ok(Box::new(LutBackend::new(l.as_ref().clone()))),
+            None => Err(Error::Config(LUT_TABLE_HINT.into())),
+        },
+        _ => make_backend(kind, &artifact.compiled, Some(&artifact.model)),
+    }
+}
+
+/// Shared trace loop: classify `packets` in `chunk`-sized batches via
+/// `run` (one `classify_batch`-shaped call per chunk), concatenating
+/// the output words. Malformed packets classify as 0 without failing
+/// the run; hot-swaps are picked up between chunks.
+fn classify_chunked<F>(packets: &[Vec<u8>], chunk: usize, mut run: F) -> Result<Vec<u32>>
+where
+    F: FnMut(&[&[u8]], &mut Vec<u32>) -> Result<u64>,
+{
+    let mut words = Vec::with_capacity(packets.len());
+    let mut buf = Vec::new();
+    for c in packets.chunks(chunk.max(1)) {
+        let refs: Vec<&[u8]> = c.iter().map(|p| p.as_slice()).collect();
+        run(refs.as_slice(), &mut buf)?;
+        words.extend_from_slice(&buf);
+    }
+    Ok(words)
+}
+
+/// A classify handle bound to one model slot.
+pub struct Session {
+    slot: Arc<ModelSlot>,
+    kind: BackendKind,
+    lut: Option<Arc<LutClassifier>>,
+    /// Per-model counters to bump (None in keyed mode, where
+    /// [`KeyedSession`] attributes per packet instead).
+    counters: Option<Arc<ModelCounters>>,
+    /// Version of the artifact the current backend was built from.
+    version: u64,
+    backend: Box<dyn InferenceBackend>,
+    /// Stats of backends retired by hot-swaps, folded into totals.
+    retired: PipelineStats,
+}
+
+impl Session {
+    pub(crate) fn open(
+        slot: Arc<ModelSlot>,
+        kind: BackendKind,
+        lut: Option<Arc<LutClassifier>>,
+        counters: Option<Arc<ModelCounters>>,
+    ) -> Result<Self> {
+        let (artifact, version) = slot.load();
+        let backend = backend_for_artifact(kind, &artifact, lut.as_ref())?;
+        Ok(Self {
+            slot,
+            kind,
+            lut,
+            counters,
+            version,
+            backend,
+            retired: PipelineStats::default(),
+        })
+    }
+
+    /// Pick up a published swap: one atomic version peek; on change,
+    /// retire the current backend (folding its stats) and rebuild from
+    /// the new artifact.
+    fn refresh(&mut self) -> Result<()> {
+        if self.slot.version() == self.version {
+            return Ok(());
+        }
+        let (artifact, version) = self.slot.load();
+        let fresh = backend_for_artifact(self.kind, &artifact, self.lut.as_ref())?;
+        let old = std::mem::replace(&mut self.backend, fresh);
+        let s = old.stats();
+        self.retired.packets += s.packets;
+        self.retired.element_executions += s.element_executions;
+        self.retired.parse_errors += s.parse_errors;
+        self.version = version;
+        Ok(())
+    }
+
+    /// Classify a batch: one output word per packet (the backend trait's
+    /// low-output-bits convention; malformed packets yield 0). Returns
+    /// the model version that served the whole batch — swaps published
+    /// mid-batch take effect at the next call.
+    pub fn classify_batch(
+        &mut self,
+        packets: &[&[u8]],
+        out: &mut Vec<u32>,
+    ) -> Result<u64> {
+        self.refresh()?;
+        let errs_before = self.backend.stats().parse_errors;
+        self.backend.run_batch(packets, out)?;
+        if let Some(c) = &self.counters {
+            let errs = self.backend.stats().parse_errors.saturating_sub(errs_before);
+            c.parse_errors.add(errs);
+            // `packets` counts routed packets (malformed included — those
+            // also show in parse_errors), matching keyed attribution.
+            c.packets.add(packets.len() as u64);
+        }
+        Ok(self.version)
+    }
+
+    /// Chunk size the current backend amortizes best at.
+    pub(crate) fn preferred_chunk(&self) -> usize {
+        self.backend.caps().preferred_batch.max(1)
+    }
+
+    /// Classify a whole stream in backend-preferred batches; malformed
+    /// packets classify as 0 without failing the run. Swaps are picked
+    /// up between chunks.
+    pub fn classify_trace(&mut self, packets: &[Vec<u8>]) -> Result<Vec<u32>> {
+        let chunk = self.preferred_chunk();
+        classify_chunked(packets, chunk, |refs, buf| self.classify_batch(refs, buf))
+    }
+
+    /// Classify one frame, treating a malformed frame as an error (the
+    /// switch would drop it, and a single-packet caller should know).
+    pub fn classify_one(&mut self, frame: &[u8]) -> Result<u32> {
+        let errs_before = self.stats().parse_errors;
+        let mut out = Vec::with_capacity(1);
+        self.classify_batch(&[frame], &mut out)?;
+        if self.stats().parse_errors > errs_before {
+            return Err(Error::Parse("malformed frame".into()));
+        }
+        Ok(out.first().copied().unwrap_or(0))
+    }
+
+    /// Model version currently serving this session.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Short backend name (`scalar`/`batched`/`reference`/`lut`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.caps().name
+    }
+
+    /// Cumulative stats across every backend this session has driven
+    /// (hot-swaps retire backends; their counts are folded in).
+    pub fn stats(&self) -> PipelineStats {
+        let s = self.backend.stats();
+        PipelineStats {
+            packets: self.retired.packets + s.packets,
+            element_executions: self.retired.element_executions + s.element_executions,
+            parse_errors: self.retired.parse_errors + s.parse_errors,
+        }
+    }
+}
+
+/// Classify handle for a keyed (shared-pipeline multi-model)
+/// deployment: one program serves every model, a packet header field
+/// selects the weights per packet. Attribution of per-model packet
+/// counters happens here by parsing the same id field the pipeline
+/// matches on (an unknown id attributes to the default model, matching
+/// the table-miss semantics).
+pub struct KeyedSession {
+    session: Session,
+    id_offset: usize,
+    /// (model id, counters) in registration order; index 0 = default.
+    by_id: Vec<(u32, Arc<ModelCounters>)>,
+}
+
+impl KeyedSession {
+    pub(crate) fn open(
+        slot: Arc<ModelSlot>,
+        kind: BackendKind,
+        lut: Option<Arc<LutClassifier>>,
+        id_offset: usize,
+        by_id: Vec<(u32, Arc<ModelCounters>)>,
+    ) -> Result<Self> {
+        Ok(Self {
+            session: Session::open(slot, kind, lut, None)?,
+            id_offset,
+            by_id,
+        })
+    }
+
+    fn counters_index(&self, pkt: &[u8]) -> usize {
+        pkt.get(self.id_offset..self.id_offset + 4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .and_then(|id| self.by_id.iter().position(|(k, _)| *k == id))
+            .unwrap_or(0)
+    }
+
+    /// Classify a mixed-model batch; returns the program version that
+    /// served it (see [`Session::classify_batch`]).
+    pub fn classify_batch(
+        &mut self,
+        packets: &[&[u8]],
+        out: &mut Vec<u32>,
+    ) -> Result<u64> {
+        let errs_before = self.session.stats().parse_errors;
+        let version = self.session.classify_batch(packets, out)?;
+        for pkt in packets {
+            self.by_id[self.counters_index(pkt)].1.packets.inc();
+        }
+        let errs = self.session.stats().parse_errors.saturating_sub(errs_before);
+        if let Some((_, default)) = self.by_id.first() {
+            default.parse_errors.add(errs);
+        }
+        Ok(version)
+    }
+
+    /// Classify a whole mixed-model stream in backend-preferred batches.
+    pub fn classify_trace(&mut self, packets: &[Vec<u8>]) -> Result<Vec<u32>> {
+        let chunk = self.session.preferred_chunk();
+        classify_chunked(packets, chunk, |refs, buf| self.classify_batch(refs, buf))
+    }
+
+    /// Program version currently serving this session.
+    pub fn version(&self) -> u64 {
+        self.session.version()
+    }
+
+    /// Short backend name.
+    pub fn backend_name(&self) -> &'static str {
+        self.session.backend_name()
+    }
+
+    /// Cumulative stats (all models — the program is shared).
+    pub fn stats(&self) -> PipelineStats {
+        self.session.stats()
+    }
+}

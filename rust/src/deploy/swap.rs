@@ -1,0 +1,159 @@
+//! RCU-style publication of compiled models (DESIGN.md §11).
+//!
+//! Hot-swap protocol: `swap_model` recompiles **off the hot path**, then
+//! [`SwapCell::store`] atomically publishes the new
+//! `Arc<`[`ModelArtifact`]`>` and bumps a monotone version counter.
+//! Readers ([`crate::deploy::Session`]s and engine workers) keep serving
+//! the old `Arc` until their next batch boundary, where a single atomic
+//! [`SwapCell::version`] peek tells them to reload — no reader ever
+//! blocks on a writer for more than the microseconds it takes to clone
+//! an `Arc`, and no in-flight batch is drained or torn: a batch runs
+//! wholly against one artifact, so every packet's prediction is
+//! bit-exact under either the old or the new model
+//! (`tests/prop_hotswap.rs` holds this under concurrency).
+//!
+//! `SwapCell` is the std-only equivalent of the `arc-swap` crate: a
+//! `Mutex<Arc<T>>` guarding the pointer plus an `AtomicU64` version for
+//! the lock-free fast-path check. The lock is held only to clone or
+//! replace the `Arc` (never across compilation or inference), which is
+//! the RCU grace-period story collapsed to reference counting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::bnn::BnnModel;
+use crate::compiler::CompiledModel;
+use crate::telemetry::Counter;
+
+/// Atomically replaceable `Arc<T>` with a monotone version counter.
+pub struct SwapCell<T> {
+    current: Mutex<Arc<T>>,
+    version: AtomicU64,
+}
+
+impl<T> SwapCell<T> {
+    /// Wrap an initial value at version 1.
+    pub fn new(value: Arc<T>) -> Self {
+        Self { current: Mutex::new(value), version: AtomicU64::new(1) }
+    }
+
+    /// Snapshot the current value and its version (consistent pair).
+    pub fn load(&self) -> (Arc<T>, u64) {
+        let guard = self.current.lock().expect("SwapCell poisoned");
+        (Arc::clone(&guard), self.version.load(Ordering::Acquire))
+    }
+
+    /// Monotone version peek — one atomic load, no lock. Readers use
+    /// this per batch to decide whether to reload.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Publish a new value; returns the new version. The version is
+    /// bumped while the pointer lock is held so `load` never observes a
+    /// (value, version) pair that was not published together.
+    pub fn store(&self, value: Arc<T>) -> u64 {
+        let mut guard = self.current.lock().expect("SwapCell poisoned");
+        *guard = value;
+        self.version.fetch_add(1, Ordering::AcqRel) + 1
+    }
+}
+
+/// Everything a backend needs to serve one published model: the
+/// compiled pipeline program and the source weights (the reference
+/// backend replays the forward pass from them). Swapped as one unit so
+/// program and weights can never skew.
+pub struct ModelArtifact {
+    pub model: Arc<BnnModel>,
+    pub compiled: Arc<CompiledModel>,
+}
+
+/// A named publication slot: the unit of hot-swap. One per model in an
+/// isolated deployment; one for the whole keyed-table program in a
+/// keyed deployment.
+pub struct ModelSlot {
+    name: String,
+    cell: SwapCell<ModelArtifact>,
+}
+
+impl ModelSlot {
+    pub fn new(name: impl Into<String>, artifact: ModelArtifact) -> Self {
+        Self { name: name.into(), cell: SwapCell::new(Arc::new(artifact)) }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Current artifact + version (consistent pair).
+    pub fn load(&self) -> (Arc<ModelArtifact>, u64) {
+        self.cell.load()
+    }
+
+    /// Lock-free monotone version peek (the per-batch fast path).
+    pub fn version(&self) -> u64 {
+        self.cell.version()
+    }
+
+    /// Atomically publish a recompiled artifact; returns the new version.
+    pub fn publish(&self, artifact: ModelArtifact) -> u64 {
+        self.cell.store(Arc::new(artifact))
+    }
+}
+
+/// Per-model serving counters (session path; the engine keeps its own
+/// [`crate::telemetry::EngineMetrics`]).
+#[derive(Debug, Default)]
+pub struct ModelCounters {
+    /// Packets routed to this model, malformed ones included (those
+    /// also count in `parse_errors`).
+    pub packets: Counter,
+    /// Malformed packets observed while serving; in keyed mode these
+    /// are attributed to the default model (the backend reports parse
+    /// errors in aggregate, not per lane).
+    pub parse_errors: Counter,
+    /// Successful hot-swaps published for this model.
+    pub swaps: Counter,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn versions_are_monotone_and_pairs_consistent() {
+        let cell = SwapCell::new(Arc::new(7u32));
+        assert_eq!(cell.version(), 1);
+        let (v0, ver0) = cell.load();
+        assert_eq!((*v0, ver0), (7, 1));
+        assert_eq!(cell.store(Arc::new(8)), 2);
+        assert_eq!(cell.store(Arc::new(9)), 3);
+        let (v, ver) = cell.load();
+        assert_eq!((*v, ver), (9, 3));
+    }
+
+    #[test]
+    fn concurrent_stores_and_loads_never_tear() {
+        let cell = Arc::new(SwapCell::new(Arc::new(0u64)));
+        std::thread::scope(|s| {
+            let writer = Arc::clone(&cell);
+            s.spawn(move || {
+                for i in 1..=100u64 {
+                    writer.store(Arc::new(i));
+                }
+            });
+            for _ in 0..4 {
+                let reader = Arc::clone(&cell);
+                s.spawn(move || {
+                    let mut last = 0u64;
+                    for _ in 0..200 {
+                        let (_, ver) = reader.load();
+                        assert!(ver >= last, "version went backwards");
+                        last = ver;
+                    }
+                });
+            }
+        });
+        assert_eq!(cell.version(), 101);
+    }
+}

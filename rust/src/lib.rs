@@ -32,6 +32,11 @@
 //! * [`backend`] — the unified [`backend::InferenceBackend`] trait:
 //!   scalar pipeline, batched SoA tape, trusted reference forward, and
 //!   the LUT baseline, all behind one `run_batch` seam.
+//! * [`deploy`] — the canonical public API: a typed
+//!   [`deploy::Deployment`] builder owning compilation (single-model,
+//!   multi-model registry, keyed-table multi-tenant), typed
+//!   [`deploy::FieldExtractor`]s, [`deploy::Session`] classify handles,
+//!   and RCU-style runtime hot-swap with a version counter.
 //! * [`coordinator`] — the L3 serving loop: packet engine, batching,
 //!   stats; workers pull batches and drive an [`backend::InferenceBackend`].
 //! * [`analysis`] — throughput / chip-area models behind the paper's
@@ -41,15 +46,19 @@
 //!
 //! ```no_run
 //! use n2net::bnn::BnnModel;
-//! use n2net::compiler::{Compiler, CompilerOptions};
-//! use n2net::rmt::ChipConfig;
+//! use n2net::deploy::{Deployment, FieldExtractor};
 //!
-//! // A 2-layer BNN over 32-bit activations (the paper's use-case shape).
+//! // Deploy a 2-layer BNN (the paper's use-case shape) classifying on
+//! // the IPv4 source address, then classify and hot-swap at runtime.
 //! let model = BnnModel::random(32, &[64, 32], 42);
-//! let compiled = Compiler::new(ChipConfig::rmt(), CompilerOptions::default())
-//!     .compile(&model)
+//! let deployment = Deployment::builder()
+//!     .extractor(FieldExtractor::SrcIp)
+//!     .model("ddos", model)
+//!     .build()
 //!     .unwrap();
-//! println!("{}", compiled.resource_report());
+//! println!("{}", deployment.compiled("ddos").unwrap().resource_report());
+//! let mut session = deployment.session("ddos").unwrap();
+//! // session.classify_batch(..) / deployment.swap_model("ddos", new_model)
 //! ```
 
 pub mod analysis;
@@ -59,6 +68,7 @@ pub mod baseline;
 pub mod bnn;
 pub mod compiler;
 pub mod coordinator;
+pub mod deploy;
 pub mod error;
 pub mod net;
 pub mod rmt;

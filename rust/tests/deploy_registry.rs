@@ -1,0 +1,180 @@
+//! Deployment-registry integration tests (ISSUE 2): the keyed-table
+//! multi-model path — [`Compiler::compile_multi`] reached through its
+//! first public entry point, `Deployment::builder().keyed(..)` — and
+//! the isolated multi-model registry.
+//!
+//! Packet format for keyed deployments here:
+//! `[model id u32 LE][activation words LE]` with the activation parsed
+//! from offset 4 and the id matched at offset 0.
+
+use n2net::backend::BackendKind;
+use n2net::bnn::{self, BnnModel, PackedBits};
+use n2net::deploy::{Deployment, FieldExtractor};
+use n2net::util::rng::Rng;
+
+fn frame(id: u32, x: &PackedBits) -> Vec<u8> {
+    let mut pkt = id.to_le_bytes().to_vec();
+    for w in x.words() {
+        pkt.extend_from_slice(&w.to_le_bytes());
+    }
+    pkt
+}
+
+fn keyed_two_model_deployment() -> (BnnModel, BnnModel, Deployment) {
+    let model_a = BnnModel::random(32, &[32, 16], 100);
+    let model_b = BnnModel::random(32, &[32, 16], 200);
+    let deployment = Deployment::builder()
+        .extractor(FieldExtractor::PayloadAt { offset: 4 })
+        .keyed(0)
+        .model_with_id("alpha", 7, model_a.clone())
+        .model_with_id("beta", 13, model_b.clone())
+        .build()
+        .unwrap();
+    (model_a, model_b, deployment)
+}
+
+/// Two models behind keyed tables: every packet's output is bit-exact
+/// with the model its id selects, and never leaks the other model's
+/// weights (per-model output isolation).
+#[test]
+fn keyed_registry_isolates_per_model_outputs() {
+    let (model_a, model_b, deployment) = keyed_two_model_deployment();
+    let mut session = deployment.keyed_session().unwrap();
+    let mask = n2net::backend::out_mask(16);
+    let mut rng = Rng::seed_from_u64(1);
+    for round in 0..30 {
+        let x = PackedBits::random(32, &mut rng);
+        let expect_a = bnn::forward(&model_a, &x).words()[0] & mask;
+        let expect_b = bnn::forward(&model_b, &x).words()[0] & mask;
+        let pkts = vec![frame(7, &x), frame(13, &x)];
+        let refs: Vec<&[u8]> = pkts.iter().map(|p| p.as_slice()).collect();
+        let mut out = Vec::new();
+        session.classify_batch(&refs, &mut out).unwrap();
+        assert_eq!(out[0], expect_a, "round {round}: id 7 must serve alpha");
+        assert_eq!(out[1], expect_b, "round {round}: id 13 must serve beta");
+        if expect_a != expect_b {
+            assert_ne!(out[0], out[1], "round {round}: outputs must not blend");
+        }
+    }
+    // Attribution: 30 packets each.
+    assert_eq!(deployment.stats("alpha").unwrap().packets, 30);
+    assert_eq!(deployment.stats("beta").unwrap().packets, 30);
+}
+
+#[test]
+fn keyed_registry_unknown_id_serves_the_default_model() {
+    let (model_a, _, deployment) = keyed_two_model_deployment();
+    let mut session = deployment.keyed_session().unwrap();
+    let mask = n2net::backend::out_mask(16);
+    let mut rng = Rng::seed_from_u64(2);
+    let x = PackedBits::random(32, &mut rng);
+    let pkt = frame(0xFFFF_FFFF, &x);
+    let refs: Vec<&[u8]> = vec![&pkt];
+    let mut out = Vec::new();
+    session.classify_batch(&refs, &mut out).unwrap();
+    // Table miss -> default action data = the first registered model.
+    assert_eq!(out[0], bnn::forward(&model_a, &x).words()[0] & mask);
+    // Attribution follows the same miss rule.
+    assert_eq!(deployment.stats("alpha").unwrap().packets, 1);
+    assert_eq!(deployment.stats("beta").unwrap().packets, 0);
+}
+
+/// The keyed program serves mixed streams through the multi-worker
+/// engine too, preserving per-packet model selection and input order.
+#[test]
+fn keyed_registry_engine_serves_mixed_streams() {
+    let (model_a, model_b, deployment) = keyed_two_model_deployment();
+    let mask = n2net::backend::out_mask(16);
+    let mut rng = Rng::seed_from_u64(3);
+    let mut packets = Vec::new();
+    let mut expects = Vec::new();
+    for i in 0..200 {
+        let x = PackedBits::random(32, &mut rng);
+        let (id, model) = if i % 3 == 0 { (13, &model_b) } else { (7, &model_a) };
+        packets.push(frame(id, &x));
+        expects.push(bnn::forward(model, &x).words()[0] & mask);
+    }
+    let report = deployment.serve_trace_keyed(&packets).unwrap();
+    assert_eq!(report.outputs.len(), 200);
+    assert_eq!(report.model_version, 1);
+    for (i, (&got, &expect)) in report.outputs.iter().zip(&expects).enumerate() {
+        assert_eq!(got, expect, "pkt {i}");
+    }
+}
+
+/// Hot-swapping one entry of a keyed deployment republishes the shared
+/// program: the swapped tenant serves the new weights, the other tenant
+/// is untouched, and the version counter moves once.
+#[test]
+fn keyed_registry_swap_republishes_one_tenant() {
+    let (model_a, _, deployment) = keyed_two_model_deployment();
+    let retrained = BnnModel::random(32, &[32, 16], 999);
+    let v = deployment.swap_model("beta", retrained.clone()).unwrap();
+    assert_eq!(v, 2);
+    assert_eq!(deployment.version("alpha").unwrap(), 2, "shared program version");
+    let mut session = deployment.keyed_session().unwrap();
+    let mask = n2net::backend::out_mask(16);
+    let mut rng = Rng::seed_from_u64(4);
+    let x = PackedBits::random(32, &mut rng);
+    let pkts = vec![frame(7, &x), frame(13, &x)];
+    let refs: Vec<&[u8]> = pkts.iter().map(|p| p.as_slice()).collect();
+    let mut out = Vec::new();
+    assert_eq!(session.classify_batch(&refs, &mut out).unwrap(), 2);
+    assert_eq!(out[0], bnn::forward(&model_a, &x).words()[0] & mask, "alpha untouched");
+    assert_eq!(out[1], bnn::forward(&retrained, &x).words()[0] & mask, "beta retrained");
+}
+
+/// Isolated (non-keyed) registries compile one program per model; the
+/// sessions are fully independent.
+#[test]
+fn isolated_registry_runs_models_independently() {
+    let model_a = BnnModel::random(32, &[16, 1], 5);
+    let model_b = BnnModel::random(32, &[16, 1], 6);
+    let deployment = Deployment::builder()
+        .extractor(FieldExtractor::PayloadAt { offset: 0 })
+        .backend(BackendKind::Batched)
+        .model("a", model_a.clone())
+        .model("b", model_b.clone())
+        .build()
+        .unwrap();
+    assert_eq!(deployment.models(), vec!["a", "b"]);
+    let mut sa = deployment.session("a").unwrap();
+    let mut sb = deployment.session("b").unwrap();
+    let mut rng = Rng::seed_from_u64(7);
+    for _ in 0..20 {
+        let x = PackedBits::random(32, &mut rng);
+        let mut pkt = Vec::new();
+        for w in x.words() {
+            pkt.extend_from_slice(&w.to_le_bytes());
+        }
+        let refs: Vec<&[u8]> = vec![&pkt];
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        sa.classify_batch(&refs, &mut oa).unwrap();
+        sb.classify_batch(&refs, &mut ob).unwrap();
+        assert_eq!(oa[0] & 1, bnn::forward(&model_a, &x).get(0) as u32);
+        assert_eq!(ob[0] & 1, bnn::forward(&model_b, &x).get(0) as u32);
+    }
+    assert_eq!(deployment.stats("a").unwrap().packets, 20);
+    assert_eq!(deployment.stats("b").unwrap().packets, 20);
+}
+
+/// The keyed program costs SRAM entries, not pipeline stages, and the
+/// deployment exposes that through its compiled-program accessor.
+#[test]
+fn keyed_registry_costs_sram_not_stages() {
+    let (_, _, deployment) = keyed_two_model_deployment();
+    let single = Deployment::builder()
+        .extractor(FieldExtractor::PayloadAt { offset: 4 })
+        .model("solo", BnnModel::random(32, &[32, 16], 100))
+        .build()
+        .unwrap();
+    let keyed = deployment.compiled("alpha").unwrap();
+    let solo = single.compiled("solo").unwrap();
+    assert_eq!(keyed.program.n_elements(), solo.program.n_elements());
+    assert!(
+        keyed.resources.sram_bits > solo.resources.sram_bits,
+        "2 keyed models must cost more table SRAM than 1: {} vs {}",
+        keyed.resources.sram_bits,
+        solo.resources.sram_bits
+    );
+}

@@ -1,0 +1,217 @@
+//! Hot-swap consistency properties (ISSUE 2 acceptance):
+//!
+//! H1. Under concurrent `classify_batch` and `swap_model`, EVERY
+//!     packet's prediction is bit-exact with either the old or the new
+//!     model — no torn reads, no blended weights — and the version
+//!     counter observed by the session is monotone.
+//! H2. The same holds for the multi-worker engine path, whose workers
+//!     re-check the publication version per batch.
+//! H3. A failed swap (architecture mismatch) publishes nothing: the old
+//!     model keeps serving and the version counter does not move.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use n2net::backend::{out_mask, BackendKind};
+use n2net::bnn::{self, BnnModel, PackedBits};
+use n2net::deploy::{Deployment, FieldExtractor};
+use n2net::util::prop::{self, pow2_in};
+use n2net::util::rng::Rng;
+
+/// Raw little-endian activation frame (PayloadAt { offset: 0 }).
+fn frame_for(x: &PackedBits) -> Vec<u8> {
+    let mut pkt = Vec::with_capacity(x.words().len() * 4);
+    for w in x.words() {
+        pkt.extend_from_slice(&w.to_le_bytes());
+    }
+    pkt
+}
+
+/// Expected output word of `model` on `x` under the backend trait's
+/// low-output-bits convention.
+fn expect_word(model: &BnnModel, x: &PackedBits, out_bits: usize) -> u32 {
+    let y = bnn::forward(model, x);
+    y.words().first().copied().unwrap_or(0) & out_mask(out_bits.min(32))
+}
+
+/// One random hot-swap scenario: a reader thread classifies batches
+/// while the main thread swaps between two same-architecture models;
+/// every prediction must match one of the two models exactly and the
+/// observed version sequence must be monotone.
+fn check_swap_consistency(rng: &mut Rng) -> Result<(), String> {
+    let in_bits = pow2_in(rng, 16, 64);
+    let out_neurons = 1 + rng.gen_range(0, 16);
+    let layers = vec![out_neurons];
+    let seed_a = rng.next_u64();
+    let seed_b = rng.next_u64();
+    let model_a = BnnModel::random(in_bits, &layers, seed_a);
+    let model_b = BnnModel::random(in_bits, &layers, seed_b);
+    let kind = if rng.gen_bool(0.5) {
+        BackendKind::Batched
+    } else {
+        BackendKind::Scalar
+    };
+    let deployment = Deployment::builder()
+        .extractor(FieldExtractor::PayloadAt { offset: 0 })
+        .backend(kind)
+        .model("m", model_a.clone())
+        .build()
+        .map_err(|e| format!("deploy {in_bits}b->{layers:?}: {e}"))?;
+
+    let batch_size = 1 + rng.gen_range(0, 48);
+    let n_batches = 6 + rng.gen_range(0, 6);
+    let n_swaps = 3usize;
+    let input_seed = rng.next_u64();
+
+    let stop = AtomicBool::new(false);
+    let result = std::thread::scope(|scope| -> Result<(), String> {
+        let reader = scope.spawn(|| -> Result<(), String> {
+            let mut session = deployment
+                .session("m")
+                .map_err(|e| e.to_string())?;
+            let mut rng = Rng::seed_from_u64(input_seed);
+            let mut last_version = 0u64;
+            for batch in 0..n_batches {
+                let inputs: Vec<PackedBits> =
+                    (0..batch_size).map(|_| PackedBits::random(in_bits, &mut rng)).collect();
+                let frames: Vec<Vec<u8>> = inputs.iter().map(frame_for).collect();
+                let refs: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
+                let mut out = Vec::new();
+                let version = session
+                    .classify_batch(&refs, &mut out)
+                    .map_err(|e| e.to_string())?;
+                if version < last_version {
+                    return Err(format!(
+                        "version counter not monotone: {version} after {last_version}"
+                    ));
+                }
+                last_version = version;
+                for (i, x) in inputs.iter().enumerate() {
+                    let ea = expect_word(&model_a, x, out_neurons);
+                    let eb = expect_word(&model_b, x, out_neurons);
+                    let got = out[i];
+                    if got != ea && got != eb {
+                        return Err(format!(
+                            "torn read in batch {batch} lane {i} (v{version}): got \
+                             {got:#x}, old model says {ea:#x}, new says {eb:#x}"
+                        ));
+                    }
+                }
+                std::thread::yield_now();
+            }
+            stop.store(true, Ordering::Relaxed);
+            Ok(())
+        });
+        let mut last = 1u64;
+        for k in 0..n_swaps {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let next = if k % 2 == 0 { &model_b } else { &model_a };
+            let v = deployment
+                .swap_model("m", next.clone())
+                .map_err(|e| e.to_string())?;
+            if v <= last {
+                return Err(format!("swap version not monotone: {v} after {last}"));
+            }
+            last = v;
+            std::thread::yield_now();
+        }
+        reader.join().expect("reader panicked")
+    });
+    result
+}
+
+#[test]
+fn prop_h1_concurrent_swap_predictions_never_tear() {
+    let cases = prop::default_cases().min(24);
+    prop::check("hotswap-consistency", cases, check_swap_consistency);
+}
+
+/// H2: hammer the engine path — many swaps against a multi-worker
+/// engine run; outputs must each match one of the two models.
+#[test]
+fn h2_engine_workers_pick_up_swaps_without_tearing() {
+    let model_a = BnnModel::random(32, &[16, 1], 71);
+    let model_b = BnnModel::random(32, &[16, 1], 72);
+    let deployment = Arc::new(
+        Deployment::builder()
+            .extractor(FieldExtractor::PayloadAt { offset: 0 })
+            .workers(4)
+            .model("m", model_a.clone())
+            .build()
+            .unwrap(),
+    );
+    let mut rng = Rng::seed_from_u64(73);
+    let inputs: Vec<PackedBits> =
+        (0..4000).map(|_| PackedBits::random(32, &mut rng)).collect();
+    let frames: Vec<Vec<u8>> = inputs.iter().map(frame_for).collect();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let swaps_done = Arc::new(AtomicU64::new(0));
+    let swapper = {
+        let deployment = Arc::clone(&deployment);
+        let stop = Arc::clone(&stop);
+        let swaps_done = Arc::clone(&swaps_done);
+        let (a, b) = (model_a.clone(), model_b.clone());
+        std::thread::spawn(move || {
+            let mut k = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let next = if k % 2 == 0 { &b } else { &a };
+                deployment.swap_model("m", next.clone()).unwrap();
+                swaps_done.fetch_add(1, Ordering::Relaxed);
+                k += 1;
+                std::thread::yield_now();
+            }
+        })
+    };
+
+    let mut last_version = 0u64;
+    for _ in 0..5 {
+        let report = deployment.serve_trace("m", &frames).unwrap();
+        assert!(report.model_version >= last_version, "report version monotone");
+        last_version = report.model_version;
+        for (i, x) in inputs.iter().enumerate() {
+            let ea = expect_word(&model_a, x, 1);
+            let eb = expect_word(&model_b, x, 1);
+            let got = report.outputs[i];
+            assert!(
+                got == ea || got == eb,
+                "engine torn read at pkt {i}: got {got}, a {ea}, b {eb}"
+            );
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    swapper.join().unwrap();
+    assert!(swaps_done.load(Ordering::Relaxed) > 0, "swapper never ran");
+    assert_eq!(
+        deployment.version("m").unwrap(),
+        1 + deployment.stats("m").unwrap().swaps,
+        "every successful swap bumps the version exactly once"
+    );
+}
+
+/// H3: a rejected swap publishes nothing.
+#[test]
+fn h3_failed_swap_keeps_the_old_model_serving() {
+    let model_a = BnnModel::random(32, &[16, 1], 81);
+    let deployment = Deployment::builder()
+        .extractor(FieldExtractor::PayloadAt { offset: 0 })
+        .model("m", model_a.clone())
+        .build()
+        .unwrap();
+    let mut session = deployment.session("m").unwrap();
+    let mut rng = Rng::seed_from_u64(82);
+    let x = PackedBits::random(32, &mut rng);
+    let pkt = frame_for(&x);
+    let refs: Vec<&[u8]> = vec![&pkt];
+    let mut out = Vec::new();
+
+    assert!(deployment
+        .swap_model("m", BnnModel::random(64, &[16, 1], 83))
+        .is_err());
+    assert_eq!(deployment.version("m").unwrap(), 1);
+    assert_eq!(deployment.stats("m").unwrap().swaps, 0);
+    assert_eq!(session.classify_batch(&refs, &mut out).unwrap(), 1);
+    assert_eq!(out[0], expect_word(&model_a, &x, 1));
+}
