@@ -4,7 +4,8 @@
 //!     → packed weights + AOT HLO artifact
 //!     → `deploy::Deployment` (N2Net compiler → RMT pipeline program)
 //!     → simulated switch serves a 50k-packet DDoS trace (multi-worker
-//!       engine over the deployment's publication slot)
+//!       engine over the deployment's publication slot, then the
+//!       sharded flow-affinity tier cross-checked bit-exact against it)
 //!     → every output cross-checked bit-for-bit against (a) the Rust
 //!       reference forward and (b) the PJRT-executed JAX model
 //!     → accuracy / throughput / latency / memory report.
@@ -21,7 +22,7 @@ use n2net::bnn::{self, PackedBits};
 use n2net::baseline::LutClassifier;
 use n2net::coordinator::RouterPolicy;
 use n2net::deploy::{Deployment, FieldExtractor};
-use n2net::net::{TraceGenerator, TraceKind};
+use n2net::net::{Scenario, TraceGenerator, TraceKind};
 use n2net::runtime::Oracle;
 use n2net::util::rng::Rng;
 
@@ -81,6 +82,34 @@ fn main() -> anyhow::Result<()> {
         report.modeled_pps / 1e6
     );
     println!("    {}", engine.metrics.batch_latency.render("worker-shard latency"));
+
+    // ---- 3b. Sharded tier: flow-affinity dispatch, bit-exact ---------
+    let sharded = deployment.sharded_engine("e2e", 4)?;
+    let sreport = sharded.process_trace(&trace.packets)?;
+    anyhow::ensure!(
+        sreport.outputs == report.outputs,
+        "sharded serving diverged from the engine"
+    );
+    println!(
+        "\n[3b] sharded x{}: {:.2} M pkt/s aggregate, imbalance {:.2}, \
+         dropped {}, versions v{}..v{} (≡ engine outputs ✓)",
+        sreport.per_shard.len(),
+        sreport.sim_pps / 1e6,
+        sreport.imbalance(),
+        sreport.dropped,
+        sreport.version_min,
+        sreport.version_max,
+    );
+    // A skewed scenario: the zipf heavy hitter pins its flow to one
+    // shard (that is what flow affinity costs — and buys: per-flow
+    // state never splits across shards).
+    let hh = Scenario::parse("zipf-heavy-hitter")?.generate(5, 20_000);
+    let hh_report = sharded.process_trace(&hh.packets)?;
+    println!(
+        "     zipf-heavy-hitter: {:.2} M pkt/s, imbalance {:.2}",
+        hh_report.sim_pps / 1e6,
+        hh_report.imbalance(),
+    );
 
     // ---- 4. Verification: three implementations, one answer ----------
     // 4a. Rust reference forward on every packet.

@@ -1,0 +1,139 @@
+//! Sharded-serving bench (DESIGN.md §12) — aggregate throughput of the
+//! flow-affinity shard tier across shard counts and traffic scenarios,
+//! on the batched backend.
+//!
+//! The acceptance bar (ISSUE 3): `shards=4` must show ≥2× the
+//! `shards=1` aggregate rate on the batched backend, including under
+//! `zipf-heavy-hitter` skew (where flow affinity concentrates the
+//! hitter on one shard — the measured imbalance is printed so the cost
+//! of affinity stays visible).
+//!
+//! Emits machine-readable records to `BENCH_shard.json` (`case` carries
+//! the scenario and shard count) alongside the speedup summary.
+//!
+//! `cargo bench --bench shard`
+
+use n2net::bnn::BnnModel;
+use n2net::deploy::{Deployment, FieldExtractor};
+use n2net::net::Scenario;
+use n2net::util::bench::{
+    default_bencher, keep, write_bench_json, BenchRecord, Report,
+};
+
+const BENCH_JSON: &str = "BENCH_shard.json";
+/// Large enough that per-iteration setup (spawning the shard workers,
+/// building one backend per shard — a cost that grows with the shard
+/// count) is amortized to noise against the classify work, so the
+/// shards=4 vs shards=1 ratio measures steady-state throughput.
+const N_PACKETS: usize = 16384;
+const SHARD_COUNTS: &[usize] = &[1, 2, 4];
+/// Per-shard batch bound (the deployment default); the shard count
+/// rides in each record's `case` string (`"<scenario> shards=N"`).
+const BATCH_SIZE: usize = 256;
+
+fn main() {
+    // The paper's use-case model behind the canonical deployment path.
+    let model = BnnModel::random(32, &[64, 32], 3);
+    let deployment = Deployment::builder()
+        .extractor(FieldExtractor::SrcIp)
+        .model("shard-bench", model.clone())
+        .build()
+        .unwrap();
+
+    let b = default_bencher();
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut report = Report::new("sharded serving — aggregate packet rate");
+    report.header();
+    let mut summary: Vec<String> = Vec::new();
+
+    for name in ["uniform", "zipf-heavy-hitter", "ddos-burst", "malformed-fuzz"] {
+        let scenario = Scenario::parse(name).unwrap();
+        let trace = scenario.generate(7, N_PACKETS);
+        let mut base_pps = 0.0f64;
+        for &shards in SHARD_COUNTS {
+            let engine = deployment.sharded_engine("shard-bench", shards).unwrap();
+            let stats = b.run(
+                &format!("{name} shards={shards}"),
+                N_PACKETS as f64,
+                || {
+                    let r = engine.process_trace(&trace.packets).unwrap();
+                    keep(r.outputs.len());
+                },
+            );
+            let pps = stats.items_per_sec();
+            if shards == 1 {
+                base_pps = pps;
+            } else if base_pps > 0.0 {
+                // One representative run for the shard-load shape.
+                let imbalance =
+                    engine.process_trace(&trace.packets).unwrap().imbalance();
+                summary.push(format!(
+                    "{name}: shards={shards} -> {:.2}x over shards=1 \
+                     (imbalance {imbalance:.2})",
+                    pps / base_pps
+                ));
+            }
+            records.push(BenchRecord::from_stats(
+                "shard",
+                "batched",
+                BATCH_SIZE,
+                &stats,
+            ));
+            report.add(stats);
+        }
+    }
+
+    // The keyed multi-tenant registry under mixed-id traffic.
+    let keyed = Deployment::builder()
+        .extractor(FieldExtractor::SrcIp)
+        .keyed(n2net::net::MODEL_ID_OFFSET)
+        .model_with_id("tenant-a", 1, model.clone())
+        .model_with_id("tenant-b", 2, BnnModel::random(32, &[64, 32], 4))
+        .build()
+        .unwrap();
+    let mix = Scenario::parse("multi-tenant-mix")
+        .unwrap()
+        .with_model_ids(vec![1, 2])
+        .generate(9, N_PACKETS);
+    let mut base_pps = 0.0f64;
+    for &shards in SHARD_COUNTS {
+        let engine = keyed.sharded_engine_keyed(shards).unwrap();
+        let stats = b.run(
+            &format!("multi-tenant-mix shards={shards}"),
+            N_PACKETS as f64,
+            || {
+                let r = engine.process_trace(&mix.packets).unwrap();
+                keep(r.outputs.len());
+            },
+        );
+        let pps = stats.items_per_sec();
+        if shards == 1 {
+            base_pps = pps;
+        } else if base_pps > 0.0 {
+            summary.push(format!(
+                "multi-tenant-mix: shards={shards} -> {:.2}x over shards=1",
+                pps / base_pps
+            ));
+        }
+        records.push(BenchRecord::from_stats(
+            "shard",
+            "batched",
+            BATCH_SIZE,
+            &stats,
+        ));
+        report.add(stats);
+    }
+
+    println!("\nscaling (aggregate pps, same scenario):");
+    for line in &summary {
+        println!("  {line}");
+    }
+    println!(
+        "target (DESIGN.md §12): shards=4 ≥ 2x shards=1 on the batched backend"
+    );
+
+    match write_bench_json(BENCH_JSON, "shard", &records) {
+        Ok(()) => println!("wrote {} records to {BENCH_JSON}", records.len()),
+        Err(e) => eprintln!("warning: could not write {BENCH_JSON}: {e}"),
+    }
+}

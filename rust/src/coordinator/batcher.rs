@@ -2,6 +2,22 @@
 //! flush. The switch itself processes packet-at-a-time, but the software
 //! simulator amortizes per-batch overheads (and the serving examples
 //! report per-batch latency percentiles).
+//!
+//! The batcher is generic over the buffered item so the offline paths
+//! can batch owned frames (`Batcher<Vec<u8>>`, the default) while the
+//! sharded streaming path batches `(sequence, frame)` pairs pulled off
+//! its per-shard queues (see [`super::shard`]).
+//!
+//! **Stranded-tail contract.** `push` only flushes on the *size* bound;
+//! the *deadline* bound fires exclusively through `poll_deadline`. A
+//! worker loop that blocks indefinitely waiting for the next item will
+//! therefore strand a sub-`max_size` tail for as long as the stream
+//! stalls. Pull loops must bound their wait by
+//! [`Batcher::time_until_deadline`] and call `poll_deadline` on timeout
+//! (and `flush` at end of stream) — `shard::ShardedStream`'s worker loop
+//! is the reference implementation, and
+//! `shard::tests::stalled_stream_flushes_partial_batch_by_deadline`
+//! holds the contract.
 
 use std::time::{Duration, Instant};
 
@@ -18,35 +34,35 @@ impl Default for BatchPolicy {
     }
 }
 
-/// A formed batch: packet indices into the source stream plus payloads.
+/// A formed batch: buffered items plus the stream position of the first.
 #[derive(Clone, Debug, Default)]
-pub struct Batch {
+pub struct Batch<T = Vec<u8>> {
     pub first_index: usize,
-    pub packets: Vec<Vec<u8>>,
+    pub packets: Vec<T>,
     pub formed_in: Duration,
 }
 
-/// Incremental batcher over a packet stream.
-pub struct Batcher {
+/// Incremental batcher over an item stream.
+pub struct Batcher<T = Vec<u8>> {
     policy: BatchPolicy,
-    current: Vec<Vec<u8>>,
+    current: Vec<T>,
     first_index: usize,
     next_index: usize,
     started: Option<Instant>,
 }
 
-impl Batcher {
+impl<T> Batcher<T> {
     pub fn new(policy: BatchPolicy) -> Self {
         Self { policy, current: Vec::new(), first_index: 0, next_index: 0, started: None }
     }
 
-    /// Push one packet; returns a full batch when the size bound is hit.
-    pub fn push(&mut self, packet: Vec<u8>) -> Option<Batch> {
+    /// Push one item; returns a full batch when the size bound is hit.
+    pub fn push(&mut self, item: T) -> Option<Batch<T>> {
         if self.current.is_empty() {
             self.started = Some(Instant::now());
             self.first_index = self.next_index;
         }
-        self.current.push(packet);
+        self.current.push(item);
         self.next_index += 1;
         if self.current.len() >= self.policy.max_size {
             return Some(self.flush_inner());
@@ -54,8 +70,8 @@ impl Batcher {
         None
     }
 
-    /// Deadline check: flush if the oldest packet has waited too long.
-    pub fn poll_deadline(&mut self) -> Option<Batch> {
+    /// Deadline check: flush if the oldest item has waited too long.
+    pub fn poll_deadline(&mut self) -> Option<Batch<T>> {
         match self.started {
             Some(t) if !self.current.is_empty() && t.elapsed() >= self.policy.max_delay => {
                 Some(self.flush_inner())
@@ -64,8 +80,22 @@ impl Batcher {
         }
     }
 
+    /// How long a pull loop may block before it must call
+    /// [`poll_deadline`](Batcher::poll_deadline): time left until the
+    /// pending tail's deadline (zero once overdue), or `None` when
+    /// nothing is pending and the loop may wait for the next item at
+    /// leisure.
+    pub fn time_until_deadline(&self) -> Option<Duration> {
+        match self.started {
+            Some(t) if !self.current.is_empty() => {
+                Some(self.policy.max_delay.saturating_sub(t.elapsed()))
+            }
+            _ => None,
+        }
+    }
+
     /// Flush whatever is pending (stream end).
-    pub fn flush(&mut self) -> Option<Batch> {
+    pub fn flush(&mut self) -> Option<Batch<T>> {
         if self.current.is_empty() {
             None
         } else {
@@ -73,7 +103,7 @@ impl Batcher {
         }
     }
 
-    fn flush_inner(&mut self) -> Batch {
+    fn flush_inner(&mut self) -> Batch<T> {
         let formed_in = self.started.map(|t| t.elapsed()).unwrap_or_default();
         self.started = None;
         Batch {
@@ -120,5 +150,36 @@ mod tests {
         assert_eq!(batch.packets.len(), 1);
         assert!(batch.formed_in >= Duration::from_millis(1));
         assert!(b.poll_deadline().is_none());
+    }
+
+    #[test]
+    fn deadline_countdown_tracks_the_pending_tail() {
+        // Regression companion for the stranded-tail fix: an empty
+        // batcher reports no deadline (the pull loop may block), a
+        // pending tail reports a bounded wait that reaches zero once
+        // overdue, and a flush resets to "no deadline".
+        let mut b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_size: 100,
+            max_delay: Duration::from_millis(5),
+        });
+        assert!(b.time_until_deadline().is_none());
+        b.push(7);
+        let wait = b.time_until_deadline().expect("tail pending");
+        assert!(wait <= Duration::from_millis(5));
+        std::thread::sleep(Duration::from_millis(7));
+        assert_eq!(b.time_until_deadline(), Some(Duration::ZERO));
+        assert_eq!(b.poll_deadline().unwrap().packets, vec![7]);
+        assert!(b.time_until_deadline().is_none());
+    }
+
+    #[test]
+    fn batches_generic_items() {
+        // The sharded streaming path batches (sequence, frame) pairs.
+        let mut b: Batcher<(u64, Vec<u8>)> =
+            Batcher::new(BatchPolicy { max_size: 2, max_delay: Duration::from_secs(1) });
+        assert!(b.push((0, vec![1])).is_none());
+        let batch = b.push((1, vec![2])).unwrap();
+        assert_eq!(batch.packets.len(), 2);
+        assert_eq!(batch.packets[1].0, 1);
     }
 }

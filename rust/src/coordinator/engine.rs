@@ -89,8 +89,11 @@ pub struct EngineReport {
     pub model_version: u64,
 }
 
-/// Where an engine's workers get their program from.
-enum EngineSource {
+/// Where an engine's workers get their program from. Shared with the
+/// sharded serving tier ([`super::shard`]), whose per-shard workers do
+/// the same per-batch version peek / rebuild dance.
+#[derive(Clone)]
+pub(crate) enum EngineSource {
     /// Fixed compiled model (the low-level [`Engine::new`] path).
     Static {
         compiled: Arc<CompiledModel>,
@@ -108,7 +111,7 @@ enum EngineSource {
 impl EngineSource {
     /// Current publication version (0 for the fixed-program path, whose
     /// program can never change).
-    fn version(&self) -> u64 {
+    pub(crate) fn version(&self) -> u64 {
         match self {
             EngineSource::Static { .. } => 0,
             EngineSource::Slot { slot, .. } => slot.version(),
@@ -116,7 +119,7 @@ impl EngineSource {
     }
 
     /// Snapshot of the currently published program.
-    fn compiled(&self) -> Arc<CompiledModel> {
+    pub(crate) fn compiled(&self) -> Arc<CompiledModel> {
         match self {
             EngineSource::Static { compiled, .. } => Arc::clone(compiled),
             EngineSource::Slot { slot, .. } => Arc::clone(&slot.load().0.compiled),
@@ -125,7 +128,10 @@ impl EngineSource {
 
     /// Build a worker backend from the current program; returns the
     /// version it was built from.
-    fn backend(&self, kind: BackendKind) -> Result<(Box<dyn InferenceBackend>, u64)> {
+    pub(crate) fn backend(
+        &self,
+        kind: BackendKind,
+    ) -> Result<(Box<dyn InferenceBackend>, u64)> {
         match self {
             EngineSource::Static { compiled, model } => {
                 Ok((make_backend(kind, compiled, model.as_ref())?, 0))
@@ -135,6 +141,27 @@ impl EngineSource {
                 Ok((backend_for_artifact(kind, &artifact, lut.as_ref())?, version))
             }
         }
+    }
+
+    /// Per-batch hot-swap pickup, shared by the engine and shard
+    /// workers so the publication protocol lives in one place: one
+    /// atomic version peek; on change, fold the retiring backend's
+    /// parse-error count into `retired_errs` and rebuild from the
+    /// freshly published artifact.
+    pub(crate) fn refresh(
+        &self,
+        kind: BackendKind,
+        backend: &mut Box<dyn InferenceBackend>,
+        version: &mut u64,
+        retired_errs: &mut u64,
+    ) -> Result<()> {
+        if self.version() != *version {
+            *retired_errs += backend.stats().parse_errors;
+            let (fresh, v) = self.backend(kind)?;
+            *backend = fresh;
+            *version = v;
+        }
+        Ok(())
     }
 }
 
@@ -259,18 +286,22 @@ impl Engine {
                     let mut out_buf = Vec::new();
                     let mut retired_errs = 0u64;
                     // Offline trace: the whole shard is already here, so
-                    // batches are size-bounded chunks pulled zero-copy
-                    // (the deadline half of [`BatchPolicy`] only matters
-                    // for streaming ingest through [`super::Batcher`]).
+                    // batches are size-bounded chunks pulled zero-copy —
+                    // the final chunk is yielded by `chunks` itself, so
+                    // this loop cannot strand a sub-`max_size` tail. The
+                    // deadline half of [`BatchPolicy`] matters only for
+                    // streaming ingest, where the pull loop must bound
+                    // its wait by `Batcher::time_until_deadline` (see
+                    // [`super::shard::ShardedStream`]).
                     for idxs in shard.chunks(policy.max_size.max(1)) {
                         // Hot-swap pickup: one atomic version peek per
                         // batch; rebuild only when a swap was published.
-                        if source.version() != version {
-                            retired_errs += backend.stats().parse_errors;
-                            let (fresh, v) = source.backend(kind)?;
-                            backend = fresh;
-                            version = v;
-                        }
+                        source.refresh(
+                            kind,
+                            &mut backend,
+                            &mut version,
+                            &mut retired_errs,
+                        )?;
                         metrics.packets_in.add(idxs.len() as u64);
                         Self::drain_batch(
                             backend.as_mut(),

@@ -6,15 +6,26 @@
 //! for a CPU-bound cycle-level simulator this is the faithful design
 //! anyway: one OS thread per simulated pipeline, no I/O waits to hide.
 //!
-//! * [`batcher`] — size/deadline batching of an incoming packet stream.
+//! * [`batcher`] — size/deadline batching of an incoming item stream
+//!   (generic: owned frames offline, `(sequence, frame)` pairs on the
+//!   sharded streaming path).
 //! * [`engine`]  — multi-worker engine: each worker owns one
-//!   [`crate::backend::InferenceBackend`] (scalar pipeline, batched SoA
-//!   tape, or reference forward), pulls [`Batch`]es, and calls
+//!   [`crate::backend::InferenceBackend`], pulls [`Batch`]es, and calls
 //!   `run_batch`; a router shards packets (round-robin or by bounds-
 //!   checked flow key) across workers; metrics via [`crate::telemetry`].
+//! * [`shard`]   — the scaled-out serving tier (DESIGN.md §12): an
+//!   RSS-style dispatcher flow-hashes frames across N per-shard
+//!   backends behind bounded queues with explicit backpressure/drop
+//!   accounting; [`ShardedReport`] merges per-shard stats and surfaces
+//!   hot-swap version skew.
 
 pub mod batcher;
 pub mod engine;
+pub mod shard;
 
 pub use batcher::{Batch, Batcher, BatchPolicy};
 pub use engine::{Engine, EngineConfig, EngineReport, RouterPolicy};
+pub use shard::{
+    OverflowPolicy, ShardConfig, ShardStats, ShardedEngine, ShardedReport,
+    ShardedStream,
+};

@@ -1,0 +1,824 @@
+//! Sharded flow-affinity serving tier (DESIGN.md §12).
+//!
+//! N2Net's pitch is line-rate inference; one software engine cannot
+//! emulate that, so this layer scales out the way a rack does: an
+//! RSS-style dispatcher flow-hashes every frame (bounds-checked
+//! [`crate::net::packet::parse_flow_key`] / [`flow_hash`] — same flow,
+//! same shard, always) across N per-shard serving lanes. Each shard
+//! owns its own [`InferenceBackend`], its own [`Batcher`], and a
+//! bounded SPSC-style queue in front of it; the dispatcher is the
+//! single producer, the shard worker the single consumer.
+//!
+//! Overload is explicit, never silent: [`OverflowPolicy::Block`]
+//! applies backpressure to the producer (counted per shard as
+//! `backpressure_waits`), [`OverflowPolicy::Drop`] sheds the frame at
+//! the full queue (counted per shard as `dropped`; the packet's output
+//! word stays 0, exactly what a switch that tail-drops would deliver).
+//!
+//! Hot-swaps ([`crate::deploy::Deployment::swap_model`]) are picked up
+//! per shard at batch boundaries — one atomic version peek, same
+//! protocol as [`super::Engine`] — so during a swap different shards
+//! may briefly serve different versions. [`ShardedReport`] surfaces
+//! that skew (`version_min..version_max`) instead of hiding it.
+//!
+//! Because every shard worker pulls from a queue that can stall
+//! mid-stream, the worker loop bounds its wait by
+//! [`Batcher::time_until_deadline`] and flushes via `poll_deadline` on
+//! timeout — without that, a sub-`max_size` tail would sit stranded
+//! until the stream closed (the stranded-tail bug; regression test
+//! below).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::backend::{BackendKind, InferenceBackend};
+use crate::baseline::LutClassifier;
+use crate::bnn::BnnModel;
+use crate::compiler::CompiledModel;
+use crate::deploy::ModelSlot;
+use crate::error::{Error, Result};
+use crate::net::packet::flow_hash;
+use crate::telemetry::EngineMetrics;
+
+use super::batcher::{Batch, Batcher, BatchPolicy};
+use super::engine::EngineSource;
+
+/// How the dispatcher behaves when a shard's queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// Backpressure: the producer waits for the shard to drain
+    /// (lossless — the default, and what the bit-exactness properties
+    /// assume).
+    Block,
+    /// Shed load: the frame is dropped at the full queue and its output
+    /// word stays 0 (the tail-drop a real ingress would do).
+    Drop,
+}
+
+/// Sharded-serving configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// Number of serving shards (≥1).
+    pub n_shards: usize,
+    /// Per-shard queue bound, in frames.
+    pub queue_capacity: usize,
+    pub overflow: OverflowPolicy,
+    /// Which [`InferenceBackend`] each shard drives.
+    pub backend: BackendKind,
+    /// Batch formation policy for each shard's pull loop.
+    pub batch: BatchPolicy,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self {
+            n_shards: std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(4),
+            queue_capacity: 4096,
+            overflow: OverflowPolicy::Block,
+            backend: BackendKind::default(),
+            batch: BatchPolicy::default(),
+        }
+    }
+}
+
+/// Per-shard serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Frames delivered to (and classified by) this shard.
+    pub packets: u64,
+    /// Batches the shard's backend executed.
+    pub batches: u64,
+    pub parse_errors: u64,
+    /// Frames shed at this shard's full queue ([`OverflowPolicy::Drop`]).
+    pub dropped: u64,
+    /// Times the dispatcher had to wait on this shard's full queue
+    /// ([`OverflowPolicy::Block`]).
+    pub backpressure_waits: u64,
+    /// Publication version this shard last served.
+    pub model_version: u64,
+}
+
+/// Merged result of a sharded run: aggregate stats plus the per-shard
+/// breakdown (imbalance and hot-swap version skew stay visible).
+#[derive(Clone, Debug)]
+pub struct ShardedReport {
+    /// Output word per input frame, in ingest order; 0 for malformed or
+    /// dropped frames.
+    pub outputs: Vec<u32>,
+    pub n_packets: usize,
+    /// Aggregate host wall-clock packets/second.
+    pub sim_pps: f64,
+    /// What one modeled ASIC would do (line rate / passes).
+    pub modeled_pps: f64,
+    pub parse_errors: u64,
+    /// Total frames shed across all shards.
+    pub dropped: u64,
+    pub backend: &'static str,
+    pub per_shard: Vec<ShardStats>,
+    /// Lowest / highest publication version any shard last served —
+    /// equal except transiently during a hot-swap.
+    pub version_min: u64,
+    pub version_max: u64,
+}
+
+impl ShardedReport {
+    /// max/mean shard load (1.0 = perfectly balanced; a zipf heavy
+    /// hitter pushes this up under flow-affinity dispatch).
+    pub fn imbalance(&self) -> f64 {
+        let mean = self.per_shard.iter().map(|s| s.packets).sum::<u64>() as f64
+            / self.per_shard.len().max(1) as f64;
+        let max = self.per_shard.iter().map(|s| s.packets).max().unwrap_or(0) as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            0.0
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "sharded serve: {} packets over {} shards ({} backend) — \
+             {:.2} M pkt/s aggregate (modeled ASIC {:.0} M/s per chip)\n\
+             parse_errors={} dropped={} imbalance={:.2} versions=v{}..v{}\n",
+            self.n_packets,
+            self.per_shard.len(),
+            self.backend,
+            self.sim_pps / 1e6,
+            self.modeled_pps / 1e6,
+            self.parse_errors,
+            self.dropped,
+            self.imbalance(),
+            self.version_min,
+            self.version_max,
+        );
+        for st in &self.per_shard {
+            s.push_str(&format!(
+                "  shard {}: packets={} batches={} parse_errors={} dropped={} \
+                 waits={} v{}\n",
+                st.shard,
+                st.packets,
+                st.batches,
+                st.parse_errors,
+                st.dropped,
+                st.backpressure_waits,
+                st.model_version,
+            ));
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bounded SPSC-style queue (std-only: Mutex + two Condvars)
+// ---------------------------------------------------------------------------
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded queue between the dispatcher (single producer) and one shard
+/// worker (single consumer). `pop_timeout` keeps returning buffered
+/// items after `close`, reporting `Closed` only once drained — the
+/// worker never loses the tail.
+struct ShardQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+enum Pop<T> {
+    Item(T),
+    TimedOut,
+    Closed,
+}
+
+impl<T> ShardQueue<T> {
+    fn new(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Blocking push (backpressure). Returns `(pushed, had_to_wait)`;
+    /// `pushed` is false only when the queue was closed under us (a
+    /// worker that died closes its own queue so the producer cannot
+    /// deadlock against a consumer that will never drain).
+    fn push_blocking(&self, item: T) -> (bool, bool) {
+        let mut waited = false;
+        let mut st = self.state.lock().expect("shard queue poisoned");
+        loop {
+            if st.closed {
+                return (false, waited);
+            }
+            if st.items.len() < self.capacity {
+                st.items.push_back(item);
+                drop(st);
+                self.not_empty.notify_one();
+                return (true, waited);
+            }
+            waited = true;
+            st = self.not_full.wait(st).expect("shard queue poisoned");
+        }
+    }
+
+    /// Non-blocking push; `false` when full or closed (the caller sheds
+    /// the frame).
+    fn try_push(&self, item: T) -> bool {
+        let mut st = self.state.lock().expect("shard queue poisoned");
+        if st.closed || st.items.len() >= self.capacity {
+            return false;
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Pop with a bounded wait. Buffered items drain even after close.
+    /// The bound is a fixed deadline, not a per-wait timeout: a
+    /// spurious (or racing) wakeup re-waits only the *remaining* time,
+    /// so a caller waiting out a batch deadline is never stretched past
+    /// it.
+    fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().expect("shard queue poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Pop::Item(item);
+            }
+            if st.closed {
+                return Pop::Closed;
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Pop::TimedOut;
+            }
+            let (guard, _) = self
+                .not_empty
+                .wait_timeout(st, remaining)
+                .expect("shard queue poisoned");
+            st = guard;
+        }
+    }
+
+    /// Close the queue: no further pushes; pops drain then see `Closed`.
+    fn close(&self) {
+        let mut st = self.state.lock().expect("shard queue poisoned");
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Closes a queue when dropped. Each worker thread holds one so its
+/// queue closes on ANY exit — normal return, error, or panic — because
+/// a Block-policy producer must never be left waiting on a consumer
+/// that is gone.
+struct CloseOnDrop<'a, T>(&'a ShardQueue<T>);
+
+impl<T> Drop for CloseOnDrop<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded engine + streaming handle
+// ---------------------------------------------------------------------------
+
+/// The sharded serving tier: a program source fanned out over N
+/// queue-fed shards. Constructed low-level over a fixed
+/// [`CompiledModel`] or — the canonical path — by
+/// [`crate::deploy::Deployment::sharded_engine`] over a publication
+/// slot (hot-swaps picked up per shard at batch boundaries).
+pub struct ShardedEngine {
+    source: EngineSource,
+    config: ShardConfig,
+    pub metrics: Arc<EngineMetrics>,
+}
+
+/// What one shard worker hands back at join time.
+struct WorkerResult {
+    shard: usize,
+    /// (ingest sequence, output word) pairs, scatter-merged at finish.
+    outputs: Vec<(u64, u32)>,
+    packets: u64,
+    batches: u64,
+    parse_errors: u64,
+    model_version: u64,
+}
+
+impl ShardedEngine {
+    /// Low-level constructor over a fixed compiled model (tests,
+    /// simulator-internals work). Prefer
+    /// [`crate::deploy::Deployment::sharded_engine`].
+    pub fn new(compiled: CompiledModel, config: ShardConfig) -> Self {
+        Self {
+            source: EngineSource::Static { compiled: Arc::new(compiled), model: None },
+            config,
+            metrics: Arc::new(EngineMetrics::default()),
+        }
+    }
+
+    /// Attach the source model (enables the `reference` backend on the
+    /// low-level path).
+    pub fn with_model(mut self, model: BnnModel) -> Self {
+        if let EngineSource::Static { model: m, .. } = &mut self.source {
+            *m = Some(Arc::new(model));
+        }
+        self
+    }
+
+    /// Sharded engine over a deployment publication slot. Constructed
+    /// by [`crate::deploy::Deployment::sharded_engine`].
+    pub fn from_slot(
+        slot: Arc<ModelSlot>,
+        lut: Option<Arc<LutClassifier>>,
+        config: ShardConfig,
+    ) -> Self {
+        Self {
+            source: EngineSource::Slot { slot, lut },
+            config,
+            metrics: Arc::new(EngineMetrics::default()),
+        }
+    }
+
+    /// Snapshot of the currently published compiled model.
+    pub fn compiled(&self) -> Arc<CompiledModel> {
+        self.source.compiled()
+    }
+
+    /// Open a streaming ingest handle: spawns the shard workers and
+    /// returns the dispatcher-side handle frames are pushed into.
+    /// Configuration errors (e.g. a backend that cannot be built)
+    /// surface here, before any frame is accepted.
+    pub fn stream(&self) -> Result<ShardedStream> {
+        let n = self.config.n_shards.max(1);
+        let compiled = self.source.compiled();
+        let modeled_pps = compiled.chip.timing(&compiled.program).pps;
+        // Build every backend up front so misconfiguration fails fast.
+        let backends: Vec<(Box<dyn InferenceBackend>, u64)> = (0..n)
+            .map(|_| self.source.backend(self.config.backend))
+            .collect::<Result<_>>()?;
+
+        let queues: Vec<Arc<ShardQueue<(u64, Vec<u8>)>>> = (0..n)
+            .map(|_| Arc::new(ShardQueue::new(self.config.queue_capacity)))
+            .collect();
+        let mut workers = Vec::with_capacity(n);
+        for (shard, (backend, version)) in backends.into_iter().enumerate() {
+            let queue = Arc::clone(&queues[shard]);
+            let source = self.source.clone();
+            let metrics = Arc::clone(&self.metrics);
+            let kind = self.config.backend;
+            let policy = self.config.batch;
+            workers.push(std::thread::spawn(move || {
+                let _close = CloseOnDrop(&*queue);
+                shard_worker(
+                    shard, &queue, &source, kind, policy, &metrics, backend, version,
+                )
+            }));
+        }
+        Ok(ShardedStream {
+            queues,
+            workers,
+            overflow: self.config.overflow,
+            backend: self.config.backend.name(),
+            modeled_pps,
+            next_seq: 0,
+            dropped: vec![0; n],
+            waits: vec![0; n],
+            started: Instant::now(),
+            metrics: Arc::clone(&self.metrics),
+        })
+    }
+
+    /// Run a whole trace through a fresh set of shard workers; outputs
+    /// preserve input order. With [`OverflowPolicy::Block`] this is
+    /// bit-exact with [`super::Engine::process_trace`] on the same
+    /// backend (`tests/prop_shard.rs`).
+    ///
+    /// Each frame is copied onto its shard's queue: the workers are
+    /// `'static` threads (the streaming API outlives any one trace), so
+    /// they cannot borrow the caller's slice the way the scoped-thread
+    /// engine does. The copy is a few dozen bytes against a ~µs
+    /// inference and is paid identically at every shard count, so
+    /// scaling ratios are unaffected.
+    pub fn process_trace(&self, packets: &[Vec<u8>]) -> Result<ShardedReport> {
+        let mut stream = self.stream()?;
+        for pkt in packets {
+            if let Err(e) = stream.push(pkt.clone()) {
+                // A shard worker died: close the surviving queues and
+                // join everyone before surfacing the failure, so no
+                // worker thread is left parked.
+                let _ = stream.finish();
+                return Err(e);
+            }
+        }
+        stream.finish()
+    }
+}
+
+/// One shard's pull loop: deadline-aware pops feeding the shard's
+/// [`Batcher`]. This is the stranded-tail fix — the wait is bounded by
+/// `time_until_deadline`, so a stalled (but open) stream still has its
+/// partial batch flushed at the `max_delay` bound instead of sitting
+/// until close.
+#[allow(clippy::too_many_arguments)]
+fn shard_worker(
+    shard: usize,
+    queue: &ShardQueue<(u64, Vec<u8>)>,
+    source: &EngineSource,
+    kind: BackendKind,
+    policy: BatchPolicy,
+    metrics: &EngineMetrics,
+    mut backend: Box<dyn InferenceBackend>,
+    mut version: u64,
+) -> Result<WorkerResult> {
+    /// Idle wait between queue peeks when no tail is pending (close is
+    /// condvar-notified, so this only bounds spurious wakeups).
+    const IDLE_WAIT: Duration = Duration::from_millis(25);
+
+    let mut outputs = Vec::new();
+    let mut out_buf = Vec::new();
+    let mut batcher: Batcher<(u64, Vec<u8>)> = Batcher::new(policy);
+    let mut packets = 0u64;
+    let mut batches = 0u64;
+    let mut retired_errs = 0u64;
+
+    let run = |batch: Batch<(u64, Vec<u8>)>,
+               backend: &mut Box<dyn InferenceBackend>,
+               version: &mut u64,
+               retired_errs: &mut u64,
+               outputs: &mut Vec<(u64, u32)>,
+               out_buf: &mut Vec<u32>|
+     -> Result<()> {
+        // Hot-swap pickup: one atomic version peek per batch (the
+        // protocol itself lives on [`EngineSource::refresh`], shared
+        // with the engine workers).
+        source.refresh(kind, backend, version, retired_errs)?;
+        let t0 = Instant::now();
+        metrics.packets_in.add(batch.packets.len() as u64);
+        let refs: Vec<&[u8]> = batch.packets.iter().map(|(_, p)| p.as_slice()).collect();
+        let errs_before = backend.stats().parse_errors;
+        backend.run_batch(&refs, out_buf)?;
+        let errs = backend.stats().parse_errors.saturating_sub(errs_before);
+        metrics.parse_errors.add(errs);
+        metrics.packets_dropped.add(errs);
+        metrics
+            .packets_classified
+            .add(refs.len() as u64 - errs.min(refs.len() as u64));
+        for (k, (seq, _)) in batch.packets.iter().enumerate() {
+            outputs.push((*seq, out_buf.get(k).copied().unwrap_or(0)));
+        }
+        metrics.batch_latency.record(t0.elapsed());
+        Ok(())
+    };
+
+    loop {
+        let wait = batcher.time_until_deadline().unwrap_or(IDLE_WAIT);
+        match queue.pop_timeout(wait) {
+            Pop::Item(item) => {
+                packets += 1;
+                if let Some(batch) = batcher.push(item) {
+                    batches += 1;
+                    run(
+                        batch,
+                        &mut backend,
+                        &mut version,
+                        &mut retired_errs,
+                        &mut outputs,
+                        &mut out_buf,
+                    )?;
+                }
+            }
+            Pop::TimedOut => {
+                if let Some(batch) = batcher.poll_deadline() {
+                    batches += 1;
+                    run(
+                        batch,
+                        &mut backend,
+                        &mut version,
+                        &mut retired_errs,
+                        &mut outputs,
+                        &mut out_buf,
+                    )?;
+                }
+            }
+            Pop::Closed => {
+                if let Some(batch) = batcher.flush() {
+                    batches += 1;
+                    run(
+                        batch,
+                        &mut backend,
+                        &mut version,
+                        &mut retired_errs,
+                        &mut outputs,
+                        &mut out_buf,
+                    )?;
+                }
+                break;
+            }
+        }
+    }
+    Ok(WorkerResult {
+        shard,
+        outputs,
+        packets,
+        batches,
+        parse_errors: retired_errs + backend.stats().parse_errors,
+        model_version: version,
+    })
+}
+
+/// Dispatcher-side streaming handle: frames pushed here are
+/// flow-hashed onto their shard's queue; [`ShardedStream::finish`]
+/// closes the queues, joins the workers, and merges the report.
+/// Dropping the handle without `finish` (an error/unwind path) closes
+/// the queues too, so the workers drain and exit instead of parking
+/// forever — but only `finish` returns their outputs.
+pub struct ShardedStream {
+    queues: Vec<Arc<ShardQueue<(u64, Vec<u8>)>>>,
+    workers: Vec<JoinHandle<Result<WorkerResult>>>,
+    overflow: OverflowPolicy,
+    backend: &'static str,
+    modeled_pps: f64,
+    /// Ingest sequence number: the output position of the next frame.
+    next_seq: u64,
+    /// Per-shard frames shed at a full queue.
+    dropped: Vec<u64>,
+    /// Per-shard producer waits on a full queue (backpressure events).
+    waits: Vec<u64>,
+    started: Instant,
+    pub metrics: Arc<EngineMetrics>,
+}
+
+impl ShardedStream {
+    /// Number of shards this stream dispatches over.
+    pub fn n_shards(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Ingest one frame. The frame's output position is its push order;
+    /// a frame shed under [`OverflowPolicy::Drop`] keeps its position
+    /// with output word 0.
+    pub fn push(&mut self, pkt: Vec<u8>) -> Result<()> {
+        let shard = (flow_hash(&pkt) % self.queues.len() as u64) as usize;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        match self.overflow {
+            OverflowPolicy::Block => {
+                let (pushed, waited) = self.queues[shard].push_blocking((seq, pkt));
+                if waited {
+                    self.waits[shard] += 1;
+                }
+                if !pushed {
+                    return Err(Error::Config(format!(
+                        "shard {shard} worker terminated; stream cannot accept frames"
+                    )));
+                }
+            }
+            OverflowPolicy::Drop => {
+                if !self.queues[shard].try_push((seq, pkt)) {
+                    self.dropped[shard] += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// End of stream: close every queue (workers drain, flush their
+    /// tails, and exit), join, and merge the per-shard results into one
+    /// report with outputs in ingest order.
+    pub fn finish(mut self) -> Result<ShardedReport> {
+        for q in &self.queues {
+            q.close();
+        }
+        let n_packets = self.next_seq as usize;
+        let mut outputs = vec![0u32; n_packets];
+        let mut per_shard: Vec<ShardStats> = (0..self.queues.len())
+            .map(|i| ShardStats {
+                shard: i,
+                dropped: self.dropped[i],
+                backpressure_waits: self.waits[i],
+                ..ShardStats::default()
+            })
+            .collect();
+        let mut parse_errors = 0u64;
+        // Join EVERY worker before surfacing a failure: the queues are
+        // closed, so survivors drain and exit; erroring out mid-join
+        // would leave them detached, still mutating the shared metrics
+        // behind the caller's back.
+        let mut first_err = None;
+        for w in std::mem::take(&mut self.workers) {
+            let r = match w.join().expect("shard worker panicked") {
+                Ok(r) => r,
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                    continue;
+                }
+            };
+            for (seq, word) in &r.outputs {
+                outputs[*seq as usize] = *word;
+            }
+            parse_errors += r.parse_errors;
+            let st = &mut per_shard[r.shard];
+            st.packets = r.packets;
+            st.batches = r.batches;
+            st.parse_errors = r.parse_errors;
+            st.model_version = r.model_version;
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let version_min = per_shard.iter().map(|s| s.model_version).min().unwrap_or(0);
+        let version_max = per_shard.iter().map(|s| s.model_version).max().unwrap_or(0);
+        Ok(ShardedReport {
+            outputs,
+            n_packets,
+            sim_pps: n_packets as f64 / elapsed.max(1e-12),
+            modeled_pps: self.modeled_pps,
+            parse_errors,
+            dropped: self.dropped.iter().sum(),
+            backend: self.backend,
+            per_shard,
+            version_min,
+            version_max,
+        })
+    }
+}
+
+impl Drop for ShardedStream {
+    fn drop(&mut self) {
+        // `finish` consumes self and has already closed these (close is
+        // idempotent); on an early drop — error return or unwind between
+        // `push` and `finish` — this is what lets the shard workers
+        // drain and exit instead of leaking, parked on their queues.
+        for q in &self.queues {
+            q.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{self, BnnModel, PackedBits};
+    use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
+    use crate::net::packet::{PacketBuilder, IPV4_SRC_OFFSET};
+    use crate::net::{TraceGenerator, TraceKind};
+    use crate::rmt::ChipConfig;
+
+    fn compiled_for(model: &BnnModel) -> CompiledModel {
+        let opts = CompilerOptions {
+            input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
+            ..Default::default()
+        };
+        Compiler::new(ChipConfig::rmt(), opts).compile(model).unwrap()
+    }
+
+    #[test]
+    fn sharded_outputs_preserve_order_and_match_reference() {
+        let model = BnnModel::random(32, &[16, 1], 51);
+        for n_shards in [1usize, 3] {
+            let engine = ShardedEngine::new(
+                compiled_for(&model),
+                ShardConfig { n_shards, ..ShardConfig::default() },
+            );
+            let mut gen = TraceGenerator::new(23);
+            let trace = gen.generate(&TraceKind::UniformIps, 300);
+            let report = engine.process_trace(&trace.packets).unwrap();
+            assert_eq!(report.outputs.len(), 300);
+            assert_eq!(report.per_shard.len(), n_shards);
+            assert_eq!(report.dropped, 0, "Block policy never sheds");
+            assert_eq!(
+                report.per_shard.iter().map(|s| s.packets).sum::<u64>(),
+                300
+            );
+            for (i, &key) in trace.keys.iter().enumerate() {
+                let expect =
+                    bnn::forward(&model, &PackedBits::from_u32(key)).get(0) as u32;
+                assert_eq!(report.outputs[i], expect, "{n_shards} shards pkt {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn flow_affinity_is_per_shard_stable() {
+        // Every frame of one flow lands on the same shard: with a
+        // single-flow trace, exactly one shard sees packets.
+        let model = BnnModel::random(32, &[16], 52);
+        let engine = ShardedEngine::new(
+            compiled_for(&model),
+            ShardConfig { n_shards: 4, ..ShardConfig::default() },
+        );
+        let packets: Vec<Vec<u8>> = (0..64)
+            .map(|i| {
+                PacketBuilder::default()
+                    .src_ip(0x0A000001)
+                    .build_activations(&[i as u32])
+            })
+            .collect();
+        let report = engine.process_trace(&packets).unwrap();
+        let loaded: Vec<&ShardStats> =
+            report.per_shard.iter().filter(|s| s.packets > 0).collect();
+        assert_eq!(loaded.len(), 1, "one flow, one shard");
+        assert_eq!(loaded[0].packets, 64);
+    }
+
+    #[test]
+    fn drop_policy_sheds_with_exact_accounting() {
+        let model = BnnModel::random(32, &[16], 53);
+        let engine = ShardedEngine::new(
+            compiled_for(&model),
+            ShardConfig {
+                n_shards: 2,
+                queue_capacity: 1,
+                overflow: OverflowPolicy::Drop,
+                // A 1-frame queue against a fast producer makes drops
+                // likely, but none are guaranteed on any particular run
+                // — the accounting identity is what's asserted.
+                ..ShardConfig::default()
+            },
+        );
+        let mut gen = TraceGenerator::new(29);
+        let trace = gen.generate(&TraceKind::UniformIps, 2000);
+        let report = engine.process_trace(&trace.packets).unwrap();
+        assert_eq!(report.outputs.len(), 2000);
+        let delivered: u64 = report.per_shard.iter().map(|s| s.packets).sum();
+        assert_eq!(
+            delivered + report.dropped,
+            2000,
+            "every frame is either delivered or counted as shed"
+        );
+        assert_eq!(
+            report.dropped,
+            report.per_shard.iter().map(|s| s.dropped).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn stalled_stream_flushes_partial_batch_by_deadline() {
+        // Regression (ISSUE 3 satellite): a worker loop that only wakes
+        // on new items strands a sub-`max_size` tail while the stream
+        // stalls. The deadline-aware pull loop must classify the tail
+        // within ~max_delay even though the stream stays open.
+        let model = BnnModel::random(32, &[16], 54);
+        let engine = ShardedEngine::new(
+            compiled_for(&model),
+            ShardConfig {
+                n_shards: 2,
+                batch: BatchPolicy {
+                    max_size: 64,
+                    max_delay: Duration::from_millis(5),
+                },
+                ..ShardConfig::default()
+            },
+        );
+        let mut stream = engine.stream().unwrap();
+        let mut gen = TraceGenerator::new(31);
+        let trace = gen.generate(&TraceKind::UniformIps, 5);
+        for pkt in &trace.packets {
+            stream.push(pkt.clone()).unwrap();
+        }
+        // The stream now stalls below max_size, without closing.
+        let t0 = Instant::now();
+        while engine.metrics.packets_classified.get() < 5 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "stranded tail: {} of 5 classified while the stream stalls",
+                engine.metrics.packets_classified.get()
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let report = stream.finish().unwrap();
+        assert_eq!(report.n_packets, 5);
+        assert_eq!(report.per_shard.iter().map(|s| s.packets).sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn version_skew_fields_are_sane_on_the_static_path() {
+        let model = BnnModel::random(32, &[16], 55);
+        let engine = ShardedEngine::new(compiled_for(&model), ShardConfig::default());
+        let mut gen = TraceGenerator::new(37);
+        let trace = gen.generate(&TraceKind::UniformIps, 100);
+        let report = engine.process_trace(&trace.packets).unwrap();
+        // Fixed-program source: every shard serves version 0, no skew.
+        assert_eq!((report.version_min, report.version_max), (0, 0));
+        assert!(report.render().contains("shard 0"));
+        assert!(report.imbalance() >= 1.0);
+    }
+}

@@ -22,9 +22,13 @@
 //!
 //! Input extraction is typed ([`FieldExtractor`]) instead of raw byte
 //! offsets, and classification goes through [`Session`] /
-//! [`KeyedSession`] handles (single-threaded, one per worker) or the
+//! [`KeyedSession`] handles (single-threaded, one per worker), the
 //! multi-worker [`Engine`](crate::coordinator::Engine) via
-//! [`Deployment::engine`].
+//! [`Deployment::engine`], or the sharded flow-affinity tier via
+//! [`Deployment::sharded_engine`] (DESIGN.md §12) — N queue-fed
+//! backends behind an RSS-style dispatcher, with a streaming ingest
+//! handle ([`crate::coordinator::ShardedStream`]) and explicit
+//! backpressure/drop accounting.
 //!
 //! Below this sits the low-level layer — [`crate::backend::make_backend`],
 //! [`Engine::new`](crate::coordinator::Engine::new), raw
@@ -50,7 +54,10 @@ use crate::bnn::BnnModel;
 use crate::compiler::{
     CompiledModel, Compiler, CompilerOptions, MultiModelOptions,
 };
-use crate::coordinator::{BatchPolicy, Engine, EngineConfig, EngineReport, RouterPolicy};
+use crate::coordinator::{
+    BatchPolicy, Engine, EngineConfig, EngineReport, RouterPolicy, ShardConfig,
+    ShardedEngine, ShardedReport,
+};
 use crate::error::{Error, Result};
 use crate::rmt::ChipConfig;
 
@@ -301,6 +308,67 @@ impl Deployment {
             self.lut.clone(),
             self.engine_config(),
         ))
+    }
+
+    fn shard_config(&self, n_shards: usize) -> ShardConfig {
+        ShardConfig {
+            n_shards: n_shards.max(1),
+            backend: self.backend,
+            batch: self.batch,
+            ..ShardConfig::default()
+        }
+    }
+
+    /// The sharded serving tier over `name`'s publication slot
+    /// (DESIGN.md §12): an RSS-style dispatcher flow-hashes frames
+    /// across `n_shards` queue-fed backends; call
+    /// [`ShardedEngine::stream`] for the streaming ingest handle or
+    /// [`ShardedEngine::process_trace`] for whole traces. Hot-swaps are
+    /// picked up per shard at batch boundaries; the merged report
+    /// surfaces any transient version skew.
+    pub fn sharded_engine(&self, name: &str, n_shards: usize) -> Result<ShardedEngine> {
+        if self.is_keyed() {
+            return Err(Error::Config(
+                "keyed deployment serves all models from one program: \
+                 use sharded_engine_keyed()"
+                    .into(),
+            ));
+        }
+        let entry = self.entry(name)?;
+        Ok(ShardedEngine::from_slot(
+            self.slot_for(entry),
+            self.lut.clone(),
+            self.shard_config(n_shards),
+        ))
+    }
+
+    /// The sharded serving tier over the shared keyed-table program.
+    /// Every shard can serve every tenant (the keyed tables ride in the
+    /// program, not in the shard), so flow affinity never constrains
+    /// which models a shard hosts.
+    pub fn sharded_engine_keyed(&self, n_shards: usize) -> Result<ShardedEngine> {
+        Self::check_keyed_backend(self.backend)?;
+        let keyed = self.keyed.as_ref().ok_or_else(|| {
+            Error::Config(
+                "not a keyed deployment: enable with builder.keyed(id_offset)"
+                    .into(),
+            )
+        })?;
+        Ok(ShardedEngine::from_slot(
+            Arc::clone(&keyed.slot),
+            self.lut.clone(),
+            self.shard_config(n_shards),
+        ))
+    }
+
+    /// Serve a whole trace through a fresh sharded engine.
+    pub fn serve_trace_sharded(
+        &self,
+        name: &str,
+        n_shards: usize,
+        packets: &[Vec<u8>],
+    ) -> Result<ShardedReport> {
+        self.sharded_engine(name, n_shards)?.process_trace(packets)
     }
 
     /// Serve a whole trace through a fresh multi-worker engine.
@@ -775,6 +843,66 @@ mod tests {
             .model("a", m.clone())
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn keyed_malformed_packets_attribute_to_default_not_tenant() {
+        // Regression (ISSUE 3 satellite): a truncated frame can carry a
+        // perfectly legible tenant id and still be a parse-error lane
+        // (the activations are cut off). The pipeline serves it as
+        // output 0 — no tenant's weights ran — so the traffic counter
+        // must go to the default model, not the id's tenant.
+        let m_default = BnnModel::random(32, &[16], 91);
+        let m_b = BnnModel::random(32, &[16], 92);
+        let dep = Deployment::builder()
+            .extractor(FieldExtractor::PayloadAt { offset: 4 })
+            .keyed(0)
+            .model_with_id("default", 1, m_default)
+            .model_with_id("b", 2, m_b)
+            .build()
+            .unwrap();
+        let mut session = dep.keyed_session().unwrap();
+        // [id u32 LE][activation u32 LE] — 8 bytes parse, 6 don't.
+        let mut good = 2u32.to_le_bytes().to_vec();
+        good.extend_from_slice(&0xDEADBEEFu32.to_le_bytes());
+        let mut bad = 2u32.to_le_bytes().to_vec();
+        bad.extend_from_slice(&[0xAA, 0xBB]); // tenant-b id, truncated body
+        let refs: Vec<&[u8]> = vec![&good, &bad];
+        let mut out = Vec::new();
+        session.classify_batch(&refs, &mut out).unwrap();
+        assert_eq!(out[1], 0, "parse-error lane classifies as 0");
+        let b = dep.stats("b").unwrap();
+        assert_eq!(b.packets, 1, "only the parseable frame is tenant-b traffic");
+        assert_eq!(b.parse_errors, 0);
+        let d = dep.stats("default").unwrap();
+        assert_eq!(d.packets, 1, "the malformed frame attributes to the default");
+        assert_eq!(d.parse_errors, 1);
+    }
+
+    #[test]
+    fn sharded_engine_matches_the_engine_and_is_mode_checked() {
+        let model = BnnModel::random(32, &[16, 1], 93);
+        let dep = deployment_for(&model, BackendKind::Batched);
+        let mut gen = TraceGenerator::new(94);
+        let trace = gen.generate(&TraceKind::UniformIps, 200);
+        let engine_out = dep.serve_trace("m", &trace.packets).unwrap().outputs;
+        let report = dep.serve_trace_sharded("m", 3, &trace.packets).unwrap();
+        assert_eq!(report.outputs, engine_out, "sharded ≡ single-engine");
+        assert_eq!(report.version_min, 1);
+        assert_eq!(report.version_max, 1);
+        assert_eq!(report.dropped, 0);
+        assert!(dep.sharded_engine("nope", 2).is_err());
+
+        let keyed = Deployment::builder()
+            .extractor(FieldExtractor::PayloadAt { offset: 4 })
+            .keyed(0)
+            .model("a", BnnModel::random(32, &[16], 95))
+            .model("b", BnnModel::random(32, &[16], 96))
+            .build()
+            .unwrap();
+        assert!(keyed.sharded_engine("a", 2).is_err(), "keyed mode check");
+        assert!(keyed.sharded_engine_keyed(2).is_ok());
+        assert!(dep.sharded_engine_keyed(2).is_err(), "isolated mode check");
     }
 
     #[test]

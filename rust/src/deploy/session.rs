@@ -186,11 +186,24 @@ impl Session {
 /// deployment: one program serves every model, a packet header field
 /// selects the weights per packet. Attribution of per-model packet
 /// counters happens here by parsing the same id field the pipeline
-/// matches on (an unknown id attributes to the default model, matching
-/// the table-miss semantics).
+/// matches on, with the pipeline's own parse semantics: a frame the
+/// published program cannot fully parse is a parse-error lane (output
+/// 0, served by no tenant's weights), so it attributes to the default
+/// model even when a legible tenant id happens to sit at `id_offset` —
+/// a truncated frame must never inflate a tenant's traffic counters.
+/// An unknown id likewise attributes to the default model, matching the
+/// table-miss semantics.
 pub struct KeyedSession {
     session: Session,
     id_offset: usize,
+    /// Shortest frame the published program parses; anything shorter is
+    /// a parse-error lane. The parser's extracts are the only parse
+    /// failure mode, and each is a pure length check, so this threshold
+    /// is exact, not a heuristic — and it is fixed for the deployment's
+    /// lifetime: hot-swaps reject architecture changes, and the parser
+    /// is a pure function of the architecture plus the (fixed)
+    /// extractor and id layout.
+    min_frame_len: usize,
     /// (model id, counters) in registration order; index 0 = default.
     by_id: Vec<(u32, Arc<ModelCounters>)>,
 }
@@ -203,15 +216,25 @@ impl KeyedSession {
         id_offset: usize,
         by_id: Vec<(u32, Arc<ModelCounters>)>,
     ) -> Result<Self> {
+        let min_frame_len = slot.load().0.compiled.parser.min_packet_len();
         Ok(Self {
             session: Session::open(slot, kind, lut, None)?,
             id_offset,
+            min_frame_len,
             by_id,
         })
     }
 
     fn counters_index(&self, pkt: &[u8]) -> usize {
-        pkt.get(self.id_offset..self.id_offset + 4)
+        // Parse-error lanes (frames the program cannot parse) belong to
+        // the default model regardless of what bytes sit where the id
+        // would be.
+        if pkt.len() < self.min_frame_len {
+            return 0;
+        }
+        self.id_offset
+            .checked_add(4)
+            .and_then(|end| pkt.get(self.id_offset..end))
             .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .and_then(|id| self.by_id.iter().position(|(k, _)| *k == id))
             .unwrap_or(0)

@@ -21,7 +21,9 @@
 //! * [`bnn`] — bit-packed BNN substrate: tensors, a trusted reference
 //!   forward pass, and weight loading from the JAX training pipeline.
 //! * [`net`] — packet substrate: Ethernet/IPv4/UDP headers, the N2Net
-//!   activation encoding, and workload/trace generators.
+//!   activation encoding, workload/trace generators, and the named
+//!   scenario suite ([`net::Scenario`]: uniform, zipf-heavy-hitter,
+//!   ddos-burst, flowlet-churn, multi-tenant-mix, malformed-fuzz).
 //! * [`apps`] — the paper's use cases: DDoS white/blacklisting and
 //!   load-balancing hints.
 //! * [`baseline`] — what the paper argues against: exact-match lookup
@@ -38,7 +40,10 @@
 //!   [`deploy::FieldExtractor`]s, [`deploy::Session`] classify handles,
 //!   and RCU-style runtime hot-swap with a version counter.
 //! * [`coordinator`] — the L3 serving loop: packet engine, batching,
-//!   stats; workers pull batches and drive an [`backend::InferenceBackend`].
+//!   stats; workers pull batches and drive an
+//!   [`backend::InferenceBackend`]; the sharded flow-affinity tier
+//!   ([`coordinator::ShardedEngine`]) scales serving across queue-fed
+//!   shards with explicit backpressure/drop accounting.
 //! * [`analysis`] — throughput / chip-area models behind the paper's
 //!   §2-Evaluation and §3-Challenges numbers.
 //!

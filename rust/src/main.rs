@@ -16,6 +16,8 @@
 //! n2net serve   [--packets N] [--workers W] [--router flow|rr]
 //!               [--backend scalar|batched|reference|lut] [--batch-size B]
 //!               [--models a.json,b.json] [--extract F]
+//!               [--shards S] [--scenario uniform|zipf-heavy-hitter|
+//!                ddos-burst|flowlet-churn|multi-tenant-mix|malformed-fuzz]
 //! n2net swap    [--packets N] [--swaps K] [--seed S]
 //!               [--backend scalar|batched|reference]
 //! n2net selftest [--artifacts DIR]
@@ -30,7 +32,8 @@ use n2net::bnn::{self, BnnModel, PackedBits};
 use n2net::compiler::{p4gen, render_table1, Compiler, CompilerOptions};
 use n2net::coordinator::{BatchPolicy, RouterPolicy};
 use n2net::deploy::{Deployment, DeploymentBuilder, FieldExtractor};
-use n2net::net::{TraceGenerator, TraceKind, N2NET_PAYLOAD_OFFSET};
+use n2net::bnn::io::DdosDoc;
+use n2net::net::{Scenario, TraceGenerator, TraceKind, MODEL_ID_OFFSET};
 use n2net::rmt::ChipConfig;
 use n2net::runtime::Oracle;
 use n2net::util::cli::Args;
@@ -38,6 +41,7 @@ use n2net::util::cli::Args;
 const VALUE_OPTS: &[&str] = &[
     "in-bits", "layers", "seed", "packets", "workers", "router", "artifacts",
     "p4", "steps", "backend", "batch-size", "models", "extract", "swaps",
+    "shards", "scenario",
 ];
 
 fn main() {
@@ -346,12 +350,22 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 
 // ---------------------------------------------------------------------------
 // serve — sustained engine run with metrics; several --models entries
-// deploy a keyed-table multi-model program
+// deploy a keyed-table multi-model program; --shards N serves through
+// the flow-affinity sharded tier; --scenario picks a named workload
 // ---------------------------------------------------------------------------
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let n = args.opt_usize("packets", 100_000)?;
     let seed = args.opt_u64("seed", 3)?;
+    let shards = args.opt_usize("shards", 0)?;
+    let scenario = match args.opt("scenario") {
+        None => None,
+        Some(s) => Some(Scenario::parse(s)?),
+    };
+    // An explicitly passed --models path must hard-fail on a load
+    // error; only the implicit default artifacts path falls back to a
+    // synthetic model.
+    let explicit = args.opt("models").is_some();
     let paths: Vec<String> = match args.opt("models") {
         Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
         None => vec![artifacts_dir(args)
@@ -360,24 +374,71 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .into_owned()],
     };
     ensure!(!paths.is_empty(), "--models needs at least one path");
-    if paths.len() == 1 {
-        return serve_single(args, &paths[0], n, seed);
+    // The multi-tenant scenario needs the keyed registry even with one
+    // --models entry.
+    if paths.len() > 1 || matches!(scenario, Some(Scenario::MultiTenantMix { .. })) {
+        serve_keyed(args, &paths, n, seed, shards, scenario, explicit)
+    } else {
+        serve_single(args, &paths[0], n, seed, shards, scenario, explicit)
     }
-    serve_keyed(args, &paths, n, seed)
 }
 
-fn serve_single(args: &Args, path: &str, n: usize, seed: u64) -> anyhow::Result<()> {
-    let (model, doc) = bnn::load_weights(path)?;
+/// Load trained weights. An `explicit` (user-supplied `--models`) path
+/// propagates load errors; the implicit default artifacts path falls
+/// back to a seeded synthetic model (and the scenario module's
+/// synthetic blacklist) so scenario/shard exploration does not require
+/// `make artifacts`.
+fn load_weights_or_synthetic(
+    path: &str,
+    seed: u64,
+    explicit: bool,
+) -> anyhow::Result<(BnnModel, DdosDoc)> {
+    match bnn::load_weights(path) {
+        Ok((model, doc)) => Ok((model, doc.ddos)),
+        Err(e) if explicit => {
+            Err(e).with_context(|| format!("loading --models entry {path:?}"))
+        }
+        Err(e) => {
+            eprintln!(
+                "note: {path}: {e}\n\
+                 note: serving a synthetic 32b -> [64, 32] model instead \
+                 (run `make artifacts` for the trained one)"
+            );
+            Ok((BnnModel::random(32, &[64, 32], seed), Scenario::default_ddos()))
+        }
+    }
+}
+
+fn serve_single(
+    args: &Args,
+    path: &str,
+    n: usize,
+    seed: u64,
+    shards: usize,
+    scenario: Option<Scenario>,
+    explicit: bool,
+) -> anyhow::Result<()> {
+    let (model, ddos) = load_weights_or_synthetic(path, seed, explicit)?;
     let kind = backend_for(args)?;
     let mut builder = configure_builder(Deployment::builder(), args)?
         .model("serve", model.clone());
     if kind == BackendKind::Lut {
-        builder = builder.lut(lut_for(&model, &doc.ddos, seed));
+        builder = builder.lut(lut_for(&model, &ddos, seed));
     }
     let deployment = builder.build()?;
+    let trace = match &scenario {
+        None => TraceGenerator::new(seed).generate(&TraceKind::Ddos { ddos }, n),
+        Some(s) => {
+            println!("scenario: {}", s.name());
+            s.clone().with_ddos(ddos).generate(seed, n)
+        }
+    };
+    if shards > 0 {
+        let report = deployment.serve_trace_sharded("serve", shards, &trace.packets)?;
+        print!("{}", report.render());
+        return Ok(());
+    }
     let engine = deployment.engine("serve")?;
-    let mut gen = TraceGenerator::new(seed);
-    let trace = gen.generate(&TraceKind::Ddos { ddos: doc.ddos.clone() }, n);
     let report = engine.process_trace(&trace.packets)?;
     println!(
         "served {} packets via {} backend (model v{}) at {:.2} M/s (host) — \
@@ -392,25 +453,45 @@ fn serve_single(args: &Args, path: &str, n: usize, seed: u64) -> anyhow::Result<
     Ok(())
 }
 
-/// Several `--models`: ONE keyed-table pipeline program serves them all,
-/// the model id appended to each packet selecting the weights — the
+/// Several `--models` (or the multi-tenant scenario): ONE keyed-table
+/// pipeline program serves them all, the model id carried in each
+/// packet at [`MODEL_ID_OFFSET`] selecting the weights — the
 /// multi-tenant / model-switching deployment shape.
-fn serve_keyed(args: &Args, paths: &[String], n: usize, seed: u64) -> anyhow::Result<()> {
+#[allow(clippy::too_many_arguments)]
+fn serve_keyed(
+    args: &Args,
+    paths: &[String],
+    n: usize,
+    seed: u64,
+    shards: usize,
+    scenario: Option<Scenario>,
+    explicit: bool,
+) -> anyhow::Result<()> {
     let mut models = Vec::with_capacity(paths.len());
-    let mut first_doc = None;
+    let mut first_ddos = None;
     for (i, p) in paths.iter().enumerate() {
-        let (model, doc) = bnn::load_weights(p)
-            .with_context(|| format!("loading --models entry {p:?}"))?;
-        if first_doc.is_none() {
-            first_doc = Some(doc);
+        let (model, ddos) = load_weights_or_synthetic(p, seed ^ i as u64, explicit)?;
+        if first_ddos.is_none() {
+            first_ddos = Some(ddos);
         }
         models.push((format!("model{i}"), (i + 1) as u32, model, p.clone()));
     }
-    let doc = first_doc.expect("at least one model");
+    if models.len() == 1 {
+        // Multi-tenant scenario with one weights file: register a second
+        // synthetic tenant so the keyed registry has something to key on.
+        let arch = models[0].2.spec.clone();
+        println!("(one --models entry: adding a synthetic second tenant)");
+        models.push((
+            "model1".into(),
+            2,
+            BnnModel::random(arch.in_bits, &arch.layer_sizes, seed ^ 0x7E),
+            "<synthetic>".into(),
+        ));
+    }
+    let ddos = first_ddos.expect("at least one model");
 
-    // The id rides after the 4-byte activation payload word.
-    let id_offset = N2NET_PAYLOAD_OFFSET + 4;
-    let mut builder = configure_builder(Deployment::builder(), args)?.keyed(id_offset);
+    let mut builder =
+        configure_builder(Deployment::builder(), args)?.keyed(MODEL_ID_OFFSET);
     for (name, id, model, _) in &models {
         builder = builder.model_with_id(name.clone(), *id, model.clone());
     }
@@ -424,13 +505,38 @@ fn serve_keyed(args: &Args, paths: &[String], n: usize, seed: u64) -> anyhow::Re
         println!("  {name} (id {id}) <- {p}");
     }
 
-    let mut gen = TraceGenerator::new(seed);
-    let mut packets = gen
-        .generate(&TraceKind::Ddos { ddos: doc.ddos.clone() }, n)
-        .packets;
-    for (i, pkt) in packets.iter_mut().enumerate() {
-        let id = (i % models.len() + 1) as u32;
-        pkt.extend_from_slice(&id.to_le_bytes());
+    let ids: Vec<u32> = models.iter().map(|(_, id, _, _)| *id).collect();
+    let packets = match &scenario {
+        Some(s @ Scenario::MultiTenantMix { .. }) => {
+            // The scenario embeds tenant ids (plus a table-miss share)
+            // at MODEL_ID_OFFSET itself.
+            println!("scenario: {}", s.name());
+            s.clone().with_model_ids(ids).generate(seed, n).packets
+        }
+        other => {
+            let mut packets = match other {
+                None => TraceGenerator::new(seed)
+                    .generate(&TraceKind::Ddos { ddos }, n)
+                    .packets,
+                Some(s) => {
+                    println!("scenario: {}", s.name());
+                    s.clone().with_ddos(ddos).generate(seed, n).packets
+                }
+            };
+            // Round-robin the registered ids onto the frames.
+            for (i, pkt) in packets.iter_mut().enumerate() {
+                pkt.extend_from_slice(&ids[i % ids.len()].to_le_bytes());
+            }
+            packets
+        }
+    };
+
+    if shards > 0 {
+        let report = deployment
+            .sharded_engine_keyed(shards)?
+            .process_trace(&packets)?;
+        print!("{}", report.render());
+        return Ok(());
     }
     let engine = deployment.engine_keyed()?;
     let report = engine.process_trace(&packets)?;

@@ -9,12 +9,14 @@
 //! the destination IP address of the packet").
 
 pub mod packet;
+pub mod scenario;
 pub mod tracegen;
 
 pub use packet::{
     EthernetHeader, Ipv4Header, PacketBuilder, UdpHeader, ETH_HEADER_LEN,
     IPV4_DST_OFFSET, IPV4_HEADER_LEN, IPV4_SRC_OFFSET, UDP_HEADER_LEN,
 };
+pub use scenario::{Scenario, MODEL_ID_OFFSET, SCENARIO_NAMES};
 pub use tracegen::{Trace, TraceGenerator, TraceKind};
 
 /// Byte offset of the packed activation words in an N2Net packet:

@@ -1,0 +1,404 @@
+//! Named traffic scenarios (DESIGN.md §12).
+//!
+//! The trace generators in [`super::tracegen`] draw from clean
+//! distributions; real data planes are evaluated under skewed, bursty,
+//! adversarial and malformed traffic (Brain-on-Switch evaluates NN data
+//! planes under exactly such mixes). A [`Scenario`] is one named,
+//! seeded workload descriptor consumable everywhere traffic is needed —
+//! `n2net serve --scenario <name>`, the examples, the shard bench, and
+//! the sharded-equivalence property tests:
+//!
+//! * `uniform` — uniformly random source IPs (the balanced baseline);
+//! * `zipf-heavy-hitter` — skewed flow popularity with an explicit
+//!   rank-1 hitter, deliberately imbalancing flow-affinity sharding;
+//! * `ddos-burst` — an attacker ramp against the DDoS filter: the
+//!   attack fraction climbs from trickle to flood across the trace;
+//! * `flowlet-churn` — a bounded set of live flows with periodic churn,
+//!   the locality workload of `apps/lb_hints`;
+//! * `multi-tenant-mix` — keyed multi-model traffic: each frame carries
+//!   a tenant id at [`MODEL_ID_OFFSET`] (a configurable share of ids
+//!   unknown, exercising the table-miss → default-model lane);
+//! * `malformed-fuzz` — truncated / garbage / wrong-ethertype / bad-IHL
+//!   frames mixed with valid traffic, exercising every parse-error
+//!   lane.
+
+use crate::bnn::io::{DdosDoc, SubnetDoc};
+use crate::error::{Error, Result};
+use crate::net::packet::PacketBuilder;
+use crate::net::tracegen::{Trace, TraceGenerator, TraceKind};
+use crate::net::N2NET_PAYLOAD_OFFSET;
+use crate::util::rng::Rng;
+
+/// Byte offset of the 32-bit little-endian model id in multi-tenant
+/// frames: right after the first packed activation word — the same
+/// layout `n2net serve --models a,b` appends and the keyed deployments
+/// parse.
+pub const MODEL_ID_OFFSET: usize = N2NET_PAYLOAD_OFFSET + 4;
+
+/// One named, seeded traffic workload.
+#[derive(Clone, Debug)]
+pub enum Scenario {
+    /// Uniformly random source IPs.
+    Uniform,
+    /// Skewed flow popularity: `hitter_share` of all frames belong to
+    /// ONE flow, the rest follow a 1/rank zipf over `n_flows` flows.
+    ZipfHeavyHitter { n_flows: usize, hitter_share: f64 },
+    /// Attacker ramp: the attack fraction climbs linearly from ~2% to
+    /// `peak_fraction` across the trace (labels are ground truth).
+    DdosBurst { ddos: DdosDoc, peak_fraction: f64 },
+    /// `n_flows` live flows; every `flowlet_len` frames one flow churns
+    /// out and a new one takes its slot.
+    FlowletChurn { n_flows: usize, flowlet_len: usize },
+    /// Keyed multi-model traffic: ids drawn from `model_ids`, plus an
+    /// `unknown_share` of ids no deployment registered (table miss →
+    /// default model).
+    MultiTenantMix { model_ids: Vec<u32>, unknown_share: f64 },
+    /// `malformed_share` of frames are corrupted: truncated, pure
+    /// garbage, non-IPv4 ethertype, or an IHL that overruns the frame.
+    MalformedFuzz { malformed_share: f64 },
+}
+
+/// Every scenario name [`Scenario::parse`] accepts.
+pub const SCENARIO_NAMES: &[&str] = &[
+    "uniform",
+    "zipf-heavy-hitter",
+    "ddos-burst",
+    "flowlet-churn",
+    "multi-tenant-mix",
+    "malformed-fuzz",
+];
+
+impl Scenario {
+    /// Parse a CLI spelling into a scenario with default knobs.
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "uniform" => Ok(Scenario::Uniform),
+            "zipf-heavy-hitter" => {
+                Ok(Scenario::ZipfHeavyHitter { n_flows: 256, hitter_share: 0.35 })
+            }
+            "ddos-burst" => Ok(Scenario::DdosBurst {
+                ddos: Scenario::default_ddos(),
+                peak_fraction: 0.9,
+            }),
+            "flowlet-churn" => {
+                Ok(Scenario::FlowletChurn { n_flows: 64, flowlet_len: 32 })
+            }
+            "multi-tenant-mix" => Ok(Scenario::MultiTenantMix {
+                model_ids: vec![1, 2],
+                unknown_share: 0.1,
+            }),
+            "malformed-fuzz" => Ok(Scenario::MalformedFuzz { malformed_share: 0.5 }),
+            other => Err(Error::Config(format!(
+                "unknown scenario {other:?} (expected one of {})",
+                SCENARIO_NAMES.join("|")
+            ))),
+        }
+    }
+
+    /// The CLI spelling of this scenario.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Uniform => "uniform",
+            Scenario::ZipfHeavyHitter { .. } => "zipf-heavy-hitter",
+            Scenario::DdosBurst { .. } => "ddos-burst",
+            Scenario::FlowletChurn { .. } => "flowlet-churn",
+            Scenario::MultiTenantMix { .. } => "multi-tenant-mix",
+            Scenario::MalformedFuzz { .. } => "malformed-fuzz",
+        }
+    }
+
+    /// Substitute the trained blacklist into a `ddos-burst` scenario
+    /// (no-op for every other kind).
+    pub fn with_ddos(self, ddos: DdosDoc) -> Self {
+        match self {
+            Scenario::DdosBurst { peak_fraction, .. } => {
+                Scenario::DdosBurst { ddos, peak_fraction }
+            }
+            other => other,
+        }
+    }
+
+    /// Substitute the deployment's registered model ids into a
+    /// `multi-tenant-mix` scenario (no-op for every other kind).
+    pub fn with_model_ids(self, ids: Vec<u32>) -> Self {
+        match self {
+            Scenario::MultiTenantMix { unknown_share, .. } => {
+                Scenario::MultiTenantMix { model_ids: ids, unknown_share }
+            }
+            other => other,
+        }
+    }
+
+    /// Synthetic blacklist for scenario runs without trained artifacts.
+    pub fn default_ddos() -> DdosDoc {
+        DdosDoc {
+            subnets: vec![
+                SubnetDoc { prefix: 0xC0A80000, prefix_len: 16 },
+                SubnetDoc { prefix: 0x0A000000, prefix_len: 8 },
+            ],
+            attack_fraction: 0.5,
+            seed: 0,
+        }
+    }
+
+    /// Generate `n` frames, deterministic per `seed`. Labels are filled
+    /// for `ddos-burst` (ground truth), `keys` carry the classification
+    /// key (0 for malformed frames).
+    pub fn generate(&self, seed: u64, n: usize) -> Trace {
+        let mut rng = Rng::seed_from_u64(seed);
+        match self {
+            Scenario::Uniform => {
+                TraceGenerator::new(seed).generate(&TraceKind::UniformIps, n)
+            }
+            Scenario::ZipfHeavyHitter { n_flows, hitter_share } => {
+                zipf_heavy_hitter(&mut rng, (*n_flows).max(2), *hitter_share, n)
+            }
+            Scenario::DdosBurst { ddos, peak_fraction } => {
+                ddos_burst(seed, ddos, *peak_fraction, n)
+            }
+            Scenario::FlowletChurn { n_flows, flowlet_len } => {
+                flowlet_churn(&mut rng, (*n_flows).max(1), (*flowlet_len).max(1), n)
+            }
+            Scenario::MultiTenantMix { model_ids, unknown_share } => {
+                multi_tenant_mix(&mut rng, model_ids, *unknown_share, n)
+            }
+            Scenario::MalformedFuzz { malformed_share } => {
+                malformed_fuzz(&mut rng, *malformed_share, n)
+            }
+        }
+    }
+}
+
+fn frame_for(ip: u32) -> Vec<u8> {
+    PacketBuilder::default().src_ip(ip).build_activations(&[ip])
+}
+
+fn zipf_heavy_hitter(rng: &mut Rng, n_flows: usize, hitter_share: f64, n: usize) -> Trace {
+    let flows: Vec<u32> = (0..n_flows).map(|_| rng.next_u32()).collect();
+    // 1/rank CDF over the non-hitter flows.
+    let weights: Vec<f64> = (1..n_flows).map(|r| 1.0 / r as f64).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(weights.len());
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    let mut packets = Vec::with_capacity(n);
+    let mut keys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ip = if rng.gen_bool(hitter_share) {
+            flows[0]
+        } else {
+            let u = rng.gen_f64();
+            let idx = cdf.partition_point(|&c| c < u).min(cdf.len() - 1);
+            flows[idx + 1]
+        };
+        packets.push(frame_for(ip));
+        keys.push(ip);
+    }
+    Trace { packets, labels: Vec::new(), keys }
+}
+
+fn ddos_burst(seed: u64, ddos: &DdosDoc, peak_fraction: f64, n: usize) -> Trace {
+    let mut gen = TraceGenerator::new(seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0xB0257);
+    let mut packets = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    let mut keys = Vec::with_capacity(n);
+    for i in 0..n {
+        // Linear attacker ramp: trickle at the head, flood at the tail.
+        let ramp = i as f64 / (n.max(2) - 1) as f64;
+        let p = 0.02 + (peak_fraction - 0.02) * ramp;
+        let ip = if rng.gen_bool(p) {
+            gen.attacker_ip(ddos)
+        } else {
+            gen.benign_ip(ddos)
+        };
+        packets.push(frame_for(ip));
+        labels.push(ddos.label(ip));
+        keys.push(ip);
+    }
+    Trace { packets, labels, keys }
+}
+
+fn flowlet_churn(rng: &mut Rng, n_flows: usize, flowlet_len: usize, n: usize) -> Trace {
+    let mut active: Vec<u32> = (0..n_flows).map(|_| rng.next_u32()).collect();
+    let mut packets = Vec::with_capacity(n);
+    let mut keys = Vec::with_capacity(n);
+    for i in 0..n {
+        if i > 0 && i % flowlet_len == 0 {
+            // One flowlet ends: a random live flow churns out.
+            let slot = rng.gen_range(0, n_flows);
+            active[slot] = rng.next_u32();
+        }
+        let ip = *rng.choose(&active);
+        packets.push(frame_for(ip));
+        keys.push(ip);
+    }
+    Trace { packets, labels: Vec::new(), keys }
+}
+
+fn multi_tenant_mix(
+    rng: &mut Rng,
+    model_ids: &[u32],
+    unknown_share: f64,
+    n: usize,
+) -> Trace {
+    let mut packets = Vec::with_capacity(n);
+    let mut keys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ip = rng.next_u32();
+        let id = if model_ids.is_empty() || rng.gen_bool(unknown_share) {
+            // An id no deployment registers: exercises table miss →
+            // default model. Rejection-sampled against the registered
+            // set so the unknown share is exact for ANY registry ids.
+            loop {
+                let candidate = rng.next_u32();
+                if !model_ids.contains(&candidate) {
+                    break candidate;
+                }
+            }
+        } else {
+            *rng.choose(model_ids)
+        };
+        let mut pkt = frame_for(ip);
+        debug_assert_eq!(pkt.len(), MODEL_ID_OFFSET);
+        pkt.extend_from_slice(&id.to_le_bytes());
+        packets.push(pkt);
+        keys.push(ip);
+    }
+    Trace { packets, labels: Vec::new(), keys }
+}
+
+fn malformed_fuzz(rng: &mut Rng, malformed_share: f64, n: usize) -> Trace {
+    let mut packets = Vec::with_capacity(n);
+    let mut keys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ip = rng.next_u32();
+        if !rng.gen_bool(malformed_share) {
+            packets.push(frame_for(ip));
+            keys.push(ip);
+            continue;
+        }
+        let mut pkt = frame_for(ip);
+        match rng.gen_range(0, 4) {
+            0 => {
+                // Truncate anywhere, including to an empty frame.
+                pkt.truncate(rng.gen_range(0, pkt.len()));
+            }
+            1 => {
+                // Pure garbage of arbitrary length.
+                let len = rng.gen_range(0, 64);
+                pkt = (0..len).map(|_| rng.next_u32() as u8).collect();
+            }
+            2 => {
+                // Non-IPv4 ethertype (IPv6).
+                pkt[12] = 0x86;
+                pkt[13] = 0xDD;
+            }
+            _ => {
+                // IHL 15: a 60-byte IPv4 header that overruns the frame.
+                pkt[14] = 0x4F;
+            }
+        }
+        packets.push(pkt);
+        keys.push(0);
+    }
+    Trace { packets, labels: Vec::new(), keys }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::packet::parse_flow_key;
+
+    #[test]
+    fn parse_roundtrips_every_name() {
+        for name in SCENARIO_NAMES {
+            let s = Scenario::parse(name).unwrap();
+            assert_eq!(&s.name(), name);
+            // Deterministic per seed.
+            let a = s.generate(11, 64);
+            let b = s.generate(11, 64);
+            assert_eq!(a.packets, b.packets, "{name}");
+            assert_eq!(a.packets.len(), 64);
+            assert_eq!(a.keys.len(), 64);
+        }
+        assert!(Scenario::parse("line-rate").is_err());
+    }
+
+    #[test]
+    fn heavy_hitter_dominates_the_trace() {
+        let t = Scenario::parse("zipf-heavy-hitter").unwrap().generate(3, 4000);
+        let mut counts = std::collections::HashMap::new();
+        for k in &t.keys {
+            *counts.entry(*k).or_insert(0usize) += 1;
+        }
+        let max = counts.values().max().copied().unwrap();
+        // hitter_share 0.35 plus its zipf mass.
+        assert!(max > 4000 * 30 / 100, "hitter count {max}");
+        assert!(counts.len() > 50, "tail flows present: {}", counts.len());
+    }
+
+    #[test]
+    fn ddos_burst_ramps_the_attack_fraction() {
+        let t = Scenario::parse("ddos-burst").unwrap().generate(5, 4000);
+        assert_eq!(t.labels.len(), 4000);
+        let head: u32 = t.labels[..1000].iter().sum();
+        let tail: u32 = t.labels[3000..].iter().sum();
+        assert!(
+            tail > head * 3,
+            "attack must ramp: head {head} attackers, tail {tail}"
+        );
+        // Labels are ground truth for the scenario's own blacklist.
+        let ddos = Scenario::default_ddos();
+        for (k, l) in t.keys.iter().zip(&t.labels) {
+            assert_eq!(ddos.label(*k), *l);
+        }
+    }
+
+    #[test]
+    fn flowlet_churn_bounds_live_flows_and_churns() {
+        let t = Scenario::parse("flowlet-churn").unwrap().generate(7, 4000);
+        let distinct: std::collections::HashSet<u32> = t.keys.iter().copied().collect();
+        // 64 initial flows + ~4000/32 churned replacements, minus reuse.
+        assert!(distinct.len() > 64, "churn introduces flows: {}", distinct.len());
+        assert!(distinct.len() < 64 + 4000 / 32 + 1, "bounded: {}", distinct.len());
+    }
+
+    #[test]
+    fn multi_tenant_frames_carry_ids_at_the_documented_offset() {
+        let s = Scenario::parse("multi-tenant-mix")
+            .unwrap()
+            .with_model_ids(vec![1001, 2002]);
+        let t = s.generate(9, 400);
+        let mut known = 0usize;
+        for pkt in &t.packets {
+            assert_eq!(pkt.len(), MODEL_ID_OFFSET + 4);
+            let id = u32::from_le_bytes(
+                pkt[MODEL_ID_OFFSET..MODEL_ID_OFFSET + 4].try_into().unwrap(),
+            );
+            if id == 1001 || id == 2002 {
+                known += 1;
+            }
+        }
+        // ~10% unknown by default.
+        assert!((300..=399).contains(&known), "known ids: {known}");
+    }
+
+    #[test]
+    fn malformed_fuzz_mixes_valid_and_unparseable_frames() {
+        let t = Scenario::parse("malformed-fuzz").unwrap().generate(13, 1000);
+        let parseable = t
+            .packets
+            .iter()
+            .filter(|p| parse_flow_key(p).is_some())
+            .count();
+        // ~half valid; corrupted frames overwhelmingly fail the
+        // bounds-checked flow parse (garbage can rarely parse by luck).
+        assert!((350..=650).contains(&parseable), "parseable: {parseable}");
+        // Keys are zeroed for malformed frames.
+        assert!(t.keys.iter().filter(|&&k| k == 0).count() >= 1000 - parseable - 50);
+    }
+}

@@ -22,10 +22,14 @@ pub struct Stats {
 }
 
 impl Stats {
-    /// Items per second at the median iteration time.
+    /// Items per second at the median iteration time. A case too fast
+    /// (or too empty) to measure — median 0 ns — reports 0.0 rather
+    /// than +∞: the rate is unknown, and infinity would poison every
+    /// downstream consumer (`write_bench_json` records, speedup
+    /// ratios, report tables).
     pub fn items_per_sec(&self) -> f64 {
-        if self.median_ns == 0.0 {
-            return f64::INFINITY;
+        if self.median_ns <= 0.0 {
+            return 0.0;
         }
         self.items_per_iter * 1e9 / self.median_ns
     }
@@ -217,14 +221,19 @@ pub fn write_bench_json(
             }
         }
     }
+    // Belt and braces: a record is a *measurement*, so a non-finite
+    // rate (hand-built Stats, direct BenchRecord construction) is
+    // clamped to the same "unmeasured" 0.0 that Stats reports — the
+    // file must always hold plain finite numbers.
+    let finite = |x: f64| if x.is_finite() { x } else { 0.0 };
     for r in records {
         let mut m = BTreeMap::new();
         m.insert("bench".to_string(), Value::Str(r.bench.clone()));
         m.insert("case".to_string(), Value::Str(r.case.clone()));
         m.insert("backend".to_string(), Value::Str(r.backend.clone()));
         m.insert("batch_size".to_string(), Value::Int(r.batch_size as i64));
-        m.insert("pps".to_string(), Value::Float(r.pps));
-        m.insert("median_ns".to_string(), Value::Float(r.median_ns));
+        m.insert("pps".to_string(), Value::Float(finite(r.pps)));
+        m.insert("median_ns".to_string(), Value::Float(finite(r.median_ns)));
         kept.push(Value::Object(m));
     }
     let mut top = BTreeMap::new();
@@ -311,6 +320,44 @@ mod tests {
             .filter_map(|r| r.get("case").and_then(|c| c.as_str()))
             .collect();
         assert!(cases.contains(&"x2") && cases.contains(&"y"), "{cases:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn zero_median_reports_zero_not_infinity() {
+        // Regression (ISSUE 3 satellite): an unmeasurably fast case
+        // used to report +∞ packets/s, which every consumer of
+        // BENCH_*.json would then choke on.
+        let s = Stats {
+            name: "instant".into(),
+            iters: 1,
+            mean_ns: 0.0,
+            median_ns: 0.0,
+            p10_ns: 0.0,
+            p90_ns: 0.0,
+            items_per_iter: 256.0,
+        };
+        assert_eq!(s.items_per_sec(), 0.0);
+
+        let dir = std::env::temp_dir().join(format!(
+            "n2net-bench-inf-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_inf.json");
+        let path = path.to_str().unwrap();
+        // From zero-median stats, and from a hand-built record that
+        // smuggles in an infinity: both must land as finite numbers.
+        let mut rec = BenchRecord::from_stats("inf", "batched", 256, &s);
+        write_bench_json(path, "inf", &[rec.clone()]).unwrap();
+        rec.pps = f64::INFINITY;
+        rec.median_ns = f64::NAN;
+        write_bench_json(path, "inf", &[rec]).unwrap();
+        let v = crate::util::json::parse(&std::fs::read_to_string(path).unwrap())
+            .unwrap();
+        let r = &v.get("records").unwrap().as_array().unwrap()[0];
+        assert_eq!(r.get("pps").unwrap().as_f64(), Some(0.0));
+        assert_eq!(r.get("median_ns").unwrap().as_f64(), Some(0.0));
         std::fs::remove_dir_all(&dir).ok();
     }
 
