@@ -1,0 +1,147 @@
+//! Control-plane bench (DESIGN.md §13): (1) the steady-state overhead
+//! of signal collection — serving the SAME windowed workload with and
+//! without the controller ticking every window — and (2) the closed
+//! loop's reaction latency over a uniform → ddos-burst sequence.
+//!
+//! The acceptance bar (ISSUE 4): collection is pull-based (per-batch
+//! counters the tier maintains anyway + a few atomic loads per window),
+//! so the adaptive case must track the baseline — the printed overhead
+//! figure is the evidence that zero per-packet work was added.
+//!
+//! Emits machine-readable records to `BENCH_controlplane.json`.
+//!
+//! `cargo bench --bench controlplane`
+
+use std::sync::Arc;
+
+use n2net::bnn::BnnModel;
+use n2net::controlplane::{
+    prefix_classifier, sim_ddos, Controller, ModelBank, Policy, Sim, SimConfig,
+};
+use n2net::deploy::{Deployment, FieldExtractor, SwapHandle};
+use n2net::net::{Scenario, ScenarioSequence};
+use n2net::util::bench::{
+    default_bencher, keep, write_bench_json, BenchRecord, Report,
+};
+
+const BENCH_JSON: &str = "BENCH_controlplane.json";
+const N_PACKETS: usize = 16384;
+const WINDOW: usize = 1024;
+const SHARDS: usize = 2;
+const BATCH_SIZE: usize = 256;
+
+fn deployment_for(model: &BnnModel) -> Arc<Deployment> {
+    Arc::new(
+        Deployment::builder()
+            .extractor(FieldExtractor::SrcIp)
+            .model("live", model.clone())
+            .build()
+            .unwrap(),
+    )
+}
+
+fn main() {
+    let b = default_bencher();
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut report = Report::new("control plane — collection overhead + reaction");
+    report.header();
+
+    // ---- steady-state overhead of signal collection -----------------
+    // Same model, same trace, same windowing; the only difference is
+    // whether a controller pulls a snapshot and runs detectors/policy
+    // at every window boundary. Uniform traffic + an alert-only policy
+    // keep the model fixed, so both cases execute identical serving
+    // work.
+    let model = BnnModel::random(32, &[64, 32], 3);
+    let trace = Scenario::Uniform.generate(7, N_PACKETS);
+    let deployment = deployment_for(&model);
+
+    let engine = deployment.sharded_engine("live", SHARDS).unwrap();
+    let baseline = b.run(
+        &format!("steady-serve shards={SHARDS} windows no-controller"),
+        N_PACKETS as f64,
+        || {
+            for chunk in trace.packets.chunks(WINDOW) {
+                let r = engine.process_trace(chunk).unwrap();
+                keep(r.outputs.len());
+            }
+        },
+    );
+    let base_pps = baseline.items_per_sec();
+    records.push(BenchRecord::from_stats("controlplane", "batched", BATCH_SIZE, &baseline));
+    report.add(baseline);
+
+    let engine = deployment.sharded_engine("live", SHARDS).unwrap();
+    // Same serving loop as the baseline closure, plus one controller
+    // tick (snapshot pull + detectors + policy) per window. Uniform
+    // traffic with an alert-only policy never swaps, so the served
+    // program is identical in both cases.
+    let mut controller = Controller::new(
+        SwapHandle::new(&deployment, "live").unwrap(),
+        ModelBank::new("day", model.clone()),
+        Policy::parse("on overload do alert cooldown=8").unwrap(),
+    )
+    .unwrap();
+    let adaptive = b.run(
+        &format!("steady-serve shards={SHARDS} windows adaptive"),
+        N_PACKETS as f64,
+        || {
+            for chunk in trace.packets.chunks(WINDOW) {
+                let r = engine.process_trace(chunk).unwrap();
+                keep(r.outputs.len());
+                let tick = controller.tick(engine.snapshot());
+                keep(tick.events.len());
+            }
+        },
+    );
+    let adaptive_pps = adaptive.items_per_sec();
+    records.push(BenchRecord::from_stats("controlplane", "batched", BATCH_SIZE, &adaptive));
+    report.add(adaptive);
+
+    let overhead = if adaptive_pps > 0.0 && base_pps > 0.0 {
+        (base_pps / adaptive_pps - 1.0) * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "\nsignal-collection overhead: {overhead:+.1}% \
+         (target ~0 — collection is per-batch counters + per-window pulls, \
+         nothing per packet)"
+    );
+
+    // ---- closed-loop reaction latency -------------------------------
+    // A fresh deployment/controller per iteration (a swap is stateful);
+    // the measured time is the whole loop — serve windows, pull
+    // signals, detect, decide, recompile + publish the swap.
+    let seq = ScenarioSequence::new(vec![
+        (Scenario::Uniform, 2048),
+        (Scenario::DdosBurst { ddos: sim_ddos(), peak_fraction: 0.9 }, 4096),
+    ]);
+    let live = prefix_classifier(0xC0A8_0000);
+    let attack = prefix_classifier(0xC0A8_FFFF);
+    let cfg = SimConfig { n_shards: SHARDS, window_packets: 512, seed: 11 };
+    let mut last_reaction = None;
+    let reaction = b.run("closed-loop uniform->ddos-burst (full loop)", 1.0, || {
+        let dep = deployment_for(&live);
+        let bank = ModelBank::new("day", live.clone()).with_model("attack", attack.clone());
+        let policy = Policy::parse("on ddos-ramp do swap attack cooldown=4").unwrap();
+        let mut sim = Sim::new(&dep, "live", bank, policy, cfg).unwrap();
+        let r = sim.run_sequence(&seq).unwrap();
+        last_reaction = r.reaction_windows;
+        keep(r.outputs.len());
+    });
+    records.push(BenchRecord::from_stats("controlplane", "batched", BATCH_SIZE, &reaction));
+    report.add(reaction);
+    match last_reaction {
+        Some(w) => println!(
+            "reaction: swap published {w} window(s) of {} packets after attack onset",
+            cfg.window_packets
+        ),
+        None => println!("reaction: WARNING — no swap attributed to the attack"),
+    }
+
+    match write_bench_json(BENCH_JSON, "controlplane", &records) {
+        Ok(()) => println!("wrote {} records to {BENCH_JSON}", records.len()),
+        Err(e) => eprintln!("warning: could not write {BENCH_JSON}: {e}"),
+    }
+}

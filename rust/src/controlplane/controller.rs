@@ -1,0 +1,434 @@
+//! The closed-loop controller (DESIGN.md §13): pull signals → detect →
+//! decide → act, once per virtual-clock window.
+//!
+//! The controller owns no serving state. Its inputs are
+//! [`TierSnapshot`]s pulled from the tier; its only authority over the
+//! data plane is a [`SwapHandle`] — publish a weight swap for ONE
+//! registered model — plus a [`ModelBank`] of candidate artifacts the
+//! policy can name. Everything it does is therefore off the hot path by
+//! construction: a swap recompiles in the controller's context and
+//! publishes atomically; serving workers pick it up at their next batch
+//! boundary (the §11 protocol, old-or-new per packet, never torn).
+//!
+//! A swap the deployment rejects (architecture mismatch, compile
+//! failure) is recorded as [`Outcome::Rejected`] and the live model
+//! keeps serving — the controller can *propose* a bad artifact but can
+//! never disturb the data plane with one.
+
+use crate::bnn::BnnModel;
+use crate::coordinator::TierSnapshot;
+use crate::deploy::SwapHandle;
+use crate::error::{Error, Result};
+
+use super::detect::{
+    DdosRampDetector, Detection, Detector, DriftDetector, ImbalanceDetector,
+    OverloadDetector,
+};
+use super::policy::{Action, Policy, PolicyEngine};
+use super::signal::{SignalCollector, SignalWindow};
+
+/// Named candidate artifacts the policy can swap in. The bank is the
+/// controller's *capability set*: a policy can only name artifacts that
+/// were explicitly registered here, and the designated default is what
+/// [`Action::Fallback`] targets.
+pub struct ModelBank {
+    default_name: String,
+    entries: Vec<(String, BnnModel)>,
+}
+
+impl ModelBank {
+    /// Start a bank with its designated default (fallback) artifact.
+    pub fn new(default_name: impl Into<String>, default_model: BnnModel) -> Self {
+        let default_name = default_name.into();
+        Self {
+            entries: vec![(default_name.clone(), default_model)],
+            default_name,
+        }
+    }
+
+    /// Register another candidate artifact (builder-style).
+    pub fn with_model(mut self, name: impl Into<String>, model: BnnModel) -> Self {
+        self.entries.push((name.into(), model));
+        self
+    }
+
+    /// Look a candidate up by policy name.
+    pub fn get(&self, name: &str) -> Option<&BnnModel> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, m)| m)
+    }
+
+    /// The designated fallback artifact.
+    pub fn default_model(&self) -> &BnnModel {
+        self.get(&self.default_name).expect("bank default always registered")
+    }
+
+    /// The designated fallback artifact's name.
+    pub fn default_name(&self) -> &str {
+        &self.default_name
+    }
+
+    /// Registered names, registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+}
+
+/// What executing one fired rule did.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// A new artifact was published at `version`.
+    Published { model: String, version: u64 },
+    /// The swap was rejected; the live model kept serving untouched.
+    Rejected { model: String, error: String },
+    /// Alert-only rule: logged, no data-plane change.
+    Alerted,
+}
+
+/// One control-loop event: which rule fired on what detection, and what
+/// came of it.
+#[derive(Clone, Debug)]
+pub struct ControlEvent {
+    /// Virtual-clock window the event happened in.
+    pub window: u64,
+    /// Index of the fired rule in the policy.
+    pub rule: usize,
+    pub detection: Detection,
+    pub action: Action,
+    pub outcome: Outcome,
+}
+
+impl ControlEvent {
+    /// One log line.
+    pub fn render(&self) -> String {
+        let outcome = match &self.outcome {
+            Outcome::Published { model, version } => {
+                format!("published {model:?} as v{version}")
+            }
+            Outcome::Rejected { model, error } => {
+                format!("REJECTED swap to {model:?}: {error}")
+            }
+            Outcome::Alerted => "alert".into(),
+        };
+        format!(
+            "w{}: {} ({}; severity {:.2}) -> {} -> {outcome}",
+            self.window,
+            self.detection.kind.name(),
+            self.detection.detail,
+            self.detection.severity,
+            self.action.render(),
+        )
+    }
+}
+
+/// Everything one controller tick produced.
+#[derive(Clone, Debug)]
+pub struct TickReport {
+    pub window: SignalWindow,
+    pub detections: Vec<Detection>,
+    pub events: Vec<ControlEvent>,
+}
+
+/// The closed-loop controller. Drive it with [`Controller::tick`] once
+/// per window — from the deterministic sim ([`super::sim`]), from a
+/// serving loop, or from a timer thread; the controller itself never
+/// sleeps and never reads a wall clock.
+pub struct Controller {
+    collector: SignalCollector,
+    detectors: Vec<Box<dyn Detector>>,
+    engine: PolicyEngine,
+    handle: SwapHandle,
+    bank: ModelBank,
+    events: Vec<ControlEvent>,
+    published: u64,
+    rejected: u64,
+    alerts: u64,
+}
+
+impl Controller {
+    /// Controller with the default detector set ([`DdosRampDetector`],
+    /// [`DriftDetector`], [`OverloadDetector`], [`ImbalanceDetector`],
+    /// default thresholds). The policy is validated against the bank:
+    /// a rule naming an unregistered artifact is a config error at
+    /// build time, not a surprise mid-incident.
+    pub fn new(handle: SwapHandle, bank: ModelBank, policy: Policy) -> Result<Self> {
+        Self::with_detectors(handle, bank, policy, Self::default_detectors())
+    }
+
+    /// Same, with custom detectors (thresholds tuned, kinds dropped).
+    pub fn with_detectors(
+        handle: SwapHandle,
+        bank: ModelBank,
+        policy: Policy,
+        detectors: Vec<Box<dyn Detector>>,
+    ) -> Result<Self> {
+        for rule in &policy.rules {
+            if let Action::SwapModel(name) = &rule.action {
+                if bank.get(name).is_none() {
+                    return Err(Error::Config(format!(
+                        "policy swaps to {name:?} but the model bank only has \
+                         {:?}",
+                        bank.names()
+                    )));
+                }
+            }
+        }
+        Ok(Self {
+            collector: SignalCollector::new(),
+            detectors,
+            engine: PolicyEngine::new(policy),
+            handle,
+            bank,
+            events: Vec::new(),
+            published: 0,
+            rejected: 0,
+            alerts: 0,
+        })
+    }
+
+    /// The default detector set.
+    pub fn default_detectors() -> Vec<Box<dyn Detector>> {
+        vec![
+            Box::new(DdosRampDetector::default()),
+            Box::new(DriftDetector::default()),
+            Box::new(OverloadDetector::default()),
+            Box::new(ImbalanceDetector::default()),
+        ]
+    }
+
+    /// One loop iteration: difference the snapshot into a window, run
+    /// every detector, evaluate the policy, execute what fired.
+    pub fn tick(&mut self, snapshot: TierSnapshot) -> TickReport {
+        let window = self.collector.window(snapshot);
+        let detections: Vec<Detection> = self
+            .detectors
+            .iter_mut()
+            .filter_map(|d| d.observe(&window))
+            .collect();
+        let firings = self.engine.decide(window.index, &detections);
+        let mut events = Vec::with_capacity(firings.len());
+        for firing in firings {
+            let outcome = self.execute(&firing.action);
+            let event = ControlEvent {
+                window: window.index,
+                rule: firing.rule,
+                detection: firing.detection,
+                action: firing.action,
+                outcome,
+            };
+            self.events.push(event.clone());
+            events.push(event);
+        }
+        TickReport { window, detections, events }
+    }
+
+    /// Execute one action through the swap handle. Swaps happen right
+    /// here in the controller's context — compilation and publication
+    /// are [`crate::deploy::Deployment::swap_model`]'s off-hot-path
+    /// protocol; serving never waits on this.
+    fn execute(&mut self, action: &Action) -> Outcome {
+        let (name, model) = match action {
+            Action::Alert => {
+                self.alerts += 1;
+                return Outcome::Alerted;
+            }
+            Action::Fallback => {
+                (self.bank.default_name().to_string(), self.bank.default_model().clone())
+            }
+            Action::SwapModel(name) => match self.bank.get(name) {
+                Some(m) => (name.clone(), m.clone()),
+                None => {
+                    // Unreachable for policies built through the
+                    // constructor validation; kept as a runtime guard.
+                    self.rejected += 1;
+                    return Outcome::Rejected {
+                        model: name.clone(),
+                        error: "not in the model bank".into(),
+                    };
+                }
+            },
+        };
+        match self.handle.swap(model) {
+            Ok(version) => {
+                self.published += 1;
+                Outcome::Published { model: name, version }
+            }
+            Err(e) => {
+                self.rejected += 1;
+                Outcome::Rejected { model: name, error: e.to_string() }
+            }
+        }
+    }
+
+    /// Full event log, oldest first.
+    pub fn events(&self) -> &[ControlEvent] {
+        &self.events
+    }
+
+    /// Artifacts published (swaps + fallbacks that succeeded).
+    pub fn published(&self) -> u64 {
+        self.published
+    }
+
+    /// Swap attempts the deployment rejected.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// Alert-only firings.
+    pub fn alerts(&self) -> u64 {
+        self.alerts
+    }
+
+    /// Windows ticked so far.
+    pub fn windows_seen(&self) -> u64 {
+        self.collector.windows_seen()
+    }
+
+    /// The model bank (for reports).
+    pub fn bank(&self) -> &ModelBank {
+        &self.bank
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::coordinator::ShardCounts;
+    use crate::deploy::{Deployment, FieldExtractor};
+    use crate::telemetry::CLASS_BUCKETS;
+
+    fn handle_for(model: &BnnModel) -> (Arc<Deployment>, SwapHandle) {
+        let dep = Arc::new(
+            Deployment::builder()
+                .extractor(FieldExtractor::SrcIp)
+                .model("live", model.clone())
+                .build()
+                .unwrap(),
+        );
+        let handle = SwapHandle::new(&dep, "live").unwrap();
+        (dep, handle)
+    }
+
+    /// Snapshot with cumulative packet/positive-class counts.
+    fn snap(total: u64, positive: u64) -> TierSnapshot {
+        let mut classes = [0u64; CLASS_BUCKETS];
+        classes[1] = positive;
+        classes[0] = total - positive;
+        TierSnapshot {
+            per_shard: vec![ShardCounts {
+                packets: total,
+                batches: total / 8,
+                model_version: 1,
+                ..ShardCounts::default()
+            }],
+            classes,
+            latency_buckets: vec![0; 48],
+        }
+    }
+
+    #[test]
+    fn bank_lookup_and_default() {
+        let day = BnnModel::random(32, &[16], 1);
+        let night = BnnModel::random(32, &[16], 2);
+        let bank = ModelBank::new("day", day.clone()).with_model("night", night);
+        assert_eq!(bank.names(), vec!["day", "night"]);
+        assert_eq!(bank.default_name(), "day");
+        assert_eq!(bank.default_model(), &day);
+        assert!(bank.get("night").is_some());
+        assert!(bank.get("dusk").is_none());
+    }
+
+    #[test]
+    fn policy_naming_unbanked_model_is_rejected_at_build() {
+        let m = BnnModel::random(32, &[16, 1], 3);
+        let (_dep, handle) = handle_for(&m);
+        let bank = ModelBank::new("day", m.clone());
+        let policy = Policy::parse("on ddos-ramp do swap night").unwrap();
+        assert!(Controller::new(handle, bank, policy).is_err());
+    }
+
+    #[test]
+    fn ramp_episode_publishes_exactly_one_swap() {
+        let live = BnnModel::random(32, &[16, 1], 4);
+        let attack = BnnModel::random(32, &[16, 1], 5);
+        let (dep, handle) = handle_for(&live);
+        let bank = ModelBank::new("day", live.clone()).with_model("attack", attack);
+        let policy = Policy::parse("on ddos-ramp do swap attack cooldown=3").unwrap();
+        let mut c = Controller::new(handle, bank, policy).unwrap();
+
+        // Quiet baseline windows (50% positive), then a sustained ramp.
+        let mut total = 0u64;
+        let mut pos = 0u64;
+        let mut feed = |c: &mut Controller, n: u64, p: u64| {
+            total += n;
+            pos += p;
+            c.tick(snap(total, pos))
+        };
+        for _ in 0..3 {
+            let t = feed(&mut c, 1000, 500);
+            assert!(t.events.is_empty());
+        }
+        let mut published = 0;
+        for _ in 0..5 {
+            let t = feed(&mut c, 1000, 950);
+            published += t
+                .events
+                .iter()
+                .filter(|e| matches!(e.outcome, Outcome::Published { .. }))
+                .count();
+        }
+        assert_eq!(published, 1, "one swap per ramp episode");
+        assert_eq!(c.published(), 1);
+        assert_eq!(dep.version("live").unwrap(), 2, "the swap really published");
+        assert_eq!(c.events().len(), 1);
+        assert!(c.events()[0].render().contains("published"));
+        assert_eq!(c.windows_seen(), 8);
+    }
+
+    #[test]
+    fn incompatible_bank_artifact_is_rejected_without_disturbing_serving() {
+        let live = BnnModel::random(32, &[16, 1], 6);
+        // Same spec family but a DIFFERENT architecture: the deployment
+        // must refuse it at swap time.
+        let wrong_arch = BnnModel::random(32, &[32, 1], 7);
+        let (dep, handle) = handle_for(&live);
+        let bank = ModelBank::new("day", live.clone()).with_model("bad", wrong_arch);
+        let policy = Policy::parse("on ddos-ramp do swap bad").unwrap();
+        let mut c = Controller::new(handle, bank, policy).unwrap();
+        let mut total = 0u64;
+        let mut pos = 0u64;
+        for (n, p) in [(1000, 500), (1000, 500), (1000, 950), (1000, 950)] {
+            total += n;
+            pos += p;
+            c.tick(snap(total, pos));
+        }
+        assert_eq!(c.rejected(), 1);
+        assert_eq!(c.published(), 0);
+        assert_eq!(dep.version("live").unwrap(), 1, "live model undisturbed");
+        assert!(matches!(
+            c.events()[0].outcome,
+            Outcome::Rejected { .. }
+        ));
+        assert!(c.events()[0].render().contains("REJECTED"));
+    }
+
+    #[test]
+    fn fallback_republishes_the_default() {
+        let live = BnnModel::random(32, &[16, 1], 8);
+        let (dep, handle) = handle_for(&live);
+        let bank = ModelBank::new("day", live.clone());
+        let policy = Policy::parse("on drift do fallback").unwrap();
+        let mut c = Controller::new(handle, bank, policy).unwrap();
+        // Window 0 teaches the drift reference; then the mix flips.
+        c.tick(snap(1000, 500));
+        let t = c.tick(snap(2000, 1500));
+        assert_eq!(t.events.len(), 1);
+        assert!(matches!(
+            &t.events[0].outcome,
+            Outcome::Published { model, version: 2 } if model == "day"
+        ));
+        assert_eq!(dep.version("live").unwrap(), 2);
+    }
+}

@@ -1,0 +1,382 @@
+//! Detectors: pluggable condition monitors over consecutive
+//! [`SignalWindow`]s (DESIGN.md §13).
+//!
+//! A detector is a small pure-ish state machine: it observes one window
+//! per virtual-clock tick and emits a [`Detection`] when its condition
+//! holds. Detectors only *detect* — whether anything happens is the
+//! policy engine's call ([`super::policy`]), which is also where
+//! hysteresis lives. A detector therefore keeps reporting a sustained
+//! condition every window; the policy engine's armed/cooldown state is
+//! what turns that stream into at-most-one action per episode.
+
+use crate::telemetry::CLASS_BUCKETS;
+
+use super::signal::SignalWindow;
+
+/// The condition vocabulary rules can match on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SignalKind {
+    /// Attacker-class share climbing over its quiet baseline.
+    DdosRamp,
+    /// Class-mix drifting away from the learned reference mix.
+    Drift,
+    /// Queue pressure: drops / backpressure per ingested frame.
+    Overload,
+    /// Shard load imbalance (flow-affinity skew).
+    Imbalance,
+}
+
+/// Every kind name [`SignalKind::parse`] accepts.
+pub const SIGNAL_KIND_NAMES: &[&str] = &["ddos-ramp", "drift", "overload", "imbalance"];
+
+impl SignalKind {
+    /// The policy-file spelling of this kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            SignalKind::DdosRamp => "ddos-ramp",
+            SignalKind::Drift => "drift",
+            SignalKind::Overload => "overload",
+            SignalKind::Imbalance => "imbalance",
+        }
+    }
+
+    /// Parse a policy-file spelling.
+    pub fn parse(s: &str) -> crate::error::Result<Self> {
+        match s {
+            "ddos-ramp" => Ok(SignalKind::DdosRamp),
+            "drift" => Ok(SignalKind::Drift),
+            "overload" => Ok(SignalKind::Overload),
+            "imbalance" => Ok(SignalKind::Imbalance),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown detector {other:?} (expected one of {})",
+                SIGNAL_KIND_NAMES.join("|")
+            ))),
+        }
+    }
+}
+
+/// One fired condition.
+#[derive(Clone, Debug)]
+pub struct Detection {
+    pub kind: SignalKind,
+    /// How far past the threshold the condition is (detector-specific
+    /// units; policies can gate on it via `min-severity`).
+    pub severity: f64,
+    /// Virtual-clock window the condition was observed in.
+    pub window: u64,
+    /// Human-readable cause, for the event log.
+    pub detail: String,
+}
+
+/// A condition monitor. `observe` is called once per window, in window
+/// order.
+pub trait Detector: Send {
+    fn kind(&self) -> SignalKind;
+    fn observe(&mut self, window: &SignalWindow) -> Option<Detection>;
+}
+
+/// DDoS ramp: the attacker-class share of the served traffic rising
+/// over its quiet baseline. The baseline is learned from quiet windows
+/// (slow EWMA, so the detector tracks genuine workload shifts without
+/// absorbing an ongoing ramp), and a detection needs `min_windows`
+/// consecutive above-threshold windows so one noisy window never
+/// triggers the control loop.
+pub struct DdosRampDetector {
+    /// Share rise over baseline that counts as a ramp.
+    pub ramp_threshold: f64,
+    /// Consecutive ramping windows required before detecting.
+    pub min_windows: u32,
+    /// Quiet-window baseline tracking rate.
+    pub baseline_alpha: f64,
+    baseline: Option<f64>,
+    streak: u32,
+}
+
+impl Default for DdosRampDetector {
+    fn default() -> Self {
+        Self {
+            ramp_threshold: 0.12,
+            min_windows: 2,
+            baseline_alpha: 0.05,
+            baseline: None,
+            streak: 0,
+        }
+    }
+}
+
+impl Detector for DdosRampDetector {
+    fn kind(&self) -> SignalKind {
+        SignalKind::DdosRamp
+    }
+
+    fn observe(&mut self, w: &SignalWindow) -> Option<Detection> {
+        if w.packets == 0 {
+            return None;
+        }
+        let share = w.positive_share();
+        let baseline = *self.baseline.get_or_insert(share);
+        let rise = share - baseline;
+        if rise >= self.ramp_threshold {
+            self.streak += 1;
+        } else {
+            self.streak = 0;
+            self.baseline = Some(baseline + self.baseline_alpha * (share - baseline));
+        }
+        if self.streak >= self.min_windows {
+            Some(Detection {
+                kind: SignalKind::DdosRamp,
+                severity: rise,
+                window: w.index,
+                detail: format!(
+                    "attacker share {share:.2} is {rise:+.2} over baseline \
+                     {baseline:.2} for {} windows",
+                    self.streak
+                ),
+            })
+        } else {
+            None
+        }
+    }
+}
+
+/// Class-mix drift: total-variation distance between the window's
+/// output-class distribution and a slow EWMA reference of past quiet
+/// windows. The reference only learns from windows that did NOT fire,
+/// so a sustained shift keeps reporting instead of being absorbed.
+pub struct DriftDetector {
+    /// Total-variation distance that counts as drift.
+    pub distance_threshold: f64,
+    /// Reference-mix tracking rate on quiet windows.
+    pub alpha: f64,
+    reference: Option<[f64; CLASS_BUCKETS]>,
+}
+
+impl Default for DriftDetector {
+    fn default() -> Self {
+        Self { distance_threshold: 0.25, alpha: 0.2, reference: None }
+    }
+}
+
+impl Detector for DriftDetector {
+    fn kind(&self) -> SignalKind {
+        SignalKind::Drift
+    }
+
+    fn observe(&mut self, w: &SignalWindow) -> Option<Detection> {
+        if w.packets == 0 {
+            return None;
+        }
+        let shares = w.class_shares();
+        let reference = match &mut self.reference {
+            None => {
+                self.reference = Some(shares);
+                return None;
+            }
+            Some(r) => r,
+        };
+        let distance = w.class_distance(reference);
+        if distance >= self.distance_threshold {
+            return Some(Detection {
+                kind: SignalKind::Drift,
+                severity: distance,
+                window: w.index,
+                detail: format!(
+                    "class mix moved {distance:.2} (total variation) from the \
+                     reference mix"
+                ),
+            });
+        }
+        for (r, s) in reference.iter_mut().zip(&shares) {
+            *r += self.alpha * (s - *r);
+        }
+        None
+    }
+}
+
+/// Overload: drops + backpressure waits per ingested frame.
+pub struct OverloadDetector {
+    /// Pressure events per ingested frame that count as overload.
+    pub rate_threshold: f64,
+    /// Ignore windows smaller than this (rate estimates are noise).
+    pub min_ingested: u64,
+}
+
+impl Default for OverloadDetector {
+    fn default() -> Self {
+        Self { rate_threshold: 0.05, min_ingested: 64 }
+    }
+}
+
+impl Detector for OverloadDetector {
+    fn kind(&self) -> SignalKind {
+        SignalKind::Overload
+    }
+
+    fn observe(&mut self, w: &SignalWindow) -> Option<Detection> {
+        if w.ingested() < self.min_ingested {
+            return None;
+        }
+        let rate = w.pressure_rate();
+        if rate >= self.rate_threshold {
+            Some(Detection {
+                kind: SignalKind::Overload,
+                severity: rate,
+                window: w.index,
+                detail: format!(
+                    "{} drops + {} backpressure waits over {} ingested \
+                     ({rate:.3}/frame)",
+                    w.dropped,
+                    w.backpressure_waits,
+                    w.ingested()
+                ),
+            })
+        } else {
+            None
+        }
+    }
+}
+
+/// Shard imbalance: windowed max/mean shard load (the same statistic as
+/// [`crate::coordinator::ShardedReport::imbalance`], computed per
+/// window so a transient heavy hitter is visible while it lasts).
+pub struct ImbalanceDetector {
+    /// max/mean ratio that counts as imbalanced (1.0 = perfect).
+    pub ratio_threshold: f64,
+    /// Ignore windows smaller than this.
+    pub min_packets: u64,
+}
+
+impl Default for ImbalanceDetector {
+    fn default() -> Self {
+        Self { ratio_threshold: 2.0, min_packets: 256 }
+    }
+}
+
+impl Detector for ImbalanceDetector {
+    fn kind(&self) -> SignalKind {
+        SignalKind::Imbalance
+    }
+
+    fn observe(&mut self, w: &SignalWindow) -> Option<Detection> {
+        if w.packets < self.min_packets || w.per_shard_packets.len() < 2 {
+            return None;
+        }
+        let ratio = w.imbalance();
+        if ratio >= self.ratio_threshold {
+            Some(Detection {
+                kind: SignalKind::Imbalance,
+                severity: ratio,
+                window: w.index,
+                detail: format!(
+                    "shard load max/mean {ratio:.2} over {} shards",
+                    w.per_shard_packets.len()
+                ),
+            })
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window(index: u64, per_shard: Vec<u64>, positive: u64) -> SignalWindow {
+        let packets: u64 = per_shard.iter().sum();
+        let mut classes = [0u64; CLASS_BUCKETS];
+        classes[1] = positive;
+        classes[0] = packets - positive;
+        SignalWindow {
+            index,
+            per_shard_packets: per_shard,
+            packets,
+            batches: packets / 8,
+            parse_errors: 0,
+            dropped: 0,
+            backpressure_waits: 0,
+            classes,
+            version_min: 1,
+            version_max: 1,
+            latency_p50_ns: 0.0,
+            latency_p99_ns: 0.0,
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrips_and_enumerates() {
+        for name in SIGNAL_KIND_NAMES {
+            assert_eq!(SignalKind::parse(name).unwrap().name(), *name);
+        }
+        let err = SignalKind::parse("latency").unwrap_err().to_string();
+        for name in SIGNAL_KIND_NAMES {
+            assert!(err.contains(name), "{err}");
+        }
+    }
+
+    #[test]
+    fn ddos_ramp_needs_a_sustained_rise_and_tracks_baseline() {
+        let mut d = DdosRampDetector::default();
+        // Quiet traffic around 50% positive: no detection, ever.
+        for i in 0..5 {
+            assert!(d.observe(&window(i, vec![500, 500], 500)).is_none());
+        }
+        // One noisy spike: still nothing (min_windows = 2).
+        assert!(d.observe(&window(5, vec![500, 500], 700)).is_none());
+        // A sustained ramp fires, with severity = rise over baseline.
+        let det = d
+            .observe(&window(6, vec![500, 500], 750))
+            .expect("second ramping window detects");
+        assert_eq!(det.kind, SignalKind::DdosRamp);
+        assert!(det.severity > 0.2, "severity {}", det.severity);
+        // The condition keeps reporting while the ramp lasts.
+        assert!(d.observe(&window(7, vec![500, 500], 800)).is_some());
+        // Quiet again: clears, baseline re-tracks slowly.
+        assert!(d.observe(&window(8, vec![500, 500], 500)).is_none());
+    }
+
+    #[test]
+    fn ddos_ramp_ignores_empty_windows() {
+        let mut d = DdosRampDetector::default();
+        assert!(d.observe(&window(0, vec![0, 0], 0)).is_none());
+    }
+
+    #[test]
+    fn drift_fires_on_mix_shift_and_reference_does_not_absorb_it() {
+        let mut d = DriftDetector::default();
+        assert!(d.observe(&window(0, vec![512], 256)).is_none(), "learns first");
+        assert!(d.observe(&window(1, vec![512], 260)).is_none(), "stable mix");
+        let det = d.observe(&window(2, vec![512], 500)).expect("big shift");
+        assert_eq!(det.kind, SignalKind::Drift);
+        assert!(det.severity >= 0.25);
+        // Sustained shift keeps firing — the reference only learns from
+        // quiet windows.
+        assert!(d.observe(&window(3, vec![512], 500)).is_some());
+    }
+
+    #[test]
+    fn overload_and_imbalance_threshold() {
+        let mut o = OverloadDetector::default();
+        let mut w = window(0, vec![400, 400], 0);
+        assert!(o.observe(&w).is_none());
+        w.dropped = 60;
+        assert!(o.observe(&w).is_some());
+        w.dropped = 0;
+        w.backpressure_waits = 60;
+        assert!(o.observe(&w).is_some(), "waits count as pressure too");
+        // Tiny windows are ignored.
+        let mut tiny = window(1, vec![4, 4], 0);
+        tiny.dropped = 8;
+        assert!(o.observe(&tiny).is_none());
+
+        let mut i = ImbalanceDetector::default();
+        assert!(i.observe(&window(0, vec![500, 500], 0)).is_none());
+        let det = i
+            .observe(&window(1, vec![700, 100, 100, 100], 0))
+            .expect("skewed");
+        assert_eq!(det.kind, SignalKind::Imbalance);
+        assert!(det.severity > 1.5);
+        // Single-shard tiers have no imbalance to speak of.
+        assert!(i.observe(&window(2, vec![1000], 0)).is_none());
+    }
+}

@@ -1,0 +1,62 @@
+//! `n2net::controlplane` — closed-loop adaptive model control over the
+//! sharded serving tier (DESIGN.md §13).
+//!
+//! The paper closes by calling N2Net "an interesting building block for
+//! future end-to-end networked systems": the switch runs the model, but
+//! something above it must decide *which* model runs as traffic
+//! conditions change (Brain-on-Switch steers the data plane from NN
+//! traffic analysis; the model-switching line of work swaps models
+//! in-network as conditions shift). This module is that something — the
+//! loop that closes over everything the crate already has:
+//!
+//! ```text
+//!  ShardedEngine ──snapshot()──▶ SignalCollector ──SignalWindow──▶ Detectors
+//!       ▲                         (diff cumulative                   │
+//!       │                          counters; the                 Detections
+//!       │                          virtual clock)                    │
+//!       │                                                            ▼
+//!  Deployment::swap_model ◀── SwapHandle ◀── Controller ◀── PolicyEngine
+//!  (recompile off hot path,                  (ModelBank)    (hysteresis:
+//!   publish atomically)                                      one action
+//!                                                            per episode)
+//! ```
+//!
+//! Layering, bottom-up:
+//!
+//! * [`signal`] — [`SignalWindow`]s: windowed per-shard throughput,
+//!   drop/backpressure counts, class-mix histogram, latency
+//!   percentiles, and hot-swap version skew, produced by differencing
+//!   consecutive [`TierSnapshot`](crate::coordinator::TierSnapshot)s.
+//!   Collection is pull-based and adds zero per-packet work.
+//! * [`detect`] — pluggable [`Detector`]s over consecutive windows:
+//!   ddos-ramp (attacker-share slope), drift (class-mix distance),
+//!   overload (pressure rate), imbalance (shard skew).
+//! * [`policy`] — declarative [`Policy`] rules (condition → action)
+//!   evaluated by a [`PolicyEngine`] with hysteresis and cooldown, so
+//!   a sustained condition acts once and the loop never flaps.
+//! * [`controller`] — the [`Controller`]: tick(snapshot) → detections →
+//!   firings → actions executed through a
+//!   [`SwapHandle`](crate::deploy::SwapHandle) against a [`ModelBank`]
+//!   of candidate artifacts. A rejected swap never disturbs serving.
+//! * [`sim`] — the deterministic harness: scenario *sequences* driven
+//!   through a real [`ShardedEngine`](crate::coordinator::ShardedEngine)
+//!   window by window on a virtual clock, measuring reaction windows,
+//!   false swaps, and pre/post-swap oracle accuracy.
+//!
+//! CLI: `n2net autopilot` runs the loop over a scenario sequence;
+//! `n2net serve --adaptive --policy <file>` attaches it to a serve run.
+
+pub mod controller;
+pub mod detect;
+pub mod policy;
+pub mod signal;
+pub mod sim;
+
+pub use controller::{ControlEvent, Controller, ModelBank, Outcome, TickReport};
+pub use detect::{
+    DdosRampDetector, Detection, Detector, DriftDetector, ImbalanceDetector,
+    OverloadDetector, SignalKind, SIGNAL_KIND_NAMES,
+};
+pub use policy::{Action, Firing, Policy, PolicyEngine, Rule, DEFAULT_COOLDOWN};
+pub use signal::{SignalCollector, SignalWindow};
+pub use sim::{prefix_classifier, sim_ddos, Sim, SimConfig, SimReport, SwapRecord};

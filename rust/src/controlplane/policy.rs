@@ -1,0 +1,330 @@
+//! Declarative policies: condition → action, with hysteresis
+//! (DESIGN.md §13).
+//!
+//! A [`Policy`] is a list of [`Rule`]s, each mapping one
+//! [`SignalKind`] to one [`Action`]. The [`PolicyEngine`] adds the
+//! anti-flap state machine: a rule that fires is **disarmed** and only
+//! re-arms after (a) at least `cooldown` windows have passed since it
+//! fired AND (b) the condition has *cleared* (a window with no matching
+//! detection). A sustained condition therefore produces exactly one
+//! action per episode — detectors keep reporting, the engine keeps the
+//! rule disarmed — and an attack that subsides and returns produces one
+//! action per episode, never a swap storm.
+//!
+//! Policy files are line-based (`#` comments):
+//!
+//! ```text
+//! on ddos-ramp do swap attack-heavy cooldown=6 min-severity=0.2
+//! on overload  do alert
+//! on drift     do fallback cooldown=10
+//! ```
+
+use crate::error::{Error, Result};
+
+use super::detect::{Detection, SignalKind};
+
+/// What a fired rule does. Swap targets name entries in the
+/// controller's model bank ([`super::ModelBank`]); `Fallback` targets
+/// the bank's designated default artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Hot-swap the serving model to the named bank artifact.
+    SwapModel(String),
+    /// Hot-swap back to the bank's default artifact.
+    Fallback,
+    /// Log only; no data-plane change.
+    Alert,
+}
+
+impl Action {
+    /// The policy-file spelling.
+    pub fn render(&self) -> String {
+        match self {
+            Action::SwapModel(name) => format!("swap {name}"),
+            Action::Fallback => "fallback".into(),
+            Action::Alert => "alert".into(),
+        }
+    }
+}
+
+/// One condition → action mapping.
+#[derive(Clone, Debug)]
+pub struct Rule {
+    pub on: SignalKind,
+    /// Ignore detections weaker than this.
+    pub min_severity: f64,
+    pub action: Action,
+    /// Windows after firing before the rule may re-arm (re-arming also
+    /// needs the condition to clear — see module docs).
+    pub cooldown: u64,
+}
+
+/// Default cooldown (windows) when a rule does not specify one.
+pub const DEFAULT_COOLDOWN: u64 = 4;
+
+/// A parsed, orderable set of rules.
+#[derive(Clone, Debug, Default)]
+pub struct Policy {
+    pub rules: Vec<Rule>,
+}
+
+impl Policy {
+    /// Parse the line-based policy grammar (see module docs). Unknown
+    /// detector names fail with the name-enumerating
+    /// [`SignalKind::parse`] error.
+    pub fn parse(text: &str) -> Result<Policy> {
+        let mut rules = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: String| {
+                Error::Config(format!("policy line {}: {msg}", lineno + 1))
+            };
+            let mut tokens = line.split_whitespace();
+            if tokens.next() != Some("on") {
+                return Err(err(format!("expected `on <detector> do <action>`, got {line:?}")));
+            }
+            let kind = SignalKind::parse(
+                tokens.next().ok_or_else(|| err("missing detector name".into()))?,
+            )?;
+            if tokens.next() != Some("do") {
+                return Err(err("expected `do` after the detector name".into()));
+            }
+            let action = match tokens.next() {
+                Some("swap") => Action::SwapModel(
+                    tokens
+                        .next()
+                        .ok_or_else(|| err("`swap` needs a bank model name".into()))?
+                        .to_string(),
+                ),
+                Some("fallback") => Action::Fallback,
+                Some("alert") => Action::Alert,
+                other => {
+                    return Err(err(format!(
+                        "unknown action {other:?} (expected swap <model>|fallback|alert)"
+                    )))
+                }
+            };
+            let mut rule = Rule {
+                on: kind,
+                min_severity: 0.0,
+                action,
+                cooldown: DEFAULT_COOLDOWN,
+            };
+            for opt in tokens {
+                match opt.split_once('=') {
+                    Some(("cooldown", v)) => {
+                        rule.cooldown = v.parse().map_err(|_| {
+                            err(format!("cooldown={v:?} is not an integer"))
+                        })?;
+                    }
+                    Some(("min-severity", v)) => {
+                        rule.min_severity = v.parse().map_err(|_| {
+                            err(format!("min-severity={v:?} is not a number"))
+                        })?;
+                    }
+                    _ => {
+                        return Err(err(format!(
+                            "unknown option {opt:?} (expected cooldown=N|min-severity=X)"
+                        )))
+                    }
+                }
+            }
+            rules.push(rule);
+        }
+        if rules.is_empty() {
+            return Err(Error::Config(
+                "empty policy: need at least one `on <detector> do <action>` rule"
+                    .into(),
+            ));
+        }
+        Ok(Policy { rules })
+    }
+
+    /// Render back to the policy-file grammar.
+    pub fn render(&self) -> String {
+        self.rules
+            .iter()
+            .map(|r| {
+                format!(
+                    "on {} do {} cooldown={} min-severity={}\n",
+                    r.on.name(),
+                    r.action.render(),
+                    r.cooldown,
+                    r.min_severity
+                )
+            })
+            .collect()
+    }
+}
+
+/// One rule firing this window.
+#[derive(Clone, Debug)]
+pub struct Firing {
+    /// Index of the fired rule in the policy.
+    pub rule: usize,
+    pub action: Action,
+    /// The detection that triggered it.
+    pub detection: Detection,
+}
+
+/// Per-rule armed/cooldown state.
+#[derive(Clone, Copy, Debug)]
+struct RuleState {
+    armed: bool,
+    last_fired: u64,
+}
+
+/// The policy evaluator: rules + hysteresis state.
+pub struct PolicyEngine {
+    policy: Policy,
+    states: Vec<RuleState>,
+}
+
+impl PolicyEngine {
+    pub fn new(policy: Policy) -> Self {
+        let states = vec![RuleState { armed: true, last_fired: 0 }; policy.rules.len()];
+        Self { policy, states }
+    }
+
+    pub fn policy(&self) -> &Policy {
+        &self.policy
+    }
+
+    /// Evaluate one window's detections; returns the rules that fire.
+    /// Call exactly once per window, in window order — re-arming is
+    /// driven by the windows where a rule's condition is absent.
+    pub fn decide(&mut self, window: u64, detections: &[Detection]) -> Vec<Firing> {
+        let mut firings = Vec::new();
+        for (i, rule) in self.policy.rules.iter().enumerate() {
+            let state = &mut self.states[i];
+            let hit = detections
+                .iter()
+                .find(|d| d.kind == rule.on && d.severity >= rule.min_severity);
+            match hit {
+                Some(d) => {
+                    if state.armed {
+                        state.armed = false;
+                        state.last_fired = window;
+                        firings.push(Firing {
+                            rule: i,
+                            action: rule.action.clone(),
+                            detection: d.clone(),
+                        });
+                    }
+                    // Disarmed + still detecting: hysteresis holds the
+                    // rule down; nothing fires, nothing re-arms.
+                }
+                None => {
+                    // Condition clear: re-arm once the cooldown has
+                    // also passed.
+                    if !state.armed && window >= state.last_fired + rule.cooldown {
+                        state.armed = true;
+                    }
+                }
+            }
+        }
+        firings
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(kind: SignalKind, severity: f64, window: u64) -> Detection {
+        Detection { kind, severity, window, detail: String::new() }
+    }
+
+    #[test]
+    fn parse_grammar_and_render_roundtrip() {
+        let text = "\
+            # comment\n\
+            on ddos-ramp do swap attack-heavy cooldown=6 min-severity=0.2\n\
+            on overload do alert\n\
+            on drift do fallback cooldown=10  # trailing comment\n";
+        let p = Policy::parse(text).unwrap();
+        assert_eq!(p.rules.len(), 3);
+        assert_eq!(p.rules[0].on, SignalKind::DdosRamp);
+        assert_eq!(p.rules[0].action, Action::SwapModel("attack-heavy".into()));
+        assert_eq!(p.rules[0].cooldown, 6);
+        assert!((p.rules[0].min_severity - 0.2).abs() < 1e-12);
+        assert_eq!(p.rules[1].action, Action::Alert);
+        assert_eq!(p.rules[1].cooldown, DEFAULT_COOLDOWN);
+        assert_eq!(p.rules[2].action, Action::Fallback);
+        // Render parses back to the same rules.
+        let p2 = Policy::parse(&p.render()).unwrap();
+        assert_eq!(p2.rules.len(), 3);
+        assert_eq!(p2.rules[0].cooldown, 6);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(Policy::parse("").is_err(), "empty policy");
+        assert!(Policy::parse("when drift do alert").is_err());
+        assert!(Policy::parse("on drift alert").is_err(), "missing do");
+        assert!(Policy::parse("on drift do reboot").is_err());
+        assert!(Policy::parse("on drift do swap").is_err(), "swap needs a name");
+        assert!(Policy::parse("on drift do alert cooldown=x").is_err());
+        assert!(Policy::parse("on drift do alert volume=11").is_err());
+        let err = Policy::parse("on latency do alert").unwrap_err().to_string();
+        assert!(err.contains("ddos-ramp"), "kind error enumerates names: {err}");
+    }
+
+    #[test]
+    fn sustained_condition_fires_exactly_once() {
+        let p = Policy::parse("on ddos-ramp do swap attack cooldown=3").unwrap();
+        let mut e = PolicyEngine::new(p);
+        // Windows 0..6: the condition holds the whole time.
+        let mut fired = 0;
+        for w in 0..6 {
+            fired += e.decide(w, &[det(SignalKind::DdosRamp, 0.5, w)]).len();
+        }
+        assert_eq!(fired, 1, "hysteresis: one action per episode");
+        // Condition clears at window 6 (cooldown already elapsed), so
+        // the rule re-arms and a NEW episode fires once more.
+        assert!(e.decide(6, &[]).is_empty());
+        let again = e.decide(7, &[det(SignalKind::DdosRamp, 0.5, 7)]);
+        assert_eq!(again.len(), 1);
+        assert_eq!(again[0].action, Action::SwapModel("attack".into()));
+    }
+
+    #[test]
+    fn rearm_needs_both_clear_and_cooldown() {
+        let p = Policy::parse("on overload do alert cooldown=10").unwrap();
+        let mut e = PolicyEngine::new(p);
+        assert_eq!(e.decide(0, &[det(SignalKind::Overload, 1.0, 0)]).len(), 1);
+        // Clear at window 2 — but cooldown runs to window 10.
+        assert!(e.decide(2, &[]).is_empty());
+        assert!(
+            e.decide(5, &[det(SignalKind::Overload, 1.0, 5)]).is_empty(),
+            "cleared but still cooling down"
+        );
+        // The detection at window 5 does NOT restart the cooldown; the
+        // next clear window past 10 re-arms.
+        assert!(e.decide(11, &[]).is_empty());
+        assert_eq!(e.decide(12, &[det(SignalKind::Overload, 1.0, 12)]).len(), 1);
+    }
+
+    #[test]
+    fn severity_gate_and_kind_match() {
+        let p = Policy::parse(
+            "on drift do fallback min-severity=0.5\non overload do alert",
+        )
+        .unwrap();
+        let mut e = PolicyEngine::new(p);
+        assert!(
+            e.decide(0, &[det(SignalKind::Drift, 0.3, 0)]).is_empty(),
+            "below min-severity"
+        );
+        let f = e.decide(
+            1,
+            &[det(SignalKind::Drift, 0.6, 1), det(SignalKind::Overload, 0.2, 1)],
+        );
+        assert_eq!(f.len(), 2, "independent rules fire independently");
+        assert!(f.iter().any(|x| x.action == Action::Fallback));
+        assert!(f.iter().any(|x| x.action == Action::Alert));
+    }
+}

@@ -1,0 +1,348 @@
+//! Windowed signals over the serving tier (DESIGN.md §13).
+//!
+//! Collection is **pull-based**: the serving tier maintains cumulative
+//! atomic counters anyway ([`crate::coordinator::ShardTelemetry`], the
+//! class mix, the latency histogram); the controller pulls a
+//! [`TierSnapshot`] whenever its virtual clock ticks and the
+//! [`SignalCollector`] differences consecutive snapshots into one
+//! [`SignalWindow`]. Nothing is injected on the per-packet path — no
+//! channel sends, no locks, no sampling callbacks — so a tier with no
+//! controller attached and a tier snapshotted every window execute the
+//! same per-packet instructions (the controlplane bench holds the
+//! overhead at ~zero).
+
+use crate::coordinator::{load_imbalance, ShardCounts, TierSnapshot};
+use crate::telemetry::{quantile_ns_from_buckets, CLASS_BUCKETS};
+
+/// One window of serving signals: everything the detectors read, as
+/// plain numbers. `index` is the controller's virtual clock — windows
+/// are whatever span separates two snapshots, so tests drive the loop
+/// with no wall-clock at all.
+#[derive(Clone, Debug)]
+pub struct SignalWindow {
+    /// Virtual-clock index (0 for the first window the collector saw).
+    pub index: u64,
+    /// Frames classified per shard within the window.
+    pub per_shard_packets: Vec<u64>,
+    /// Frames classified across all shards within the window.
+    pub packets: u64,
+    /// Batches executed within the window.
+    pub batches: u64,
+    pub parse_errors: u64,
+    /// Frames shed at full queues within the window.
+    pub dropped: u64,
+    /// Dispatcher backpressure waits within the window.
+    pub backpressure_waits: u64,
+    /// Output-class histogram of the window (low-bits bucketing, see
+    /// [`crate::telemetry::ClassMix`]).
+    pub classes: [u64; CLASS_BUCKETS],
+    /// Lowest / highest publication version any shard currently serves
+    /// (equal except transiently during a hot-swap).
+    pub version_min: u64,
+    pub version_max: u64,
+    /// Batch-latency percentiles of the window (0.0 when no batch
+    /// completed in it). Wall-clock derived — informational in tests.
+    pub latency_p50_ns: f64,
+    pub latency_p99_ns: f64,
+}
+
+impl SignalWindow {
+    /// Frames that arrived at the tier in this window (classified or
+    /// shed).
+    pub fn ingested(&self) -> u64 {
+        self.packets + self.dropped
+    }
+
+    /// Share of the window's outputs in any non-zero class — for a
+    /// binary classifier head, exactly the attacker-class share.
+    pub fn positive_share(&self) -> f64 {
+        let total: u64 = self.classes.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        (total - self.classes[0]) as f64 / total as f64
+    }
+
+    /// Normalized class distribution of the window.
+    pub fn class_shares(&self) -> [f64; CLASS_BUCKETS] {
+        let total: u64 = self.classes.iter().sum();
+        let mut out = [0.0; CLASS_BUCKETS];
+        if total == 0 {
+            return out;
+        }
+        for (o, &c) in out.iter_mut().zip(&self.classes) {
+            *o = c as f64 / total as f64;
+        }
+        out
+    }
+
+    /// Total-variation distance between this window's class mix and a
+    /// reference mix (0.0 = identical, 1.0 = disjoint).
+    pub fn class_distance(&self, reference: &[f64; CLASS_BUCKETS]) -> f64 {
+        let mine = self.class_shares();
+        0.5 * mine
+            .iter()
+            .zip(reference)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+    }
+
+    /// max/mean shard load within the window — the windowed analogue of
+    /// [`crate::coordinator::ShardedReport::imbalance`], computed by the
+    /// same [`load_imbalance`] kernel and carrying the same guarantee:
+    /// 0.0 (never NaN) for an idle window.
+    pub fn imbalance(&self) -> f64 {
+        load_imbalance(&self.per_shard_packets)
+    }
+
+    /// Shed + backpressure events per ingested frame — the overload
+    /// signal. 0.0 for an idle window.
+    pub fn pressure_rate(&self) -> f64 {
+        let ingested = self.ingested();
+        if ingested == 0 {
+            return 0.0;
+        }
+        (self.dropped + self.backpressure_waits) as f64 / ingested as f64
+    }
+
+    /// Hot-swap version spread across shards.
+    pub fn version_skew(&self) -> u64 {
+        self.version_max - self.version_min
+    }
+
+    /// One compact log line.
+    pub fn render(&self) -> String {
+        format!(
+            "w{:<3} pkts={:<6} pos={:.2} drop={} waits={} errs={} imb={:.2} \
+             v{}..v{} p50={:.0}ns p99={:.0}ns",
+            self.index,
+            self.packets,
+            self.positive_share(),
+            self.dropped,
+            self.backpressure_waits,
+            self.parse_errors,
+            self.imbalance(),
+            self.version_min,
+            self.version_max,
+            self.latency_p50_ns,
+            self.latency_p99_ns,
+        )
+    }
+}
+
+/// Differences consecutive [`TierSnapshot`]s into [`SignalWindow`]s and
+/// keeps the virtual clock.
+#[derive(Default)]
+pub struct SignalCollector {
+    last: Option<TierSnapshot>,
+    next_index: u64,
+}
+
+impl SignalCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Windows observed so far (the next window's index).
+    pub fn windows_seen(&self) -> u64 {
+        self.next_index
+    }
+
+    /// Fold the next snapshot in; returns the window between the
+    /// previous snapshot (or zero, for the first call) and this one.
+    pub fn window(&mut self, snap: TierSnapshot) -> SignalWindow {
+        let empty = TierSnapshot::default();
+        let prev = match &self.last {
+            Some(p) if p.per_shard.len() == snap.per_shard.len() => p,
+            // A tier reshaped under us (different shard count) cannot be
+            // diffed meaningfully: emit an EMPTY window (diff snap
+            // against itself) and re-baseline from here — an absolute
+            // window would dump the new tier's whole cumulative history
+            // into one tick and trip every detector.
+            Some(_) => &snap,
+            None => &empty,
+        };
+        // All diffs saturate: a counter that went BACKWARDS (the tier
+        // was rebuilt / reset between snapshots — e.g. a same-width
+        // reshard) reads as an empty window rather than underflowing
+        // into a ~2^64-packet one that would poison every detector.
+        let zero = ShardCounts::default();
+        let shard_diff = |i: usize| {
+            let a = snap.per_shard[i];
+            let b = prev.per_shard.get(i).copied().unwrap_or(zero);
+            ShardCounts {
+                packets: a.packets.saturating_sub(b.packets),
+                batches: a.batches.saturating_sub(b.batches),
+                parse_errors: a.parse_errors.saturating_sub(b.parse_errors),
+                dropped: a.dropped.saturating_sub(b.dropped),
+                backpressure_waits: a
+                    .backpressure_waits
+                    .saturating_sub(b.backpressure_waits),
+                model_version: a.model_version,
+            }
+        };
+        let diffs: Vec<ShardCounts> =
+            (0..snap.per_shard.len()).map(shard_diff).collect();
+        let mut classes = [0u64; CLASS_BUCKETS];
+        for (o, (a, b)) in classes
+            .iter_mut()
+            .zip(snap.classes.iter().zip(&prev.classes))
+        {
+            *o = a.saturating_sub(*b);
+        }
+        let lat: Vec<u64> = snap
+            .latency_buckets
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                a.saturating_sub(prev.latency_buckets.get(i).copied().unwrap_or(0))
+            })
+            .collect();
+        let window = SignalWindow {
+            index: self.next_index,
+            per_shard_packets: diffs.iter().map(|d| d.packets).collect(),
+            packets: diffs.iter().map(|d| d.packets).sum(),
+            batches: diffs.iter().map(|d| d.batches).sum(),
+            parse_errors: diffs.iter().map(|d| d.parse_errors).sum(),
+            dropped: diffs.iter().map(|d| d.dropped).sum(),
+            backpressure_waits: diffs.iter().map(|d| d.backpressure_waits).sum(),
+            classes,
+            version_min: snap
+                .per_shard
+                .iter()
+                .map(|s| s.model_version)
+                .min()
+                .unwrap_or(0),
+            version_max: snap
+                .per_shard
+                .iter()
+                .map(|s| s.model_version)
+                .max()
+                .unwrap_or(0),
+            latency_p50_ns: quantile_ns_from_buckets(&lat, 0.5),
+            latency_p99_ns: quantile_ns_from_buckets(&lat, 0.99),
+        };
+        self.last = Some(snap);
+        self.next_index += 1;
+        window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(per_shard: &[(u64, u64)], classes: [u64; CLASS_BUCKETS]) -> TierSnapshot {
+        TierSnapshot {
+            per_shard: per_shard
+                .iter()
+                .map(|&(packets, version)| ShardCounts {
+                    packets,
+                    batches: packets / 8,
+                    model_version: version,
+                    ..ShardCounts::default()
+                })
+                .collect(),
+            classes,
+            latency_buckets: vec![0; 48],
+        }
+    }
+
+    #[test]
+    fn collector_diffs_consecutive_snapshots() {
+        let mut c = SignalCollector::new();
+        let mut classes = [0u64; CLASS_BUCKETS];
+        classes[0] = 60;
+        classes[1] = 40;
+        let w0 = c.window(snap(&[(64, 1), (36, 1)], classes));
+        assert_eq!(w0.index, 0);
+        assert_eq!(w0.packets, 100, "first window is absolute");
+        assert_eq!(w0.per_shard_packets, vec![64, 36]);
+        assert!((w0.positive_share() - 0.4).abs() < 1e-12);
+        assert_eq!((w0.version_min, w0.version_max), (1, 1));
+        assert_eq!(w0.version_skew(), 0);
+
+        let mut classes2 = classes;
+        classes2[1] = 140; // +100 positive
+        let w1 = c.window(snap(&[(114, 1), (86, 2)], classes2));
+        assert_eq!(w1.index, 1);
+        assert_eq!(w1.packets, 100, "diffed against the previous snapshot");
+        assert_eq!(w1.per_shard_packets, vec![50, 50]);
+        assert!((w1.positive_share() - 1.0).abs() < 1e-12);
+        assert_eq!(w1.version_skew(), 1, "mid-swap skew surfaces");
+        assert_eq!(c.windows_seen(), 2);
+    }
+
+    #[test]
+    fn idle_window_signals_are_zero_and_finite() {
+        let mut c = SignalCollector::new();
+        let s = snap(&[(10, 1), (10, 1)], [0; CLASS_BUCKETS]);
+        c.window(s.clone());
+        let idle = c.window(s);
+        assert_eq!(idle.packets, 0);
+        assert_eq!(idle.positive_share(), 0.0);
+        assert_eq!(idle.imbalance(), 0.0, "never NaN on an idle window");
+        assert_eq!(idle.pressure_rate(), 0.0);
+        assert!(idle.imbalance().is_finite());
+        assert!(idle.render().starts_with("w1"));
+    }
+
+    #[test]
+    fn class_distance_is_total_variation() {
+        let mut c = SignalCollector::new();
+        let mut classes = [0u64; CLASS_BUCKETS];
+        classes[0] = 50;
+        classes[1] = 50;
+        let w = c.window(snap(&[(100, 1)], classes));
+        let mut reference = [0.0; CLASS_BUCKETS];
+        reference[0] = 1.0;
+        assert!((w.class_distance(&reference) - 0.5).abs() < 1e-12);
+        assert!((w.class_distance(&w.class_shares())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_tracks_skewed_windows() {
+        let mut c = SignalCollector::new();
+        let w = c.window(snap(&[(300, 1), (50, 1), (50, 1), (0, 1)], [0; 8]));
+        assert!((w.imbalance() - 3.0).abs() < 1e-12, "{}", w.imbalance());
+    }
+
+    #[test]
+    fn reshaped_tier_reads_as_empty_window_then_rebaselines() {
+        // Re-pointing the collector at a tier with a different shard
+        // count (a reshard) must not dump that tier's cumulative
+        // history into one window.
+        let mut c = SignalCollector::new();
+        c.window(snap(&[(100, 1), (100, 1)], [0; CLASS_BUCKETS]));
+        let mut classes = [0u64; CLASS_BUCKETS];
+        classes[1] = 9_000;
+        let w = c.window(snap(&[(5_000, 1), (5_000, 1), (5_000, 1)], classes));
+        assert_eq!(w.packets, 0, "reshape tick is empty, not absolute");
+        assert_eq!(w.classes.iter().sum::<u64>(), 0);
+        assert_eq!(w.per_shard_packets, vec![0, 0, 0]);
+        // The reshaped snapshot became the new baseline.
+        let w = c.window(snap(&[(5_100, 1), (5_050, 1), (5_000, 1)], classes));
+        assert_eq!(w.packets, 150);
+    }
+
+    #[test]
+    fn counter_reset_reads_as_empty_window_not_underflow() {
+        // A tier rebuilt between snapshots (same shard count, counters
+        // back to ~0) must produce an empty-ish window, never a
+        // wrapped-around 2^64-packet one.
+        let mut c = SignalCollector::new();
+        let mut classes = [0u64; CLASS_BUCKETS];
+        classes[1] = 400;
+        c.window(snap(&[(600, 1), (400, 1)], classes));
+        let mut small = [0u64; CLASS_BUCKETS];
+        small[1] = 5;
+        let w = c.window(snap(&[(10, 1), (5, 1)], small));
+        assert_eq!(w.packets, 0, "reset counters saturate to zero");
+        assert_eq!(w.classes.iter().sum::<u64>(), 0);
+        assert_eq!(w.imbalance(), 0.0);
+        assert!(w.positive_share().is_finite());
+        // And the collector recovers on the next well-ordered diff.
+        let w = c.window(snap(&[(110, 1), (55, 1)], small));
+        assert_eq!(w.packets, 150);
+    }
+}

@@ -1,0 +1,459 @@
+//! Deterministic closed-loop simulation harness (DESIGN.md §13).
+//!
+//! The sim drives a scenario *sequence* through a real
+//! [`ShardedEngine`] in fixed-size packet windows and ticks the
+//! [`Controller`] once per window — the virtual clock is the window
+//! index, and every window is processed to completion before its
+//! snapshot is taken, so a given (deployment, bank, policy, sequence,
+//! seed, window size) always produces the same windows, the same
+//! detections, and the same swaps. No wall-clock enters any decision.
+//!
+//! The [`SimReport`] measures the loop the way the paper's story needs
+//! measuring: *reaction* (windows from attack onset to the published
+//! swap), *false swaps* (publications no attack segment accounts for),
+//! and *accuracy* against the sequence's oracle labels before and after
+//! the swap.
+
+use std::sync::Arc;
+
+use crate::bnn::io::{DdosDoc, SubnetDoc};
+use crate::bnn::{BnnLayer, BnnModel, BnnSpec, PackedBits};
+use crate::coordinator::ShardedEngine;
+use crate::deploy::{Deployment, SwapHandle};
+use crate::error::Result;
+use crate::net::{ScenarioSequence, SegmentSpan, SequenceTrace};
+
+use super::controller::{Controller, ModelBank, Outcome, TickReport};
+use super::policy::Policy;
+
+/// Harness configuration. `window_packets` should stay at or below the
+/// tier's per-shard queue capacity so the lossless Block policy never
+/// backpressures mid-window (which would be a real signal, but a
+/// wall-clock-dependent one).
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Serving shards.
+    pub n_shards: usize,
+    /// Frames per virtual-clock window.
+    pub window_packets: usize,
+    /// Trace seed.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { n_shards: 2, window_packets: 512, seed: 7 }
+    }
+}
+
+/// One published swap observed by the sim.
+#[derive(Clone, Debug)]
+pub struct SwapRecord {
+    /// Window whose tick published it (serving picks it up from the
+    /// next window on).
+    pub window: u64,
+    pub model: String,
+    pub version: u64,
+}
+
+/// Result of one sim run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Frames per window this run used.
+    pub window_packets: usize,
+    /// Global index of this run's first window (the controller's
+    /// virtual clock keeps counting across runs on one [`Sim`]).
+    pub first_window: u64,
+    /// Output word per input frame, ingest order (the concatenation of
+    /// every window's outputs).
+    pub outputs: Vec<u32>,
+    /// Ground-truth labels, aligned with `outputs` (zero-padded where a
+    /// segment is unlabeled — see the segment map).
+    pub labels: Vec<u32>,
+    /// The sequence's segment map.
+    pub segments: Vec<SegmentSpan>,
+    /// Per-window controller reports, in window order.
+    pub ticks: Vec<TickReport>,
+    /// Published swaps (weight swaps and fallbacks), in order.
+    pub swaps: Vec<SwapRecord>,
+    /// Publications no attack segment accounts for — fired outside any
+    /// attack's live span (+2 windows of slack), or beyond the first
+    /// per segment. The loop's flap measure.
+    pub false_swaps: u64,
+    /// Windows from the first attack segment's onset to its attributed
+    /// swap, inclusive (None: no attack segment, or no swap for it).
+    pub reaction_windows: Option<u64>,
+    /// Swap attempts the deployment rejected (live model undisturbed).
+    pub rejected_swaps: u64,
+    /// Alert-only firings.
+    pub alerts: u64,
+    /// Classification accuracy over labeled frames served before /
+    /// after the first published swap (None when that side has no
+    /// labeled frames, or no swap happened for the post side).
+    pub accuracy_pre_swap: Option<f64>,
+    pub accuracy_post_swap: Option<f64>,
+}
+
+/// Index of the first frame served after the tick of `swap_window`
+/// published a new artifact (windows before and including it ran on
+/// the old model) — the single definition of the swap boundary, shared
+/// by [`SimReport::swap_boundary`] and the accuracy split in
+/// [`Sim::run_trace`].
+fn frame_boundary(swap_window: u64, first_window: u64, window_packets: usize) -> usize {
+    (swap_window.saturating_sub(first_window) as usize + 1) * window_packets
+}
+
+impl SimReport {
+    /// Index of the first frame served by the post-swap model (the
+    /// window after the publishing tick), when a swap happened.
+    /// Clamped to the run's frame count: a swap published on a partial
+    /// final window has no post-swap frames, and slicing
+    /// `outputs[boundary..]` must stay in bounds.
+    pub fn swap_boundary(&self) -> Option<usize> {
+        self.swaps.first().map(|s| {
+            frame_boundary(s.window, self.first_window, self.window_packets)
+                .min(self.outputs.len())
+        })
+    }
+
+    /// Human-readable run summary plus the event log.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "closed-loop sim: {} packets over {} windows of {}\n",
+            self.outputs.len(),
+            self.ticks.len(),
+            self.window_packets,
+        );
+        for seg in &self.segments {
+            s.push_str(&format!(
+                "  segment {:<18} frames {}..{}{}\n",
+                seg.scenario,
+                seg.start,
+                seg.start + seg.len,
+                if seg.labeled { " (labeled)" } else { "" },
+            ));
+        }
+        for t in &self.ticks {
+            for e in &t.events {
+                s.push_str(&format!("  {}\n", e.render()));
+            }
+        }
+        s.push_str(&format!(
+            "swaps={} false_swaps={} rejected={} alerts={}\n",
+            self.swaps.len(),
+            self.false_swaps,
+            self.rejected_swaps,
+            self.alerts,
+        ));
+        match self.reaction_windows {
+            Some(r) => s.push_str(&format!(
+                "reaction: swap published {r} window(s) after attack onset\n"
+            )),
+            None => s.push_str("reaction: no swap attributed to an attack segment\n"),
+        }
+        if let Some(a) = self.accuracy_pre_swap {
+            s.push_str(&format!("accuracy pre-swap:  {:.2}%\n", a * 100.0));
+        }
+        if let Some(a) = self.accuracy_post_swap {
+            s.push_str(&format!("accuracy post-swap: {:.2}%\n", a * 100.0));
+        }
+        s
+    }
+}
+
+/// The harness: one sharded engine + one controller, stepped window by
+/// window.
+pub struct Sim {
+    engine: ShardedEngine,
+    controller: Controller,
+    cfg: SimConfig,
+}
+
+impl Sim {
+    /// Build over a deployment's serving model. The engine comes from
+    /// [`Deployment::sharded_engine`] (so backend/batching follow the
+    /// deployment's configuration) and the controller's swap authority
+    /// from [`SwapHandle::new`].
+    pub fn new(
+        deployment: &Arc<Deployment>,
+        model: &str,
+        bank: ModelBank,
+        policy: Policy,
+        cfg: SimConfig,
+    ) -> Result<Self> {
+        let engine = deployment.sharded_engine(model, cfg.n_shards)?;
+        let handle = SwapHandle::new(deployment, model)?;
+        let controller = Controller::new(handle, bank, policy)?;
+        Ok(Self { engine, controller, cfg })
+    }
+
+    pub fn controller(&self) -> &Controller {
+        &self.controller
+    }
+
+    /// Generate the sequence (deterministic per `cfg.seed`) and run it.
+    pub fn run_sequence(&mut self, seq: &ScenarioSequence) -> Result<SimReport> {
+        self.run_trace(&seq.generate(self.cfg.seed))
+    }
+
+    /// Run an already-generated sequence trace: process one window of
+    /// frames to completion, tick the controller on the tier snapshot,
+    /// repeat. Swaps published by a tick serve from the next window on.
+    pub fn run_trace(&mut self, st: &SequenceTrace) -> Result<SimReport> {
+        let window_packets = self.cfg.window_packets.max(1);
+        let published_before = self.controller.published();
+        let rejected_before = self.controller.rejected();
+        let alerts_before = self.controller.alerts();
+        let mut outputs = Vec::with_capacity(st.trace.packets.len());
+        let mut ticks = Vec::new();
+        let mut swaps = Vec::new();
+        for chunk in st.trace.packets.chunks(window_packets) {
+            let report = self.engine.process_trace(chunk)?;
+            outputs.extend_from_slice(&report.outputs);
+            let tick = self.controller.tick(self.engine.snapshot());
+            for e in &tick.events {
+                if let Outcome::Published { model, version } = &e.outcome {
+                    swaps.push(SwapRecord {
+                        window: e.window,
+                        model: model.clone(),
+                        version: *version,
+                    });
+                }
+            }
+            ticks.push(tick);
+        }
+        // Base the controller's virtual clock for THIS run: window
+        // indexes in ticks are global (the collector keeps counting
+        // across runs); attribution below uses the run-relative frame
+        // positions, so translate attack onsets into global windows.
+        let first_window = ticks.first().map(|t| t.window.index).unwrap_or(0);
+        // (onset window, last window) of every attack segment. A swap is
+        // attributed to an attack only while the attack is live (plus a
+        // small slack for a detection streak completing right at the
+        // segment edge) — a publication fired long after the attack
+        // ended is a false swap, not a slow reaction.
+        const ATTRIBUTION_SLACK: u64 = 2;
+        let attack_spans: Vec<(u64, u64)> = st
+            .segments
+            .iter()
+            .filter(|seg| seg.scenario == "ddos-burst")
+            .map(|seg| {
+                let onset = first_window + (seg.start / window_packets) as u64;
+                let last = first_window
+                    + ((seg.start + seg.len.max(1) - 1) / window_packets) as u64;
+                (onset, last)
+            })
+            .collect();
+        let mut attributed: Vec<Option<u64>> = vec![None; attack_spans.len()];
+        let mut false_swaps = 0u64;
+        for swap in &swaps {
+            let span = attack_spans.iter().rposition(|&(onset, last)| {
+                onset <= swap.window && swap.window <= last + ATTRIBUTION_SLACK
+            });
+            match span {
+                Some(i) if attributed[i].is_none() => attributed[i] = Some(swap.window),
+                _ => false_swaps += 1,
+            }
+        }
+        let reaction_windows = attack_spans
+            .first()
+            .zip(attributed.first().copied().flatten())
+            .map(|(&(onset, _), swap_window)| swap_window - onset + 1);
+
+        let boundary = swaps
+            .first()
+            .map(|s| frame_boundary(s.window, first_window, window_packets));
+        let accuracy = |range: std::ops::Range<usize>| -> Option<f64> {
+            let mut labeled = 0u64;
+            let mut correct = 0u64;
+            for seg in st.segments.iter().filter(|s| s.labeled) {
+                for i in seg.start.max(range.start)..(seg.start + seg.len).min(range.end)
+                {
+                    labeled += 1;
+                    if outputs[i] & 1 == st.trace.labels[i] {
+                        correct += 1;
+                    }
+                }
+            }
+            if labeled > 0 {
+                Some(correct as f64 / labeled as f64)
+            } else {
+                None
+            }
+        };
+        let n = outputs.len();
+        let (accuracy_pre_swap, accuracy_post_swap) = match boundary {
+            Some(b) => (accuracy(0..b.min(n)), accuracy(b.min(n)..n)),
+            None => (accuracy(0..n), None),
+        };
+        debug_assert_eq!(
+            swaps.len() as u64,
+            self.controller.published() - published_before
+        );
+
+        Ok(SimReport {
+            window_packets,
+            first_window,
+            outputs,
+            labels: st.trace.labels.clone(),
+            segments: st.segments.clone(),
+            ticks,
+            swaps,
+            false_swaps,
+            reaction_windows,
+            rejected_swaps: self.controller.rejected() - rejected_before,
+            alerts: self.controller.alerts() - alerts_before,
+            accuracy_pre_swap,
+            accuracy_post_swap,
+        })
+    }
+}
+
+/// A hand-built single-neuron BNN that recognizes membership of one
+/// IPv4 subnet: its weight row IS the subnet pattern, so an address
+/// sharing the prefix always agrees on the prefix bits and clears the
+/// majority SIGN threshold, while a uniform address only does so about
+/// half the time. This gives the sim a *deterministic* classifier whose
+/// attacker-class share genuinely ramps with the attack fraction — no
+/// trained artifacts needed.
+pub fn prefix_classifier(pattern: u32) -> BnnModel {
+    let spec = BnnSpec::new(32, &[1]).expect("32 -> [1] is a legal BNN");
+    let layer = BnnLayer::new(32, vec![PackedBits::from_u32(pattern)])
+        .expect("one 32-bit weight row");
+    BnnModel::new(spec, vec![layer]).expect("spec matches weights")
+}
+
+/// The sim's default blacklist: ONE /16 subnet, so a single
+/// [`prefix_classifier`] neuron sees every attacker. (The scenario
+/// module's two-subnet default would halve the crafted model's recall
+/// and with it the test's detection margin.)
+pub fn sim_ddos() -> DdosDoc {
+    DdosDoc {
+        subnets: vec![SubnetDoc { prefix: 0xC0A8_0000, prefix_len: 16 }],
+        attack_fraction: 0.5,
+        seed: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn;
+    use crate::deploy::FieldExtractor;
+    use crate::net::Scenario;
+
+    fn deployment_for(live: &BnnModel) -> Arc<Deployment> {
+        Arc::new(
+            Deployment::builder()
+                .extractor(FieldExtractor::SrcIp)
+                .model("live", live.clone())
+                .build()
+                .unwrap(),
+        )
+    }
+
+    fn attack_sequence(n_uniform: usize, n_attack: usize) -> ScenarioSequence {
+        ScenarioSequence::new(vec![
+            (Scenario::Uniform, n_uniform),
+            (
+                Scenario::DdosBurst { ddos: sim_ddos(), peak_fraction: 0.9 },
+                n_attack,
+            ),
+            (Scenario::Uniform, n_uniform),
+        ])
+    }
+
+    #[test]
+    fn prefix_classifier_always_flags_subnet_members() {
+        let m = prefix_classifier(0xC0A8_1234);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(9);
+        let mut benign_hits = 0u32;
+        for _ in 0..500 {
+            let inside = 0xC0A8_0000 | (rng.next_u32() & 0xFFFF);
+            assert!(
+                bnn::forward(&m, &PackedBits::from_u32(inside)).get(0),
+                "subnet member {inside:#x}"
+            );
+            if bnn::forward(&m, &PackedBits::from_u32(rng.next_u32())).get(0) {
+                benign_hits += 1;
+            }
+        }
+        // Uniform addresses fire the neuron only ~57% of the time
+        // (majority of 32 coin flips, ties included).
+        assert!((200..=400).contains(&benign_hits), "{benign_hits}");
+    }
+
+    /// The acceptance loop (ISSUE 4): uniform → ddos-burst → uniform
+    /// triggers exactly one SwapModel within a bounded number of
+    /// windows, with deterministic outputs, and the post-swap outputs
+    /// are bit-exact with a cold deployment of the target model.
+    #[test]
+    fn closed_loop_swaps_exactly_once_and_post_swap_is_bit_exact() {
+        let live = prefix_classifier(0xC0A8_0000);
+        let attack = prefix_classifier(0xC0A8_FFFF);
+        let dep = deployment_for(&live);
+        let bank =
+            ModelBank::new("day", live.clone()).with_model("attack", attack.clone());
+        let policy = Policy::parse("on ddos-ramp do swap attack cooldown=4").unwrap();
+        let cfg = SimConfig { n_shards: 2, window_packets: 256, seed: 11 };
+        let seq = attack_sequence(1024, 2048);
+        let mut sim = Sim::new(&dep, "live", bank, policy, cfg).unwrap();
+        let report = sim.run_sequence(&seq).unwrap();
+
+        // Exactly one swap, attributed to the attack, within its ramp.
+        assert_eq!(report.swaps.len(), 1, "\n{}", report.render());
+        assert_eq!(report.swaps[0].model, "attack");
+        assert_eq!(report.swaps[0].version, 2);
+        assert_eq!(report.false_swaps, 0);
+        assert_eq!(report.rejected_swaps, 0);
+        let reaction = report.reaction_windows.expect("attack segment got its swap");
+        assert!(reaction <= 8, "bounded reaction, got {reaction} windows");
+        assert_eq!(dep.version("live").unwrap(), 2);
+
+        // Deterministic: the same configuration replays identically.
+        let bank2 =
+            ModelBank::new("day", live.clone()).with_model("attack", attack.clone());
+        let policy2 = Policy::parse("on ddos-ramp do swap attack cooldown=4").unwrap();
+        let dep2 = deployment_for(&live);
+        let mut sim2 = Sim::new(&dep2, "live", bank2, policy2, cfg).unwrap();
+        let report2 = sim2.run_sequence(&seq).unwrap();
+        assert_eq!(report.outputs, report2.outputs);
+        assert_eq!(report2.swaps[0].window, report.swaps[0].window);
+
+        // Post-swap serving is bit-exact with a COLD deployment of the
+        // swap target; pre-swap with the original model.
+        let st = seq.generate(cfg.seed);
+        let boundary = report.swap_boundary().unwrap();
+        assert!(boundary < st.trace.packets.len());
+        let cold = deployment_for(&attack);
+        let cold_out = cold
+            .serve_trace("live", &st.trace.packets[boundary..])
+            .unwrap()
+            .outputs;
+        assert_eq!(&report.outputs[boundary..], &cold_out[..], "post-swap ≡ cold");
+        for (i, &key) in st.trace.keys.iter().take(boundary).enumerate() {
+            let expect = bnn::forward(&live, &PackedBits::from_u32(key)).get(0) as u32;
+            assert_eq!(report.outputs[i], expect, "pre-swap pkt {i} ≡ live model");
+        }
+        assert!(report.accuracy_pre_swap.is_some());
+        assert!(report.accuracy_post_swap.is_some());
+        assert!(report.render().contains("reaction"));
+    }
+
+    #[test]
+    fn quiet_sequence_never_swaps() {
+        let live = prefix_classifier(0xC0A8_0000);
+        let dep = deployment_for(&live);
+        let bank = ModelBank::new("day", live.clone());
+        let policy = Policy::parse("on ddos-ramp do fallback").unwrap();
+        let cfg = SimConfig { n_shards: 2, window_packets: 256, seed: 13 };
+        let seq = ScenarioSequence::new(vec![(Scenario::Uniform, 2048)]);
+        let mut sim = Sim::new(&dep, "live", bank, policy, cfg).unwrap();
+        let report = sim.run_sequence(&seq).unwrap();
+        assert!(report.swaps.is_empty(), "\n{}", report.render());
+        assert_eq!(report.false_swaps, 0);
+        assert_eq!(dep.version("live").unwrap(), 1);
+        assert_eq!(report.reaction_windows, None);
+        assert_eq!(report.ticks.len(), 8);
+    }
+}

@@ -26,6 +26,6 @@ pub mod shard;
 pub use batcher::{Batch, Batcher, BatchPolicy};
 pub use engine::{Engine, EngineConfig, EngineReport, RouterPolicy};
 pub use shard::{
-    OverflowPolicy, ShardConfig, ShardStats, ShardedEngine, ShardedReport,
-    ShardedStream,
+    load_imbalance, OverflowPolicy, ShardConfig, ShardCounts, ShardStats,
+    ShardTelemetry, ShardedEngine, ShardedReport, ShardedStream, TierSnapshot,
 };

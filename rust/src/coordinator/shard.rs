@@ -29,6 +29,7 @@
 //! below).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -40,7 +41,7 @@ use crate::compiler::CompiledModel;
 use crate::deploy::ModelSlot;
 use crate::error::{Error, Result};
 use crate::net::packet::flow_hash;
-use crate::telemetry::EngineMetrics;
+use crate::telemetry::{ClassMix, Counter, EngineMetrics, CLASS_BUCKETS};
 
 use super::batcher::{Batch, Batcher, BatchPolicy};
 use super::engine::EngineSource;
@@ -126,18 +127,27 @@ pub struct ShardedReport {
     pub version_max: u64,
 }
 
+/// max/mean over per-shard load counts: 1.0 = perfectly balanced,
+/// higher under skew, and 0.0 — never NaN — for an idle or empty tier.
+/// The single definition behind [`ShardedReport::imbalance`] and the
+/// control plane's windowed
+/// [`SignalWindow::imbalance`](crate::controlplane::SignalWindow::imbalance).
+pub fn load_imbalance(loads: &[u64]) -> f64 {
+    let mean = loads.iter().sum::<u64>() as f64 / loads.len().max(1) as f64;
+    let max = loads.iter().max().copied().unwrap_or(0) as f64;
+    if mean > 0.0 {
+        max / mean
+    } else {
+        0.0
+    }
+}
+
 impl ShardedReport {
     /// max/mean shard load (1.0 = perfectly balanced; a zipf heavy
     /// hitter pushes this up under flow-affinity dispatch).
     pub fn imbalance(&self) -> f64 {
-        let mean = self.per_shard.iter().map(|s| s.packets).sum::<u64>() as f64
-            / self.per_shard.len().max(1) as f64;
-        let max = self.per_shard.iter().map(|s| s.packets).max().unwrap_or(0) as f64;
-        if mean > 0.0 {
-            max / mean
-        } else {
-            0.0
-        }
+        let loads: Vec<u64> = self.per_shard.iter().map(|s| s.packets).collect();
+        load_imbalance(&loads)
     }
 
     pub fn render(&self) -> String {
@@ -171,6 +181,77 @@ impl ShardedReport {
         }
         s
     }
+}
+
+// ---------------------------------------------------------------------------
+// Cumulative tier telemetry (the control plane's pull-based signal source)
+// ---------------------------------------------------------------------------
+
+/// Cumulative, atomically readable serving counters for ONE shard,
+/// shared between the shard worker (writer, once per batch) and any
+/// observer thread (reader). Unlike [`ShardStats`] — which is a
+/// per-trace result merged at `finish` — these survive across streams
+/// on the same [`ShardedEngine`], which is what lets a controller
+/// *pull* consistent-enough snapshots while serving continues: no
+/// channel, no lock, and nothing added on the per-packet path
+/// (DESIGN.md §13).
+#[derive(Debug, Default)]
+pub struct ShardTelemetry {
+    /// Frames delivered to (and classified by) this shard.
+    pub packets: Counter,
+    /// Batches the shard's backend executed.
+    pub batches: Counter,
+    pub parse_errors: Counter,
+    /// Frames shed at this shard's full queue ([`OverflowPolicy::Drop`]).
+    pub dropped: Counter,
+    /// Dispatcher waits on this shard's full queue
+    /// ([`OverflowPolicy::Block`]).
+    pub backpressure_waits: Counter,
+    /// Publication version this shard last served.
+    pub model_version: AtomicU64,
+}
+
+impl ShardTelemetry {
+    /// Plain-number snapshot of the counters.
+    pub fn counts(&self) -> ShardCounts {
+        ShardCounts {
+            packets: self.packets.get(),
+            batches: self.batches.get(),
+            parse_errors: self.parse_errors.get(),
+            dropped: self.dropped.get(),
+            backpressure_waits: self.backpressure_waits.get(),
+            model_version: self.model_version.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One shard's cumulative counters as plain numbers (a snapshot of
+/// [`ShardTelemetry`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardCounts {
+    pub packets: u64,
+    pub batches: u64,
+    pub parse_errors: u64,
+    pub dropped: u64,
+    pub backpressure_waits: u64,
+    pub model_version: u64,
+}
+
+/// Cumulative snapshot of the whole sharded tier, taken by
+/// [`ShardedEngine::snapshot`]. The control plane differences two
+/// consecutive snapshots into one
+/// [`SignalWindow`](crate::controlplane::SignalWindow); everything here
+/// is counters the tier maintains anyway, so taking a snapshot costs a
+/// few atomic loads and never touches the packet path.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TierSnapshot {
+    pub per_shard: Vec<ShardCounts>,
+    /// Cumulative output-class histogram (low-bits bucketing, see
+    /// [`crate::telemetry::ClassMix`]).
+    pub classes: [u64; CLASS_BUCKETS],
+    /// Cumulative batch-latency log₂ buckets
+    /// ([`crate::telemetry::Histogram::bucket_counts`]).
+    pub latency_buckets: Vec<u64>,
 }
 
 // ---------------------------------------------------------------------------
@@ -308,6 +389,9 @@ pub struct ShardedEngine {
     source: EngineSource,
     config: ShardConfig,
     pub metrics: Arc<EngineMetrics>,
+    /// Cumulative per-shard counters, shared with every stream this
+    /// engine opens (see [`ShardedEngine::snapshot`]).
+    shard_telemetry: Vec<Arc<ShardTelemetry>>,
 }
 
 /// What one shard worker hands back at join time.
@@ -326,11 +410,29 @@ impl ShardedEngine {
     /// simulator-internals work). Prefer
     /// [`crate::deploy::Deployment::sharded_engine`].
     pub fn new(compiled: CompiledModel, config: ShardConfig) -> Self {
+        let source = EngineSource::Static { compiled: Arc::new(compiled), model: None };
         Self {
-            source: EngineSource::Static { compiled: Arc::new(compiled), model: None },
+            shard_telemetry: Self::fresh_telemetry(&source, &config),
+            source,
             config,
             metrics: Arc::new(EngineMetrics::default()),
         }
+    }
+
+    /// One telemetry cell per shard, versions seeded from the source so
+    /// a snapshot taken before any batch already reports the published
+    /// version instead of a phantom v0 skew.
+    fn fresh_telemetry(
+        source: &EngineSource,
+        config: &ShardConfig,
+    ) -> Vec<Arc<ShardTelemetry>> {
+        (0..config.n_shards.max(1))
+            .map(|_| {
+                let t = ShardTelemetry::default();
+                t.model_version.store(source.version(), Ordering::Relaxed);
+                Arc::new(t)
+            })
+            .collect()
     }
 
     /// Attach the source model (enables the `reference` backend on the
@@ -349,8 +451,10 @@ impl ShardedEngine {
         lut: Option<Arc<LutClassifier>>,
         config: ShardConfig,
     ) -> Self {
+        let source = EngineSource::Slot { slot, lut };
         Self {
-            source: EngineSource::Slot { slot, lut },
+            shard_telemetry: Self::fresh_telemetry(&source, &config),
+            source,
             config,
             metrics: Arc::new(EngineMetrics::default()),
         }
@@ -359,6 +463,25 @@ impl ShardedEngine {
     /// Snapshot of the currently published compiled model.
     pub fn compiled(&self) -> Arc<CompiledModel> {
         self.source.compiled()
+    }
+
+    /// Number of shards this engine serves with.
+    pub fn n_shards(&self) -> usize {
+        self.config.n_shards.max(1)
+    }
+
+    /// Pull a cumulative [`TierSnapshot`]: a few atomic loads over
+    /// counters the tier maintains anyway — the control plane's
+    /// *collection* step, callable from any thread while streams are
+    /// live, with zero work injected on the packet path. Consecutive
+    /// snapshots difference into one signal window
+    /// ([`crate::controlplane::SignalCollector`]).
+    pub fn snapshot(&self) -> TierSnapshot {
+        TierSnapshot {
+            per_shard: self.shard_telemetry.iter().map(|t| t.counts()).collect(),
+            classes: self.metrics.classes.snapshot(),
+            latency_buckets: self.metrics.batch_latency.bucket_counts(),
+        }
     }
 
     /// Open a streaming ingest handle: spawns the shard workers and
@@ -382,12 +505,15 @@ impl ShardedEngine {
             let queue = Arc::clone(&queues[shard]);
             let source = self.source.clone();
             let metrics = Arc::clone(&self.metrics);
+            let telemetry = Arc::clone(&self.shard_telemetry[shard]);
+            telemetry.model_version.store(version, Ordering::Relaxed);
             let kind = self.config.backend;
             let policy = self.config.batch;
             workers.push(std::thread::spawn(move || {
                 let _close = CloseOnDrop(&*queue);
                 shard_worker(
-                    shard, &queue, &source, kind, policy, &metrics, backend, version,
+                    shard, &queue, &source, kind, policy, &metrics, &telemetry,
+                    backend, version,
                 )
             }));
         }
@@ -402,6 +528,7 @@ impl ShardedEngine {
             waits: vec![0; n],
             started: Instant::now(),
             metrics: Arc::clone(&self.metrics),
+            telemetry: self.shard_telemetry.clone(),
         })
     }
 
@@ -444,6 +571,7 @@ fn shard_worker(
     kind: BackendKind,
     policy: BatchPolicy,
     metrics: &EngineMetrics,
+    telemetry: &ShardTelemetry,
     mut backend: Box<dyn InferenceBackend>,
     mut version: u64,
 ) -> Result<WorkerResult> {
@@ -469,6 +597,7 @@ fn shard_worker(
         // protocol itself lives on [`EngineSource::refresh`], shared
         // with the engine workers).
         source.refresh(kind, backend, version, retired_errs)?;
+        telemetry.model_version.store(*version, Ordering::Relaxed);
         let t0 = Instant::now();
         metrics.packets_in.add(batch.packets.len() as u64);
         let refs: Vec<&[u8]> = batch.packets.iter().map(|(_, p)| p.as_slice()).collect();
@@ -480,9 +609,16 @@ fn shard_worker(
         metrics
             .packets_classified
             .add(refs.len() as u64 - errs.min(refs.len() as u64));
+        let mut class_counts = [0u64; CLASS_BUCKETS];
         for (k, (seq, _)) in batch.packets.iter().enumerate() {
-            outputs.push((*seq, out_buf.get(k).copied().unwrap_or(0)));
+            let word = out_buf.get(k).copied().unwrap_or(0);
+            class_counts[ClassMix::bucket_of(word)] += 1;
+            outputs.push((*seq, word));
         }
+        metrics.classes.add(&class_counts);
+        telemetry.packets.add(refs.len() as u64);
+        telemetry.batches.inc();
+        telemetry.parse_errors.add(errs);
         metrics.batch_latency.record(t0.elapsed());
         Ok(())
     };
@@ -563,6 +699,10 @@ pub struct ShardedStream {
     waits: Vec<u64>,
     started: Instant,
     pub metrics: Arc<EngineMetrics>,
+    /// Cumulative per-shard counters shared with the owning engine
+    /// (drop/backpressure events are dispatcher-side, so they are
+    /// recorded here as well as in the per-run vecs above).
+    telemetry: Vec<Arc<ShardTelemetry>>,
 }
 
 impl ShardedStream {
@@ -583,6 +723,7 @@ impl ShardedStream {
                 let (pushed, waited) = self.queues[shard].push_blocking((seq, pkt));
                 if waited {
                     self.waits[shard] += 1;
+                    self.telemetry[shard].backpressure_waits.inc();
                 }
                 if !pushed {
                     return Err(Error::Config(format!(
@@ -593,6 +734,7 @@ impl ShardedStream {
             OverflowPolicy::Drop => {
                 if !self.queues[shard].try_push((seq, pkt)) {
                     self.dropped[shard] += 1;
+                    self.telemetry[shard].dropped.inc();
                 }
             }
         }
@@ -807,6 +949,75 @@ mod tests {
         let report = stream.finish().unwrap();
         assert_eq!(report.n_packets, 5);
         assert_eq!(report.per_shard.iter().map(|s| s.packets).sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn empty_tier_imbalance_is_zero_not_nan() {
+        // Regression (ISSUE 4 satellite): an idle tier — zero frames
+        // served, or a hand-built report with no shards at all — must
+        // report imbalance 0.0, never NaN (a NaN would poison every
+        // controller threshold comparison downstream).
+        let model = BnnModel::random(32, &[16], 56);
+        let engine = ShardedEngine::new(
+            compiled_for(&model),
+            ShardConfig { n_shards: 3, ..ShardConfig::default() },
+        );
+        let report = engine.process_trace(&[]).unwrap();
+        assert_eq!(report.n_packets, 0);
+        assert_eq!(report.imbalance(), 0.0);
+        assert!(report.imbalance().is_finite());
+
+        let degenerate = ShardedReport {
+            outputs: Vec::new(),
+            n_packets: 0,
+            sim_pps: 0.0,
+            modeled_pps: 0.0,
+            parse_errors: 0,
+            dropped: 0,
+            backend: "batched",
+            per_shard: Vec::new(),
+            version_min: 0,
+            version_max: 0,
+        };
+        assert_eq!(degenerate.imbalance(), 0.0);
+    }
+
+    #[test]
+    fn snapshots_accumulate_across_traces_and_count_classes() {
+        let model = BnnModel::random(32, &[16, 1], 57);
+        let engine = ShardedEngine::new(
+            compiled_for(&model),
+            ShardConfig { n_shards: 2, ..ShardConfig::default() },
+        );
+        let before = engine.snapshot();
+        assert_eq!(before.per_shard.len(), 2);
+        assert_eq!(before.per_shard.iter().map(|s| s.packets).sum::<u64>(), 0);
+        assert_eq!(before.classes.iter().sum::<u64>(), 0);
+
+        let mut gen = TraceGenerator::new(58);
+        let trace = gen.generate(&TraceKind::UniformIps, 200);
+        let report = engine.process_trace(&trace.packets).unwrap();
+        let mid = engine.snapshot();
+        assert_eq!(mid.per_shard.iter().map(|s| s.packets).sum::<u64>(), 200);
+        assert_eq!(mid.classes.iter().sum::<u64>(), 200);
+        // The class histogram agrees with the merged outputs.
+        let ones = report.outputs.iter().filter(|&&w| w & 1 == 1).count() as u64;
+        assert_eq!(mid.classes[1], ones);
+        assert_eq!(mid.classes[0], 200 - ones);
+        assert!(mid.latency_buckets.iter().sum::<u64>() > 0);
+
+        // A second trace on the same engine keeps accumulating — the
+        // diff of consecutive snapshots isolates the window.
+        engine.process_trace(&trace.packets).unwrap();
+        let after = engine.snapshot();
+        assert_eq!(after.per_shard.iter().map(|s| s.packets).sum::<u64>(), 400);
+        let window: u64 = after
+            .per_shard
+            .iter()
+            .zip(&mid.per_shard)
+            .map(|(a, b)| a.packets - b.packets)
+            .sum();
+        assert_eq!(window, 200);
     }
 
     #[test]

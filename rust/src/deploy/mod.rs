@@ -456,6 +456,53 @@ impl Deployment {
     }
 }
 
+/// A controller-safe swap capability for ONE registered model of a
+/// deployment (DESIGN.md §13): the handle can publish weight swaps,
+/// read the version, and read stats — nothing else — so the control
+/// plane holds exactly the authority it needs over the serving tier.
+/// It is `Clone + Send + Sync` and validated at creation; every swap
+/// still goes through [`Deployment::swap_model`], so architecture
+/// validation, off-hot-path recompilation, and atomic publication are
+/// identical to a hand-driven swap.
+#[derive(Clone)]
+pub struct SwapHandle {
+    deployment: Arc<Deployment>,
+    model: String,
+}
+
+impl SwapHandle {
+    /// Open a handle for `name`; fails fast on an unregistered model.
+    pub fn new(deployment: &Arc<Deployment>, name: &str) -> Result<SwapHandle> {
+        deployment.entry(name)?;
+        Ok(SwapHandle {
+            deployment: Arc::clone(deployment),
+            model: name.to_string(),
+        })
+    }
+
+    /// Name of the model this handle can swap.
+    pub fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    /// Publish a weight swap (see [`Deployment::swap_model`]); returns
+    /// the new version. A rejected swap (architecture mismatch, compile
+    /// failure) publishes nothing and the live model keeps serving.
+    pub fn swap(&self, new_model: BnnModel) -> Result<u64> {
+        self.deployment.swap_model(&self.model, new_model)
+    }
+
+    /// Currently published version of the handled model.
+    pub fn version(&self) -> Result<u64> {
+        self.deployment.version(&self.model)
+    }
+
+    /// Serving stats snapshot of the handled model.
+    pub fn stats(&self) -> Result<ModelStats> {
+        self.deployment.stats(&self.model)
+    }
+}
+
 /// Builder for a [`Deployment`]. Defaults: stock RMT chip, `src-ip`
 /// extraction, `batched` backend, round-robin engine routing.
 pub struct DeploymentBuilder {
@@ -903,6 +950,25 @@ mod tests {
         assert!(keyed.sharded_engine("a", 2).is_err(), "keyed mode check");
         assert!(keyed.sharded_engine_keyed(2).is_ok());
         assert!(dep.sharded_engine_keyed(2).is_err(), "isolated mode check");
+    }
+
+    #[test]
+    fn swap_handle_scopes_swap_authority_to_one_model() {
+        let a = BnnModel::random(32, &[16, 1], 97);
+        let b = BnnModel::random(32, &[16, 1], 98);
+        let dep = Arc::new(deployment_for(&a, BackendKind::Batched));
+        assert!(SwapHandle::new(&dep, "nope").is_err(), "validated at creation");
+        let handle = SwapHandle::new(&dep, "m").unwrap();
+        assert_eq!(handle.model_name(), "m");
+        assert_eq!(handle.version().unwrap(), 1);
+        // Swaps through the handle are real swaps: versioned, visible
+        // to the deployment, and architecture-checked.
+        let cloned = handle.clone();
+        assert_eq!(cloned.swap(b.clone()).unwrap(), 2);
+        assert_eq!(dep.version("m").unwrap(), 2);
+        assert_eq!(handle.stats().unwrap().swaps, 1);
+        assert!(handle.swap(BnnModel::random(32, &[32, 1], 99)).is_err());
+        assert_eq!(handle.version().unwrap(), 2, "rejected swap publishes nothing");
     }
 
     #[test]

@@ -44,6 +44,14 @@
 //!   [`backend::InferenceBackend`]; the sharded flow-affinity tier
 //!   ([`coordinator::ShardedEngine`]) scales serving across queue-fed
 //!   shards with explicit backpressure/drop accounting.
+//! * [`controlplane`] — the closed loop above the serving tier:
+//!   windowed signals pulled from [`coordinator::ShardedEngine`]
+//!   snapshots, pluggable detectors (ddos-ramp, drift, overload,
+//!   imbalance), a declarative policy engine with hysteresis, and a
+//!   deterministic virtual-clock simulation harness
+//!   ([`controlplane::Sim`]) — condition changes in the traffic
+//!   hot-swap the served model through [`deploy`] without touching the
+//!   hot path.
 //! * [`analysis`] — throughput / chip-area models behind the paper's
 //!   §2-Evaluation and §3-Challenges numbers.
 //!
@@ -72,6 +80,7 @@ pub mod backend;
 pub mod baseline;
 pub mod bnn;
 pub mod compiler;
+pub mod controlplane;
 pub mod coordinator;
 pub mod deploy;
 pub mod error;

@@ -16,12 +16,19 @@
 //! n2net serve   [--packets N] [--workers W] [--router flow|rr]
 //!               [--backend scalar|batched|reference|lut] [--batch-size B]
 //!               [--models a.json,b.json] [--extract F]
-//!               [--shards S] [--scenario uniform|zipf-heavy-hitter|
-//!                ddos-burst|flowlet-churn|multi-tenant-mix|malformed-fuzz]
+//!               [--shards S] [--scenario <name>] [--help]
+//!               [--adaptive [--policy FILE] [--window N]]
+//! n2net autopilot [--sequence name:count,...] [--window N] [--shards S]
+//!               [--policy FILE] [--seed S] [--help]
 //! n2net swap    [--packets N] [--swaps K] [--seed S]
 //!               [--backend scalar|batched|reference]
 //! n2net selftest [--artifacts DIR]
 //! ```
+//!
+//! `serve --adaptive` and `autopilot` run the closed control loop
+//! (`n2net::controlplane`): the trace is served through the sharded
+//! tier in fixed packet windows; per-window signals feed detectors and
+//! a declarative policy whose actions hot-swap the served model.
 
 use anyhow::{bail, ensure, Context};
 use n2net::analysis;
@@ -30,10 +37,16 @@ use n2net::backend::BackendKind;
 use n2net::baseline::LutClassifier;
 use n2net::bnn::{self, BnnModel, PackedBits};
 use n2net::compiler::{p4gen, render_table1, Compiler, CompilerOptions};
+use n2net::controlplane::{
+    prefix_classifier, sim_ddos, ModelBank, Policy, Sim, SimConfig,
+};
 use n2net::coordinator::{BatchPolicy, RouterPolicy};
 use n2net::deploy::{Deployment, DeploymentBuilder, FieldExtractor};
 use n2net::bnn::io::DdosDoc;
-use n2net::net::{Scenario, TraceGenerator, TraceKind, MODEL_ID_OFFSET};
+use n2net::net::{
+    Scenario, ScenarioSequence, SequenceTrace, TraceGenerator, TraceKind,
+    MODEL_ID_OFFSET, SCENARIO_NAMES,
+};
 use n2net::rmt::ChipConfig;
 use n2net::runtime::Oracle;
 use n2net::util::cli::Args;
@@ -41,7 +54,7 @@ use n2net::util::cli::Args;
 const VALUE_OPTS: &[&str] = &[
     "in-bits", "layers", "seed", "packets", "workers", "router", "artifacts",
     "p4", "steps", "backend", "batch-size", "models", "extract", "swaps",
-    "shards", "scenario",
+    "shards", "scenario", "sequence", "window", "policy",
 ];
 
 fn main() {
@@ -65,8 +78,9 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: n2net <report|compile|run|serve|swap|selftest> [options]\n\
-         see `n2net report all` for every paper artifact"
+        "usage: n2net <report|compile|run|serve|autopilot|swap|selftest> [options]\n\
+         see `n2net report all` for every paper artifact and\n\
+         `n2net serve --help` / `n2net autopilot --help` for serving options"
     );
 }
 
@@ -76,6 +90,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("compile") => cmd_compile(args),
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
+        Some("autopilot") => cmd_autopilot(args),
         Some("swap") => cmd_swap(args),
         Some("selftest") => cmd_selftest(args),
         other => {
@@ -354,7 +369,38 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 // the flow-affinity sharded tier; --scenario picks a named workload
 // ---------------------------------------------------------------------------
 
+/// `serve --help`: the full grammar, with the scenario vocabulary
+/// rendered from [`SCENARIO_NAMES`] so it can never drift from
+/// `Scenario::parse`.
+fn serve_help() -> String {
+    format!(
+        "usage: n2net serve [options]\n\
+         \x20 --packets N           trace length (default 100000)\n\
+         \x20 --workers W           engine workers\n\
+         \x20 --router flow|rr      packet -> worker routing\n\
+         \x20 --backend scalar|batched|reference|lut\n\
+         \x20 --batch-size B        worker batch bound\n\
+         \x20 --models a.json,b.json  several entries -> ONE keyed-table program\n\
+         \x20 --extract F           src-ip|dst-ip|payload|payload@N|field@N\n\
+         \x20 --shards S            serve through the sharded flow-affinity tier\n\
+         \x20 --scenario <name>     named traffic scenario; one of:\n\
+         \x20                       {}\n\
+         \x20 --adaptive            attach the closed-loop controller: the trace\n\
+         \x20                       is served in --window packet windows and the\n\
+         \x20                       policy may hot-swap the model on detections\n\
+         \x20 --policy FILE         policy rules (default: swap \"attack\" on\n\
+         \x20                       ddos-ramp, alert on overload/drift/imbalance)\n\
+         \x20 --window N            frames per control window (default 512)\n\
+         \x20 --seed S              trace seed",
+        SCENARIO_NAMES.join("|")
+    )
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.has_flag("help") {
+        println!("{}", serve_help());
+        return Ok(());
+    }
     let n = args.opt_usize("packets", 100_000)?;
     let seed = args.opt_u64("seed", 3)?;
     let shards = args.opt_usize("shards", 0)?;
@@ -377,6 +423,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // The multi-tenant scenario needs the keyed registry even with one
     // --models entry.
     if paths.len() > 1 || matches!(scenario, Some(Scenario::MultiTenantMix { .. })) {
+        ensure!(
+            !args.has_flag("adaptive"),
+            "--adaptive controls one named model of an isolated deployment; \
+             it cannot drive the keyed multi-model program (drop the extra \
+             --models entries / the multi-tenant scenario)"
+        );
         serve_keyed(args, &paths, n, seed, shards, scenario, explicit)
     } else {
         serve_single(args, &paths[0], n, seed, shards, scenario, explicit)
@@ -409,6 +461,93 @@ fn load_weights_or_synthetic(
     }
 }
 
+/// The policy a controller runs: `--policy FILE`, or the default
+/// ddos-response rules.
+fn policy_for(args: &Args) -> anyhow::Result<Policy> {
+    match args.opt("policy") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading --policy {path:?}"))?;
+            Ok(Policy::parse(&text)?)
+        }
+        None => Ok(Policy::parse(
+            "on ddos-ramp do swap attack cooldown=4\n\
+             on overload do alert cooldown=8\n\
+             on drift do alert cooldown=8\n\
+             on imbalance do alert cooldown=8\n",
+        )?),
+    }
+}
+
+/// Closed-loop serving shared by `serve --adaptive` and `autopilot`:
+/// run the controller over a sequence trace and print the loop report.
+fn run_adaptive(
+    args: &Args,
+    deployment: &std::sync::Arc<Deployment>,
+    model_name: &str,
+    bank: ModelBank,
+    st: &SequenceTrace,
+    shards: usize,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let policy = policy_for(args)?;
+    println!("policy:\n{}", policy.render());
+    let cfg = SimConfig {
+        n_shards: shards.max(1),
+        window_packets: args.opt_usize("window", 512)?.max(1),
+        seed,
+    };
+    let mut sim = Sim::new(deployment, model_name, bank, policy, cfg)?;
+    let report = sim.run_trace(st)?;
+    print!("{}", report.render());
+    let stats = deployment.stats(model_name)?;
+    println!(
+        "live model: v{} after {} published swap(s), {} packets served",
+        stats.version,
+        stats.swaps,
+        report.outputs.len()
+    );
+    Ok(())
+}
+
+/// Resolve the adaptive tier's live model, swap target, and blacklist:
+/// trained weights when they load (the "attack" artifact is a
+/// same-architecture variant standing in for an attack-trained model);
+/// otherwise the crafted subnet classifier, whose attacker-share signal
+/// is exact by construction — a *random* synthetic fallback would give
+/// the ramp detector a flat signal and the loop would never react.
+fn adaptive_models(
+    path: &str,
+    seed: u64,
+    explicit: bool,
+) -> anyhow::Result<(BnnModel, BnnModel, DdosDoc)> {
+    match bnn::load_weights(path) {
+        Ok((model, doc)) => {
+            let attack = BnnModel::random(
+                model.spec.in_bits,
+                &model.spec.layer_sizes,
+                seed ^ 0xA77AC,
+            );
+            Ok((model, attack, doc.ddos))
+        }
+        Err(e) if explicit => {
+            Err(e).with_context(|| format!("loading --models entry {path:?}"))
+        }
+        Err(e) => {
+            eprintln!(
+                "note: {path}: {e}\n\
+                 note: serving the crafted /16 subnet classifier instead \
+                 (run `make artifacts` for the trained one)"
+            );
+            Ok((
+                prefix_classifier(0xC0A8_0000),
+                prefix_classifier(0xC0A8_FFFF),
+                sim_ddos(),
+            ))
+        }
+    }
+}
+
 fn serve_single(
     args: &Args,
     path: &str,
@@ -418,14 +557,58 @@ fn serve_single(
     scenario: Option<Scenario>,
     explicit: bool,
 ) -> anyhow::Result<()> {
-    let (model, ddos) = load_weights_or_synthetic(path, seed, explicit)?;
     let kind = backend_for(args)?;
+    if args.has_flag("adaptive") {
+        ensure!(
+            kind != BackendKind::Lut,
+            "the adaptive controller hot-swaps BNN weights; --backend lut \
+             has no model to swap"
+        );
+        let (model, attack, ddos) = adaptive_models(path, seed, explicit)?;
+        let deployment = std::sync::Arc::new(
+            configure_builder(Deployment::builder(), args)?
+                .model("serve", model.clone())
+                .build()?,
+        );
+        let st = match scenario {
+            Some(s) => {
+                let s = s.with_ddos(ddos);
+                println!("scenario: {}", s.name());
+                SequenceTrace::single(&s, s.generate(seed, n))
+            }
+            None => {
+                // Condition changes are the whole point, and the ramp
+                // detector reads a per-window slope — so the default
+                // demo is a quiet → burst → quiet sequence sized in
+                // *windows* (one --packets-long ramp would spread the
+                // attack over hundreds of windows, too shallow per
+                // window to ever detect).
+                let window = args.opt_usize("window", 512)?.max(1);
+                let seq = ScenarioSequence::new(vec![
+                    (Scenario::Uniform, window * 4),
+                    (
+                        Scenario::DdosBurst { ddos, peak_fraction: 0.9 },
+                        window * 16,
+                    ),
+                    (Scenario::Uniform, window * 4),
+                ]);
+                println!(
+                    "(no --scenario: defaulting the adaptive run to {})",
+                    seq.name()
+                );
+                seq.generate(seed)
+            }
+        };
+        let bank = ModelBank::new("day", model).with_model("attack", attack);
+        return run_adaptive(args, &deployment, "serve", bank, &st, shards, seed);
+    }
+    let (model, ddos) = load_weights_or_synthetic(path, seed, explicit)?;
     let mut builder = configure_builder(Deployment::builder(), args)?
         .model("serve", model.clone());
     if kind == BackendKind::Lut {
         builder = builder.lut(lut_for(&model, &ddos, seed));
     }
-    let deployment = builder.build()?;
+    let deployment = std::sync::Arc::new(builder.build()?);
     let trace = match &scenario {
         None => TraceGenerator::new(seed).generate(&TraceKind::Ddos { ddos }, n),
         Some(s) => {
@@ -551,6 +734,74 @@ fn serve_keyed(
     );
     println!("{}", engine.metrics.render());
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// autopilot — the closed control loop over a scenario sequence
+// ---------------------------------------------------------------------------
+
+/// `autopilot --help`, scenario vocabulary rendered from
+/// [`SCENARIO_NAMES`].
+fn autopilot_help() -> String {
+    format!(
+        "usage: n2net autopilot [options]\n\
+         runs the closed-loop controller (n2net::controlplane) over a\n\
+         scenario sequence: windowed signals -> detectors (ddos-ramp,\n\
+         drift, overload, imbalance) -> policy -> hot-swap.\n\
+         \x20 --sequence name:count,...  scenario sequence (default\n\
+         \x20                            uniform:4096,ddos-burst:8192,uniform:4096);\n\
+         \x20                            scenario names:\n\
+         \x20                            {}\n\
+         \x20 --window N            frames per control window (default 512)\n\
+         \x20 --shards S            serving shards (default 2)\n\
+         \x20 --policy FILE         policy rules (default: swap \"attack\" on\n\
+         \x20                       ddos-ramp, alert on overload/drift/imbalance)\n\
+         \x20 --backend scalar|batched|reference\n\
+         \x20 --artifacts DIR       trained weights (falls back to a crafted\n\
+         \x20                       subnet classifier so the loop runs anywhere)\n\
+         \x20 --seed S              trace seed",
+        SCENARIO_NAMES.join("|")
+    )
+}
+
+fn cmd_autopilot(args: &Args) -> anyhow::Result<()> {
+    if args.has_flag("help") {
+        println!("{}", autopilot_help());
+        return Ok(());
+    }
+    let seed = args.opt_u64("seed", 7)?;
+    let shards = args.opt_usize("shards", 2)?;
+    ensure!(
+        backend_for(args)? != BackendKind::Lut,
+        "the adaptive controller hot-swaps BNN weights; --backend lut has no \
+         model to swap"
+    );
+
+    // Trained weights when available; otherwise a hand-built subnet
+    // classifier whose attacker-share signal is exact by construction,
+    // so the loop demonstrates end to end without `make artifacts`.
+    let path = artifacts_dir(args).join("weights.json");
+    let (live, attack, ddos) =
+        adaptive_models(&path.to_string_lossy(), seed, false)?;
+    println!(
+        "live model: {}b -> {:?}",
+        live.spec.in_bits, live.spec.layer_sizes
+    );
+
+    let spec = args
+        .opt("sequence")
+        .unwrap_or("uniform:4096,ddos-burst:8192,uniform:4096");
+    let seq = ScenarioSequence::parse(spec)?.with_ddos(ddos);
+    println!("sequence: {}", seq.name());
+
+    let deployment = std::sync::Arc::new(
+        configure_builder(Deployment::builder(), args)?
+            .model("live", live.clone())
+            .build()?,
+    );
+    let bank = ModelBank::new("day", live).with_model("attack", attack);
+    let st = seq.generate(seed);
+    run_adaptive(args, &deployment, "live", bank, &st, shards, seed)
 }
 
 // ---------------------------------------------------------------------------

@@ -16,7 +16,10 @@ pub use packet::{
     EthernetHeader, Ipv4Header, PacketBuilder, UdpHeader, ETH_HEADER_LEN,
     IPV4_DST_OFFSET, IPV4_HEADER_LEN, IPV4_SRC_OFFSET, UDP_HEADER_LEN,
 };
-pub use scenario::{Scenario, MODEL_ID_OFFSET, SCENARIO_NAMES};
+pub use scenario::{
+    Scenario, ScenarioSequence, SegmentSpan, SequenceTrace, MODEL_ID_OFFSET,
+    SCENARIO_NAMES, SEQUENCE_DEFAULT_LEN,
+};
 pub use tracegen::{Trace, TraceGenerator, TraceKind};
 
 /// Byte offset of the packed activation words in an N2Net packet:

@@ -169,6 +169,177 @@ impl Scenario {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Scenario sequences (DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+/// Where one scenario's frames sit inside a composed sequence trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentSpan {
+    /// CLI spelling of the segment's scenario.
+    pub scenario: &'static str,
+    /// Index of the segment's first frame in the concatenated trace.
+    pub start: usize,
+    /// Number of frames in the segment.
+    pub len: usize,
+    /// Whether `labels[start..start+len]` are ground truth (scenarios
+    /// without labels contribute zero-filled padding so indexes stay
+    /// aligned across the whole sequence).
+    pub labeled: bool,
+}
+
+/// A generated sequence: the concatenated trace plus the segment map.
+/// `trace.labels` always spans the full sequence (zero-padded where a
+/// segment has no ground truth — consult [`SegmentSpan::labeled`]).
+#[derive(Clone, Debug)]
+pub struct SequenceTrace {
+    pub trace: Trace,
+    pub segments: Vec<SegmentSpan>,
+}
+
+impl SequenceTrace {
+    /// Wrap one already-generated trace as a single-segment sequence —
+    /// how `serve --adaptive` feeds its (non-composed) workload into
+    /// the control-plane harness.
+    pub fn single(scenario: &Scenario, trace: Trace) -> Self {
+        let len = trace.packets.len();
+        let labeled = !trace.labels.is_empty();
+        let mut trace = trace;
+        if !labeled {
+            trace.labels = vec![0; len];
+        }
+        Self {
+            trace,
+            segments: vec![SegmentSpan { scenario: scenario.name(), start: 0, len, labeled }],
+        }
+    }
+}
+
+/// Default frames per segment when a `name:count` spec omits the count.
+pub const SEQUENCE_DEFAULT_LEN: usize = 1024;
+
+/// An ordered composition of scenarios — the traffic *condition
+/// changes* the control plane reacts to (e.g. `uniform → ddos-burst →
+/// uniform` is an attack arriving and subsiding). Consumed by
+/// `n2net autopilot --sequence`, the control-plane sim, and the
+/// controlplane bench.
+#[derive(Clone, Debug)]
+pub struct ScenarioSequence {
+    /// `(scenario, frames)` per segment, in play order.
+    pub segments: Vec<(Scenario, usize)>,
+}
+
+impl ScenarioSequence {
+    pub fn new(segments: Vec<(Scenario, usize)>) -> Self {
+        Self { segments }
+    }
+
+    /// Parse a CLI spelling: comma-separated `name[:count]` segments,
+    /// e.g. `uniform:2048,ddos-burst:4096,uniform:2048`. Unknown names
+    /// fail with the same name-enumerating error as [`Scenario::parse`].
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut segments = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, count) = match part.split_once(':') {
+                None => (part, SEQUENCE_DEFAULT_LEN),
+                Some((name, count)) => {
+                    let n: usize = count.trim().parse().map_err(|_| {
+                        Error::Config(format!(
+                            "sequence segment {part:?}: count {count:?} is not an integer"
+                        ))
+                    })?;
+                    (name.trim(), n)
+                }
+            };
+            let scenario = Scenario::parse(name)?;
+            if count == 0 {
+                return Err(Error::Config(format!(
+                    "sequence segment {part:?}: count must be >= 1"
+                )));
+            }
+            segments.push((scenario, count));
+        }
+        if segments.is_empty() {
+            return Err(Error::Config(format!(
+                "empty scenario sequence {spec:?} (expected name[:count],... over {})",
+                SCENARIO_NAMES.join("|")
+            )));
+        }
+        Ok(Self { segments })
+    }
+
+    /// The CLI spelling of this sequence.
+    pub fn name(&self) -> String {
+        self.segments
+            .iter()
+            .map(|(s, n)| format!("{}:{n}", s.name()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Total frames across every segment.
+    pub fn total_packets(&self) -> usize {
+        self.segments.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Substitute a trained blacklist into every `ddos-burst` segment.
+    pub fn with_ddos(self, ddos: DdosDoc) -> Self {
+        Self {
+            segments: self
+                .segments
+                .into_iter()
+                .map(|(s, n)| (s.with_ddos(ddos.clone()), n))
+                .collect(),
+        }
+    }
+
+    /// Substitute registered model ids into every `multi-tenant-mix`
+    /// segment.
+    pub fn with_model_ids(self, ids: Vec<u32>) -> Self {
+        Self {
+            segments: self
+                .segments
+                .into_iter()
+                .map(|(s, n)| (s.with_model_ids(ids.clone()), n))
+                .collect(),
+        }
+    }
+
+    /// Generate the concatenated trace, deterministic per `seed` (each
+    /// segment draws from its own derived stream, so editing one
+    /// segment's length never perturbs another's frames).
+    pub fn generate(&self, seed: u64) -> SequenceTrace {
+        let total = self.total_packets();
+        let mut packets = Vec::with_capacity(total);
+        let mut labels = Vec::with_capacity(total);
+        let mut keys = Vec::with_capacity(total);
+        let mut segments = Vec::with_capacity(self.segments.len());
+        for (i, (scenario, n)) in self.segments.iter().enumerate() {
+            let seg_seed = seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+            let t = scenario.generate(seg_seed, *n);
+            let labeled = !t.labels.is_empty();
+            segments.push(SegmentSpan {
+                scenario: scenario.name(),
+                start: packets.len(),
+                len: *n,
+                labeled,
+            });
+            if labeled {
+                labels.extend_from_slice(&t.labels);
+            } else {
+                labels.resize(labels.len() + *n, 0);
+            }
+            packets.extend(t.packets);
+            keys.extend(t.keys);
+        }
+        SequenceTrace { trace: Trace { packets, labels, keys }, segments }
+    }
+}
+
 fn frame_for(ip: u32) -> Vec<u8> {
     PacketBuilder::default().src_ip(ip).build_activations(&[ip])
 }
@@ -326,6 +497,74 @@ mod tests {
             assert_eq!(a.keys.len(), 64);
         }
         assert!(Scenario::parse("line-rate").is_err());
+    }
+
+    #[test]
+    fn parse_error_enumerates_every_valid_name() {
+        // Satellite (ISSUE 4): a typo'd --scenario must teach the user
+        // the full vocabulary, not just reject.
+        let err = Scenario::parse("ddos").unwrap_err().to_string();
+        for name in SCENARIO_NAMES {
+            assert!(err.contains(name), "error {err:?} missing {name:?}");
+        }
+        let err = ScenarioSequence::parse("uniform:64,bogus:32")
+            .unwrap_err()
+            .to_string();
+        for name in SCENARIO_NAMES {
+            assert!(err.contains(name), "sequence error {err:?} missing {name:?}");
+        }
+    }
+
+    #[test]
+    fn sequence_parses_composes_and_is_deterministic() {
+        let seq = ScenarioSequence::parse("uniform:64, ddos-burst:128 ,uniform").unwrap();
+        assert_eq!(seq.segments.len(), 3);
+        assert_eq!(seq.total_packets(), 64 + 128 + SEQUENCE_DEFAULT_LEN);
+        assert_eq!(
+            seq.name(),
+            format!("uniform:64,ddos-burst:128,uniform:{SEQUENCE_DEFAULT_LEN}")
+        );
+        let a = seq.generate(21);
+        let b = seq.generate(21);
+        assert_eq!(a.trace.packets, b.trace.packets, "deterministic per seed");
+        assert_eq!(a.trace.packets.len(), seq.total_packets());
+        assert_eq!(a.trace.labels.len(), seq.total_packets(), "labels span everything");
+        assert_eq!(a.trace.keys.len(), seq.total_packets());
+
+        // Segment map: contiguous, correctly named, labels only where
+        // the scenario has ground truth.
+        assert_eq!(a.segments.len(), 3);
+        assert_eq!(a.segments[0], SegmentSpan {
+            scenario: "uniform",
+            start: 0,
+            len: 64,
+            labeled: false,
+        });
+        assert_eq!(a.segments[1].scenario, "ddos-burst");
+        assert_eq!(a.segments[1].start, 64);
+        assert!(a.segments[1].labeled);
+        assert_eq!(a.segments[2].start, 64 + 128);
+        assert!(a.trace.labels[..64].iter().all(|&l| l == 0), "unlabeled pad");
+        let attack_labels: u32 = a.trace.labels[64..192].iter().sum();
+        assert!(attack_labels > 0, "ddos segment carries ground truth");
+
+        // Malformed specs fail loudly.
+        assert!(ScenarioSequence::parse("").is_err());
+        assert!(ScenarioSequence::parse("uniform:x").is_err());
+        assert!(ScenarioSequence::parse("uniform:0").is_err());
+    }
+
+    #[test]
+    fn sequence_single_wraps_a_trace_with_aligned_labels() {
+        let s = Scenario::parse("uniform").unwrap();
+        let st = SequenceTrace::single(&s, s.generate(5, 32));
+        assert_eq!(st.segments.len(), 1);
+        assert!(!st.segments[0].labeled);
+        assert_eq!(st.trace.labels, vec![0; 32], "padded for alignment");
+        let d = Scenario::parse("ddos-burst").unwrap();
+        let st = SequenceTrace::single(&d, d.generate(5, 32));
+        assert!(st.segments[0].labeled);
+        assert_eq!(st.trace.labels.len(), 32);
     }
 
     #[test]

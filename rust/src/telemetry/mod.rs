@@ -74,19 +74,35 @@ impl Histogram {
     /// Approximate quantile from the log buckets (upper bound of the
     /// bucket containing the q-th sample).
     pub fn quantile_ns(&self, q: f64) -> f64 {
-        let total = self.count();
-        if total == 0 {
-            return 0.0;
+        quantile_ns_from_buckets(&self.bucket_counts(), q)
+    }
+
+    /// Same quantile as a [`Duration`] — what the control plane's
+    /// per-window latency signals are read in.
+    pub fn quantile(&self, q: f64) -> Duration {
+        Duration::from_nanos(self.quantile_ns(q) as u64)
+    }
+
+    /// Snapshot of the raw bucket counts (index i = samples in
+    /// [2^i, 2^{i+1}) ns). Two snapshots of the same histogram can be
+    /// differenced bucket-wise to get a *windowed* distribution — the
+    /// pull-based collection the control plane uses
+    /// ([`crate::coordinator::TierSnapshot`]).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Fold another histogram's samples into this one (bucket-wise).
+    /// Both sides stay usable; the merge is not atomic as a whole, but
+    /// each counter transfer is, so totals are never lost — good enough
+    /// for report-time aggregation across shards.
+    pub fn merge(&self, other: &Histogram) {
+        for (dst, src) in self.buckets.iter().zip(&other.buckets) {
+            dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
         }
-        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return 2f64.powi(i as i32 + 1);
-            }
-        }
-        2f64.powi(self.buckets.len() as i32)
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     pub fn render(&self, name: &str) -> String {
@@ -100,6 +116,70 @@ impl Histogram {
     }
 }
 
+/// Quantile over raw log₂ bucket counts (the shared kernel behind
+/// [`Histogram::quantile_ns`]): upper bound of the bucket holding the
+/// q-th sample, 0.0 for an empty distribution. Callers that difference
+/// two [`Histogram::bucket_counts`] snapshots use this to read
+/// percentiles of the *window* between them.
+pub fn quantile_ns_from_buckets(buckets: &[u64], q: f64) -> f64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+    let mut acc = 0u64;
+    for (i, &b) in buckets.iter().enumerate() {
+        acc += b;
+        if acc >= target {
+            return 2f64.powi(i as i32 + 1);
+        }
+    }
+    2f64.powi(buckets.len() as i32)
+}
+
+/// Number of output-class buckets tracked by [`ClassMix`]: outputs are
+/// bucketed by their low log₂(N) bits, which keeps a 1-bit classifier's
+/// benign/attacker split exact and still separates small multi-neuron
+/// heads.
+pub const CLASS_BUCKETS: usize = 8;
+
+/// Output-class histogram: how the served traffic's predictions are
+/// distributed. Maintained per *batch* by the serving workers (one
+/// local array fold per batch — nothing per packet beyond the output
+/// scatter the worker already does) and read by the control plane's
+/// windowed snapshots to compute attacker-share and class-mix drift.
+#[derive(Debug, Default)]
+pub struct ClassMix {
+    buckets: [Counter; CLASS_BUCKETS],
+}
+
+impl ClassMix {
+    /// Bucket index of one output word.
+    #[inline]
+    pub fn bucket_of(word: u32) -> usize {
+        word as usize & (CLASS_BUCKETS - 1)
+    }
+
+    /// Fold a batch-local count array in (one atomic add per non-empty
+    /// bucket per batch).
+    pub fn add(&self, counts: &[u64; CLASS_BUCKETS]) {
+        for (b, &n) in self.buckets.iter().zip(counts) {
+            if n > 0 {
+                b.add(n);
+            }
+        }
+    }
+
+    /// Snapshot of the cumulative per-class counts.
+    pub fn snapshot(&self) -> [u64; CLASS_BUCKETS] {
+        let mut out = [0u64; CLASS_BUCKETS];
+        for (o, b) in out.iter_mut().zip(&self.buckets) {
+            *o = b.get();
+        }
+        out
+    }
+}
+
 /// Metrics bundle for a serving engine.
 #[derive(Debug, Default)]
 pub struct EngineMetrics {
@@ -108,6 +188,9 @@ pub struct EngineMetrics {
     pub packets_dropped: Counter,
     pub parse_errors: Counter,
     pub batch_latency: Histogram,
+    /// Output-class distribution of everything served (filled by the
+    /// sharded tier's workers; the control plane windows it).
+    pub classes: ClassMix,
 }
 
 impl EngineMetrics {
@@ -168,5 +251,75 @@ mod tests {
         h.record(Duration::from_nanos(1500));
         // 1500ns is in bucket [1024, 2048) -> upper bound 2048.
         assert_eq!(h.quantile_ns(1.0), 2048.0);
+        assert_eq!(h.quantile(1.0), Duration::from_nanos(2048));
+    }
+
+    #[test]
+    fn quantile_accessor_matches_bucket_kernel() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), Duration::ZERO, "empty histogram");
+        for us in [1u64, 10, 100] {
+            for _ in 0..50 {
+                h.record(Duration::from_micros(us));
+            }
+        }
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), 48);
+        assert_eq!(counts.iter().sum::<u64>(), 150);
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.quantile_ns(q), quantile_ns_from_buckets(&counts, q));
+            assert_eq!(h.quantile(q).as_nanos() as f64, h.quantile_ns(q));
+        }
+        // Differencing two snapshots isolates the window between them.
+        let before = h.bucket_counts();
+        for _ in 0..50 {
+            h.record(Duration::from_micros(1000));
+        }
+        let diff: Vec<u64> = h
+            .bucket_counts()
+            .iter()
+            .zip(&before)
+            .map(|(a, b)| a - b)
+            .collect();
+        assert_eq!(diff.iter().sum::<u64>(), 50);
+        // The window holds only ~1ms samples; its p50 says so.
+        let p50 = quantile_ns_from_buckets(&diff, 0.5);
+        assert!(p50 >= 1_000_000.0, "window p50 {p50}");
+    }
+
+    #[test]
+    fn merge_folds_counts_and_quantiles() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for _ in 0..100 {
+            a.record(Duration::from_micros(1));
+            b.record(Duration::from_micros(100));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(b.count(), 100, "source histogram untouched");
+        // Merged p99 reflects b's slow samples, p10-ish a's fast ones.
+        assert!(a.quantile_ns(0.99) >= 100_000.0);
+        assert!(a.quantile_ns(0.25) <= 2048.0);
+        assert!(a.mean_ns() > Histogram::new().mean_ns());
+    }
+
+    #[test]
+    fn class_mix_buckets_and_snapshots() {
+        let m = ClassMix::default();
+        assert_eq!(ClassMix::bucket_of(0), 0);
+        assert_eq!(ClassMix::bucket_of(1), 1);
+        assert_eq!(ClassMix::bucket_of(9), 1, "low bits only");
+        let mut local = [0u64; CLASS_BUCKETS];
+        for w in [0u32, 1, 1, 7, 8] {
+            local[ClassMix::bucket_of(w)] += 1;
+        }
+        m.add(&local);
+        m.add(&local);
+        let snap = m.snapshot();
+        assert_eq!(snap[0], 4, "0 and 8 share bucket 0");
+        assert_eq!(snap[1], 4);
+        assert_eq!(snap[7], 2);
+        assert_eq!(snap.iter().sum::<u64>(), 10);
     }
 }

@@ -1,0 +1,76 @@
+//! CLI smoke tests (ISSUE 4 satellite): the serving subcommands must
+//! teach their scenario vocabulary — `--help` lists every name, and a
+//! typo'd `--scenario` enumerates them — and a tiny `autopilot` run
+//! must complete end to end without trained artifacts.
+
+use std::process::Command;
+
+use n2net::net::SCENARIO_NAMES;
+
+fn n2net(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_n2net"))
+        .args(args)
+        .output()
+        .expect("spawn n2net")
+}
+
+#[test]
+fn serve_help_lists_every_scenario_name() {
+    let out = n2net(&["serve", "--help"]);
+    assert!(out.status.success(), "serve --help failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for name in SCENARIO_NAMES {
+        assert!(stdout.contains(name), "serve --help missing {name:?}:\n{stdout}");
+    }
+    assert!(stdout.contains("--adaptive"), "{stdout}");
+    assert!(stdout.contains("--policy"), "{stdout}");
+}
+
+#[test]
+fn autopilot_help_lists_every_scenario_name() {
+    let out = n2net(&["autopilot", "--help"]);
+    assert!(out.status.success(), "autopilot --help failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for name in SCENARIO_NAMES {
+        assert!(
+            stdout.contains(name),
+            "autopilot --help missing {name:?}:\n{stdout}"
+        );
+    }
+    assert!(stdout.contains("--sequence"), "{stdout}");
+}
+
+#[test]
+fn unknown_scenario_error_enumerates_the_vocabulary() {
+    let out = n2net(&["serve", "--scenario", "warp-speed", "--packets", "16"]);
+    assert!(!out.status.success(), "bogus scenario must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    for name in SCENARIO_NAMES {
+        assert!(stderr.contains(name), "error missing {name:?}:\n{stderr}");
+    }
+}
+
+#[test]
+fn tiny_autopilot_run_completes_without_artifacts() {
+    // --artifacts pointing nowhere forces the crafted subnet
+    // classifier, so this runs hermetically (and fast: ~1.5k frames).
+    let out = n2net(&[
+        "autopilot",
+        "--sequence",
+        "uniform:256,ddos-burst:1024,uniform:256",
+        "--window",
+        "128",
+        "--shards",
+        "2",
+        "--seed",
+        "3",
+        "--artifacts",
+        "/nonexistent-n2net-artifacts",
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "autopilot failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("sequence: uniform:256,ddos-burst:1024,uniform:256"));
+    assert!(stdout.contains("closed-loop sim"), "{stdout}");
+    assert!(stdout.contains("policy:"), "{stdout}");
+}

@@ -1,0 +1,159 @@
+//! Closed-loop control-plane properties (ISSUE 4 acceptance):
+//!
+//! C1. Under a scripted ddos-burst sequence the controller swaps AT
+//!     MOST once per ramp (the policy engine's hysteresis), and never
+//!     outside one (no false swaps).
+//! C2. Every served packet is classified by either the pre-swap or the
+//!     post-swap model version — the H1 old-or-new invariant carried up
+//!     through the control plane. The sim's window discipline makes the
+//!     stronger split provable: everything before the swap boundary is
+//!     bit-exact with the old model, everything after with the new one.
+//! C3. A policy that swaps to an architecture-incompatible bank
+//!     artifact is rejected by the deployment without disturbing the
+//!     live model: version unmoved, every output still the old model's.
+
+use std::sync::Arc;
+
+use n2net::bnn::{self, BnnModel, PackedBits};
+use n2net::controlplane::{
+    prefix_classifier, sim_ddos, ModelBank, Policy, Sim, SimConfig,
+};
+use n2net::deploy::{Deployment, FieldExtractor};
+use n2net::net::{Scenario, ScenarioSequence};
+use n2net::util::prop;
+use n2net::util::rng::Rng;
+
+fn deployment_for(live: &BnnModel) -> Arc<Deployment> {
+    Arc::new(
+        Deployment::builder()
+            .extractor(FieldExtractor::SrcIp)
+            .model("live", live.clone())
+            .build()
+            .unwrap(),
+    )
+}
+
+fn expect_bit(model: &BnnModel, key: u32) -> u32 {
+    bnn::forward(model, &PackedBits::from_u32(key)).get(0) as u32
+}
+
+/// One random closed-loop scenario: random window size, shard count,
+/// attack peak, cooldown and seed; a uniform → ddos-burst → uniform
+/// sequence served under a swap-on-ramp policy.
+fn check_adaptive_loop(rng: &mut Rng) -> Result<(), String> {
+    let window_packets = 128 << rng.gen_range(0, 2); // 128 | 256
+    let n_shards = 1 + rng.gen_range(0, 3); // 1..=3
+    let peak = 0.7 + 0.25 * rng.gen_f64();
+    let cooldown = 2 + rng.gen_range(0, 6);
+    let seed = rng.next_u64();
+    let quiet_windows = 2 + rng.gen_range(0, 3);
+
+    let live = prefix_classifier(0xC0A8_0000);
+    let attack = prefix_classifier(0xC0A8_FFFF);
+    let dep = deployment_for(&live);
+    let bank = ModelBank::new("day", live.clone()).with_model("attack", attack.clone());
+    // min-severity keeps sampling noise on small windows from ever
+    // reading as a ramp; the true ramp crosses it comfortably.
+    let policy = Policy::parse(&format!(
+        "on ddos-ramp do swap attack cooldown={cooldown} min-severity=0.15"
+    ))
+    .map_err(|e| e.to_string())?;
+    let cfg = SimConfig { n_shards, window_packets, seed };
+    let seq = ScenarioSequence::new(vec![
+        (Scenario::Uniform, window_packets * quiet_windows),
+        (
+            Scenario::DdosBurst { ddos: sim_ddos(), peak_fraction: peak },
+            window_packets * 8,
+        ),
+        (Scenario::Uniform, window_packets * quiet_windows),
+    ]);
+    let mut sim =
+        Sim::new(&dep, "live", bank, policy, cfg).map_err(|e| e.to_string())?;
+    let report = sim.run_sequence(&seq).map_err(|e| e.to_string())?;
+
+    // C1: hysteresis — at most one publication for the single ramp,
+    // none outside it.
+    if report.swaps.len() > 1 {
+        return Err(format!(
+            "{} swaps for one ramp (window={window_packets} shards={n_shards} \
+             cooldown={cooldown}):\n{}",
+            report.swaps.len(),
+            report.render()
+        ));
+    }
+    if report.false_swaps != 0 {
+        return Err(format!("false swaps:\n{}", report.render()));
+    }
+    if report.rejected_swaps != 0 {
+        return Err("compatible artifact must never be rejected".into());
+    }
+
+    // C2: old-or-new, in its strongest window-aligned form.
+    let st = seq.generate(seed);
+    let boundary = report.swap_boundary().unwrap_or(report.outputs.len());
+    for (i, &key) in st.trace.keys.iter().enumerate() {
+        let served = report.outputs[i];
+        let (model, side) = if i < boundary {
+            (&live, "pre")
+        } else {
+            (&attack, "post")
+        };
+        let expect = expect_bit(model, key);
+        if served != expect {
+            let other = if i < boundary {
+                expect_bit(&attack, key)
+            } else {
+                expect_bit(&live, key)
+            };
+            return Err(format!(
+                "pkt {i} ({side}-swap, boundary {boundary}): served {served}, \
+                 {side}-model says {expect} (other model {other})"
+            ));
+        }
+    }
+    if !report.swaps.is_empty() && report.swaps[0].version != 2 {
+        return Err(format!("swap version {} != 2", report.swaps[0].version));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_c1_c2_one_swap_per_ramp_and_old_or_new_outputs() {
+    let cases = prop::default_cases().min(12);
+    prop::check("controlplane-adaptive-loop", cases, check_adaptive_loop);
+}
+
+/// C3: an incompatible bank artifact can be *proposed* by policy but
+/// never published — the live model is undisturbed.
+#[test]
+fn c3_incompatible_artifact_rejected_without_disturbing_serving() {
+    let live = prefix_classifier(0xC0A8_0000);
+    // Different architecture (32 -> [16] vs 32 -> [1]): the deployment
+    // must refuse the swap at publication time.
+    let wrong_arch = BnnModel::random(32, &[16], 5);
+    let dep = deployment_for(&live);
+    let bank = ModelBank::new("day", live.clone()).with_model("bad", wrong_arch);
+    let policy = Policy::parse("on ddos-ramp do swap bad cooldown=4").unwrap();
+    let cfg = SimConfig { n_shards: 2, window_packets: 256, seed: 17 };
+    let seq = ScenarioSequence::new(vec![
+        (Scenario::Uniform, 512),
+        (Scenario::DdosBurst { ddos: sim_ddos(), peak_fraction: 0.9 }, 2048),
+    ]);
+    let mut sim = Sim::new(&dep, "live", bank, policy, cfg).unwrap();
+    let report = sim.run_sequence(&seq).unwrap();
+
+    assert!(report.rejected_swaps >= 1, "\n{}", report.render());
+    assert!(report.swaps.is_empty(), "nothing published");
+    assert_eq!(dep.version("live").unwrap(), 1, "live model undisturbed");
+    // Every packet was served by the (only) live model.
+    let st = seq.generate(cfg.seed);
+    for (i, &key) in st.trace.keys.iter().enumerate() {
+        assert_eq!(report.outputs[i], expect_bit(&live, key), "pkt {i}");
+    }
+    // The rejection is visible in the event log.
+    assert!(report
+        .ticks
+        .iter()
+        .flat_map(|t| &t.events)
+        .any(|e| e.render().contains("REJECTED")));
+}
