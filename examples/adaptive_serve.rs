@@ -19,12 +19,14 @@
 //! ```
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::ensure;
 use n2net::controlplane::{
-    prefix_classifier, sim_ddos, ModelBank, Policy, Sim, SimConfig,
+    prefix_classifier, sim_ddos, spawn_live, Controller, LiveConfig, ManualClock,
+    ModelBank, Policy, Sim, SimConfig,
 };
-use n2net::deploy::{Deployment, FieldExtractor};
+use n2net::deploy::{Deployment, FieldExtractor, SwapHandle};
 use n2net::net::{Scenario, ScenarioSequence};
 
 fn main() -> anyhow::Result<()> {
@@ -84,6 +86,63 @@ fn main() -> anyhow::Result<()> {
         "\nreacted in {reaction} windows ({} frames); final version v{}",
         reaction as usize * cfg.window_packets,
         deployment.version("live")?
+    );
+
+    // ---- 6. The same loop, LIVE (DESIGN.md §14) ---------------------
+    // The production shape: a background controller thread over a
+    // streaming tier, here with a TIER action — the ramp reshards the
+    // tier from 2 to 4 shards, and the LiveStream drains-and-rebuilds
+    // mid-stream with outputs intact. The lockstep clock keeps the
+    // demo deterministic: each step() returns after the tick finishes.
+    println!("\n--- live controller thread ---");
+    let day2 = prefix_classifier(0xC0A8_0000);
+    let dep2 = Arc::new(
+        Deployment::builder()
+            .extractor(FieldExtractor::SrcIp)
+            .model("live", day2.clone())
+            .build()?,
+    );
+    let engine = dep2.live_sharded_engine("live", 2)?;
+    let controller = Controller::new(
+        SwapHandle::new(&dep2, "live")?,
+        ModelBank::new("day", day2),
+        Policy::parse("on ddos-ramp do reshard 4 cooldown=4")?,
+    )?
+    .with_tier(Arc::clone(&engine))?;
+    let (clock, driver) = ManualClock::pair();
+    let live = spawn_live(
+        Arc::clone(&engine),
+        controller,
+        Box::new(clock),
+        LiveConfig::default(),
+    );
+    let st = seq.generate(23);
+    let mut stream = engine.live_stream()?;
+    for chunk in st.trace.packets.chunks(cfg.window_packets) {
+        for pkt in chunk {
+            stream.push(pkt.clone())?;
+        }
+        ensure!(
+            stream.quiesce(Duration::from_secs(30)),
+            "window failed to quiesce"
+        );
+        ensure!(driver.step(), "controller thread alive");
+    }
+    let live_report = stream.finish()?;
+    let controller = live.stop();
+    for e in controller.events() {
+        println!("  {}", e.render());
+    }
+    ensure!(controller.reconfigs() == 1, "the ramp reshards the tier once");
+    ensure!(live_report.reconfigs() == 1, "the stream drained and rebuilt");
+    ensure!(engine.n_shards() == 4, "tier now serves with 4 shards");
+    println!(
+        "live loop: {} frames over {} epoch(s); tier resharded 2 -> {} shards \
+         mid-stream, zero frames lost ({} delivered)",
+        live_report.n_packets,
+        live_report.epochs.len(),
+        engine.n_shards(),
+        live_report.delivered(),
     );
     println!("adaptive serving demo PASSED");
     Ok(())

@@ -15,14 +15,17 @@
 //! keeps serving — the controller can *propose* a bad artifact but can
 //! never disturb the data plane with one.
 
+use std::sync::Arc;
+
+use crate::backend::BackendKind;
 use crate::bnn::BnnModel;
-use crate::coordinator::TierSnapshot;
+use crate::coordinator::{ShardedEngine, TierSnapshot, MAX_SHARDS};
 use crate::deploy::SwapHandle;
 use crate::error::{Error, Result};
 
 use super::detect::{
     DdosRampDetector, Detection, Detector, DriftDetector, ImbalanceDetector,
-    OverloadDetector,
+    LatencySloDetector, OverloadDetector,
 };
 use super::policy::{Action, Policy, PolicyEngine};
 use super::signal::{SignalCollector, SignalWindow};
@@ -78,10 +81,15 @@ impl ModelBank {
 pub enum Outcome {
     /// A new artifact was published at `version`.
     Published { model: String, version: u64 },
-    /// The swap was rejected; the live model kept serving untouched.
-    Rejected { model: String, error: String },
+    /// The action was rejected; the live tier kept serving untouched.
+    /// `target` is the action's spelling (a bank model name, `reshard
+    /// 8`, ...).
+    Rejected { target: String, error: String },
     /// Alert-only rule: logged, no data-plane change.
     Alerted,
+    /// A tier action (reshard / backend switch / overflow flip) was
+    /// applied to the attached serving tier.
+    Reconfigured { detail: String },
 }
 
 /// One control-loop event: which rule fired on what detection, and what
@@ -104,10 +112,11 @@ impl ControlEvent {
             Outcome::Published { model, version } => {
                 format!("published {model:?} as v{version}")
             }
-            Outcome::Rejected { model, error } => {
-                format!("REJECTED swap to {model:?}: {error}")
+            Outcome::Rejected { target, error } => {
+                format!("REJECTED {target:?}: {error}")
             }
             Outcome::Alerted => "alert".into(),
+            Outcome::Reconfigured { detail } => detail.clone(),
         };
         format!(
             "w{}: {} ({}; severity {:.2}) -> {} -> {outcome}",
@@ -138,18 +147,26 @@ pub struct Controller {
     engine: PolicyEngine,
     handle: SwapHandle,
     bank: ModelBank,
+    /// The serving tier the tier actions (reshard / backend switch /
+    /// overflow flip) execute against. Policies with tier actions are
+    /// validated against it when it is attached; without one those
+    /// actions are rejected at fire time.
+    tier: Option<Arc<ShardedEngine>>,
     events: Vec<ControlEvent>,
     published: u64,
     rejected: u64,
     alerts: u64,
+    reconfigs: u64,
 }
 
 impl Controller {
     /// Controller with the default detector set ([`DdosRampDetector`],
     /// [`DriftDetector`], [`OverloadDetector`], [`ImbalanceDetector`],
-    /// default thresholds). The policy is validated against the bank:
-    /// a rule naming an unregistered artifact is a config error at
-    /// build time, not a surprise mid-incident.
+    /// [`LatencySloDetector`], default thresholds). The policy is
+    /// validated against the bank and the legal tier-action ranges: a
+    /// rule naming an unregistered artifact, an out-of-range reshard,
+    /// or an unswitchable backend is a config error at build time, not
+    /// a surprise mid-incident.
     pub fn new(handle: SwapHandle, bank: ModelBank, policy: Policy) -> Result<Self> {
         Self::with_detectors(handle, bank, policy, Self::default_detectors())
     }
@@ -162,14 +179,36 @@ impl Controller {
         detectors: Vec<Box<dyn Detector>>,
     ) -> Result<Self> {
         for rule in &policy.rules {
-            if let Action::SwapModel(name) = &rule.action {
-                if bank.get(name).is_none() {
-                    return Err(Error::Config(format!(
-                        "policy swaps to {name:?} but the model bank only has \
-                         {:?}",
-                        bank.names()
-                    )));
+            match &rule.action {
+                Action::SwapModel(name) => {
+                    if bank.get(name).is_none() {
+                        return Err(Error::Config(format!(
+                            "policy swaps to {name:?} but the model bank only \
+                             has {:?}",
+                            bank.names()
+                        )));
+                    }
                 }
+                Action::Reshard(n) => {
+                    if *n == 0 || *n > MAX_SHARDS {
+                        return Err(Error::Config(format!(
+                            "policy reshards to {n} shards, out of the legal \
+                             range 1..={MAX_SHARDS}"
+                        )));
+                    }
+                }
+                Action::SwitchBackend(BackendKind::Lut) => {
+                    return Err(Error::Config(
+                        "policy switches to the lut baseline, which serves an \
+                         exact-match table instead of the deployed BNN — legal \
+                         switch targets: scalar|batched|reference"
+                            .into(),
+                    ));
+                }
+                Action::SwitchBackend(_)
+                | Action::Fallback
+                | Action::Alert
+                | Action::Overflow(_) => {}
             }
         }
         Ok(Self {
@@ -178,11 +217,34 @@ impl Controller {
             engine: PolicyEngine::new(policy),
             handle,
             bank,
+            tier: None,
             events: Vec::new(),
             published: 0,
             rejected: 0,
             alerts: 0,
+            reconfigs: 0,
         })
+    }
+
+    /// Attach the serving tier the tier actions execute against
+    /// (builder-style). Every `backend <kind>` target in the policy is
+    /// probe-validated against the tier's artifact right here — a kind
+    /// the tier cannot build (e.g. `reference` without a source model)
+    /// errors at construction with nothing reconfigured.
+    pub fn with_tier(mut self, tier: Arc<ShardedEngine>) -> Result<Self> {
+        for rule in &self.engine.policy().rules {
+            if let Action::SwitchBackend(kind) = rule.action {
+                tier.check_backend(kind).map_err(|e| {
+                    Error::Config(format!(
+                        "policy switches to the {} backend but the tier cannot \
+                         build it: {e}",
+                        kind.name()
+                    ))
+                })?;
+            }
+        }
+        self.tier = Some(tier);
+        Ok(self)
     }
 
     /// The default detector set.
@@ -192,6 +254,7 @@ impl Controller {
             Box::new(DriftDetector::default()),
             Box::new(OverloadDetector::default()),
             Box::new(ImbalanceDetector::default()),
+            Box::new(LatencySloDetector::default()),
         ]
     }
 
@@ -221,15 +284,21 @@ impl Controller {
         TickReport { window, detections, events }
     }
 
-    /// Execute one action through the swap handle. Swaps happen right
-    /// here in the controller's context — compilation and publication
-    /// are [`crate::deploy::Deployment::swap_model`]'s off-hot-path
-    /// protocol; serving never waits on this.
+    /// Execute one action. Swaps go through the swap handle —
+    /// compilation and publication are
+    /// [`crate::deploy::Deployment::swap_model`]'s off-hot-path
+    /// protocol; tier actions go through the attached
+    /// [`ShardedEngine`]'s reconfiguration cell (an atomic store, or a
+    /// generation bump the live dispatcher drains on). Serving never
+    /// waits on any of this.
     fn execute(&mut self, action: &Action) -> Outcome {
         let (name, model) = match action {
             Action::Alert => {
                 self.alerts += 1;
                 return Outcome::Alerted;
+            }
+            Action::Reshard(_) | Action::SwitchBackend(_) | Action::Overflow(_) => {
+                return self.execute_tier(action);
             }
             Action::Fallback => {
                 (self.bank.default_name().to_string(), self.bank.default_model().clone())
@@ -241,7 +310,7 @@ impl Controller {
                     // constructor validation; kept as a runtime guard.
                     self.rejected += 1;
                     return Outcome::Rejected {
-                        model: name.clone(),
+                        target: name.clone(),
                         error: "not in the model bank".into(),
                     };
                 }
@@ -254,7 +323,50 @@ impl Controller {
             }
             Err(e) => {
                 self.rejected += 1;
-                Outcome::Rejected { model: name, error: e.to_string() }
+                Outcome::Rejected { target: name, error: e.to_string() }
+            }
+        }
+    }
+
+    /// Execute one tier action against the attached serving tier. A
+    /// rejected action (no tier, invalid target) never disturbs
+    /// serving, mirroring the rejected-swap guarantee.
+    fn execute_tier(&mut self, action: &Action) -> Outcome {
+        let tier = match &self.tier {
+            Some(t) => t,
+            None => {
+                self.rejected += 1;
+                return Outcome::Rejected {
+                    target: action.render(),
+                    error: "no serving tier attached (Controller::with_tier)"
+                        .into(),
+                };
+            }
+        };
+        let applied = match action {
+            Action::Reshard(n) => {
+                tier.reshard(*n).map(|()| format!("resharded tier to {n} shard(s)"))
+            }
+            Action::SwitchBackend(kind) => tier
+                .set_backend(*kind)
+                .map(|()| format!("switched tier backend to {}", kind.name())),
+            Action::Overflow(policy) => {
+                tier.set_overflow(*policy);
+                Ok(format!("set overflow policy to {}", policy.name()))
+            }
+            _ => unreachable!("execute_tier only sees tier actions"),
+        };
+        match applied {
+            Ok(detail) => {
+                self.reconfigs += 1;
+                Outcome::Reconfigured { detail }
+            }
+            Err(e) => {
+                self.rejected += 1;
+                Outcome::Rejected {
+                    target: action.render(),
+                    error: e.to_string(),
+                }
             }
         }
     }
@@ -277,6 +389,11 @@ impl Controller {
     /// Alert-only firings.
     pub fn alerts(&self) -> u64 {
         self.alerts
+    }
+
+    /// Tier reconfigurations applied (reshard / backend / overflow).
+    pub fn reconfigs(&self) -> u64 {
+        self.reconfigs
     }
 
     /// Windows ticked so far.
@@ -412,6 +529,134 @@ mod tests {
             Outcome::Rejected { .. }
         ));
         assert!(c.events()[0].render().contains("REJECTED"));
+    }
+
+    #[test]
+    fn tier_action_policies_validate_at_construction() {
+        let m = BnnModel::random(32, &[16, 1], 21);
+        let (_dep, handle) = handle_for(&m);
+        // Out-of-range reshard.
+        let policy = Policy::parse("on overload do reshard 65").unwrap();
+        let err = Controller::new(handle.clone(), ModelBank::new("day", m.clone()), policy)
+            .err()
+            .expect("reshard 65 out of range")
+            .to_string();
+        assert!(err.contains("1..=64"), "range enumerated: {err}");
+        // The lut baseline is never a legal switch target.
+        let policy = Policy::parse("on overload do backend lut").unwrap();
+        let err = Controller::new(handle.clone(), ModelBank::new("day", m.clone()), policy)
+            .err()
+            .expect("lut switch rejected")
+            .to_string();
+        assert!(err.contains("scalar|batched|reference"), "{err}");
+        // A backend the tier cannot build fails when the tier attaches.
+        let compiled = {
+            use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
+            use crate::net::packet::IPV4_SRC_OFFSET;
+            use crate::rmt::ChipConfig;
+            let opts = CompilerOptions {
+                input: InputEncoding::BigEndianField { offset: IPV4_SRC_OFFSET },
+                ..Default::default()
+            };
+            Compiler::new(ChipConfig::rmt(), opts).compile(&m).unwrap()
+        };
+        let modelless = Arc::new(crate::coordinator::ShardedEngine::new(
+            compiled,
+            crate::coordinator::ShardConfig::default(),
+        ));
+        let policy = Policy::parse("on overload do backend reference").unwrap();
+        let c = Controller::new(handle, ModelBank::new("day", m.clone()), policy)
+            .unwrap();
+        let err = c.with_tier(modelless).err().expect("unbuildable backend");
+        assert!(err.to_string().contains("reference"), "{err}");
+    }
+
+    #[test]
+    fn tier_actions_reconfigure_the_attached_tier() {
+        use crate::coordinator::OverflowPolicy;
+
+        let live = BnnModel::random(32, &[16, 1], 22);
+        let (dep, handle) = handle_for(&live);
+        let tier = Arc::new(dep.sharded_engine("live", 2).unwrap());
+        let bank = ModelBank::new("day", live.clone());
+        let policy = Policy::parse(
+            "on overload do overflow drop cooldown=2\n\
+             on imbalance do reshard 4 cooldown=2\n",
+        )
+        .unwrap();
+        let mut c = Controller::new(handle, bank, policy)
+            .unwrap()
+            .with_tier(Arc::clone(&tier))
+            .unwrap();
+
+        let shard = |packets: u64, dropped: u64| ShardCounts {
+            packets,
+            batches: packets / 8,
+            dropped,
+            model_version: 1,
+            ..ShardCounts::default()
+        };
+        let benign = |total: u64| {
+            let mut c = [0u64; CLASS_BUCKETS];
+            c[0] = total;
+            c
+        };
+
+        // Window 0: 100 drops over 1100 ingested — overload.
+        let overloaded = TierSnapshot {
+            per_shard: vec![shard(500, 50), shard(500, 50)],
+            classes: benign(1000),
+            latency_buckets: vec![0; 48],
+        };
+        let t = c.tick(overloaded);
+        assert_eq!(t.events.len(), 1, "overload fires the overflow flip");
+        assert!(matches!(&t.events[0].outcome, Outcome::Reconfigured { .. }));
+        assert!(t.events[0].render().contains("overflow"));
+        assert_eq!(tier.overflow(), OverflowPolicy::Drop, "the tier really flipped");
+        assert_eq!(c.reconfigs(), 1);
+
+        // Window 1 (cumulative diff): one shard takes everything —
+        // imbalance, with no new drops (the overload rule stays down).
+        let skewed = TierSnapshot {
+            per_shard: vec![shard(2500, 50), shard(500, 50)],
+            classes: benign(3000),
+            latency_buckets: vec![0; 48],
+        };
+        let t = c.tick(skewed);
+        assert!(
+            t.events.iter().any(|e| e.render().contains("resharded")),
+            "imbalance reshards: {:?}",
+            t.detections
+        );
+        assert_eq!(tier.n_shards(), 4);
+        assert_eq!(tier.generation(), 1);
+        assert_eq!(c.reconfigs(), 2);
+    }
+
+    #[test]
+    fn tier_action_without_a_tier_is_rejected_not_fatal() {
+        let live = BnnModel::random(32, &[16, 1], 23);
+        let (_dep, handle) = handle_for(&live);
+        let bank = ModelBank::new("day", live.clone());
+        let policy = Policy::parse("on overload do reshard 4").unwrap();
+        let mut c = Controller::new(handle, bank, policy).unwrap();
+        let overloaded = TierSnapshot {
+            per_shard: vec![ShardCounts {
+                packets: 1000,
+                batches: 125,
+                dropped: 100,
+                model_version: 1,
+                ..ShardCounts::default()
+            }],
+            classes: [0; CLASS_BUCKETS],
+            latency_buckets: vec![0; 48],
+        };
+        let t = c.tick(overloaded);
+        assert_eq!(t.events.len(), 1);
+        assert!(matches!(&t.events[0].outcome, Outcome::Rejected { .. }));
+        assert!(t.events[0].render().contains("no serving tier attached"));
+        assert_eq!(c.rejected(), 1);
+        assert_eq!(c.reconfigs(), 0);
     }
 
     #[test]

@@ -24,10 +24,13 @@ pub enum SignalKind {
     Overload,
     /// Shard load imbalance (flow-affinity skew).
     Imbalance,
+    /// Windowed batch-latency percentiles over their SLO limits.
+    LatencySlo,
 }
 
 /// Every kind name [`SignalKind::parse`] accepts.
-pub const SIGNAL_KIND_NAMES: &[&str] = &["ddos-ramp", "drift", "overload", "imbalance"];
+pub const SIGNAL_KIND_NAMES: &[&str] =
+    &["ddos-ramp", "drift", "overload", "imbalance", "latency-slo"];
 
 impl SignalKind {
     /// The policy-file spelling of this kind.
@@ -37,6 +40,7 @@ impl SignalKind {
             SignalKind::Drift => "drift",
             SignalKind::Overload => "overload",
             SignalKind::Imbalance => "imbalance",
+            SignalKind::LatencySlo => "latency-slo",
         }
     }
 
@@ -47,6 +51,7 @@ impl SignalKind {
             "drift" => Ok(SignalKind::Drift),
             "overload" => Ok(SignalKind::Overload),
             "imbalance" => Ok(SignalKind::Imbalance),
+            "latency-slo" => Ok(SignalKind::LatencySlo),
             other => Err(crate::error::Error::Config(format!(
                 "unknown detector {other:?} (expected one of {})",
                 SIGNAL_KIND_NAMES.join("|")
@@ -278,6 +283,65 @@ impl Detector for ImbalanceDetector {
     }
 }
 
+/// Latency SLO: the window's batch-latency percentiles
+/// ([`SignalWindow::latency_p50_ns`] / `latency_p99_ns`, read from the
+/// tier's log₂ bucket diffs) against explicit limits. Severity is the
+/// worst exceed *fraction* (0.5 = 50% over its limit), so policies can
+/// gate soft breaches with `min-severity`. Windows with too few batches
+/// are skipped — a one-batch window's p99 is noise, and an idle window
+/// reports 0.0 which would read as a vacuous pass anyway.
+pub struct LatencySloDetector {
+    /// p50 limit in nanoseconds.
+    pub p50_limit_ns: f64,
+    /// p99 limit in nanoseconds.
+    pub p99_limit_ns: f64,
+    /// Ignore windows with fewer executed batches than this.
+    pub min_batches: u64,
+}
+
+impl Default for LatencySloDetector {
+    fn default() -> Self {
+        Self {
+            p50_limit_ns: 10_000_000.0, // 10ms
+            p99_limit_ns: 50_000_000.0, // 50ms
+            min_batches: 4,
+        }
+    }
+}
+
+impl Detector for LatencySloDetector {
+    fn kind(&self) -> SignalKind {
+        SignalKind::LatencySlo
+    }
+
+    fn observe(&mut self, w: &SignalWindow) -> Option<Detection> {
+        if w.batches < self.min_batches {
+            return None;
+        }
+        let p50_ratio = w.latency_p50_ns / self.p50_limit_ns.max(1.0);
+        let p99_ratio = w.latency_p99_ns / self.p99_limit_ns.max(1.0);
+        let worst = p50_ratio.max(p99_ratio);
+        if worst >= 1.0 {
+            Some(Detection {
+                kind: SignalKind::LatencySlo,
+                severity: worst - 1.0,
+                window: w.index,
+                detail: format!(
+                    "p50 {:.0}ns (limit {:.0}) p99 {:.0}ns (limit {:.0}) over \
+                     {} batches",
+                    w.latency_p50_ns,
+                    self.p50_limit_ns,
+                    w.latency_p99_ns,
+                    self.p99_limit_ns,
+                    w.batches
+                ),
+            })
+        } else {
+            None
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -378,5 +442,36 @@ mod tests {
         assert!(det.severity > 1.5);
         // Single-shard tiers have no imbalance to speak of.
         assert!(i.observe(&window(2, vec![1000], 0)).is_none());
+    }
+
+    #[test]
+    fn latency_slo_fires_on_breach_with_exceed_severity() {
+        let mut d = LatencySloDetector {
+            p50_limit_ns: 1_000.0,
+            p99_limit_ns: 10_000.0,
+            min_batches: 4,
+        };
+        // Within limits: quiet.
+        let mut w = window(0, vec![400, 400], 0);
+        w.latency_p50_ns = 500.0;
+        w.latency_p99_ns = 8_000.0;
+        assert!(d.observe(&w).is_none());
+        // p99 breach fires; severity is the exceed fraction.
+        w.latency_p99_ns = 20_000.0;
+        let det = d.observe(&w).expect("p99 over limit");
+        assert_eq!(det.kind, SignalKind::LatencySlo);
+        assert!((det.severity - 1.0).abs() < 1e-9, "2x limit -> severity 1");
+        assert!(det.detail.contains("p99"));
+        // p50 breach alone fires too.
+        w.latency_p99_ns = 8_000.0;
+        w.latency_p50_ns = 1_500.0;
+        assert!(d.observe(&w).is_some());
+        // Too few batches: the percentile estimate is noise — skipped,
+        // as is an idle window (batches 0, percentiles 0.0).
+        let mut tiny = window(1, vec![8, 8], 0);
+        tiny.batches = 2;
+        tiny.latency_p99_ns = 1e12;
+        assert!(d.observe(&tiny).is_none());
+        assert!(d.observe(&window(2, vec![0, 0], 0)).is_none());
     }
 }

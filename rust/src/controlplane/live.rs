@@ -1,0 +1,422 @@
+//! The live controller thread (DESIGN.md §14): the closed loop of §13
+//! attached to a RUNNING serving tier instead of an offline trace.
+//!
+//! [`spawn`] starts a background thread that pulls a [`TierSnapshot`]
+//! from a [`ShardedEngine`] on every clock tick and drives the
+//! `SignalCollector → Detector → PolicyEngine` pipeline through
+//! [`Controller::tick`] — the same pipeline the deterministic sim
+//! drives, so everything proven there (hysteresis, rejected-swap
+//! safety, rebaselining across reshards) holds verbatim online. The
+//! differences are operational:
+//!
+//! * **the clock is real but mockable** — [`SystemClock`] ticks on wall
+//!   time; [`ManualClock`] ticks in lockstep with a [`ClockDriver`]
+//!   (`step()` returns only after the controller finished the tick), so
+//!   tests and paced CLI runs keep deterministic window boundaries;
+//! * **the action log is a bounded channel** — the thread never blocks
+//!   on a slow consumer: events past [`LiveConfig::event_capacity`] are
+//!   counted as dropped ([`LiveHandle::dropped_events`]) instead of
+//!   backpressuring the control loop;
+//! * **shutdown is safe by construction** — [`LiveHandle::stop`] (and
+//!   plain `drop`) sets a flag every clock checks within ~10ms and
+//!   joins the thread, returning the [`Controller`] with its full event
+//!   history.
+//!
+//! The controller's authority over the tier is exactly what it was
+//! given: a [`SwapHandle`](crate::deploy::SwapHandle) for weight swaps
+//! plus, via [`Controller::with_tier`], the reconfiguration cell of the
+//! engine it watches (reshard / backend switch / overflow flip).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError,
+};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::ShardedEngine;
+
+use super::controller::{ControlEvent, Controller};
+
+/// How long a blocked clock wait goes between stop-flag checks — the
+/// bound on shutdown latency.
+const STOP_POLL: Duration = Duration::from_millis(10);
+
+/// The live loop's tick source. `wait` blocks until the next tick is
+/// due and returns `true`, or returns `false` when the loop should
+/// exit (stop requested, or the tick source is gone).
+pub trait Clock: Send {
+    fn wait(&mut self, stop: &AtomicBool) -> bool;
+}
+
+/// Wall-clock ticks every `interval`, polling the stop flag so
+/// shutdown never waits out a long interval.
+pub struct SystemClock {
+    pub interval: Duration,
+}
+
+impl SystemClock {
+    pub fn new(interval: Duration) -> Self {
+        Self { interval }
+    }
+}
+
+impl Clock for SystemClock {
+    fn wait(&mut self, stop: &AtomicBool) -> bool {
+        let deadline = Instant::now() + self.interval;
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return false;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return true;
+            }
+            std::thread::sleep(left.min(STOP_POLL));
+        }
+    }
+}
+
+/// Lockstep clock: ticks only when its [`ClockDriver`] says so. Both
+/// channels are rendezvous (capacity 0), which gives `step()` its
+/// guarantee: it returns only after the controller has fully processed
+/// the tick (the completion ack is sent when the clock re-enters
+/// `wait`).
+pub struct ManualClock {
+    ticks: Receiver<()>,
+    done: SyncSender<()>,
+    /// A tick was delivered and its completion ack is still owed.
+    owes_ack: bool,
+}
+
+/// The driving side of a [`ManualClock`].
+pub struct ClockDriver {
+    ticks: SyncSender<()>,
+    done: Receiver<()>,
+}
+
+impl ManualClock {
+    /// A lockstep clock and its driver.
+    pub fn pair() -> (ManualClock, ClockDriver) {
+        let (tick_tx, tick_rx) = sync_channel(0);
+        let (done_tx, done_rx) = sync_channel(0);
+        (
+            ManualClock { ticks: tick_rx, done: done_tx, owes_ack: false },
+            ClockDriver { ticks: tick_tx, done: done_rx },
+        )
+    }
+}
+
+impl Clock for ManualClock {
+    fn wait(&mut self, stop: &AtomicBool) -> bool {
+        if self.owes_ack {
+            // The previous tick is complete (the controller only calls
+            // wait between ticks): release the driver's step().
+            self.owes_ack = false;
+            let _ = self.done.send(());
+        }
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return false;
+            }
+            match self.ticks.recv_timeout(STOP_POLL) {
+                Ok(()) => {
+                    self.owes_ack = true;
+                    return true;
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return false,
+            }
+        }
+    }
+}
+
+impl ClockDriver {
+    /// Fire one tick and block until the controller has finished
+    /// processing it. Returns `false` once the live loop is gone.
+    pub fn step(&self) -> bool {
+        self.ticks.send(()).is_ok() && self.done.recv().is_ok()
+    }
+}
+
+/// Live-loop configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct LiveConfig {
+    /// Bound of the action-log channel; events beyond it are dropped
+    /// (counted), never blocking the loop.
+    pub event_capacity: usize,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        Self { event_capacity: 256 }
+    }
+}
+
+/// Shutdown-safe handle to a running live controller thread.
+pub struct LiveHandle {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<Controller>>,
+    events: Receiver<ControlEvent>,
+    ticks: Arc<AtomicU64>,
+    dropped_events: Arc<AtomicU64>,
+}
+
+impl LiveHandle {
+    /// Drain every event currently buffered in the action-log channel.
+    pub fn drain_events(&self) -> Vec<ControlEvent> {
+        self.events.try_iter().collect()
+    }
+
+    /// Ticks the controller has completed so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Ordering::Relaxed)
+    }
+
+    /// Events shed at the full action-log channel.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped_events.load(Ordering::Relaxed)
+    }
+
+    /// Stop the loop and join the thread, returning the controller
+    /// (its full event history survives the bounded channel).
+    pub fn stop(mut self) -> Controller {
+        self.stop.store(true, Ordering::Relaxed);
+        self.thread
+            .take()
+            .expect("live controller joined twice")
+            .join()
+            .expect("live controller thread panicked")
+    }
+}
+
+impl Drop for LiveHandle {
+    fn drop(&mut self) {
+        // A dropped handle (error/unwind path) must not leak the
+        // thread: request stop and join — the clocks poll the flag
+        // every ~10ms, so this is prompt.
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Attach a controller to a running tier: spawns the background thread
+/// that, on every clock tick, pulls `engine.snapshot()` and runs one
+/// [`Controller::tick`]. Fired events stream into the bounded action
+/// log; swap/reconfigure execution happens inside the controller
+/// thread, off every serving path (the §11/§14 protocols).
+pub fn spawn(
+    engine: Arc<ShardedEngine>,
+    mut controller: Controller,
+    mut clock: Box<dyn Clock>,
+    config: LiveConfig,
+) -> LiveHandle {
+    let stop = Arc::new(AtomicBool::new(false));
+    let ticks = Arc::new(AtomicU64::new(0));
+    let dropped_events = Arc::new(AtomicU64::new(0));
+    let (event_tx, event_rx) = sync_channel(config.event_capacity.max(1));
+    let thread = {
+        let stop = Arc::clone(&stop);
+        let ticks = Arc::clone(&ticks);
+        let dropped_events = Arc::clone(&dropped_events);
+        std::thread::spawn(move || {
+            while clock.wait(&stop) {
+                let report = controller.tick(engine.snapshot());
+                ticks.fetch_add(1, Ordering::Relaxed);
+                for event in report.events {
+                    match event_tx.try_send(event) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(_)) => {
+                            dropped_events.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(TrySendError::Disconnected(_)) => {}
+                    }
+                }
+            }
+            controller
+        })
+    };
+    LiveHandle {
+        stop,
+        thread: Some(thread),
+        events: event_rx,
+        ticks,
+        dropped_events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{self, PackedBits};
+    use crate::controlplane::{prefix_classifier, ModelBank, Policy};
+    use crate::coordinator::OverflowPolicy;
+    use crate::deploy::{Deployment, FieldExtractor, SwapHandle};
+    use crate::net::Scenario;
+
+    fn tier_and_controller(policy: &str) -> (Arc<Deployment>, Arc<ShardedEngine>, Controller) {
+        let live = prefix_classifier(0xC0A8_0000);
+        let dep = Arc::new(
+            Deployment::builder()
+                .extractor(FieldExtractor::SrcIp)
+                .model("live", live.clone())
+                .build()
+                .unwrap(),
+        );
+        let engine = Arc::new(dep.sharded_engine("live", 2).unwrap());
+        let handle = SwapHandle::new(&dep, "live").unwrap();
+        let controller =
+            Controller::new(handle, ModelBank::new("day", live), Policy::parse(policy).unwrap())
+                .unwrap()
+                .with_tier(Arc::clone(&engine))
+                .unwrap();
+        (dep, engine, controller)
+    }
+
+    #[test]
+    fn manual_clock_runs_in_lockstep_and_returns_the_controller() {
+        let (_dep, engine, controller) =
+            tier_and_controller("on overload do alert cooldown=8");
+        let (clock, driver) = ManualClock::pair();
+        let handle = spawn(
+            Arc::clone(&engine),
+            controller,
+            Box::new(clock),
+            LiveConfig::default(),
+        );
+        let trace = Scenario::Uniform.generate(3, 512);
+        for chunk in trace.packets.chunks(128) {
+            engine.process_trace(chunk).unwrap();
+            assert!(driver.step(), "loop alive");
+        }
+        assert_eq!(handle.ticks(), 4, "lockstep: one tick per step");
+        assert_eq!(handle.dropped_events(), 0);
+        let controller = handle.stop();
+        assert_eq!(controller.windows_seen(), 4);
+        assert_eq!(controller.published(), 0, "quiet traffic swaps nothing");
+        // A driver whose loop is gone reports it instead of hanging.
+        assert!(!driver.step());
+    }
+
+    #[test]
+    fn live_loop_swaps_on_a_ramp_through_the_thread() {
+        let live = prefix_classifier(0xC0A8_0000);
+        let attack = prefix_classifier(0xC0A8_FFFF);
+        let dep = Arc::new(
+            Deployment::builder()
+                .extractor(FieldExtractor::SrcIp)
+                .model("live", live.clone())
+                .build()
+                .unwrap(),
+        );
+        let engine = Arc::new(dep.sharded_engine("live", 2).unwrap());
+        let controller = Controller::new(
+            SwapHandle::new(&dep, "live").unwrap(),
+            ModelBank::new("day", live.clone()).with_model("attack", attack.clone()),
+            Policy::parse("on ddos-ramp do swap attack cooldown=4").unwrap(),
+        )
+        .unwrap()
+        .with_tier(Arc::clone(&engine))
+        .unwrap();
+        let (clock, driver) = ManualClock::pair();
+        let handle =
+            spawn(Arc::clone(&engine), controller, Box::new(clock), LiveConfig::default());
+
+        let window = 256;
+        let quiet = Scenario::Uniform.generate(5, window * 3);
+        let burst = Scenario::DdosBurst {
+            ddos: crate::controlplane::sim_ddos(),
+            peak_fraction: 0.9,
+        }
+        .generate(5, window * 8);
+        let mut stream = engine.live_stream().unwrap();
+        for chunk in quiet.packets.chunks(window).chain(burst.packets.chunks(window)) {
+            for pkt in chunk {
+                stream.push(pkt.clone()).unwrap();
+            }
+            assert!(stream.quiesce(Duration::from_secs(10)), "window retires");
+            assert!(driver.step());
+        }
+        let report = stream.finish().unwrap();
+        let events = handle.drain_events();
+        assert!(
+            events.iter().any(|e| e.render().contains("published")),
+            "the swap streams out the action log: {events:?}"
+        );
+        let controller = handle.stop();
+        assert_eq!(controller.published(), 1, "one swap for the ramp");
+        assert_eq!(dep.version("live").unwrap(), 2);
+        assert_eq!(report.n_packets, window * 11);
+        // Pre-ramp quiet frames were served by the live model.
+        for (i, &key) in quiet.keys.iter().enumerate() {
+            let expect =
+                bnn::forward(&live, &PackedBits::from_u32(key)).get(0) as u32;
+            assert_eq!(report.outputs[i], expect, "quiet pkt {i}");
+        }
+    }
+
+    #[test]
+    fn controller_reshard_rebuilds_the_live_stream_mid_run() {
+        // The controller thread reshards (here triggered by the engine
+        // handle it holds — the policy path is covered by controller
+        // unit tests); the serving side's LiveStream must drain the old
+        // tier and continue bit-exact on the new one.
+        let (_dep, engine, controller) =
+            tier_and_controller("on overload do alert cooldown=8");
+        let (clock, driver) = ManualClock::pair();
+        let handle =
+            spawn(Arc::clone(&engine), controller, Box::new(clock), LiveConfig::default());
+        let mut stream = engine.live_stream().unwrap();
+        let trace = Scenario::Uniform.generate(7, 256);
+        for pkt in &trace.packets {
+            stream.push(pkt.clone()).unwrap();
+        }
+        assert!(stream.quiesce(Duration::from_secs(10)));
+        assert!(driver.step());
+        engine.reshard(4).unwrap();
+        for pkt in &trace.packets {
+            stream.push(pkt.clone()).unwrap();
+        }
+        let report = stream.finish().unwrap();
+        assert!(driver.step(), "loop survives the reshard");
+        let _ = handle.stop();
+        assert_eq!(report.reconfigs(), 1);
+        assert_eq!(report.epochs[1].per_shard.len(), 4);
+        assert_eq!(report.n_packets, 512);
+        let live = prefix_classifier(0xC0A8_0000);
+        for (i, &key) in trace.keys.iter().enumerate() {
+            let expect =
+                bnn::forward(&live, &PackedBits::from_u32(key)).get(0) as u32;
+            assert_eq!(report.outputs[i], expect, "epoch-0 pkt {i}");
+            assert_eq!(report.outputs[256 + i], expect, "epoch-1 pkt {i}");
+        }
+        assert_eq!(engine.overflow(), OverflowPolicy::Block);
+    }
+
+    #[test]
+    fn system_clock_ticks_and_stops_promptly() {
+        let (_dep, engine, controller) =
+            tier_and_controller("on overload do alert cooldown=8");
+        let handle = spawn(
+            Arc::clone(&engine),
+            controller,
+            Box::new(SystemClock::new(Duration::from_millis(5))),
+            LiveConfig { event_capacity: 4 },
+        );
+        let t0 = Instant::now();
+        while handle.ticks() < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "clock must tick");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let t_stop = Instant::now();
+        let controller = handle.stop();
+        assert!(
+            t_stop.elapsed() < Duration::from_secs(2),
+            "shutdown is prompt"
+        );
+        assert!(controller.windows_seen() >= 2);
+    }
+}

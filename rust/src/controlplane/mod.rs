@@ -42,12 +42,21 @@
 //!   through a real [`ShardedEngine`](crate::coordinator::ShardedEngine)
 //!   window by window on a virtual clock, measuring reaction windows,
 //!   false swaps, and pre/post-swap oracle accuracy.
+//! * [`live`] — the same loop attached to a RUNNING tier: a background
+//!   controller thread pulling snapshots on a real (mockable) clock,
+//!   streaming fired actions into a bounded log, shut down through a
+//!   join-safe handle (DESIGN.md §14). Policies can now reshape the
+//!   tier itself — `reshard <n>`, `backend <kind>`,
+//!   `overflow block|drop` — on top of the §13 swap vocabulary, with a
+//!   `latency-slo` detector over the windowed p50/p99 signals.
 //!
 //! CLI: `n2net autopilot` runs the loop over a scenario sequence;
-//! `n2net serve --adaptive --policy <file>` attaches it to a serve run.
+//! `n2net serve --adaptive --policy <file>` attaches it to a serve run
+//! (`--live` runs it as the background thread over a `ShardedStream`).
 
 pub mod controller;
 pub mod detect;
+pub mod live;
 pub mod policy;
 pub mod signal;
 pub mod sim;
@@ -55,7 +64,11 @@ pub mod sim;
 pub use controller::{ControlEvent, Controller, ModelBank, Outcome, TickReport};
 pub use detect::{
     DdosRampDetector, Detection, Detector, DriftDetector, ImbalanceDetector,
-    OverloadDetector, SignalKind, SIGNAL_KIND_NAMES,
+    LatencySloDetector, OverloadDetector, SignalKind, SIGNAL_KIND_NAMES,
+};
+pub use live::{
+    spawn as spawn_live, Clock, ClockDriver, LiveConfig, LiveHandle, ManualClock,
+    SystemClock,
 };
 pub use policy::{Action, Firing, Policy, PolicyEngine, Rule, DEFAULT_COOLDOWN};
 pub use signal::{SignalCollector, SignalWindow};

@@ -14,18 +14,29 @@
 //! Policy files are line-based (`#` comments):
 //!
 //! ```text
-//! on ddos-ramp do swap attack-heavy cooldown=6 min-severity=0.2
-//! on overload  do alert
-//! on drift     do fallback cooldown=10
+//! on ddos-ramp   do swap attack-heavy cooldown=6 min-severity=0.2
+//! on overload    do overflow drop
+//! on drift       do fallback cooldown=10
+//! on imbalance   do reshard 8
+//! on latency-slo do backend batched
 //! ```
+//!
+//! The tier actions (`reshard <n>`, `backend <kind>`,
+//! `overflow block|drop`) reshape the serving tier itself — they
+//! execute against the controller's attached
+//! [`ShardedEngine`](crate::coordinator::ShardedEngine) (see
+//! [`Controller::with_tier`](super::Controller::with_tier)).
 
+use crate::backend::BackendKind;
+use crate::coordinator::OverflowPolicy;
 use crate::error::{Error, Result};
 
 use super::detect::{Detection, SignalKind};
 
 /// What a fired rule does. Swap targets name entries in the
 /// controller's model bank ([`super::ModelBank`]); `Fallback` targets
-/// the bank's designated default artifact.
+/// the bank's designated default artifact; the tier actions reshape
+/// the attached serving tier (validated at controller construction).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Action {
     /// Hot-swap the serving model to the named bank artifact.
@@ -34,6 +45,12 @@ pub enum Action {
     Fallback,
     /// Log only; no data-plane change.
     Alert,
+    /// Drain-and-rebuild the tier to this many shards.
+    Reshard(usize),
+    /// Switch every shard's inference backend.
+    SwitchBackend(BackendKind),
+    /// Flip the dispatcher's overflow policy.
+    Overflow(OverflowPolicy),
 }
 
 impl Action {
@@ -43,6 +60,9 @@ impl Action {
             Action::SwapModel(name) => format!("swap {name}"),
             Action::Fallback => "fallback".into(),
             Action::Alert => "alert".into(),
+            Action::Reshard(n) => format!("reshard {n}"),
+            Action::SwitchBackend(kind) => format!("backend {}", kind.name()),
+            Action::Overflow(policy) => format!("overflow {}", policy.name()),
         }
     }
 }
@@ -101,9 +121,32 @@ impl Policy {
                 ),
                 Some("fallback") => Action::Fallback,
                 Some("alert") => Action::Alert,
+                Some("reshard") => {
+                    let arg = tokens
+                        .next()
+                        .ok_or_else(|| err("`reshard` needs a shard count".into()))?;
+                    let n: usize = arg.parse().map_err(|_| {
+                        err(format!("reshard count {arg:?} is not an integer"))
+                    })?;
+                    if n == 0 {
+                        return Err(err("reshard count must be >= 1".into()));
+                    }
+                    Action::Reshard(n)
+                }
+                Some("backend") => Action::SwitchBackend(BackendKind::parse(
+                    tokens
+                        .next()
+                        .ok_or_else(|| err("`backend` needs a backend kind".into()))?,
+                )?),
+                Some("overflow") => Action::Overflow(OverflowPolicy::parse(
+                    tokens.next().ok_or_else(|| {
+                        err("`overflow` needs a policy (block|drop)".into())
+                    })?,
+                )?),
                 other => {
                     return Err(err(format!(
-                        "unknown action {other:?} (expected swap <model>|fallback|alert)"
+                        "unknown action {other:?} (expected swap <model>|fallback|\
+                         alert|reshard <n>|backend <kind>|overflow block|drop)"
                     )))
                 }
             };
@@ -258,6 +301,74 @@ mod tests {
         let p2 = Policy::parse(&p.render()).unwrap();
         assert_eq!(p2.rules.len(), 3);
         assert_eq!(p2.rules[0].cooldown, 6);
+    }
+
+    #[test]
+    fn tier_actions_parse_render_and_enumerate_on_error() {
+        let p = Policy::parse(
+            "on imbalance do reshard 8\n\
+             on latency-slo do backend scalar\n\
+             on overload do overflow drop\n",
+        )
+        .unwrap();
+        assert_eq!(p.rules[0].action, Action::Reshard(8));
+        assert_eq!(
+            p.rules[1].action,
+            Action::SwitchBackend(crate::backend::BackendKind::Scalar)
+        );
+        assert_eq!(
+            p.rules[2].action,
+            Action::Overflow(crate::coordinator::OverflowPolicy::Drop)
+        );
+        assert_eq!(p.rules[0].action.render(), "reshard 8");
+        assert_eq!(p.rules[1].action.render(), "backend scalar");
+        assert_eq!(p.rules[2].action.render(), "overflow drop");
+
+        assert!(Policy::parse("on overload do reshard").is_err());
+        assert!(Policy::parse("on overload do reshard x").is_err());
+        assert!(Policy::parse("on overload do reshard 0").is_err());
+        let err = Policy::parse("on overload do backend gpu")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("scalar|batched|reference"), "{err}");
+        let err = Policy::parse("on overload do overflow spill")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("block|drop"), "{err}");
+    }
+
+    #[test]
+    fn every_policy_reparses_from_its_own_render() {
+        // Satellite (ISSUE 5): render spells min_severity with `{}` —
+        // prove the grammar round-trips even for severities usually
+        // written scientifically (1e-6; Rust's f64 Display never emits
+        // an exponent, and the parser accepts both spellings) and for
+        // cooldown=0.
+        let text = "\
+            on ddos-ramp   do swap attack cooldown=0 min-severity=1e-6\n\
+            on overload    do overflow drop cooldown=2 min-severity=0.125\n\
+            on imbalance   do reshard 8\n\
+            on latency-slo do backend scalar min-severity=0.5\n\
+            on drift       do fallback cooldown=7\n\
+            on drift       do alert\n";
+        let p = Policy::parse(text).unwrap();
+        let rendered = p.render();
+        let p2 = Policy::parse(&rendered)
+            .unwrap_or_else(|e| panic!("render broke the grammar: {e}\n{rendered}"));
+        assert_eq!(p.rules.len(), p2.rules.len());
+        for (a, b) in p.rules.iter().zip(&p2.rules) {
+            assert_eq!(a.on, b.on);
+            assert_eq!(a.action, b.action);
+            assert_eq!(a.cooldown, b.cooldown);
+            assert_eq!(
+                a.min_severity.to_bits(),
+                b.min_severity.to_bits(),
+                "min-severity {} must survive the round-trip exactly",
+                a.min_severity
+            );
+        }
+        // After one round the render is a fixed point.
+        assert_eq!(rendered, p2.render());
     }
 
     #[test]

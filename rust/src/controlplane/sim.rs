@@ -87,6 +87,8 @@ pub struct SimReport {
     pub rejected_swaps: u64,
     /// Alert-only firings.
     pub alerts: u64,
+    /// Tier reconfigurations applied (reshard / backend / overflow).
+    pub reconfigs: u64,
     /// Classification accuracy over labeled frames served before /
     /// after the first published swap (None when that side has no
     /// labeled frames, or no swap happened for the post side).
@@ -139,11 +141,12 @@ impl SimReport {
             }
         }
         s.push_str(&format!(
-            "swaps={} false_swaps={} rejected={} alerts={}\n",
+            "swaps={} false_swaps={} rejected={} alerts={} reconfigs={}\n",
             self.swaps.len(),
             self.false_swaps,
             self.rejected_swaps,
             self.alerts,
+            self.reconfigs,
         ));
         match self.reaction_windows {
             Some(r) => s.push_str(&format!(
@@ -164,7 +167,7 @@ impl SimReport {
 /// The harness: one sharded engine + one controller, stepped window by
 /// window.
 pub struct Sim {
-    engine: ShardedEngine,
+    engine: Arc<ShardedEngine>,
     controller: Controller,
     cfg: SimConfig,
 }
@@ -173,7 +176,11 @@ impl Sim {
     /// Build over a deployment's serving model. The engine comes from
     /// [`Deployment::sharded_engine`] (so backend/batching follow the
     /// deployment's configuration) and the controller's swap authority
-    /// from [`SwapHandle::new`].
+    /// from [`SwapHandle::new`]; the engine doubles as the controller's
+    /// tier handle, so policies with tier actions (`reshard`,
+    /// `backend`, `overflow`) work in the sim too — a reshard lands
+    /// between windows (each window's trace is drained to completion),
+    /// the same barrier the live path's drain-and-rebuild provides.
     pub fn new(
         deployment: &Arc<Deployment>,
         model: &str,
@@ -181,14 +188,20 @@ impl Sim {
         policy: Policy,
         cfg: SimConfig,
     ) -> Result<Self> {
-        let engine = deployment.sharded_engine(model, cfg.n_shards)?;
+        let engine = Arc::new(deployment.sharded_engine(model, cfg.n_shards)?);
         let handle = SwapHandle::new(deployment, model)?;
-        let controller = Controller::new(handle, bank, policy)?;
+        let controller =
+            Controller::new(handle, bank, policy)?.with_tier(Arc::clone(&engine))?;
         Ok(Self { engine, controller, cfg })
     }
 
     pub fn controller(&self) -> &Controller {
         &self.controller
+    }
+
+    /// The serving tier the sim drives (and the controller reshapes).
+    pub fn engine(&self) -> &Arc<ShardedEngine> {
+        &self.engine
     }
 
     /// Generate the sequence (deterministic per `cfg.seed`) and run it.
@@ -204,6 +217,7 @@ impl Sim {
         let published_before = self.controller.published();
         let rejected_before = self.controller.rejected();
         let alerts_before = self.controller.alerts();
+        let reconfigs_before = self.controller.reconfigs();
         let mut outputs = Vec::with_capacity(st.trace.packets.len());
         let mut ticks = Vec::new();
         let mut swaps = Vec::new();
@@ -303,6 +317,7 @@ impl Sim {
             reaction_windows,
             rejected_swaps: self.controller.rejected() - rejected_before,
             alerts: self.controller.alerts() - alerts_before,
+            reconfigs: self.controller.reconfigs() - reconfigs_before,
             accuracy_pre_swap,
             accuracy_post_swap,
         })
@@ -452,8 +467,10 @@ mod tests {
         let report = sim.run_sequence(&seq).unwrap();
         assert!(report.swaps.is_empty(), "\n{}", report.render());
         assert_eq!(report.false_swaps, 0);
+        assert_eq!(report.reconfigs, 0, "quiet run reconfigures nothing");
         assert_eq!(dep.version("live").unwrap(), 1);
         assert_eq!(report.reaction_windows, None);
         assert_eq!(report.ticks.len(), 8);
+        assert_eq!(sim.engine().n_shards(), 2);
     }
 }

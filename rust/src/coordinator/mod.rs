@@ -26,6 +26,7 @@ pub mod shard;
 pub use batcher::{Batch, Batcher, BatchPolicy};
 pub use engine::{Engine, EngineConfig, EngineReport, RouterPolicy};
 pub use shard::{
-    load_imbalance, OverflowPolicy, ShardConfig, ShardCounts, ShardStats,
-    ShardTelemetry, ShardedEngine, ShardedReport, ShardedStream, TierSnapshot,
+    load_imbalance, LiveReport, LiveStream, OverflowPolicy, ShardConfig,
+    ShardCounts, ShardStats, ShardTelemetry, ShardedEngine, ShardedReport,
+    ShardedStream, TierSnapshot, MAX_SHARDS,
 };

@@ -27,9 +27,32 @@
 //! timeout — without that, a sub-`max_size` tail would sit stranded
 //! until the stream closed (the stranded-tail bug; regression test
 //! below).
+//!
+//! **Live reconfiguration** (DESIGN.md §14): the control plane can
+//! reshape a serving tier while streams are open. The reconfigurable
+//! knobs live in one shared [`TierCell`] of atomics:
+//!
+//! * [`ShardedEngine::set_overflow`] — the dispatcher re-reads the
+//!   policy with one atomic load per push, so a Block↔Drop flip takes
+//!   effect on the very next frame (frames already queued are
+//!   unaffected; overflow policy only ever governs the push side);
+//! * [`ShardedEngine::set_backend`] — each shard worker peeks the kind
+//!   once per batch (alongside the version peek it already does) and
+//!   rebuilds its backend from the currently *published* artifact —
+//!   the same [`crate::deploy::SwapCell`] path hot-swaps use — so a
+//!   switch lands at a batch boundary, never mid-batch;
+//! * [`ShardedEngine::reshard`] — changes the shard count via
+//!   **drain-and-rebuild**: the generation counter bumps, and a
+//!   [`LiveStream`] dispatcher observing it finishes the old stream
+//!   (every queued frame classified, workers joined) before opening
+//!   the new one. The global drain barrier is what makes the flow
+//!   guarantee trivial: a flow's frames are served entirely by the old
+//!   tier or entirely by the new one from the barrier on — old-or-new
+//!   per flow, never interleaved — and outputs stay in global ingest
+//!   order because each epoch's report is itself ingest-ordered.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -56,6 +79,91 @@ pub enum OverflowPolicy {
     /// Shed load: the frame is dropped at the full queue and its output
     /// word stays 0 (the tail-drop a real ingress would do).
     Drop,
+}
+
+impl OverflowPolicy {
+    /// The CLI / policy-file spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            OverflowPolicy::Block => "block",
+            OverflowPolicy::Drop => "drop",
+        }
+    }
+
+    /// Parse a CLI / policy-file spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "block" => Ok(OverflowPolicy::Block),
+            "drop" => Ok(OverflowPolicy::Drop),
+            other => Err(Error::Config(format!(
+                "unknown overflow policy {other:?} (expected block|drop)"
+            ))),
+        }
+    }
+}
+
+/// Most shards a tier can be resharded to — the legal-range bound
+/// policy validation enforces at controller construction.
+pub const MAX_SHARDS: usize = 64;
+
+// Atomic encodings for the TierCell (kept local: the cell is an
+// implementation detail of the reconfiguration protocol).
+fn overflow_to_u8(p: OverflowPolicy) -> u8 {
+    match p {
+        OverflowPolicy::Block => 0,
+        OverflowPolicy::Drop => 1,
+    }
+}
+
+fn overflow_from_u8(v: u8) -> OverflowPolicy {
+    if v == 1 {
+        OverflowPolicy::Drop
+    } else {
+        OverflowPolicy::Block
+    }
+}
+
+fn backend_to_u8(k: BackendKind) -> u8 {
+    match k {
+        BackendKind::Scalar => 0,
+        BackendKind::Batched => 1,
+        BackendKind::Reference => 2,
+        BackendKind::Lut => 3,
+    }
+}
+
+fn backend_from_u8(v: u8) -> BackendKind {
+    match v {
+        0 => BackendKind::Scalar,
+        2 => BackendKind::Reference,
+        3 => BackendKind::Lut,
+        _ => BackendKind::Batched,
+    }
+}
+
+/// The runtime-reconfigurable tier knobs, shared between the engine
+/// (the control plane's write side) and every live dispatcher / shard
+/// worker (read side: one relaxed atomic load per push or per batch —
+/// nothing new on the per-packet classify path).
+#[derive(Debug)]
+struct TierCell {
+    overflow: AtomicU8,
+    backend: AtomicU8,
+    n_shards: AtomicUsize,
+    /// Bumped by every reshard; a [`LiveStream`] dispatcher observing a
+    /// change drains and rebuilds before accepting the next frame.
+    generation: AtomicU64,
+}
+
+impl TierCell {
+    fn new(config: &ShardConfig) -> Self {
+        Self {
+            overflow: AtomicU8::new(overflow_to_u8(config.overflow)),
+            backend: AtomicU8::new(backend_to_u8(config.backend)),
+            n_shards: AtomicUsize::new(config.n_shards.max(1)),
+            generation: AtomicU64::new(0),
+        }
+    }
 }
 
 /// Sharded-serving configuration.
@@ -388,10 +496,15 @@ impl<T> Drop for CloseOnDrop<'_, T> {
 pub struct ShardedEngine {
     source: EngineSource,
     config: ShardConfig,
+    /// Runtime-reconfigurable knobs (overflow / backend / shard count /
+    /// generation), shared with every open dispatcher and worker.
+    cell: Arc<TierCell>,
     pub metrics: Arc<EngineMetrics>,
     /// Cumulative per-shard counters, shared with every stream this
-    /// engine opens (see [`ShardedEngine::snapshot`]).
-    shard_telemetry: Vec<Arc<ShardTelemetry>>,
+    /// engine opens (see [`ShardedEngine::snapshot`]). Behind a mutex
+    /// only so [`ShardedEngine::reshard`] can replace the vec — workers
+    /// hold their own `Arc<ShardTelemetry>` and never touch the lock.
+    shard_telemetry: Mutex<Vec<Arc<ShardTelemetry>>>,
 }
 
 /// What one shard worker hands back at join time.
@@ -412,7 +525,8 @@ impl ShardedEngine {
     pub fn new(compiled: CompiledModel, config: ShardConfig) -> Self {
         let source = EngineSource::Static { compiled: Arc::new(compiled), model: None };
         Self {
-            shard_telemetry: Self::fresh_telemetry(&source, &config),
+            shard_telemetry: Mutex::new(Self::fresh_telemetry(&source, config.n_shards)),
+            cell: Arc::new(TierCell::new(&config)),
             source,
             config,
             metrics: Arc::new(EngineMetrics::default()),
@@ -422,11 +536,8 @@ impl ShardedEngine {
     /// One telemetry cell per shard, versions seeded from the source so
     /// a snapshot taken before any batch already reports the published
     /// version instead of a phantom v0 skew.
-    fn fresh_telemetry(
-        source: &EngineSource,
-        config: &ShardConfig,
-    ) -> Vec<Arc<ShardTelemetry>> {
-        (0..config.n_shards.max(1))
+    fn fresh_telemetry(source: &EngineSource, n: usize) -> Vec<Arc<ShardTelemetry>> {
+        (0..n.max(1))
             .map(|_| {
                 let t = ShardTelemetry::default();
                 t.model_version.store(source.version(), Ordering::Relaxed);
@@ -453,7 +564,8 @@ impl ShardedEngine {
     ) -> Self {
         let source = EngineSource::Slot { slot, lut };
         Self {
-            shard_telemetry: Self::fresh_telemetry(&source, &config),
+            shard_telemetry: Mutex::new(Self::fresh_telemetry(&source, config.n_shards)),
+            cell: Arc::new(TierCell::new(&config)),
             source,
             config,
             metrics: Arc::new(EngineMetrics::default()),
@@ -465,9 +577,86 @@ impl ShardedEngine {
         self.source.compiled()
     }
 
-    /// Number of shards this engine serves with.
+    /// Number of shards this engine currently serves with (the target
+    /// of the latest [`ShardedEngine::reshard`]; streams opened earlier
+    /// keep their shard count until they drain).
     pub fn n_shards(&self) -> usize {
-        self.config.n_shards.max(1)
+        self.cell.n_shards.load(Ordering::Relaxed).max(1)
+    }
+
+    /// The overflow policy live dispatchers currently apply.
+    pub fn overflow(&self) -> OverflowPolicy {
+        overflow_from_u8(self.cell.overflow.load(Ordering::Relaxed))
+    }
+
+    /// Flip the overflow policy at runtime: every live dispatcher
+    /// re-reads it with one atomic load per push, so the flip governs
+    /// the very next frame. Frames already queued are unaffected —
+    /// overflow policy only ever acts on the push side — which is why
+    /// the flip is safe mid-stream: it can never un-deliver or reorder
+    /// anything, only change whether FUTURE frames wait or shed.
+    pub fn set_overflow(&self, policy: OverflowPolicy) {
+        self.cell.overflow.store(overflow_to_u8(policy), Ordering::Relaxed);
+    }
+
+    /// The backend kind shard workers currently target.
+    pub fn backend_kind(&self) -> BackendKind {
+        backend_from_u8(self.cell.backend.load(Ordering::Relaxed))
+    }
+
+    /// Probe-build a backend of `kind` from the currently published
+    /// artifact — the validation both [`ShardedEngine::set_backend`]
+    /// and controller-construction policy checks use.
+    pub fn check_backend(&self, kind: BackendKind) -> Result<()> {
+        self.source.backend(kind).map(|_| ())
+    }
+
+    /// Switch every shard's backend at runtime. Validated here by a
+    /// probe build (a kind this source cannot construct — `reference`
+    /// without a model, `lut` without a table — fails fast and changes
+    /// nothing); each worker then picks the new kind up with one atomic
+    /// peek per batch and rebuilds from the currently *published*
+    /// artifact, the same publication path hot-swaps ride. The switch
+    /// lands at batch boundaries only: every batch is classified
+    /// entirely by one backend, and all backends are bit-exact on the
+    /// same artifact (`tests/prop_batch.rs`), so outputs are unchanged.
+    pub fn set_backend(&self, kind: BackendKind) -> Result<()> {
+        self.check_backend(kind)?;
+        self.cell.backend.store(backend_to_u8(kind), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Reshard the tier to `n` shards via drain-and-rebuild: bumps the
+    /// generation (a [`LiveStream`] dispatcher drains its current
+    /// stream before the next frame) and installs fresh per-shard
+    /// telemetry. The cumulative counters therefore reset across a
+    /// reshard — exactly the transition
+    /// [`SignalCollector`](crate::controlplane::SignalCollector)
+    /// rebaselines on (an empty window, never an underflowed one).
+    pub fn reshard(&self, n: usize) -> Result<()> {
+        if n == 0 || n > MAX_SHARDS {
+            return Err(Error::Config(format!(
+                "reshard target {n} out of range (legal: 1..={MAX_SHARDS})"
+            )));
+        }
+        let fresh = Self::fresh_telemetry(&self.source, n);
+        let mut telemetry =
+            self.shard_telemetry.lock().expect("shard telemetry poisoned");
+        self.cell.n_shards.store(n, Ordering::Relaxed);
+        *telemetry = fresh;
+        // Release pairs with the Acquire in `generation()`: a thread
+        // that observes the bumped generation also observes the
+        // n_shards store above (the telemetry swap is published by the
+        // mutex). Without it, a LiveStream rebuild on weakly-ordered
+        // hardware could see the new generation but a stale shard
+        // count and silently rebuild at the old width.
+        self.cell.generation.fetch_add(1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Reconfiguration generation (bumped by every reshard).
+    pub fn generation(&self) -> u64 {
+        self.cell.generation.load(Ordering::Acquire)
     }
 
     /// Pull a cumulative [`TierSnapshot`]: a few atomic loads over
@@ -478,7 +667,13 @@ impl ShardedEngine {
     /// ([`crate::controlplane::SignalCollector`]).
     pub fn snapshot(&self) -> TierSnapshot {
         TierSnapshot {
-            per_shard: self.shard_telemetry.iter().map(|t| t.counts()).collect(),
+            per_shard: self
+                .shard_telemetry
+                .lock()
+                .expect("shard telemetry poisoned")
+                .iter()
+                .map(|t| t.counts())
+                .collect(),
             classes: self.metrics.classes.snapshot(),
             latency_buckets: self.metrics.batch_latency.bucket_counts(),
         }
@@ -487,16 +682,29 @@ impl ShardedEngine {
     /// Open a streaming ingest handle: spawns the shard workers and
     /// returns the dispatcher-side handle frames are pushed into.
     /// Configuration errors (e.g. a backend that cannot be built)
-    /// surface here, before any frame is accepted.
+    /// surface here, before any frame is accepted. The stream is built
+    /// against the engine's CURRENT shard count and backend; later
+    /// reconfiguration reaches it through the shared [`TierCell`]
+    /// (overflow / backend) or a [`LiveStream`] rebuild (reshard).
     pub fn stream(&self) -> Result<ShardedStream> {
-        let n = self.config.n_shards.max(1);
+        // The telemetry vec is the authoritative shard count: reshard
+        // replaces it (to exactly `n` cells) under this same mutex, so
+        // deriving `n` from its length can never disagree with the
+        // cells the workers are handed — unlike a separate atomic read,
+        // which could be stale relative to the vec.
+        let telemetry: Vec<Arc<ShardTelemetry>> = self
+            .shard_telemetry
+            .lock()
+            .expect("shard telemetry poisoned")
+            .clone();
+        let n = telemetry.len();
+        let kind = self.backend_kind();
         let compiled = self.source.compiled();
         let modeled_pps = compiled.chip.timing(&compiled.program).pps;
         // Build every backend up front so misconfiguration fails fast.
         let backends: Vec<(Box<dyn InferenceBackend>, u64)> = (0..n)
-            .map(|_| self.source.backend(self.config.backend))
+            .map(|_| self.source.backend(kind))
             .collect::<Result<_>>()?;
-
         let queues: Vec<Arc<ShardQueue<(u64, Vec<u8>)>>> = (0..n)
             .map(|_| Arc::new(ShardQueue::new(self.config.queue_capacity)))
             .collect();
@@ -505,30 +713,51 @@ impl ShardedEngine {
             let queue = Arc::clone(&queues[shard]);
             let source = self.source.clone();
             let metrics = Arc::clone(&self.metrics);
-            let telemetry = Arc::clone(&self.shard_telemetry[shard]);
-            telemetry.model_version.store(version, Ordering::Relaxed);
-            let kind = self.config.backend;
+            let shard_telemetry = Arc::clone(&telemetry[shard]);
+            shard_telemetry.model_version.store(version, Ordering::Relaxed);
+            let cell = Arc::clone(&self.cell);
             let policy = self.config.batch;
             workers.push(std::thread::spawn(move || {
                 let _close = CloseOnDrop(&*queue);
                 shard_worker(
-                    shard, &queue, &source, kind, policy, &metrics, &telemetry,
-                    backend, version,
+                    shard, &queue, &source, &cell, kind, policy, &metrics,
+                    &shard_telemetry, backend, version,
                 )
             }));
         }
         Ok(ShardedStream {
             queues,
             workers,
-            overflow: self.config.overflow,
-            backend: self.config.backend.name(),
+            cell: Arc::clone(&self.cell),
             modeled_pps,
             next_seq: 0,
             dropped: vec![0; n],
             waits: vec![0; n],
             started: Instant::now(),
             metrics: Arc::clone(&self.metrics),
-            telemetry: self.shard_telemetry.clone(),
+            telemetry,
+        })
+    }
+
+    /// Open a reconfiguration-aware streaming handle (see
+    /// [`LiveStream`]): same push interface, but the dispatcher also
+    /// observes the engine's generation and drains-and-rebuilds across
+    /// a reshard, accumulating every epoch's ordered outputs.
+    pub fn live_stream(self: &Arc<Self>) -> Result<LiveStream> {
+        // Generation is read BEFORE the stream opens: a reshard racing
+        // in between leaves the two out of sync, which the first push
+        // resolves with a (cheap, empty) drain-and-rebuild — reading it
+        // after could instead mask the reshard entirely.
+        let seen_generation = self.generation();
+        let stream = self.stream()?;
+        Ok(LiveStream {
+            seen_generation,
+            epoch_base: stream.delivered(),
+            engine: Arc::clone(self),
+            stream: Some(stream),
+            epochs: Vec::new(),
+            epoch_pushed: 0,
+            total_pushed: 0,
         })
     }
 
@@ -568,7 +797,8 @@ fn shard_worker(
     shard: usize,
     queue: &ShardQueue<(u64, Vec<u8>)>,
     source: &EngineSource,
-    kind: BackendKind,
+    cell: &TierCell,
+    mut kind: BackendKind,
     policy: BatchPolicy,
     metrics: &EngineMetrics,
     telemetry: &ShardTelemetry,
@@ -588,15 +818,29 @@ fn shard_worker(
 
     let run = |batch: Batch<(u64, Vec<u8>)>,
                backend: &mut Box<dyn InferenceBackend>,
+               kind: &mut BackendKind,
                version: &mut u64,
                retired_errs: &mut u64,
                outputs: &mut Vec<(u64, u32)>,
                out_buf: &mut Vec<u32>|
      -> Result<()> {
+        // Runtime backend switch: one atomic kind peek per batch. A
+        // switch rebuilds from the currently PUBLISHED artifact (the
+        // same slot hot-swaps publish through), so it subsumes any
+        // pending version refresh; the batch about to run is the first
+        // one the new backend serves — never a torn batch.
+        let want = backend_from_u8(cell.backend.load(Ordering::Relaxed));
+        if want != *kind {
+            *retired_errs += backend.stats().parse_errors;
+            let (fresh, v) = source.backend(want)?;
+            *backend = fresh;
+            *version = v;
+            *kind = want;
+        }
         // Hot-swap pickup: one atomic version peek per batch (the
         // protocol itself lives on [`EngineSource::refresh`], shared
         // with the engine workers).
-        source.refresh(kind, backend, version, retired_errs)?;
+        source.refresh(*kind, backend, version, retired_errs)?;
         telemetry.model_version.store(*version, Ordering::Relaxed);
         let t0 = Instant::now();
         metrics.packets_in.add(batch.packets.len() as u64);
@@ -633,6 +877,7 @@ fn shard_worker(
                     run(
                         batch,
                         &mut backend,
+                        &mut kind,
                         &mut version,
                         &mut retired_errs,
                         &mut outputs,
@@ -646,6 +891,7 @@ fn shard_worker(
                     run(
                         batch,
                         &mut backend,
+                        &mut kind,
                         &mut version,
                         &mut retired_errs,
                         &mut outputs,
@@ -659,6 +905,7 @@ fn shard_worker(
                     run(
                         batch,
                         &mut backend,
+                        &mut kind,
                         &mut version,
                         &mut retired_errs,
                         &mut outputs,
@@ -688,8 +935,10 @@ fn shard_worker(
 pub struct ShardedStream {
     queues: Vec<Arc<ShardQueue<(u64, Vec<u8>)>>>,
     workers: Vec<JoinHandle<Result<WorkerResult>>>,
-    overflow: OverflowPolicy,
-    backend: &'static str,
+    /// Shared tier knobs: the dispatcher re-reads the overflow policy
+    /// here on EVERY push, which is what makes a runtime flip land on
+    /// the next frame.
+    cell: Arc<TierCell>,
     modeled_pps: f64,
     /// Ingest sequence number: the output position of the next frame.
     next_seq: u64,
@@ -711,6 +960,14 @@ impl ShardedStream {
         self.queues.len()
     }
 
+    /// Frames this stream's telemetry cells have retired (classified +
+    /// shed). Cumulative — the cells are shared with every stream the
+    /// owning engine opened since its last reshard — so callers diff
+    /// against a baseline ([`LiveStream::quiesce`]).
+    fn delivered(&self) -> u64 {
+        self.telemetry.iter().map(|t| t.packets.get() + t.dropped.get()).sum()
+    }
+
     /// Ingest one frame. The frame's output position is its push order;
     /// a frame shed under [`OverflowPolicy::Drop`] keeps its position
     /// with output word 0.
@@ -718,7 +975,9 @@ impl ShardedStream {
         let shard = (flow_hash(&pkt) % self.queues.len() as u64) as usize;
         let seq = self.next_seq;
         self.next_seq += 1;
-        match self.overflow {
+        // One relaxed load per push: the control plane can flip the
+        // policy mid-stream and the very next frame honors it.
+        match overflow_from_u8(self.cell.overflow.load(Ordering::Relaxed)) {
             OverflowPolicy::Block => {
                 let (pushed, waited) = self.queues[shard].push_blocking((seq, pkt));
                 if waited {
@@ -795,7 +1054,8 @@ impl ShardedStream {
             modeled_pps: self.modeled_pps,
             parse_errors,
             dropped: self.dropped.iter().sum(),
-            backend: self.backend,
+            backend: backend_from_u8(self.cell.backend.load(Ordering::Relaxed))
+                .name(),
             per_shard,
             version_min,
             version_max,
@@ -812,6 +1072,178 @@ impl Drop for ShardedStream {
         for q in &self.queues {
             q.close();
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live (reconfiguration-aware) streaming
+// ---------------------------------------------------------------------------
+
+/// Merged result of a [`LiveStream`] run: every epoch's outputs
+/// concatenated in global ingest order, plus the per-epoch reports (one
+/// epoch per tier configuration the stream served under).
+#[derive(Clone, Debug)]
+pub struct LiveReport {
+    /// Output word per pushed frame, global ingest order; 0 for
+    /// malformed or shed frames.
+    pub outputs: Vec<u32>,
+    pub n_packets: usize,
+    pub parse_errors: u64,
+    /// Frames shed across every epoch ([`OverflowPolicy::Drop`]).
+    pub dropped: u64,
+    /// One [`ShardedReport`] per epoch, in serving order. A run that
+    /// was never resharded has exactly one.
+    pub epochs: Vec<ShardedReport>,
+}
+
+impl LiveReport {
+    /// Drain-and-rebuild cycles the stream went through.
+    pub fn reconfigs(&self) -> usize {
+        self.epochs.len().saturating_sub(1)
+    }
+
+    /// Frames actually delivered to (and classified by) shard workers.
+    pub fn delivered(&self) -> u64 {
+        self.epochs
+            .iter()
+            .map(|e| e.per_shard.iter().map(|s| s.packets).sum::<u64>())
+            .sum()
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "live stream: {} packets over {} epoch(s) ({} reconfig) — \
+             parse_errors={} dropped={}\n",
+            self.n_packets,
+            self.epochs.len(),
+            self.reconfigs(),
+            self.parse_errors,
+            self.dropped,
+        );
+        for (i, e) in self.epochs.iter().enumerate() {
+            s.push_str(&format!(
+                "  epoch {i}: {} packets, {} shards, {} backend, dropped={}\n",
+                e.n_packets,
+                e.per_shard.len(),
+                e.backend,
+                e.dropped,
+            ));
+        }
+        s
+    }
+}
+
+/// Reconfiguration-aware streaming handle: pushes go to an inner
+/// [`ShardedStream`], and on every push the dispatcher peeks the
+/// engine's generation — when a reshard was requested it **drains**
+/// the current stream to completion (every queued frame classified,
+/// workers joined) and opens a fresh one against the new configuration
+/// before accepting the frame. That barrier is the whole correctness
+/// argument: no frame is in flight across the boundary, so every flow
+/// is served old-tier-then-new-tier (never interleaved) and the
+/// concatenated epoch outputs are in global ingest order.
+///
+/// Overflow flips and backend switches need no rebuild at all — they
+/// propagate through the shared [`TierCell`] to the current stream's
+/// dispatcher and workers directly.
+pub struct LiveStream {
+    engine: Arc<ShardedEngine>,
+    stream: Option<ShardedStream>,
+    seen_generation: u64,
+    /// Finished epochs, oldest first.
+    epochs: Vec<ShardedReport>,
+    /// Frames pushed into the current epoch's stream.
+    epoch_pushed: u64,
+    /// Engine `delivered_total` at the current epoch's start.
+    epoch_base: u64,
+    total_pushed: u64,
+}
+
+impl LiveStream {
+    /// Frames pushed so far (across every epoch).
+    pub fn pushed(&self) -> u64 {
+        self.total_pushed
+    }
+
+    /// Completed drain-and-rebuild cycles so far.
+    pub fn reconfigs(&self) -> usize {
+        self.epochs.len()
+    }
+
+    /// Ingest one frame, draining and rebuilding first if the engine
+    /// was resharded since the last push.
+    pub fn push(&mut self, pkt: Vec<u8>) -> Result<()> {
+        if self.engine.generation() != self.seen_generation {
+            self.rebuild()?;
+        }
+        self.epoch_pushed += 1;
+        self.total_pushed += 1;
+        self.stream.as_mut().expect("live stream open").push(pkt)
+    }
+
+    /// Drain the current epoch and open the next one against the
+    /// engine's current configuration.
+    fn rebuild(&mut self) -> Result<()> {
+        if let Some(s) = self.stream.take() {
+            self.epochs.push(s.finish()?);
+        }
+        // Generation read before the open (see live_stream), but
+        // COMMITTED only after it succeeds: a failed open must leave
+        // the generations out of sync so the next push retries the
+        // rebuild (returning its error) instead of hitting the
+        // `stream: None` expect below.
+        let generation = self.engine.generation();
+        let stream = self.engine.stream()?;
+        self.seen_generation = generation;
+        self.epoch_base = stream.delivered();
+        self.epoch_pushed = 0;
+        self.stream = Some(stream);
+        Ok(())
+    }
+
+    /// Wait (bounded by `timeout`) until every frame pushed into the
+    /// current epoch has been retired by the tier — classified or
+    /// counted as shed. Lets a paced serving loop align control-plane
+    /// snapshots with window boundaries; returns `false` on timeout.
+    pub fn quiesce(&self, timeout: Duration) -> bool {
+        let stream = match &self.stream {
+            Some(s) => s,
+            None => return true,
+        };
+        let deadline = Instant::now() + timeout;
+        loop {
+            let retired = stream.delivered().saturating_sub(self.epoch_base);
+            if retired >= self.epoch_pushed {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+
+    /// End of stream: drain the final epoch and merge every epoch's
+    /// ordered outputs.
+    pub fn finish(mut self) -> Result<LiveReport> {
+        if let Some(s) = self.stream.take() {
+            self.epochs.push(s.finish()?);
+        }
+        let mut outputs = Vec::with_capacity(self.total_pushed as usize);
+        let mut parse_errors = 0u64;
+        let mut dropped = 0u64;
+        for e in &self.epochs {
+            outputs.extend_from_slice(&e.outputs);
+            parse_errors += e.parse_errors;
+            dropped += e.dropped;
+        }
+        Ok(LiveReport {
+            outputs,
+            n_packets: self.total_pushed as usize,
+            parse_errors,
+            dropped,
+            epochs: self.epochs,
+        })
     }
 }
 
@@ -1018,6 +1450,141 @@ mod tests {
             .map(|(a, b)| a.packets - b.packets)
             .sum();
         assert_eq!(window, 200);
+    }
+
+    #[test]
+    fn overflow_flip_lands_on_the_next_push_with_exact_accounting() {
+        // The dispatcher re-reads the policy per push, so a Block → Drop
+        // flip mid-stream governs subsequent frames; under either
+        // policy every frame is delivered or counted as shed.
+        let model = BnnModel::random(32, &[16], 61);
+        let engine = ShardedEngine::new(
+            compiled_for(&model),
+            ShardConfig {
+                n_shards: 2,
+                queue_capacity: 1,
+                ..ShardConfig::default()
+            },
+        );
+        assert_eq!(engine.overflow(), OverflowPolicy::Block);
+        let mut stream = engine.stream().unwrap();
+        let mut gen = TraceGenerator::new(62);
+        let trace = gen.generate(&TraceKind::UniformIps, 2000);
+        for (i, pkt) in trace.packets.iter().enumerate() {
+            if i == 100 {
+                engine.set_overflow(OverflowPolicy::Drop);
+            }
+            stream.push(pkt.clone()).unwrap();
+        }
+        assert_eq!(engine.overflow(), OverflowPolicy::Drop);
+        let report = stream.finish().unwrap();
+        assert_eq!(report.outputs.len(), 2000);
+        let delivered: u64 = report.per_shard.iter().map(|s| s.packets).sum();
+        assert_eq!(delivered + report.dropped, 2000, "exact shed accounting");
+        // Frames served before the flip were under Block: none shed.
+        for (i, &key) in trace.keys.iter().take(100).enumerate() {
+            let expect =
+                bnn::forward(&model, &PackedBits::from_u32(key)).get(0) as u32;
+            assert_eq!(report.outputs[i], expect, "pre-flip pkt {i}");
+        }
+    }
+
+    #[test]
+    fn backend_switch_mid_stream_is_bit_exact_and_validated() {
+        let model = BnnModel::random(32, &[16, 1], 63);
+        let engine = ShardedEngine::new(
+            compiled_for(&model),
+            ShardConfig { n_shards: 2, ..ShardConfig::default() },
+        )
+        .with_model(model.clone());
+        // A kind this source cannot build fails fast, changing nothing.
+        assert!(
+            ShardedEngine::new(compiled_for(&model), ShardConfig::default())
+                .set_backend(BackendKind::Reference)
+                .is_err(),
+            "reference backend needs the source model"
+        );
+        assert_eq!(engine.backend_kind(), BackendKind::Batched);
+
+        let mut stream = engine.stream().unwrap();
+        let mut gen = TraceGenerator::new(64);
+        let trace = gen.generate(&TraceKind::UniformIps, 400);
+        for (i, pkt) in trace.packets.iter().enumerate() {
+            if i == 200 {
+                engine.set_backend(BackendKind::Scalar).unwrap();
+            }
+            stream.push(pkt.clone()).unwrap();
+        }
+        assert_eq!(engine.backend_kind(), BackendKind::Scalar);
+        let report = stream.finish().unwrap();
+        assert_eq!(report.backend, "scalar", "report names the current kind");
+        for (i, &key) in trace.keys.iter().enumerate() {
+            let expect =
+                bnn::forward(&model, &PackedBits::from_u32(key)).get(0) as u32;
+            assert_eq!(report.outputs[i], expect, "pkt {i} across the switch");
+        }
+    }
+
+    #[test]
+    fn reshard_drains_and_rebuilds_preserving_order_and_outputs() {
+        let model = BnnModel::random(32, &[16, 1], 65);
+        let engine = Arc::new(ShardedEngine::new(
+            compiled_for(&model),
+            ShardConfig { n_shards: 2, ..ShardConfig::default() },
+        ));
+        assert!(engine.reshard(0).is_err(), "reshard 0 out of range");
+        let err = engine.reshard(MAX_SHARDS + 1).unwrap_err().to_string();
+        assert!(err.contains("1..="), "range enumerated: {err}");
+
+        let mut stream = engine.live_stream().unwrap();
+        let mut gen = TraceGenerator::new(66);
+        let trace = gen.generate(&TraceKind::UniformIps, 600);
+        for (i, pkt) in trace.packets.iter().enumerate() {
+            if i == 300 {
+                engine.reshard(4).unwrap();
+                assert_eq!(engine.n_shards(), 4);
+            }
+            stream.push(pkt.clone()).unwrap();
+        }
+        assert_eq!(stream.pushed(), 600);
+        assert_eq!(stream.reconfigs(), 1, "one drain-and-rebuild");
+        let report = stream.finish().unwrap();
+        assert_eq!(report.n_packets, 600);
+        assert_eq!(report.reconfigs(), 1);
+        assert_eq!(report.epochs.len(), 2);
+        assert_eq!(report.epochs[0].per_shard.len(), 2);
+        assert_eq!(report.epochs[1].per_shard.len(), 4);
+        assert_eq!(report.dropped, 0, "Block policy across both epochs");
+        assert_eq!(report.delivered(), 600);
+        // Global ingest order, bit-exact across the boundary.
+        for (i, &key) in trace.keys.iter().enumerate() {
+            let expect =
+                bnn::forward(&model, &PackedBits::from_u32(key)).get(0) as u32;
+            assert_eq!(report.outputs[i], expect, "pkt {i}");
+        }
+        assert!(report.render().contains("epoch 1"));
+    }
+
+    #[test]
+    fn live_stream_quiesce_waits_for_retirement() {
+        let model = BnnModel::random(32, &[16], 67);
+        let engine = Arc::new(ShardedEngine::new(
+            compiled_for(&model),
+            ShardConfig { n_shards: 2, ..ShardConfig::default() },
+        ));
+        let mut stream = engine.live_stream().unwrap();
+        let mut gen = TraceGenerator::new(68);
+        let trace = gen.generate(&TraceKind::UniformIps, 50);
+        for pkt in &trace.packets {
+            stream.push(pkt.clone()).unwrap();
+        }
+        assert!(
+            stream.quiesce(Duration::from_secs(5)),
+            "all pushed frames retire"
+        );
+        assert!(engine.metrics.packets_classified.get() >= 50);
+        let report = stream.finish().unwrap();
+        assert_eq!(report.n_packets, 50);
     }
 
     #[test]

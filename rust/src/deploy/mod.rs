@@ -361,6 +361,22 @@ impl Deployment {
         ))
     }
 
+    /// The sharded tier as a shared handle — what the live control
+    /// plane wants: the same `Arc<ShardedEngine>` goes to the serving
+    /// side (`engine.live_stream()`) and to the controller
+    /// ([`Controller::with_tier`](crate::controlplane::Controller::with_tier)
+    /// + [`controlplane::spawn_live`](crate::controlplane::spawn_live)),
+    /// so reshard / backend-switch / overflow-flip actions reach the
+    /// running dispatcher and workers through the engine's shared
+    /// reconfiguration cell (DESIGN.md §14).
+    pub fn live_sharded_engine(
+        &self,
+        name: &str,
+        n_shards: usize,
+    ) -> Result<Arc<ShardedEngine>> {
+        Ok(Arc::new(self.sharded_engine(name, n_shards)?))
+    }
+
     /// Serve a whole trace through a fresh sharded engine.
     pub fn serve_trace_sharded(
         &self,

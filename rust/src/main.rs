@@ -17,7 +17,8 @@
 //!               [--backend scalar|batched|reference|lut] [--batch-size B]
 //!               [--models a.json,b.json] [--extract F]
 //!               [--shards S] [--scenario <name>] [--help]
-//!               [--adaptive [--policy FILE] [--window N]]
+//!               [--adaptive [--policy FILE] [--window N]
+//!                [--sequence name:count,...] [--live]]
 //! n2net autopilot [--sequence name:count,...] [--window N] [--shards S]
 //!               [--policy FILE] [--seed S] [--help]
 //! n2net swap    [--packets N] [--swaps K] [--seed S]
@@ -38,10 +39,11 @@ use n2net::baseline::LutClassifier;
 use n2net::bnn::{self, BnnModel, PackedBits};
 use n2net::compiler::{p4gen, render_table1, Compiler, CompilerOptions};
 use n2net::controlplane::{
-    prefix_classifier, sim_ddos, ModelBank, Policy, Sim, SimConfig,
+    prefix_classifier, sim_ddos, spawn_live, ControlEvent, Controller, LiveConfig,
+    ManualClock, ModelBank, Outcome, Policy, Sim, SimConfig,
 };
 use n2net::coordinator::{BatchPolicy, RouterPolicy};
-use n2net::deploy::{Deployment, DeploymentBuilder, FieldExtractor};
+use n2net::deploy::{Deployment, DeploymentBuilder, FieldExtractor, SwapHandle};
 use n2net::bnn::io::DdosDoc;
 use n2net::net::{
     Scenario, ScenarioSequence, SequenceTrace, TraceGenerator, TraceKind,
@@ -387,9 +389,20 @@ fn serve_help() -> String {
          \x20                       {}\n\
          \x20 --adaptive            attach the closed-loop controller: the trace\n\
          \x20                       is served in --window packet windows and the\n\
-         \x20                       policy may hot-swap the model on detections\n\
+         \x20                       policy may hot-swap the model (or reshard /\n\
+         \x20                       switch backend / flip overflow) on detections\n\
+         \x20 --live                run the controller as a background thread over\n\
+         \x20                       a streaming ShardedStream (with --adaptive):\n\
+         \x20                       snapshots are pulled per window tick, actions\n\
+         \x20                       stream into a bounded log, and reshards\n\
+         \x20                       drain-and-rebuild the tier mid-stream\n\
+         \x20 --sequence name:count,...  scenario sequence for the adaptive run\n\
+         \x20                       (overrides --scenario)\n\
          \x20 --policy FILE         policy rules (default: swap \"attack\" on\n\
-         \x20                       ddos-ramp, alert on overload/drift/imbalance)\n\
+         \x20                       ddos-ramp, alert on overload/drift/imbalance/\n\
+         \x20                       latency-slo); grammar: on <detector> do\n\
+         \x20                       swap <m>|fallback|alert|reshard <n>|\n\
+         \x20                       backend <kind>|overflow block|drop\n\
          \x20 --window N            frames per control window (default 512)\n\
          \x20 --seed S              trace seed",
         SCENARIO_NAMES.join("|")
@@ -401,6 +414,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         println!("{}", serve_help());
         return Ok(());
     }
+    ensure!(
+        !args.has_flag("live") || args.has_flag("adaptive"),
+        "--live runs the background controller thread and needs --adaptive"
+    );
+    ensure!(
+        args.opt("sequence").is_none() || args.has_flag("adaptive"),
+        "--sequence drives the adaptive control loop and needs --adaptive \
+         (plain serve takes one --scenario)"
+    );
     let n = args.opt_usize("packets", 100_000)?;
     let seed = args.opt_u64("seed", 3)?;
     let shards = args.opt_usize("shards", 0)?;
@@ -474,7 +496,8 @@ fn policy_for(args: &Args) -> anyhow::Result<Policy> {
             "on ddos-ramp do swap attack cooldown=4\n\
              on overload do alert cooldown=8\n\
              on drift do alert cooldown=8\n\
-             on imbalance do alert cooldown=8\n",
+             on imbalance do alert cooldown=8\n\
+             on latency-slo do alert cooldown=8\n",
         )?),
     }
 }
@@ -506,6 +529,107 @@ fn run_adaptive(
         stats.version,
         stats.swaps,
         report.outputs.len()
+    );
+    Ok(())
+}
+
+/// `serve --adaptive --live`: the controller runs as a BACKGROUND
+/// THREAD over a streaming `ShardedStream` instead of ticking inline —
+/// the production shape (DESIGN.md §14). The serving loop pushes one
+/// window of frames, waits for the tier to retire it, and fires one
+/// lockstep clock tick, so window boundaries stay deterministic while
+/// everything — snapshot pull, detection, policy, swap/reshard — runs
+/// on the controller thread and reaches serving only through the
+/// publication slot and the tier's reconfiguration cell.
+fn run_live(
+    args: &Args,
+    deployment: &std::sync::Arc<Deployment>,
+    model_name: &str,
+    bank: ModelBank,
+    st: &SequenceTrace,
+    shards: usize,
+    _seed: u64,
+) -> anyhow::Result<()> {
+    let policy = policy_for(args)?;
+    println!("policy:\n{}", policy.render());
+    let window = args.opt_usize("window", 512)?.max(1);
+    let engine = deployment.live_sharded_engine(model_name, shards.max(1))?;
+    let controller = Controller::new(
+        SwapHandle::new(deployment, model_name)?,
+        bank,
+        policy,
+    )?
+    .with_tier(std::sync::Arc::clone(&engine))?;
+    let (clock, driver) = ManualClock::pair();
+    let live = spawn_live(
+        std::sync::Arc::clone(&engine),
+        controller,
+        Box::new(clock),
+        LiveConfig::default(),
+    );
+
+    let mut stream = engine.live_stream()?;
+    for chunk in st.trace.packets.chunks(window) {
+        for pkt in chunk {
+            stream.push(pkt.clone())?;
+        }
+        // Align the controller's snapshot with the window boundary,
+        // then tick (the step returns once the tick fully processed).
+        if !stream.quiesce(std::time::Duration::from_secs(30)) {
+            eprintln!(
+                "warning: window did not quiesce within 30s — the tier is \
+                 stalled or shedding slowly; this snapshot may straddle \
+                 window boundaries"
+            );
+        }
+        ensure!(driver.step(), "live controller thread exited early");
+    }
+    let report = stream.finish()?;
+    let ticks = live.ticks();
+    let dropped_events = live.dropped_events();
+    let controller = live.stop();
+
+    // Attribution: an ACTION (publication or tier reconfig) is only in
+    // order while an attack segment is live (plus a 2-window slack for
+    // a detection streak completing at the segment edge); anything else
+    // fired on quiet traffic.
+    let is_action = |e: &ControlEvent| {
+        matches!(
+            e.outcome,
+            Outcome::Published { .. } | Outcome::Reconfigured { .. }
+        )
+    };
+    let under_attack = |w: u64| {
+        const SLACK: u64 = 2;
+        (w.saturating_sub(SLACK)..=w).any(|wi| {
+            st.segment_of(wi as usize * window)
+                .map(|s| s.scenario == "ddos-burst")
+                .unwrap_or(false)
+        })
+    };
+    let mut quiet_actions = 0u64;
+    for e in controller.events() {
+        println!("  {}", e.render());
+        if is_action(e) && !under_attack(e.window) {
+            quiet_actions += 1;
+        }
+    }
+    print!("{}", report.render());
+    println!(
+        "live loop: {ticks} tick(s), published={} reconfigs={} rejected={} \
+         alerts={} dropped_events={dropped_events}",
+        controller.published(),
+        controller.reconfigs(),
+        controller.rejected(),
+        controller.alerts(),
+    );
+    println!("quiet-segment actions: {quiet_actions}");
+    let stats = deployment.stats(model_name)?;
+    println!(
+        "live model: v{} after {} published swap(s), {} packets served",
+        stats.version,
+        stats.swaps,
+        report.n_packets
     );
     Ok(())
 }
@@ -570,13 +694,18 @@ fn serve_single(
                 .model("serve", model.clone())
                 .build()?,
         );
-        let st = match scenario {
-            Some(s) => {
+        let st = match (args.opt("sequence"), scenario) {
+            (Some(spec), _) => {
+                let seq = ScenarioSequence::parse(spec)?.with_ddos(ddos);
+                println!("sequence: {}", seq.name());
+                seq.generate(seed)
+            }
+            (None, Some(s)) => {
                 let s = s.with_ddos(ddos);
                 println!("scenario: {}", s.name());
                 SequenceTrace::single(&s, s.generate(seed, n))
             }
-            None => {
+            (None, None) => {
                 // Condition changes are the whole point, and the ramp
                 // detector reads a per-window slope — so the default
                 // demo is a quiet → burst → quiet sequence sized in
@@ -600,6 +729,9 @@ fn serve_single(
             }
         };
         let bank = ModelBank::new("day", model).with_model("attack", attack);
+        if args.has_flag("live") {
+            return run_live(args, &deployment, "serve", bank, &st, shards, seed);
+        }
         return run_adaptive(args, &deployment, "serve", bank, &st, shards, seed);
     }
     let (model, ddos) = load_weights_or_synthetic(path, seed, explicit)?;
@@ -747,7 +879,8 @@ fn autopilot_help() -> String {
         "usage: n2net autopilot [options]\n\
          runs the closed-loop controller (n2net::controlplane) over a\n\
          scenario sequence: windowed signals -> detectors (ddos-ramp,\n\
-         drift, overload, imbalance) -> policy -> hot-swap.\n\
+         drift, overload, imbalance, latency-slo) -> policy -> hot-swap\n\
+         or tier reconfiguration (reshard / backend / overflow).\n\
          \x20 --sequence name:count,...  scenario sequence (default\n\
          \x20                            uniform:4096,ddos-burst:8192,uniform:4096);\n\
          \x20                            scenario names:\n\

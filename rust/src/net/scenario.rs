@@ -188,6 +188,18 @@ pub struct SegmentSpan {
     pub labeled: bool,
 }
 
+impl SegmentSpan {
+    /// Index one past the segment's last frame.
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+
+    /// Whether `frame` falls inside this segment.
+    pub fn contains(&self, frame: usize) -> bool {
+        (self.start..self.end()).contains(&frame)
+    }
+}
+
 /// A generated sequence: the concatenated trace plus the segment map.
 /// `trace.labels` always spans the full sequence (zero-padded where a
 /// segment has no ground truth — consult [`SegmentSpan::labeled`]).
@@ -212,6 +224,13 @@ impl SequenceTrace {
             trace,
             segments: vec![SegmentSpan { scenario: scenario.name(), start: 0, len, labeled }],
         }
+    }
+
+    /// The segment a frame index falls in (None past the end) — how
+    /// live-loop attribution maps a control action's window back to
+    /// the traffic condition it fired under.
+    pub fn segment_of(&self, frame: usize) -> Option<&SegmentSpan> {
+        self.segments.iter().find(|s| s.contains(frame))
     }
 }
 
@@ -552,6 +571,21 @@ mod tests {
         assert!(ScenarioSequence::parse("").is_err());
         assert!(ScenarioSequence::parse("uniform:x").is_err());
         assert!(ScenarioSequence::parse("uniform:0").is_err());
+    }
+
+    #[test]
+    fn segment_of_maps_frames_to_their_condition() {
+        let seq = ScenarioSequence::parse("uniform:64,ddos-burst:128").unwrap();
+        let st = seq.generate(31);
+        assert_eq!(st.segment_of(0).unwrap().scenario, "uniform");
+        assert_eq!(st.segment_of(63).unwrap().scenario, "uniform");
+        assert_eq!(st.segment_of(64).unwrap().scenario, "ddos-burst");
+        assert_eq!(st.segment_of(191).unwrap().scenario, "ddos-burst");
+        assert!(st.segment_of(192).is_none(), "past the end");
+        let span = st.segment_of(64).unwrap();
+        assert_eq!(span.end(), 192);
+        assert!(span.contains(100));
+        assert!(!span.contains(10));
     }
 
     #[test]

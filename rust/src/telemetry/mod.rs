@@ -126,7 +126,11 @@ pub fn quantile_ns_from_buckets(buckets: &[u64], q: f64) -> f64 {
     if total == 0 {
         return 0.0;
     }
-    let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+    // Clamp the target rank to >= 1: with q <= 0 a rank of 0 would be
+    // satisfied by the FIRST bucket even when that bucket is empty
+    // (acc >= 0 holds vacuously), reporting a bogus 2ns minimum for a
+    // distribution whose samples all sit in high buckets.
+    let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
     let mut acc = 0u64;
     for (i, &b) in buckets.iter().enumerate() {
         acc += b;
@@ -285,6 +289,30 @@ mod tests {
         // The window holds only ~1ms samples; its p50 says so.
         let p50 = quantile_ns_from_buckets(&diff, 0.5);
         assert!(p50 >= 1_000_000.0, "window p50 {p50}");
+    }
+
+    #[test]
+    fn quantile_zero_reports_the_first_nonempty_bucket() {
+        // Regression (ISSUE 5 satellite): q=0 used to return the FIRST
+        // bucket's bound (2ns) even when every sample sat in a high
+        // bucket — the empty leading bucket satisfied the rank-0 target
+        // vacuously.
+        let h = Histogram::new();
+        h.record(Duration::from_nanos(1500)); // bucket [1024, 2048)
+        assert_eq!(h.quantile_ns(0.0), 2048.0, "single high sample, q=0");
+        assert_eq!(h.quantile_ns(1.0), 2048.0, "q=1 agrees");
+        assert_eq!(
+            quantile_ns_from_buckets(&h.bucket_counts(), -0.5),
+            2048.0,
+            "q clamps below 0"
+        );
+
+        // Two spread samples: q=0 is the lower bucket, q=1 the upper.
+        let h = Histogram::new();
+        h.record(Duration::from_nanos(3)); // bucket [2, 4)
+        h.record(Duration::from_micros(100)); // bucket [65536, 131072)
+        assert_eq!(h.quantile_ns(0.0), 4.0);
+        assert_eq!(h.quantile_ns(1.0), 131072.0);
     }
 
     #[test]

@@ -16,9 +16,9 @@ use std::sync::Arc;
 
 use n2net::bnn::{self, BnnModel, PackedBits};
 use n2net::controlplane::{
-    prefix_classifier, sim_ddos, ModelBank, Policy, Sim, SimConfig,
+    prefix_classifier, sim_ddos, Controller, ModelBank, Policy, Sim, SimConfig,
 };
-use n2net::deploy::{Deployment, FieldExtractor};
+use n2net::deploy::{Deployment, FieldExtractor, SwapHandle};
 use n2net::net::{Scenario, ScenarioSequence};
 use n2net::util::prop;
 use n2net::util::rng::Rng;
@@ -121,6 +121,63 @@ fn check_adaptive_loop(rng: &mut Rng) -> Result<(), String> {
 fn prop_c1_c2_one_swap_per_ramp_and_old_or_new_outputs() {
     let cases = prop::default_cases().min(12);
     prop::check("controlplane-adaptive-loop", cases, check_adaptive_loop);
+}
+
+/// Satellite (ISSUE 5): bad policies fail FAST — at controller
+/// construction, with the legal vocabulary enumerated — not when a rule
+/// first fires mid-incident.
+#[test]
+fn bad_policy_targets_fail_at_construction_with_enumerated_vocabulary() {
+    let live = prefix_classifier(0xC0A8_0000);
+    let dep = deployment_for(&live);
+    let handle = || SwapHandle::new(&dep, "live").unwrap();
+    let bank =
+        || ModelBank::new("day", live.clone()).with_model("night", live.clone());
+
+    // Swap target not in the bank: the error names every bank entry.
+    let policy = Policy::parse("on ddos-ramp do swap dusk").unwrap();
+    let err = match Controller::new(handle(), bank(), policy) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("unbanked swap target must fail at construction"),
+    };
+    assert!(err.contains("day") && err.contains("night"), "{err}");
+
+    // Reshard out of the legal range: the error states the range.
+    for n in ["0", "65", "10000"] {
+        let text = format!("on imbalance do reshard {n}");
+        match Policy::parse(&text) {
+            // reshard 0 is already a grammar error; larger counts parse
+            // and must be range-checked at construction.
+            Err(e) => assert!(e.to_string().contains(">= 1"), "{e}"),
+            Ok(policy) => {
+                let err = match Controller::new(handle(), bank(), policy) {
+                    Err(e) => e.to_string(),
+                    Ok(_) => panic!("reshard {n} must fail at construction"),
+                };
+                assert!(err.contains("1..=64"), "range enumerated: {err}");
+            }
+        }
+    }
+
+    // Backend arguments: unknown kinds die in the parser (enumerating
+    // the vocabulary); the lut baseline parses but is never a legal
+    // switch target.
+    let err = Policy::parse("on overload do backend gpu").unwrap_err().to_string();
+    assert!(err.contains("scalar|batched|reference|lut"), "{err}");
+    let policy = Policy::parse("on overload do backend lut").unwrap();
+    let err = match Controller::new(handle(), bank(), policy) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("lut switch must fail at construction"),
+    };
+    assert!(err.contains("scalar|batched|reference"), "{err}");
+
+    // A well-formed policy over the same bank still builds.
+    let policy = Policy::parse(
+        "on ddos-ramp do swap night\non imbalance do reshard 4\n\
+         on overload do overflow drop\non latency-slo do backend scalar",
+    )
+    .unwrap();
+    assert!(Controller::new(handle(), bank(), policy).is_ok());
 }
 
 /// C3: an incompatible bank artifact can be *proposed* by policy but
