@@ -4,6 +4,8 @@
 //!   * full per-packet classification through a `deploy::Session` on
 //!     the scalar backend (the use-case model)
 //!   * batched SoA classification at increasing batch sizes (§10)
+//!   * the specializing codegen backend (§15) head-to-head with the
+//!     batched interpreter on the same model and batch sizes
 //!   * parsing / PHV allocation (low-level simulator internals, below
 //!     the deployment API)
 //!
@@ -105,6 +107,7 @@ fn main() {
         .session_with("usecase", BackendKind::Batched)
         .unwrap();
     let mut speedup_at_64 = 0.0f64;
+    let mut batched_pps: Vec<(usize, f64)> = Vec::new();
     for batch_size in [1usize, 16, 64, 256, 1024] {
         let packets: Vec<Vec<u8>> = (0..batch_size)
             .map(|i| {
@@ -126,9 +129,46 @@ fn main() {
         if batch_size == 64 {
             speedup_at_64 = pps / scalar_pps;
         }
+        batched_pps.push((batch_size, pps));
         records.push(BenchRecord::from_stats(
             "pipeline_hotpath",
             "batched",
+            batch_size,
+            &s,
+        ));
+        report.add(s);
+    }
+
+    // Specialized codegen backend head-to-head: the SAME model and the
+    // SAME batch sizes through the deploy-time monomorphized kernels
+    // (IR lowered, pass-optimized, compiled to fused closures — no
+    // per-op dispatch). The win over `batched` is the tentpole's
+    // headline number.
+    let mut specialized = deployment
+        .session_with("usecase", BackendKind::Specialized)
+        .unwrap();
+    let mut head_to_head: Vec<(usize, f64)> = Vec::new();
+    for (batch_size, bat_pps) in batched_pps {
+        let packets: Vec<Vec<u8>> = (0..batch_size)
+            .map(|i| {
+                PacketBuilder::default()
+                    .build_activations(&[0xDEADBEEF ^ (i as u32).wrapping_mul(0x9E37)])
+            })
+            .collect();
+        let refs: Vec<&[u8]> = packets.iter().map(|p| p.as_slice()).collect();
+        let mut out = Vec::new();
+        let s = b.run(
+            &format!("specialized session (B={batch_size})"),
+            batch_size as f64,
+            || {
+                specialized.classify_batch(&refs, &mut out).unwrap();
+                keep(out.len());
+            },
+        );
+        head_to_head.push((batch_size, s.items_per_sec() / bat_pps));
+        records.push(BenchRecord::from_stats(
+            "pipeline_hotpath",
+            "specialized",
             batch_size,
             &s,
         ));
@@ -153,6 +193,11 @@ fn main() {
          batched speedup at B=64: {:.2}x",
         per_elem, per_op, speedup_at_64
     );
+    let ratios: Vec<String> = head_to_head
+        .iter()
+        .map(|(bs, r)| format!("B={bs}: {r:.2}x"))
+        .collect();
+    println!("specialized vs batched (same model/batches): {}", ratios.join(", "));
     println!(
         "target (DESIGN.md §9/§10): ≥1 M packets/s single-core scalar for \
          this model, ≥2x simulated-pps for the batched path at B≥64"

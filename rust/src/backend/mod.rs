@@ -12,11 +12,17 @@
 //! * [`ReferenceBackend`] — the trusted CPU reference forward
 //!   ([`crate::bnn::forward`]), for ground-truth serving and A/B checks;
 //! * [`LutBackend`] — the exact-match lookup-table baseline the paper
-//!   argues against, for apples-to-apples comparisons.
+//!   argues against, for apples-to-apples comparisons;
+//! * [`SpecializedBackend`] — the deploy-time specializing codegen
+//!   path (DESIGN.md §15): the model is lowered to the optimization IR,
+//!   run through the pass pipeline, and monomorphized into
+//!   straight-line fused kernels over the SoA batch.
 //!
 //! This seam is where future scaling work plugs in: a multi-chip
 //! sharding backend, an async ingest backend, or a PJRT-offload backend
 //! each only have to implement `run_batch`.
+
+pub mod specialized;
 
 use std::sync::Arc;
 
@@ -26,6 +32,8 @@ use crate::compiler::CompiledModel;
 use crate::error::{Error, Result};
 use crate::net::packet::parse_src_ip;
 use crate::rmt::{BatchedTape, Phv, Pipeline, PipelineStats};
+
+pub use specialized::{SpecializedBackend, SpecializedProgram};
 
 /// Static capabilities a backend reports at configuration time.
 #[derive(Clone, Debug)]
@@ -73,6 +81,8 @@ pub enum BackendKind {
     Reference,
     /// Exact-match LUT baseline (constructed via [`LutBackend::new`]).
     Lut,
+    /// Deploy-time specializing codegen (monomorphized fused kernels).
+    Specialized,
 }
 
 impl BackendKind {
@@ -82,6 +92,7 @@ impl BackendKind {
             BackendKind::Batched => "batched",
             BackendKind::Reference => "reference",
             BackendKind::Lut => "lut",
+            BackendKind::Specialized => "specialized",
         }
     }
 
@@ -92,8 +103,10 @@ impl BackendKind {
             "batched" => Ok(BackendKind::Batched),
             "reference" | "ref" => Ok(BackendKind::Reference),
             "lut" => Ok(BackendKind::Lut),
+            "specialized" | "spec" => Ok(BackendKind::Specialized),
             other => Err(Error::Config(format!(
-                "unknown backend {other:?} (expected scalar|batched|reference|lut)"
+                "unknown backend {other:?} \
+                 (expected scalar|batched|reference|lut|specialized)"
             ))),
         }
     }
@@ -130,6 +143,9 @@ pub fn make_backend(
              LutClassifier via LutBackend::new (it has no compiled model)"
                 .into(),
         )),
+        BackendKind::Specialized => {
+            Ok(Box::new(SpecializedBackend::new(Arc::clone(compiled))?))
+        }
     }
 }
 
@@ -442,7 +458,12 @@ mod tests {
         let refs: Vec<&[u8]> = trace.packets.iter().map(|p| p.as_slice()).collect();
 
         let mut outs: Vec<Vec<u32>> = Vec::new();
-        for kind in [BackendKind::Scalar, BackendKind::Batched, BackendKind::Reference] {
+        for kind in [
+            BackendKind::Scalar,
+            BackendKind::Batched,
+            BackendKind::Reference,
+            BackendKind::Specialized,
+        ] {
             let mut be = make_backend(kind, &compiled, Some(&model)).unwrap();
             assert_eq!(be.caps().name, kind.name());
             let mut out = Vec::new();
@@ -453,6 +474,7 @@ mod tests {
         }
         assert_eq!(outs[0], outs[1], "scalar vs batched");
         assert_eq!(outs[0], outs[2], "scalar vs reference");
+        assert_eq!(outs[0], outs[3], "scalar vs specialized");
         // And all agree with the forward on the key.
         let mask = out_mask(16);
         for (i, &key) in trace.keys.iter().enumerate() {
@@ -467,7 +489,12 @@ mod tests {
         let compiled = compiled_for(&model);
         let short = vec![0u8; 3];
         let refs: Vec<&[u8]> = vec![&short];
-        for kind in [BackendKind::Scalar, BackendKind::Batched, BackendKind::Reference] {
+        for kind in [
+            BackendKind::Scalar,
+            BackendKind::Batched,
+            BackendKind::Reference,
+            BackendKind::Specialized,
+        ] {
             let mut be = make_backend(kind, &compiled, Some(&model)).unwrap();
             let mut out = Vec::new();
             be.run_batch(&refs, &mut out).unwrap();
@@ -499,10 +526,15 @@ mod tests {
             BackendKind::Batched,
             BackendKind::Reference,
             BackendKind::Lut,
+            BackendKind::Specialized,
         ] {
             assert_eq!(BackendKind::parse(kind.name()).unwrap(), kind);
         }
         assert!(BackendKind::parse("gpu").is_err());
+        assert!(BackendKind::parse("gpu")
+            .unwrap_err()
+            .to_string()
+            .contains("specialized"));
         assert_eq!(BackendKind::default(), BackendKind::Batched);
     }
 }

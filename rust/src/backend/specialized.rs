@@ -1,0 +1,636 @@
+//! The specializing codegen backend: monomorphize a deployed model
+//! into straight-line, branch-free kernels (DESIGN.md §15).
+//!
+//! [`SpecializedProgram::build`] lowers a compiled model to the
+//! optimization IR ([`crate::compiler::ir`]), runs the host pass
+//! pipeline (stage packing, popcount strength reduction — the CPU
+//! always has the §3 primitive — and dead-code elimination), then
+//! compiles what is left into a flat list of **kernels**: boxed
+//! closures over the SoA column slab, one per homogeneous instruction
+//! run. Each kernel's inner loop is monomorphized over its opcode (a
+//! `Copy` closure the compiler inlines), its operand columns and
+//! strides are baked in at build time, and every register index is
+//! validated once up front — so the per-batch hot path is a plain
+//! `for` over lanes with no dispatch, no bounds checks in release
+//! builds, and nothing data-dependent to branch on.
+//!
+//! Building costs real work (lower + 3 passes + codegen), which is why
+//! deployments run it **off the hot path**: [`crate::deploy`]
+//! pre-specializes at `Deployment::build` / `swap_model` time and
+//! publishes the result through the same `SwapCell` artifact the other
+//! backends read, so a hot-swap or a runtime backend switch never
+//! compiles anything on the serving thread.
+//!
+//! Keyed (multi-model) programs cannot be specialized — their weights
+//! resolve per packet — and fail at build with the IR's lowering error.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::compiler::ir::{IrInstr, IrOp, IrProgram, Operand};
+use crate::compiler::passes;
+use crate::compiler::CompiledModel;
+use crate::error::Result;
+use crate::rmt::{ContainerId, PhvBatch, PipelineStats};
+
+use super::{out_mask, BackendCaps, InferenceBackend};
+
+/// One compiled kernel: executes over the column slab for a lane count.
+type Kernel = Box<dyn Fn(&mut [u32], usize) + Send + Sync>;
+
+/// Where a run reads its `a` operand.
+#[derive(Clone, Copy)]
+enum ASrc {
+    /// Register column `base + stride·i` for run element `i`.
+    Reg { base: usize, stride: isize },
+    /// Broadcast immediate (single-instruction runs only).
+    Imm(u32),
+}
+
+/// Where a run reads its `b` operand.
+#[derive(Clone)]
+enum BSrc {
+    Reg { base: usize, stride: isize },
+    /// One immediate per run element.
+    Imms(Arc<[u32]>),
+    /// Opcode ignores `b`.
+    None,
+}
+
+/// Destination columns of a run.
+#[derive(Clone, Copy)]
+struct RunDst {
+    base: usize,
+    stride: isize,
+    /// Second destination of dual-write instructions (== primary for
+    /// single writes).
+    base2: usize,
+    stride2: isize,
+    /// Store masks (only non-trivial for single-instruction runs on
+    /// narrow containers; multi-instruction runs require unmasked
+    /// registers).
+    mask: u32,
+    mask2: u32,
+}
+
+#[inline]
+fn col(base: usize, stride: isize, i: usize) -> usize {
+    (base as isize + stride * i as isize) as usize
+}
+
+/// Build one monomorphized kernel for `n` same-opcode instructions.
+/// All column indices were validated against the register file by
+/// [`SpecializedProgram::build`]; the `debug_assert` re-states the
+/// invariant the unchecked accesses rely on.
+fn alu_kernel<F>(n: usize, dst: RunDst, a: ASrc, b: BSrc, f: F) -> Kernel
+where
+    F: Fn(u32, u32) -> u32 + Copy + Send + Sync + 'static,
+{
+    Box::new(move |slab: &mut [u32], lanes: usize| {
+        for i in 0..n {
+            let d = col(dst.base, dst.stride, i) * lanes;
+            let d2 = col(dst.base2, dst.stride2, i) * lanes;
+            debug_assert!(d + lanes <= slab.len() && d2 + lanes <= slab.len());
+            match (a, &b) {
+                (ASrc::Reg { base, stride }, BSrc::Reg { base: b0, stride: sb }) => {
+                    let ac = col(base, stride, i) * lanes;
+                    let bc = col(*b0, *sb, i) * lanes;
+                    debug_assert!(ac + lanes <= slab.len() && bc + lanes <= slab.len());
+                    for l in 0..lanes {
+                        // SAFETY: all column bases are validated at
+                        // build time against `n_regs`, and the caller
+                        // sizes the slab to `n_regs × lanes`.
+                        unsafe {
+                            let av = *slab.get_unchecked(ac + l);
+                            let bv = *slab.get_unchecked(bc + l);
+                            let v = f(av, bv);
+                            *slab.get_unchecked_mut(d + l) = v & dst.mask;
+                            *slab.get_unchecked_mut(d2 + l) = v & dst.mask2;
+                        }
+                    }
+                }
+                (ASrc::Reg { base, stride }, BSrc::Imms(imms)) => {
+                    let ac = col(base, stride, i) * lanes;
+                    debug_assert!(ac + lanes <= slab.len());
+                    let bv = imms[i];
+                    for l in 0..lanes {
+                        // SAFETY: as above.
+                        unsafe {
+                            let av = *slab.get_unchecked(ac + l);
+                            let v = f(av, bv);
+                            *slab.get_unchecked_mut(d + l) = v & dst.mask;
+                            *slab.get_unchecked_mut(d2 + l) = v & dst.mask2;
+                        }
+                    }
+                }
+                (ASrc::Reg { base, stride }, BSrc::None) => {
+                    let ac = col(base, stride, i) * lanes;
+                    debug_assert!(ac + lanes <= slab.len());
+                    for l in 0..lanes {
+                        // SAFETY: as above.
+                        unsafe {
+                            let av = *slab.get_unchecked(ac + l);
+                            let v = f(av, 0);
+                            *slab.get_unchecked_mut(d + l) = v & dst.mask;
+                            *slab.get_unchecked_mut(d2 + l) = v & dst.mask2;
+                        }
+                    }
+                }
+                (ASrc::Imm(av), b) => {
+                    let bv = match b {
+                        BSrc::Imms(imms) => imms[i],
+                        BSrc::None => 0,
+                        // a=Imm runs are always singletons; a Reg `b`
+                        // column resolves per lane below.
+                        BSrc::Reg { .. } => 0,
+                    };
+                    if let BSrc::Reg { base: b0, stride: sb } = b {
+                        let bc = col(*b0, *sb, i) * lanes;
+                        debug_assert!(bc + lanes <= slab.len());
+                        for l in 0..lanes {
+                            // SAFETY: as above.
+                            unsafe {
+                                let v = f(av, *slab.get_unchecked(bc + l));
+                                *slab.get_unchecked_mut(d + l) = v & dst.mask;
+                                *slab.get_unchecked_mut(d2 + l) = v & dst.mask2;
+                            }
+                        }
+                    } else {
+                        let v = f(av, bv);
+                        for l in 0..lanes {
+                            // SAFETY: as above.
+                            unsafe {
+                                *slab.get_unchecked_mut(d + l) = v & dst.mask;
+                                *slab.get_unchecked_mut(d2 + l) = v & dst.mask2;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    })
+}
+
+/// Fold kernel: OR single bits from many registers into one output.
+fn gather_kernel(dst: usize, mask: u32, acc: ASrc, srcs: Arc<[(usize, u8)]>) -> Kernel {
+    Box::new(move |slab: &mut [u32], lanes: usize| {
+        let d = dst * lanes;
+        debug_assert!(d + lanes <= slab.len());
+        for l in 0..lanes {
+            let mut v = match acc {
+                ASrc::Reg { base, .. } => slab[base * lanes + l],
+                ASrc::Imm(v) => v,
+            };
+            for &(from, bit) in srcs.iter() {
+                v |= (slab[from * lanes + l] & 1) << bit;
+            }
+            slab[d + l] = v & mask;
+        }
+    })
+}
+
+/// A deploy-time-specialized program: the optimized IR compiled down
+/// to monomorphized kernels over an `n_regs × lanes` column slab.
+pub struct SpecializedProgram {
+    kernels: Vec<Kernel>,
+    n_regs: usize,
+    n_containers: usize,
+    /// Post-optimization instruction count (reports, tests).
+    n_instrs: usize,
+}
+
+impl fmt::Debug for SpecializedProgram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SpecializedProgram")
+            .field("kernels", &self.kernels.len())
+            .field("n_instrs", &self.n_instrs)
+            .field("n_regs", &self.n_regs)
+            .field("n_containers", &self.n_containers)
+            .finish()
+    }
+}
+
+impl SpecializedProgram {
+    /// Lower, optimize, and codegen a compiled model. Fails on keyed
+    /// (multi-model) programs, whose weights cannot be baked in.
+    pub fn build(compiled: &CompiledModel) -> Result<Self> {
+        let mut ir = IrProgram::lower(
+            &compiled.program,
+            &compiled.chip.phv,
+            &compiled.layout.output,
+        )?;
+        passes::run_pipeline(&mut ir, &passes::host_pipeline());
+        ir.validate()?;
+        let mut kernels = Vec::new();
+        for block in &ir.blocks {
+            let mut i = 0;
+            while i < block.instrs.len() {
+                let n = run_len(&block.instrs[i..], &ir.masks);
+                kernels.push(compile_run(&block.instrs[i..i + n], &ir.masks));
+                i += n;
+            }
+        }
+        Ok(Self {
+            kernels,
+            n_regs: ir.n_regs,
+            n_containers: ir.n_containers,
+            n_instrs: ir.n_instrs(),
+        })
+    }
+
+    /// Execute all kernels over a column slab of `n_regs × lanes`
+    /// words (register `r`, lane `l` at `r·lanes + l`).
+    pub fn run(&self, slab: &mut [u32], lanes: usize) {
+        assert!(
+            slab.len() >= self.n_regs * lanes,
+            "slab {} too small for {} registers × {} lanes",
+            slab.len(),
+            self.n_regs,
+            lanes
+        );
+        for k in &self.kernels {
+            k(slab, lanes);
+        }
+    }
+
+    /// Register-file size the run slab must provide.
+    pub fn n_regs(&self) -> usize {
+        self.n_regs
+    }
+
+    /// Registers `0..n_containers` mirror PHV containers.
+    pub fn n_containers(&self) -> usize {
+        self.n_containers
+    }
+
+    /// Compiled kernel count (≤ instruction count; runs fuse).
+    pub fn n_kernels(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// Post-optimization instruction count.
+    pub fn n_instrs(&self) -> usize {
+        self.n_instrs
+    }
+}
+
+/// Register strides of one adjacent instruction pair. `b` is `None`
+/// when the opcode ignores `b` or both sides are immediates (the
+/// per-element immediates are captured separately).
+#[derive(Clone, Copy, PartialEq)]
+struct Strides {
+    a: isize,
+    b: Option<isize>,
+    d: isize,
+    d2: isize,
+}
+
+fn pair_strides(prev: &IrInstr, cur: &IrInstr) -> Option<Strides> {
+    let (Operand::Reg(pa), Operand::Reg(ca)) = (prev.a, cur.a) else {
+        return None;
+    };
+    let b = match (prev.op.uses_b(), prev.b, cur.b) {
+        (false, _, _) | (true, Operand::Imm(_), Operand::Imm(_)) => None,
+        (true, Operand::Reg(pb), Operand::Reg(cb)) => Some(cb as isize - pb as isize),
+        _ => return None,
+    };
+    Some(Strides {
+        a: ca as isize - pa as isize,
+        b,
+        d: cur.dst as isize - prev.dst as isize,
+        d2: cur.dst2 as isize - prev.dst2 as isize,
+    })
+}
+
+/// Longest homogeneous strided prefix of `instrs` compilable to one
+/// kernel: same opcode and aux, register `a` operands and (if used)
+/// all-register or all-immediate `b` operands, with the strides fixed
+/// by the first adjacent pair reproduced by every later pair, and all
+/// destinations unmasked. Gather always goes alone; any instruction
+/// can fall back to a singleton run.
+fn run_len(instrs: &[IrInstr], masks: &[u32]) -> usize {
+    let first = &instrs[0];
+    if first.op == IrOp::Gather
+        || !matches!(first.a, Operand::Reg(_))
+        || masks[first.dst as usize] != u32::MAX
+        || masks[first.dst2 as usize] != u32::MAX
+    {
+        return 1;
+    }
+    let mut want: Option<Strides> = None;
+    let mut n = 1;
+    while n < instrs.len() {
+        let (prev, cur) = (&instrs[n - 1], &instrs[n]);
+        if cur.op != first.op
+            || cur.aux != first.aux
+            || masks[cur.dst as usize] != u32::MAX
+            || masks[cur.dst2 as usize] != u32::MAX
+        {
+            break;
+        }
+        let Some(s) = pair_strides(prev, cur) else {
+            break;
+        };
+        match want {
+            None => want = Some(s),
+            Some(w) if w == s => {}
+            Some(_) => break,
+        }
+        n += 1;
+    }
+    n
+}
+
+/// Compile one homogeneous run (or a singleton) to a kernel.
+fn compile_run(instrs: &[IrInstr], masks: &[u32]) -> Kernel {
+    let first = &instrs[0];
+    let n = instrs.len();
+    if first.op == IrOp::Gather {
+        debug_assert_eq!(n, 1);
+        let acc = match first.a {
+            Operand::Reg(r) => ASrc::Reg { base: r as usize, stride: 0 },
+            Operand::Imm(v) => ASrc::Imm(v),
+        };
+        let srcs: Arc<[(usize, u8)]> =
+            first.gather.iter().map(|&(r, b)| (r as usize, b)).collect();
+        return gather_kernel(first.dst as usize, masks[first.dst as usize], acc, srcs);
+    }
+    let dst = RunDst {
+        base: first.dst as usize,
+        stride: if n >= 2 {
+            instrs[1].dst as isize - instrs[0].dst as isize
+        } else {
+            0
+        },
+        base2: first.dst2 as usize,
+        stride2: if n >= 2 {
+            instrs[1].dst2 as isize - instrs[0].dst2 as isize
+        } else {
+            0
+        },
+        mask: masks[first.dst as usize],
+        mask2: masks[first.dst2 as usize],
+    };
+    let a = match first.a {
+        Operand::Reg(r) => ASrc::Reg {
+            base: r as usize,
+            stride: if n >= 2 {
+                let (Operand::Reg(a0), Operand::Reg(a1)) = (instrs[0].a, instrs[1].a)
+                else {
+                    unreachable!("multi-instruction runs have register a operands")
+                };
+                a1 as isize - a0 as isize
+            } else {
+                0
+            },
+        },
+        Operand::Imm(v) => ASrc::Imm(v),
+    };
+    let b = if !first.op.uses_b() {
+        BSrc::None
+    } else {
+        match first.b {
+            Operand::Reg(r) => BSrc::Reg {
+                base: r as usize,
+                stride: if n >= 2 {
+                    let (Operand::Reg(b0), Operand::Reg(b1)) = (instrs[0].b, instrs[1].b)
+                    else {
+                        unreachable!("mixed b operand kinds never form a run")
+                    };
+                    b1 as isize - b0 as isize
+                } else {
+                    0
+                },
+            },
+            Operand::Imm(_) => {
+                let imms: Arc<[u32]> = instrs
+                    .iter()
+                    .map(|x| match x.b {
+                        Operand::Imm(v) => v,
+                        Operand::Reg(_) => unreachable!("mixed b operand kinds"),
+                    })
+                    .collect();
+                BSrc::Imms(imms)
+            }
+        }
+    };
+    let aux = first.aux;
+    match first.op {
+        IrOp::Mov => alu_kernel(n, dst, a, b, |x, _| x),
+        IrOp::Not => alu_kernel(n, dst, a, b, |x, _| !x),
+        IrOp::And => alu_kernel(n, dst, a, b, |x, y| x & y),
+        IrOp::Or => alu_kernel(n, dst, a, b, |x, y| x | y),
+        IrOp::Xor => alu_kernel(n, dst, a, b, |x, y| x ^ y),
+        IrOp::Xnor => alu_kernel(n, dst, a, b, |x, y| !(x ^ y)),
+        IrOp::Shl => alu_kernel(n, dst, a, b, |x, y| if y >= 32 { 0 } else { x << y }),
+        IrOp::Shr => alu_kernel(n, dst, a, b, |x, y| if y >= 32 { 0 } else { x >> y }),
+        IrOp::Add => alu_kernel(n, dst, a, b, |x, y| x.wrapping_add(y)),
+        IrOp::Sub => alu_kernel(n, dst, a, b, |x, y| x.wrapping_sub(y)),
+        IrOp::SetGe => alu_kernel(n, dst, a, b, |x, y| (x >= y) as u32),
+        IrOp::Min => alu_kernel(n, dst, a, b, |x, y| x.min(y)),
+        IrOp::Max => alu_kernel(n, dst, a, b, |x, y| x.max(y)),
+        IrOp::Popcnt => alu_kernel(n, dst, a, b, |x, y| (x & y).count_ones()),
+        IrOp::ShrAnd => alu_kernel(n, dst, a, b, move |x, y| (x >> aux) & y),
+        IrOp::AddExtract => {
+            alu_kernel(n, dst, a, b, move |x, y| y.wrapping_add((x >> aux) & 1))
+        }
+        IrOp::Gather => unreachable!("handled above"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------------
+
+/// [`InferenceBackend`] over a [`SpecializedProgram`]: same parse and
+/// SoA conventions as the batched tape, but the program is straight
+/// monomorphized kernels instead of an interpreted op tape.
+pub struct SpecializedBackend {
+    compiled: Arc<CompiledModel>,
+    spec: Arc<SpecializedProgram>,
+    batch: PhvBatch,
+    first_out: Option<ContainerId>,
+    mask: u32,
+    stats: PipelineStats,
+}
+
+impl SpecializedBackend {
+    /// Specialize `compiled` on the spot and wrap it. Deployments
+    /// prefer [`Self::from_parts`] with a pre-built program.
+    pub fn new(compiled: Arc<CompiledModel>) -> Result<Self> {
+        let spec = Arc::new(SpecializedProgram::build(&compiled)?);
+        Ok(Self::from_parts(compiled, spec))
+    }
+
+    /// Wrap an already-specialized program (the deploy layer builds it
+    /// once at publish time and shares it across sessions and shards).
+    pub fn from_parts(compiled: Arc<CompiledModel>, spec: Arc<SpecializedProgram>) -> Self {
+        let extra = spec.n_regs() - spec.n_containers();
+        let batch = PhvBatch::zeroed_with_scratch(&compiled.chip.phv, 0, extra);
+        let first_out = compiled.layout.output.first().copied();
+        let mask = out_mask(compiled.output_bits);
+        Self {
+            compiled,
+            spec,
+            batch,
+            first_out,
+            mask,
+            stats: PipelineStats::default(),
+        }
+    }
+
+    /// The specialized program serving this backend.
+    pub fn program(&self) -> &SpecializedProgram {
+        &self.spec
+    }
+}
+
+impl InferenceBackend for SpecializedBackend {
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            name: "specialized",
+            data_parallel: true,
+            preferred_batch: 256,
+            modeled_pps: Some(self.compiled.chip.timing(&self.compiled.program).pps),
+        }
+    }
+
+    fn run_batch(&mut self, packets: &[&[u8]], out: &mut Vec<u32>) -> Result<()> {
+        out.clear();
+        out.reserve(packets.len());
+        let n = packets.len();
+        self.batch.reset(n);
+        let phv = &self.compiled.chip.phv;
+        for (lane, pkt) in packets.iter().enumerate() {
+            let mut ok = true;
+            for e in &self.compiled.parser.extracts {
+                match e.read_value(pkt) {
+                    Ok(v) => self.batch.write(lane, e.dst, v, phv),
+                    Err(_) => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                self.batch.mask_lane(lane);
+                self.stats.parse_errors += 1;
+            }
+        }
+        self.spec.run(self.batch.cols_mut(), n);
+        for l in 0..n {
+            match (self.batch.lane_ok(l), self.first_out) {
+                (true, Some(id)) => out.push(self.batch.read(l, id) & self.mask),
+                _ => out.push(0),
+            }
+        }
+        let ok = self.batch.n_ok() as u64;
+        self.stats.packets += ok;
+        self.stats.element_executions += ok * self.spec.n_kernels() as u64;
+        Ok(())
+    }
+
+    fn stats(&self) -> PipelineStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{self, BnnModel, PackedBits};
+    use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
+    use crate::rmt::ChipConfig;
+    use crate::util::rng::Rng;
+
+    fn specialize(model: &BnnModel, chip: ChipConfig) -> SpecializedBackend {
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiled = Arc::new(Compiler::new(chip, opts).compile(model).unwrap());
+        SpecializedBackend::new(compiled).unwrap()
+    }
+
+    fn frame_for(x: &PackedBits) -> Vec<u8> {
+        let mut pkt = Vec::new();
+        for w in x.words() {
+            pkt.extend_from_slice(&w.to_le_bytes());
+        }
+        pkt
+    }
+
+    #[test]
+    fn specialized_matches_forward_on_both_chips() {
+        let mut rng = Rng::seed_from_u64(21);
+        for chip in [ChipConfig::rmt(), ChipConfig::rmt_with_popcnt()] {
+            let model = BnnModel::random(64, &[32, 5], 23);
+            let mut be = specialize(&model, chip);
+            let inputs: Vec<PackedBits> =
+                (0..100).map(|_| PackedBits::random(64, &mut rng)).collect();
+            let frames: Vec<Vec<u8>> = inputs.iter().map(frame_for).collect();
+            let refs: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
+            let mut out = Vec::new();
+            be.run_batch(&refs, &mut out).unwrap();
+            for (i, x) in inputs.iter().enumerate() {
+                let y = bnn::forward(&model, x);
+                let expect = y.words().first().copied().unwrap_or(0) & out_mask(5);
+                assert_eq!(out[i], expect, "packet {i}");
+            }
+            assert_eq!(be.stats().packets, 100);
+        }
+    }
+
+    #[test]
+    fn malformed_lanes_masked_without_disturbing_others() {
+        let model = BnnModel::random(32, &[16, 2], 5);
+        let mut be = specialize(&model, ChipConfig::rmt());
+        let mut rng = Rng::seed_from_u64(6);
+        let good = PackedBits::random(32, &mut rng);
+        let frame = frame_for(&good);
+        let short = vec![0u8; 2];
+        let refs: Vec<&[u8]> = vec![&frame, &short, &frame];
+        let mut out = Vec::new();
+        be.run_batch(&refs, &mut out).unwrap();
+        let expect = bnn::forward(&model, &good).words()[0] & out_mask(2);
+        assert_eq!(out, vec![expect, 0, expect]);
+        assert_eq!(be.stats().parse_errors, 1);
+        assert_eq!(be.stats().packets, 2);
+    }
+
+    #[test]
+    fn specialization_shrinks_the_tape() {
+        let model = BnnModel::random(128, &[64, 16], 7);
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiled =
+            Arc::new(Compiler::new(ChipConfig::rmt(), opts).compile(&model).unwrap());
+        let spec = SpecializedProgram::build(&compiled).unwrap();
+        assert!(spec.n_kernels() > 0);
+        assert!(
+            spec.n_kernels() < spec.n_instrs() || spec.n_instrs() < 64,
+            "strided runs fuse: {} kernels for {} instrs",
+            spec.n_kernels(),
+            spec.n_instrs()
+        );
+    }
+
+    #[test]
+    fn keyed_programs_refuse_to_specialize() {
+        use crate::compiler::MultiModelOptions;
+        let models = vec![
+            (1u32, BnnModel::random(32, &[16], 1)),
+            (2u32, BnnModel::random(32, &[16], 2)),
+        ];
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 4 },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(ChipConfig::rmt(), opts)
+            .compile_multi(&models, MultiModelOptions { id_offset: 0 })
+            .unwrap();
+        assert!(SpecializedProgram::build(&compiled).is_err());
+    }
+}

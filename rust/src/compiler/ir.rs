@@ -1,0 +1,582 @@
+//! Linearized IR over a compiled program — the optimization layer
+//! between [`crate::compiler::schedule`] and execution (DESIGN.md §15).
+//!
+//! The RMT [`Program`] is a sequence of VLIW elements with **snapshot
+//! semantics**: every micro-op of an element reads the element's input
+//! PHV and all writes land together. That shape is what the hardware
+//! wants, but it is a poor substrate for optimization — ops are bundled
+//! by stage, action data hides behind match tables, and dead work (the
+//! B-copy pipeline a native-popcount target never needs, degenerate
+//! replication movs) is invisible to a per-element view.
+//!
+//! [`IrProgram::lower`] flattens the program into straight-line
+//! three-address instructions over a register file that mirrors the PHV
+//! (register `r` = container `r` for `r < n_containers`; higher
+//! registers are temps the sequentializer may allocate). Lowering
+//! proves, per element, that a **sequential** execution order exists
+//! that is bit-exact with the VLIW snapshot:
+//!
+//! * every element writes each container at most once (validated by
+//!   [`crate::rmt::Element`]), and
+//! * the chosen order never reads a register an earlier instruction of
+//!   the same element wrote, so every read still observes the
+//!   element-input value.
+//!
+//! When no such order exists in emission order (a genuine swap cycle),
+//! lowering falls back to materializing the snapshot: each write is
+//! redirected to a fresh temp and committed with trailing `Mov`s — the
+//! exact two-phase semantics, spelled out.
+//!
+//! Keyless match stages are baked into immediates (their action data is
+//! the per-element constant weight store). **Keyed** stages cannot be
+//! lowered — the selected weights vary per packet — so [`lower`]
+//! rejects multi-model programs and callers fall back to the
+//! interpreted executors (see [`crate::deploy`]'s backend checks).
+//!
+//! The pass pipeline over this IR lives in [`crate::compiler::passes`];
+//! the monomorphizing host backend in [`crate::backend::specialized`].
+//!
+//! [`lower`]: IrProgram::lower
+
+use crate::error::{Error, Result};
+use crate::rmt::alu::{AluOp, MicroOp, Src};
+use crate::rmt::phv::{ContainerId, PhvConfig};
+use crate::rmt::program::{Program, StepKind};
+
+/// IR register index. Registers `0..n_containers` mirror PHV
+/// containers one-to-one; the rest are sequentializer temps.
+pub type RegId = u16;
+
+/// One instruction operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Operand {
+    Reg(RegId),
+    Imm(u32),
+}
+
+/// IR opcodes. The ALU subset mirrors [`AluOp`] exactly; the last three
+/// are the compound forms real action units have ([`MicroOp`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IrOp {
+    Mov,
+    Not,
+    And,
+    Or,
+    Xor,
+    Xnor,
+    Shl,
+    Shr,
+    Add,
+    Sub,
+    SetGe,
+    Min,
+    Max,
+    /// dst = popcount(a & b)
+    Popcnt,
+    /// dst = (a >> aux) & b
+    ShrAnd,
+    /// dst = b + ((a >> aux) & 1)
+    AddExtract,
+    /// dst = a | OR over `gather` of (LSB(reg) << bit); `a` is the
+    /// accumulate source (`Reg(dst)` when accumulating, else `Imm(0)`),
+    /// made explicit so liveness sees the read.
+    Gather,
+}
+
+impl IrOp {
+    /// Does this op read the `b` operand?
+    pub fn uses_b(self) -> bool {
+        !matches!(self, IrOp::Mov | IrOp::Not | IrOp::Gather)
+    }
+
+    /// Pure evaluation of the non-Gather forms (Gather needs register
+    /// access for its source list).
+    #[inline]
+    pub fn eval(self, a: u32, b: u32, aux: u8) -> u32 {
+        match self {
+            IrOp::Mov => a,
+            IrOp::Not => !a,
+            IrOp::And => a & b,
+            IrOp::Or => a | b,
+            IrOp::Xor => a ^ b,
+            IrOp::Xnor => !(a ^ b),
+            IrOp::Shl => {
+                if b >= 32 {
+                    0
+                } else {
+                    a << b
+                }
+            }
+            IrOp::Shr => {
+                if b >= 32 {
+                    0
+                } else {
+                    a >> b
+                }
+            }
+            IrOp::Add => a.wrapping_add(b),
+            IrOp::Sub => a.wrapping_sub(b),
+            IrOp::SetGe => (a >= b) as u32,
+            IrOp::Min => a.min(b),
+            IrOp::Max => a.max(b),
+            IrOp::Popcnt => (a & b).count_ones(),
+            IrOp::ShrAnd => (a >> aux) & b,
+            IrOp::AddExtract => b.wrapping_add((a >> aux) & 1),
+            IrOp::Gather => unreachable!("Gather evaluated by the interpreter"),
+        }
+    }
+
+    fn from_alu(op: AluOp) -> Self {
+        match op {
+            AluOp::Mov => IrOp::Mov,
+            AluOp::Not => IrOp::Not,
+            AluOp::And => IrOp::And,
+            AluOp::Or => IrOp::Or,
+            AluOp::Xor => IrOp::Xor,
+            AluOp::Xnor => IrOp::Xnor,
+            AluOp::Shl => IrOp::Shl,
+            AluOp::Shr => IrOp::Shr,
+            AluOp::Add => IrOp::Add,
+            AluOp::Sub => IrOp::Sub,
+            AluOp::SetGe => IrOp::SetGe,
+            AluOp::Min => IrOp::Min,
+            AluOp::Max => IrOp::Max,
+            AluOp::Popcnt => IrOp::Popcnt,
+        }
+    }
+}
+
+/// One three-address instruction. `dst2 == dst` for single-destination
+/// instructions; a fused duplicate pair (the stock chip's XNOR+dup and
+/// the popcount sum levels write the same value to an A and a B
+/// container) carries the second destination in `dst2`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IrInstr {
+    pub op: IrOp,
+    pub dst: RegId,
+    pub dst2: RegId,
+    pub a: Operand,
+    pub b: Operand,
+    /// Shift amount (`ShrAnd`) or bit index (`AddExtract`).
+    pub aux: u8,
+    /// `Gather` sources: (source register, output bit).
+    pub gather: Vec<(RegId, u8)>,
+}
+
+impl IrInstr {
+    fn alu(op: IrOp, dst: RegId, a: Operand, b: Operand) -> Self {
+        Self { op, dst, dst2: dst, a, b, aux: 0, gather: Vec::new() }
+    }
+
+    /// Registers this instruction reads.
+    pub fn reads(&self) -> impl Iterator<Item = RegId> + '_ {
+        let a = match self.a {
+            Operand::Reg(r) => Some(r),
+            Operand::Imm(_) => None,
+        };
+        let b = match self.b {
+            Operand::Reg(r) if self.op.uses_b() => Some(r),
+            _ => None,
+        };
+        a.into_iter()
+            .chain(b)
+            .chain(self.gather.iter().map(|&(r, _)| r))
+    }
+}
+
+/// One block of straight-line instructions. Blocks carry only
+/// provenance (label + step of the originating element); execution is
+/// the concatenation of all blocks in order, so passes may merge them
+/// freely without changing semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IrBlock {
+    pub label: String,
+    pub step: StepKind,
+    pub instrs: Vec<IrInstr>,
+}
+
+/// A lowered, optimizable program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IrProgram {
+    pub blocks: Vec<IrBlock>,
+    /// Registers `0..n_containers` mirror PHV containers.
+    pub n_containers: usize,
+    /// Total register file size (containers + temps).
+    pub n_regs: usize,
+    /// Registers whose final values are observable (the model outputs).
+    /// Everything not contributing to these is fair game for DCE.
+    pub live_out: Vec<RegId>,
+    /// Per-register store masks (container width masks; temps are
+    /// unmasked). Indexed by register, length `n_regs`.
+    pub masks: Vec<u32>,
+}
+
+impl IrProgram {
+    /// Lower a compiled [`Program`] to straight-line IR.
+    ///
+    /// `live_out` names the containers whose final values the caller
+    /// observes (for a compiled model: `layout.output`). Fails on keyed
+    /// match stages — per-packet table lookups cannot be flattened into
+    /// immediates (see module docs).
+    pub fn lower(
+        program: &Program,
+        phv: &PhvConfig,
+        live_out: &[ContainerId],
+    ) -> Result<IrProgram> {
+        let n_containers = phv.n_containers();
+        let mut masks: Vec<u32> = (0..n_containers)
+            .map(|i| phv.mask(ContainerId(i as u16)))
+            .collect();
+        let mut n_regs = n_containers;
+        let mut blocks = Vec::with_capacity(program.elements.len());
+        for el in &program.elements {
+            // Bake keyless action data; reject per-packet tables.
+            let empty: &[u32] = &[];
+            let ad: &[u32] = match &el.match_stage {
+                Some(t) if !t.key_containers.is_empty() => {
+                    return Err(Error::Config(format!(
+                        "element {:?}: keyed match stage cannot be lowered \
+                         to straight-line IR (weights vary per packet)",
+                        el.label
+                    )));
+                }
+                Some(t) => &t.default_action_data,
+                None => empty,
+            };
+            let mut instrs: Vec<IrInstr> = el.ops.iter().map(|op| lower_op(op, ad)).collect();
+            fuse_dup_pairs(&mut instrs);
+            if !reads_before_writes(&instrs) {
+                materialize_snapshot(&mut instrs, &mut n_regs, &mut masks);
+            }
+            blocks.push(IrBlock {
+                label: el.label.clone(),
+                step: el.step,
+                instrs,
+            });
+        }
+        let ir = IrProgram {
+            blocks,
+            n_containers,
+            n_regs,
+            live_out: live_out.iter().map(|c| c.0).collect(),
+            masks,
+        };
+        ir.validate()?;
+        Ok(ir)
+    }
+
+    /// Total instruction count across blocks.
+    pub fn n_instrs(&self) -> usize {
+        self.blocks.iter().map(|b| b.instrs.len()).sum()
+    }
+
+    /// Check every register index is in range (passes must preserve
+    /// this; the specialized backend's unchecked kernels rely on it).
+    pub fn validate(&self) -> Result<()> {
+        let check = |r: RegId| -> Result<()> {
+            if (r as usize) < self.n_regs {
+                Ok(())
+            } else {
+                Err(Error::IllegalProgram(format!(
+                    "IR register r{r} out of range ({} registers)",
+                    self.n_regs
+                )))
+            }
+        };
+        if self.masks.len() != self.n_regs {
+            return Err(Error::IllegalProgram(format!(
+                "IR mask table has {} entries for {} registers",
+                self.masks.len(),
+                self.n_regs
+            )));
+        }
+        for block in &self.blocks {
+            for instr in &block.instrs {
+                check(instr.dst)?;
+                check(instr.dst2)?;
+                for r in instr.reads() {
+                    check(r)?;
+                }
+            }
+        }
+        for &r in &self.live_out {
+            check(r)?;
+        }
+        Ok(())
+    }
+
+    /// Reference interpreter: execute sequentially over a register
+    /// file of `n_regs` words. This is the semantic ground truth the
+    /// pass-pipeline property tests compare against — deliberately the
+    /// dumbest possible loop.
+    pub fn execute(&self, regs: &mut [u32]) {
+        debug_assert_eq!(regs.len(), self.n_regs);
+        for block in &self.blocks {
+            for instr in &block.instrs {
+                let a = self.operand(instr.a, regs);
+                let v = if instr.op == IrOp::Gather {
+                    let mut v = a;
+                    for &(from, bit) in &instr.gather {
+                        v |= (regs[from as usize] & 1) << bit;
+                    }
+                    v
+                } else {
+                    instr.op.eval(a, self.operand(instr.b, regs), instr.aux)
+                };
+                regs[instr.dst as usize] = v & self.masks[instr.dst as usize];
+                regs[instr.dst2 as usize] = v & self.masks[instr.dst2 as usize];
+            }
+        }
+    }
+
+    #[inline]
+    fn operand(&self, o: Operand, regs: &[u32]) -> u32 {
+        match o {
+            Operand::Reg(r) => regs[r as usize],
+            Operand::Imm(v) => v,
+        }
+    }
+}
+
+fn lower_src(s: &Src, ad: &[u32]) -> Operand {
+    match *s {
+        Src::Container(c) => Operand::Reg(c.0),
+        Src::Imm(v) => Operand::Imm(v),
+        // Arity is validated by Element::validate; stay total anyway.
+        Src::ActionData(i) => Operand::Imm(ad.get(i as usize).copied().unwrap_or(0)),
+    }
+}
+
+fn lower_op(op: &MicroOp, ad: &[u32]) -> IrInstr {
+    match op {
+        MicroOp::Alu { dst, op, a, b } => IrInstr::alu(
+            IrOp::from_alu(*op),
+            dst.0,
+            lower_src(a, ad),
+            lower_src(b, ad),
+        ),
+        MicroOp::ShrAnd { dst, a, shift, mask } => IrInstr {
+            op: IrOp::ShrAnd,
+            dst: dst.0,
+            dst2: dst.0,
+            a: lower_src(a, ad),
+            b: Operand::Imm(*mask),
+            aux: *shift,
+            gather: Vec::new(),
+        },
+        MicroOp::AddExtract { dst, acc, a, bit } => IrInstr {
+            op: IrOp::AddExtract,
+            dst: dst.0,
+            dst2: dst.0,
+            a: lower_src(a, ad),
+            b: lower_src(acc, ad),
+            aux: *bit,
+            gather: Vec::new(),
+        },
+        MicroOp::Gather { dst, srcs, accumulate } => IrInstr {
+            op: IrOp::Gather,
+            dst: dst.0,
+            dst2: dst.0,
+            a: if *accumulate {
+                Operand::Reg(dst.0)
+            } else {
+                Operand::Imm(0)
+            },
+            b: Operand::Imm(0),
+            aux: 0,
+            gather: srcs.iter().map(|s| (s.from.0, s.bit)).collect(),
+        },
+    }
+}
+
+/// Fuse adjacent duplicate writes: the stock-chip schedule emits
+/// `A = op(x, y); B = op(x, y)` pairs (XNOR+dup, popcount sums) whose
+/// second op re-reads the *element input* — under snapshot semantics
+/// both compute the same value, so one fused instruction with two
+/// destinations is exact (mirrors `exec::CompiledProgram`'s fusion).
+fn fuse_dup_pairs(instrs: &mut Vec<IrInstr>) {
+    let mut out: Vec<IrInstr> = Vec::with_capacity(instrs.len());
+    let mut it = std::mem::take(instrs).into_iter().peekable();
+    while let Some(cur) = it.next() {
+        let fusible = matches!(cur.op, IrOp::Xnor | IrOp::Add) && cur.dst2 == cur.dst;
+        if fusible {
+            if let Some(next) = it.peek() {
+                if next.op == cur.op
+                    && next.a == cur.a
+                    && next.b == cur.b
+                    && next.dst2 == next.dst
+                    && next.dst != cur.dst
+                {
+                    let mut fused = cur;
+                    fused.dst2 = it.next().expect("peeked").dst;
+                    out.push(fused);
+                    continue;
+                }
+            }
+        }
+        out.push(cur);
+    }
+    *instrs = out;
+}
+
+/// Does sequential execution in this order preserve snapshot
+/// semantics? True iff no instruction reads a register an earlier
+/// instruction of the same element wrote (an instruction reading its
+/// *own* destination is fine: sequential reads happen before the
+/// write).
+fn reads_before_writes(instrs: &[IrInstr]) -> bool {
+    let mut written: Vec<RegId> = Vec::new();
+    for instr in instrs {
+        if instr.reads().any(|r| written.contains(&r)) {
+            return false;
+        }
+        written.push(instr.dst);
+        written.push(instr.dst2);
+    }
+    true
+}
+
+/// Fallback for genuine cycles (e.g. a hand-built container swap):
+/// redirect every write to a fresh temp, then commit in emission order
+/// with trailing `Mov`s — literally the two-phase snapshot. Reads stay
+/// untouched: every source register still holds its element-input
+/// value throughout the compute phase.
+fn materialize_snapshot(instrs: &mut Vec<IrInstr>, n_regs: &mut usize, masks: &mut Vec<u32>) {
+    let mut commits: Vec<(RegId, RegId)> = Vec::new();
+    for instr in instrs.iter_mut() {
+        let t = *n_regs as RegId;
+        *n_regs += 1;
+        masks.push(u32::MAX);
+        commits.push((instr.dst, t));
+        if instr.dst2 != instr.dst {
+            commits.push((instr.dst2, t));
+        }
+        instr.dst = t;
+        instr.dst2 = t;
+    }
+    for (dst, t) in commits {
+        instrs.push(IrInstr::alu(IrOp::Mov, dst, Operand::Reg(t), Operand::Imm(0)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmt::alu::GatherSrc;
+    use crate::rmt::element::Element;
+    use crate::rmt::phv::Phv;
+
+    fn cfg() -> PhvConfig {
+        PhvConfig::uniform32()
+    }
+
+    fn c(i: u16) -> ContainerId {
+        ContainerId(i)
+    }
+
+    /// Oracle: run the element list with real snapshot semantics and
+    /// compare container state with the IR interpreter.
+    fn assert_matches_snapshot(elements: Vec<Element>, seed_regs: &[(u16, u32)]) {
+        let cfg = cfg();
+        let program = Program::new(elements);
+        let live_out: Vec<ContainerId> =
+            (0..cfg.n_containers() as u16).map(ContainerId).collect();
+        let ir = IrProgram::lower(&program, &cfg, &live_out).unwrap();
+
+        let mut phv = Phv::zeroed(&cfg);
+        for &(i, v) in seed_regs {
+            phv.write(c(i), v, &cfg);
+        }
+        let mut regs = vec![0u32; ir.n_regs];
+        regs[..cfg.n_containers()].copy_from_slice(phv.regs());
+
+        let mut scratch = Vec::new();
+        for el in &program.elements {
+            el.execute(&mut phv, &cfg, &mut scratch);
+        }
+        ir.execute(&mut regs);
+        assert_eq!(&regs[..cfg.n_containers()], phv.regs());
+    }
+
+    #[test]
+    fn vliw_swap_cycle_takes_the_snapshot_fallback() {
+        // The classic swap: both movs must read element-input values.
+        let el = Element::new(
+            "swap",
+            StepKind::Other,
+            vec![
+                MicroOp::alu(c(0), AluOp::Mov, Src::Container(c(1)), Src::Imm(0)),
+                MicroOp::alu(c(1), AluOp::Mov, Src::Container(c(0)), Src::Imm(0)),
+            ],
+        );
+        assert_matches_snapshot(vec![el], &[(0, 0xAAAA), (1, 0x5555)]);
+    }
+
+    #[test]
+    fn dup_pairs_fuse_and_stay_exact() {
+        // XNOR+dup in place: the second op reads the container the
+        // first one writes — only correct fused (or materialized).
+        let el = Element::new(
+            "xnor-dup",
+            StepKind::XnorDup,
+            vec![
+                MicroOp::alu(c(0), AluOp::Xnor, Src::Container(c(0)), Src::Imm(0xF0F0)),
+                MicroOp::alu(c(4), AluOp::Xnor, Src::Container(c(0)), Src::Imm(0xF0F0)),
+            ],
+        );
+        let cfg = cfg();
+        let program = Program::new(vec![el.clone()]);
+        let ir = IrProgram::lower(&program, &cfg, &[c(0), c(4)]).unwrap();
+        assert_eq!(ir.n_instrs(), 1, "pair fused to one dual-destination op");
+        assert_matches_snapshot(vec![el], &[(0, 0x1234)]);
+    }
+
+    #[test]
+    fn gather_accumulate_reads_its_destination() {
+        let el = Element::new(
+            "fold",
+            StepKind::Fold,
+            vec![MicroOp::Gather {
+                dst: c(2),
+                srcs: vec![GatherSrc { from: c(5), bit: 3 }],
+                accumulate: true,
+            }],
+        );
+        let cfg = cfg();
+        let program = Program::new(vec![el.clone()]);
+        let ir = IrProgram::lower(&program, &cfg, &[c(2)]).unwrap();
+        let instr = &ir.blocks[0].instrs[0];
+        assert_eq!(instr.a, Operand::Reg(2), "accumulate read is explicit");
+        assert_matches_snapshot(vec![el], &[(2, 0b1), (5, 0xFFFF_FFFF)]);
+    }
+
+    #[test]
+    fn keyed_stage_refuses_to_lower() {
+        use crate::rmt::table::{MatchStage, TableEntry};
+        let mut t = MatchStage::new(vec![c(1)], vec![0]);
+        t.insert(TableEntry { key: vec![7], action_data: vec![9] }).unwrap();
+        let el = Element::with_table(
+            "keyed",
+            StepKind::Other,
+            t,
+            vec![MicroOp::alu(c(0), AluOp::Mov, Src::ActionData(0), Src::Imm(0))],
+        );
+        let err = IrProgram::lower(&Program::new(vec![el]), &cfg(), &[c(0)]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn keyless_action_data_is_baked_to_immediates() {
+        use crate::rmt::table::MatchStage;
+        let t = MatchStage::new(vec![], vec![0xDEAD, 0xBEEF]);
+        let el = Element::with_table(
+            "weights",
+            StepKind::XnorDup,
+            t,
+            vec![MicroOp::alu(c(0), AluOp::Xnor, Src::Container(c(0)), Src::ActionData(1))],
+        );
+        let ir = IrProgram::lower(&Program::new(vec![el.clone()]), &cfg(), &[c(0)]).unwrap();
+        assert_eq!(ir.blocks[0].instrs[0].b, Operand::Imm(0xBEEF));
+        assert_matches_snapshot(vec![el], &[(0, 0xBEEF)]);
+    }
+}

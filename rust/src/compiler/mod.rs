@@ -24,13 +24,23 @@
 //! number of elements") and the *native-POPCNT* hardware extension (§3:
 //! element range drops to 5–10 and the duplication step disappears,
 //! doubling parallel-neuron capacity).
+//!
+//! Between compilation and execution sits an optimization layer
+//! (DESIGN.md §15): [`ir`] lowers an emitted program to straight-line
+//! three-address code and [`passes`] runs a semantics-preserving pass
+//! pipeline over it (stage packing, popcount strength reduction,
+//! dead-code elimination) — the substrate of the monomorphizing
+//! [`crate::backend::specialized`] host backend.
 
+pub mod ir;
 pub mod layout;
 pub mod p4gen;
+pub mod passes;
 pub mod popcount;
 pub mod resources;
 pub mod schedule;
 
+pub use ir::IrProgram;
 pub use layout::{InputEncoding, LayerPlan, ModelLayout};
 pub use resources::{
     elements_for_layer, render_table1, table1, ResourceReport, Table1Row,

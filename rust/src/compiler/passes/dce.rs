@@ -1,0 +1,154 @@
+//! Dead-code elimination: backward liveness from `live_out`.
+//!
+//! The IR is straight-line, so one backward sweep reaches the liveness
+//! fixpoint: an instruction is dead iff neither destination is live at
+//! its program point, and deleting it (its uses are then never
+//! generated) cascades to its producers within the same sweep. On top
+//! of plain deletion the pass:
+//!
+//! * **demotes** a dual-destination instruction whose second (or
+//!   first) destination is dead to a single write — this is what
+//!   dismantles the stock schedule's B-copy pipeline once strength
+//!   reduction has removed its only consumer;
+//! * deletes self-moves (`r = Mov r`), the schedule's degenerate
+//!   replication placeholder (registers always hold width-masked
+//!   values, so the re-masking store is a no-op);
+//! * drops blocks left empty.
+
+use super::Pass;
+use crate::compiler::ir::{IrOp, IrProgram, Operand};
+
+/// See module docs.
+pub struct DeadCodeEliminate;
+
+impl Pass for DeadCodeEliminate {
+    fn name(&self) -> &'static str {
+        "dead-code-eliminate"
+    }
+
+    fn run(&self, ir: &mut IrProgram) -> bool {
+        let mut live = vec![false; ir.n_regs];
+        for &r in &ir.live_out {
+            live[r as usize] = true;
+        }
+        let mut changed = false;
+        for block in ir.blocks.iter_mut().rev() {
+            for idx in (0..block.instrs.len()).rev() {
+                let instr = &mut block.instrs[idx];
+                let (d1, d2) = (instr.dst as usize, instr.dst2 as usize);
+                let self_mov = instr.op == IrOp::Mov
+                    && instr.a == Operand::Reg(instr.dst)
+                    && d2 == d1;
+                if (!live[d1] && !live[d2]) || self_mov {
+                    block.instrs.remove(idx);
+                    changed = true;
+                    continue;
+                }
+                if d2 != d1 {
+                    if !live[d2] {
+                        instr.dst2 = instr.dst;
+                        changed = true;
+                    } else if !live[d1] {
+                        instr.dst = instr.dst2;
+                        changed = true;
+                    }
+                }
+                live[d1] = false;
+                live[d2] = false;
+                for r in block.instrs[idx].reads() {
+                    live[r as usize] = true;
+                }
+            }
+        }
+        let before = ir.blocks.len();
+        ir.blocks.retain(|b| !b.instrs.is_empty());
+        changed || ir.blocks.len() != before
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::{IrBlock, IrInstr, IrProgram};
+    use crate::rmt::program::StepKind;
+
+    fn instr(op: IrOp, dst: u16, dst2: u16, a: Operand, b: Operand) -> IrInstr {
+        IrInstr { op, dst, dst2, a, b, aux: 0, gather: Vec::new() }
+    }
+
+    fn program(instrs: Vec<IrInstr>, live_out: Vec<u16>) -> IrProgram {
+        IrProgram {
+            blocks: vec![IrBlock {
+                label: "b".into(),
+                step: StepKind::Other,
+                instrs,
+            }],
+            n_containers: 8,
+            n_regs: 8,
+            live_out,
+            masks: vec![u32::MAX; 8],
+        }
+    }
+
+    #[test]
+    fn dead_chain_and_self_mov_removed_demotion_applied() {
+        let mut ir = program(
+            vec![
+                // Dead: r3 is never read and not live out.
+                instr(IrOp::Not, 3, 3, Operand::Reg(1), Operand::Imm(0)),
+                // Degenerate replication placeholder.
+                instr(IrOp::Mov, 0, 0, Operand::Reg(0), Operand::Imm(0)),
+                // Dup whose second destination (r4) is dead -> demoted.
+                instr(IrOp::Xnor, 2, 4, Operand::Reg(0), Operand::Imm(7)),
+                instr(IrOp::SetGe, 5, 5, Operand::Reg(2), Operand::Imm(3)),
+            ],
+            vec![5],
+        );
+        assert!(DeadCodeEliminate.run(&mut ir));
+        let instrs = &ir.blocks[0].instrs;
+        assert_eq!(instrs.len(), 2);
+        assert_eq!(instrs[0].op, IrOp::Xnor);
+        assert_eq!((instrs[0].dst, instrs[0].dst2), (2, 2), "dup demoted");
+        assert_eq!(instrs[1].op, IrOp::SetGe);
+
+        let snapshot = ir.clone();
+        assert!(!DeadCodeEliminate.run(&mut ir), "second run is a no-op");
+        assert_eq!(ir, snapshot);
+    }
+
+    #[test]
+    fn overwritten_store_dies_but_read_between_keeps_it() {
+        let mut ir = program(
+            vec![
+                instr(IrOp::Mov, 1, 1, Operand::Imm(10), Operand::Imm(0)),
+                instr(IrOp::Mov, 1, 1, Operand::Imm(20), Operand::Imm(0)),
+                instr(IrOp::Add, 2, 2, Operand::Reg(1), Operand::Imm(1)),
+            ],
+            vec![2],
+        );
+        assert!(DeadCodeEliminate.run(&mut ir));
+        assert_eq!(ir.blocks[0].instrs.len(), 2, "first store to r1 is dead");
+        assert_eq!(ir.blocks[0].instrs[0].a, Operand::Imm(20));
+    }
+
+    #[test]
+    fn gather_accumulate_keeps_prior_round_alive() {
+        let mut ir = program(
+            vec![
+                instr(IrOp::Mov, 1, 1, Operand::Imm(0b1), Operand::Imm(0)),
+                IrInstr {
+                    op: IrOp::Gather,
+                    dst: 1,
+                    dst2: 1,
+                    a: Operand::Reg(1),
+                    b: Operand::Imm(0),
+                    aux: 0,
+                    gather: vec![(4, 1)],
+                },
+            ],
+            vec![1],
+        );
+        assert!(!DeadCodeEliminate.run(&mut ir), "nothing is dead");
+        assert_eq!(ir.blocks[0].instrs.len(), 2);
+    }
+}

@@ -1,0 +1,148 @@
+//! Pass pipeline over the linearized IR (DESIGN.md §15).
+//!
+//! Every pass is a semantics-preserving rewrite of an [`IrProgram`]:
+//! bit-exact on the `live_out` registers for every input register
+//! state, and **idempotent** (a second run is a no-op). Both properties
+//! are pinned by `tests/prop_ir.rs` against random compiled models.
+//!
+//! ## Ordering contract
+//!
+//! The standard pipeline runs, in order:
+//!
+//! 1. [`PackStages`] — merge the blocks of one layer-round into a
+//!    single block. Purely structural (block boundaries carry no
+//!    semantics in straight-line IR); it exists so later passes and the
+//!    specialized backend see whole fused XNOR→popcount→sign chains,
+//!    and so kernel boundaries in the codegen correspond to layers
+//!    rather than VLIW stages.
+//! 2. [`PopcountStrengthReduce`] — rewrite a complete SWAR
+//!    mask/shift/add tree (the stock chip's in-word popcount) into one
+//!    native `Popcnt` when the execution target has the §3 popcount
+//!    primitive. Must run **before** DCE: the rewrite is what turns the
+//!    whole B-copy pipeline dead.
+//! 3. [`DeadCodeEliminate`] — backward liveness from `live_out`; runs
+//!    last so it reaps everything the earlier passes orphaned
+//!    (duplicate destinations, the B-copy chain, degenerate
+//!    replication movs).
+//!
+//! Passes report whether they changed anything, so the pipeline runner
+//! doubles as the idempotence probe used by the property tests.
+
+mod dce;
+mod pack;
+mod strength_reduce;
+
+pub use dce::DeadCodeEliminate;
+pub use pack::PackStages;
+pub use strength_reduce::PopcountStrengthReduce;
+
+use crate::compiler::ir::IrProgram;
+use crate::rmt::ChipConfig;
+
+/// One IR-to-IR rewrite.
+pub trait Pass {
+    /// Short name for reports and logs.
+    fn name(&self) -> &'static str;
+    /// Run once over the program; returns true iff anything changed.
+    fn run(&self, ir: &mut IrProgram) -> bool;
+}
+
+/// The standard pipeline, specialized for host execution (the CPU
+/// always has native popcount, whatever the modeled chip lacks).
+pub fn host_pipeline() -> Vec<Box<dyn Pass>> {
+    vec![
+        Box::new(PackStages),
+        Box::new(PopcountStrengthReduce::for_host()),
+        Box::new(DeadCodeEliminate),
+    ]
+}
+
+/// The standard pipeline, faithful to a modeled chip: strength
+/// reduction fires only if the chip has the §3 native-popcount
+/// primitive.
+pub fn chip_pipeline(chip: &ChipConfig) -> Vec<Box<dyn Pass>> {
+    vec![
+        Box::new(PackStages),
+        Box::new(PopcountStrengthReduce::for_chip(chip)),
+        Box::new(DeadCodeEliminate),
+    ]
+}
+
+/// Run a pipeline to completion (each pass once, in order). Returns
+/// `(pass name, changed)` per pass for reporting.
+pub fn run_pipeline(ir: &mut IrProgram, passes: &[Box<dyn Pass>]) -> Vec<(&'static str, bool)> {
+    passes.iter().map(|p| (p.name(), p.run(ir))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::BnnModel;
+    use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
+    use crate::rmt::ChipConfig;
+
+    /// Lower a small compiled model and run the host pipeline; the
+    /// detailed equivalence properties live in `tests/prop_ir.rs` —
+    /// this pins the structural expectations.
+    #[test]
+    fn host_pipeline_shrinks_a_stock_chip_program() {
+        let model = BnnModel::random(32, &[32, 8], 7);
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(&model).unwrap();
+        let mut ir = crate::compiler::ir::IrProgram::lower(
+            &compiled.program,
+            &compiled.chip.phv,
+            &compiled.layout.output,
+        )
+        .unwrap();
+        let before_instrs = ir.n_instrs();
+        let before_blocks = ir.blocks.len();
+        let report = run_pipeline(&mut ir, &host_pipeline());
+        assert!(report.iter().all(|&(_, changed)| changed), "{report:?}");
+        assert!(ir.blocks.len() < before_blocks, "stages packed");
+        // The whole SWAR tree and B-copy pipeline fold away: a stock
+        // layer drops from ~13 interpreted ops per neuron-word to a
+        // handful of fused ones.
+        assert!(
+            ir.n_instrs() * 2 < before_instrs,
+            "strength reduction + DCE halve the tape: {} -> {}",
+            before_instrs,
+            ir.n_instrs()
+        );
+        ir.validate().unwrap();
+
+        // Second run: every pass reports no change (idempotence).
+        let report = run_pipeline(&mut ir, &host_pipeline());
+        assert!(report.iter().all(|&(_, changed)| !changed), "{report:?}");
+    }
+
+    #[test]
+    fn chip_pipeline_respects_missing_popcnt() {
+        let model = BnnModel::random(32, &[16], 9);
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let stock = ChipConfig::rmt();
+        let compiled = Compiler::new(stock.clone(), opts).compile(&model).unwrap();
+        let mut ir = crate::compiler::ir::IrProgram::lower(
+            &compiled.program,
+            &compiled.chip.phv,
+            &compiled.layout.output,
+        )
+        .unwrap();
+        let report = run_pipeline(&mut ir, &chip_pipeline(&stock));
+        let sr = report.iter().find(|(n, _)| *n == "popcount-strength-reduce").unwrap();
+        assert!(!sr.1, "no native popcount on the stock chip; SWAR tree kept");
+        assert!(
+            ir.blocks
+                .iter()
+                .flat_map(|b| &b.instrs)
+                .all(|i| i.op != crate::compiler::ir::IrOp::Popcnt),
+            "faithful pipeline must not conjure popcount hardware"
+        );
+    }
+}

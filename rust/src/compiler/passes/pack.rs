@@ -1,0 +1,93 @@
+//! Stage packing: merge the blocks of one layer-round into one block.
+//!
+//! The schedule emits one element per VLIW stage (`L0/r0/replicate`,
+//! `L0/r0/xnor+dup`, `L0/r0/popcnt-lvl1/mask`, …). In straight-line IR
+//! those boundaries carry no semantics — execution is the concatenated
+//! instruction list — so packing is a pure relabeling that groups one
+//! layer-round's fused XNOR→popcount→sign chain into a single block.
+//! Downstream this is what makes the specialized backend's kernels
+//! per-layer rather than per-stage, and gives the strength-reduction
+//! matcher whole chains to look at without crossing block bookkeeping.
+
+use super::Pass;
+use crate::compiler::ir::{IrBlock, IrProgram};
+
+/// See module docs. Adjacent blocks sharing a layer-round key (the
+/// label up to its second `/`, e.g. `L0/r1`) merge; anything without
+/// that shape (e.g. `fold`) merges only with identical keys.
+pub struct PackStages;
+
+/// Grouping key: `"L0/r1/popcnt-lvl2/sum"` → `"L0/r1"`.
+fn round_key(label: &str) -> &str {
+    let mut slashes = 0;
+    for (i, ch) in label.char_indices() {
+        if ch == '/' {
+            slashes += 1;
+            if slashes == 2 {
+                return &label[..i];
+            }
+        }
+    }
+    label
+}
+
+impl Pass for PackStages {
+    fn name(&self) -> &'static str {
+        "pack-stages"
+    }
+
+    fn run(&self, ir: &mut IrProgram) -> bool {
+        let mut changed = false;
+        let mut packed: Vec<IrBlock> = Vec::with_capacity(ir.blocks.len());
+        for block in ir.blocks.drain(..) {
+            match packed.last_mut() {
+                Some(prev) if round_key(&prev.label) == round_key(&block.label) => {
+                    prev.instrs.extend(block.instrs);
+                    let key = round_key(&prev.label);
+                    if prev.label != key {
+                        prev.label = key.to_string();
+                    }
+                    changed = true;
+                }
+                _ => packed.push(block),
+            }
+        }
+        ir.blocks = packed;
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::IrProgram;
+    use crate::rmt::program::StepKind;
+
+    fn block(label: &str) -> IrBlock {
+        IrBlock { label: label.into(), step: StepKind::Other, instrs: Vec::new() }
+    }
+
+    #[test]
+    fn packs_by_layer_round_and_is_idempotent() {
+        let mut ir = IrProgram {
+            blocks: vec![
+                block("L0/r0/replicate"),
+                block("L0/r0/xnor+dup"),
+                block("L0/r1/replicate"),
+                block("fold"),
+                block("fold"),
+                block("L1/r0/sign"),
+            ],
+            n_containers: 0,
+            n_regs: 0,
+            live_out: vec![],
+            masks: vec![],
+        };
+        assert!(PackStages.run(&mut ir));
+        let labels: Vec<&str> = ir.blocks.iter().map(|b| b.label.as_str()).collect();
+        assert_eq!(labels, ["L0/r0", "L0/r1/replicate", "fold", "L1/r0/sign"]);
+        let snapshot = ir.clone();
+        assert!(!PackStages.run(&mut ir), "second run is a no-op");
+        assert_eq!(ir, snapshot);
+    }
+}

@@ -1,0 +1,303 @@
+//! Popcount strength reduction: collapse a complete SWAR tree into one
+//! native `Popcnt` when the execution target has the §3 primitive.
+//!
+//! The stock-chip schedule counts bits with the HAKMEM tree
+//! ([`crate::compiler::popcount`]): per 32-bit word, a chain of in-word
+//! levels `A &= mask; B = (B >> s) & mask; A = B = A + B` over a
+//! duplicated value. A target with a native popcount unit (the modeled
+//! §3 chip — or any host CPU, which is why the specialized backend
+//! always enables this pass) computes the same number in one
+//! instruction.
+//!
+//! ## What the matcher proves before rewriting
+//!
+//! For a destination pair `(ca, cb)` seeded by one dual-destination
+//! write (`ca == cb == x`), a run of levels
+//! `shift = 1, 2, …, 2^(L-1)` with standard SWAR masks leaves every
+//! `K = 2^L`-wide field of `ca` (and `cb`) holding the popcount of the
+//! corresponding field of `x & T`, where `T = ma₁ | (mb₁ << 1)` is the
+//! effective level-1 mask (the schedule folds the tail mask in there).
+//! The full 32-bit value therefore equals `popcount(x & T)` iff the
+//! fields above the lowest are all zero — i.e. `K == 32` or
+//! `T < 2^K` — and that is the rewrite's guard. Between matched chain
+//! instructions nothing else may read or write `ca`/`cb` (any
+//! unmatched toucher aborts the match), and both registers must be
+//! unmasked 32-bit containers, so intermediate values that differ
+//! under the rewrite are provably unobserved.
+//!
+//! Cross-word levels and everything downstream (sign compare, fold)
+//! are untouched: after the rewrite `ca`/`cb` hold exactly the values
+//! the tree would have produced.
+
+use super::Pass;
+use crate::compiler::ir::{IrInstr, IrOp, IrProgram, Operand, RegId};
+use crate::compiler::popcount::swar_mask;
+use crate::rmt::ChipConfig;
+
+/// See module docs.
+pub struct PopcountStrengthReduce {
+    /// Does the target have a native popcount primitive?
+    native: bool,
+}
+
+impl PopcountStrengthReduce {
+    /// Faithful to a modeled chip: only rewrite if the chip has the §3
+    /// native-popcount extension.
+    pub fn for_chip(chip: &ChipConfig) -> Self {
+        Self { native: chip.native_popcnt }
+    }
+
+    /// Host execution: every CPU this simulator runs on has popcount.
+    pub fn for_host() -> Self {
+        Self { native: true }
+    }
+}
+
+/// A matched chain: the flat indices of every member instruction (in
+/// program order) and the effective counted-bit mask `T`.
+struct Chain {
+    members: Vec<usize>,
+    t: u32,
+}
+
+impl Pass for PopcountStrengthReduce {
+    fn name(&self) -> &'static str {
+        "popcount-strength-reduce"
+    }
+
+    fn run(&self, ir: &mut IrProgram) -> bool {
+        if !self.native {
+            return false;
+        }
+        // Flatten to (block, instr) positions; chains may span the
+        // schedule's per-stage blocks when packing has not run.
+        let flat: Vec<(usize, usize)> = ir
+            .blocks
+            .iter()
+            .enumerate()
+            .flat_map(|(b, blk)| (0..blk.instrs.len()).map(move |i| (b, i)))
+            .collect();
+        let mut removed: Vec<Vec<bool>> =
+            ir.blocks.iter().map(|b| vec![false; b.instrs.len()]).collect();
+        let mut changed = false;
+        for anchor in 0..flat.len() {
+            let (ab, ai) = flat[anchor];
+            if removed[ab][ai] {
+                continue;
+            }
+            let instr = &ir.blocks[ab].instrs[ai];
+            // A chain needs `ca == cb` on entry: only a dual-destination
+            // producer (the fused XNOR+dup) guarantees that.
+            if instr.dst2 == instr.dst {
+                continue;
+            }
+            let (ca, cb) = (instr.dst, instr.dst2);
+            if ir.masks[ca as usize] != u32::MAX || ir.masks[cb as usize] != u32::MAX {
+                continue;
+            }
+            if let Some(chain) = match_chain(ir, &flat, &removed, anchor + 1, ca, cb) {
+                let (fb, fi) = flat[chain.members[0]];
+                ir.blocks[fb].instrs[fi] = IrInstr {
+                    op: IrOp::Popcnt,
+                    dst: ca,
+                    dst2: cb,
+                    a: Operand::Reg(ca),
+                    b: Operand::Imm(chain.t),
+                    aux: 0,
+                    gather: Vec::new(),
+                };
+                for &m in &chain.members[1..] {
+                    let (b, i) = flat[m];
+                    removed[b][i] = true;
+                }
+                changed = true;
+            }
+        }
+        if changed {
+            for (b, block) in ir.blocks.iter_mut().enumerate() {
+                let mut i = 0;
+                block.instrs.retain(|_| {
+                    let keep = !removed[b][i];
+                    i += 1;
+                    keep
+                });
+            }
+        }
+        changed
+    }
+}
+
+fn touches(instr: &IrInstr, ca: RegId, cb: RegId) -> bool {
+    instr.dst == ca
+        || instr.dst == cb
+        || instr.dst2 == ca
+        || instr.dst2 == cb
+        || instr.reads().any(|r| r == ca || r == cb)
+}
+
+/// Match the longest complete level run on `(ca, cb)` starting at flat
+/// index `start`. Returns `None` unless at least one level completes
+/// cleanly (no dangling half-level) and the field-width guard holds.
+fn match_chain(
+    ir: &IrProgram,
+    flat: &[(usize, usize)],
+    removed: &[Vec<bool>],
+    start: usize,
+    ca: RegId,
+    cb: RegId,
+) -> Option<Chain> {
+    let mut members: Vec<usize> = Vec::new();
+    let mut pending: Vec<usize> = Vec::new();
+    let mut mask_a: Option<u32> = None;
+    let mut mask_b: Option<u32> = None;
+    let mut shift: u8 = 1;
+    let mut levels: u32 = 0;
+    let mut t: u32 = 0;
+    for (idx, &(b, i)) in flat.iter().enumerate().skip(start) {
+        if removed[b][i] {
+            continue;
+        }
+        let instr = &ir.blocks[b].instrs[i];
+        if !touches(instr, ca, cb) {
+            continue;
+        }
+        let is_and = instr.op == IrOp::And
+            && instr.dst == ca
+            && instr.dst2 == ca
+            && instr.a == Operand::Reg(ca);
+        let is_shr = instr.op == IrOp::ShrAnd
+            && instr.dst == cb
+            && instr.dst2 == cb
+            && instr.a == Operand::Reg(cb)
+            && instr.aux == shift;
+        let is_sum = instr.op == IrOp::Add
+            && instr.dst == ca
+            && instr.dst2 == cb
+            && instr.a == Operand::Reg(ca)
+            && instr.b == Operand::Reg(cb);
+        if mask_a.is_none() && is_and {
+            if let Operand::Imm(m) = instr.b {
+                mask_a = Some(m);
+                pending.push(idx);
+                continue;
+            }
+        } else if mask_b.is_none() && is_shr {
+            if let Operand::Imm(m) = instr.b {
+                mask_b = Some(m);
+                pending.push(idx);
+                continue;
+            }
+        } else if is_sum {
+            if let (Some(ma), Some(mb)) = (mask_a, mask_b) {
+                let ok = if levels == 0 {
+                    // Level 1 carries the tail fold: arbitrary masks,
+                    // as long as they select alternating-bit slots.
+                    ma & !0x5555_5555 == 0 && mb & !0x5555_5555 == 0
+                } else {
+                    let w = 2 * shift as u32;
+                    ma == swar_mask(w) && mb == swar_mask(w)
+                };
+                if ok && shift <= 16 {
+                    if levels == 0 {
+                        t = ma | (mb << 1);
+                    }
+                    pending.push(idx);
+                    members.append(&mut pending);
+                    mask_a = None;
+                    mask_b = None;
+                    levels += 1;
+                    if shift == 16 {
+                        // K = 32: the chain cannot extend further.
+                        break;
+                    }
+                    shift *= 2;
+                    continue;
+                }
+            }
+        }
+        // A toucher that fits no slot ends the chain here.
+        break;
+    }
+    if !pending.is_empty() || levels == 0 {
+        // A dangling half-level reads mid-chain values the rewrite
+        // would change — bail.
+        return None;
+    }
+    let k = 1u64 << levels;
+    if k < 32 && (t as u64) >> k != 0 {
+        return None;
+    }
+    Some(Chain { members, t })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::BnnModel;
+    use crate::compiler::ir::IrProgram;
+    use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
+    use crate::rmt::ChipConfig;
+    use crate::util::rng::Rng;
+
+    fn lowered(model: &BnnModel) -> IrProgram {
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(ChipConfig::rmt(), opts).compile(model).unwrap();
+        IrProgram::lower(&compiled.program, &compiled.chip.phv, &compiled.layout.output)
+            .unwrap()
+    }
+
+    #[test]
+    fn swar_chains_collapse_to_native_popcnt() {
+        let model = BnnModel::random(64, &[16], 3);
+        let mut ir = lowered(&model);
+        let before = ir.n_instrs();
+        assert!(PopcountStrengthReduce::for_host().run(&mut ir));
+        assert!(ir.n_instrs() < before);
+        let popcnts = ir
+            .blocks
+            .iter()
+            .flat_map(|b| &b.instrs)
+            .filter(|i| i.op == IrOp::Popcnt)
+            .count();
+        // One popcount per neuron-word pair: 16 neurons × 2 words.
+        assert_eq!(popcnts, 32);
+        // No SWAR residue on the rewritten pairs.
+        assert!(ir.blocks.iter().flat_map(|b| &b.instrs).all(|i| i.op != IrOp::ShrAnd));
+        ir.validate().unwrap();
+    }
+
+    #[test]
+    fn rewrite_is_bit_exact_and_idempotent() {
+        let model = BnnModel::random(64, &[16, 4], 5);
+        let base = lowered(&model);
+        let mut opt = base.clone();
+        let pass = PopcountStrengthReduce::for_host();
+        assert!(pass.run(&mut opt));
+        let snapshot = opt.clone();
+        assert!(!pass.run(&mut opt), "second run is a no-op");
+        assert_eq!(opt, snapshot);
+
+        let mut rng = Rng::seed_from_u64(17);
+        for _ in 0..20 {
+            let mut r0: Vec<u32> = (0..base.n_regs).map(|_| rng.next_u32()).collect();
+            let mut r1 = r0.clone();
+            base.execute(&mut r0);
+            opt.execute(&mut r1);
+            for &out in &base.live_out {
+                assert_eq!(r0[out as usize], r1[out as usize], "r{out}");
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_without_native_popcount() {
+        let model = BnnModel::random(32, &[4], 1);
+        let mut ir = lowered(&model);
+        let snapshot = ir.clone();
+        assert!(!PopcountStrengthReduce::for_chip(&ChipConfig::rmt()).run(&mut ir));
+        assert_eq!(ir, snapshot);
+    }
+}

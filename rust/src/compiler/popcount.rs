@@ -7,15 +7,31 @@
 //! pairs. Each level costs exactly two pipeline elements — one
 //! mask/shift element operating on the two copies in parallel, one sum
 //! element — which is where Table 1's `2·log₂(N)` comes from.
+//!
+//! Levels carry **separate masks for the last word**: level 1 folds the
+//! vector's tail mask in there (killing the garbage the XNOR leaves
+//! above `n_bits` without spending an element), and only the last word
+//! has a tail — applying the fold to every word, as an earlier revision
+//! did, would be wrong the moment `n_bits % 32 != 0` with more than one
+//! word. The generator accepts any `n_bits >= 1`, including widths
+//! outside the model spec's power-of-two range: sub-word vectors round
+//! the in-word depth up to the next power of two, and straggler words
+//! of non-power-of-two word counts are carried by the (guarded)
+//! cross-word levels.
 
 use crate::bnn::bitpack::{n_words, tail_mask};
 
 /// One level of the POPCNT tree.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Level {
-    /// In-word SWAR level: `A & mask_a` ∥ `(B >> shift) & mask_b`.
-    InWord { shift: u8, mask_a: u32, mask_b: u32 },
+    /// In-word SWAR level: `A & mask` ∥ `(B >> shift) & mask`, with
+    /// the `last_*` masks replacing `mask_*` on the vector's last word
+    /// (level 1 folds the tail mask in there; other levels repeat the
+    /// uniform masks).
+    InWord { shift: u8, mask_a: u32, mask_b: u32, last_a: u32, last_b: u32 },
     /// Cross-word level: add containers at pair distance `stride/2`.
+    /// Pairs reaching past the last word are skipped (their count is
+    /// already in place).
     Cross { stride: usize },
 }
 
@@ -32,31 +48,47 @@ pub const fn swar_mask(w: u32) -> u32 {
     }
 }
 
-/// The full level sequence for an `n_bits` vector (a power of two).
-/// Length is exactly `log₂(n_bits)` — the paper's tree depth.
+/// The full level sequence for an `n_bits >= 1` vector. For the
+/// paper's power-of-two widths the length is exactly `log₂(n_bits)` —
+/// the paper's tree depth; other widths cost the depth of the next
+/// power of two (the reduction cannot stop mid-field).
 pub fn tree_levels(n_bits: usize) -> Vec<Level> {
-    assert!(n_bits.is_power_of_two() && n_bits >= 2, "n_bits={n_bits}");
+    assert!(n_bits >= 1, "popcount of an empty vector");
     let mut levels = Vec::new();
     let tail = tail_mask(n_bits);
-    let in_word = n_bits.min(32);
+    // In-word depth: reduce fields up to the widest that fits a word.
+    // A sub-word vector rounds up to the next power of two (min 2 — a
+    // 1-bit vector still takes one level to move its bit into a count).
+    let in_word = if n_bits >= 32 {
+        32
+    } else {
+        n_bits.next_power_of_two().max(2)
+    };
     let mut w = 2u32;
     while w <= in_word as u32 {
         let m = swar_mask(w);
         let s = (w / 2) as u8;
         // Level 1 also kills the tail garbage the XNOR left above
         // `n_bits` (XNOR of equal zero bits yields ones): fold the tail
-        // mask into the level's masks instead of spending an element.
-        let (ma, mb) = if w == 2 {
-            (m & tail, m & (tail >> s))
-        } else {
-            (m, m)
-        };
-        levels.push(Level::InWord { shift: s, mask_a: ma, mask_b: mb });
+        // mask into the LAST word's masks instead of spending an
+        // element. Earlier words have no tail and keep the uniform
+        // mask.
+        let (la, lb) = if w == 2 { (m & tail, m & (tail >> s)) } else { (m, m) };
+        levels.push(Level::InWord {
+            shift: s,
+            mask_a: m,
+            mask_b: m,
+            last_a: la,
+            last_b: lb,
+        });
         w *= 2;
     }
     let words = n_words(n_bits);
+    // `stride/2 < words` (not `stride <= words`): a straggler word of a
+    // non-power-of-two word count still needs a final fold whose pair
+    // distance reaches it.
     let mut stride = 2usize;
-    while stride <= words {
+    while stride / 2 < words {
         levels.push(Level::Cross { stride });
         stride *= 2;
     }
@@ -80,14 +112,18 @@ pub fn naive_elements(n_bits: usize) -> usize {
 /// Software reference of the tree (used by tests to verify the level
 /// specs independently of the pipeline).
 pub fn tree_reference(words: &[u32], n_bits: usize) -> u32 {
+    debug_assert_eq!(words.len(), n_words(n_bits));
     let mut a: Vec<u64> = words.iter().map(|&w| w as u64).collect();
     let mut b = a.clone();
+    let last = a.len() - 1;
     for level in tree_levels(n_bits) {
         match level {
-            Level::InWord { shift, mask_a, mask_b } => {
+            Level::InWord { shift, mask_a, mask_b, last_a, last_b } => {
                 for i in 0..a.len() {
-                    let na = a[i] & mask_a as u64;
-                    let nb = (b[i] >> shift) & mask_b as u64;
+                    let (ma, mb) =
+                        if i == last { (last_a, last_b) } else { (mask_a, mask_b) };
+                    let na = a[i] & ma as u64;
+                    let nb = (b[i] >> shift) & mb as u64;
                     let sum = na + nb;
                     a[i] = sum;
                     b[i] = sum;
@@ -96,9 +132,11 @@ pub fn tree_reference(words: &[u32], n_bits: usize) -> u32 {
             Level::Cross { stride } => {
                 let mut k = 0;
                 while k < a.len() {
-                    let sum = a[k] + a[k + stride / 2];
-                    a[k] = sum;
-                    b[k] = sum;
+                    if k + stride / 2 < a.len() {
+                        let sum = a[k] + a[k + stride / 2];
+                        a[k] = sum;
+                        b[k] = sum;
+                    }
                     k += stride;
                 }
             }
@@ -111,6 +149,19 @@ pub fn tree_reference(words: &[u32], n_bits: usize) -> u32 {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    /// Naive oracle: tail-masked `count_ones` over the words.
+    fn oracle(words: &[u32], n_bits: usize) -> u32 {
+        let last = words.len() - 1;
+        words
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| {
+                let valid = if i == last { tail_mask(n_bits) } else { u32::MAX };
+                (x & valid).count_ones()
+            })
+            .sum()
+    }
 
     #[test]
     fn masks_are_standard() {
@@ -132,6 +183,20 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_widths_have_levels() {
+        // n=1 still needs one in-word level (the bit becomes a count);
+        // n=2 is the smallest standard tree.
+        assert_eq!(tree_levels(1).len(), 1);
+        assert_eq!(tree_elements(1), 2);
+        assert_eq!(tree_levels(2).len(), 1);
+        // Non-power-of-two widths cost the next power of two's depth,
+        // plus enough cross levels to reach every straggler word.
+        assert_eq!(tree_levels(24).len(), 5, "sub-word rounds up to 32");
+        assert_eq!(tree_levels(48).len(), 6, "5 in-word + 1 cross");
+        assert_eq!(tree_levels(100).len(), 7, "5 in-word + 2 cross (4 words)");
+    }
+
+    #[test]
     fn tree_reference_equals_count_ones() {
         let mut rng = Rng::seed_from_u64(11);
         for n in [16usize, 32, 64, 128, 1024, 2048] {
@@ -142,16 +207,31 @@ mod tests {
                 if n < 32 {
                     words[0] |= !tail_mask(n);
                 }
-                let expect: u32 = words
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &x)| {
-                        let valid = if i == w - 1 { tail_mask(n) } else { u32::MAX };
-                        (x & valid).count_ones()
-                    })
-                    .sum();
-                assert_eq!(tree_reference(&words, n), expect, "N={n}");
+                assert_eq!(tree_reference(&words, n), oracle(&words, n), "N={n}");
             }
+        }
+    }
+
+    #[test]
+    fn tree_reference_handles_edge_widths() {
+        let mut rng = Rng::seed_from_u64(13);
+        // 1, 2: degenerate; 3, 5, 24: sub-word non-powers-of-two;
+        // 33, 48: a short tail in the second word; 96: three full words
+        // (straggler in the cross fold); 100: four words with a 4-bit
+        // tail.
+        for n in [1usize, 2, 3, 5, 24, 33, 48, 96, 100] {
+            let w = n_words(n);
+            for _ in 0..50 {
+                let mut words: Vec<u32> = (0..w).map(|_| rng.next_u32()).collect();
+                // Garbage above the tail must not count.
+                if n % 32 != 0 {
+                    *words.last_mut().unwrap() |= !tail_mask(n);
+                }
+                assert_eq!(tree_reference(&words, n), oracle(&words, n), "N={n}");
+            }
+            // All-ones (garbage above the tail included) counts n.
+            let ones = vec![u32::MAX; w];
+            assert_eq!(tree_reference(&ones, n), n as u32, "N={n} all-ones");
         }
     }
 
@@ -162,5 +242,11 @@ mod tests {
         assert_eq!(tree_reference(&words, 16), 0);
         let words2 = [0xFFFF_FFFFu32];
         assert_eq!(tree_reference(&words2, 16), 16);
+        // Multi-word: the tail fold applies to the LAST word only; a
+        // fully-set first word keeps all 32 of its bits.
+        let words3 = [u32::MAX, u32::MAX]; // n=48: high 16 of word 1 = garbage
+        assert_eq!(tree_reference(&words3, 48), 48);
+        let words4 = [u32::MAX, 0xFFFF_0000]; // only garbage in word 1
+        assert_eq!(tree_reference(&words4, 48), 32);
     }
 }

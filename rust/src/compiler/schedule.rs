@@ -435,8 +435,9 @@ impl Compiler {
         let w = plan.w_words;
         for (lvl, level) in tree_levels(plan.in_bits).iter().enumerate() {
             match *level {
-                Level::InWord { shift, mask_a, mask_b } => {
-                    // Mask element: A &= mask_a ; B = (B >> shift) & mask_b.
+                Level::InWord { shift, mask_a, mask_b, last_a, last_b } => {
+                    // Mask element: A &= mask_a ; B = (B >> shift) & mask_b,
+                    // with the last word taking the tail-folded masks.
                     // The A ops and B ops are emitted as two homogeneous
                     // blocks (not interleaved) so the executor can
                     // vectorize each as one strided run (§Perf).
@@ -444,22 +445,24 @@ impl Compiler {
                     for g in 0..count {
                         for wd in 0..w {
                             let ca = a(g * w + wd);
+                            let ma = if wd == w - 1 { last_a } else { mask_a };
                             ops.push(MicroOp::alu(
                                 ca,
                                 AluOp::And,
                                 Src::Container(ca),
-                                Src::Imm(mask_a),
+                                Src::Imm(ma),
                             ));
                         }
                     }
                     for g in 0..count {
                         for wd in 0..w {
                             let cb = b(g * w + wd);
+                            let mb = if wd == w - 1 { last_b } else { mask_b };
                             ops.push(MicroOp::ShrAnd {
                                 dst: cb,
                                 a: Src::Container(cb),
                                 shift,
-                                mask: mask_b,
+                                mask: mb,
                             });
                         }
                     }
@@ -495,16 +498,20 @@ impl Compiler {
                 }
                 Level::Cross { stride } => {
                     // Gather element: B[k·stride] = A[k·stride + stride/2].
+                    // Pairs past the last word are skipped (their count
+                    // stays in place for a later, wider stride).
                     let mut ops = Vec::new();
                     for g in 0..count {
                         let mut k = 0;
                         while k < w {
-                            ops.push(MicroOp::alu(
-                                b(g * w + k),
-                                AluOp::Mov,
-                                Src::Container(a(g * w + k + stride / 2)),
-                                Src::Imm(0),
-                            ));
+                            if k + stride / 2 < w {
+                                ops.push(MicroOp::alu(
+                                    b(g * w + k),
+                                    AluOp::Mov,
+                                    Src::Container(a(g * w + k + stride / 2)),
+                                    Src::Imm(0),
+                                ));
+                            }
                             k += stride;
                         }
                     }
@@ -514,23 +521,27 @@ impl Compiler {
                         ops,
                     ));
                     // Sum element: A[k·stride] += B[k·stride] (+ dup).
+                    // Skipped pairs got no Mov, so their B still equals
+                    // A — summing would double-count.
                     let mut ops = Vec::new();
                     for g in 0..count {
                         let mut k = 0;
                         while k < w {
-                            let (ca, cb) = (a(g * w + k), b(g * w + k));
-                            ops.push(MicroOp::alu(
-                                ca,
-                                AluOp::Add,
-                                Src::Container(ca),
-                                Src::Container(cb),
-                            ));
-                            ops.push(MicroOp::alu(
-                                cb,
-                                AluOp::Add,
-                                Src::Container(ca),
-                                Src::Container(cb),
-                            ));
+                            if k + stride / 2 < w {
+                                let (ca, cb) = (a(g * w + k), b(g * w + k));
+                                ops.push(MicroOp::alu(
+                                    ca,
+                                    AluOp::Add,
+                                    Src::Container(ca),
+                                    Src::Container(cb),
+                                ));
+                                ops.push(MicroOp::alu(
+                                    cb,
+                                    AluOp::Add,
+                                    Src::Container(ca),
+                                    Src::Container(cb),
+                                ));
+                            }
                             k += stride;
                         }
                     }

@@ -201,7 +201,7 @@ impl Controller {
                     return Err(Error::Config(
                         "policy switches to the lut baseline, which serves an \
                          exact-match table instead of the deployed BNN — legal \
-                         switch targets: scalar|batched|reference"
+                         switch targets: scalar|batched|reference|specialized"
                             .into(),
                     ));
                 }

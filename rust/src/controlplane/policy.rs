@@ -308,7 +308,8 @@ mod tests {
         let p = Policy::parse(
             "on imbalance do reshard 8\n\
              on latency-slo do backend scalar\n\
-             on overload do overflow drop\n",
+             on overload do overflow drop\n\
+             on latency-slo do backend specialized\n",
         )
         .unwrap();
         assert_eq!(p.rules[0].action, Action::Reshard(8));
@@ -320,9 +321,14 @@ mod tests {
             p.rules[2].action,
             Action::Overflow(crate::coordinator::OverflowPolicy::Drop)
         );
+        assert_eq!(
+            p.rules[3].action,
+            Action::SwitchBackend(crate::backend::BackendKind::Specialized)
+        );
         assert_eq!(p.rules[0].action.render(), "reshard 8");
         assert_eq!(p.rules[1].action.render(), "backend scalar");
         assert_eq!(p.rules[2].action.render(), "overflow drop");
+        assert_eq!(p.rules[3].action.render(), "backend specialized");
 
         assert!(Policy::parse("on overload do reshard").is_err());
         assert!(Policy::parse("on overload do reshard x").is_err());

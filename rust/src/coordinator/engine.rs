@@ -378,6 +378,7 @@ mod tests {
                 BackendKind::Scalar,
                 BackendKind::Batched,
                 BackendKind::Reference,
+                BackendKind::Specialized,
             ] {
                 let engine = engine_for(&model, router, backend);
                 let mut gen = TraceGenerator::new(17);

@@ -129,6 +129,7 @@ fn backend_to_u8(k: BackendKind) -> u8 {
         BackendKind::Batched => 1,
         BackendKind::Reference => 2,
         BackendKind::Lut => 3,
+        BackendKind::Specialized => 4,
     }
 }
 
@@ -137,6 +138,7 @@ fn backend_from_u8(v: u8) -> BackendKind {
         0 => BackendKind::Scalar,
         2 => BackendKind::Reference,
         3 => BackendKind::Lut,
+        4 => BackendKind::Specialized,
         _ => BackendKind::Batched,
     }
 }

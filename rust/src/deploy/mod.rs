@@ -239,6 +239,13 @@ impl Deployment {
                  isolated deployment instead"
                     .into(),
             )),
+            BackendKind::Specialized => Err(Error::Config(
+                "the specialized backend monomorphizes one model's weights \
+                 into straight-line kernels and cannot honor per-packet \
+                 model ids — use an isolated deployment, or \
+                 scalar|batched for the keyed program"
+                    .into(),
+            )),
             _ => Ok(()),
         }
     }
@@ -435,7 +442,7 @@ impl Deployment {
                 );
                 *entry.model.lock().expect("model lock poisoned") =
                     Arc::clone(&new_model);
-                slot.publish(ModelArtifact { model: new_model, compiled })
+                slot.publish(ModelArtifact::new(new_model, compiled))
             }
             (None, Some(keyed)) => {
                 // Keyed mode: recompile the whole shared program with the
@@ -463,7 +470,7 @@ impl Deployment {
                 *entry.model.lock().expect("model lock poisoned") =
                     Arc::clone(&new_model);
                 let default_model = Arc::new(pairs[0].1.clone());
-                keyed.slot.publish(ModelArtifact { model: default_model, compiled })
+                keyed.slot.publish(ModelArtifact::new(default_model, compiled))
             }
             (None, None) => unreachable!("entry without slot in isolated mode"),
         };
@@ -698,10 +705,7 @@ impl DeploymentBuilder {
                 );
                 let slot = Arc::new(ModelSlot::new(
                     "keyed-program",
-                    ModelArtifact {
-                        model: Arc::new(pairs[0].1.clone()),
-                        compiled,
-                    },
+                    ModelArtifact::new(Arc::new(pairs[0].1.clone()), compiled),
                 ));
                 for (name, id, model) in resolved {
                     entries.push(DeployEntry {
@@ -724,7 +728,7 @@ impl DeploymentBuilder {
                     );
                     let slot = Arc::new(ModelSlot::new(
                         name.clone(),
-                        ModelArtifact { model: Arc::clone(&model), compiled },
+                        ModelArtifact::new(Arc::clone(&model), compiled),
                     ));
                     entries.push(DeployEntry {
                         name,
@@ -774,7 +778,12 @@ mod tests {
         let model = BnnModel::random(32, &[16, 1], 41);
         let mut gen = TraceGenerator::new(5);
         let trace = gen.generate(&TraceKind::UniformIps, 64);
-        for kind in [BackendKind::Scalar, BackendKind::Batched, BackendKind::Reference] {
+        for kind in [
+            BackendKind::Scalar,
+            BackendKind::Batched,
+            BackendKind::Reference,
+            BackendKind::Specialized,
+        ] {
             let dep = deployment_for(&model, kind);
             let mut session = dep.session("m").unwrap();
             assert_eq!(session.backend_name(), kind.name());

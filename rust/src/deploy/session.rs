@@ -10,7 +10,9 @@
 
 use std::sync::Arc;
 
-use crate::backend::{make_backend, BackendKind, InferenceBackend, LutBackend};
+use crate::backend::{
+    make_backend, BackendKind, InferenceBackend, LutBackend, SpecializedBackend,
+};
 use crate::baseline::LutClassifier;
 use crate::error::{Error, Result};
 use crate::rmt::PipelineStats;
@@ -37,6 +39,16 @@ pub(crate) fn backend_for_artifact(
         BackendKind::Lut => match lut {
             Some(l) => Ok(Box::new(LutBackend::new(l.as_ref().clone()))),
             None => Err(Error::Config(LUT_TABLE_HINT.into())),
+        },
+        // Reuse the specialization built at publish time; falling back
+        // to `make_backend` (which specializes on the spot) only
+        // surfaces the lowering error for unspecializable programs.
+        BackendKind::Specialized => match &artifact.specialized {
+            Some(spec) => Ok(Box::new(SpecializedBackend::from_parts(
+                Arc::clone(&artifact.compiled),
+                Arc::clone(spec),
+            ))),
+            None => make_backend(kind, &artifact.compiled, Some(&artifact.model)),
         },
         _ => make_backend(kind, &artifact.compiled, Some(&artifact.model)),
     }
@@ -165,7 +177,8 @@ impl Session {
         self.version
     }
 
-    /// Short backend name (`scalar`/`batched`/`reference`/`lut`).
+    /// Short backend name
+    /// (`scalar`/`batched`/`reference`/`lut`/`specialized`).
     pub fn backend_name(&self) -> &'static str {
         self.backend.caps().name
     }

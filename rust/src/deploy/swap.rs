@@ -21,6 +21,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::backend::SpecializedProgram;
 use crate::bnn::BnnModel;
 use crate::compiler::CompiledModel;
 use crate::telemetry::Counter;
@@ -60,12 +61,30 @@ impl<T> SwapCell<T> {
 }
 
 /// Everything a backend needs to serve one published model: the
-/// compiled pipeline program and the source weights (the reference
-/// backend replays the forward pass from them). Swapped as one unit so
-/// program and weights can never skew.
+/// compiled pipeline program, the source weights (the reference
+/// backend replays the forward pass from them), and the deploy-time
+/// specialization (DESIGN.md §15). Swapped as one unit so program,
+/// weights, and specialized kernels can never skew.
 pub struct ModelArtifact {
     pub model: Arc<BnnModel>,
     pub compiled: Arc<CompiledModel>,
+    /// Pre-built specializing-codegen program, shared by every session
+    /// and shard worker serving this artifact. Built here — publish
+    /// time, off the hot path — so a hot-swap or a runtime backend
+    /// switch to `specialized` never compiles on a serving thread.
+    /// `None` when the program cannot be specialized (keyed tables).
+    pub specialized: Option<Arc<SpecializedProgram>>,
+}
+
+impl ModelArtifact {
+    /// Bundle a compiled model for publication, pre-specializing it.
+    /// Keyed programs simply skip specialization (`specialized: None`);
+    /// the backend selection path reports the error if such a
+    /// deployment asks for the specialized backend.
+    pub fn new(model: Arc<BnnModel>, compiled: Arc<CompiledModel>) -> Self {
+        let specialized = SpecializedProgram::build(&compiled).ok().map(Arc::new);
+        Self { model, compiled, specialized }
+    }
 }
 
 /// A named publication slot: the unit of hot-swap. One per model in an

@@ -12,9 +12,9 @@
 //! n2net compile [--in-bits N] [--layers 64,32] [--native-popcnt]
 //!               [--schedule] [--p4 FILE] [--seed S]
 //! n2net run     [--packets N] [--workers W] [--seed S] [--artifacts DIR]
-//!               [--backend scalar|batched|reference|lut] [--extract F]
+//!               [--backend scalar|batched|reference|lut|specialized] [--extract F]
 //! n2net serve   [--packets N] [--workers W] [--router flow|rr]
-//!               [--backend scalar|batched|reference|lut] [--batch-size B]
+//!               [--backend scalar|batched|reference|lut|specialized] [--batch-size B]
 //!               [--models a.json,b.json] [--extract F]
 //!               [--shards S] [--scenario <name>] [--help]
 //!               [--adaptive [--policy FILE] [--window N]
@@ -22,7 +22,7 @@
 //! n2net autopilot [--sequence name:count,...] [--window N] [--shards S]
 //!               [--policy FILE] [--seed S] [--help]
 //! n2net swap    [--packets N] [--swaps K] [--seed S]
-//!               [--backend scalar|batched|reference]
+//!               [--backend scalar|batched|reference|specialized]
 //! n2net selftest [--artifacts DIR]
 //! ```
 //!
@@ -380,7 +380,7 @@ fn serve_help() -> String {
          \x20 --packets N           trace length (default 100000)\n\
          \x20 --workers W           engine workers\n\
          \x20 --router flow|rr      packet -> worker routing\n\
-         \x20 --backend scalar|batched|reference|lut\n\
+         \x20 --backend scalar|batched|reference|lut|specialized\n\
          \x20 --batch-size B        worker batch bound\n\
          \x20 --models a.json,b.json  several entries -> ONE keyed-table program\n\
          \x20 --extract F           src-ip|dst-ip|payload|payload@N|field@N\n\
@@ -889,7 +889,7 @@ fn autopilot_help() -> String {
          \x20 --shards S            serving shards (default 2)\n\
          \x20 --policy FILE         policy rules (default: swap \"attack\" on\n\
          \x20                       ddos-ramp, alert on overload/drift/imbalance)\n\
-         \x20 --backend scalar|batched|reference\n\
+         \x20 --backend scalar|batched|reference|specialized\n\
          \x20 --artifacts DIR       trained weights (falls back to a crafted\n\
          \x20                       subnet classifier so the loop runs anywhere)\n\
          \x20 --seed S              trace seed",

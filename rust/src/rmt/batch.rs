@@ -47,6 +47,24 @@ impl PhvBatch {
         }
     }
 
+    /// All-zero batch whose column slab carries `extra` scratch
+    /// columns beyond the PHV containers — the specialized backend's
+    /// register file (IR temps live above the real containers).
+    ///
+    /// Scratch columns are not containers: [`Self::lane_phv`] and
+    /// [`Self::write`] remain valid only for ids below
+    /// `config.n_containers()`, and [`Self::mask_lane`] zeroes the
+    /// scratch columns along with the rest.
+    pub fn zeroed_with_scratch(config: &PhvConfig, n_lanes: usize, extra: usize) -> Self {
+        let n_containers = config.n_containers() + extra;
+        Self {
+            n_lanes,
+            n_containers,
+            cols: vec![0; n_containers * n_lanes],
+            ok: vec![true; n_lanes],
+        }
+    }
+
     /// Resize + clear in place (reuses the allocations across batches).
     pub fn reset(&mut self, n_lanes: usize) {
         self.n_lanes = n_lanes;

@@ -1,0 +1,340 @@
+//! IR / pass-pipeline / specialized-backend properties (PR 6
+//! acceptance):
+//!
+//! I1. Lowering a compiled program to straight-line IR is bit-exact
+//!     with the scalar pipeline on the output containers, for ANY
+//!     valid model, chip, and input — including weights-as-immediates
+//!     and weights-as-action-data programs.
+//! I2. The optimization pipeline (pack, popcount strength reduction,
+//!     DCE) preserves every `live_out` register for ANY register
+//!     state, on the host pipeline and the chip-faithful pipeline.
+//! I3. Every pass is idempotent: a second pipeline run changes
+//!     nothing and reports no changes.
+//! I4. The specialized backend is bit-exact with the reference
+//!     backend through real deployment sessions, malformed frames
+//!     included.
+//! I5. Under concurrent hot-swap, specialized predictions never tear:
+//!     every output matches the old or the new model exactly.
+//! I6. Keyed (multi-model) deployments reject the specialized backend
+//!     with an enumerated error instead of serving wrong weights.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use n2net::backend::{out_mask, BackendKind};
+use n2net::bnn::{self, BnnModel, PackedBits};
+use n2net::compiler::ir::IrProgram;
+use n2net::compiler::{passes, Compiler, CompilerOptions, InputEncoding};
+use n2net::deploy::{Deployment, FieldExtractor};
+use n2net::rmt::{ChipConfig, Pipeline};
+use n2net::util::prop::{self, pow2_in};
+use n2net::util::rng::Rng;
+
+/// Raw little-endian activation frame (PayloadLe { offset: 0 }).
+fn frame_for(x: &PackedBits) -> Vec<u8> {
+    let mut pkt = Vec::with_capacity(x.words().len() * 4);
+    for w in x.words() {
+        pkt.extend_from_slice(&w.to_le_bytes());
+    }
+    pkt
+}
+
+/// Expected output word of `model` on `x` under the backend trait's
+/// low-output-bits convention.
+fn expect_word(model: &BnnModel, x: &PackedBits, out_bits: usize) -> u32 {
+    let y = bnn::forward(model, x);
+    y.words().first().copied().unwrap_or(0) & out_mask(out_bits.min(32))
+}
+
+/// Random feasible spec, biased small for speed (cf. `prop_batch`).
+fn random_spec(rng: &mut Rng) -> (usize, Vec<usize>) {
+    let in_bits = pow2_in(rng, 16, 256);
+    let n_layers = 1 + rng.gen_range(0, 2);
+    let mut layers = Vec::new();
+    for i in 0..n_layers {
+        if i + 1 == n_layers {
+            layers.push(1 + rng.gen_range(0, 32));
+        } else {
+            layers.push(pow2_in(rng, 16, 64));
+        }
+    }
+    (in_bits, layers)
+}
+
+/// Compile a random model on `chip` and lower it; returns everything
+/// the equivalence checks need.
+fn compile_and_lower(
+    chip: &ChipConfig,
+    rng: &mut Rng,
+) -> Result<(BnnModel, n2net::compiler::CompiledModel, IrProgram), String> {
+    let (in_bits, layers) = random_spec(rng);
+    let seed = rng.next_u64();
+    let model = BnnModel::random(in_bits, &layers, seed);
+    let opts = CompilerOptions {
+        input: InputEncoding::PayloadLe { offset: 0 },
+        weights_as_immediates: rng.gen_bool(0.5),
+        ..Default::default()
+    };
+    let compiled = Compiler::new(chip.clone(), opts)
+        .compile(&model)
+        .map_err(|e| format!("compile {in_bits}b->{layers:?}: {e}"))?;
+    let ir = IrProgram::lower(
+        &compiled.program,
+        &compiled.chip.phv,
+        &compiled.layout.output,
+    )
+    .map_err(|e| format!("lower {in_bits}b->{layers:?} seed {seed:#x}: {e}"))?;
+    Ok((model, compiled, ir))
+}
+
+/// I1: lowered IR ≡ scalar pipeline on the output containers.
+fn check_lowering_equivalence(chip: ChipConfig, rng: &mut Rng) -> Result<(), String> {
+    let (model, compiled, ir) = compile_and_lower(&chip, rng)?;
+    let mut scalar = Pipeline::new(
+        chip.clone(),
+        compiled.program.clone(),
+        compiled.parser.clone(),
+        true,
+    )
+    .map_err(|e| e.to_string())?;
+    for case in 0..4 {
+        let x = PackedBits::random(model.spec.in_bits, rng);
+        let frame = frame_for(&x);
+        let phv = scalar
+            .process_packet(&frame)
+            .map_err(|e| format!("case {case}: scalar: {e}"))?;
+        // Seed the IR register file exactly like the parser seeds the
+        // PHV, then run the straight-line program.
+        let mut regs = vec![0u32; ir.n_regs];
+        for e in &compiled.parser.extracts {
+            let v = e.read_value(&frame).map_err(|e| e.to_string())?;
+            regs[e.dst.index()] = v & compiled.chip.phv.mask(e.dst);
+        }
+        ir.execute(&mut regs);
+        for id in &compiled.layout.output {
+            if regs[id.index()] != phv.read(*id) {
+                return Err(format!(
+                    "case {case}: container {id:?} diverged: ir {:#x} \
+                     != scalar {:#x}",
+                    regs[id.index()],
+                    phv.read(*id)
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn i1_lowered_ir_equals_scalar_stock_chip() {
+    prop::check("ir≡scalar/stock", prop::default_cases(), |rng| {
+        check_lowering_equivalence(ChipConfig::rmt(), rng)
+    });
+}
+
+#[test]
+fn i1_lowered_ir_equals_scalar_native_popcnt() {
+    prop::check("ir≡scalar/native", prop::default_cases(), |rng| {
+        check_lowering_equivalence(ChipConfig::rmt_with_popcnt(), rng)
+    });
+}
+
+/// I2 + I3: the pass pipeline preserves `live_out` for random register
+/// states and is idempotent.
+fn check_pipeline_equivalence(chip: ChipConfig, rng: &mut Rng) -> Result<(), String> {
+    let (_, _, base) = compile_and_lower(&chip, rng)?;
+    let pipelines: [(&str, Vec<Box<dyn passes::Pass>>); 2] = [
+        ("host", passes::host_pipeline()),
+        ("chip", passes::chip_pipeline(&chip)),
+    ];
+    for (which, pipeline) in pipelines {
+        let mut opt = base.clone();
+        passes::run_pipeline(&mut opt, &pipeline);
+        opt.validate().map_err(|e| format!("{which}: invalid after opt: {e}"))?;
+        // I3: second run is a no-op, structurally and by report.
+        let snapshot = opt.clone();
+        let report = passes::run_pipeline(&mut opt, &pipeline);
+        if report.iter().any(|&(_, changed)| changed) {
+            return Err(format!("{which}: pipeline not idempotent: {report:?}"));
+        }
+        if opt != snapshot {
+            return Err(format!("{which}: second run mutated the program"));
+        }
+        // I2: bit-exact on live_out over random register states.
+        for case in 0..4 {
+            let seed: Vec<u32> = (0..base.n_regs).map(|_| rng.next_u32()).collect();
+            let mut r0 = seed.clone();
+            let mut r1 = seed;
+            base.execute(&mut r0);
+            opt.execute(&mut r1);
+            for &out in &base.live_out {
+                if r0[out as usize] != r1[out as usize] {
+                    return Err(format!(
+                        "{which}: case {case}: r{out} diverged: base {:#x} \
+                         != opt {:#x}",
+                        r0[out as usize], r1[out as usize]
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn i2_i3_passes_preserve_live_out_and_are_idempotent_stock() {
+    prop::check("passes≡/stock", prop::default_cases(), |rng| {
+        check_pipeline_equivalence(ChipConfig::rmt(), rng)
+    });
+}
+
+#[test]
+fn i2_i3_passes_preserve_live_out_and_are_idempotent_native() {
+    prop::check("passes≡/native", prop::default_cases(), |rng| {
+        check_pipeline_equivalence(ChipConfig::rmt_with_popcnt(), rng)
+    });
+}
+
+/// I4: specialized ≡ reference through deployment sessions, with
+/// malformed frames mixed in.
+fn check_specialized_serving(rng: &mut Rng) -> Result<(), String> {
+    let (in_bits, layers) = random_spec(rng);
+    let seed = rng.next_u64();
+    let model = BnnModel::random(in_bits, &layers, seed);
+    let deployment = Deployment::builder()
+        .extractor(FieldExtractor::PayloadAt { offset: 0 })
+        .model("m", model.clone())
+        .build()
+        .map_err(|e| format!("deploy {in_bits}b->{layers:?}: {e}"))?;
+    let mut spec = deployment
+        .session_with("m", BackendKind::Specialized)
+        .map_err(|e| format!("open specialized: {e}"))?;
+    let mut reference = deployment
+        .session_with("m", BackendKind::Reference)
+        .map_err(|e| format!("open reference: {e}"))?;
+    if spec.backend_name() != "specialized" {
+        return Err(format!("backend name {:?}", spec.backend_name()));
+    }
+
+    let batch_size = 1 + rng.gen_range(0, 48);
+    let mut frames: Vec<Vec<u8>> = Vec::with_capacity(batch_size);
+    let mut inputs: Vec<Option<PackedBits>> = Vec::with_capacity(batch_size);
+    for _ in 0..batch_size {
+        let x = PackedBits::random(in_bits, rng);
+        let mut frame = frame_for(&x);
+        if rng.gen_range(0, 6) == 0 && !frame.is_empty() {
+            frame.truncate(rng.gen_range(0, frame.len()));
+            inputs.push(None);
+        } else {
+            inputs.push(Some(x));
+        }
+        frames.push(frame);
+    }
+    let refs: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
+    let mut got = Vec::new();
+    let mut want = Vec::new();
+    spec.classify_batch(&refs, &mut got).map_err(|e| e.to_string())?;
+    reference.classify_batch(&refs, &mut want).map_err(|e| e.to_string())?;
+    if got != want {
+        return Err(format!(
+            "specialized != reference ({in_bits}b->{layers:?} seed {seed:#x}): \
+             {got:?} vs {want:?}"
+        ));
+    }
+    let out_bits = *layers.last().unwrap();
+    for (i, input) in inputs.iter().enumerate() {
+        match input {
+            None if got[i] != 0 => {
+                return Err(format!("lane {i}: malformed frame classified {:#x}", got[i]))
+            }
+            Some(x) if got[i] != expect_word(&model, x, out_bits) => {
+                return Err(format!(
+                    "lane {i}: {:#x} != forward {:#x}",
+                    got[i],
+                    expect_word(&model, x, out_bits)
+                ))
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn i4_specialized_equals_reference_in_deployment() {
+    prop::check("specialized≡reference", prop::default_cases(), check_specialized_serving);
+}
+
+/// I5: concurrent hot-swap never tears specialized predictions (the
+/// specialized program is rebuilt from the published artifact at batch
+/// boundaries, exactly like the other backends).
+#[test]
+fn i5_specialized_survives_concurrent_hotswap() {
+    let in_bits = 32usize;
+    let out_neurons = 8usize;
+    let model_a = BnnModel::random(in_bits, &[16, out_neurons], 61);
+    let model_b = BnnModel::random(in_bits, &[16, out_neurons], 62);
+    let deployment = Deployment::builder()
+        .extractor(FieldExtractor::PayloadAt { offset: 0 })
+        .backend(BackendKind::Specialized)
+        .model("m", model_a.clone())
+        .build()
+        .unwrap();
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let reader = scope.spawn(|| {
+            let mut session = deployment.session("m").unwrap();
+            assert_eq!(session.backend_name(), "specialized");
+            let mut rng = Rng::seed_from_u64(63);
+            let mut last_version = 0u64;
+            for batch in 0..10 {
+                let inputs: Vec<PackedBits> =
+                    (0..32).map(|_| PackedBits::random(in_bits, &mut rng)).collect();
+                let frames: Vec<Vec<u8>> = inputs.iter().map(frame_for).collect();
+                let refs: Vec<&[u8]> = frames.iter().map(|f| f.as_slice()).collect();
+                let mut out = Vec::new();
+                let version = session.classify_batch(&refs, &mut out).unwrap();
+                assert!(version >= last_version, "version monotone");
+                last_version = version;
+                for (i, x) in inputs.iter().enumerate() {
+                    let ea = expect_word(&model_a, x, out_neurons);
+                    let eb = expect_word(&model_b, x, out_neurons);
+                    assert!(
+                        out[i] == ea || out[i] == eb,
+                        "torn read in batch {batch} lane {i}: got {:#x}, \
+                         old {ea:#x}, new {eb:#x}",
+                        out[i]
+                    );
+                }
+                std::thread::yield_now();
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        let mut k = 0usize;
+        while !stop.load(Ordering::Relaxed) && k < 64 {
+            let next = if k % 2 == 0 { &model_b } else { &model_a };
+            deployment.swap_model("m", next.clone()).unwrap();
+            k += 1;
+            std::thread::yield_now();
+        }
+        reader.join().expect("reader panicked");
+    });
+}
+
+/// I6: keyed deployments reject the specialized backend up front.
+#[test]
+fn i6_keyed_deployment_rejects_specialized() {
+    let deployment = Deployment::builder()
+        .extractor(FieldExtractor::PayloadAt { offset: 4 })
+        .keyed(0)
+        .model("a", BnnModel::random(32, &[16, 1], 91))
+        .model("b", BnnModel::random(32, &[16, 1], 92))
+        .build()
+        .unwrap();
+    let err = match deployment.keyed_session_with(BackendKind::Specialized) {
+        Ok(_) => panic!("specialized must be rejected on keyed deployments"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("isolated deployment"), "{err}");
+    assert!(err.contains("scalar|batched"), "{err}");
+}
