@@ -29,7 +29,7 @@ fn main() {
         "{:>10} {:>10} {:>9} {:>14} {:>16}",
         "act bits", "parallel", "elements", "ASIC Mpps", "ASIC neurons/s"
     );
-    for r in throughput_table(&chip) {
+    for r in throughput_table(&chip).unwrap() {
         println!(
             "{:>10} {:>10} {:>9} {:>14.0} {:>16}",
             r.activation_bits,
@@ -41,6 +41,7 @@ fn main() {
     }
     // Paper headline: 960 M neurons/s at 2048 b activations.
     let r2048 = throughput_table(&chip)
+        .unwrap()
         .into_iter()
         .find(|r| r.activation_bits == 2048)
         .unwrap();

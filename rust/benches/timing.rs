@@ -1,0 +1,93 @@
+//! Timing bench: modeled ASIC latency/throughput for the synthetic
+//! 32 -> [64, 32] model (the `n2net::timing` cycle model, DESIGN.md
+//! §16) alongside the *measured* host simulator packet rate for the
+//! same compiled program on each inference backend. The ratio is the
+//! headline of the modeled-vs-host comparison: how far the software
+//! simulator sits from the line-rate ASIC it models.
+//!
+//! Appends machine-readable records to `BENCH_timing.json`.
+//!
+//! `cargo bench --bench timing`
+
+use n2net::analysis::throughput::{render_modeled_vs_host, ModeledVsHost};
+use n2net::backend::BackendKind;
+use n2net::bnn::{BnnModel, PackedBits};
+use n2net::deploy::{Deployment, FieldExtractor};
+use n2net::rmt::ChipConfig;
+use n2net::timing::{analyze_compiled, ChipTiming};
+use n2net::util::bench::{
+    default_bencher, write_bench_json, BenchRecord, Report,
+};
+use n2net::util::rng::Rng;
+
+const BENCH_JSON: &str = "BENCH_timing.json";
+const BATCH: usize = 256;
+
+fn main() {
+    let chip = ChipConfig::rmt();
+    let model = BnnModel::random(32, &[64, 32], 11);
+    let deployment = Deployment::builder()
+        .chip(chip.clone())
+        .extractor(FieldExtractor::PayloadAt { offset: 0 })
+        .model("timing", model)
+        .build()
+        .unwrap();
+
+    // Modeled side: cycle-accurate pipeline timing for the program the
+    // deployment actually compiled.
+    let compiled = deployment.compiled("timing").unwrap();
+    let timing = ChipTiming::for_chip(&compiled.chip);
+    let report = analyze_compiled(&compiled, &timing).unwrap();
+    println!("# timing — modeled ASIC vs measured host");
+    print!("{}", report.render());
+
+    // Measured side: host packet rate per backend over the same
+    // deployment, on a pre-built packet ring (construction unmeasured).
+    let mut rng = Rng::seed_from_u64(4);
+    let packets: Vec<Vec<u8>> = (0..BATCH)
+        .map(|_| {
+            let x = PackedBits::random(32, &mut rng);
+            let mut pkt = Vec::new();
+            for w in x.words() {
+                pkt.extend_from_slice(&w.to_le_bytes());
+            }
+            pkt
+        })
+        .collect();
+    let refs: Vec<&[u8]> = packets.iter().map(|p| p.as_slice()).collect();
+
+    let b = default_bencher();
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut rows: Vec<ModeledVsHost> = Vec::new();
+    let mut bench_report = Report::new("host packet rate (measured, per backend)");
+    bench_report.header();
+    for kind in [
+        BackendKind::Scalar,
+        BackendKind::Batched,
+        BackendKind::Reference,
+        BackendKind::Specialized,
+    ] {
+        let name = kind.name();
+        let mut session = deployment.session_with("timing", kind).unwrap();
+        let mut out = Vec::new();
+        let stats = b.run(&format!("{name} (B={BATCH})"), BATCH as f64, || {
+            session.classify_batch(&refs, &mut out).unwrap();
+            std::hint::black_box(out.len());
+        });
+        rows.push(ModeledVsHost {
+            case: name.to_string(),
+            host_pps: stats.items_per_sec(),
+            modeled_pps: report.modeled_pps,
+        });
+        records.push(BenchRecord::from_stats("timing", name, BATCH, &stats));
+        bench_report.add(stats);
+    }
+
+    println!();
+    print!("{}", render_modeled_vs_host(&rows));
+
+    match write_bench_json(BENCH_JSON, "timing", &records) {
+        Ok(()) => println!("\nwrote {} records to {BENCH_JSON}", records.len()),
+        Err(e) => eprintln!("warning: could not write {BENCH_JSON}: {e}"),
+    }
+}

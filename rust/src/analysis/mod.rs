@@ -5,4 +5,6 @@ pub mod area;
 pub mod throughput;
 
 pub use area::{area_report, AreaModel, AreaReport};
-pub use throughput::{throughput_table, ThroughputRow};
+pub use throughput::{
+    render_modeled_vs_host, throughput_table, ModeledVsHost, ThroughputRow,
+};

@@ -7,11 +7,20 @@
 //!   throughput because of parallel processing."
 //! * the two-layer use case: "960 million two-layers-BNNs per second,
 //!   using 32b activations ... and two layers of 64 and 32 neurons."
+//!
+//! The modeled side of every row comes from the checked recirculation
+//! accounting in [`crate::timing`] — a degenerate zero-element layer is
+//! an enumerated error, never a silent full-line-rate row. The
+//! modeled-vs-host comparison ([`ModeledVsHost`]) puts the ASIC cycle
+//! model next to measured host simulator rates (fed by `n2net timing`
+//! and `benches/timing.rs`).
 
 use crate::bnn::BnnSpec;
 use crate::compiler::layout::max_parallel_neurons;
 use crate::compiler::{elements_for_layer, Compiler, CompilerOptions};
+use crate::error::Result;
 use crate::rmt::ChipConfig;
+use crate::timing::recirculation_passes;
 
 /// One row of the throughput table (per activation width).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -25,29 +34,31 @@ pub struct ThroughputRow {
     pub neurons_per_sec: f64,
 }
 
-/// Throughput across Table 1's activation widths.
-pub fn throughput_table(chip: &ChipConfig) -> Vec<ThroughputRow> {
+/// Throughput across Table 1's activation widths. Errors if any width
+/// compiles to a degenerate zero-element layer (or the chip has no
+/// stages) instead of reporting a vacuous full-line-rate row.
+pub fn throughput_table(chip: &ChipConfig) -> Result<Vec<ThroughputRow>> {
     [16usize, 32, 64, 128, 256, 512, 1024, 2048]
         .into_iter()
         .map(|n| {
             let parallel = max_parallel_neurons(chip, n);
             let elements = elements_for_layer(n, chip);
-            let passes = elements.div_ceil(chip.n_elements).max(1);
+            let passes = recirculation_passes(elements, chip)?;
             let pps = chip.line_rate_pps() / passes as f64;
-            ThroughputRow {
+            Ok(ThroughputRow {
                 activation_bits: n,
                 parallel_neurons: parallel,
                 elements,
                 pps,
                 neurons_per_sec: pps * parallel as f64,
-            }
+            })
         })
         .collect()
 }
 
 /// Modeled end-to-end inference rate for a whole BNN (validates E4 via
 /// an actual compile — element counts come from the emitted program).
-pub fn model_inference_rate(spec: &BnnSpec, chip: &ChipConfig) -> crate::error::Result<f64> {
+pub fn model_inference_rate(spec: &BnnSpec, chip: &ChipConfig) -> Result<f64> {
     let model = crate::bnn::BnnModel::random(spec.in_bits, &spec.layer_sizes, 0);
     let compiled =
         Compiler::new(chip.clone(), CompilerOptions::default()).compile(&model)?;
@@ -55,7 +66,7 @@ pub fn model_inference_rate(spec: &BnnSpec, chip: &ChipConfig) -> crate::error::
 }
 
 /// Render the throughput table.
-pub fn render(chip: &ChipConfig) -> String {
+pub fn render(chip: &ChipConfig) -> Result<String> {
     use std::fmt::Write as _;
     let mut s = String::new();
     let _ = writeln!(
@@ -63,7 +74,7 @@ pub fn render(chip: &ChipConfig) -> String {
         "{:>10} {:>10} {:>9} {:>12} {:>16}",
         "act bits", "parallel", "elements", "Mpps", "Gneurons/s"
     );
-    for r in throughput_table(chip) {
+    for r in throughput_table(chip)? {
         let _ = writeln!(
             s,
             "{:>10} {:>10} {:>9} {:>12.0} {:>16.2}",
@@ -74,17 +85,65 @@ pub fn render(chip: &ChipConfig) -> String {
             r.neurons_per_sec / 1e9
         );
     }
+    Ok(s)
+}
+
+/// One modeled-vs-host comparison row: the cycle model's packet rate
+/// for a program next to a measured host-simulator rate for the same
+/// program (one row per backend / configuration).
+#[derive(Clone, Debug)]
+pub struct ModeledVsHost {
+    /// What was measured (backend name, configuration).
+    pub case: String,
+    /// Measured host simulator packets/second.
+    pub host_pps: f64,
+    /// Modeled ASIC packets/second ([`crate::timing`]).
+    pub modeled_pps: f64,
+}
+
+impl ModeledVsHost {
+    /// How many times faster the modeled ASIC is than the host run
+    /// (0.0 when the host rate is degenerate).
+    pub fn speedup(&self) -> f64 {
+        if self.host_pps.is_finite() && self.host_pps > 0.0 {
+            self.modeled_pps / self.host_pps
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Render a modeled-vs-host comparison table.
+pub fn render_modeled_vs_host(rows: &[ModeledVsHost]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<28} {:>14} {:>14} {:>10}",
+        "case", "host Mpps", "ASIC Mpps", "ASIC/host"
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{:<28} {:>14.2} {:>14.0} {:>9.0}x",
+            r.case,
+            r.host_pps / 1e6,
+            r.modeled_pps / 1e6,
+            r.speedup()
+        );
+    }
     s
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Error;
 
     #[test]
     fn paper_headline_2048() {
         // E3: 960 M neurons/s at 2048 b.
-        let rows = throughput_table(&ChipConfig::rmt());
+        let rows = throughput_table(&ChipConfig::rmt()).unwrap();
         let r2048 = rows.iter().find(|r| r.activation_bits == 2048).unwrap();
         assert_eq!(r2048.pps, 960e6);
         assert_eq!(r2048.neurons_per_sec, 960e6);
@@ -92,7 +151,7 @@ mod tests {
 
     #[test]
     fn smaller_activations_scale_up() {
-        let rows = throughput_table(&ChipConfig::rmt());
+        let rows = throughput_table(&ChipConfig::rmt()).unwrap();
         let r32 = rows.iter().find(|r| r.activation_bits == 32).unwrap();
         assert_eq!(r32.parallel_neurons, 64);
         assert_eq!(r32.neurons_per_sec, 960e6 * 64.0); // 61.4 G/s
@@ -116,5 +175,38 @@ mod tests {
         let spec = BnnSpec::new(32, &[64, 32, 32]).unwrap();
         let rate = model_inference_rate(&spec, &ChipConfig::rmt()).unwrap();
         assert_eq!(rate, 480e6);
+    }
+
+    #[test]
+    fn degenerate_zero_stage_chip_is_an_error_not_line_rate() {
+        // Previously `elements.div_ceil(n_elements).max(1)` would panic
+        // or silently report full line rate for degenerate inputs; the
+        // checked accounting turns both into enumerated errors.
+        let dead = ChipConfig { n_elements: 0, ..ChipConfig::rmt() };
+        assert!(matches!(
+            recirculation_passes(5, &dead),
+            Err(Error::ResourceExhausted(_))
+        ));
+        assert!(matches!(
+            recirculation_passes(0, &ChipConfig::rmt()),
+            Err(Error::InvalidModel(_))
+        ));
+    }
+
+    #[test]
+    fn modeled_vs_host_rows_render_with_guarded_speedup() {
+        let rows = vec![
+            ModeledVsHost {
+                case: "batched".into(),
+                host_pps: 4.8e6,
+                modeled_pps: 960e6,
+            },
+            ModeledVsHost { case: "idle".into(), host_pps: 0.0, modeled_pps: 960e6 },
+        ];
+        assert!((rows[0].speedup() - 200.0).abs() < 1e-9);
+        assert_eq!(rows[1].speedup(), 0.0, "degenerate host rate guarded");
+        let s = render_modeled_vs_host(&rows);
+        assert!(s.contains("ASIC/host"), "{s}");
+        assert!(s.contains("batched"), "{s}");
     }
 }

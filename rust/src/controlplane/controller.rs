@@ -249,12 +249,20 @@ impl Controller {
 
     /// The default detector set.
     pub fn default_detectors() -> Vec<Box<dyn Detector>> {
+        Self::detectors_with_latency(LatencySloDetector::default())
+    }
+
+    /// The default detector set with a custom latency-SLO detector —
+    /// the hook `--modeled-slo` uses to swap the wall-clock detector
+    /// for one whose thresholds come from ASIC cycles
+    /// ([`LatencySloDetector::modeled`]).
+    pub fn detectors_with_latency(latency: LatencySloDetector) -> Vec<Box<dyn Detector>> {
         vec![
             Box::new(DdosRampDetector::default()),
             Box::new(DriftDetector::default()),
             Box::new(OverloadDetector::default()),
             Box::new(ImbalanceDetector::default()),
-            Box::new(LatencySloDetector::default()),
+            Box::new(latency),
         ]
     }
 

@@ -10,6 +10,7 @@
 //! what turns that stream into at-most-one action per episode.
 
 use crate::telemetry::CLASS_BUCKETS;
+use crate::timing::ModeledSlo;
 
 use super::signal::SignalWindow;
 
@@ -283,20 +284,43 @@ impl Detector for ImbalanceDetector {
     }
 }
 
-/// Latency SLO: the window's batch-latency percentiles
-/// ([`SignalWindow::latency_p50_ns`] / `latency_p99_ns`, read from the
-/// tier's log₂ bucket diffs) against explicit limits. Severity is the
-/// worst exceed *fraction* (0.5 = 50% over its limit), so policies can
-/// gate soft breaches with `min-severity`. Windows with too few batches
-/// are skipped — a one-batch window's p99 is noise, and an idle window
-/// reports 0.0 which would read as a vacuous pass anyway.
+/// Where the latency-SLO detector's per-window latency signal comes
+/// from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencySource {
+    /// Host wall-clock batch-latency percentiles
+    /// ([`SignalWindow::latency_p50_ns`] / `latency_p99_ns`, read from
+    /// the tier's log₂ bucket diffs). Subject to host timing jitter.
+    Host,
+    /// Modeled ASIC latency ([`crate::timing`], DESIGN.md §16): the
+    /// window's p50 is the modeled line-rate drain of the *mean*-loaded
+    /// shard, the p99 that of the *max*-loaded shard. Reads only
+    /// deterministic packet counts, so the same trace produces the same
+    /// detections on any host.
+    Modeled(ModeledSlo),
+}
+
+/// Latency SLO: a per-window latency estimate against explicit limits.
+/// Where the estimate comes from is the [`LatencySource`]: host
+/// wall-clock percentiles (default), or the cycle-accurate model.
+/// Severity is the worst exceed *fraction* (0.5 = 50% over its limit),
+/// so policies can gate soft breaches with `min-severity`. Windows with
+/// too few samples are skipped — in host mode a one-batch window's p99
+/// is noise (and batch boundaries themselves are wall-clock-dependent,
+/// which is why modeled mode gates on *packets* instead), and an idle
+/// window reports 0.0 which would read as a vacuous pass anyway.
 pub struct LatencySloDetector {
     /// p50 limit in nanoseconds.
     pub p50_limit_ns: f64,
     /// p99 limit in nanoseconds.
     pub p99_limit_ns: f64,
-    /// Ignore windows with fewer executed batches than this.
+    /// Host mode: ignore windows with fewer executed batches than this.
     pub min_batches: u64,
+    /// Modeled mode: ignore windows with fewer packets than this
+    /// (batch counts are host-jitter-dependent, packet counts are not).
+    pub min_packets: u64,
+    /// Latency signal source.
+    pub source: LatencySource,
 }
 
 impl Default for LatencySloDetector {
@@ -305,6 +329,28 @@ impl Default for LatencySloDetector {
             p50_limit_ns: 10_000_000.0, // 10ms
             p99_limit_ns: 50_000_000.0, // 50ms
             min_batches: 4,
+            min_packets: 64,
+            source: LatencySource::Host,
+        }
+    }
+}
+
+impl LatencySloDetector {
+    /// Modeled-latency mode: thresholds derived from ASIC cycles, not
+    /// wall-clock defaults. `nominal_shard_packets` is the packet
+    /// budget one shard is expected to drain per window (window size /
+    /// shards for an evenly loaded tier); both limits are the modeled
+    /// drain of `headroom ×` that budget, so a shard breaches exactly
+    /// when its window load exceeds `headroom × nominal` — the p99 side
+    /// (max-loaded shard) fires first under skew, the p50 side (mean
+    /// load) under global overload.
+    pub fn modeled(slo: ModeledSlo, nominal_shard_packets: u64, headroom: f64) -> Self {
+        let limit = slo.limit_ns(nominal_shard_packets, headroom).max(1.0);
+        Self {
+            p50_limit_ns: limit,
+            p99_limit_ns: limit,
+            source: LatencySource::Modeled(slo),
+            ..Self::default()
         }
     }
 }
@@ -315,11 +361,26 @@ impl Detector for LatencySloDetector {
     }
 
     fn observe(&mut self, w: &SignalWindow) -> Option<Detection> {
-        if w.batches < self.min_batches {
-            return None;
-        }
-        let p50_ratio = w.latency_p50_ns / self.p50_limit_ns.max(1.0);
-        let p99_ratio = w.latency_p99_ns / self.p99_limit_ns.max(1.0);
+        let (p50, p99, source) = match &self.source {
+            LatencySource::Host => {
+                if w.batches < self.min_batches {
+                    return None;
+                }
+                (w.latency_p50_ns, w.latency_p99_ns, "host")
+            }
+            LatencySource::Modeled(slo) => {
+                if w.packets < self.min_packets {
+                    return None;
+                }
+                let shards = w.per_shard_packets.len().max(1) as f64;
+                let mean = w.packets as f64 / shards;
+                let max =
+                    w.per_shard_packets.iter().copied().max().unwrap_or(w.packets);
+                (slo.drain_ns(mean), slo.drain_ns(max as f64), "modeled")
+            }
+        };
+        let p50_ratio = p50 / self.p50_limit_ns.max(1.0);
+        let p99_ratio = p99 / self.p99_limit_ns.max(1.0);
         let worst = p50_ratio.max(p99_ratio);
         if worst >= 1.0 {
             Some(Detection {
@@ -327,12 +388,13 @@ impl Detector for LatencySloDetector {
                 severity: worst - 1.0,
                 window: w.index,
                 detail: format!(
-                    "p50 {:.0}ns (limit {:.0}) p99 {:.0}ns (limit {:.0}) over \
-                     {} batches",
-                    w.latency_p50_ns,
+                    "{source} p50 {:.0}ns (limit {:.0}) p99 {:.0}ns (limit \
+                     {:.0}) over {} packets / {} batches",
+                    p50,
                     self.p50_limit_ns,
-                    w.latency_p99_ns,
+                    p99,
                     self.p99_limit_ns,
+                    w.packets,
                     w.batches
                 ),
             })
@@ -450,6 +512,7 @@ mod tests {
             p50_limit_ns: 1_000.0,
             p99_limit_ns: 10_000.0,
             min_batches: 4,
+            ..LatencySloDetector::default()
         };
         // Within limits: quiet.
         let mut w = window(0, vec![400, 400], 0);
@@ -473,5 +536,64 @@ mod tests {
         tiny.latency_p99_ns = 1e12;
         assert!(d.observe(&tiny).is_none());
         assert!(d.observe(&window(2, vec![0, 0], 0)).is_none());
+    }
+
+    fn modeled_slo() -> ModeledSlo {
+        // A 30-stage 1-pass program on the stock chip.
+        ModeledSlo { fill_cycles: 410, slots_per_packet: 1, clock_hz: 960e6 }
+    }
+
+    #[test]
+    fn modeled_slo_fires_on_shard_skew_and_ignores_host_latency() {
+        // Nominal 256 packets/shard/window, 1.5× headroom: a shard
+        // breaches exactly when its window load exceeds 384 packets.
+        let mut d = LatencySloDetector::modeled(modeled_slo(), 256, 1.5);
+        assert_eq!(d.kind(), SignalKind::LatencySlo);
+        // Balanced window at nominal load: quiet, no matter how absurd
+        // the HOST percentiles are — modeled mode never reads them.
+        let mut w = window(0, vec![256, 256], 0);
+        w.latency_p50_ns = 1e12;
+        w.latency_p99_ns = 1e12;
+        assert!(d.observe(&w).is_none());
+        // Skewed window: the max-loaded shard is past headroom ×
+        // nominal, so the modeled p99 breaches — with host percentiles
+        // reading ZERO.
+        let mut skew = window(1, vec![450, 62], 0);
+        skew.latency_p50_ns = 0.0;
+        skew.latency_p99_ns = 0.0;
+        let det = d.observe(&skew).expect("skew past modeled limit");
+        assert_eq!(det.kind, SignalKind::LatencySlo);
+        assert!(det.detail.contains("modeled"), "{}", det.detail);
+        assert!(det.severity > 0.0);
+        // Tiny windows are skipped on the PACKET gate (batch counts are
+        // host-jitter-dependent; modeled mode must not read them).
+        let mut tiny = window(2, vec![40, 2], 0);
+        tiny.batches = 0;
+        assert!(d.observe(&tiny).is_none());
+    }
+
+    #[test]
+    fn modeled_slo_detection_is_a_pure_function_of_packet_counts() {
+        // Identical per-shard packet counts with wildly different host
+        // latency/batch fields produce identical detections — the
+        // determinism the sim acceptance relies on.
+        let loads: [Vec<u64>; 4] =
+            [vec![256, 256], vec![500, 12], vec![64, 64], vec![700, 700]];
+        let run = |jitter: u64| -> Vec<Option<f64>> {
+            let mut d = LatencySloDetector::modeled(modeled_slo(), 256, 1.5);
+            loads
+                .iter()
+                .enumerate()
+                .map(|(i, l)| {
+                    let mut w = window(i as u64, l.clone(), 0);
+                    w.batches = jitter + i as u64;
+                    w.latency_p50_ns = (jitter as f64) * 1e7;
+                    w.latency_p99_ns = (jitter as f64) * 1e9;
+                    d.observe(&w).map(|det| det.severity)
+                })
+                .collect()
+        };
+        assert_eq!(run(0), run(17));
+        assert_eq!(run(0), run(9999));
     }
 }

@@ -30,7 +30,10 @@
 //!   Collection is pull-based and adds zero per-packet work.
 //! * [`detect`] — pluggable [`Detector`]s over consecutive windows:
 //!   ddos-ramp (attacker-share slope), drift (class-mix distance),
-//!   overload (pressure rate), imbalance (shard skew).
+//!   overload (pressure rate), imbalance (shard skew), latency-slo
+//!   (host wall-clock percentiles, or — in [`LatencySource::Modeled`]
+//!   mode — latency *derived* from ASIC cycles via [`crate::timing`],
+//!   so detections are identical on any host).
 //! * [`policy`] — declarative [`Policy`] rules (condition → action)
 //!   evaluated by a [`PolicyEngine`] with hysteresis and cooldown, so
 //!   a sustained condition acts once and the loop never flaps.
@@ -64,7 +67,8 @@ pub mod sim;
 pub use controller::{ControlEvent, Controller, ModelBank, Outcome, TickReport};
 pub use detect::{
     DdosRampDetector, Detection, Detector, DriftDetector, ImbalanceDetector,
-    LatencySloDetector, OverloadDetector, SignalKind, SIGNAL_KIND_NAMES,
+    LatencySloDetector, LatencySource, OverloadDetector, SignalKind,
+    SIGNAL_KIND_NAMES,
 };
 pub use live::{
     spawn as spawn_live, Clock, ClockDriver, LiveConfig, LiveHandle, ManualClock,

@@ -24,6 +24,7 @@ use crate::error::Result;
 use crate::net::{ScenarioSequence, SegmentSpan, SequenceTrace};
 
 use super::controller::{Controller, ModelBank, Outcome, TickReport};
+use super::detect::Detector;
 use super::policy::Policy;
 
 /// Harness configuration. `window_packets` should stay at or below the
@@ -188,10 +189,31 @@ impl Sim {
         policy: Policy,
         cfg: SimConfig,
     ) -> Result<Self> {
+        Self::with_detectors(
+            deployment,
+            model,
+            bank,
+            policy,
+            cfg,
+            Controller::default_detectors(),
+        )
+    }
+
+    /// Same, with a custom detector set (e.g. the modeled-latency SLO
+    /// detector from [`crate::timing`], so the sim's detections are
+    /// independent of host timing jitter).
+    pub fn with_detectors(
+        deployment: &Arc<Deployment>,
+        model: &str,
+        bank: ModelBank,
+        policy: Policy,
+        cfg: SimConfig,
+        detectors: Vec<Box<dyn Detector>>,
+    ) -> Result<Self> {
         let engine = Arc::new(deployment.sharded_engine(model, cfg.n_shards)?);
         let handle = SwapHandle::new(deployment, model)?;
-        let controller =
-            Controller::new(handle, bank, policy)?.with_tier(Arc::clone(&engine))?;
+        let controller = Controller::with_detectors(handle, bank, policy, detectors)?
+            .with_tier(Arc::clone(&engine))?;
         Ok(Self { engine, controller, cfg })
     }
 

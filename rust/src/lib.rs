@@ -52,6 +52,12 @@
 //!   ([`controlplane::Sim`]) — condition changes in the traffic
 //!   hot-swap the served model through [`deploy`] without touching the
 //!   hot path.
+//! * [`timing`] — cycle-accurate pipeline timing: parser → stages →
+//!   deparser cycle accounting with a recirculation penalty per extra
+//!   pass ([`timing::ChipTiming`]), per-stage occupancy reports from a
+//!   compiled program ([`timing::TimingReport`]), and the
+//!   modeled-latency SLO substrate ([`timing::ModeledSlo`]) the
+//!   latency detector can run on instead of host wall-clock.
 //! * [`analysis`] — throughput / chip-area models behind the paper's
 //!   §2-Evaluation and §3-Challenges numbers.
 //!
@@ -88,6 +94,7 @@ pub mod net;
 pub mod rmt;
 pub mod runtime;
 pub mod telemetry;
+pub mod timing;
 pub mod util;
 
 pub use error::{Error, Result};

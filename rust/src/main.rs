@@ -11,6 +11,8 @@
 //! n2net report table1|throughput|popcnt-ablation|area|usecase|memory|all
 //! n2net compile [--in-bits N] [--layers 64,32] [--native-popcnt]
 //!               [--schedule] [--p4 FILE] [--seed S]
+//! n2net timing  [--in-bits N] [--layers 64,32] [--native-popcnt]
+//!               [--seed S] [--packets N] [--help]
 //! n2net run     [--packets N] [--workers W] [--seed S] [--artifacts DIR]
 //!               [--backend scalar|batched|reference|lut|specialized] [--extract F]
 //! n2net serve   [--packets N] [--workers W] [--router flow|rr]
@@ -18,9 +20,9 @@
 //!               [--models a.json,b.json] [--extract F]
 //!               [--shards S] [--scenario <name>] [--help]
 //!               [--adaptive [--policy FILE] [--window N]
-//!                [--sequence name:count,...] [--live]]
+//!                [--sequence name:count,...] [--live] [--modeled-slo]]
 //! n2net autopilot [--sequence name:count,...] [--window N] [--shards S]
-//!               [--policy FILE] [--seed S] [--help]
+//!               [--policy FILE] [--seed S] [--modeled-slo] [--help]
 //! n2net swap    [--packets N] [--swaps K] [--seed S]
 //!               [--backend scalar|batched|reference|specialized]
 //! n2net selftest [--artifacts DIR]
@@ -39,8 +41,9 @@ use n2net::baseline::LutClassifier;
 use n2net::bnn::{self, BnnModel, PackedBits};
 use n2net::compiler::{p4gen, render_table1, Compiler, CompilerOptions};
 use n2net::controlplane::{
-    prefix_classifier, sim_ddos, spawn_live, ControlEvent, Controller, LiveConfig,
-    ManualClock, ModelBank, Outcome, Policy, Sim, SimConfig,
+    prefix_classifier, sim_ddos, spawn_live, ControlEvent, Controller, Detector,
+    LatencySloDetector, LiveConfig, ManualClock, ModelBank, Outcome, Policy, Sim,
+    SimConfig,
 };
 use n2net::coordinator::{BatchPolicy, RouterPolicy};
 use n2net::deploy::{Deployment, DeploymentBuilder, FieldExtractor, SwapHandle};
@@ -51,6 +54,7 @@ use n2net::net::{
 };
 use n2net::rmt::ChipConfig;
 use n2net::runtime::Oracle;
+use n2net::timing::{self, ChipTiming};
 use n2net::util::cli::Args;
 
 const VALUE_OPTS: &[&str] = &[
@@ -80,7 +84,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: n2net <report|compile|run|serve|autopilot|swap|selftest> [options]\n\
+        "usage: n2net <report|compile|timing|run|serve|autopilot|swap|selftest> [options]\n\
          see `n2net report all` for every paper artifact and\n\
          `n2net serve --help` / `n2net autopilot --help` for serving options"
     );
@@ -90,6 +94,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("report") => cmd_report(args),
         Some("compile") => cmd_compile(args),
+        Some("timing") => cmd_timing(args),
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
         Some("autopilot") => cmd_autopilot(args),
@@ -183,7 +188,7 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
     if all || which == "throughput" {
         matched = true;
         println!("== E3: throughput scaling (960 Mpps line rate) ==");
-        print!("{}", analysis::throughput::render(&ChipConfig::rmt()));
+        print!("{}", analysis::throughput::render(&ChipConfig::rmt())?);
         println!();
     }
     if all || which == "popcnt-ablation" {
@@ -285,6 +290,84 @@ fn cmd_compile(args: &Args) -> anyhow::Result<()> {
         let p4 = p4gen::render(&compiled.program, &compiled.parser, "n2net-model");
         std::fs::write(path, &p4)?;
         println!("wrote P4 description to {path}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// timing — cycle-accurate pipeline timing (n2net::timing, DESIGN.md §16)
+// ---------------------------------------------------------------------------
+
+fn timing_help() -> String {
+    "usage: n2net timing [options]\n\
+     cycle-accurate RMT pipeline timing (n2net::timing, DESIGN.md §16):\n\
+     the per-stage cycle/occupancy table of a compiled model, modeled pps\n\
+     across Table 1's activation widths, and a modeled-vs-host throughput\n\
+     comparison against the software simulator.\n\
+     \x20 --in-bits N           input activation width (default 32)\n\
+     \x20 --layers A,B          layer sizes (default 64,32)\n\
+     \x20 --native-popcnt       chip with the §3 POPCNT primitive\n\
+     \x20 --seed S              synthetic weight seed\n\
+     \x20 --packets N           packets for the host-side measurement\n\
+     \x20                       (0 skips the modeled-vs-host comparison)"
+        .into()
+}
+
+fn cmd_timing(args: &Args) -> anyhow::Result<()> {
+    if args.has_flag("help") {
+        println!("{}", timing_help());
+        return Ok(());
+    }
+    let in_bits = args.opt_usize("in-bits", 32)?;
+    let layers = args.opt_usize_list("layers", &[64, 32])?;
+    let seed = args.opt_u64("seed", 0)?;
+    let n = args.opt_usize("packets", 8192)?;
+    let chip = chip_for(args);
+    let t = ChipTiming::for_chip(&chip);
+    println!(
+        "chip timing: clock {:.0} MHz | parser {} cyc, stage {} cyc, \
+         deparser {} cyc, recirculation loop {} cyc",
+        t.clock_hz / 1e6,
+        t.parser_cycles,
+        t.stage_cycles,
+        t.deparser_cycles,
+        t.recirculation_cycles
+    );
+
+    let model = BnnModel::random(in_bits, &layers, seed);
+    let compiled =
+        Compiler::new(chip.clone(), CompilerOptions::default()).compile(&model)?;
+    let report = timing::analyze_compiled(&compiled, &t)?;
+    println!("\nper-stage cycle/occupancy table ({in_bits}b -> {layers:?}):");
+    print!("{}", report.render());
+
+    println!("\nmodeled timing across Table 1's activation widths:");
+    print!("{}", timing::render_width_table(&chip, &t)?);
+
+    if n > 0 {
+        // Host side of the comparison: the SAME compiled model served
+        // through the software simulator, per backend.
+        println!("\nmodeled vs host ({n} packets, synthetic uniform trace):");
+        let trace =
+            TraceGenerator::new(seed ^ 0x71).generate(&TraceKind::UniformIps, n);
+        let mut rows = Vec::new();
+        for kind in
+            [BackendKind::Scalar, BackendKind::Batched, BackendKind::Specialized]
+        {
+            let deployment = Deployment::builder()
+                .chip(chip.clone())
+                .extractor(FieldExtractor::SrcIp)
+                .backend(kind)
+                .model("timing", model.clone())
+                .build()?;
+            let r = deployment.engine("timing")?.process_trace(&trace.packets)?;
+            rows.push(analysis::throughput::ModeledVsHost {
+                case: kind.name().to_string(),
+                host_pps: r.sim_pps,
+                modeled_pps: report.modeled_pps,
+            });
+        }
+        print!("{}", analysis::throughput::render_modeled_vs_host(&rows));
     }
     Ok(())
 }
@@ -403,6 +486,10 @@ fn serve_help() -> String {
          \x20                       latency-slo); grammar: on <detector> do\n\
          \x20                       swap <m>|fallback|alert|reshard <n>|\n\
          \x20                       backend <kind>|overflow block|drop\n\
+         \x20 --modeled-slo         derive the latency-slo detector's signal AND\n\
+         \x20                       thresholds from the deployed program's ASIC\n\
+         \x20                       cycle model (n2net timing) instead of host\n\
+         \x20                       wall-clock, so detections are host-independent\n\
          \x20 --window N            frames per control window (default 512)\n\
          \x20 --seed S              trace seed",
         SCENARIO_NAMES.join("|")
@@ -502,6 +589,42 @@ fn policy_for(args: &Args) -> anyhow::Result<Policy> {
     }
 }
 
+/// `--modeled-slo` headroom: a shard breaches when its window load
+/// exceeds headroom × its nominal per-window packet budget.
+const MODELED_SLO_HEADROOM: f64 = 1.5;
+
+/// Detector set for a controller run: the default wall-clock set, or —
+/// under `--modeled-slo` — the same set with the latency detector's
+/// window latency AND limits derived from the deployed program's ASIC
+/// cycles (`n2net::timing`), so detections are identical on any host.
+fn detectors_for(
+    args: &Args,
+    deployment: &std::sync::Arc<Deployment>,
+    model_name: &str,
+    window_packets: usize,
+    shards: usize,
+) -> anyhow::Result<Vec<Box<dyn Detector>>> {
+    if !args.has_flag("modeled-slo") {
+        return Ok(Controller::default_detectors());
+    }
+    let compiled = deployment.compiled(model_name)?;
+    let t = ChipTiming::for_chip(&compiled.chip);
+    let report = timing::analyze_compiled(&compiled, &t)?;
+    let nominal = (window_packets / shards.max(1)).max(1) as u64;
+    let detector =
+        LatencySloDetector::modeled(report.slo(), nominal, MODELED_SLO_HEADROOM);
+    println!(
+        "modeled SLO: {} cycles/packet ({:.0} ns wire-to-wire, {} pass(es)); \
+         latency limit {:.0} ns = drain of {MODELED_SLO_HEADROOM} x {nominal} \
+         pkts/shard/window",
+        report.cycles_per_packet,
+        report.latency_ns,
+        report.passes,
+        detector.p99_limit_ns,
+    );
+    Ok(Controller::detectors_with_latency(detector))
+}
+
 /// Closed-loop serving shared by `serve --adaptive` and `autopilot`:
 /// run the controller over a sequence trace and print the loop report.
 fn run_adaptive(
@@ -520,7 +643,10 @@ fn run_adaptive(
         window_packets: args.opt_usize("window", 512)?.max(1),
         seed,
     };
-    let mut sim = Sim::new(deployment, model_name, bank, policy, cfg)?;
+    let detectors =
+        detectors_for(args, deployment, model_name, cfg.window_packets, cfg.n_shards)?;
+    let mut sim =
+        Sim::with_detectors(deployment, model_name, bank, policy, cfg, detectors)?;
     let report = sim.run_trace(st)?;
     print!("{}", report.render());
     let stats = deployment.stats(model_name)?;
@@ -554,10 +680,13 @@ fn run_live(
     println!("policy:\n{}", policy.render());
     let window = args.opt_usize("window", 512)?.max(1);
     let engine = deployment.live_sharded_engine(model_name, shards.max(1))?;
-    let controller = Controller::new(
+    let detectors =
+        detectors_for(args, deployment, model_name, window, shards.max(1))?;
+    let controller = Controller::with_detectors(
         SwapHandle::new(deployment, model_name)?,
         bank,
         policy,
+        detectors,
     )?
     .with_tier(std::sync::Arc::clone(&engine))?;
     let (clock, driver) = ManualClock::pair();
@@ -889,6 +1018,8 @@ fn autopilot_help() -> String {
          \x20 --shards S            serving shards (default 2)\n\
          \x20 --policy FILE         policy rules (default: swap \"attack\" on\n\
          \x20                       ddos-ramp, alert on overload/drift/imbalance)\n\
+         \x20 --modeled-slo         latency-slo signal + thresholds from the ASIC\n\
+         \x20                       cycle model (host-independent detections)\n\
          \x20 --backend scalar|batched|reference|specialized\n\
          \x20 --artifacts DIR       trained weights (falls back to a crafted\n\
          \x20                       subnet classifier so the loop runs anywhere)\n\

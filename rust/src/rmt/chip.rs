@@ -51,19 +51,34 @@ impl ChipConfig {
     }
 
     /// Line rate in packets/second (fully pipelined, 1 pkt/cycle).
+    /// Clamped to 0.0 for a zero/negative/NaN clock so downstream rate
+    /// and latency figures stay finite (the same contract as the bench
+    /// harness's non-finite clamp in `util::bench::write_bench_json`).
     pub fn line_rate_pps(&self) -> f64 {
-        self.clock_hz
+        if self.clock_hz.is_finite() && self.clock_hz > 0.0 {
+            self.clock_hz
+        } else {
+            0.0
+        }
     }
 
-    /// Timing of a program on this chip.
+    /// Coarse timing of a program on this chip: 1 cycle per element,
+    /// line rate divided by recirculation passes. The cycle-accurate
+    /// model (parser/deparser/recirculation costs, per-stage occupancy)
+    /// lives in [`crate::timing`].
     pub fn timing(&self, program: &Program) -> TimingReport {
         let passes = program.passes(self);
-        let pps = self.line_rate_pps() / passes as f64;
+        let line_rate = self.line_rate_pps();
+        let pps = line_rate / passes as f64;
         TimingReport {
             elements: program.n_elements(),
             passes,
             pps,
-            latency_ns: program.n_elements() as f64 / self.clock_hz * 1e9,
+            latency_ns: if line_rate > 0.0 {
+                program.n_elements() as f64 / line_rate * 1e9
+            } else {
+                0.0
+            },
         }
     }
 }
@@ -116,5 +131,24 @@ mod tests {
         let t2 = c.timing(&mk(40));
         assert_eq!(t2.passes, 2);
         assert_eq!(t2.pps, 480e6);
+    }
+
+    #[test]
+    fn degenerate_clock_clamps_to_zero_pps_not_nan_or_inf() {
+        let mk = |clock_hz: f64| ChipConfig { clock_hz, ..ChipConfig::rmt() };
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let c = mk(bad);
+            assert_eq!(c.line_rate_pps(), 0.0, "clock {bad:?}");
+            let p = Program::new(
+                (0..3)
+                    .map(|i| Element::new(format!("e{i}"), StepKind::Other, vec![]))
+                    .collect(),
+            );
+            let t = c.timing(&p);
+            assert!(t.pps.is_finite() && t.pps == 0.0, "clock {bad:?}: {t:?}");
+            assert!(t.latency_ns.is_finite() && t.latency_ns == 0.0, "{t:?}");
+        }
+        // A healthy clock is passed through untouched.
+        assert_eq!(mk(960e6).line_rate_pps(), 960e6);
     }
 }

@@ -1,0 +1,126 @@
+//! Per-chip cycle costs of the match-action pipeline (DESIGN.md §16).
+//!
+//! [`crate::rmt::ChipConfig`] describes *capacity* (elements, op slots,
+//! PHV, SRAM); [`ChipTiming`] describes *time*: how many clock cycles a
+//! packet spends in the parser, in each match-action stage, in the
+//! deparser, and in the recirculation loop between passes. The defaults
+//! follow the RMT paper's latency discussion — match plus action in a
+//! stage costs on the order of a dozen cycles, parser/deparser each a
+//! few tens, and a recirculation re-enters through the loopback port at
+//! a cost two orders above a stage hop — and put a 30-element program
+//! at ~430 ns through a 960 MHz pipeline, the right ballpark for a
+//! production switching ASIC.
+
+use crate::rmt::ChipConfig;
+
+/// Cycle costs of one traversal of the pipeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChipTiming {
+    /// Pipeline clock. One packet enters per cycle at line rate, so
+    /// this is also the single-pass packet rate.
+    pub clock_hz: f64,
+    /// Cycles from wire to PHV (header identification + extraction).
+    pub parser_cycles: u64,
+    /// Cycles per match-action stage (match lookup + VLIW action).
+    pub stage_cycles: u64,
+    /// Cycles from PHV back to wire.
+    pub deparser_cycles: u64,
+    /// Cycles spent in the recirculation loop between two passes
+    /// (deparse → loopback port → re-parse is modeled explicitly: this
+    /// is only the loop transit itself).
+    pub recirculation_cycles: u64,
+}
+
+impl ChipTiming {
+    /// Timing for the paper's stock RMT chip.
+    pub fn rmt() -> Self {
+        Self::for_chip(&ChipConfig::rmt())
+    }
+
+    /// Timing derived from a chip config: the clock is the chip's, the
+    /// cycle costs are the RMT-paper defaults (a native-POPCNT chip
+    /// changes what fits in a stage, not how long a stage takes).
+    pub fn for_chip(chip: &ChipConfig) -> Self {
+        Self {
+            clock_hz: chip.clock_hz,
+            parser_cycles: 25,
+            stage_cycles: 12,
+            deparser_cycles: 25,
+            recirculation_cycles: 100,
+        }
+    }
+
+    /// Line rate in packets/second, clamped to 0.0 for a zero/NaN
+    /// clock (mirrors [`ChipConfig::line_rate_pps`]).
+    pub fn line_rate_pps(&self) -> f64 {
+        if self.clock_hz.is_finite() && self.clock_hz > 0.0 {
+            self.clock_hz
+        } else {
+            0.0
+        }
+    }
+
+    /// Cycles one packet spends traversing `stages` occupied stages in
+    /// `passes` passes: every pass runs the parser and deparser, every
+    /// occupied stage costs [`Self::stage_cycles`], and each extra pass
+    /// adds one recirculation-loop transit. A 1-pass program is exactly
+    /// parser + stages + deparser.
+    pub fn packet_cycles(&self, stages: usize, passes: usize) -> u64 {
+        let passes = passes.max(1) as u64;
+        passes * (self.parser_cycles + self.deparser_cycles)
+            + stages as u64 * self.stage_cycles
+            + (passes - 1) * self.recirculation_cycles
+    }
+
+    /// Convert a cycle count to nanoseconds (0.0 under a clamped clock
+    /// rather than a non-finite value).
+    pub fn cycles_to_ns(&self, cycles: u64) -> f64 {
+        let pps = self.line_rate_pps();
+        if pps > 0.0 {
+            cycles as f64 / pps * 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_pass_is_parser_stages_deparser() {
+        let t = ChipTiming::rmt();
+        assert_eq!(
+            t.packet_cycles(30, 1),
+            t.parser_cycles + 30 * t.stage_cycles + t.deparser_cycles
+        );
+        // Zero passes clamps to one traversal.
+        assert_eq!(t.packet_cycles(30, 0), t.packet_cycles(30, 1));
+    }
+
+    #[test]
+    fn each_extra_pass_adds_a_full_traversal_plus_the_loop() {
+        let t = ChipTiming::rmt();
+        let one = t.packet_cycles(32, 1);
+        let two = t.packet_cycles(64, 2);
+        assert_eq!(
+            two - one,
+            t.parser_cycles
+                + 32 * t.stage_cycles
+                + t.deparser_cycles
+                + t.recirculation_cycles
+        );
+    }
+
+    #[test]
+    fn degenerate_clock_yields_zero_not_nan() {
+        let mut t = ChipTiming::rmt();
+        t.clock_hz = 0.0;
+        assert_eq!(t.line_rate_pps(), 0.0);
+        assert_eq!(t.cycles_to_ns(1000), 0.0);
+        t.clock_hz = f64::NAN;
+        assert_eq!(t.line_rate_pps(), 0.0);
+        assert!(t.cycles_to_ns(1000) == 0.0);
+    }
+}

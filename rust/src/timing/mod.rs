@@ -1,0 +1,49 @@
+//! `n2net::timing` — cycle-accurate RMT pipeline timing model
+//! (DESIGN.md §16).
+//!
+//! The paper's headline — 960 M packets/s through an RMT pipeline — is
+//! a statement about ASIC cycles, but until this module the crate's
+//! only notion of time was the coarse 1-cycle-per-element estimate in
+//! [`crate::rmt::ChipConfig::timing`] and the wall-clock latency the
+//! host happens to produce. This module models the pipeline the way the
+//! chip actually spends cycles:
+//!
+//! ```text
+//!  wire ─▶ parser ─▶ stage 0 ─▶ … ─▶ stage 31 ─▶ deparser ─▶ wire
+//!            ▲                                      │
+//!            └────────── recirculation loop ◀───────┘  (per extra pass)
+//! ```
+//!
+//! * [`ChipTiming`] — the cycle costs: clock, parser/deparser cycles,
+//!   per-stage cycles, recirculation-loop cycles. Derived per chip via
+//!   [`ChipTiming::for_chip`].
+//! * [`TimingReport`] ([`analyze`] / [`analyze_compiled`]) — walk a
+//!   compiled [`Program`](crate::rmt::Program)'s schedule and produce
+//!   cycles/packet, modeled wire-to-wire latency, modeled pps at line
+//!   rate, and a per-stage occupancy breakdown ([`StageSlot`]: op-slot
+//!   and SRAM usage per physical stage per pass).
+//! * [`ModeledSlo`] — the latency-SLO substrate: window latency derived
+//!   from per-shard packet counts draining at line rate, limits derived
+//!   from the nominal window budget. The controlplane's
+//!   [`LatencySloDetector`](crate::controlplane::LatencySloDetector)
+//!   consumes it in modeled mode, so sim and live detectors fire
+//!   identically on any host.
+//! * [`width_table`] — Table 1's activation widths with cycle
+//!   accounting (the modeled half of `analysis::throughput`'s
+//!   modeled-vs-host comparison).
+//!
+//! CLI: `n2net timing` prints the per-stage table, the width table, and
+//! a modeled-vs-host throughput comparison; `serve --modeled-slo` /
+//! `autopilot --modeled-slo` switch the control loop's latency detector
+//! onto this model.
+
+pub mod chip;
+pub mod model;
+pub mod slo;
+
+pub use chip::ChipTiming;
+pub use model::{
+    analyze, analyze_compiled, recirculation_passes, render_width_table,
+    width_table, StageSlot, TimingReport, WidthRow,
+};
+pub use slo::ModeledSlo;

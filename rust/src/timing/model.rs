@@ -1,0 +1,323 @@
+//! Cycle-accurate analysis of a compiled pipeline program: walk the
+//! schedule stage by stage, charge [`ChipTiming`] costs, and report
+//! cycles/packet, modeled latency, modeled pps, and per-stage occupancy
+//! (DESIGN.md §16).
+
+use crate::compiler::layout::max_parallel_neurons;
+use crate::compiler::{elements_for_layer, CompiledModel};
+use crate::error::{Error, Result};
+use crate::rmt::{ChipConfig, Program, StepKind};
+
+use super::chip::ChipTiming;
+use super::slo::ModeledSlo;
+
+/// Recirculation passes a program of `elements` occupied stages needs
+/// on `chip`. This is the checked form of the
+/// `elements.div_ceil(n_elements)` scattered through the analysis code:
+/// a zero-element program is a degenerate compile (it would silently
+/// report full line rate), and a zero-stage chip cannot run anything.
+pub fn recirculation_passes(elements: usize, chip: &ChipConfig) -> Result<usize> {
+    if chip.n_elements == 0 {
+        return Err(Error::ResourceExhausted(
+            "chip has 0 pipeline elements; nothing can be scheduled".into(),
+        ));
+    }
+    if elements == 0 {
+        return Err(Error::InvalidModel(
+            "program occupies 0 pipeline elements (degenerate layer); \
+             refusing to report line-rate throughput for it"
+                .into(),
+        ));
+    }
+    Ok(elements.div_ceil(chip.n_elements))
+}
+
+/// One occupied physical stage in one pass of the schedule.
+#[derive(Clone, Debug)]
+pub struct StageSlot {
+    /// Recirculation pass this element runs in (0-based).
+    pub pass: usize,
+    /// Physical stage within the pass (0-based).
+    pub stage: usize,
+    /// Schedule label of the element placed here.
+    pub label: String,
+    /// Which compile step emitted it.
+    pub step: StepKind,
+    /// VLIW op slots the element uses.
+    pub ops_used: usize,
+    /// The chip's per-stage op-slot budget.
+    pub ops_budget: usize,
+    /// Match-stage SRAM the element's table needs, in bits.
+    pub sram_bits: usize,
+    /// Cycles a packet spends in this stage.
+    pub cycles: u64,
+}
+
+impl StageSlot {
+    /// Op-slot occupancy of this stage, in [0, 1].
+    pub fn occupancy(&self) -> f64 {
+        if self.ops_budget == 0 {
+            0.0
+        } else {
+            self.ops_used as f64 / self.ops_budget as f64
+        }
+    }
+}
+
+/// Cycle-accurate timing of one program on one chip.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    /// The cycle costs this report was computed with.
+    pub timing: ChipTiming,
+    /// Occupied stages across all passes.
+    pub elements: usize,
+    /// Recirculation passes.
+    pub passes: usize,
+    /// Cycles one packet spends wire-to-wire (parser + stages +
+    /// deparser per pass, plus the recirculation loop between passes).
+    pub cycles_per_packet: u64,
+    /// Wire-to-wire latency of one packet.
+    pub latency_ns: f64,
+    /// Sustained packets/second at line rate: the pipeline issues one
+    /// packet per cycle, and each recirculation pass consumes one issue
+    /// slot, so throughput is line rate / passes.
+    pub modeled_pps: f64,
+    /// Per-stage occupancy, schedule order.
+    pub stages: Vec<StageSlot>,
+}
+
+/// Analyze a program's schedule against a chip and its cycle costs.
+pub fn analyze(program: &Program, chip: &ChipConfig, timing: &ChipTiming) -> Result<TimingReport> {
+    let passes = recirculation_passes(program.n_elements(), chip)?;
+    let stages: Vec<StageSlot> = program
+        .elements
+        .iter()
+        .enumerate()
+        .map(|(i, e)| StageSlot {
+            pass: i / chip.n_elements,
+            stage: i % chip.n_elements,
+            label: e.label.clone(),
+            step: e.step,
+            ops_used: e.slot_cost(),
+            ops_budget: chip.max_ops_per_element,
+            sram_bits: e.sram_bits(&chip.phv),
+            cycles: timing.stage_cycles,
+        })
+        .collect();
+    let cycles_per_packet = timing.packet_cycles(program.n_elements(), passes);
+    Ok(TimingReport {
+        timing: *timing,
+        elements: program.n_elements(),
+        passes,
+        cycles_per_packet,
+        latency_ns: timing.cycles_to_ns(cycles_per_packet),
+        modeled_pps: timing.line_rate_pps() / passes as f64,
+        stages,
+    })
+}
+
+/// Analyze a compiled model with its own chip's timing.
+pub fn analyze_compiled(compiled: &CompiledModel, timing: &ChipTiming) -> Result<TimingReport> {
+    analyze(&compiled.program, &compiled.chip, timing)
+}
+
+impl TimingReport {
+    /// The SLO substrate derived from this report (threshold and
+    /// window-latency derivation for the modeled-latency detector).
+    pub fn slo(&self) -> ModeledSlo {
+        ModeledSlo {
+            fill_cycles: self.cycles_per_packet,
+            slots_per_packet: self.passes as u64,
+            clock_hz: self.timing.clock_hz,
+        }
+    }
+
+    /// Render the per-stage cycle/occupancy table plus totals.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{:>4} {:>5} {:<12} {:<22} {:>9} {:>6} {:>9} {:>6}",
+            "pass", "stage", "step", "label", "ops", "occ%", "sram kb", "cyc"
+        );
+        for slot in &self.stages {
+            let _ = writeln!(
+                s,
+                "{:>4} {:>5} {:<12} {:<22} {:>4}/{:<4} {:>5.1} {:>9.1} {:>6}",
+                slot.pass,
+                slot.stage,
+                slot.step.name(),
+                slot.label,
+                slot.ops_used,
+                slot.ops_budget,
+                slot.occupancy() * 100.0,
+                slot.sram_bits as f64 / 8192.0,
+                slot.cycles,
+            );
+        }
+        let _ = writeln!(
+            s,
+            "totals: {} stage(s) over {} pass(es) — {} cycles/packet, \
+             {:.0} ns wire-to-wire, {:.0} Mpps modeled",
+            self.elements,
+            self.passes,
+            self.cycles_per_packet,
+            self.latency_ns,
+            self.modeled_pps / 1e6,
+        );
+        s
+    }
+}
+
+/// Modeled timing for one of Table 1's activation widths.
+#[derive(Clone, Copy, Debug)]
+pub struct WidthRow {
+    pub activation_bits: usize,
+    pub parallel_neurons: usize,
+    pub elements: usize,
+    pub passes: usize,
+    pub cycles_per_packet: u64,
+    pub latency_ns: f64,
+    pub modeled_pps: f64,
+}
+
+/// Modeled timing across Table 1's activation widths (the same widths
+/// `analysis::throughput` tabulates, now with cycle accounting).
+pub fn width_table(chip: &ChipConfig, timing: &ChipTiming) -> Result<Vec<WidthRow>> {
+    [16usize, 32, 64, 128, 256, 512, 1024, 2048]
+        .into_iter()
+        .map(|n| {
+            let elements = elements_for_layer(n, chip);
+            let passes = recirculation_passes(elements, chip)?;
+            let cycles = timing.packet_cycles(elements, passes);
+            Ok(WidthRow {
+                activation_bits: n,
+                parallel_neurons: max_parallel_neurons(chip, n),
+                elements,
+                passes,
+                cycles_per_packet: cycles,
+                latency_ns: timing.cycles_to_ns(cycles),
+                modeled_pps: timing.line_rate_pps() / passes as f64,
+            })
+        })
+        .collect()
+}
+
+/// Render the Table 1 width timing table.
+pub fn render_width_table(chip: &ChipConfig, timing: &ChipTiming) -> Result<String> {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:>10} {:>10} {:>9} {:>7} {:>12} {:>12} {:>12}",
+        "act bits", "parallel", "elements", "passes", "cyc/pkt", "latency ns", "Mpps"
+    );
+    for r in width_table(chip, timing)? {
+        let _ = writeln!(
+            s,
+            "{:>10} {:>10} {:>9} {:>7} {:>12} {:>12.0} {:>12.0}",
+            r.activation_bits,
+            r.parallel_neurons,
+            r.elements,
+            r.passes,
+            r.cycles_per_packet,
+            r.latency_ns,
+            r.modeled_pps / 1e6,
+        );
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::BnnModel;
+    use crate::compiler::Compiler;
+
+    fn compiled(in_bits: usize, layers: &[usize]) -> CompiledModel {
+        Compiler::rmt()
+            .compile(&BnnModel::random(in_bits, layers, 5))
+            .unwrap()
+    }
+
+    #[test]
+    fn zero_elements_and_zero_stage_chip_are_enumerated_errors() {
+        let chip = ChipConfig::rmt();
+        match recirculation_passes(0, &chip) {
+            Err(Error::InvalidModel(m)) => assert!(m.contains("0 pipeline elements")),
+            other => panic!("expected InvalidModel, got {other:?}"),
+        }
+        let dead = ChipConfig { n_elements: 0, ..ChipConfig::rmt() };
+        assert!(matches!(
+            recirculation_passes(5, &dead),
+            Err(Error::ResourceExhausted(_))
+        ));
+        // The happy path is untouched.
+        assert_eq!(recirculation_passes(32, &chip).unwrap(), 1);
+        assert_eq!(recirculation_passes(33, &chip).unwrap(), 2);
+    }
+
+    #[test]
+    fn single_pass_program_costs_exactly_one_traversal() {
+        let c = compiled(32, &[64, 32]);
+        let t = ChipTiming::for_chip(&c.chip);
+        let r = analyze_compiled(&c, &t).unwrap();
+        assert_eq!(r.passes, 1);
+        assert_eq!(
+            r.cycles_per_packet,
+            t.parser_cycles + r.elements as u64 * t.stage_cycles + t.deparser_cycles
+        );
+        assert_eq!(r.modeled_pps, 960e6);
+        assert_eq!(r.stages.len(), r.elements);
+        // Stage slots line up with the physical pipeline.
+        for (i, s) in r.stages.iter().enumerate() {
+            assert_eq!(s.pass, i / c.chip.n_elements);
+            assert_eq!(s.stage, i % c.chip.n_elements);
+            assert!(s.ops_used <= s.ops_budget, "schedule overflows a stage");
+            assert!(s.occupancy() > 0.0 && s.occupancy() <= 1.0);
+        }
+        let rendered = r.render();
+        assert!(rendered.contains("cycles/packet"), "{rendered}");
+        assert!(rendered.contains("occ%"), "{rendered}");
+    }
+
+    #[test]
+    fn recirculating_program_pays_the_loop_and_halves_pps() {
+        // 44 elements > 32 ⇒ 2 passes (same shape as the analysis test).
+        let c = compiled(32, &[64, 32, 32]);
+        let t = ChipTiming::for_chip(&c.chip);
+        let r = analyze_compiled(&c, &t).unwrap();
+        assert_eq!(r.passes, 2);
+        assert_eq!(r.modeled_pps, 480e6);
+        assert_eq!(
+            r.cycles_per_packet,
+            2 * (t.parser_cycles + t.deparser_cycles)
+                + r.elements as u64 * t.stage_cycles
+                + t.recirculation_cycles
+        );
+        // Strictly more latency than any 1-pass program of fewer stages.
+        let small = analyze_compiled(&compiled(32, &[64, 32]), &t).unwrap();
+        assert!(r.latency_ns > small.latency_ns);
+    }
+
+    #[test]
+    fn width_table_matches_throughput_scaling() {
+        let chip = ChipConfig::rmt();
+        let t = ChipTiming::for_chip(&chip);
+        let rows = width_table(&chip, &t).unwrap();
+        assert_eq!(rows.len(), 8);
+        // Every Table 1 width fits one pass ⇒ full line rate, and
+        // cycles grow with the element count.
+        for r in &rows {
+            assert_eq!(r.passes, 1);
+            assert_eq!(r.modeled_pps, 960e6);
+            assert_eq!(
+                r.cycles_per_packet,
+                t.parser_cycles + r.elements as u64 * t.stage_cycles + t.deparser_cycles
+            );
+        }
+        let rendered = render_width_table(&chip, &t).unwrap();
+        assert!(rendered.contains("2048"), "{rendered}");
+    }
+}

@@ -1,0 +1,94 @@
+//! Modeled-latency SLO substrate (DESIGN.md §16).
+//!
+//! The latency-SLO detector's host mode compares wall-clock batch
+//! percentiles against wall-clock limits — host noise, not hardware
+//! truth. [`ModeledSlo`] replaces both sides with ASIC cycles: given a
+//! program's [`TimingReport`](super::TimingReport), the latency of a
+//! window is *derived* from how many packets each shard had to drain at
+//! line rate, and the limit from how many it was *expected* to drain.
+//! Every input is a deterministic packet count, so the same trace
+//! produces the same detections on any host.
+
+/// Cycle-level latency model of one deployed program, extracted from
+/// its timing report.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModeledSlo {
+    /// Wire-to-wire cycles of one packet (the pipeline fill:
+    /// parser + stages + deparser per pass + recirculation loops).
+    pub fill_cycles: u64,
+    /// Issue slots one packet consumes at line rate (= recirculation
+    /// passes — each pass occupies the ingress for one cycle).
+    pub slots_per_packet: u64,
+    /// Pipeline clock.
+    pub clock_hz: f64,
+}
+
+impl ModeledSlo {
+    /// Modeled completion latency of the LAST packet of a `queued`-deep
+    /// burst arriving at once: the queue drains at one issue per cycle
+    /// (times passes), then the last packet fills the pipe.
+    pub fn drain_ns(&self, queued: f64) -> f64 {
+        if !(self.clock_hz.is_finite() && self.clock_hz > 0.0) {
+            return 0.0;
+        }
+        let cycles =
+            self.fill_cycles as f64 + queued.max(0.0) * self.slots_per_packet as f64;
+        cycles / self.clock_hz * 1e9
+    }
+
+    /// The SLO limit for a shard expected to drain `nominal` packets
+    /// per window: the pipeline fill plus `headroom ×` the nominal
+    /// queueing budget. Keeping the fill term *outside* the headroom
+    /// makes the threshold scale-free: a shard breaches exactly when
+    /// its window load exceeds `headroom × nominal`, independent of how
+    /// deep the pipeline is.
+    pub fn limit_ns(&self, nominal: u64, headroom: f64) -> f64 {
+        if !(self.clock_hz.is_finite() && self.clock_hz > 0.0) {
+            return 0.0;
+        }
+        let cycles = self.fill_cycles as f64
+            + headroom.max(0.0) * nominal as f64 * self.slots_per_packet as f64;
+        cycles / self.clock_hz * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slo() -> ModeledSlo {
+        // A 30-stage 1-pass program on the stock chip: 25+360+25.
+        ModeledSlo { fill_cycles: 410, slots_per_packet: 1, clock_hz: 960e6 }
+    }
+
+    #[test]
+    fn drain_grows_linearly_from_the_fill() {
+        let s = slo();
+        assert!((s.drain_ns(0.0) - 410.0 / 960e6 * 1e9).abs() < 1e-9);
+        let d1 = s.drain_ns(100.0);
+        let d2 = s.drain_ns(200.0);
+        assert!(d2 > d1 && d1 > s.drain_ns(0.0));
+        // Negative queue depth clamps to the fill.
+        assert_eq!(s.drain_ns(-5.0), s.drain_ns(0.0));
+    }
+
+    #[test]
+    fn breach_is_exactly_load_over_headroom_times_nominal() {
+        let s = slo();
+        let limit = s.limit_ns(256, 1.5);
+        // 1.5 × 256 = 384: at the threshold load the drain equals the
+        // limit; one packet past it breaches.
+        assert!((s.drain_ns(384.0) - limit).abs() < 1e-9);
+        assert!(s.drain_ns(385.0) > limit);
+        assert!(s.drain_ns(383.0) < limit);
+    }
+
+    #[test]
+    fn degenerate_clock_is_quiet_zero_not_nan() {
+        let s = ModeledSlo { clock_hz: 0.0, ..slo() };
+        assert_eq!(s.drain_ns(1000.0), 0.0);
+        assert_eq!(s.limit_ns(256, 2.0), 0.0);
+        let s = ModeledSlo { clock_hz: f64::NAN, ..slo() };
+        assert!(s.drain_ns(1000.0) == 0.0 && s.limit_ns(1, 1.0) == 0.0);
+    }
+}

@@ -41,6 +41,44 @@ fn autopilot_help_lists_every_scenario_name() {
 }
 
 #[test]
+fn timing_help_documents_the_knobs() {
+    let out = n2net(&["timing", "--help"]);
+    assert!(out.status.success(), "timing --help failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for flag in ["--in-bits", "--layers", "--native-popcnt", "--seed", "--packets"] {
+        assert!(stdout.contains(flag), "timing --help missing {flag}:\n{stdout}");
+    }
+    assert!(stdout.contains("cycle-accurate"), "{stdout}");
+}
+
+#[test]
+fn timing_run_prints_stage_table_width_scaling_and_host_comparison() {
+    // ISSUE 7 acceptance: a hermetic `timing` run (synthetic weights,
+    // no artifacts) prints the per-stage cycle/occupancy table, the
+    // modeled pps row for every Table 1 activation width, and the
+    // modeled-vs-host comparison.
+    let out = n2net(&["timing", "--packets", "2048", "--seed", "9"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "timing run failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("chip timing: clock 960 MHz"), "{stdout}");
+    // Per-stage table: header plus the totals line.
+    for col in ["pass", "stage", "occ%", "cycles/packet"] {
+        assert!(stdout.contains(col), "stage table missing {col:?}:\n{stdout}");
+    }
+    // Width table covers all of Table 1's activation widths.
+    for width in ["16", "32", "64", "128", "256", "512", "1024", "2048"] {
+        assert!(stdout.contains(width), "width row {width} missing:\n{stdout}");
+    }
+    // Host comparison ran over the requested trace.
+    assert!(stdout.contains("modeled vs host (2048 packets"), "{stdout}");
+    for backend in ["scalar", "batched", "specialized"] {
+        assert!(stdout.contains(backend), "comparison missing {backend}:\n{stdout}");
+    }
+    assert!(stdout.contains("ASIC/host"), "{stdout}");
+}
+
+#[test]
 fn unknown_scenario_error_enumerates_the_vocabulary() {
     let out = n2net(&["serve", "--scenario", "warp-speed", "--packets", "16"]);
     assert!(!out.status.success(), "bogus scenario must fail");
