@@ -1,0 +1,72 @@
+//! Verifier bench: what the publish gate costs (ISSUE 8 satellite).
+//! `ModelArtifact::new` runs the full static verification of
+//! DESIGN.md §17 on every hot-swap, off the hot path but on the swap
+//! path — so its cost bounds how fast the control plane can republish.
+//! Measured here: `verify_compiled` (all three analysis layers +
+//! translation-validated optimizer run) and `run_pipeline_validated`
+//! alone, against the plain `run_pipeline` baseline.
+//!
+//! Appends machine-readable records to `BENCH_verify.json`.
+//!
+//! `cargo bench --bench verify`
+
+use n2net::bnn::BnnModel;
+use n2net::compiler::ir::IrProgram;
+use n2net::compiler::verify::verify_compiled;
+use n2net::compiler::{passes, Compiler, CompilerOptions, InputEncoding};
+use n2net::rmt::ChipConfig;
+use n2net::util::bench::{
+    default_bencher, write_bench_json, BenchRecord, Report,
+};
+
+const BENCH_JSON: &str = "BENCH_verify.json";
+
+fn main() {
+    let model = BnnModel::random(32, &[64, 32], 11);
+    let opts = CompilerOptions {
+        input: InputEncoding::PayloadLe { offset: 0 },
+        ..Default::default()
+    };
+    let compiled =
+        Compiler::new(ChipConfig::rmt(), opts).compile(&model).unwrap();
+    let ir = IrProgram::lower(
+        &compiled.program,
+        &compiled.chip.phv,
+        &compiled.layout.output,
+    )
+    .unwrap();
+
+    println!("# verify — publish-gate cost (32 -> [64, 32])");
+    let b = default_bencher();
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut report = Report::new("static verification (per artifact)");
+    report.header();
+
+    let stats = b.run("verify_compiled", 1.0, || {
+        std::hint::black_box(verify_compiled(&compiled).is_clean());
+    });
+    records.push(BenchRecord::from_stats("verify", "verify_compiled", 1, &stats));
+    report.add(stats);
+
+    let stats = b.run("pipeline (validated)", 1.0, || {
+        let mut opt = ir.clone();
+        passes::run_pipeline_validated(&mut opt, &passes::host_pipeline())
+            .unwrap();
+        std::hint::black_box(opt.n_instrs());
+    });
+    records.push(BenchRecord::from_stats("verify", "pipeline_validated", 1, &stats));
+    report.add(stats);
+
+    let stats = b.run("pipeline (baseline)", 1.0, || {
+        let mut opt = ir.clone();
+        passes::run_pipeline(&mut opt, &passes::host_pipeline());
+        std::hint::black_box(opt.n_instrs());
+    });
+    records.push(BenchRecord::from_stats("verify", "pipeline_baseline", 1, &stats));
+    report.add(stats);
+
+    match write_bench_json(BENCH_JSON, "verify", &records) {
+        Ok(()) => println!("\nwrote {} records to {BENCH_JSON}", records.len()),
+        Err(e) => eprintln!("warning: could not write {BENCH_JSON}: {e}"),
+    }
+}

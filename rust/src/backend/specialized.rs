@@ -212,14 +212,17 @@ impl fmt::Debug for SpecializedProgram {
 
 impl SpecializedProgram {
     /// Lower, optimize, and codegen a compiled model. Fails on keyed
-    /// (multi-model) programs, whose weights cannot be baked in.
+    /// (multi-model) programs, whose weights cannot be baked in. The
+    /// optimizer runs under translation validation (DESIGN.md §17):
+    /// a pass that breaks `live_out` equivalence aborts the build with
+    /// `Error::Verify` instead of reaching the fused kernels.
     pub fn build(compiled: &CompiledModel) -> Result<Self> {
         let mut ir = IrProgram::lower(
             &compiled.program,
             &compiled.chip.phv,
             &compiled.layout.output,
         )?;
-        passes::run_pipeline(&mut ir, &passes::host_pipeline());
+        passes::run_pipeline_validated(&mut ir, &passes::host_pipeline())?;
         ir.validate()?;
         let mut kernels = Vec::new();
         for block in &ir.blocks {

@@ -168,6 +168,13 @@ impl IrInstr {
         Self { op, dst, dst2: dst, a, b, aux: 0, gather: Vec::new() }
     }
 
+    /// Registers this instruction writes: the destination, plus the
+    /// second destination of a fused duplicate pair (skipped when it
+    /// aliases `dst`). The static verifier's dataflow walks use this.
+    pub fn defs(&self) -> impl Iterator<Item = RegId> {
+        std::iter::once(self.dst).chain((self.dst2 != self.dst).then_some(self.dst2))
+    }
+
     /// Registers this instruction reads.
     pub fn reads(&self) -> impl Iterator<Item = RegId> + '_ {
         let a = match self.a {

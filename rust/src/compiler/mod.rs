@@ -31,6 +31,12 @@
 //! pipeline over it (stage packing, popcount strength reduction,
 //! dead-code elimination) — the substrate of the monomorphizing
 //! [`crate::backend::specialized`] host backend.
+//!
+//! Above both sits the static analysis layer (DESIGN.md §17):
+//! [`verify`] proves dataflow soundness, container-width safety, and
+//! chip legality without executing a packet, and translation-validates
+//! every pass run; the deploy publish path refuses artifacts that fail
+//! it.
 
 pub mod ir;
 pub mod layout;
@@ -39,6 +45,7 @@ pub mod passes;
 pub mod popcount;
 pub mod resources;
 pub mod schedule;
+pub mod verify;
 
 pub use ir::IrProgram;
 pub use layout::{InputEncoding, LayerPlan, ModelLayout};
@@ -46,3 +53,4 @@ pub use resources::{
     elements_for_layer, render_table1, table1, ResourceReport, Table1Row,
 };
 pub use schedule::{CompiledModel, Compiler, CompilerOptions, MultiModelOptions};
+pub use verify::{Severity, VerifyReport, Violation, ViolationKind};

@@ -37,6 +37,8 @@ pub use pack::PackStages;
 pub use strength_reduce::PopcountStrengthReduce;
 
 use crate::compiler::ir::IrProgram;
+use crate::compiler::verify;
+use crate::error::{Error, Result};
 use crate::rmt::ChipConfig;
 
 /// One IR-to-IR rewrite.
@@ -72,6 +74,39 @@ pub fn chip_pipeline(chip: &ChipConfig) -> Vec<Box<dyn Pass>> {
 /// `(pass name, changed)` per pass for reporting.
 pub fn run_pipeline(ir: &mut IrProgram, passes: &[Box<dyn Pass>]) -> Vec<(&'static str, bool)> {
     passes.iter().map(|p| (p.name(), p.run(ir))).collect()
+}
+
+/// Run a pipeline with **translation validation** (DESIGN.md §17):
+/// after each pass that reports a change, the pre/post programs are
+/// compared for `live_out` equivalence
+/// ([`verify::equivalent_on_live_out`]). A semantics-breaking pass is
+/// rejected with [`Error::Verify`] at compile time — and the IR is
+/// rolled back to the last validated state, so the caller still holds
+/// a correct (merely less-optimized) program.
+///
+/// This is the publish-path entry point: the specialized backend and
+/// artifact verification build through it, so no optimizer bug can
+/// reach a serving model.
+pub fn run_pipeline_validated(
+    ir: &mut IrProgram,
+    passes: &[Box<dyn Pass>],
+) -> Result<Vec<(&'static str, bool)>> {
+    let mut report = Vec::with_capacity(passes.len());
+    for p in passes {
+        let pre = ir.clone();
+        let changed = p.run(ir);
+        if changed {
+            if let Err(why) = verify::equivalent_on_live_out(&pre, ir, verify::TV_SAMPLES) {
+                *ir = pre;
+                return Err(Error::Verify(format!(
+                    "pass '{}' rejected by translation validation: {why}",
+                    p.name()
+                )));
+            }
+        }
+        report.push((p.name(), changed));
+    }
+    Ok(report)
 }
 
 #[cfg(test)]

@@ -116,6 +116,29 @@ impl ResourceReport {
         }
     }
 
+    /// Aggregate-level legality view of this report as structured
+    /// diagnostics, using the same thresholds as
+    /// [`crate::compiler::verify`] (which carries the per-element
+    /// provenance; this coarse roll-up is what the CLI report paths
+    /// print next to the resource table).
+    pub fn violations(&self) -> Vec<super::verify::Violation> {
+        let mut v = Vec::new();
+        if self.peak_ops > self.ops_budget {
+            v.push(super::verify::Violation::op_budget_exceeded(
+                self.peak_ops,
+                self.ops_budget,
+            ));
+        }
+        if self.passes > 1 {
+            v.push(super::verify::Violation::recirculation(
+                self.elements_used,
+                self.elements_available,
+                self.passes,
+            ));
+        }
+        v
+    }
+
     /// Human-readable rendering.
     pub fn render(&self) -> String {
         use std::fmt::Write as _;

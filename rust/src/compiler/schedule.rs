@@ -625,6 +625,14 @@ impl CompiledModel {
     pub fn resource_report(&self) -> String {
         self.resources.render()
     }
+
+    /// Full static verification of this artifact (DESIGN.md §17):
+    /// chip-legality budgeting, element/IR dataflow, width/overflow
+    /// analysis, and a translation-validated optimizer run. The deploy
+    /// publish path refuses artifacts whose report carries errors.
+    pub fn verify(&self) -> super::verify::VerifyReport {
+        super::verify::verify_compiled(self)
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,979 @@
+//! Static verification of compiled pipeline programs (DESIGN.md §17).
+//!
+//! N2Net's deployment target is a fixed-function match-action ASIC: an
+//! illegal program — one that overflows a PHV container, reads a
+//! register nothing wrote, or blows a stage's op/SRAM budget — is not a
+//! runtime bug, it is an artifact that must never be *published*. This
+//! module proves program properties without executing a single packet,
+//! in three layers:
+//!
+//! 1. **Dataflow soundness** ([`verify_ir`], and element-level in
+//!    [`verify_program`] for keyed programs that cannot be lowered):
+//!    def-before-use on every register, no unwritten `live_out`
+//!    register, dead-store detection (warning severity — reaping dead
+//!    stores is [`DeadCodeEliminate`]'s job, so the warning pass runs
+//!    on the optimized tape), and a conservative value-range analysis
+//!    that flags any three-address op whose result bound exceeds its
+//!    destination container's width mask. A 32-bit wrap is defined ALU
+//!    semantics (the hardware adders wrap, and the paper's popcount
+//!    sums rely on bounded operands, which this analysis tracks); a
+//!    *narrow* container that cannot hold the value bound is a
+//!    truncation the programmer never asked for, and is an error.
+//! 2. **Translation validation** ([`equivalent_on_live_out`], driven
+//!    by [`crate::compiler::passes::run_pipeline_validated`]): after
+//!    every pass, the pre- and post-pass programs are compared on
+//!    their `live_out` registers via hash-consed symbolic value
+//!    summaries (value numbering with constant folding, `Mov`
+//!    elimination, and commutative-operand canonicalization). Packing
+//!    and DCE are *proven* equivalent this way; strength reduction
+//!    replaces a SWAR tree with a `Popcnt` and is structurally
+//!    different, so the checker falls back to deterministic seeded
+//!    concrete sampling over full random register states. The
+//!    incompleteness of that fallback vs. the runtime bit-exactness
+//!    property tests is documented in DESIGN.md §17.
+//! 3. **Chip-legality budgeting** ([`verify_program`]): per-element
+//!    VLIW op-slot and SRAM budgets, recirculation occupancy, and the
+//!    element-level structural checks, reported as a structured
+//!    [`Violation`] list with stage/op provenance instead of the
+//!    first-failure `Result` that `Program::validate` returns (which
+//!    stays authoritative in the compile path — this layer is the
+//!    diagnostic surface over the same limits).
+//!
+//! The publish path is gated on this module:
+//! [`crate::deploy::ModelArtifact::new`] refuses an artifact whose
+//! report contains errors (enumerated [`Error::Verify`]
+//! (crate::error::Error::Verify)), so `deploy::swap_model` leaves the
+//! serving model undisturbed, and the `check` CLI subcommand prints
+//! the report (`--deny-warnings` for CI).
+//!
+//! [`DeadCodeEliminate`]: crate::compiler::passes::DeadCodeEliminate
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::compiler::ir::{IrInstr, IrOp, IrProgram, Operand, RegId};
+use crate::compiler::passes;
+use crate::compiler::schedule::CompiledModel;
+use crate::rmt::program::Program;
+use crate::rmt::{ChipConfig, ContainerId};
+
+/// How bad a violation is. Errors block publication; warnings are
+/// advisory (CI escalates them with `--deny-warnings`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+/// What went wrong. Each kind corresponds to one static check; the
+/// golden tests in `tests/verify_diag.rs` pin the exact list a seeded
+/// illegal program produces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// A register/container is read before anything wrote it (and the
+    /// parser does not extract into it).
+    UndefinedRead,
+    /// A store whose value no later instruction observes (warning;
+    /// computed on the optimized tape — DCE reaps these).
+    DeadStore,
+    /// The conservative value bound of an op exceeds the destination
+    /// container's width mask: the store would silently truncate.
+    Overflow,
+    /// A `live_out` register is never written and is not entry-defined.
+    UnwrittenOutput,
+    /// An element uses more VLIW op slots than the chip provides.
+    OpBudget,
+    /// An element's match table exceeds the per-element SRAM budget.
+    SramBudget,
+    /// The program needs more than one pipeline pass (recirculation
+    /// divides line rate — warning severity).
+    Recirculation,
+    /// The program has no elements.
+    EmptyProgram,
+    /// Structural invalidity (container out of range, double write,
+    /// popcnt on a stock chip, action-data arity, malformed IR).
+    Malformed,
+    /// A pass failed translation validation (the rewritten program is
+    /// not `live_out`-equivalent to its input).
+    Translation,
+}
+
+impl ViolationKind {
+    /// Stable short code used in rendered reports.
+    pub fn code(self) -> &'static str {
+        match self {
+            ViolationKind::UndefinedRead => "undefined-read",
+            ViolationKind::DeadStore => "dead-store",
+            ViolationKind::Overflow => "overflow",
+            ViolationKind::UnwrittenOutput => "unwritten-output",
+            ViolationKind::OpBudget => "op-budget",
+            ViolationKind::SramBudget => "sram-budget",
+            ViolationKind::Recirculation => "recirculation",
+            ViolationKind::EmptyProgram => "empty-program",
+            ViolationKind::Malformed => "malformed",
+            ViolationKind::Translation => "translation",
+        }
+    }
+}
+
+/// One diagnostic with provenance: which stage (element index for
+/// program-level checks, block index for IR-level checks), which op
+/// within it, and what the analysis concluded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub kind: ViolationKind,
+    pub severity: Severity,
+    /// Element index (program checks) / block index (IR checks);
+    /// `None` for program-wide findings.
+    pub stage: Option<usize>,
+    /// Label of the offending element or block (empty if program-wide).
+    pub label: String,
+    /// Op / instruction index within the stage, where applicable.
+    pub op: Option<usize>,
+    pub message: String,
+}
+
+impl Violation {
+    fn new(kind: ViolationKind, severity: Severity, message: String) -> Self {
+        Self { kind, severity, stage: None, label: String::new(), op: None, message }
+    }
+
+    fn error(kind: ViolationKind, message: String) -> Self {
+        Self::new(kind, Severity::Error, message)
+    }
+
+    fn warning(kind: ViolationKind, message: String) -> Self {
+        Self::new(kind, Severity::Warning, message)
+    }
+
+    fn at(mut self, stage: usize, label: &str) -> Self {
+        self.stage = Some(stage);
+        self.label = label.to_string();
+        self
+    }
+
+    fn at_op(mut self, op: usize) -> Self {
+        self.op = Some(op);
+        self
+    }
+
+    /// Aggregate op-budget breach (no per-element provenance); the
+    /// [`ResourceReport`](crate::compiler::ResourceReport) roll-up uses
+    /// this, the per-element form comes from [`verify_program`].
+    pub(crate) fn op_budget_exceeded(peak: usize, budget: usize) -> Self {
+        Self::error(
+            ViolationKind::OpBudget,
+            format!("peak element uses {peak} VLIW op slots of the {budget} budget"),
+        )
+    }
+
+    /// Multi-pass occupancy warning shared by [`verify_program`] and
+    /// the resource-report roll-up.
+    pub(crate) fn recirculation(used: usize, available: usize, passes: usize) -> Self {
+        Self::warning(
+            ViolationKind::Recirculation,
+            format!(
+                "{used} elements exceed the {available}-element pipeline: \
+                 {passes} passes (each recirculation divides line rate)"
+            ),
+        )
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        write!(f, "{sev}[{}]", self.kind.code())?;
+        if let Some(s) = self.stage {
+            write!(f, " stage {s}")?;
+            if !self.label.is_empty() {
+                write!(f, " '{}'", self.label)?;
+            }
+        }
+        if let Some(o) = self.op {
+            write!(f, " op {o}")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// The result of a verification run: every violation found, in
+/// deterministic program order (program-wide findings first, then per
+/// stage, then per op).
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub violations: Vec<Violation>,
+}
+
+impl VerifyReport {
+    /// No violations at all, warnings included.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn n_errors(&self) -> usize {
+        self.violations.iter().filter(|v| v.severity == Severity::Error).count()
+    }
+
+    pub fn n_warnings(&self) -> usize {
+        self.violations.iter().filter(|v| v.severity == Severity::Warning).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.n_errors() > 0
+    }
+
+    /// Does this report pass? Errors always fail; warnings fail only
+    /// under `deny_warnings` (the CI mode).
+    pub fn ok(&self, deny_warnings: bool) -> bool {
+        !self.has_errors() && !(deny_warnings && !self.violations.is_empty())
+    }
+
+    /// Drop warnings, keep errors (used on the pre-optimization tape,
+    /// where dead stores are expected — see [`verify_compiled`]).
+    pub fn errors_only(mut self) -> Self {
+        self.violations.retain(|v| v.severity == Severity::Error);
+        self
+    }
+
+    /// Append another report's findings.
+    pub fn absorb(&mut self, other: VerifyReport) {
+        self.violations.extend(other.violations);
+    }
+
+    /// Human-readable report, one line per violation plus a summary.
+    pub fn render(&self) -> String {
+        if self.violations.is_empty() {
+            return "verify: clean — no violations\n".to_string();
+        }
+        let mut s = String::new();
+        for v in &self.violations {
+            s.push_str(&v.to_string());
+            s.push('\n');
+        }
+        s.push_str(&format!(
+            "verify: {} error(s), {} warning(s)\n",
+            self.n_errors(),
+            self.n_warnings()
+        ));
+        s
+    }
+
+    /// One-line digest of the errors, for embedding in an `Error`.
+    pub fn error_digest(&self) -> String {
+        let msgs: Vec<String> = self
+            .violations
+            .iter()
+            .filter(|v| v.severity == Severity::Error)
+            .map(|v| v.to_string())
+            .collect();
+        msgs.join("; ")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Program-level checks: chip-legality budgeting + element dataflow
+// ---------------------------------------------------------------------------
+
+/// Statically check a scheduled [`Program`] against `chip`: per-element
+/// VLIW op-slot and SRAM budgets, recirculation occupancy, element
+/// structural validity, and def-before-use at container granularity
+/// under the element snapshot semantics (every read in an element sees
+/// the pre-element PHV). `entry` lists the containers the parser
+/// extracts into — the only containers defined before stage 0.
+///
+/// This is the whole static story for *keyed* programs, which cannot
+/// be lowered to straight-line IR (weights vary per packet); isolated
+/// programs additionally get the IR-level analyses via
+/// [`verify_compiled`].
+pub fn verify_program(
+    program: &Program,
+    chip: &ChipConfig,
+    entry: &[ContainerId],
+) -> VerifyReport {
+    let mut report = VerifyReport::default();
+    if program.elements.is_empty() {
+        report
+            .violations
+            .push(Violation::error(ViolationKind::EmptyProgram, "program has no elements".into()));
+        return report;
+    }
+    let passes = program.passes(chip);
+    if passes > 1 {
+        report.violations.push(Violation::recirculation(
+            program.elements.len(),
+            chip.n_elements,
+            passes,
+        ));
+    }
+    let mut defined = vec![false; chip.phv.n_containers()];
+    for c in entry {
+        if let Some(d) = defined.get_mut(c.0 as usize) {
+            *d = true;
+        }
+    }
+    for (ei, e) in program.elements.iter().enumerate() {
+        let cost = e.slot_cost();
+        if cost > chip.max_ops_per_element {
+            report.violations.push(
+                Violation::error(
+                    ViolationKind::OpBudget,
+                    format!(
+                        "element uses {cost} VLIW op slots of the {} budget",
+                        chip.max_ops_per_element
+                    ),
+                )
+                .at(ei, &e.label),
+            );
+        }
+        let sram = e.sram_bits(&chip.phv);
+        if sram > chip.sram_bits_per_element {
+            report.violations.push(
+                Violation::error(
+                    ViolationKind::SramBudget,
+                    format!(
+                        "element needs {sram} SRAM bits of the {} budget",
+                        chip.sram_bits_per_element
+                    ),
+                )
+                .at(ei, &e.label),
+            );
+        }
+        // Structural validity with the op budget lifted: budget
+        // breaches are reported above under their own kind, so the
+        // element validator contributes only what it alone checks
+        // (container ranges, write-once, popcnt gating, action-data
+        // arity).
+        if let Err(err) = e.validate(&chip.phv, usize::MAX, chip.native_popcnt) {
+            report
+                .violations
+                .push(Violation::error(ViolationKind::Malformed, err.to_string()).at(ei, &e.label));
+        }
+        // Dataflow: reads (match keys included) check against the
+        // pre-element defined set; writes land after.
+        if let Some(t) = &e.match_stage {
+            for c in &t.key_containers {
+                if let Some(false) = defined.get(c.0 as usize).copied() {
+                    report.violations.push(
+                        Violation::error(
+                            ViolationKind::UndefinedRead,
+                            format!("match key {c} read before any write"),
+                        )
+                        .at(ei, &e.label),
+                    );
+                }
+            }
+        }
+        for (oi, op) in e.ops.iter().enumerate() {
+            for c in op.reads() {
+                if let Some(false) = defined.get(c.0 as usize).copied() {
+                    report.violations.push(
+                        Violation::error(
+                            ViolationKind::UndefinedRead,
+                            format!("container {c} read before any write"),
+                        )
+                        .at(ei, &e.label)
+                        .at_op(oi),
+                    );
+                }
+            }
+        }
+        for op in &e.ops {
+            if let Some(d) = defined.get_mut(op.dst().0 as usize) {
+                *d = true;
+            }
+        }
+    }
+    report
+}
+
+// ---------------------------------------------------------------------------
+// IR-level checks: dataflow + value-range/overflow analysis
+// ---------------------------------------------------------------------------
+
+/// Statically check straight-line IR: def-before-use, unwritten
+/// `live_out` registers, width/overflow analysis on every instruction,
+/// and dead-store detection (warnings). `entry` lists the registers
+/// holding parser-extracted values at program start — the analysis
+/// assumes those are within their container width (the parser stores
+/// masked); every other register starts 0 and *undefined*.
+pub fn verify_ir(ir: &IrProgram, entry: &[RegId]) -> VerifyReport {
+    let mut report = VerifyReport::default();
+    if let Err(e) = ir.validate() {
+        report.violations.push(Violation::error(ViolationKind::Malformed, e.to_string()));
+        return report;
+    }
+    let n = ir.n_regs;
+    let mut defined = vec![false; n];
+    let mut reported = vec![false; n];
+    // Per-register conservative upper bound on the runtime value.
+    let mut bound = vec![0u64; n];
+    for &r in entry {
+        if let Some(d) = defined.get_mut(r as usize) {
+            *d = true;
+            bound[r as usize] = u64::from(ir.masks[r as usize]);
+        }
+    }
+    for (bi, block) in ir.blocks.iter().enumerate() {
+        for (oi, instr) in block.instrs.iter().enumerate() {
+            for r in instr.reads() {
+                let r = r as usize;
+                if !defined[r] && !reported[r] {
+                    reported[r] = true;
+                    report.violations.push(
+                        Violation::error(
+                            ViolationKind::UndefinedRead,
+                            format!("r{r} read before any write"),
+                        )
+                        .at(bi, &block.label)
+                        .at_op(oi),
+                    );
+                }
+            }
+            let vb = value_bound(instr, &bound);
+            for d in instr.defs() {
+                let d = d as usize;
+                let mask = u64::from(ir.masks[d]);
+                if vb > mask {
+                    report.violations.push(
+                        Violation::error(
+                            ViolationKind::Overflow,
+                            format!(
+                                "{:?} result bound {vb:#x} exceeds r{d} container mask {mask:#x}",
+                                instr.op
+                            ),
+                        )
+                        .at(bi, &block.label)
+                        .at_op(oi),
+                    );
+                }
+                defined[d] = true;
+                bound[d] = vb.min(mask);
+            }
+        }
+    }
+    for &r in &ir.live_out {
+        if !defined[r as usize] {
+            report.violations.push(Violation::error(
+                ViolationKind::UnwrittenOutput,
+                format!("live-out r{r} is never written (and is not an entry register)"),
+            ));
+        }
+    }
+    // Dead stores: backward liveness from live_out. Warning severity —
+    // these are exactly what DCE removes, so on an optimized tape any
+    // survivor means a pass left observable garbage behind.
+    let mut live = vec![false; n];
+    for &r in &ir.live_out {
+        live[r as usize] = true;
+    }
+    let mut dead = Vec::new();
+    for (bi, block) in ir.blocks.iter().enumerate().rev() {
+        for (oi, instr) in block.instrs.iter().enumerate().rev() {
+            let (d1, d2) = (instr.dst as usize, instr.dst2 as usize);
+            if !live[d1] && !live[d2] {
+                dead.push(
+                    Violation::warning(
+                        ViolationKind::DeadStore,
+                        format!("store to r{} is never observed", instr.dst),
+                    )
+                    .at(bi, &block.label)
+                    .at_op(oi),
+                );
+            }
+            live[d1] = false;
+            live[d2] = false;
+            for r in instr.reads() {
+                live[r as usize] = true;
+            }
+        }
+    }
+    dead.reverse(); // report in program order
+    report.violations.extend(dead);
+    report
+}
+
+/// Smallest all-ones mask covering `x` (`0 -> 0`).
+fn bit_cover(x: u64) -> u64 {
+    if x == 0 {
+        0
+    } else {
+        u64::MAX >> x.leading_zeros()
+    }
+}
+
+/// Conservative upper bound of an instruction's 32-bit ALU result,
+/// given per-register operand bounds. The ideal-precision bound is
+/// computed in u64 and capped at `u32::MAX`: a 32-bit wrap is defined
+/// hardware semantics; the *caller* compares against the destination
+/// container mask to detect narrow-container truncation.
+fn value_bound(instr: &IrInstr, bound: &[u64]) -> u64 {
+    const W32: u64 = u32::MAX as u64;
+    let operand = |o: Operand| -> u64 {
+        match o {
+            Operand::Reg(r) => bound[r as usize],
+            Operand::Imm(v) => u64::from(v),
+        }
+    };
+    let a = operand(instr.a);
+    let ideal = match instr.op {
+        IrOp::Mov => a,
+        // Bitwise complement can set every ALU bit.
+        IrOp::Not | IrOp::Xnor => W32,
+        IrOp::And => a.min(operand(instr.b)),
+        IrOp::Or | IrOp::Xor => bit_cover(a.max(operand(instr.b))),
+        IrOp::Shl => match instr.b {
+            Operand::Imm(s) if s < 32 => a.min(W32) << s,
+            Operand::Imm(_) => 0, // hardware: oversized shift yields 0
+            Operand::Reg(_) => W32,
+        },
+        IrOp::Shr => match instr.b {
+            Operand::Imm(s) if s < 32 => a >> s,
+            Operand::Imm(_) => 0,
+            Operand::Reg(_) => a,
+        },
+        IrOp::Add => a.saturating_add(operand(instr.b)),
+        IrOp::Sub => match instr.b {
+            Operand::Imm(0) => a,
+            _ => W32, // wrap-around below zero can set every bit
+        },
+        IrOp::SetGe => 1,
+        IrOp::Min => a.min(operand(instr.b)),
+        IrOp::Max => a.max(operand(instr.b)),
+        IrOp::Popcnt => 32,
+        IrOp::ShrAnd => (a >> u32::from(instr.aux.min(63))).min(operand(instr.b)),
+        IrOp::AddExtract => operand(instr.b).saturating_add(1),
+        IrOp::Gather => {
+            let bits = instr
+                .gather
+                .iter()
+                .fold(0u64, |m, &(_, bit)| m | (1u64 << bit.min(63)));
+            bit_cover(a) | bits
+        }
+    };
+    ideal.min(W32)
+}
+
+// ---------------------------------------------------------------------------
+// Translation validation: live_out equivalence between pass input/output
+// ---------------------------------------------------------------------------
+
+/// Deterministic sample count for the concrete-execution fallback.
+pub const TV_SAMPLES: usize = 16;
+
+/// How a pass's output was shown equivalent to its input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Equivalence {
+    /// Symbolic value summaries of every `live_out` register matched:
+    /// the programs compute identical expressions (sound proof).
+    Proven,
+    /// Summaries differ structurally (e.g. SWAR tree vs. native
+    /// `Popcnt`), but the programs agreed on every `live_out` register
+    /// over [`TV_SAMPLES`] seeded random full register states.
+    Sampled,
+}
+
+/// Symbolic value node, hash-consed so shared subcomputations stay
+/// shared (the popcount sum chains would otherwise blow up
+/// exponentially as trees).
+#[derive(Clone, PartialEq, Eq, Hash)]
+enum Sym {
+    /// The initial (arbitrary) value of register `r`.
+    Input(RegId),
+    Const(u32),
+    /// `(op discriminant, aux, a, b)`; `b` is `None` for unary ops.
+    Op(u8, u8, u32, Option<u32>),
+    /// A store through a narrow container mask.
+    Mask(u32, u32),
+}
+
+#[derive(Default)]
+struct Interner {
+    nodes: Vec<Sym>,
+    ids: HashMap<Sym, u32>,
+}
+
+impl Interner {
+    fn intern(&mut self, s: Sym) -> u32 {
+        if let Some(&id) = self.ids.get(&s) {
+            return id;
+        }
+        let id = self.nodes.len() as u32;
+        self.nodes.push(s.clone());
+        self.ids.insert(s, id);
+        id
+    }
+
+    fn constant(&mut self, v: u32) -> u32 {
+        self.intern(Sym::Const(v))
+    }
+
+    fn input(&mut self, r: RegId) -> u32 {
+        self.intern(Sym::Input(r))
+    }
+
+    fn const_of(&self, id: u32) -> Option<u32> {
+        match self.nodes[id as usize] {
+            Sym::Const(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Intern an op application with normalization: `Mov` vanishes,
+    /// all-constant operands fold, commutative operands sort by id.
+    fn op(&mut self, op: IrOp, aux: u8, a: u32, b: Option<u32>) -> u32 {
+        if op == IrOp::Mov {
+            return a;
+        }
+        if let Some(ca) = self.const_of(a) {
+            match b {
+                None => return self.constant(op.eval(ca, 0, aux)),
+                Some(bid) => {
+                    if let Some(cb) = self.const_of(bid) {
+                        return self.constant(op.eval(ca, cb, aux));
+                    }
+                }
+            }
+        }
+        let (a, b) = match (op, b) {
+            (
+                IrOp::And | IrOp::Or | IrOp::Xor | IrOp::Xnor | IrOp::Add | IrOp::Min | IrOp::Max,
+                Some(bid),
+            ) if bid < a => (bid, Some(a)),
+            _ => (a, b),
+        };
+        self.intern(Sym::Op(op as u8, aux, a, b))
+    }
+
+    /// Intern a masked store: full-width masks vanish, constants fold,
+    /// re-masking with the same mask is idempotent.
+    fn mask(&mut self, m: u32, v: u32) -> u32 {
+        if m == u32::MAX {
+            return v;
+        }
+        if let Some(c) = self.const_of(v) {
+            return self.constant(c & m);
+        }
+        if let Sym::Mask(m2, _) = self.nodes[v as usize] {
+            if m2 == m {
+                return v;
+            }
+        }
+        self.intern(Sym::Mask(m, v))
+    }
+}
+
+/// Build per-register symbolic summaries of a straight-line program.
+/// `Gather` desugars into primitive `And`/`Shl`/`Or` nodes so it needs
+/// no special node kind and folds like everything else.
+fn summarize(ir: &IrProgram, intern: &mut Interner) -> Vec<u32> {
+    let mut val: Vec<u32> = (0..ir.n_regs).map(|r| intern.input(r as RegId)).collect();
+    for block in &ir.blocks {
+        for instr in &block.instrs {
+            let a = match instr.a {
+                Operand::Reg(r) => val[r as usize],
+                Operand::Imm(v) => intern.constant(v),
+            };
+            let v = if instr.op == IrOp::Gather {
+                let mut acc = a;
+                for &(from, bit) in &instr.gather {
+                    let one = intern.constant(1);
+                    let lsb = intern.op(IrOp::And, 0, val[from as usize], Some(one));
+                    let sh = intern.constant(u32::from(bit));
+                    let shifted = intern.op(IrOp::Shl, 0, lsb, Some(sh));
+                    acc = intern.op(IrOp::Or, 0, acc, Some(shifted));
+                }
+                acc
+            } else if instr.op.uses_b() {
+                let b = match instr.b {
+                    Operand::Reg(r) => val[r as usize],
+                    Operand::Imm(v) => intern.constant(v),
+                };
+                intern.op(instr.op, instr.aux, a, Some(b))
+            } else {
+                intern.op(instr.op, instr.aux, a, None)
+            };
+            val[instr.dst as usize] = intern.mask(ir.masks[instr.dst as usize], v);
+            val[instr.dst2 as usize] = intern.mask(ir.masks[instr.dst2 as usize], v);
+        }
+    }
+    val
+}
+
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Decide whether `post` computes the same `live_out` values as `pre`
+/// for every initial register state (the pass-pipeline contract).
+///
+/// First tries the sound symbolic proof; on structural mismatch, falls
+/// back to `samples` deterministic seeded random full register states
+/// (fixed seed: translation validation must not flake). Returns *how*
+/// equivalence was established, or a description of the divergence.
+pub fn equivalent_on_live_out(
+    pre: &IrProgram,
+    post: &IrProgram,
+    samples: usize,
+) -> std::result::Result<Equivalence, String> {
+    if pre.live_out != post.live_out {
+        return Err(format!(
+            "live_out set changed: {:?} -> {:?}",
+            pre.live_out, post.live_out
+        ));
+    }
+    if pre.n_containers != post.n_containers {
+        return Err(format!(
+            "container file resized: {} -> {}",
+            pre.n_containers, post.n_containers
+        ));
+    }
+    for p in [pre, post] {
+        if let Err(e) = p.validate() {
+            return Err(format!("malformed program: {e}"));
+        }
+    }
+    for &r in &pre.live_out {
+        if pre.masks[r as usize] != post.masks[r as usize] {
+            return Err(format!("live-out r{r} store mask changed"));
+        }
+    }
+    let mut intern = Interner::default();
+    let s_pre = summarize(pre, &mut intern);
+    let s_post = summarize(post, &mut intern);
+    if pre
+        .live_out
+        .iter()
+        .all(|&r| s_pre[r as usize] == s_post[r as usize])
+    {
+        return Ok(Equivalence::Proven);
+    }
+    // Structural mismatch: deterministic concrete sampling over full
+    // random register states (raw 32-bit values — the pass contract is
+    // "for every input register state", masked or not).
+    let n = pre.n_regs.max(post.n_regs);
+    let mut state = 0x0005_EED0_BADF_00D5u64;
+    for sample in 0..samples {
+        let mut base = vec![0u32; n];
+        for slot in base.iter_mut() {
+            *slot = splitmix(&mut state) as u32;
+        }
+        let mut r_pre = base[..pre.n_regs].to_vec();
+        pre.execute(&mut r_pre);
+        let mut r_post = base[..post.n_regs].to_vec();
+        post.execute(&mut r_post);
+        for &r in &pre.live_out {
+            let (x, y) = (r_pre[r as usize], r_post[r as usize]);
+            if x != y {
+                return Err(format!(
+                    "live-out r{r} diverged on sample {sample}: {x:#010x} vs {y:#010x}"
+                ));
+            }
+        }
+    }
+    Ok(Equivalence::Sampled)
+}
+
+// ---------------------------------------------------------------------------
+// Whole-artifact verification (the publish gate)
+// ---------------------------------------------------------------------------
+
+/// Run every static layer over a compiled model: chip-legality and
+/// element dataflow on the scheduled program, then — for isolated
+/// programs, which lower to straight-line IR — dataflow/overflow on
+/// the raw tape (errors only: the pre-optimization tape legitimately
+/// carries dead stores that DCE exists to reap), the validated host
+/// pass pipeline (translation validation after every pass), and the
+/// full analysis including dead-store warnings on the optimized tape.
+///
+/// Keyed programs cannot lower (weights vary per packet); for them the
+/// program-level checks are the whole static story.
+pub fn verify_compiled(compiled: &CompiledModel) -> VerifyReport {
+    let entry: Vec<ContainerId> = compiled.parser.extracts.iter().map(|e| e.dst).collect();
+    let mut report = verify_program(&compiled.program, &compiled.chip, &entry);
+    if let Ok(ir) = IrProgram::lower(&compiled.program, &compiled.chip.phv, &compiled.layout.output)
+    {
+        let entry_regs: Vec<RegId> = entry.iter().map(|c| c.0).collect();
+        report.absorb(verify_ir(&ir, &entry_regs).errors_only());
+        let mut opt = ir;
+        match passes::run_pipeline_validated(&mut opt, &passes::host_pipeline()) {
+            Ok(_) => report.absorb(verify_ir(&opt, &entry_regs)),
+            Err(e) => report
+                .violations
+                .push(Violation::error(ViolationKind::Translation, e.to_string())),
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::BnnModel;
+    use crate::compiler::{Compiler, CompilerOptions, InputEncoding};
+    use crate::rmt::ChipConfig;
+
+    fn instr(op: IrOp, dst: RegId, a: Operand, b: Operand) -> IrInstr {
+        IrInstr { op, dst, dst2: dst, a, b, aux: 0, gather: Vec::new() }
+    }
+
+    fn one_block(instrs: Vec<IrInstr>, n_regs: usize, masks: Vec<u32>, live_out: Vec<RegId>) -> IrProgram {
+        IrProgram {
+            blocks: vec![crate::compiler::ir::IrBlock {
+                label: "t".into(),
+                step: crate::rmt::StepKind::Other,
+                instrs,
+            }],
+            n_containers: n_regs,
+            n_regs,
+            live_out,
+            masks,
+        }
+    }
+
+    #[test]
+    fn bit_cover_is_smallest_all_ones_mask() {
+        assert_eq!(bit_cover(0), 0);
+        assert_eq!(bit_cover(1), 1);
+        assert_eq!(bit_cover(2), 3);
+        assert_eq!(bit_cover(0x13), 0x1F);
+        assert_eq!(bit_cover(u64::from(u32::MAX)), u64::from(u32::MAX));
+    }
+
+    #[test]
+    fn clean_straight_line_ir_verifies() {
+        let ir = one_block(
+            vec![
+                instr(IrOp::Add, 1, Operand::Reg(0), Operand::Imm(1)),
+                instr(IrOp::Mov, 0, Operand::Reg(1), Operand::Imm(0)),
+            ],
+            2,
+            vec![u32::MAX; 2],
+            vec![0],
+        );
+        let report = verify_ir(&ir, &[0]);
+        assert!(report.is_clean(), "{}", report.render());
+    }
+
+    #[test]
+    fn narrow_container_overflow_is_flagged_but_wrap_is_not() {
+        // r0 is an 8-bit container; the add's ideal bound is 0xFF + 0xFF.
+        let ir = one_block(
+            vec![instr(IrOp::Add, 0, Operand::Reg(1), Operand::Reg(1))],
+            2,
+            vec![0xFF, 0xFF],
+            vec![0],
+        );
+        let report = verify_ir(&ir, &[1]);
+        assert_eq!(report.n_errors(), 1, "{}", report.render());
+        assert_eq!(report.violations[0].kind, ViolationKind::Overflow);
+        // Same add on full 32-bit containers: wrapping is defined ALU
+        // semantics, never a width violation.
+        let ir32 = one_block(
+            vec![instr(IrOp::Add, 0, Operand::Reg(1), Operand::Reg(1))],
+            2,
+            vec![u32::MAX; 2],
+            vec![0],
+        );
+        assert!(verify_ir(&ir32, &[1]).is_clean());
+    }
+
+    #[test]
+    fn dead_store_is_a_warning_not_an_error() {
+        let ir = one_block(
+            vec![
+                instr(IrOp::Mov, 1, Operand::Reg(0), Operand::Imm(0)), // dead
+                instr(IrOp::Mov, 2, Operand::Reg(0), Operand::Imm(0)),
+            ],
+            3,
+            vec![u32::MAX; 3],
+            vec![2],
+        );
+        let report = verify_ir(&ir, &[0]);
+        assert_eq!(report.n_errors(), 0, "{}", report.render());
+        assert_eq!(report.n_warnings(), 1);
+        assert_eq!(report.violations[0].kind, ViolationKind::DeadStore);
+        assert!(report.ok(false) && !report.ok(true));
+    }
+
+    #[test]
+    fn symbolic_proof_handles_shared_subexpressions() {
+        // A doubling chain that would be exponential as a tree: the
+        // hash-consed summary stays linear and proves a block merge.
+        let mut instrs = Vec::new();
+        for _ in 0..64 {
+            instrs.push(instr(IrOp::Add, 0, Operand::Reg(0), Operand::Reg(0)));
+        }
+        let pre = one_block(instrs, 1, vec![u32::MAX], vec![0]);
+        let post = pre.clone();
+        assert_eq!(equivalent_on_live_out(&pre, &post, 4), Ok(Equivalence::Proven));
+    }
+
+    #[test]
+    fn constant_folding_and_commutativity_normalize() {
+        let pre = one_block(
+            vec![instr(IrOp::Add, 0, Operand::Reg(1), Operand::Reg(2))],
+            3,
+            vec![u32::MAX; 3],
+            vec![0],
+        );
+        let post = one_block(
+            vec![instr(IrOp::Add, 0, Operand::Reg(2), Operand::Reg(1))],
+            3,
+            vec![u32::MAX; 3],
+            vec![0],
+        );
+        assert_eq!(equivalent_on_live_out(&pre, &post, 4), Ok(Equivalence::Proven));
+        let c1 = one_block(
+            vec![instr(IrOp::Add, 0, Operand::Imm(2), Operand::Imm(3))],
+            1,
+            vec![u32::MAX],
+            vec![0],
+        );
+        let c2 = one_block(
+            vec![instr(IrOp::Mov, 0, Operand::Imm(5), Operand::Imm(0))],
+            1,
+            vec![u32::MAX],
+            vec![0],
+        );
+        assert_eq!(equivalent_on_live_out(&c1, &c2, 4), Ok(Equivalence::Proven));
+    }
+
+    #[test]
+    fn divergent_programs_are_rejected() {
+        let pre = one_block(
+            vec![instr(IrOp::Add, 0, Operand::Reg(1), Operand::Imm(1))],
+            2,
+            vec![u32::MAX; 2],
+            vec![0],
+        );
+        let post = one_block(
+            vec![instr(IrOp::Add, 0, Operand::Reg(1), Operand::Imm(2))],
+            2,
+            vec![u32::MAX; 2],
+            vec![0],
+        );
+        assert!(equivalent_on_live_out(&pre, &post, 8).is_err());
+    }
+
+    #[test]
+    fn compiled_model_verifies_clean_on_both_chips() {
+        for chip in [ChipConfig::rmt(), ChipConfig::rmt_with_popcnt()] {
+            let model = BnnModel::random(32, &[32, 8], 3);
+            let opts = CompilerOptions {
+                input: InputEncoding::PayloadLe { offset: 0 },
+                ..Default::default()
+            };
+            let compiled = Compiler::new(chip, opts).compile(&model).unwrap();
+            let report = verify_compiled(&compiled);
+            assert!(report.is_clean(), "{}", report.render());
+        }
+    }
+}

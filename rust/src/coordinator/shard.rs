@@ -794,6 +794,9 @@ impl ShardedEngine {
 /// `time_until_deadline`, so a stalled (but open) stream still has its
 /// partial batch flushed at the `max_delay` bound instead of sitting
 /// until close.
+// Worker threads receive each shared handle individually (they are
+// moved into the spawn closure); bundling them into a struct would
+// just relocate the argument list.
 #[allow(clippy::too_many_arguments)]
 fn shard_worker(
     shard: usize,

@@ -440,9 +440,7 @@ impl Deployment {
                     Compiler::new(self.chip.clone(), self.opts.clone())
                         .compile(&new_model)?,
                 );
-                *entry.model.lock().expect("model lock poisoned") =
-                    Arc::clone(&new_model);
-                slot.publish(ModelArtifact::new(new_model, compiled))
+                publish_verified(entry, slot, new_model, compiled)?
             }
             (None, Some(keyed)) => {
                 // Keyed mode: recompile the whole shared program with the
@@ -467,16 +465,39 @@ impl Deployment {
                             MultiModelOptions { id_offset: keyed.id_offset },
                         )?,
                 );
+                // Verify the artifact BEFORE touching the registry, so
+                // a refused publish leaves registry and slot in sync.
+                let default_model = Arc::new(pairs[0].1.clone());
+                let artifact = ModelArtifact::new(default_model, compiled)?;
                 *entry.model.lock().expect("model lock poisoned") =
                     Arc::clone(&new_model);
-                let default_model = Arc::new(pairs[0].1.clone());
-                keyed.slot.publish(ModelArtifact::new(default_model, compiled))
+                keyed.slot.publish(artifact)
             }
             (None, None) => unreachable!("entry without slot in isolated mode"),
         };
         entry.counters.swaps.inc();
         Ok(version)
     }
+}
+
+/// The last step of an isolated-mode hot-swap: build the artifact —
+/// which runs the publish gate in [`ModelArtifact::new`]
+/// (DESIGN.md §17) — and only then update the weight registry and
+/// publish to the slot. A refused artifact therefore leaves BOTH the
+/// serving slot and the registry exactly as they were (the
+/// swap-atomicity contract). Factored out of [`Deployment::swap_model`]
+/// so the gating tests can drive the real publish path with a
+/// deliberately-illegal compiled program, which the honest compiler
+/// never emits.
+fn publish_verified(
+    entry: &DeployEntry,
+    slot: &ModelSlot,
+    model: Arc<BnnModel>,
+    compiled: Arc<CompiledModel>,
+) -> Result<u64> {
+    let artifact = ModelArtifact::new(Arc::clone(&model), compiled)?;
+    *entry.model.lock().expect("model lock poisoned") = model;
+    Ok(slot.publish(artifact))
 }
 
 /// A controller-safe swap capability for ONE registered model of a
@@ -705,7 +726,7 @@ impl DeploymentBuilder {
                 );
                 let slot = Arc::new(ModelSlot::new(
                     "keyed-program",
-                    ModelArtifact::new(Arc::new(pairs[0].1.clone()), compiled),
+                    ModelArtifact::new(Arc::new(pairs[0].1.clone()), compiled)?,
                 ));
                 for (name, id, model) in resolved {
                     entries.push(DeployEntry {
@@ -728,7 +749,7 @@ impl DeploymentBuilder {
                     );
                     let slot = Arc::new(ModelSlot::new(
                         name.clone(),
-                        ModelArtifact::new(Arc::clone(&model), compiled),
+                        ModelArtifact::new(Arc::clone(&model), compiled)?,
                     ));
                     entries.push(DeployEntry {
                         name,
@@ -838,6 +859,83 @@ mod tests {
         assert!(err.is_err());
         assert_eq!(dep.version("m").unwrap(), 1, "failed swap must not publish");
         assert!(dep.swap_model("nope", a.clone()).is_err());
+    }
+
+    /// Compile honestly, then vandalize the program with an element
+    /// whose slot cost blows the chip's VLIW budget. The compiler never
+    /// emits this; the publish gate must still catch it (DESIGN.md §17).
+    fn doctored_compile(model: &BnnModel) -> CompiledModel {
+        use crate::rmt::{AluOp, ContainerId, Element, MicroOp, Src, StepKind};
+        let mut compiled = Compiler::rmt().compile(model).unwrap();
+        let over = compiled.chip.max_ops_per_element + 1;
+        let ops = vec![
+            MicroOp::Alu {
+                dst: ContainerId(0),
+                op: AluOp::Mov,
+                a: Src::Imm(1),
+                b: Src::Imm(0),
+            };
+            over
+        ];
+        compiled.program.elements.push(Element::new(
+            "doctored-over-budget",
+            StepKind::Other,
+            ops,
+        ));
+        compiled
+    }
+
+    #[test]
+    fn publish_gate_refuses_illegal_artifacts() {
+        let model = BnnModel::random(32, &[16, 1], 51);
+        let compiled = doctored_compile(&model);
+        let err = ModelArtifact::new(Arc::new(model), Arc::new(compiled))
+            .err()
+            .expect("over-budget artifact must be refused");
+        match err {
+            Error::Verify(msg) => {
+                assert!(msg.contains("op-budget"), "diagnostic names the kind: {msg}")
+            }
+            other => panic!("expected Error::Verify, got {other}"),
+        }
+    }
+
+    #[test]
+    fn failed_publish_leaves_slot_registry_and_serving_untouched() {
+        let model = BnnModel::random(32, &[16, 1], 52);
+        let dep = deployment_for(&model, BackendKind::Batched);
+        let mut session = dep.session("m").unwrap();
+        let mut gen = TraceGenerator::new(53);
+        let trace = gen.generate(&TraceKind::UniformIps, 32);
+
+        let entry = dep.entry("m").unwrap();
+        let slot = entry.slot.as_ref().unwrap();
+        let old_model =
+            Arc::clone(&entry.model.lock().expect("model lock poisoned"));
+        let new_model = Arc::new(BnnModel::random(32, &[16, 1], 54));
+        let err = publish_verified(
+            entry,
+            slot,
+            Arc::clone(&new_model),
+            Arc::new(doctored_compile(&new_model)),
+        );
+        assert!(matches!(err, Err(Error::Verify(_))), "{err:?}");
+
+        // The refused publish is a no-op on both halves of the swap:
+        // slot version unchanged, registry still holds the old weights.
+        assert_eq!(slot.version(), 1, "failed publish must not bump the slot");
+        assert!(Arc::ptr_eq(
+            &entry.model.lock().expect("model lock poisoned"),
+            &old_model,
+        ));
+        // And the live path keeps serving the old model bit-exact.
+        let preds = session.classify_trace(&trace.packets).unwrap();
+        for (i, &key) in trace.keys.iter().enumerate() {
+            let expect =
+                bnn::forward(&model, &PackedBits::from_u32(key)).get(0) as u32;
+            assert_eq!(preds[i] & 1, expect, "pkt {i} after refused publish");
+        }
+        assert_eq!(dep.stats("m").unwrap().swaps, 0);
     }
 
     #[test]

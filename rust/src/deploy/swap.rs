@@ -24,6 +24,7 @@ use std::sync::{Arc, Mutex};
 use crate::backend::SpecializedProgram;
 use crate::bnn::BnnModel;
 use crate::compiler::CompiledModel;
+use crate::error::{Error, Result};
 use crate::telemetry::Counter;
 
 /// Atomically replaceable `Arc<T>` with a monotone version counter.
@@ -78,12 +79,34 @@ pub struct ModelArtifact {
 
 impl ModelArtifact {
     /// Bundle a compiled model for publication, pre-specializing it.
-    /// Keyed programs simply skip specialization (`specialized: None`);
-    /// the backend selection path reports the error if such a
-    /// deployment asks for the specialized backend.
-    pub fn new(model: Arc<BnnModel>, compiled: Arc<CompiledModel>) -> Self {
-        let specialized = SpecializedProgram::build(&compiled).ok().map(Arc::new);
-        Self { model, compiled, specialized }
+    ///
+    /// This is the **publish gate** (DESIGN.md §17): the artifact is
+    /// statically verified (`compiler::verify` — dataflow, overflow,
+    /// chip budgets, translation-validated optimizer run) and refused
+    /// with [`Error::Verify`] on any error-severity violation, so an
+    /// illegal program can never reach a [`ModelSlot`] and the serving
+    /// model stays undisturbed. Keyed programs simply skip
+    /// specialization (`specialized: None`); the backend selection
+    /// path reports the error if such a deployment asks for the
+    /// specialized backend.
+    pub fn new(model: Arc<BnnModel>, compiled: Arc<CompiledModel>) -> Result<Self> {
+        let report = compiled.verify();
+        if report.has_errors() {
+            return Err(Error::Verify(format!(
+                "refusing to publish artifact with {} violation(s): {}",
+                report.n_errors(),
+                report.error_digest()
+            )));
+        }
+        let specialized = match SpecializedProgram::build(&compiled) {
+            Ok(s) => Some(Arc::new(s)),
+            // A translation-validation failure is a publish blocker …
+            Err(Error::Verify(m)) => return Err(Error::Verify(m)),
+            // … but "cannot specialize" (keyed tables) is not: those
+            // artifacts serve through the interpreted backends.
+            Err(_) => None,
+        };
+        Ok(Self { model, compiled, specialized })
     }
 }
 

@@ -32,6 +32,12 @@ pub enum Error {
     /// Configuration error (CLI, serving).
     Config(String),
 
+    /// Static verification rejected an artifact at publish time
+    /// (`compiler::verify`): the program failed dataflow, overflow,
+    /// chip-budget, or translation-validation checks. The serving
+    /// model is left undisturbed.
+    Verify(String),
+
     Io(std::io::Error),
 }
 
@@ -45,6 +51,7 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Verify(m) => write!(f, "verification failed: {m}"),
             Error::Io(e) => write!(f, "{e}"),
         }
     }

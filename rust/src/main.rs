@@ -11,6 +11,8 @@
 //! n2net report table1|throughput|popcnt-ablation|area|usecase|memory|all
 //! n2net compile [--in-bits N] [--layers 64,32] [--native-popcnt]
 //!               [--schedule] [--p4 FILE] [--seed S]
+//! n2net check   [--in-bits N] [--layers 64,32] [--native-popcnt]
+//!               [--seed S] [--prefix-classifier] [--deny-warnings] [--help]
 //! n2net timing  [--in-bits N] [--layers 64,32] [--native-popcnt]
 //!               [--seed S] [--packets N] [--help]
 //! n2net run     [--packets N] [--workers W] [--seed S] [--artifacts DIR]
@@ -84,7 +86,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: n2net <report|compile|timing|run|serve|autopilot|swap|selftest> [options]\n\
+        "usage: n2net <report|compile|check|timing|run|serve|autopilot|swap|selftest> [options]\n\
          see `n2net report all` for every paper artifact and\n\
          `n2net serve --help` / `n2net autopilot --help` for serving options"
     );
@@ -94,6 +96,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("report") => cmd_report(args),
         Some("compile") => cmd_compile(args),
+        Some("check") => cmd_check(args),
         Some("timing") => cmd_timing(args),
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
@@ -291,6 +294,67 @@ fn cmd_compile(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, &p4)?;
         println!("wrote P4 description to {path}");
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// check — static verification of a compiled model (DESIGN.md §17)
+// ---------------------------------------------------------------------------
+
+fn check_help() -> String {
+    "usage: n2net check [options]\n\
+     static verification (n2net::compiler::verify, DESIGN.md §17): compile\n\
+     a model and run the publish-gate analyses over it without executing a\n\
+     single packet — dataflow soundness, container-width overflow, chip\n\
+     budgets, and a translation-validated optimizer run. Exits non-zero on\n\
+     any error (or any warning under --deny-warnings), for CI smoke use.\n\
+     \x20 --in-bits N           input activation width (default 32)\n\
+     \x20 --layers A,B          layer sizes (default 64,32)\n\
+     \x20 --native-popcnt       chip with the §3 POPCNT primitive\n\
+     \x20 --seed S              synthetic weight seed\n\
+     \x20 --prefix-classifier   check the control-plane prefix classifier\n\
+     \x20                       instead of a random model\n\
+     \x20 --deny-warnings       treat warnings as failures"
+        .into()
+}
+
+fn cmd_check(args: &Args) -> anyhow::Result<()> {
+    if args.has_flag("help") {
+        println!("{}", check_help());
+        return Ok(());
+    }
+    let chip = chip_for(args);
+    let (model, what) = if args.has_flag("prefix-classifier") {
+        // The hand-crafted /16 matcher the control plane hot-swaps in
+        // (`controlplane::prefix_classifier`) — worth gating in CI
+        // because it is NOT a random model from the usual generator.
+        (prefix_classifier(0xFFFF_0000), "prefix-classifier 32b -> [1]".to_string())
+    } else {
+        let in_bits = args.opt_usize("in-bits", 32)?;
+        let layers = args.opt_usize_list("layers", &[64, 32])?;
+        let seed = args.opt_u64("seed", 0)?;
+        (
+            BnnModel::random(in_bits, &layers, seed),
+            format!("random BNN {in_bits}b -> {layers:?} (seed {seed})"),
+        )
+    };
+    let compiled = Compiler::new(chip, CompilerOptions::default()).compile(&model)?;
+    let report = compiled.verify();
+    println!(
+        "check {what} on {} ({} elements, {} pass(es))",
+        if compiled.chip.native_popcnt { "rmt+popcnt" } else { "rmt" },
+        compiled.program.n_elements(),
+        compiled.resources.passes,
+    );
+    print!("{}", report.render());
+    let deny = args.has_flag("deny-warnings");
+    ensure!(
+        report.ok(deny),
+        "verification failed ({} error(s), {} warning(s){})",
+        report.n_errors(),
+        report.n_warnings(),
+        if deny { ", warnings denied" } else { "" },
+    );
     Ok(())
 }
 
@@ -901,6 +965,9 @@ fn serve_single(
 /// pipeline program serves them all, the model id carried in each
 /// packet at [`MODEL_ID_OFFSET`] selecting the weights — the
 /// multi-tenant / model-switching deployment shape.
+// One-shot CLI plumbing: the params mirror the flag list 1:1 and the
+// function has a single call site, so a params struct would only add
+// indirection.
 #[allow(clippy::too_many_arguments)]
 fn serve_keyed(
     args: &Args,

@@ -52,6 +52,40 @@ fn timing_help_documents_the_knobs() {
 }
 
 #[test]
+fn check_help_documents_the_knobs() {
+    let out = n2net(&["check", "--help"]);
+    assert!(out.status.success(), "check --help failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for flag in
+        ["--in-bits", "--layers", "--deny-warnings", "--prefix-classifier"]
+    {
+        assert!(stdout.contains(flag), "check --help missing {flag}:\n{stdout}");
+    }
+    assert!(stdout.contains("static verification"), "{stdout}");
+}
+
+#[test]
+fn check_passes_cleanly_on_compiler_output() {
+    // ISSUE 8 acceptance (CI verify-smoke shape): `check
+    // --deny-warnings` over an honestly-compiled model must exit 0 with
+    // a clean report — the compiler's own output carries zero
+    // violations, warnings included.
+    for extra in [&[][..], &["--native-popcnt"][..], &["--prefix-classifier"][..]]
+    {
+        let mut args = vec!["check", "--deny-warnings", "--seed", "2"];
+        args.extend_from_slice(extra);
+        let out = n2net(&args);
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "check {extra:?} failed:\n{stdout}\n{stderr}");
+        assert!(
+            stdout.contains("verify: clean"),
+            "check {extra:?} not clean:\n{stdout}"
+        );
+    }
+}
+
+#[test]
 fn timing_run_prints_stage_table_width_scaling_and_host_comparison() {
     // ISSUE 7 acceptance: a hermetic `timing` run (synthetic weights,
     // no artifacts) prints the per-stage cycle/occupancy table, the

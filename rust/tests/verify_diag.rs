@@ -1,0 +1,423 @@
+//! Static-verifier diagnostics (ISSUE 8 acceptance):
+//!
+//! V1. Golden tests: hand-built illegal programs produce the EXACT
+//!     `Violation` list — kind, severity, stage, and op provenance —
+//!     for each seeded-illegal class (overflow, undefined read,
+//!     over-budget element, recirculation, unwritten output).
+//! V2. Property: everything `Compiler::compile` (and `compile_multi`)
+//!     accepts passes verification with zero errors — and with zero
+//!     warnings when the program fits in one pipeline pass (the
+//!     `check --deny-warnings` CI contract).
+//! V3. Translation validation: the honest pass pipeline validates
+//!     (pack and DCE *proven*, strength reduction *sampled*), and a
+//!     deliberately semantics-breaking pass is rejected with
+//!     `Error::Verify` while the IR rolls back to the last validated
+//!     state.
+
+use n2net::bnn::BnnModel;
+use n2net::compiler::ir::{IrBlock, IrInstr, IrOp, IrProgram, Operand, RegId};
+use n2net::compiler::passes::{self, Pass};
+use n2net::compiler::verify::{self, Equivalence, Severity, ViolationKind};
+use n2net::compiler::{
+    Compiler, CompilerOptions, InputEncoding, MultiModelOptions,
+};
+use n2net::error::Error;
+use n2net::rmt::{
+    AluOp, ChipConfig, ContainerId, Element, MicroOp, Src, StepKind,
+};
+use n2net::util::prop::{self, pow2_in};
+use n2net::util::rng::Rng;
+
+fn instr(op: IrOp, dst: RegId, a: Operand, b: Operand) -> IrInstr {
+    IrInstr { op, dst, dst2: dst, a, b, aux: 0, gather: Vec::new() }
+}
+
+fn one_block(
+    instrs: Vec<IrInstr>,
+    n_regs: usize,
+    masks: Vec<u32>,
+    live_out: Vec<RegId>,
+) -> IrProgram {
+    IrProgram {
+        blocks: vec![IrBlock { label: "t".into(), step: StepKind::Other, instrs }],
+        n_containers: n_regs,
+        n_regs,
+        live_out,
+        masks,
+    }
+}
+
+/// The provenance tuple the golden tests pin.
+fn shape(v: &verify::Violation) -> (ViolationKind, Severity, Option<usize>, Option<usize>) {
+    (v.kind, v.severity, v.stage, v.op)
+}
+
+// ---------------------------------------------------------------------------
+// V1 — golden diagnostics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_narrow_container_overflow() {
+    // r0 is an 8-bit container; Add's ideal bound 0xFF + 0xFF = 0x1FE
+    // cannot be stored without truncation.
+    let ir = one_block(
+        vec![
+            instr(IrOp::Mov, 2, Operand::Reg(1), Operand::Imm(0)),
+            instr(IrOp::Add, 0, Operand::Reg(2), Operand::Reg(2)),
+        ],
+        3,
+        vec![0xFF, 0xFF, 0xFF],
+        vec![0],
+    );
+    let report = verify::verify_ir(&ir, &[1]);
+    let shapes: Vec<_> = report.violations.iter().map(shape).collect();
+    assert_eq!(
+        shapes,
+        vec![(ViolationKind::Overflow, Severity::Error, Some(0), Some(1))],
+        "{}",
+        report.render()
+    );
+    assert!(report.violations[0].message.contains("0x1fe"), "{}", report.render());
+}
+
+#[test]
+fn golden_undefined_read_reports_first_use_only() {
+    // r3 is never written: flagged at its FIRST read (op 1), and only
+    // once even though op 2 reads it again.
+    let ir = one_block(
+        vec![
+            instr(IrOp::Mov, 1, Operand::Reg(0), Operand::Imm(0)),
+            instr(IrOp::Add, 2, Operand::Reg(3), Operand::Reg(1)),
+            instr(IrOp::Or, 2, Operand::Reg(3), Operand::Reg(2)),
+        ],
+        4,
+        vec![u32::MAX; 4],
+        vec![2],
+    );
+    let report = verify::verify_ir(&ir, &[0]);
+    let shapes: Vec<_> = report.violations.iter().map(shape).collect();
+    assert_eq!(
+        shapes,
+        vec![(ViolationKind::UndefinedRead, Severity::Error, Some(0), Some(1))],
+        "{}",
+        report.render()
+    );
+    assert!(report.violations[0].message.contains("r3"), "{}", report.render());
+}
+
+#[test]
+fn golden_unwritten_live_out() {
+    let ir = one_block(
+        vec![instr(IrOp::Mov, 1, Operand::Reg(0), Operand::Imm(0))],
+        3,
+        vec![u32::MAX; 3],
+        vec![1, 2],
+    );
+    let report = verify::verify_ir(&ir, &[0]);
+    let shapes: Vec<_> = report.violations.iter().map(shape).collect();
+    assert_eq!(
+        shapes,
+        vec![(ViolationKind::UnwrittenOutput, Severity::Error, None, None)],
+        "{}",
+        report.render()
+    );
+    assert!(report.violations[0].message.contains("r2"), "{}", report.render());
+}
+
+#[test]
+fn golden_over_budget_element() {
+    // 8 one-slot ops on a 4-slot chip: exactly one op-budget error with
+    // element provenance, nothing else (the ops themselves are legal).
+    let chip = ChipConfig { max_ops_per_element: 4, ..ChipConfig::rmt() };
+    let ops: Vec<MicroOp> = (1..=8)
+        .map(|i| MicroOp::Alu {
+            dst: ContainerId(i),
+            op: AluOp::Mov,
+            a: Src::Container(ContainerId(0)),
+            b: Src::Imm(0),
+        })
+        .collect();
+    let program = n2net::rmt::Program::new(vec![Element::new(
+        "fat",
+        StepKind::Other,
+        ops,
+    )]);
+    let report = verify::verify_program(&program, &chip, &[ContainerId(0)]);
+    let shapes: Vec<_> = report.violations.iter().map(shape).collect();
+    assert_eq!(
+        shapes,
+        vec![(ViolationKind::OpBudget, Severity::Error, Some(0), None)],
+        "{}",
+        report.render()
+    );
+    assert_eq!(report.violations[0].label, "fat");
+    assert!(report.violations[0].message.contains("8"), "{}", report.render());
+}
+
+#[test]
+fn golden_recirculation_is_a_warning() {
+    let chip = ChipConfig { n_elements: 1, ..ChipConfig::rmt() };
+    let element = |label: &str, dst: u16| {
+        Element::new(
+            label,
+            StepKind::Other,
+            vec![MicroOp::Alu {
+                dst: ContainerId(dst),
+                op: AluOp::Mov,
+                a: Src::Container(ContainerId(0)),
+                b: Src::Imm(0),
+            }],
+        )
+    };
+    let program =
+        n2net::rmt::Program::new(vec![element("e0", 1), element("e1", 2)]);
+    let report = verify::verify_program(&program, &chip, &[ContainerId(0)]);
+    let shapes: Vec<_> = report.violations.iter().map(shape).collect();
+    assert_eq!(
+        shapes,
+        vec![(ViolationKind::Recirculation, Severity::Warning, None, None)],
+        "{}",
+        report.render()
+    );
+    assert!(report.ok(false) && !report.ok(true), "warnings gate only under deny");
+}
+
+#[test]
+fn golden_undefined_container_read_in_program() {
+    // Container 5 is neither extracted nor written by an earlier
+    // element — element-level dataflow must catch it with op provenance.
+    let chip = ChipConfig::rmt();
+    let program = n2net::rmt::Program::new(vec![Element::new(
+        "leaky",
+        StepKind::Other,
+        vec![
+            MicroOp::Alu {
+                dst: ContainerId(1),
+                op: AluOp::Mov,
+                a: Src::Container(ContainerId(0)),
+                b: Src::Imm(0),
+            },
+            MicroOp::Alu {
+                dst: ContainerId(2),
+                op: AluOp::And,
+                a: Src::Container(ContainerId(5)),
+                b: Src::Imm(1),
+            },
+        ],
+    )]);
+    let report = verify::verify_program(&program, &chip, &[ContainerId(0)]);
+    let shapes: Vec<_> = report.violations.iter().map(shape).collect();
+    assert_eq!(
+        shapes,
+        vec![(ViolationKind::UndefinedRead, Severity::Error, Some(0), Some(1))],
+        "{}",
+        report.render()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// V2 — whatever the compiler accepts, the verifier accepts
+// ---------------------------------------------------------------------------
+
+/// Random feasible spec, biased small for speed (cf. `prop_ir`).
+fn random_spec(rng: &mut Rng) -> (usize, Vec<usize>) {
+    let in_bits = pow2_in(rng, 16, 256);
+    let n_layers = 1 + rng.gen_range(0, 2);
+    let mut layers = Vec::new();
+    for i in 0..n_layers {
+        if i + 1 == n_layers {
+            layers.push(1 + rng.gen_range(0, 32));
+        } else {
+            layers.push(pow2_in(rng, 16, 64));
+        }
+    }
+    (in_bits, layers)
+}
+
+#[test]
+fn prop_compiler_output_always_verifies() {
+    prop::check("compiled-verifies", prop::default_cases(), |rng| {
+        let (in_bits, layers) = random_spec(rng);
+        let model = BnnModel::random(in_bits, &layers, rng.next_u64());
+        let chip = if rng.gen_bool(0.5) {
+            ChipConfig::rmt()
+        } else {
+            ChipConfig::rmt_with_popcnt()
+        };
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 0 },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(chip, opts)
+            .compile(&model)
+            .map_err(|e| format!("compile failed: {e}"))?;
+        let report = compiled.verify();
+        if report.has_errors() {
+            return Err(format!(
+                "{in_bits}b -> {layers:?}: compiler output rejected:\n{}",
+                report.render()
+            ));
+        }
+        // Single-pass programs must be COMPLETELY clean — this is what
+        // lets CI run `check --deny-warnings`. Multi-pass programs are
+        // allowed exactly their recirculation warning.
+        if compiled.resources.passes == 1 && !report.is_clean() {
+            return Err(format!("unexpected warnings:\n{}", report.render()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_keyed_programs_verify_through_the_program_layer() {
+    prop::check("keyed-verifies", prop::default_cases() / 2, |rng| {
+        let in_bits = pow2_in(rng, 16, 64);
+        let layers = vec![1 + rng.gen_range(0, 16)];
+        let pairs: Vec<(u32, BnnModel)> = (0..2)
+            .map(|i| (i + 1, BnnModel::random(in_bits, &layers, rng.next_u64())))
+            .collect();
+        let opts = CompilerOptions {
+            input: InputEncoding::PayloadLe { offset: 4 },
+            ..Default::default()
+        };
+        let compiled = Compiler::new(ChipConfig::rmt(), opts)
+            .compile_multi(&pairs, MultiModelOptions { id_offset: 0 })
+            .map_err(|e| format!("compile_multi failed: {e}"))?;
+        let report = compiled.verify();
+        if report.has_errors() {
+            return Err(format!("keyed program rejected:\n{}", report.render()));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// V3 — translation validation
+// ---------------------------------------------------------------------------
+
+fn lowered_ir(chip: ChipConfig) -> IrProgram {
+    let model = BnnModel::random(64, &[32, 8], 11);
+    let opts = CompilerOptions {
+        input: InputEncoding::PayloadLe { offset: 0 },
+        ..Default::default()
+    };
+    let compiled = Compiler::new(chip, opts).compile(&model).unwrap();
+    IrProgram::lower(&compiled.program, &compiled.chip.phv, &compiled.layout.output)
+        .unwrap()
+}
+
+#[test]
+fn honest_pipeline_validates_with_expected_equivalence_classes() {
+    let mut ir = lowered_ir(ChipConfig::rmt());
+    let mut reduced = false;
+    for pass in passes::host_pipeline() {
+        let pre = ir.clone();
+        let changed = pass.run(&mut ir);
+        if !changed {
+            continue;
+        }
+        let how = verify::equivalent_on_live_out(&pre, &ir, verify::TV_SAMPLES)
+            .unwrap_or_else(|why| panic!("pass '{}' diverged: {why}", pass.name()));
+        match pass.name() {
+            // Structural rewrites: the symbolic summaries are identical.
+            "pack-stages" | "dead-code-eliminate" => {
+                assert_eq!(how, Equivalence::Proven, "pass '{}'", pass.name())
+            }
+            // The SWAR tree -> Popcnt rewrite is structurally different;
+            // only the concrete-sampling fallback can accept it.
+            "popcount-strength-reduce" => {
+                reduced = true;
+                assert_eq!(how, Equivalence::Sampled, "pass '{}'", pass.name())
+            }
+            other => panic!("unexpected pass {other:?}"),
+        }
+    }
+    assert!(reduced, "host pipeline must strength-reduce the stock-chip tree");
+}
+
+/// A pass that deletes stores from the tail of the program up to and
+/// including the last store to a `live_out` register — exactly the
+/// kind of optimizer bug translation validation exists to catch
+/// (DCE-gone-wrong: "dead" code that wasn't).
+struct DropFinalStore;
+
+impl Pass for DropFinalStore {
+    fn name(&self) -> &'static str {
+        "drop-final-store"
+    }
+    fn run(&self, ir: &mut IrProgram) -> bool {
+        let live = ir.live_out.clone();
+        for block in ir.blocks.iter_mut().rev() {
+            while let Some(i) = block.instrs.pop() {
+                if live.contains(&i.dst) || live.contains(&i.dst2) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+/// A pass that appends a complement of an output register — a
+/// value-level miscompile that keeps the program structurally valid,
+/// so only the concrete comparison can see it. The complement differs
+/// from the original on EVERY input (even under a narrow store mask),
+/// so the sampling fallback is guaranteed to catch it.
+struct NegateOutput;
+
+impl Pass for NegateOutput {
+    fn name(&self) -> &'static str {
+        "negate-output"
+    }
+    fn run(&self, ir: &mut IrProgram) -> bool {
+        let Some(&d) = ir.live_out.first() else { return false };
+        let Some(block) = ir.blocks.last_mut() else { return false };
+        block.instrs.push(IrInstr {
+            op: IrOp::Not,
+            dst: d,
+            dst2: d,
+            a: Operand::Reg(d),
+            b: Operand::Imm(0),
+            aux: 0,
+            gather: Vec::new(),
+        });
+        true
+    }
+}
+
+fn assert_rejected(pipeline: Vec<Box<dyn Pass>>, name: &str) {
+    let mut ir = lowered_ir(ChipConfig::rmt());
+    let pristine = ir.clone();
+    let err = passes::run_pipeline_validated(&mut ir, &pipeline)
+        .err()
+        .unwrap_or_else(|| panic!("{name} must be rejected"));
+    match err {
+        Error::Verify(msg) => {
+            assert!(msg.contains(name), "diagnostic names the pass: {msg}");
+            assert!(
+                msg.contains("translation validation"),
+                "diagnostic names the check: {msg}"
+            );
+        }
+        other => panic!("expected Error::Verify, got {other}"),
+    }
+    // Rollback: the caller still holds the last validated program.
+    assert_eq!(ir, pristine, "IR must roll back after {name}");
+}
+
+#[test]
+fn semantics_breaking_passes_are_rejected_and_rolled_back() {
+    assert_rejected(vec![Box::new(DropFinalStore)], "drop-final-store");
+    assert_rejected(vec![Box::new(NegateOutput)], "negate-output");
+}
+
+#[test]
+fn validated_pipeline_matches_the_unvalidated_one() {
+    let mut a = lowered_ir(ChipConfig::rmt());
+    let mut b = a.clone();
+    let report = passes::run_pipeline_validated(&mut a, &passes::host_pipeline())
+        .expect("honest pipeline validates");
+    passes::run_pipeline(&mut b, &passes::host_pipeline());
+    assert_eq!(a, b, "validation must not change what the pipeline produces");
+    assert!(report.iter().any(|&(_, changed)| changed));
+}
