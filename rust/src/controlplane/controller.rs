@@ -22,6 +22,7 @@ use crate::bnn::BnnModel;
 use crate::coordinator::{ShardedEngine, TierSnapshot, MAX_SHARDS};
 use crate::deploy::SwapHandle;
 use crate::error::{Error, Result};
+use crate::obs::{render_dump, Obs, SpanKind};
 
 use super::detect::{
     DdosRampDetector, Detection, Detector, DriftDetector, ImbalanceDetector,
@@ -105,10 +106,11 @@ pub struct ControlEvent {
     pub outcome: Outcome,
 }
 
-impl ControlEvent {
-    /// One log line.
+impl Outcome {
+    /// One-line spelling, shared by [`ControlEvent::render`] and the
+    /// causal span log.
     pub fn render(&self) -> String {
-        let outcome = match &self.outcome {
+        match self {
             Outcome::Published { model, version } => {
                 format!("published {model:?} as v{version}")
             }
@@ -117,7 +119,14 @@ impl ControlEvent {
             }
             Outcome::Alerted => "alert".into(),
             Outcome::Reconfigured { detail } => detail.clone(),
-        };
+        }
+    }
+}
+
+impl ControlEvent {
+    /// One log line.
+    pub fn render(&self) -> String {
+        let outcome = self.outcome.render();
         format!(
             "w{}: {} ({}; severity {:.2}) -> {} -> {outcome}",
             self.window,
@@ -152,6 +161,11 @@ pub struct Controller {
     /// validated against it when it is attached; without one those
     /// actions are rejected at fire time.
     tier: Option<Arc<ShardedEngine>>,
+    /// Observability hub (DESIGN.md §18). When attached, every
+    /// anomalous window records a causal span chain (window → detection
+    /// → rule → action → outcome) and the first detection of a window
+    /// snapshots the tier's flight recorder.
+    obs: Option<Arc<Obs>>,
     events: Vec<ControlEvent>,
     published: u64,
     rejected: u64,
@@ -218,6 +232,7 @@ impl Controller {
             handle,
             bank,
             tier: None,
+            obs: None,
             events: Vec::new(),
             published: 0,
             rejected: 0,
@@ -245,6 +260,20 @@ impl Controller {
         }
         self.tier = Some(tier);
         Ok(self)
+    }
+
+    /// Attach an observability hub (builder-style): causal spans are
+    /// recorded per anomalous window and detector firings trigger
+    /// flight-recorder dumps. Span recording happens once per window in
+    /// the controller's own context — never on the packet path.
+    pub fn with_obs(mut self, obs: Arc<Obs>) -> Self {
+        self.obs = Some(obs);
+        self
+    }
+
+    /// The attached observability hub, if any.
+    pub fn obs(&self) -> Option<&Arc<Obs>> {
+        self.obs.as_ref()
     }
 
     /// The default detector set.
@@ -275,10 +304,79 @@ impl Controller {
             .iter_mut()
             .filter_map(|d| d.observe(&window))
             .collect();
+        // Causal spans (quiet windows record nothing): one Window root
+        // carrying the rendered signal evidence, a flight-recorder dump
+        // triggered by the window's first detection, and one Detection
+        // child per firing detector.
+        let mut detection_spans: Vec<(super::detect::SignalKind, u64)> = Vec::new();
+        let mut window_span = None;
+        if let Some(obs) = &self.obs {
+            if !detections.is_empty() {
+                let wid = obs.spans.record(
+                    None,
+                    window.index,
+                    SpanKind::Window,
+                    format!("signal window w{}", window.index),
+                    window.render(),
+                );
+                window_span = Some(wid);
+                let dump = obs.capture_dump(window.index);
+                obs.spans.record(
+                    Some(wid),
+                    window.index,
+                    SpanKind::FlightDump,
+                    format!("{} hot-path event(s)", dump.events.len()),
+                    render_dump(&dump.events),
+                );
+                for d in &detections {
+                    let id = obs.spans.record(
+                        Some(wid),
+                        window.index,
+                        SpanKind::Detection,
+                        format!("{} severity {:.2}", d.kind.name(), d.severity),
+                        d.detail.clone(),
+                    );
+                    detection_spans.push((d.kind, id));
+                }
+            }
+        }
         let firings = self.engine.decide(window.index, &detections);
         let mut events = Vec::with_capacity(firings.len());
         for firing in firings {
             let outcome = self.execute(&firing.action);
+            if let Some(obs) = &self.obs {
+                let parent = detection_spans
+                    .iter()
+                    .find(|(kind, _)| *kind == firing.detection.kind)
+                    .map(|(_, id)| *id)
+                    .or(window_span);
+                let rid = obs.spans.record(
+                    parent,
+                    window.index,
+                    SpanKind::Rule,
+                    format!(
+                        "rule {}: on {} do {}",
+                        firing.rule,
+                        firing.detection.kind.name(),
+                        firing.action.render()
+                    ),
+                    "",
+                );
+                let aid = obs.spans.record(
+                    Some(rid),
+                    window.index,
+                    SpanKind::Action,
+                    firing.action.render(),
+                    "",
+                );
+                obs.spans.record(
+                    Some(aid),
+                    window.index,
+                    SpanKind::Outcome,
+                    outcome.render(),
+                    "",
+                );
+            }
             let event = ControlEvent {
                 window: window.index,
                 rule: firing.rule,
@@ -510,6 +608,60 @@ mod tests {
         assert_eq!(c.events().len(), 1);
         assert!(c.events()[0].render().contains("published"));
         assert_eq!(c.windows_seen(), 8);
+    }
+
+    #[test]
+    fn spans_chain_window_to_outcome_with_flight_dump() {
+        use crate::obs::{EventKind, Obs};
+
+        let live = BnnModel::random(32, &[16, 1], 40);
+        let attack = BnnModel::random(32, &[16, 1], 41);
+        let (_dep, handle) = handle_for(&live);
+        let bank = ModelBank::new("day", live.clone()).with_model("attack", attack);
+        let policy = Policy::parse("on ddos-ramp do swap attack cooldown=3").unwrap();
+        let obs = Arc::new(Obs::standalone());
+        obs.tracer().set_sample_rate(1);
+        // Seed the flight recorder with hot-path events the anomaly
+        // dump should capture.
+        obs.tracer().record(0, EventKind::Drop, 0xC0A8_0001, 64);
+        obs.tracer().record(0, EventKind::FrameIngress, 0xC0A8_0002, 64);
+        let mut c = Controller::new(handle, bank, policy)
+            .unwrap()
+            .with_obs(Arc::clone(&obs));
+
+        let mut total = 0u64;
+        let mut pos = 0u64;
+        let mut feed = |c: &mut Controller, n: u64, p: u64| {
+            total += n;
+            pos += p;
+            c.tick(snap(total, pos))
+        };
+        for _ in 0..3 {
+            feed(&mut c, 1000, 500);
+        }
+        assert!(obs.spans.is_empty(), "quiet windows record no spans");
+        for _ in 0..3 {
+            feed(&mut c, 1000, 950);
+        }
+        assert_eq!(c.published(), 1);
+
+        // The full causal chain renders in order, with the signal
+        // window as evidence and a non-empty flight dump attached.
+        let tree = obs.spans.render_tree();
+        let mut pos = 0;
+        for part in
+            ["window ", "flight-dump ", "detection ddos-ramp", "rule 0: on ddos-ramp do swap attack", "action swap attack", "outcome published \"attack\""]
+        {
+            let at = tree[pos..]
+                .find(part)
+                .unwrap_or_else(|| panic!("missing/bad order {part:?}:\n{tree}"));
+            pos += at;
+        }
+        assert!(tree.contains("pkts="), "window evidence embedded: {tree}");
+        let dumps = obs.dumps();
+        assert!(!dumps.is_empty(), "detection triggered a dump");
+        assert_eq!(dumps[0].events.len(), 2, "seeded events captured");
+        assert!(tree.contains("drop flow=0xc0a80001"), "dump events in tree: {tree}");
     }
 
     #[test]

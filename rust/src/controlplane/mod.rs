@@ -76,4 +76,7 @@ pub use live::{
 };
 pub use policy::{Action, Firing, Policy, PolicyEngine, Rule, DEFAULT_COOLDOWN};
 pub use signal::{SignalCollector, SignalWindow};
-pub use sim::{prefix_classifier, sim_ddos, Sim, SimConfig, SimReport, SwapRecord};
+pub use sim::{
+    prefix_classifier, sim_ddos, Sim, SimConfig, SimReport, SwapRecord,
+    SIM_TRACE_SAMPLE_RATE,
+};

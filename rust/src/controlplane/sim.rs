@@ -22,6 +22,7 @@ use crate::coordinator::ShardedEngine;
 use crate::deploy::{Deployment, SwapHandle};
 use crate::error::Result;
 use crate::net::{ScenarioSequence, SegmentSpan, SequenceTrace};
+use crate::obs::{render_tree, FlightDump, Obs, Span};
 
 use super::controller::{Controller, ModelBank, Outcome, TickReport};
 use super::detect::Detector;
@@ -46,6 +47,13 @@ impl Default for SimConfig {
         Self { n_shards: 2, window_packets: 512, seed: 7 }
     }
 }
+
+/// Hot-path trace sampling the sim enables by default: 1-in-64 keeps
+/// the flight recorder populated for anomaly dumps while staying far
+/// off the packet path (one atomic add per sampled-out frame). The
+/// sim's outputs are sampling-invariant — tracing observes frames, it
+/// never touches classification (`prop_obs` proves this bit-exactly).
+pub const SIM_TRACE_SAMPLE_RATE: u64 = 64;
 
 /// One published swap observed by the sim.
 #[derive(Clone, Debug)]
@@ -95,6 +103,12 @@ pub struct SimReport {
     /// labeled frames, or no swap happened for the post side).
     pub accuracy_pre_swap: Option<f64>,
     pub accuracy_post_swap: Option<f64>,
+    /// Causal spans this run's ticks recorded (window → detection →
+    /// rule → action → outcome), renderable via
+    /// [`crate::obs::render_tree`]; empty for an all-quiet run.
+    pub spans: Vec<Span>,
+    /// Flight-recorder dumps detections triggered during this run.
+    pub dumps: Vec<FlightDump>,
 }
 
 /// Index of the first frame served after the tick of `swap_window`
@@ -161,6 +175,14 @@ impl SimReport {
         if let Some(a) = self.accuracy_post_swap {
             s.push_str(&format!("accuracy post-swap: {:.2}%\n", a * 100.0));
         }
+        if !self.spans.is_empty() {
+            s.push_str("causal chain:\n");
+            for line in render_tree(&self.spans).lines() {
+                s.push_str("  ");
+                s.push_str(line);
+                s.push('\n');
+            }
+        }
         s
     }
 }
@@ -170,6 +192,7 @@ impl SimReport {
 pub struct Sim {
     engine: Arc<ShardedEngine>,
     controller: Controller,
+    obs: Arc<Obs>,
     cfg: SimConfig,
 }
 
@@ -211,14 +234,27 @@ impl Sim {
         detectors: Vec<Box<dyn Detector>>,
     ) -> Result<Self> {
         let engine = Arc::new(deployment.sharded_engine(model, cfg.n_shards)?);
+        // The observability hub shares the tier's tracer so anomaly
+        // dumps capture real hot-path events; sampled tracing is on by
+        // default because the sim IS the observed run.
+        let obs = Arc::new(Obs::new(Arc::clone(engine.tracer())));
+        engine.register_metrics(&obs.registry, "tier");
+        obs.tracer().set_sample_rate(SIM_TRACE_SAMPLE_RATE);
         let handle = SwapHandle::new(deployment, model)?;
         let controller = Controller::with_detectors(handle, bank, policy, detectors)?
-            .with_tier(Arc::clone(&engine))?;
-        Ok(Self { engine, controller, cfg })
+            .with_tier(Arc::clone(&engine))?
+            .with_obs(Arc::clone(&obs));
+        Ok(Self { engine, controller, obs, cfg })
     }
 
     pub fn controller(&self) -> &Controller {
         &self.controller
+    }
+
+    /// The run's observability hub: unified registry over the tier,
+    /// causal span log, and captured flight dumps.
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
     }
 
     /// The serving tier the sim drives (and the controller reshapes).
@@ -240,6 +276,8 @@ impl Sim {
         let rejected_before = self.controller.rejected();
         let alerts_before = self.controller.alerts();
         let reconfigs_before = self.controller.reconfigs();
+        let spans_before = self.obs.spans.len();
+        let dumps_before = self.obs.dumps().len();
         let mut outputs = Vec::with_capacity(st.trace.packets.len());
         let mut ticks = Vec::new();
         let mut swaps = Vec::new();
@@ -342,6 +380,11 @@ impl Sim {
             reconfigs: self.controller.reconfigs() - reconfigs_before,
             accuracy_pre_swap,
             accuracy_post_swap,
+            // Span ids are absolute log indices; a run's chains are
+            // self-contained (roots are windows), so the tail slice
+            // renders standalone.
+            spans: self.obs.spans.spans().split_off(spans_before),
+            dumps: self.obs.dumps().split_off(dumps_before),
         })
     }
 }
@@ -475,6 +518,53 @@ mod tests {
         assert!(report.accuracy_pre_swap.is_some());
         assert!(report.accuracy_post_swap.is_some());
         assert!(report.render().contains("reaction"));
+    }
+
+    /// The observability acceptance loop (ISSUE 9): a run whose
+    /// ddos-ramp detector fires renders the full causal chain — signal
+    /// window → detection → policy rule → tier action → outcome — with
+    /// a non-empty flight-recorder dump attached, and the unified
+    /// registry exposes the tier it happened on.
+    #[test]
+    fn fired_detector_yields_causal_chain_and_flight_dump() {
+        let live = prefix_classifier(0xC0A8_0000);
+        let attack = prefix_classifier(0xC0A8_FFFF);
+        let dep = deployment_for(&live);
+        let bank = ModelBank::new("day", live.clone()).with_model("attack", attack);
+        let policy = Policy::parse("on ddos-ramp do swap attack cooldown=4").unwrap();
+        let cfg = SimConfig { n_shards: 2, window_packets: 256, seed: 11 };
+        let mut sim = Sim::new(&dep, "live", bank, policy, cfg).unwrap();
+        let report = sim.run_sequence(&attack_sequence(1024, 2048)).unwrap();
+
+        assert_eq!(report.swaps.len(), 1, "\n{}", report.render());
+        assert!(!report.spans.is_empty(), "anomalous windows recorded spans");
+        assert!(!report.dumps.is_empty(), "detection captured a flight dump");
+        assert!(!report.dumps[0].events.is_empty(), "dump has hot-path events");
+
+        let rendered = report.render();
+        let mut pos = 0;
+        for part in [
+            "causal chain:",
+            "window signal window w",
+            "flight-dump",
+            "detection ddos-ramp severity",
+            "rule 0: on ddos-ramp do swap attack",
+            "action swap attack",
+            "outcome published \"attack\" as v2",
+        ] {
+            let at = rendered[pos..]
+                .find(part)
+                .unwrap_or_else(|| panic!("missing/bad order {part:?}:\n{rendered}"));
+            pos += at;
+        }
+
+        // The hub's registry unifies the tier's metrics with the trace
+        // counters under one exposition.
+        let exposed = sim.obs().registry.expose();
+        assert!(exposed.contains("tier_engine_packets_in"), "{exposed}");
+        assert!(exposed.contains("# TYPE tier_n_shards gauge"), "{exposed}");
+        assert!(exposed.contains("obs_trace_sample_rate 64"), "{exposed}");
+        assert!(sim.obs().tracer().recorded() > 0, "sampled tracing was live");
     }
 
     #[test]

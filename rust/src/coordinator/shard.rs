@@ -64,6 +64,7 @@ use crate::compiler::CompiledModel;
 use crate::deploy::ModelSlot;
 use crate::error::{Error, Result};
 use crate::net::packet::flow_hash;
+use crate::obs::{EventKind, MetricsRegistry, Tracer};
 use crate::telemetry::{ClassMix, Counter, EngineMetrics, CLASS_BUCKETS};
 
 use super::batcher::{Batch, Batcher, BatchPolicy};
@@ -260,6 +261,51 @@ impl ShardedReport {
         load_imbalance(&loads)
     }
 
+    /// Register this report's (plain, already-final) numbers into a
+    /// registry under `tier.*` names — the machine-readable surface
+    /// behind [`ShardedReport::expose`].
+    pub fn register_into(&self, reg: &MetricsRegistry) {
+        let v = self.n_packets as u64;
+        reg.counter_fn("tier.packets", move || v);
+        let v = self.parse_errors;
+        reg.counter_fn("tier.parse_errors", move || v);
+        let v = self.dropped;
+        reg.counter_fn("tier.dropped", move || v);
+        let v = self.per_shard.len() as u64;
+        reg.gauge_fn("tier.n_shards", move || v);
+        let v = self.version_min;
+        reg.gauge_fn("tier.version_min", move || v);
+        let v = self.version_max;
+        reg.gauge_fn("tier.version_max", move || v);
+        for st in &self.per_shard {
+            let p = format!("tier.shard{}", st.shard);
+            let v = st.packets;
+            reg.counter_fn(&format!("{p}.packets"), move || v);
+            let v = st.batches;
+            reg.counter_fn(&format!("{p}.batches"), move || v);
+            let v = st.parse_errors;
+            reg.counter_fn(&format!("{p}.parse_errors"), move || v);
+            let v = st.dropped;
+            reg.counter_fn(&format!("{p}.dropped"), move || v);
+            let v = st.backpressure_waits;
+            reg.counter_fn(&format!("{p}.backpressure_waits"), move || v);
+            let v = st.model_version;
+            reg.gauge_fn(&format!("{p}.model_version"), move || v);
+        }
+    }
+
+    /// Prometheus-style exposition of the report via the unified
+    /// registry (the renderer the bespoke string builder was replaced
+    /// by — ISSUE 9 satellite).
+    pub fn expose(&self) -> String {
+        let reg = MetricsRegistry::new();
+        self.register_into(&reg);
+        reg.expose()
+    }
+
+    /// Thin compat shim: the human header plus the compact per-shard
+    /// table the CLI and shard tests assert (`shard 0: ...`). Machine
+    /// consumers use [`ShardedReport::expose`] instead.
     pub fn render(&self) -> String {
         let mut s = format!(
             "sharded serve: {} packets over {} shards ({} backend) — \
@@ -507,6 +553,10 @@ pub struct ShardedEngine {
     /// only so [`ShardedEngine::reshard`] can replace the vec — workers
     /// hold their own `Arc<ShardTelemetry>` and never touch the lock.
     shard_telemetry: Mutex<Vec<Arc<ShardTelemetry>>>,
+    /// Sampled hot-path flight recorder (DESIGN.md §18), shared with
+    /// every dispatcher and shard worker this engine spawns. Disabled
+    /// by default: each hook is then a single relaxed atomic load.
+    tracer: Arc<Tracer>,
 }
 
 /// What one shard worker hands back at join time.
@@ -529,6 +579,7 @@ impl ShardedEngine {
         Self {
             shard_telemetry: Mutex::new(Self::fresh_telemetry(&source, config.n_shards)),
             cell: Arc::new(TierCell::new(&config)),
+            tracer: Arc::new(Tracer::for_shards(config.n_shards.max(1))),
             source,
             config,
             metrics: Arc::new(EngineMetrics::default()),
@@ -568,10 +619,67 @@ impl ShardedEngine {
         Self {
             shard_telemetry: Mutex::new(Self::fresh_telemetry(&source, config.n_shards)),
             cell: Arc::new(TierCell::new(&config)),
+            tracer: Arc::new(Tracer::for_shards(config.n_shards.max(1))),
             source,
             config,
             metrics: Arc::new(EngineMetrics::default()),
         }
+    }
+
+    /// The engine's hot-path flight recorder. Disabled until someone
+    /// calls [`Tracer::set_sample_rate`]; shards beyond the initial
+    /// count fold into the existing rings, so a reshard needs no
+    /// re-plumbing.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
+    /// Register this tier's live metrics under `prefix` (canonically
+    /// `"tier"`, yielding `tier.shard3.dropped`-style names): the
+    /// engine-wide bundle, one series set per shard, and the
+    /// reconfigurable knobs as gauges. Values are read at expose time,
+    /// so one registration covers the tier's lifetime — except across
+    /// [`ShardedEngine::reshard`], which replaces the telemetry cells;
+    /// call this again afterwards (stale `shardN` series beyond the new
+    /// count are removed first).
+    pub fn register_metrics(&self, reg: &MetricsRegistry, prefix: &str) {
+        self.metrics.register_into(reg, &format!("{prefix}.engine"));
+        reg.remove_prefix(&format!("{prefix}.shard"));
+        let telemetry: Vec<Arc<ShardTelemetry>> = self
+            .shard_telemetry
+            .lock()
+            .expect("shard telemetry poisoned")
+            .clone();
+        for (i, t) in telemetry.into_iter().enumerate() {
+            let p = format!("{prefix}.shard{i}");
+            let s = Arc::clone(&t);
+            reg.counter_fn(&format!("{p}.packets"), move || s.packets.get());
+            let s = Arc::clone(&t);
+            reg.counter_fn(&format!("{p}.batches"), move || s.batches.get());
+            let s = Arc::clone(&t);
+            reg.counter_fn(&format!("{p}.parse_errors"), move || s.parse_errors.get());
+            let s = Arc::clone(&t);
+            reg.counter_fn(&format!("{p}.dropped"), move || s.dropped.get());
+            let s = Arc::clone(&t);
+            reg.counter_fn(&format!("{p}.backpressure_waits"), move || {
+                s.backpressure_waits.get()
+            });
+            reg.gauge_fn(&format!("{p}.model_version"), move || {
+                t.model_version.load(Ordering::Relaxed)
+            });
+        }
+        let cell = Arc::clone(&self.cell);
+        reg.gauge_fn(&format!("{prefix}.n_shards"), move || {
+            cell.n_shards.load(Ordering::Relaxed) as u64
+        });
+        let cell = Arc::clone(&self.cell);
+        reg.gauge_fn(&format!("{prefix}.generation"), move || {
+            cell.generation.load(Ordering::Relaxed)
+        });
+        let tracer = Arc::clone(&self.tracer);
+        reg.counter_fn(&format!("{prefix}.trace.recorded"), move || tracer.recorded());
+        let tracer = Arc::clone(&self.tracer);
+        reg.gauge_fn(&format!("{prefix}.trace.sample_rate"), move || tracer.sample_rate());
     }
 
     /// Snapshot of the currently published compiled model.
@@ -719,11 +827,12 @@ impl ShardedEngine {
             shard_telemetry.model_version.store(version, Ordering::Relaxed);
             let cell = Arc::clone(&self.cell);
             let policy = self.config.batch;
+            let tracer = Arc::clone(&self.tracer);
             workers.push(std::thread::spawn(move || {
                 let _close = CloseOnDrop(&*queue);
                 shard_worker(
                     shard, &queue, &source, &cell, kind, policy, &metrics,
-                    &shard_telemetry, backend, version,
+                    &shard_telemetry, &tracer, backend, version,
                 )
             }));
         }
@@ -738,6 +847,7 @@ impl ShardedEngine {
             started: Instant::now(),
             metrics: Arc::clone(&self.metrics),
             telemetry,
+            tracer: Arc::clone(&self.tracer),
         })
     }
 
@@ -807,6 +917,7 @@ fn shard_worker(
     policy: BatchPolicy,
     metrics: &EngineMetrics,
     telemetry: &ShardTelemetry,
+    tracer: &Tracer,
     mut backend: Box<dyn InferenceBackend>,
     mut version: u64,
 ) -> Result<WorkerResult> {
@@ -845,8 +956,13 @@ fn shard_worker(
         // Hot-swap pickup: one atomic version peek per batch (the
         // protocol itself lives on [`EngineSource::refresh`], shared
         // with the engine workers).
+        let version_before = *version;
         source.refresh(*kind, backend, version, retired_errs)?;
         telemetry.model_version.store(*version, Ordering::Relaxed);
+        if *version != version_before {
+            tracer.record(shard, EventKind::SwapObserved, version_before, *version);
+        }
+        tracer.record(shard, EventKind::BatchDispatch, batch.packets.len() as u64, *version);
         let t0 = Instant::now();
         metrics.packets_in.add(batch.packets.len() as u64);
         let refs: Vec<&[u8]> = batch.packets.iter().map(|(_, p)| p.as_slice()).collect();
@@ -868,7 +984,14 @@ fn shard_worker(
         telemetry.packets.add(refs.len() as u64);
         telemetry.batches.inc();
         telemetry.parse_errors.add(errs);
-        metrics.batch_latency.record(t0.elapsed());
+        let elapsed = t0.elapsed();
+        metrics.batch_latency.record(elapsed);
+        tracer.record(
+            shard,
+            EventKind::BackendRun,
+            refs.len() as u64,
+            elapsed.as_nanos().min(u64::MAX as u128) as u64,
+        );
         Ok(())
     };
 
@@ -957,6 +1080,8 @@ pub struct ShardedStream {
     /// (drop/backpressure events are dispatcher-side, so they are
     /// recorded here as well as in the per-run vecs above).
     telemetry: Vec<Arc<ShardTelemetry>>,
+    /// Shared flight recorder (disabled: one relaxed load per hook).
+    tracer: Arc<Tracer>,
 }
 
 impl ShardedStream {
@@ -977,9 +1102,15 @@ impl ShardedStream {
     /// a frame shed under [`OverflowPolicy::Drop`] keeps its position
     /// with output word 0.
     pub fn push(&mut self, pkt: Vec<u8>) -> Result<()> {
-        let shard = (flow_hash(&pkt) % self.queues.len() as u64) as usize;
+        let hash = flow_hash(&pkt);
+        let shard = (hash % self.queues.len() as u64) as usize;
         let seq = self.next_seq;
         self.next_seq += 1;
+        let len = pkt.len() as u64;
+        // Flight-recorder hooks: each `record` is one relaxed atomic
+        // load when tracing is off (DESIGN.md §18) — nothing else may
+        // be added on this path.
+        self.tracer.record(shard, EventKind::FrameIngress, hash, len);
         // One relaxed load per push: the control plane can flip the
         // policy mid-stream and the very next frame honors it.
         match overflow_from_u8(self.cell.overflow.load(Ordering::Relaxed)) {
@@ -988,6 +1119,7 @@ impl ShardedStream {
                 if waited {
                     self.waits[shard] += 1;
                     self.telemetry[shard].backpressure_waits.inc();
+                    self.tracer.record(shard, EventKind::Backpressure, hash, len);
                 }
                 if !pushed {
                     return Err(Error::Config(format!(
@@ -999,6 +1131,7 @@ impl ShardedStream {
                 if !self.queues[shard].try_push((seq, pkt)) {
                     self.dropped[shard] += 1;
                     self.telemetry[shard].dropped.inc();
+                    self.tracer.record(shard, EventKind::Drop, hash, len);
                 }
             }
         }
@@ -1293,6 +1426,69 @@ mod tests {
                 assert_eq!(report.outputs[i], expect, "{n_shards} shards pkt {i}");
             }
         }
+    }
+
+    #[test]
+    fn tracer_records_the_hot_path_and_registry_exposes_the_tier() {
+        let model = BnnModel::random(32, &[16], 58);
+        let engine = ShardedEngine::new(
+            compiled_for(&model),
+            ShardConfig { n_shards: 2, ..ShardConfig::default() },
+        );
+        // Disabled by default: a run records nothing.
+        let mut gen = TraceGenerator::new(31);
+        let trace = gen.generate(&TraceKind::UniformIps, 200);
+        engine.process_trace(&trace.packets).unwrap();
+        assert_eq!(engine.tracer().recorded(), 0, "tracing off by default");
+
+        // Full rate: every ingress frame and every batch is recorded.
+        engine.tracer().set_sample_rate(1);
+        engine.process_trace(&trace.packets).unwrap();
+        let events = engine.tracer().dump();
+        assert!(!events.is_empty());
+        let ingress =
+            events.iter().filter(|e| e.kind == EventKind::FrameIngress).count();
+        assert!(ingress > 0, "ingress events recorded");
+        assert!(
+            events.iter().any(|e| e.kind == EventKind::BackendRun),
+            "backend-run events recorded: {events:?}"
+        );
+
+        // Registry exposition covers engine, per-shard, and tier knobs.
+        let reg = MetricsRegistry::new();
+        engine.register_metrics(&reg, "tier");
+        let exposed = reg.expose();
+        for series in [
+            "tier_engine_packets_in",
+            "tier_engine_batch_latency_count",
+            "tier_shard0_packets",
+            "tier_shard1_dropped",
+            "tier_n_shards 2",
+            "tier_trace_sample_rate 1",
+        ] {
+            assert!(exposed.contains(series), "missing {series}:\n{exposed}");
+        }
+        // Shard series read the live cells: both shards' packets sum to
+        // the delivered total (two runs of 200, Block policy).
+        let t0: u64 = exposed
+            .lines()
+            .find(|l| l.starts_with("tier_shard0_packets "))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .unwrap();
+        let t1: u64 = exposed
+            .lines()
+            .find(|l| l.starts_with("tier_shard1_packets "))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .unwrap();
+        assert_eq!(t0 + t1, 400);
+
+        // The per-run report exposes through the same registry format.
+        let report = engine.process_trace(&trace.packets).unwrap();
+        let exposed = report.expose();
+        assert!(exposed.contains("tier_packets 200"), "{exposed}");
+        assert!(exposed.contains("# TYPE tier_shard0_packets counter"), "{exposed}");
     }
 
     #[test]

@@ -189,6 +189,27 @@ impl Deployment {
         })
     }
 
+    /// Register every model's serving counters and published version
+    /// into a [`crate::obs::MetricsRegistry`] under
+    /// `{prefix}.model.{name}.*` — the registry-side equivalent of
+    /// polling [`Deployment::stats`] per model, sharing the same
+    /// [`ModelCounters`] atomics the sessions bump.
+    pub fn register_metrics(&self, reg: &crate::obs::MetricsRegistry, prefix: &str) {
+        for entry in &self.entries {
+            let base = format!("{prefix}.model.{}", entry.name);
+            let c = Arc::clone(&entry.counters);
+            reg.counter_fn(&format!("{base}.packets"), move || c.packets.get());
+            let c = Arc::clone(&entry.counters);
+            reg.counter_fn(&format!("{base}.parse_errors"), move || {
+                c.parse_errors.get()
+            });
+            let c = Arc::clone(&entry.counters);
+            reg.counter_fn(&format!("{base}.swaps"), move || c.swaps.get());
+            let slot = self.slot_for(entry);
+            reg.gauge_fn(&format!("{base}.version"), move || slot.version());
+        }
+    }
+
     /// Open a classify session for `name` on the deployment's default
     /// backend.
     pub fn session(&self, name: &str) -> Result<Session> {
@@ -819,6 +840,29 @@ mod tests {
             assert_eq!(stats.version, 1);
             assert_eq!(stats.swaps, 0);
         }
+    }
+
+    #[test]
+    fn registry_exposes_live_model_counters_and_version() {
+        let model = BnnModel::random(32, &[16, 1], 44);
+        let dep = deployment_for(&model, BackendKind::Batched);
+        let reg = crate::obs::MetricsRegistry::new();
+        dep.register_metrics(&reg, "deploy");
+
+        // Collect-at-expose: the registry reads the same atomics the
+        // session bumps, so values are live without re-registration.
+        assert!(reg.expose().contains("deploy_model_m_packets 0"));
+        let mut session = dep.session("m").unwrap();
+        let mut gen = TraceGenerator::new(8);
+        let trace = gen.generate(&TraceKind::UniformIps, 48);
+        session.classify_trace(&trace.packets).unwrap();
+        dep.swap_model("m", BnnModel::random(32, &[16, 1], 45)).unwrap();
+
+        let exposed = reg.expose();
+        assert!(exposed.contains("deploy_model_m_packets 48"), "{exposed}");
+        assert!(exposed.contains("deploy_model_m_swaps 1"), "{exposed}");
+        assert!(exposed.contains("deploy_model_m_version 2"), "{exposed}");
+        assert!(exposed.contains("# TYPE deploy_model_m_version gauge"), "{exposed}");
     }
 
     #[test]

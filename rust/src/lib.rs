@@ -60,6 +60,12 @@
 //!   latency detector can run on instead of host wall-clock.
 //! * [`analysis`] — throughput / chip-area models behind the paper's
 //!   §2-Evaluation and §3-Challenges numbers.
+//! * [`obs`] — the observability layer: a unified
+//!   [`obs::MetricsRegistry`] (hierarchical names, one Prometheus-style
+//!   exposition), a sampled lock-free hot-path flight recorder
+//!   ([`obs::Tracer`]), and causal control-plane spans
+//!   ([`obs::SpanLog`]) linking signal window → detection → policy rule
+//!   → tier action → outcome.
 //!
 //! ## Quickstart
 //!
@@ -91,6 +97,7 @@ pub mod coordinator;
 pub mod deploy;
 pub mod error;
 pub mod net;
+pub mod obs;
 pub mod rmt;
 pub mod runtime;
 pub mod telemetry;

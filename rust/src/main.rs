@@ -25,6 +25,9 @@
 //!                [--sequence name:count,...] [--live] [--modeled-slo]]
 //! n2net autopilot [--sequence name:count,...] [--window N] [--shards S]
 //!               [--policy FILE] [--seed S] [--modeled-slo] [--help]
+//! n2net obs     [expose|dump|spans] [--sequence name:count,...]
+//!               [--trace N] [--window N] [--shards S] [--policy FILE]
+//!               [--metrics-file FILE] [--seed S] [--help]
 //! n2net swap    [--packets N] [--swaps K] [--seed S]
 //!               [--backend scalar|batched|reference|specialized]
 //! n2net selftest [--artifacts DIR]
@@ -54,6 +57,7 @@ use n2net::net::{
     Scenario, ScenarioSequence, SequenceTrace, TraceGenerator, TraceKind,
     MODEL_ID_OFFSET, SCENARIO_NAMES,
 };
+use n2net::obs::{render_dump, MetricsRegistry, Obs, DEFAULT_DUMP_EVENTS};
 use n2net::rmt::ChipConfig;
 use n2net::runtime::Oracle;
 use n2net::timing::{self, ChipTiming};
@@ -62,7 +66,8 @@ use n2net::util::cli::Args;
 const VALUE_OPTS: &[&str] = &[
     "in-bits", "layers", "seed", "packets", "workers", "router", "artifacts",
     "p4", "steps", "backend", "batch-size", "models", "extract", "swaps",
-    "shards", "scenario", "sequence", "window", "policy",
+    "shards", "scenario", "sequence", "window", "policy", "metrics-file",
+    "trace",
 ];
 
 fn main() {
@@ -86,9 +91,10 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: n2net <report|compile|check|timing|run|serve|autopilot|swap|selftest> [options]\n\
+        "usage: n2net <report|compile|check|timing|run|serve|autopilot|obs|swap|selftest> [options]\n\
          see `n2net report all` for every paper artifact and\n\
-         `n2net serve --help` / `n2net autopilot --help` for serving options"
+         `n2net serve --help` / `n2net autopilot --help` / `n2net obs --help`\n\
+         for serving and observability options"
     );
 }
 
@@ -101,6 +107,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
         Some("autopilot") => cmd_autopilot(args),
+        Some("obs") => cmd_obs(args),
         Some("swap") => cmd_swap(args),
         Some("selftest") => cmd_selftest(args),
         other => {
@@ -161,6 +168,29 @@ fn configure_builder(
         .workers(args.opt_usize("workers", 4)?)
         .router(router)
         .batch(batch))
+}
+
+/// `--metrics-file FILE`: write the unified registry's Prometheus-style
+/// exposition after the run (the machine surface; stdout keeps the
+/// human summary).
+fn write_metrics_file(args: &Args, reg: &MetricsRegistry) -> anyhow::Result<()> {
+    if let Some(path) = args.opt("metrics-file") {
+        std::fs::write(path, reg.expose())
+            .with_context(|| format!("writing --metrics-file {path:?}"))?;
+        println!("metrics exposition written to {path}");
+    }
+    Ok(())
+}
+
+/// `--trace N`: hot-path trace sampling override (0 disables; rates
+/// round up to a power of two). `None` when the flag is absent, so
+/// each path keeps its own default (off for plain serve, 1-in-64 for
+/// the sim-backed loops).
+fn trace_rate_override(args: &Args) -> anyhow::Result<Option<u64>> {
+    match args.opt("trace") {
+        Some(_) => Ok(Some(args.opt_u64("trace", 0)?)),
+        None => Ok(None),
+    }
 }
 
 /// The LUT baseline the `--backend lut` paths serve: the same
@@ -555,6 +585,11 @@ fn serve_help() -> String {
          \x20                       cycle model (n2net timing) instead of host\n\
          \x20                       wall-clock, so detections are host-independent\n\
          \x20 --window N            frames per control window (default 512)\n\
+         \x20 --metrics-file FILE   write the unified metrics registry's\n\
+         \x20                       Prometheus-style exposition after the run\n\
+         \x20 --trace N             sample 1-in-N hot-path events into the\n\
+         \x20                       flight recorder (0 = off; sharded and\n\
+         \x20                       adaptive paths; see `n2net obs --help`)\n\
          \x20 --seed S              trace seed",
         SCENARIO_NAMES.join("|")
     )
@@ -711,6 +746,10 @@ fn run_adaptive(
         detectors_for(args, deployment, model_name, cfg.window_packets, cfg.n_shards)?;
     let mut sim =
         Sim::with_detectors(deployment, model_name, bank, policy, cfg, detectors)?;
+    if let Some(rate) = trace_rate_override(args)? {
+        sim.obs().tracer().set_sample_rate(rate);
+    }
+    deployment.register_metrics(&sim.obs().registry, "deploy");
     let report = sim.run_trace(st)?;
     print!("{}", report.render());
     let stats = deployment.stats(model_name)?;
@@ -720,7 +759,7 @@ fn run_adaptive(
         stats.swaps,
         report.outputs.len()
     );
-    Ok(())
+    write_metrics_file(args, &sim.obs().registry)
 }
 
 /// `serve --adaptive --live`: the controller runs as a BACKGROUND
@@ -744,6 +783,15 @@ fn run_live(
     println!("policy:\n{}", policy.render());
     let window = args.opt_usize("window", 512)?.max(1);
     let engine = deployment.live_sharded_engine(model_name, shards.max(1))?;
+    // Observability: share the tier's tracer, register its metrics, and
+    // give the live controller thread the span log — detections on the
+    // RUNNING tier record the same causal chain the sim renders.
+    let obs = std::sync::Arc::new(Obs::new(std::sync::Arc::clone(engine.tracer())));
+    engine.register_metrics(&obs.registry, "tier");
+    deployment.register_metrics(&obs.registry, "deploy");
+    if let Some(rate) = trace_rate_override(args)? {
+        obs.tracer().set_sample_rate(rate);
+    }
     let detectors =
         detectors_for(args, deployment, model_name, window, shards.max(1))?;
     let controller = Controller::with_detectors(
@@ -752,7 +800,8 @@ fn run_live(
         policy,
         detectors,
     )?
-    .with_tier(std::sync::Arc::clone(&engine))?;
+    .with_tier(std::sync::Arc::clone(&engine))?
+    .with_obs(std::sync::Arc::clone(&obs));
     let (clock, driver) = ManualClock::pair();
     let live = spawn_live(
         std::sync::Arc::clone(&engine),
@@ -817,6 +866,10 @@ fn run_live(
         controller.alerts(),
     );
     println!("quiet-segment actions: {quiet_actions}");
+    if !obs.spans.is_empty() {
+        println!("causal chain:");
+        print!("{}", obs.spans.render_tree());
+    }
     let stats = deployment.stats(model_name)?;
     println!(
         "live model: v{} after {} published swap(s), {} packets served",
@@ -824,7 +877,7 @@ fn run_live(
         stats.swaps,
         report.n_packets
     );
-    Ok(())
+    write_metrics_file(args, &obs.registry)
 }
 
 /// Resolve the adaptive tier's live model, swap target, and blacklist:
@@ -942,9 +995,19 @@ fn serve_single(
         }
     };
     if shards > 0 {
-        let report = deployment.serve_trace_sharded("serve", shards, &trace.packets)?;
+        let engine = deployment.sharded_engine("serve", shards)?;
+        let trace_rate = trace_rate_override(args)?.unwrap_or(0);
+        engine.tracer().set_sample_rate(trace_rate);
+        let report = engine.process_trace(&trace.packets)?;
         print!("{}", report.render());
-        return Ok(());
+        if trace_rate > 0 {
+            println!("flight recorder (newest sampled hot-path events):");
+            print!("{}", render_dump(&engine.tracer().dump_last(DEFAULT_DUMP_EVENTS)));
+        }
+        let reg = MetricsRegistry::new();
+        engine.register_metrics(&reg, "tier");
+        deployment.register_metrics(&reg, "deploy");
+        return write_metrics_file(args, &reg);
     }
     let engine = deployment.engine("serve")?;
     let report = engine.process_trace(&trace.packets)?;
@@ -957,8 +1020,11 @@ fn serve_single(
         report.sim_pps / 1e6,
         report.modeled_pps / 1e6
     );
-    println!("{}", engine.metrics.render());
-    Ok(())
+    let reg = MetricsRegistry::new();
+    engine.metrics.register_into(&reg, "engine");
+    deployment.register_metrics(&reg, "deploy");
+    print!("{}", reg.summary());
+    write_metrics_file(args, &reg)
 }
 
 /// Several `--models` (or the multi-tenant scenario): ONE keyed-table
@@ -1043,11 +1109,19 @@ fn serve_keyed(
     };
 
     if shards > 0 {
-        let report = deployment
-            .sharded_engine_keyed(shards)?
-            .process_trace(&packets)?;
+        let engine = deployment.sharded_engine_keyed(shards)?;
+        let trace_rate = trace_rate_override(args)?.unwrap_or(0);
+        engine.tracer().set_sample_rate(trace_rate);
+        let report = engine.process_trace(&packets)?;
         print!("{}", report.render());
-        return Ok(());
+        if trace_rate > 0 {
+            println!("flight recorder (newest sampled hot-path events):");
+            print!("{}", render_dump(&engine.tracer().dump_last(DEFAULT_DUMP_EVENTS)));
+        }
+        let reg = MetricsRegistry::new();
+        engine.register_metrics(&reg, "tier");
+        deployment.register_metrics(&reg, "deploy");
+        return write_metrics_file(args, &reg);
     }
     let engine = deployment.engine_keyed()?;
     let report = engine.process_trace(&packets)?;
@@ -1060,8 +1134,11 @@ fn serve_keyed(
         report.sim_pps / 1e6,
         report.modeled_pps / 1e6
     );
-    println!("{}", engine.metrics.render());
-    Ok(())
+    let reg = MetricsRegistry::new();
+    engine.metrics.register_into(&reg, "engine");
+    deployment.register_metrics(&reg, "deploy");
+    print!("{}", reg.summary());
+    write_metrics_file(args, &reg)
 }
 
 // ---------------------------------------------------------------------------
@@ -1133,6 +1210,114 @@ fn cmd_autopilot(args: &Args) -> anyhow::Result<()> {
     let bank = ModelBank::new("day", live).with_model("attack", attack);
     let st = seq.generate(seed);
     run_adaptive(args, &deployment, "live", bank, &st, shards, seed)
+}
+
+// ---------------------------------------------------------------------------
+// obs — observability surfaces over a closed-loop run
+// ---------------------------------------------------------------------------
+
+fn obs_help() -> String {
+    format!(
+        "usage: n2net obs [expose|dump|spans] [options]\n\
+         runs the closed control loop over a scenario sequence with sampled\n\
+         hot-path tracing enabled, then renders one observability surface:\n\
+         \x20 expose                the unified metrics registry's\n\
+         \x20                       Prometheus-style text exposition\n\
+         \x20 dump                  flight-recorder dumps captured when\n\
+         \x20                       detectors fired (or the newest sampled\n\
+         \x20                       events if nothing fired)\n\
+         \x20 spans                 the causal span tree: signal window ->\n\
+         \x20                       detection -> rule -> action -> outcome\n\
+         \x20                       (default)\n\
+         options:\n\
+         \x20 --sequence name:count,...  scenario sequence (default\n\
+         \x20                       uniform:2048,ddos-burst:4096,uniform:2048);\n\
+         \x20                       scenario names:\n\
+         \x20                       {}\n\
+         \x20 --trace N             sample 1-in-N hot-path events (default 64)\n\
+         \x20 --window N            frames per control window (default 512)\n\
+         \x20 --shards S            serving shards (default 2)\n\
+         \x20 --policy FILE         policy rules (default: swap on ddos-ramp)\n\
+         \x20 --metrics-file FILE   also write the exposition to FILE\n\
+         \x20 --artifacts DIR       trained weights (falls back to the crafted\n\
+         \x20                       subnet classifier)\n\
+         \x20 --seed S              trace seed",
+        SCENARIO_NAMES.join("|")
+    )
+}
+
+/// `n2net obs` — drive the deterministic closed loop with tracing on
+/// and render the requested observability surface. Hermetic: without
+/// trained artifacts it serves the crafted subnet classifier, so the
+/// ddos-ramp detector genuinely fires and the causal chain is real.
+fn cmd_obs(args: &Args) -> anyhow::Result<()> {
+    if args.has_flag("help") {
+        println!("{}", obs_help());
+        return Ok(());
+    }
+    let mode = args.positional.get(1).map(String::as_str).unwrap_or("spans");
+    ensure!(
+        matches!(mode, "expose" | "dump" | "spans"),
+        "obs renders one of expose|dump|spans, got {mode:?}"
+    );
+    let seed = args.opt_u64("seed", 7)?;
+    let shards = args.opt_usize("shards", 2)?;
+    let path = artifacts_dir(args).join("weights.json");
+    let (live, attack, ddos) =
+        adaptive_models(&path.to_string_lossy(), seed, false)?;
+    let spec = args
+        .opt("sequence")
+        .unwrap_or("uniform:2048,ddos-burst:4096,uniform:2048");
+    let seq = ScenarioSequence::parse(spec)?.with_ddos(ddos);
+    println!("sequence: {}", seq.name());
+
+    let deployment = std::sync::Arc::new(
+        configure_builder(Deployment::builder(), args)?
+            .model("live", live.clone())
+            .build()?,
+    );
+    let bank = ModelBank::new("day", live).with_model("attack", attack);
+    let cfg = SimConfig {
+        n_shards: shards.max(1),
+        window_packets: args.opt_usize("window", 512)?.max(1),
+        seed,
+    };
+    let mut sim = Sim::new(&deployment, "live", bank, policy_for(args)?, cfg)?;
+    if let Some(rate) = trace_rate_override(args)? {
+        sim.obs().tracer().set_sample_rate(rate);
+    }
+    deployment.register_metrics(&sim.obs().registry, "deploy");
+    let report = sim.run_trace(&seq.generate(seed))?;
+    println!(
+        "observed run: {} packets over {} window(s), {} swap(s), \
+         trace sample rate {}, {} event(s) recorded",
+        report.outputs.len(),
+        report.ticks.len(),
+        report.swaps.len(),
+        sim.obs().tracer().sample_rate(),
+        sim.obs().tracer().recorded(),
+    );
+    match mode {
+        "expose" => print!("{}", sim.obs().registry.expose()),
+        "dump" => {
+            let dumps = sim.obs().dumps();
+            if dumps.is_empty() {
+                println!(
+                    "no flight dumps (no detector fired); newest sampled events:"
+                );
+                print!(
+                    "{}",
+                    render_dump(&sim.obs().tracer().dump_last(DEFAULT_DUMP_EVENTS))
+                );
+            } else {
+                for d in &dumps {
+                    print!("{}", d.render());
+                }
+            }
+        }
+        _ => print!("{}", sim.obs().spans.render_tree()),
+    }
+    write_metrics_file(args, &sim.obs().registry)
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,136 @@
+//! Observability layer (DESIGN.md §18): unified metrics registry,
+//! sampled hot-path tracing, and causal control-plane spans.
+//!
+//! Three surfaces, one discipline — *nothing here may slow the packet
+//! path*:
+//!
+//! - [`MetricsRegistry`] owns every metric under a hierarchical name
+//!   and renders them all through one Prometheus-style exposition
+//!   ([`MetricsRegistry::expose`]) and one human summary, replacing the
+//!   per-struct `render()` builders that used to live in `telemetry`,
+//!   `coordinator::shard`, and the CLI.
+//! - [`Tracer`] is the sampled flight recorder: lock-free per-shard
+//!   rings of structured [`Event`]s, one relaxed atomic load when
+//!   disabled.
+//! - [`SpanLog`] records the control plane's causal chain (window →
+//!   detection → rule → action → outcome) off the hot path, and a
+//!   detector firing snapshots the tracer into a [`FlightDump`] so the
+//!   hot-path events around an anomaly are kept with the action that
+//!   answered it.
+//!
+//! [`Obs`] bundles the three for a serving tier and is what the
+//! controller, sim, and CLI share.
+
+mod registry;
+mod span;
+mod trace;
+
+pub use registry::{sanitize_metric_name, Gauge, HistogramSnapshot, MetricsRegistry};
+pub use span::{render_tree, Span, SpanKind, SpanLog};
+pub use trace::{render_dump, Event, EventKind, Tracer, DEFAULT_RING_CAPACITY};
+
+use std::sync::{Arc, Mutex};
+
+/// Hot-path events captured around one anomaly: the flight-recorder
+/// snapshot taken when a window's first detector fired.
+#[derive(Clone, Debug)]
+pub struct FlightDump {
+    /// Signal-window index of the anomaly.
+    pub window: u64,
+    pub events: Vec<Event>,
+}
+
+impl FlightDump {
+    pub fn render(&self) -> String {
+        format!(
+            "flight recorder @ w{} ({} event(s)):\n{}",
+            self.window,
+            self.events.len(),
+            render_dump(&self.events)
+        )
+    }
+}
+
+/// How many hot-path events a detector firing captures by default.
+pub const DEFAULT_DUMP_EVENTS: usize = 32;
+
+/// Observability hub for one serving tier: the registry, the tier's
+/// tracer (shared with its dispatcher and workers), the span log, and
+/// the flight dumps detections have triggered.
+pub struct Obs {
+    pub registry: MetricsRegistry,
+    pub spans: SpanLog,
+    tracer: Arc<Tracer>,
+    dumps: Mutex<Vec<FlightDump>>,
+    /// Events captured per flight dump ([`DEFAULT_DUMP_EVENTS`]).
+    pub dump_events: usize,
+}
+
+impl Obs {
+    /// Build a hub around an existing tracer (normally the one a
+    /// `ShardedEngine` created at construction, via `engine.tracer()`).
+    pub fn new(tracer: Arc<Tracer>) -> Self {
+        let registry = MetricsRegistry::new();
+        let t = Arc::clone(&tracer);
+        registry.counter_fn("obs.trace.recorded", move || t.recorded());
+        let t = Arc::clone(&tracer);
+        registry.gauge_fn("obs.trace.sample_rate", move || t.sample_rate());
+        Self {
+            registry,
+            spans: SpanLog::new(),
+            tracer,
+            dumps: Mutex::new(Vec::new()),
+            dump_events: DEFAULT_DUMP_EVENTS,
+        }
+    }
+
+    /// A hub with a detached tracer — for tests and CLI paths that
+    /// observe nothing sharded.
+    pub fn standalone() -> Self {
+        Self::new(Arc::new(Tracer::for_shards(1)))
+    }
+
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
+    /// Capture the newest hot-path events into a [`FlightDump`] and
+    /// keep it; returns the dump for span evidence.
+    pub fn capture_dump(&self, window: u64) -> FlightDump {
+        let dump = FlightDump { window, events: self.tracer.dump_last(self.dump_events) };
+        self.dumps.lock().unwrap().push(dump.clone());
+        dump
+    }
+
+    pub fn dumps(&self) -> Vec<FlightDump> {
+        self.dumps.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hub_registers_its_own_trace_metrics() {
+        let obs = Obs::standalone();
+        obs.tracer().set_sample_rate(4);
+        let exposed = obs.registry.expose();
+        assert!(exposed.contains("obs_trace_recorded 0"), "{exposed}");
+        assert!(exposed.contains("obs_trace_sample_rate 4"), "{exposed}");
+    }
+
+    #[test]
+    fn capture_dump_snapshots_the_tracer() {
+        let obs = Obs::standalone();
+        obs.tracer().set_sample_rate(1);
+        for i in 0..5 {
+            obs.tracer().record(0, EventKind::Drop, i, 64);
+        }
+        let dump = obs.capture_dump(9);
+        assert_eq!(dump.window, 9);
+        assert_eq!(dump.events.len(), 5);
+        assert!(dump.render().contains("flight recorder @ w9 (5 event(s))"));
+        assert_eq!(obs.dumps().len(), 1);
+    }
+}

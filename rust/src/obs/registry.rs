@@ -1,0 +1,320 @@
+//! Unified metrics registry: typed handles under hierarchical names,
+//! one text exposition for every surface.
+//!
+//! Every metric in the system — engine counters, per-shard telemetry,
+//! per-model deploy counters, latency histograms — registers here under
+//! a dotted hierarchical name (`tier.shard3.dropped`) and is rendered
+//! by exactly two formatters: [`MetricsRegistry::expose`] (Prometheus
+//! text exposition, the machine surface behind `serve --metrics-file`
+//! and `obs expose`) and [`MetricsRegistry::summary`] (the human
+//! one-line-per-metric view the old bespoke `render()` builders used to
+//! hand-roll).
+//!
+//! Registration is collect-at-expose: a metric is a *closure* that
+//! reads the live value when the registry is rendered. That decouples
+//! ownership — `ShardTelemetry`'s counters live inside one `Arc` per
+//! shard, `EngineMetrics` fields are plain struct members — from
+//! exposition, with zero hot-path cost (the hot path keeps touching the
+//! same relaxed atomics it always did; the registry only reads them
+//! when someone asks for text).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::telemetry::{quantile_ns_from_buckets, Counter, Histogram};
+
+/// A last-value-wins instantaneous metric (shard count, model version,
+/// configured sample rate). Same relaxed-atomic discipline as
+/// [`Counter`], but semantically a level, not a monotone total.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`]'s state: what a histogram
+/// source closure hands the registry at expose time.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    /// Raw log₂ bucket counts (index i = samples in [2^i, 2^{i+1}) ns).
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_ns: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn of(h: &Histogram) -> Self {
+        Self { buckets: h.bucket_counts(), count: h.count(), sum_ns: h.sum_ns() }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.count as f64
+    }
+
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        quantile_ns_from_buckets(&self.buckets, q)
+    }
+
+    /// The one human-readable histogram line every report shares
+    /// (formerly duplicated as `Histogram::render`).
+    pub fn summary_line(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.0}ns p50≤{:.0}ns p99≤{:.0}ns",
+            self.count,
+            self.mean_ns(),
+            self.quantile_ns(0.5),
+            self.quantile_ns(0.99),
+        )
+    }
+}
+
+enum Metric {
+    Counter(Box<dyn Fn() -> u64 + Send + Sync>),
+    Gauge(Box<dyn Fn() -> u64 + Send + Sync>),
+    Histogram(Box<dyn Fn() -> HistogramSnapshot + Send + Sync>),
+}
+
+impl Metric {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// The registry: an ordered map from hierarchical name to metric
+/// source. Registration replaces any entry with the same name, so
+/// re-registering after a reshard (shard count changed) is idempotent.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<Vec<(String, Metric)>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create, register, and return an owned counter handle.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let c = Arc::new(Counter::default());
+        let src = Arc::clone(&c);
+        self.counter_fn(name, move || src.get());
+        c
+    }
+
+    /// Create, register, and return an owned gauge handle.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::default());
+        let src = Arc::clone(&g);
+        self.gauge_fn(name, move || src.get());
+        g
+    }
+
+    /// Create, register, and return an owned histogram handle.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::new());
+        let src = Arc::clone(&h);
+        self.histogram_fn(name, move || HistogramSnapshot::of(&src));
+        h
+    }
+
+    /// Register a counter whose value is read at expose time. This is
+    /// how metrics owned by existing structs (engine counters, shard
+    /// telemetry) join the registry without changing their ownership.
+    pub fn counter_fn(&self, name: &str, f: impl Fn() -> u64 + Send + Sync + 'static) {
+        self.insert(name, Metric::Counter(Box::new(f)));
+    }
+
+    /// Register a gauge whose value is read at expose time.
+    pub fn gauge_fn(&self, name: &str, f: impl Fn() -> u64 + Send + Sync + 'static) {
+        self.insert(name, Metric::Gauge(Box::new(f)));
+    }
+
+    /// Register a histogram whose snapshot is taken at expose time.
+    pub fn histogram_fn(
+        &self,
+        name: &str,
+        f: impl Fn() -> HistogramSnapshot + Send + Sync + 'static,
+    ) {
+        self.insert(name, Metric::Histogram(Box::new(f)));
+    }
+
+    fn insert(&self, name: &str, metric: Metric) {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(slot) = entries.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = metric;
+        } else {
+            entries.push((name.to_string(), metric));
+        }
+    }
+
+    /// Drop every metric whose name starts with `prefix` — used when a
+    /// reshard changes the set of `tier.shardN.*` series.
+    pub fn remove_prefix(&self, prefix: &str) {
+        self.entries.lock().unwrap().retain(|(n, _)| !n.starts_with(prefix));
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.lock().unwrap().iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Prometheus-style text exposition: `# TYPE` line per metric,
+    /// hierarchical dots flattened to underscores, histograms as
+    /// cumulative `_bucket{le="..."}` series plus `_sum`/`_count`.
+    pub fn expose(&self) -> String {
+        let entries = self.entries.lock().unwrap();
+        let mut out = String::new();
+        for (name, metric) in entries.iter() {
+            let flat = sanitize_metric_name(name);
+            out.push_str(&format!("# TYPE {flat} {}\n", metric.type_name()));
+            match metric {
+                Metric::Counter(f) | Metric::Gauge(f) => {
+                    out.push_str(&format!("{flat} {}\n", f()));
+                }
+                Metric::Histogram(f) => {
+                    let snap = f();
+                    // Emit cumulative buckets up to the highest
+                    // non-empty one; everything above it is implied by
+                    // the +Inf bucket.
+                    let top = snap
+                        .buckets
+                        .iter()
+                        .rposition(|&b| b > 0)
+                        .map(|i| i + 1)
+                        .unwrap_or(0);
+                    let mut acc = 0u64;
+                    for (i, &b) in snap.buckets.iter().take(top).enumerate() {
+                        acc += b;
+                        // Bucket i holds [2^i, 2^{i+1}) ns: le is the
+                        // exclusive upper edge.
+                        out.push_str(&format!(
+                            "{flat}_bucket{{le=\"{}\"}} {acc}\n",
+                            1u64 << (i + 1)
+                        ));
+                    }
+                    out.push_str(&format!("{flat}_bucket{{le=\"+Inf\"}} {}\n", snap.count));
+                    out.push_str(&format!("{flat}_sum {}\n", snap.sum_ns));
+                    out.push_str(&format!("{flat}_count {}\n", snap.count));
+                }
+            }
+        }
+        out
+    }
+
+    /// Human-readable one-line-per-metric view: the shared replacement
+    /// for the old per-struct `render()` string builders.
+    pub fn summary(&self) -> String {
+        let entries = self.entries.lock().unwrap();
+        let mut out = String::new();
+        for (name, metric) in entries.iter() {
+            match metric {
+                Metric::Counter(f) | Metric::Gauge(f) => {
+                    out.push_str(&format!("{name}: {}\n", f()));
+                }
+                Metric::Histogram(f) => {
+                    out.push_str(&f().summary_line(name));
+                    out.push('\n');
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Flatten a hierarchical metric name for exposition: dots become
+/// underscores, anything outside `[a-zA-Z0-9_:]` likewise.
+pub fn sanitize_metric_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn registration_replaces_and_exposes_in_order() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("tier.shard0.packets");
+        c.add(7);
+        let g = reg.gauge("tier.n_shards");
+        g.set(4);
+        assert_eq!(reg.names(), vec!["tier.shard0.packets", "tier.n_shards"]);
+
+        let exposed = reg.expose();
+        assert!(exposed.contains("# TYPE tier_shard0_packets counter"), "{exposed}");
+        assert!(exposed.contains("tier_shard0_packets 7"), "{exposed}");
+        assert!(exposed.contains("# TYPE tier_n_shards gauge"), "{exposed}");
+        assert!(exposed.contains("tier_n_shards 4"), "{exposed}");
+
+        // Same-name registration replaces (idempotent re-register).
+        reg.counter_fn("tier.shard0.packets", || 99);
+        assert_eq!(reg.len(), 2);
+        assert!(reg.expose().contains("tier_shard0_packets 99"));
+
+        reg.remove_prefix("tier.shard");
+        assert_eq!(reg.names(), vec!["tier.n_shards"]);
+    }
+
+    #[test]
+    fn histogram_exposition_is_cumulative_with_sum_and_count() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("engine.batch_latency");
+        h.record(Duration::from_nanos(3)); // bucket [2,4) -> le="4"
+        h.record(Duration::from_nanos(3));
+        h.record(Duration::from_nanos(1500)); // bucket [1024,2048) -> le="2048"
+
+        let exposed = reg.expose();
+        assert!(exposed.contains("# TYPE engine_batch_latency histogram"), "{exposed}");
+        assert!(exposed.contains("engine_batch_latency_bucket{le=\"4\"} 2"), "{exposed}");
+        assert!(exposed.contains("engine_batch_latency_bucket{le=\"2048\"} 3"), "{exposed}");
+        assert!(exposed.contains("engine_batch_latency_bucket{le=\"+Inf\"} 3"), "{exposed}");
+        assert!(exposed.contains("engine_batch_latency_sum 1506"), "{exposed}");
+        assert!(exposed.contains("engine_batch_latency_count 3"), "{exposed}");
+
+        // The summary view shares the histogram line format.
+        let summary = reg.summary();
+        assert!(summary.contains("engine.batch_latency: n=3"), "{summary}");
+    }
+
+    #[test]
+    fn collect_at_expose_reads_live_values() {
+        let reg = MetricsRegistry::new();
+        let owner = Arc::new(Counter::default());
+        let src = Arc::clone(&owner);
+        reg.counter_fn("deploy.model.attack.packets", move || src.get());
+        assert!(reg.expose().contains("deploy_model_attack_packets 0"));
+        owner.add(41);
+        assert!(reg.expose().contains("deploy_model_attack_packets 41"));
+    }
+
+    #[test]
+    fn sanitize_flattens_hierarchy() {
+        assert_eq!(sanitize_metric_name("tier.shard3.dropped"), "tier_shard3_dropped");
+        assert_eq!(sanitize_metric_name("a-b c"), "a_b_c");
+    }
+}

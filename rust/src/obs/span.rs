@@ -1,0 +1,173 @@
+//! Causal control-plane spans: every detector firing, policy decision,
+//! and tier action is recorded as a node in a parent-linked tree, so an
+//! operator (or `SimReport`) can replay *why* the control plane did
+//! what it did — signal window → detection → policy rule → tier action
+//! → outcome, with the flight-recorder dump from the anomaly window
+//! attached alongside.
+//!
+//! Spans live entirely off the hot path: they are written by the
+//! controller's once-per-window tick under a plain mutex, never by
+//! packet-processing threads.
+
+use std::sync::Mutex;
+
+/// Where a span sits in the causal chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// An anomalous signal window — the root of a causal tree. Its
+    /// evidence is the rendered window the detectors saw.
+    Window,
+    /// A detector firing (child of the window).
+    Detection,
+    /// A policy rule deciding to act (child of the detection).
+    Rule,
+    /// The tier action taken (child of the rule).
+    Action,
+    /// What the action produced (child of the action).
+    Outcome,
+    /// The hot-path flight-recorder dump captured when the window's
+    /// first detector fired (child of the window).
+    FlightDump,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Window => "window",
+            SpanKind::Detection => "detection",
+            SpanKind::Rule => "rule",
+            SpanKind::Action => "action",
+            SpanKind::Outcome => "outcome",
+            SpanKind::FlightDump => "flight-dump",
+        }
+    }
+}
+
+/// One node in the causal tree.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Log-assigned id; parents always precede children.
+    pub id: u64,
+    pub parent: Option<u64>,
+    /// Signal-window index the span belongs to.
+    pub window: u64,
+    pub kind: SpanKind,
+    /// One-line headline ("ddos-ramp severity 0.31").
+    pub label: String,
+    /// Supporting evidence, possibly multi-line (rendered signal
+    /// window, detector detail, flight-recorder events).
+    pub evidence: String,
+}
+
+/// Append-only span log. Ids are indices into the log, so parent links
+/// are stable and cheap to resolve at render time.
+#[derive(Default)]
+pub struct SpanLog {
+    spans: Mutex<Vec<Span>>,
+}
+
+impl SpanLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a span; returns its id for use as a child's parent link.
+    pub fn record(
+        &self,
+        parent: Option<u64>,
+        window: u64,
+        kind: SpanKind,
+        label: impl Into<String>,
+        evidence: impl Into<String>,
+    ) -> u64 {
+        let mut spans = self.spans.lock().unwrap();
+        let id = spans.len() as u64;
+        spans.push(Span {
+            id,
+            parent,
+            window,
+            kind,
+            label: label.into(),
+            evidence: evidence.into(),
+        });
+        id
+    }
+
+    pub fn spans(&self) -> Vec<Span> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn render_tree(&self) -> String {
+        render_tree(&self.spans())
+    }
+}
+
+/// Render spans as an indented causal tree, roots in log order.
+/// Evidence lines are quoted under their span with a `|` gutter.
+pub fn render_tree(spans: &[Span]) -> String {
+    let mut out = String::new();
+    for root in spans.iter().filter(|s| s.parent.is_none()) {
+        render_node(spans, root, 0, &mut out);
+    }
+    out
+}
+
+fn render_node(spans: &[Span], node: &Span, depth: usize, out: &mut String) {
+    let indent = "  ".repeat(depth);
+    out.push_str(&format!("{indent}{} {}\n", node.kind.name(), node.label));
+    for line in node.evidence.lines().filter(|l| !l.trim().is_empty()) {
+        out.push_str(&format!("{indent}  | {}\n", line.trim_end()));
+    }
+    for child in spans.iter().filter(|s| s.parent == Some(node.id)) {
+        render_node(spans, child, depth + 1, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_links_and_renders_the_causal_chain() {
+        let log = SpanLog::new();
+        let w = log.record(None, 12, SpanKind::Window, "signal window w12", "w12 pkts=512");
+        let d = log.record(Some(w), 12, SpanKind::Detection, "ddos-ramp severity 0.31", "share 0.87");
+        let r = log.record(Some(d), 12, SpanKind::Rule, "rule 0: on ddos-ramp do swap attack", "");
+        let a = log.record(Some(r), 12, SpanKind::Action, "swap attack", "");
+        log.record(Some(a), 12, SpanKind::Outcome, "published \"attack\" as v2", "");
+        log.record(Some(w), 12, SpanKind::FlightDump, "2 hot-path event(s)", "#1 shard0 drop\n#2 shard1 drop");
+
+        assert_eq!(log.len(), 6);
+        let tree = log.render_tree();
+        // Chain appears in causal order with increasing indentation.
+        let chain = ["window ", "detection ", "rule ", "action ", "outcome ", "flight-dump "];
+        let mut pos = 0;
+        for part in chain {
+            let at = tree[pos..].find(part).unwrap_or_else(|| panic!("missing {part:?}:\n{tree}"));
+            pos += at;
+        }
+        assert!(tree.contains("  | w12 pkts=512"), "{tree}");
+        assert!(tree.contains("    | share 0.87"), "{tree}");
+        assert!(tree.contains("  | #2 shard1 drop"), "{tree}");
+        let outcome_line = tree.lines().find(|l| l.contains("outcome")).unwrap();
+        assert!(outcome_line.starts_with("        "), "outcome nests 4 deep: {outcome_line:?}");
+    }
+
+    #[test]
+    fn independent_roots_stay_separate() {
+        let log = SpanLog::new();
+        log.record(None, 1, SpanKind::Window, "w1", "");
+        log.record(None, 2, SpanKind::Window, "w2", "");
+        let tree = log.render_tree();
+        assert_eq!(tree.lines().count(), 2);
+        assert!(log.spans().iter().all(|s| s.parent.is_none()));
+    }
+}

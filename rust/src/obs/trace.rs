@@ -1,0 +1,400 @@
+//! Sampled hot-path tracer: a lock-free per-shard ring-buffer flight
+//! recorder of structured [`Event`]s.
+//!
+//! Design constraints (the hot path serves millions of pps):
+//!
+//! - **Off means off.** With sampling disabled, [`Tracer::record`] is a
+//!   single relaxed atomic load and an untaken branch — no allocation,
+//!   no formatting, no ring touch. The `pipeline_hotpath`-style bench
+//!   in `benches/obs.rs` holds this to ≤ 1% overhead.
+//! - **Power-of-two sampling.** The sample rate is 1-in-2^k: a shared
+//!   ticket counter is bumped (one relaxed `fetch_add`) and the event
+//!   is kept only when `ticket & (2^k - 1) == 0`. No RNG, no modulo.
+//! - **Fixed-size rings, torn reads tolerated.** Each shard maps to a
+//!   ring of power-of-two capacity; a writer claims a slot with a
+//!   relaxed ticket `fetch_add`, stores the payload relaxed, then
+//!   publishes with a `Release` stamp store. The reader re-checks the
+//!   stamp around its payload loads and discards slots that changed
+//!   under it — a flight recorder is best-effort by definition, and
+//!   losing a slot to a concurrent wrap is cheaper than any hot-path
+//!   synchronization.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sentinel for "tracing disabled": never equals a valid sample mask
+/// (masks are `2^k - 1 <= 2^62 - 1`).
+const OFF: u64 = u64::MAX;
+
+/// Slots per shard ring unless the caller asks otherwise. 256 events ×
+/// 5 words is small enough to keep per engine and deep enough that an
+/// anomaly window's dump has context on both sides of the spike.
+pub const DEFAULT_RING_CAPACITY: usize = 256;
+
+/// What happened on the hot path. The payload words `a`/`b` are
+/// kind-specific (documented per variant) so an [`Event`] stays `Copy`
+/// and slot-sized — no strings ever touch the recording path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// A frame entered the sharded dispatcher. `a` = flow hash,
+    /// `b` = frame length in bytes.
+    FrameIngress = 0,
+    /// A worker pulled a batch off its queue. `a` = frames in the
+    /// batch, `b` = model version serving it.
+    BatchDispatch = 1,
+    /// A backend finished a batch. `a` = frames in the batch,
+    /// `b` = wall time in ns.
+    BackendRun = 2,
+    /// A worker observed a published swap and refreshed its backend.
+    /// `a` = old model version, `b` = new model version.
+    SwapObserved = 3,
+    /// The dispatcher shed a frame (Drop overflow policy). `a` = flow
+    /// hash, `b` = frame length.
+    Drop = 4,
+    /// The dispatcher blocked on a full queue (Block overflow policy).
+    /// `a` = flow hash, `b` = frame length.
+    Backpressure = 5,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::FrameIngress => "ingress",
+            EventKind::BatchDispatch => "batch-dispatch",
+            EventKind::BackendRun => "backend-run",
+            EventKind::SwapObserved => "swap-observed",
+            EventKind::Drop => "drop",
+            EventKind::Backpressure => "backpressure",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<EventKind> {
+        Some(match v {
+            0 => EventKind::FrameIngress,
+            1 => EventKind::BatchDispatch,
+            2 => EventKind::BackendRun,
+            3 => EventKind::SwapObserved,
+            4 => EventKind::Drop,
+            5 => EventKind::Backpressure,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded hot-path event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Global ticket number (total ordering across shards).
+    pub seq: u64,
+    pub shard: u32,
+    pub kind: EventKind,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Event {
+    pub fn render(&self) -> String {
+        let Event { seq, shard, kind, a, b } = *self;
+        match kind {
+            EventKind::FrameIngress | EventKind::Drop | EventKind::Backpressure => {
+                format!("#{seq} shard{shard} {} flow=0x{a:08x} len={b}", kind.name())
+            }
+            EventKind::BatchDispatch => {
+                format!("#{seq} shard{shard} {} frames={a} v{b}", kind.name())
+            }
+            EventKind::BackendRun => {
+                format!("#{seq} shard{shard} {} frames={a} took={b}ns", kind.name())
+            }
+            EventKind::SwapObserved => {
+                format!("#{seq} shard{shard} {} v{a}->v{b}", kind.name())
+            }
+        }
+    }
+}
+
+/// One ring slot: `stamp` is 0 while empty or mid-write, else the
+/// writer's ticket + 1 (published with `Release`; readers pair with
+/// `Acquire` and re-check).
+struct Slot {
+    stamp: AtomicU64,
+    seq: AtomicU64,
+    kind_shard: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Self {
+            stamp: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            kind_shard: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+        }
+    }
+}
+
+struct Ring {
+    head: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+/// The flight recorder. Shared by the sharded dispatcher (ingress,
+/// drop, backpressure) and every shard worker (dispatch, run, swap);
+/// the control plane dumps it when a detector fires.
+pub struct Tracer {
+    mask: AtomicU64,
+    tickets: AtomicU64,
+    recorded: AtomicU64,
+    rings: Vec<Ring>,
+}
+
+impl Tracer {
+    /// `rings` is clamped to ≥ 1; `capacity` is rounded up to a power
+    /// of two. Shards beyond `rings` fold in modulo, so a tier built
+    /// for N shards keeps recording after a reshard to more.
+    pub fn new(rings: usize, capacity: usize) -> Self {
+        let capacity = capacity.max(2).next_power_of_two();
+        Self {
+            mask: AtomicU64::new(OFF),
+            tickets: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            rings: (0..rings.max(1))
+                .map(|_| Ring {
+                    head: AtomicU64::new(0),
+                    slots: (0..capacity).map(|_| Slot::new()).collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// A tracer sized for an `n`-shard tier with default ring depth.
+    pub fn for_shards(n: usize) -> Self {
+        Self::new(n, DEFAULT_RING_CAPACITY)
+    }
+
+    /// Set the sampling rate: `0` disables tracing entirely, any other
+    /// value keeps 1 in `rate.next_power_of_two()` events.
+    pub fn set_sample_rate(&self, rate: u64) {
+        if rate == 0 {
+            self.mask.store(OFF, Ordering::Relaxed);
+        } else {
+            let rate = rate.next_power_of_two().min(1 << 62);
+            self.mask.store(rate - 1, Ordering::Relaxed);
+        }
+    }
+
+    /// Effective sampling rate (0 when disabled, else a power of two).
+    pub fn sample_rate(&self) -> u64 {
+        match self.mask.load(Ordering::Relaxed) {
+            OFF => 0,
+            mask => mask + 1,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.mask.load(Ordering::Relaxed) != OFF
+    }
+
+    /// Record one event, subject to sampling. When tracing is off this
+    /// is one relaxed load; when on but the ticket loses the sampling
+    /// draw, one load and one relaxed `fetch_add`.
+    #[inline]
+    pub fn record(&self, shard: usize, kind: EventKind, a: u64, b: u64) {
+        let mask = self.mask.load(Ordering::Relaxed);
+        if mask == OFF {
+            return;
+        }
+        let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+        if ticket & mask != 0 {
+            return;
+        }
+        self.write(shard, ticket, kind, a, b);
+    }
+
+    #[cold]
+    fn write(&self, shard: usize, seq: u64, kind: EventKind, a: u64, b: u64) {
+        let ring = &self.rings[shard % self.rings.len()];
+        let ticket = ring.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &ring.slots[ticket as usize & (ring.slots.len() - 1)];
+        // Invalidate, fill, publish: a reader that catches the slot
+        // mid-write sees stamp 0 or a stamp that changes across its
+        // payload loads, and skips it either way.
+        slot.stamp.store(0, Ordering::Relaxed);
+        slot.seq.store(seq, Ordering::Relaxed);
+        slot.kind_shard.store(((shard as u64) << 8) | kind as u64, Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        slot.stamp.store(ticket + 1, Ordering::Release);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total events actually written to rings (post-sampling).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Total record attempts seen while tracing was enabled.
+    pub fn attempts(&self) -> u64 {
+        self.tickets.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot every valid slot across all rings, oldest first.
+    pub fn dump(&self) -> Vec<Event> {
+        let mut out = Vec::new();
+        for ring in &self.rings {
+            for slot in &ring.slots {
+                let stamp = slot.stamp.load(Ordering::Acquire);
+                if stamp == 0 {
+                    continue;
+                }
+                let seq = slot.seq.load(Ordering::Relaxed);
+                let kind_shard = slot.kind_shard.load(Ordering::Relaxed);
+                let a = slot.a.load(Ordering::Relaxed);
+                let b = slot.b.load(Ordering::Relaxed);
+                if slot.stamp.load(Ordering::Acquire) != stamp {
+                    continue; // torn by a concurrent wrap; skip
+                }
+                let Some(kind) = EventKind::from_u8(kind_shard as u8) else {
+                    continue;
+                };
+                out.push(Event { seq, shard: (kind_shard >> 8) as u32, kind, a, b });
+            }
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// The newest `n` events across all rings (the flight-recorder
+    /// window dumped when a detector fires), oldest first.
+    pub fn dump_last(&self, n: usize) -> Vec<Event> {
+        let mut events = self.dump();
+        if events.len() > n {
+            events.drain(..events.len() - n);
+        }
+        events
+    }
+}
+
+/// One line per event — the dump renderer shared by the CLI, span
+/// evidence, and `SimReport`.
+pub fn render_dump(events: &[Event]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.render());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new(2, 16);
+        assert!(!t.is_enabled());
+        assert_eq!(t.sample_rate(), 0);
+        for i in 0..1000 {
+            t.record(i % 2, EventKind::FrameIngress, i as u64, 64);
+        }
+        assert_eq!(t.recorded(), 0);
+        assert_eq!(t.attempts(), 0, "off path must not touch the ticket counter");
+        assert!(t.dump().is_empty());
+    }
+
+    #[test]
+    fn full_rate_keeps_every_event_in_order() {
+        let t = Tracer::new(1, 64);
+        t.set_sample_rate(1);
+        assert_eq!(t.sample_rate(), 1);
+        for i in 0..10u64 {
+            t.record(0, EventKind::BackendRun, 32, i * 100);
+        }
+        let events = t.dump();
+        assert_eq!(events.len(), 10);
+        assert!(events.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert_eq!(events[3].b, 300);
+        assert_eq!(events[3].kind, EventKind::BackendRun);
+    }
+
+    #[test]
+    fn sampling_rate_rounds_to_power_of_two_and_thins() {
+        let t = Tracer::new(1, 1024);
+        t.set_sample_rate(3); // rounds up to 4
+        assert_eq!(t.sample_rate(), 4);
+        for _ in 0..1024 {
+            t.record(0, EventKind::FrameIngress, 0xC0A8_0001, 64);
+        }
+        assert_eq!(t.recorded(), 1024 / 4);
+    }
+
+    #[test]
+    fn ring_wraps_keep_the_newest_events() {
+        let t = Tracer::new(1, 8);
+        t.set_sample_rate(1);
+        for i in 0..100u64 {
+            t.record(0, EventKind::FrameIngress, i, 64);
+        }
+        let events = t.dump();
+        assert_eq!(events.len(), 8);
+        assert_eq!(events.last().unwrap().a, 99, "newest survives the wrap");
+        let last2 = t.dump_last(2);
+        assert_eq!(last2.len(), 2);
+        assert_eq!(last2[1].a, 99);
+    }
+
+    #[test]
+    fn shards_map_to_rings_modulo() {
+        let t = Tracer::new(2, 16);
+        t.set_sample_rate(1);
+        t.record(0, EventKind::Drop, 1, 64);
+        t.record(1, EventKind::Drop, 2, 64);
+        t.record(5, EventKind::Drop, 3, 64); // folds into ring 1
+        let events = t.dump();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events.iter().filter(|e| e.shard == 5).count(), 1);
+    }
+
+    #[test]
+    fn event_render_covers_every_kind() {
+        let mk = |kind| Event { seq: 7, shard: 1, kind, a: 0x10, b: 20 };
+        assert!(mk(EventKind::FrameIngress).render().contains("ingress flow=0x00000010 len=20"));
+        assert!(mk(EventKind::BatchDispatch).render().contains("batch-dispatch frames=16 v20"));
+        assert!(mk(EventKind::BackendRun).render().contains("backend-run frames=16 took=20ns"));
+        assert!(mk(EventKind::SwapObserved).render().contains("swap-observed v16->v20"));
+        assert!(mk(EventKind::Drop).render().contains("drop flow=0x00000010 len=20"));
+        assert!(mk(EventKind::Backpressure).render().contains("backpressure flow=0x00000010"));
+        let dump = render_dump(&[mk(EventKind::Drop)]);
+        assert!(dump.starts_with("#7 shard1 drop"), "{dump}");
+    }
+
+    #[test]
+    fn concurrent_recording_is_lossless_at_full_rate_without_wrap() {
+        let t = std::sync::Arc::new(Tracer::new(4, 1024));
+        t.set_sample_rate(1);
+        let handles: Vec<_> = (0..4)
+            .map(|shard| {
+                let t = std::sync::Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for i in 0..256u64 {
+                        t.record(shard, EventKind::FrameIngress, i, 64);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 256 events per shard into 1024-slot rings: no wrap, so the
+        // dump is complete and every ticket is distinct.
+        let events = t.dump();
+        assert_eq!(events.len(), 4 * 256);
+        assert_eq!(t.recorded(), 4 * 256);
+        let mut seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        seqs.dedup();
+        assert_eq!(seqs.len(), 4 * 256, "global tickets are unique");
+    }
+}

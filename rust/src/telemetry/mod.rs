@@ -4,6 +4,7 @@
 //! buckets), aggregated at report time.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// A monotonically increasing counter.
@@ -50,17 +51,32 @@ impl Histogram {
         }
     }
 
+    /// Record one duration sample.
+    ///
+    /// Overflow discipline (ISSUE 9 satellite): durations beyond the
+    /// last bucket's range clamp into the **top bucket** — bucket 47
+    /// covers [2^47 ns, ∞), so a pathological multi-day sample is
+    /// counted there rather than indexing out of range — and the
+    /// running `sum_ns` **saturates** at `u64::MAX` instead of silently
+    /// wrapping, so [`Histogram::mean_ns`] degrades to a pinned
+    /// (obviously-huge) value rather than a small plausible-looking
+    /// lie.
     #[inline]
     pub fn record(&self, d: Duration) {
         let ns = d.as_nanos().min(u64::MAX as u128) as u64;
         let idx = (64 - ns.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        saturating_fetch_add(&self.sum_ns, ns);
     }
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total nanoseconds recorded (saturating — see [`Histogram::record`]).
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
     }
 
     pub fn mean_ns(&self) -> f64 {
@@ -101,18 +117,30 @@ impl Histogram {
             dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
         }
         self.count.fetch_add(other.count(), Ordering::Relaxed);
-        self.sum_ns
-            .fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        saturating_fetch_add(&self.sum_ns, other.sum_ns());
     }
 
+    /// Thin compat shim over the shared formatter in
+    /// [`crate::obs::HistogramSnapshot::summary_line`] — the bespoke
+    /// string builder this method used to be moved to the registry
+    /// (ISSUE 9 satellite).
     pub fn render(&self, name: &str) -> String {
-        format!(
-            "{name}: n={} mean={:.0}ns p50≤{:.0}ns p99≤{:.0}ns",
-            self.count(),
-            self.mean_ns(),
-            self.quantile_ns(0.5),
-            self.quantile_ns(0.99),
-        )
+        crate::obs::HistogramSnapshot::of(self).summary_line(name)
+    }
+}
+
+/// Relaxed add that pins at `u64::MAX` instead of wrapping. One CAS on
+/// the uncontended path; contention on a histogram's sum is already
+/// bounded by the batch cadence, not per packet.
+#[inline]
+fn saturating_fetch_add(cell: &AtomicU64, add: u64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_add(add);
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
     }
 }
 
@@ -198,15 +226,29 @@ pub struct EngineMetrics {
 }
 
 impl EngineMetrics {
-    pub fn render(&self) -> String {
-        format!(
-            "in={} classified={} dropped={} parse_errors={}\n{}",
-            self.packets_in.get(),
-            self.packets_classified.get(),
-            self.packets_dropped.get(),
-            self.parse_errors.get(),
-            self.batch_latency.render("batch_latency"),
-        )
+    /// Register every metric in the bundle under `prefix` — the
+    /// replacement for the old bespoke `render()` builder: callers
+    /// render through [`crate::obs::MetricsRegistry::expose`] /
+    /// `summary()` instead. Values are read live at expose time.
+    pub fn register_into(self: &Arc<Self>, reg: &crate::obs::MetricsRegistry, prefix: &str) {
+        let m = Arc::clone(self);
+        reg.counter_fn(&format!("{prefix}.packets_in"), move || m.packets_in.get());
+        let m = Arc::clone(self);
+        reg.counter_fn(&format!("{prefix}.packets_classified"), move || {
+            m.packets_classified.get()
+        });
+        let m = Arc::clone(self);
+        reg.counter_fn(&format!("{prefix}.packets_dropped"), move || m.packets_dropped.get());
+        let m = Arc::clone(self);
+        reg.counter_fn(&format!("{prefix}.parse_errors"), move || m.parse_errors.get());
+        let m = Arc::clone(self);
+        reg.histogram_fn(&format!("{prefix}.batch_latency"), move || {
+            crate::obs::HistogramSnapshot::of(&m.batch_latency)
+        });
+        for class in 0..CLASS_BUCKETS {
+            let m = Arc::clone(self);
+            reg.counter_fn(&format!("{prefix}.class{class}"), move || m.classes.snapshot()[class]);
+        }
     }
 }
 
@@ -330,6 +372,42 @@ mod tests {
         assert!(a.quantile_ns(0.99) >= 100_000.0);
         assert!(a.quantile_ns(0.25) <= 2048.0);
         assert!(a.mean_ns() > Histogram::new().mean_ns());
+    }
+
+    #[test]
+    fn extreme_durations_clamp_to_the_top_bucket() {
+        // ISSUE 9 satellite: samples beyond the largest bucket's range
+        // land in bucket 47 ([2^47 ns, ∞)) instead of indexing out of
+        // range or vanishing.
+        let h = Histogram::new();
+        h.record(Duration::MAX);
+        h.record(Duration::from_secs(10 * 24 * 3600)); // ~10 days > 2^47 ns
+        let counts = h.bucket_counts();
+        assert_eq!(counts[47], 2, "both clamp into the top bucket");
+        assert_eq!(h.count(), 2);
+        // The quantile reports the top bucket's (synthetic) upper edge.
+        assert_eq!(h.quantile_ns(1.0), 2f64.powi(48));
+    }
+
+    #[test]
+    fn sum_saturates_instead_of_wrapping() {
+        // ISSUE 9 satellite: two ~u64::MAX samples used to wrap sum_ns
+        // back to ~0, making mean_ns report a tiny plausible-looking
+        // value. The sum now pins at u64::MAX and the mean stays
+        // obviously huge.
+        let h = Histogram::new();
+        h.record(Duration::MAX);
+        h.record(Duration::MAX);
+        assert_eq!(h.sum_ns(), u64::MAX, "saturated, not wrapped");
+        assert_eq!(h.count(), 2);
+        let mean = h.mean_ns();
+        assert!(mean >= (u64::MAX / 2) as f64, "mean stays huge, got {mean}");
+        // Merging a saturated histogram saturates too.
+        let other = Histogram::new();
+        other.record(Duration::MAX);
+        h.merge(&other);
+        assert_eq!(h.sum_ns(), u64::MAX);
+        assert_eq!(h.count(), 3);
     }
 
     #[test]

@@ -171,6 +171,103 @@ fn live_adaptive_serve_reacts_to_a_burst_with_zero_quiet_actions() {
 }
 
 #[test]
+fn obs_help_documents_the_surfaces() {
+    let out = n2net(&["obs", "--help"]);
+    assert!(out.status.success(), "obs --help failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for word in ["expose", "dump", "spans", "--trace", "--metrics-file", "--sequence"]
+    {
+        assert!(stdout.contains(word), "obs --help missing {word:?}:\n{stdout}");
+    }
+}
+
+#[test]
+fn obs_spans_renders_the_causal_chain_hermetically() {
+    // ISSUE 9 acceptance (CLI shape): a hermetic `obs` run whose
+    // ddos-ramp detector fires renders the causal chain — window →
+    // detection → rule → action → outcome — with a flight dump.
+    let out = n2net(&[
+        "obs",
+        "spans",
+        "--sequence",
+        "uniform:1024,ddos-burst:2048,uniform:512",
+        "--window",
+        "256",
+        "--shards",
+        "2",
+        "--seed",
+        "3",
+        "--artifacts",
+        "/nonexistent-n2net-artifacts",
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "obs spans failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("observed run:"), "{stdout}");
+    for part in [
+        "window signal window w",
+        "flight-dump",
+        "detection ddos-ramp",
+        "rule 0: on ddos-ramp do swap attack",
+        "action swap attack",
+        "outcome published \"attack\"",
+    ] {
+        assert!(stdout.contains(part), "span tree missing {part:?}:\n{stdout}");
+    }
+}
+
+#[test]
+fn obs_expose_and_serve_metrics_file_share_the_registry_format() {
+    // `obs expose` prints the Prometheus exposition; `serve
+    // --metrics-file` writes the same registry surface to a file.
+    let out = n2net(&[
+        "obs",
+        "expose",
+        "--sequence",
+        "uniform:512",
+        "--window",
+        "256",
+        "--seed",
+        "3",
+        "--artifacts",
+        "/nonexistent-n2net-artifacts",
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "obs expose failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("# TYPE tier_engine_packets_in counter"), "{stdout}");
+    assert!(stdout.contains("tier_n_shards 2"), "{stdout}");
+    assert!(stdout.contains("deploy_model_live_version 1"), "{stdout}");
+
+    let dir = std::env::temp_dir().join(format!(
+        "n2net-cli-smoke-{}-metrics.prom",
+        std::process::id()
+    ));
+    let path = dir.to_string_lossy().into_owned();
+    let out = n2net(&[
+        "serve",
+        "--packets",
+        "512",
+        "--shards",
+        "2",
+        "--seed",
+        "3",
+        "--metrics-file",
+        &path,
+        "--artifacts",
+        "/nonexistent-n2net-artifacts",
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "serve --metrics-file failed:\n{stdout}\n{stderr}");
+    let exposed = std::fs::read_to_string(&path).expect("metrics file written");
+    std::fs::remove_file(&path).ok();
+    assert!(exposed.contains("# TYPE tier_engine_packets_in counter"), "{exposed}");
+    assert!(exposed.contains("tier_engine_packets_in 512"), "{exposed}");
+    assert!(exposed.contains("# TYPE deploy_model_serve_version gauge"), "{exposed}");
+}
+
+#[test]
 fn tiny_autopilot_run_completes_without_artifacts() {
     // --artifacts pointing nowhere forces the crafted subnet
     // classifier, so this runs hermetically (and fast: ~1.5k frames).

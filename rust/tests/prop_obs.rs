@@ -1,0 +1,188 @@
+//! Observability properties (ISSUE 9 acceptance):
+//!
+//! O1. `telemetry::Histogram` is lossless under concurrency: N threads
+//!     recording into one shared histogram never lose a count, and
+//!     merging per-thread histograms reproduces the shared one exactly
+//!     (bucket counts AND the saturating nanosecond sum).
+//! O2. `quantile_ns_from_buckets` is monotone in q for arbitrary
+//!     bucket contents.
+//! O3. Hot-path tracing is output-invariant: for any scenario, shard
+//!     count, and sample rate, the sharded tier's outputs are bit-exact
+//!     with the tracing-off oracle — the flight recorder observes
+//!     frames, it never touches classification. Rate 0 records zero
+//!     events and never even bumps the sampling ticket.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use n2net::bnn::BnnModel;
+use n2net::deploy::{Deployment, FieldExtractor};
+use n2net::net::Scenario;
+use n2net::telemetry::{quantile_ns_from_buckets, Histogram};
+use n2net::util::prop;
+use n2net::util::rng::Rng;
+
+fn check_histogram_concurrent_lossless(rng: &mut Rng) -> Result<(), String> {
+    let n_threads = 2 + rng.gen_range(0, 4);
+    let per_thread = 200 + rng.gen_range(0, 800);
+    let shared = Arc::new(Histogram::new());
+    let seed = rng.next_u64();
+    let handles: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(seed ^ (t as u64).wrapping_mul(0x9E37));
+                let local = Histogram::new();
+                for _ in 0..per_thread {
+                    // Spans every bucket including the clamped top one.
+                    let ns = 1u64 << rng.gen_range(0, 50);
+                    shared.record(Duration::from_nanos(ns));
+                    local.record(Duration::from_nanos(ns));
+                }
+                local
+            })
+        })
+        .collect();
+    let merged = Histogram::new();
+    for h in handles {
+        merged.merge(&h.join().map_err(|_| "recorder thread panicked")?);
+    }
+
+    let expect = (n_threads * per_thread) as u64;
+    if shared.count() != expect {
+        return Err(format!(
+            "shared histogram lost counts: {} of {expect}",
+            shared.count()
+        ));
+    }
+    if merged.count() != expect {
+        return Err(format!(
+            "merged histogram lost counts: {} of {expect}",
+            merged.count()
+        ));
+    }
+    if merged.bucket_counts() != shared.bucket_counts() {
+        return Err(format!(
+            "merge disagrees with concurrent record:\n merged {:?}\n shared {:?}",
+            merged.bucket_counts(),
+            shared.bucket_counts()
+        ));
+    }
+    // Same multiset of samples, no saturation reachable here (≤ 6 * 1000
+    // * 2^49 < u64::MAX), so the sums must agree exactly.
+    if merged.sum_ns() != shared.sum_ns() {
+        return Err(format!(
+            "sum diverged: merged {} vs shared {}",
+            merged.sum_ns(),
+            shared.sum_ns()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_o1_histogram_concurrent_record_and_merge_lose_nothing() {
+    let cases = prop::default_cases().min(16);
+    prop::check("histogram-lossless", cases, check_histogram_concurrent_lossless);
+}
+
+fn check_quantile_monotone(rng: &mut Rng) -> Result<(), String> {
+    let mut buckets = vec![0u64; 48];
+    for _ in 0..(1 + rng.gen_range(0, 10)) {
+        let i = rng.gen_range(0, buckets.len());
+        buckets[i] += (1 + rng.gen_range(0, 1000)) as u64;
+    }
+    let mut last = 0.0f64;
+    for step in 0..=20 {
+        let q = step as f64 / 20.0;
+        let v = quantile_ns_from_buckets(&buckets, q);
+        if v < last {
+            return Err(format!(
+                "quantile not monotone: q={q} gave {v} after {last} \
+                 (buckets {buckets:?})"
+            ));
+        }
+        last = v;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_o2_quantile_is_monotone_in_q() {
+    prop::check("quantile-monotone", prop::default_cases(), check_quantile_monotone);
+}
+
+fn scenario_for(rng: &mut Rng) -> Scenario {
+    match rng.gen_range(0, 4) {
+        0 => Scenario::Uniform,
+        1 => Scenario::DdosBurst {
+            ddos: Scenario::default_ddos(),
+            peak_fraction: 0.5 + rng.gen_f64() * 0.4,
+        },
+        2 => Scenario::ZipfHeavyHitter {
+            n_flows: 2 + rng.gen_range(0, 64),
+            hitter_share: 0.2 + rng.gen_f64() * 0.4,
+        },
+        _ => Scenario::MalformedFuzz { malformed_share: rng.gen_f64() },
+    }
+}
+
+fn check_tracing_is_output_invariant(rng: &mut Rng) -> Result<(), String> {
+    let scenario = scenario_for(rng);
+    let n_shards = 1 + rng.gen_range(0, 4);
+    let layers = vec![1 + rng.gen_range(0, 16)];
+    let model = BnnModel::random(32, &layers, rng.next_u64());
+    let deployment = Deployment::builder()
+        .extractor(FieldExtractor::SrcIp)
+        .workers(2)
+        .model("m", model)
+        .build()
+        .map_err(|e| format!("deploy 32b->{layers:?}: {e}"))?;
+    let n = 100 + rng.gen_range(0, 400);
+    let trace = scenario.generate(rng.next_u64(), n);
+
+    // Oracle: the identical engine with tracing off (the default).
+    let off = deployment
+        .sharded_engine("m", n_shards)
+        .map_err(|e| e.to_string())?;
+    let oracle = off.process_trace(&trace.packets).map_err(|e| e.to_string())?;
+    if off.tracer().recorded() != 0 || off.tracer().attempts() != 0 {
+        return Err(format!(
+            "disabled tracer touched state: recorded={} attempts={}",
+            off.tracer().recorded(),
+            off.tracer().attempts()
+        ));
+    }
+
+    for rate in [1u64, 3, 64, 1 << 40] {
+        let engine = deployment
+            .sharded_engine("m", n_shards)
+            .map_err(|e| e.to_string())?;
+        engine.tracer().set_sample_rate(rate);
+        let r = engine.process_trace(&trace.packets).map_err(|e| e.to_string())?;
+        if r.outputs != oracle.outputs {
+            let i = r
+                .outputs
+                .iter()
+                .zip(&oracle.outputs)
+                .position(|(a, b)| a != b)
+                .unwrap();
+            return Err(format!(
+                "scenario {} rate {rate} diverged at pkt {i}: {:#x} vs {:#x}",
+                scenario.name(),
+                r.outputs[i],
+                oracle.outputs[i]
+            ));
+        }
+        if rate == 1 && engine.tracer().recorded() == 0 {
+            return Err("full-rate tracing over a live run recorded nothing".into());
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_o3_tracing_at_any_rate_is_output_invariant() {
+    let cases = prop::default_cases().min(16);
+    prop::check("tracing-invariant", cases, check_tracing_is_output_invariant);
+}
