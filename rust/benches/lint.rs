@@ -1,0 +1,89 @@
+//! Policy-lint bench: what the pre-flight gate costs (ISSUE 10
+//! satellite). `serve --adaptive` / `autopilot` run the full static
+//! analysis of DESIGN.md §19 — state-graph exploration, cycle pruning,
+//! shadowing, target legality, SLO sanity — before the controller
+//! exists, so its cost bounds how fast an operator can iterate on a
+//! policy file mid-incident. Measured here: lint cost vs policy size
+//! (rule count, with a matching bank so every swap target resolves).
+//!
+//! Appends machine-readable records to `BENCH_lint.json`.
+//!
+//! `cargo bench --bench lint`
+
+use n2net::backend::BackendKind;
+use n2net::bnn::BnnModel;
+use n2net::controlplane::{Linter, ModelBank, Policy};
+use n2net::util::bench::{default_bencher, write_bench_json, BenchRecord, Report};
+
+const BENCH_JSON: &str = "BENCH_lint.json";
+
+/// A policy of `n` rules cycling through every action shape, plus a
+/// bank registering each named swap target (same architecture, so no
+/// legality findings distort the measurement toward error paths).
+fn synth(n: usize) -> (Policy, ModelBank) {
+    let day = BnnModel::random(32, &[64, 32], 1);
+    let mut bank = ModelBank::new("day", day.clone());
+    let mut text = String::new();
+    for i in 0..n {
+        match i % 5 {
+            0 => {
+                let name = format!("candidate-{i}");
+                bank = bank.with_model(
+                    &name,
+                    BnnModel::random(32, &[64, 32], 100 + i as u64),
+                );
+                text.push_str(&format!(
+                    "on ddos-ramp do swap {name} cooldown={} min-severity=0.{}\n",
+                    2 + i % 7,
+                    1 + i % 8
+                ));
+            }
+            1 => text.push_str(&format!(
+                "on overload do overflow {} cooldown={}\n",
+                if i % 2 == 0 { "drop" } else { "block" },
+                2 + i % 5
+            )),
+            2 => text.push_str(&format!(
+                "on imbalance do reshard {} cooldown=6 min-severity=1.{}\n",
+                2 + i % 8,
+                i % 9
+            )),
+            3 => text.push_str("on latency-slo do alert cooldown=8\n"),
+            _ => text.push_str("on drift do fallback cooldown=8\n"),
+        }
+    }
+    (Policy::parse(&text).expect("synthetic policy parses"), bank)
+}
+
+fn main() {
+    println!("# lint — static policy analysis cost vs policy size");
+    let b = default_bencher();
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut report = Report::new("policy lint (per full analysis)");
+    report.header();
+
+    for n in [5usize, 20, 80] {
+        let (policy, bank) = synth(n);
+        let day_spec = bank.default_model().spec.clone();
+        let stats = b.run(&format!("lint {n} rules"), 1.0, || {
+            let report = Linter::new(&policy)
+                .with_bank(&bank)
+                .with_deployed(&day_spec)
+                .with_tier_shape(2, BackendKind::Batched)
+                .lint();
+            std::hint::black_box(report.findings.len());
+        });
+        records.push(BenchRecord::from_stats(
+            "lint",
+            &format!("lint_rules_{n}"),
+            n as u64,
+            &stats,
+        ));
+        report.add(stats);
+    }
+
+    match write_bench_json(BENCH_JSON, "lint", &records) {
+        Ok(()) => println!("\nwrote {} records to {BENCH_JSON}", records.len()),
+        Err(e) => eprintln!("warning: could not write {BENCH_JSON}: {e}"),
+    }
+}

@@ -77,6 +77,50 @@ impl ModelBank {
     }
 }
 
+/// The construction-time legality check for one policy action: swap
+/// targets must be registered in the bank (when one is supplied),
+/// reshard counts must stay in `1..=MAX_SHARDS`, and the lut baseline
+/// is never a switch target. Shared between controller construction
+/// ([`Controller::with_detectors`]) and the static linter
+/// ([`super::lint`]), so both report the identical message for the
+/// identical misconfiguration.
+pub fn check_action(action: &Action, bank: Option<&ModelBank>) -> Result<()> {
+    match action {
+        Action::SwapModel(name) => {
+            if let Some(bank) = bank {
+                if bank.get(name).is_none() {
+                    return Err(Error::Config(format!(
+                        "policy swaps to {name:?} but the model bank only \
+                         has {:?}",
+                        bank.names()
+                    )));
+                }
+            }
+        }
+        Action::Reshard(n) => {
+            if *n == 0 || *n > MAX_SHARDS {
+                return Err(Error::Config(format!(
+                    "policy reshards to {n} shards, out of the legal \
+                     range 1..={MAX_SHARDS}"
+                )));
+            }
+        }
+        Action::SwitchBackend(BackendKind::Lut) => {
+            return Err(Error::Config(
+                "policy switches to the lut baseline, which serves an \
+                 exact-match table instead of the deployed BNN — legal \
+                 switch targets: scalar|batched|reference|specialized"
+                    .into(),
+            ));
+        }
+        Action::SwitchBackend(_)
+        | Action::Fallback
+        | Action::Alert
+        | Action::Overflow(_) => {}
+    }
+    Ok(())
+}
+
 /// What executing one fired rule did.
 #[derive(Clone, Debug)]
 pub enum Outcome {
@@ -193,37 +237,7 @@ impl Controller {
         detectors: Vec<Box<dyn Detector>>,
     ) -> Result<Self> {
         for rule in &policy.rules {
-            match &rule.action {
-                Action::SwapModel(name) => {
-                    if bank.get(name).is_none() {
-                        return Err(Error::Config(format!(
-                            "policy swaps to {name:?} but the model bank only \
-                             has {:?}",
-                            bank.names()
-                        )));
-                    }
-                }
-                Action::Reshard(n) => {
-                    if *n == 0 || *n > MAX_SHARDS {
-                        return Err(Error::Config(format!(
-                            "policy reshards to {n} shards, out of the legal \
-                             range 1..={MAX_SHARDS}"
-                        )));
-                    }
-                }
-                Action::SwitchBackend(BackendKind::Lut) => {
-                    return Err(Error::Config(
-                        "policy switches to the lut baseline, which serves an \
-                         exact-match table instead of the deployed BNN — legal \
-                         switch targets: scalar|batched|reference|specialized"
-                            .into(),
-                    ));
-                }
-                Action::SwitchBackend(_)
-                | Action::Fallback
-                | Action::Alert
-                | Action::Overflow(_) => {}
-            }
+            check_action(&rule.action, Some(&bank))?;
         }
         Ok(Self {
             collector: SignalCollector::new(),

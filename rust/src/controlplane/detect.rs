@@ -45,6 +45,27 @@ impl SignalKind {
         }
     }
 
+    /// The largest severity this kind's detector can emit on a
+    /// `shards`-shard tier, when one is bounded by construction —
+    /// `None` means unbounded. Used by the static linter
+    /// ([`super::lint`]) to prove `min-severity` gates satisfiable:
+    /// ddos-ramp severity is a share *rise* (shares live in [0, 1], so
+    /// the rise cannot exceed 1); drift severity is a total-variation
+    /// distance over the class mix (≤ 1 by definition); imbalance
+    /// severity is max/mean shard load, which `shards` shards cap at
+    /// `shards` (everything on one shard). Overload (drops per frame
+    /// can compound past any fixed bound under re-queuing) and
+    /// latency-slo (exceed fraction scales with queue depth) carry no
+    /// static bound here — the linter bounds the latter from the
+    /// modeled-SLO drain curve instead.
+    pub fn severity_bound(self, shards: usize) -> Option<f64> {
+        match self {
+            SignalKind::DdosRamp | SignalKind::Drift => Some(1.0),
+            SignalKind::Imbalance => Some(shards.max(1) as f64),
+            SignalKind::Overload | SignalKind::LatencySlo => None,
+        }
+    }
+
     /// Parse a policy-file spelling.
     pub fn parse(s: &str) -> crate::error::Result<Self> {
         match s {
@@ -595,5 +616,25 @@ mod tests {
         };
         assert_eq!(run(0), run(17));
         assert_eq!(run(0), run(9999));
+    }
+
+    #[test]
+    fn severity_bounds_match_the_detectors_constructions() {
+        // The linter's satisfiability gate: bounded kinds cap at the
+        // documented constant, unbounded kinds return None.
+        assert_eq!(SignalKind::DdosRamp.severity_bound(4), Some(1.0));
+        assert_eq!(SignalKind::Drift.severity_bound(4), Some(1.0));
+        assert_eq!(SignalKind::Imbalance.severity_bound(8), Some(8.0));
+        // Degenerate shard counts clamp instead of reading zero.
+        assert_eq!(SignalKind::Imbalance.severity_bound(0), Some(1.0));
+        assert_eq!(SignalKind::Overload.severity_bound(4), None);
+        assert_eq!(SignalKind::LatencySlo.severity_bound(4), None);
+        // And the imbalance detector's statistic really is max/mean,
+        // which n shards cap at n: everything on one of two shards.
+        let mut id = ImbalanceDetector::default();
+        let w = window(0, vec![512, 0], 0);
+        if let Some(det) = id.observe(&w) {
+            assert!(det.severity <= SignalKind::Imbalance.severity_bound(2).unwrap());
+        }
     }
 }

@@ -1,0 +1,1175 @@
+//! Static policy/configuration lint (DESIGN.md §19).
+//!
+//! N2Net's premise is that correctness is established at compile time
+//! so the packet path never pays for checks; `compiler::verify`
+//! (DESIGN.md §17) gives the DATA plane that guarantee, and this module
+//! gives it to the CONTROL plane. A [`Linter`] cross-checks a
+//! [`Policy`] against the detector set, the [`ModelBank`], the
+//! deployed program, and the tier configuration — without executing a
+//! single window — in three analyses:
+//!
+//! 1. **Configuration-state graph** ([`Linter::lint`]): the abstract
+//!    tier state is `(active model, backend kind, shard count,
+//!    overflow policy)`; every policy rule whose action would actually
+//!    *land* (a rejected action never disturbs serving, so it
+//!    contributes no edge) is an edge between states, taken only from
+//!    states where its condition is *possible* (an imbalance rule
+//!    cannot fire on a 1-shard tier; a min-severity above the kind's
+//!    severity bound can never be met). Over this graph:
+//!    - **swap-cycle**: a cycle whose every remaining edge's trigger
+//!      is re-created by another cycle action (the perturbation map in
+//!      [`perturbs`]) is *self-sustaining* — the
+//!      cooldown-plus-condition-clear hysteresis re-arms every rule on
+//!      it, so cooldown only bounds the flap period and never breaks
+//!      the loop. Cycles with an externally-driven edge are provably
+//!      broken (re-firing that edge needs a condition change the loop
+//!      itself cannot produce) and are not flagged.
+//!    - **unreachable-rule**: a rule possible in no reachable state.
+//!    - **shadowed-rule**: a later rule on the same signal kind and
+//!      the same configuration dimension as an earlier rule with a
+//!      lower-or-equal `min-severity`: every detection that fires it
+//!      also fires the earlier rule in the same window (the engine
+//!      fires ALL armed matching rules), and the later action
+//!      overwrites the earlier one — the escalation never engages in
+//!      isolation.
+//! 2. **Target legality**: the construction-time checks the
+//!    [`Controller`](super::Controller) already performs
+//!    ([`check_action`]) plus two new static proofs — swap-target
+//!    architecture compatibility (a mismatched spec would be rejected
+//!    at publish time, making the rule a no-op) and keyed-deployment
+//!    backend legality (specialized/reference cannot honor per-packet
+//!    model ids) — surfaced as structured diagnostics instead of
+//!    scattered `Err`s.
+//! 3. **Modeled-SLO threshold sanity** (with [`SloBounds`], tying into
+//!    [`crate::timing`]): a latency limit below the program's physical
+//!    drain floor (`ModeledSlo::drain_ns(0)`, the pipeline fill) fires
+//!    on EVERY window; a limit above the drain of the worst reachable
+//!    queue depth (the whole window landing on one shard) can NEVER
+//!    fire. Both are reported with the computed bound.
+//!
+//! Diagnostics follow the `compiler::verify` idiom: kebab-coded
+//! [`LintFinding`]s with a [`Severity`], a [`LintReport`] with
+//! `render()` and `ok(deny_warnings)`. Wired three ways: the `lint`
+//! CLI subcommand, the pre-flight gate in `serve --adaptive` /
+//! `autopilot` (error findings refuse the run before the controller
+//! spawns), and the CI lint-smoke step over `examples/policies/`.
+
+use std::fmt;
+
+use crate::backend::BackendKind;
+use crate::bnn::BnnSpec;
+use crate::compiler::verify::Severity;
+use crate::coordinator::{OverflowPolicy, MAX_SHARDS};
+use crate::error::Error;
+use crate::timing::ModeledSlo;
+
+use super::controller::{check_action, ModelBank};
+use super::detect::SignalKind;
+use super::policy::{Action, Policy, Rule};
+
+/// What a lint check concluded. Each kind corresponds to one static
+/// analysis; the golden tests in `tests/lint_diag.rs` pin the codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LintKind {
+    /// A self-sustaining configuration cycle hysteresis cannot break.
+    SwapCycle,
+    /// A rule possible in no reachable tier configuration.
+    UnreachableRule,
+    /// A rule an earlier same-kind, same-dimension, lower-min-severity
+    /// rule always co-fires with (and is overwritten by).
+    ShadowedRule,
+    /// A swap target the model bank does not register.
+    UnknownSwapTarget,
+    /// A swap target whose architecture differs from the deployed
+    /// program (the publish gate would reject it).
+    IncompatibleSwapTarget,
+    /// A reshard count outside `1..=MAX_SHARDS`.
+    ReshardRange,
+    /// `backend lut` — the baseline is never a legal switch target.
+    LutSwitchTarget,
+    /// `backend specialized` on a keyed (multi-model) deployment.
+    KeyedSpecialized,
+    /// `backend reference` on a keyed (multi-model) deployment.
+    KeyedReference,
+    /// A modeled-SLO limit below the pipeline's physical drain floor.
+    SloAlwaysFires,
+    /// A modeled-SLO limit above any reachable queue depth's drain.
+    SloNeverFires,
+}
+
+impl LintKind {
+    /// Stable short code used in rendered reports.
+    pub fn code(self) -> &'static str {
+        match self {
+            LintKind::SwapCycle => "swap-cycle",
+            LintKind::UnreachableRule => "unreachable-rule",
+            LintKind::ShadowedRule => "shadowed-rule",
+            LintKind::UnknownSwapTarget => "unknown-swap-target",
+            LintKind::IncompatibleSwapTarget => "incompatible-swap-target",
+            LintKind::ReshardRange => "reshard-range",
+            LintKind::LutSwitchTarget => "lut-switch-target",
+            LintKind::KeyedSpecialized => "keyed-specialized",
+            LintKind::KeyedReference => "keyed-reference",
+            LintKind::SloAlwaysFires => "slo-always-fires",
+            LintKind::SloNeverFires => "slo-never-fires",
+        }
+    }
+}
+
+/// One diagnostic with rule provenance (the policy-order index and the
+/// rule's own spelling stand in for `compiler::verify`'s stage/op).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LintFinding {
+    pub kind: LintKind,
+    pub severity: Severity,
+    /// Index of the (first) offending rule in the policy; `None` for
+    /// policy-wide findings.
+    pub rule: Option<usize>,
+    /// The offending rule's policy-file spelling (empty if none).
+    pub rule_text: String,
+    pub message: String,
+}
+
+impl LintFinding {
+    fn new(kind: LintKind, severity: Severity, message: String) -> Self {
+        Self { kind, severity, rule: None, rule_text: String::new(), message }
+    }
+
+    fn error(kind: LintKind, message: String) -> Self {
+        Self::new(kind, Severity::Error, message)
+    }
+
+    fn warning(kind: LintKind, message: String) -> Self {
+        Self::new(kind, Severity::Warning, message)
+    }
+
+    fn at(mut self, rule: usize, text: String) -> Self {
+        self.rule = Some(rule);
+        self.rule_text = text;
+        self
+    }
+}
+
+impl fmt::Display for LintFinding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        write!(f, "{sev}[{}]", self.kind.code())?;
+        if let Some(r) = self.rule {
+            write!(f, " rule {r}")?;
+            if !self.rule_text.is_empty() {
+                write!(f, " `{}`", self.rule_text)?;
+            }
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// The result of a lint run: every finding, in analysis order (target
+/// legality per rule, shadowing, reachability, SLO sanity, cycles).
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<LintFinding>,
+}
+
+impl LintReport {
+    /// No findings at all, warnings included.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn n_errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    pub fn n_warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.n_errors() > 0
+    }
+
+    /// Does this report pass? Errors always fail; warnings fail only
+    /// under `deny_warnings` (the CI mode).
+    pub fn ok(&self, deny_warnings: bool) -> bool {
+        !self.has_errors() && !(deny_warnings && !self.findings.is_empty())
+    }
+
+    /// Human-readable report, one line per finding plus a summary.
+    pub fn render(&self) -> String {
+        if self.findings.is_empty() {
+            return "lint: clean — no findings\n".to_string();
+        }
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&f.to_string());
+            s.push('\n');
+        }
+        s.push_str(&format!(
+            "lint: {} error(s), {} warning(s)\n",
+            self.n_errors(),
+            self.n_warnings()
+        ));
+        s
+    }
+
+    /// One-line digest for embedding in an `Error`: the errors, or —
+    /// when only warnings tripped a deny-warnings run — every finding.
+    pub fn digest(&self) -> String {
+        let errors: Vec<String> = self
+            .findings
+            .iter()
+            .filter(|f| f.severity == Severity::Error)
+            .map(|f| f.to_string())
+            .collect();
+        if !errors.is_empty() {
+            return errors.join("; ");
+        }
+        self.findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("; ")
+    }
+}
+
+/// The modeled-SLO side of the lint: the deployed program's cycle
+/// model plus the latency detector's limits and the window geometry
+/// the thresholds are judged against.
+#[derive(Clone, Copy, Debug)]
+pub struct SloBounds {
+    pub slo: ModeledSlo,
+    /// The latency detector's p50 limit (ns).
+    pub p50_limit_ns: f64,
+    /// The latency detector's p99 limit (ns).
+    pub p99_limit_ns: f64,
+    /// Frames per control window — the worst reachable queue depth is
+    /// the whole window landing on one shard.
+    pub window_packets: u64,
+}
+
+/// Which configuration dimension an action writes. Same-dimension
+/// actions on the same signal kind overwrite each other within a
+/// window (firings execute in rule order), which is what the
+/// shadowed-rule analysis keys on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Dimension {
+    Model,
+    Shards,
+    Backend,
+    Overflow,
+    Alert,
+}
+
+fn dimension(action: &Action) -> Dimension {
+    match action {
+        Action::SwapModel(_) | Action::Fallback => Dimension::Model,
+        Action::Reshard(_) => Dimension::Shards,
+        Action::SwitchBackend(_) => Dimension::Backend,
+        Action::Overflow(_) => Dimension::Overflow,
+        Action::Alert => Dimension::Alert,
+    }
+}
+
+/// The static perturbation map: which signal kinds an action can
+/// plausibly re-create once applied. Swapping the classifier changes
+/// the class mix and the attacker-share signal; resharding moves load
+/// and resets the skew; backend and overflow changes move throughput
+/// and queueing. `alert` touches nothing. The map is deliberately
+/// conservative (more perturbation → more cycles flagged): a cycle is
+/// only *exonerated* when some edge's trigger is perturbed by NO other
+/// cycle action.
+fn perturbs(action: &Action) -> &'static [SignalKind] {
+    match action {
+        Action::SwapModel(_) | Action::Fallback => {
+            &[SignalKind::DdosRamp, SignalKind::Drift]
+        }
+        Action::Reshard(_) => {
+            &[SignalKind::Imbalance, SignalKind::Overload, SignalKind::LatencySlo]
+        }
+        Action::SwitchBackend(_) | Action::Overflow(_) => {
+            &[SignalKind::Overload, SignalKind::LatencySlo]
+        }
+        Action::Alert => &[],
+    }
+}
+
+/// One abstract tier configuration — the product the policy's actions
+/// can actually steer. Dimensions an action never writes stay at their
+/// initial value, so the state space is bounded by the rule list.
+#[derive(Clone, Debug, PartialEq)]
+struct AbsState {
+    model: String,
+    backend: BackendKind,
+    shards: usize,
+    overflow: OverflowPolicy,
+}
+
+impl AbsState {
+    fn render(&self) -> String {
+        format!(
+            "{}/{}/{}sh/{}",
+            self.model,
+            self.backend.name(),
+            self.shards,
+            self.overflow.name()
+        )
+    }
+}
+
+/// A rule taking the tier from one reachable configuration to another.
+#[derive(Clone, Copy, Debug)]
+struct Edge {
+    from: usize,
+    rule: usize,
+    to: usize,
+}
+
+/// The explored configuration-state graph.
+struct Graph {
+    states: Vec<AbsState>,
+    edges: Vec<Edge>,
+    /// Rule is possible in at least one reachable state (state-changing
+    /// or not — an alert that can fire is reachable).
+    rule_reachable: Vec<bool>,
+}
+
+/// The static analyzer. Construct with the policy, attach whatever
+/// context is known (bank, deployed spec, tier shape, detector kinds,
+/// modeled-SLO bounds — each `None`/default degrades the corresponding
+/// checks gracefully rather than guessing), then call [`Linter::lint`].
+pub struct Linter<'a> {
+    policy: &'a Policy,
+    bank: Option<&'a ModelBank>,
+    deployed_spec: Option<&'a BnnSpec>,
+    keyed: bool,
+    /// `None` = assume every kind has a detector installed.
+    detector_kinds: Option<Vec<SignalKind>>,
+    initial_shards: usize,
+    initial_backend: BackendKind,
+    initial_overflow: OverflowPolicy,
+    slo: Option<SloBounds>,
+}
+
+impl<'a> Linter<'a> {
+    pub fn new(policy: &'a Policy) -> Self {
+        Self {
+            policy,
+            bank: None,
+            deployed_spec: None,
+            keyed: false,
+            detector_kinds: None,
+            initial_shards: 1,
+            initial_backend: BackendKind::default(),
+            initial_overflow: OverflowPolicy::Block,
+            slo: None,
+        }
+    }
+
+    /// The bank swap targets are resolved against.
+    pub fn with_bank(mut self, bank: &'a ModelBank) -> Self {
+        self.bank = Some(bank);
+        self
+    }
+
+    /// The deployed model's architecture (enables the swap-target
+    /// compatibility proof — hot-swap requires the deployed spec).
+    pub fn with_deployed(mut self, spec: &'a BnnSpec) -> Self {
+        self.deployed_spec = Some(spec);
+        self
+    }
+
+    /// Lint as a keyed (multi-model) deployment: per-packet model ids
+    /// outlaw the specialized and reference backends.
+    pub fn keyed(mut self) -> Self {
+        self.keyed = true;
+        self
+    }
+
+    /// Restrict the installed detector set (default: every kind).
+    pub fn with_detector_kinds(mut self, kinds: Vec<SignalKind>) -> Self {
+        self.detector_kinds = Some(kinds);
+        self
+    }
+
+    /// The tier's initial shape (shard count and backend).
+    pub fn with_tier_shape(mut self, shards: usize, backend: BackendKind) -> Self {
+        self.initial_shards = shards.max(1);
+        self.initial_backend = backend;
+        self
+    }
+
+    /// Enable the modeled-SLO threshold-sanity analysis.
+    pub fn with_modeled_slo(mut self, bounds: SloBounds) -> Self {
+        self.slo = Some(bounds);
+        self
+    }
+
+    /// Run every analysis. Never executes a window; cost is
+    /// `O(states × rules)` graph exploration over a state space bounded
+    /// by the distinct action targets per dimension.
+    pub fn lint(&self) -> LintReport {
+        let mut findings = Vec::new();
+        self.check_targets(&mut findings);
+        self.check_shadowing(&mut findings);
+        let graph = self.explore();
+        self.check_reachability(&graph, &mut findings);
+        self.check_slo(&mut findings);
+        self.check_cycles(&graph, &mut findings);
+        LintReport { findings }
+    }
+
+    fn rule_text(&self, i: usize) -> String {
+        let r = &self.policy.rules[i];
+        format!("on {} do {}", r.on.name(), r.action.render())
+    }
+
+    fn default_model_name(&self) -> String {
+        self.bank.map(|b| b.default_name().to_string()).unwrap_or_else(|| "(default)".into())
+    }
+
+    // -- analysis 2: target legality ------------------------------------
+
+    fn check_targets(&self, findings: &mut Vec<LintFinding>) {
+        for (i, rule) in self.policy.rules.iter().enumerate() {
+            // The controller's own construction-time checks, verbatim.
+            if let Err(e) = check_action(&rule.action, self.bank) {
+                let msg = match e {
+                    Error::Config(m) => m,
+                    other => other.to_string(),
+                };
+                let kind = match &rule.action {
+                    Action::SwapModel(_) => LintKind::UnknownSwapTarget,
+                    Action::Reshard(_) => LintKind::ReshardRange,
+                    _ => LintKind::LutSwitchTarget,
+                };
+                findings.push(
+                    LintFinding::error(kind, msg).at(i, self.rule_text(i)),
+                );
+                continue;
+            }
+            // New static proofs on top of the construction checks.
+            match &rule.action {
+                Action::SwapModel(name) => {
+                    self.check_swap_spec(i, name, findings);
+                }
+                Action::Fallback => {
+                    if self.bank.is_some() {
+                        let name = self.default_model_name();
+                        self.check_swap_spec(i, &name, findings);
+                    }
+                }
+                Action::SwitchBackend(BackendKind::Specialized) if self.keyed => {
+                    findings.push(
+                        LintFinding::error(
+                            LintKind::KeyedSpecialized,
+                            "the specialized backend monomorphizes one \
+                             model's weights into straight-line kernels and \
+                             cannot honor per-packet model ids — illegal for \
+                             a keyed (multi-model) deployment; use \
+                             scalar|batched"
+                                .into(),
+                        )
+                        .at(i, self.rule_text(i)),
+                    );
+                }
+                Action::SwitchBackend(BackendKind::Reference) if self.keyed => {
+                    findings.push(
+                        LintFinding::error(
+                            LintKind::KeyedReference,
+                            "the reference backend replays a single model's \
+                             forward pass and cannot honor per-packet model \
+                             ids — illegal for a keyed (multi-model) \
+                             deployment; use scalar|batched"
+                                .into(),
+                        )
+                        .at(i, self.rule_text(i)),
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Hot-swap requires the deployed architecture ([`crate::deploy`]'s
+    /// publish gate rejects anything else), so a spec-mismatched target
+    /// is statically a no-op rule.
+    fn check_swap_spec(&self, i: usize, name: &str, findings: &mut Vec<LintFinding>) {
+        let (Some(bank), Some(spec)) = (self.bank, self.deployed_spec) else {
+            return;
+        };
+        let Some(target) = bank.get(name) else { return };
+        if target.spec != *spec {
+            findings.push(
+                LintFinding::error(
+                    LintKind::IncompatibleSwapTarget,
+                    format!(
+                        "swap target {name:?} is {}b -> {:?} but the deployed \
+                         program is {}b -> {:?}; the publish gate rejects \
+                         architecture changes, so this rule can only ever be \
+                         REJECTED — redeploy for a new architecture",
+                        target.spec.in_bits,
+                        target.spec.layer_sizes,
+                        spec.in_bits,
+                        spec.layer_sizes,
+                    ),
+                )
+                .at(i, self.rule_text(i)),
+            );
+        }
+    }
+
+    // -- analysis 1b: shadowing -----------------------------------------
+
+    fn check_shadowing(&self, findings: &mut Vec<LintFinding>) {
+        let rules = &self.policy.rules;
+        for j in 1..rules.len() {
+            for i in 0..j {
+                if rules[i].on != rules[j].on
+                    || rules[i].min_severity > rules[j].min_severity
+                    || dimension(&rules[i].action) != dimension(&rules[j].action)
+                {
+                    continue;
+                }
+                findings.push(
+                    LintFinding::warning(
+                        LintKind::ShadowedRule,
+                        format!(
+                            "shadowed by rule {i} `{}` (min-severity {}): the \
+                             engine fires every armed matching rule, so any \
+                             detection reaching this rule also fires rule {i} \
+                             in the same window; both write the same \
+                             configuration dimension, the later action \
+                             overwrites the earlier, and both disarm together \
+                             — keep one rule per (kind, dimension) or split \
+                             the severity bands across kinds",
+                            self.rule_text(i),
+                            rules[i].min_severity,
+                        ),
+                    )
+                    .at(j, self.rule_text(j)),
+                );
+                break; // one shadower per rule is enough to report
+            }
+        }
+    }
+
+    // -- the configuration-state graph ----------------------------------
+
+    /// Would this action actually land on the tier? Illegal actions are
+    /// rejected at construction or publish time without disturbing
+    /// serving ("can propose, never disturb"), so they contribute no
+    /// edge — they are reported by the legality analysis instead.
+    fn apply(&self, s: &AbsState, action: &Action) -> AbsState {
+        let mut t = s.clone();
+        match action {
+            Action::SwapModel(name) => {
+                let known = self.bank.map(|b| b.get(name).is_some()).unwrap_or(true);
+                let compatible = match (self.bank, self.deployed_spec) {
+                    (Some(b), Some(spec)) => {
+                        b.get(name).map(|m| m.spec == *spec).unwrap_or(false)
+                    }
+                    _ => true,
+                };
+                if known && compatible {
+                    t.model = name.clone();
+                }
+            }
+            Action::Fallback => t.model = self.default_model_name(),
+            Action::Alert => {}
+            Action::Reshard(n) => {
+                if (1..=MAX_SHARDS).contains(n) {
+                    t.shards = *n;
+                }
+            }
+            Action::SwitchBackend(kind) => {
+                let keyed_illegal = self.keyed
+                    && matches!(
+                        kind,
+                        BackendKind::Specialized | BackendKind::Reference
+                    );
+                if *kind != BackendKind::Lut && !keyed_illegal {
+                    t.backend = *kind;
+                }
+            }
+            Action::Overflow(p) => t.overflow = *p,
+        }
+        t
+    }
+
+    /// Can this rule's condition hold in this configuration? The gates
+    /// are the detectors' static contracts ([`SignalKind::severity_bound`])
+    /// plus the installed-detector set and the modeled-SLO bounds.
+    fn rule_possible(&self, rule: &Rule, s: &AbsState) -> bool {
+        if let Some(kinds) = &self.detector_kinds {
+            if !kinds.contains(&rule.on) {
+                return false;
+            }
+        }
+        if rule.on == SignalKind::Imbalance && s.shards < 2 {
+            return false;
+        }
+        if let Some(bound) = rule.on.severity_bound(s.shards) {
+            if rule.min_severity > bound {
+                return false;
+            }
+        }
+        if rule.on == SignalKind::LatencySlo {
+            if let Some(max) = self.max_slo_severity() {
+                if max <= 0.0 || rule.min_severity > max {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// The largest modeled-SLO exceed fraction any window can produce:
+    /// p99 judges the max-loaded shard (worst case the whole window on
+    /// one shard), p50 the mean load (worst case over the fewest legal
+    /// shards). `None` when no modeled bounds were supplied.
+    fn max_slo_severity(&self) -> Option<f64> {
+        let b = self.slo?;
+        let min_shards = self
+            .policy
+            .rules
+            .iter()
+            .filter_map(|r| match r.action {
+                Action::Reshard(n) if (1..=MAX_SHARDS).contains(&n) => Some(n),
+                _ => None,
+            })
+            .chain(std::iter::once(self.initial_shards))
+            .min()
+            .unwrap_or(1);
+        let worst_p99 = b.slo.drain_ns(b.window_packets as f64);
+        let worst_p50 =
+            b.slo.drain_ns(b.window_packets as f64 / min_shards.max(1) as f64);
+        let exceed = |v: f64, limit: f64| {
+            if limit > 0.0 {
+                (v - limit) / limit
+            } else {
+                0.0
+            }
+        };
+        Some(
+            exceed(worst_p99, b.p99_limit_ns).max(exceed(worst_p50, b.p50_limit_ns)),
+        )
+    }
+
+    fn explore(&self) -> Graph {
+        let initial = AbsState {
+            model: self.default_model_name(),
+            backend: self.initial_backend,
+            shards: self.initial_shards,
+            overflow: self.initial_overflow,
+        };
+        let mut states = vec![initial];
+        let mut edges: Vec<Edge> = Vec::new();
+        let mut rule_reachable = vec![false; self.policy.rules.len()];
+        let mut frontier = vec![0usize];
+        while let Some(si) = frontier.pop() {
+            for (ri, rule) in self.policy.rules.iter().enumerate() {
+                if !self.rule_possible(rule, &states[si]) {
+                    continue;
+                }
+                rule_reachable[ri] = true;
+                let next = self.apply(&states[si], &rule.action);
+                if next == states[si] {
+                    continue;
+                }
+                let ti = match states.iter().position(|s| *s == next) {
+                    Some(t) => t,
+                    None => {
+                        states.push(next);
+                        frontier.push(states.len() - 1);
+                        states.len() - 1
+                    }
+                };
+                edges.push(Edge { from: si, rule: ri, to: ti });
+            }
+        }
+        Graph { states, edges, rule_reachable }
+    }
+
+    // -- analysis 1a: reachability --------------------------------------
+
+    fn check_reachability(&self, graph: &Graph, findings: &mut Vec<LintFinding>) {
+        let max_shards_reachable =
+            graph.states.iter().map(|s| s.shards).max().unwrap_or(1);
+        for (i, rule) in self.policy.rules.iter().enumerate() {
+            if graph.rule_reachable[i] {
+                continue;
+            }
+            let missing_detector = self
+                .detector_kinds
+                .as_ref()
+                .map(|k| !k.contains(&rule.on))
+                .unwrap_or(false);
+            let message = if missing_detector {
+                format!(
+                    "no {} detector is installed — no detection of this kind \
+                     can ever be produced",
+                    rule.on.name()
+                )
+            } else {
+                match rule.on {
+                    SignalKind::Imbalance if max_shards_reachable < 2 => format!(
+                        "no reachable configuration has more than \
+                         {max_shards_reachable} shard(s) — shard imbalance \
+                         cannot exist on a single-shard tier"
+                    ),
+                    SignalKind::LatencySlo => {
+                        // The never-fires / unreachable-threshold case is
+                        // reported by the SLO analysis with its computed
+                        // bound; do not double-report here.
+                        continue;
+                    }
+                    _ => {
+                        let bound = rule
+                            .on
+                            .severity_bound(max_shards_reachable)
+                            .unwrap_or(f64::INFINITY);
+                        format!(
+                            "min-severity {} exceeds the maximum {} severity \
+                             {bound} (the detector's severity is bounded by \
+                             construction) — no detection can ever reach it",
+                            rule.min_severity,
+                            rule.on.name(),
+                        )
+                    }
+                }
+            };
+            findings.push(
+                LintFinding::warning(LintKind::UnreachableRule, message)
+                    .at(i, self.rule_text(i)),
+            );
+        }
+    }
+
+    // -- analysis 3: modeled-SLO threshold sanity -----------------------
+
+    fn check_slo(&self, findings: &mut Vec<LintFinding>) {
+        let Some(b) = self.slo else { return };
+        let floor = b.slo.drain_ns(0.0);
+        let worst = b.slo.drain_ns(b.window_packets as f64);
+        let max_sev = self.max_slo_severity().unwrap_or(0.0);
+        for (i, rule) in self.policy.rules.iter().enumerate() {
+            if rule.on != SignalKind::LatencySlo {
+                continue;
+            }
+            let limit = b.p50_limit_ns.min(b.p99_limit_ns);
+            if limit < floor {
+                findings.push(
+                    LintFinding::error(
+                        LintKind::SloAlwaysFires,
+                        format!(
+                            "the modeled-SLO limit {limit:.0} ns is below the \
+                             program's physical drain floor {floor:.0} ns \
+                             (the pipeline fill of an EMPTY queue) — every \
+                             observed window breaches before a single packet \
+                             queues, so this rule fires on every episode \
+                             regardless of load",
+                        ),
+                    )
+                    .at(i, self.rule_text(i)),
+                );
+            } else if max_sev <= 0.0 {
+                findings.push(
+                    LintFinding::warning(
+                        LintKind::SloNeverFires,
+                        format!(
+                            "the modeled-SLO limit {:.0} ns exceeds the drain \
+                             {worst:.0} ns of the worst reachable queue depth \
+                             ({} packets all landing on one shard) — no \
+                             window can ever breach, the rule is dead",
+                            b.p99_limit_ns.max(b.p50_limit_ns),
+                            b.window_packets,
+                        ),
+                    )
+                    .at(i, self.rule_text(i)),
+                );
+            } else if rule.min_severity > max_sev {
+                findings.push(
+                    LintFinding::warning(
+                        LintKind::UnreachableRule,
+                        format!(
+                            "min-severity {} exceeds the maximum modeled-SLO \
+                             exceed fraction {max_sev:.3} (worst reachable \
+                             drain {worst:.0} ns over the {:.0} ns limit) — \
+                             no detection can ever reach it",
+                            rule.min_severity, b.p99_limit_ns,
+                        ),
+                    )
+                    .at(i, self.rule_text(i)),
+                );
+            }
+        }
+    }
+
+    // -- analysis 1c: cycles and the hysteresis argument ----------------
+
+    fn check_cycles(&self, graph: &Graph, findings: &mut Vec<LintFinding>) {
+        // Iteratively discard edges whose trigger NO other surviving
+        // edge's action perturbs: re-firing such an edge needs an
+        // external condition change, and the cooldown-plus-clear
+        // hysteresis guarantees one action per episode for externally
+        // driven conditions — the cycle is provably broken there. What
+        // survives to a fixed point is the self-sustaining core.
+        // Per-kind counts of live perturbing edges keep each sweep
+        // O(edges) instead of O(edges²).
+        let kind_idx = |k: SignalKind| match k {
+            SignalKind::DdosRamp => 0usize,
+            SignalKind::Drift => 1,
+            SignalKind::Overload => 2,
+            SignalKind::Imbalance => 3,
+            SignalKind::LatencySlo => 4,
+        };
+        let mut live: Vec<bool> = vec![true; graph.edges.len()];
+        let mut perturbing = [0usize; 5];
+        for e in &graph.edges {
+            for k in perturbs(&self.policy.rules[e.rule].action) {
+                perturbing[kind_idx(*k)] += 1;
+            }
+        }
+        loop {
+            let mut changed = false;
+            for e in 0..graph.edges.len() {
+                if !live[e] {
+                    continue;
+                }
+                let action = &self.policy.rules[graph.edges[e].rule].action;
+                let kind = self.policy.rules[graph.edges[e].rule].on;
+                // "Another" edge must sustain this one — discount this
+                // edge's own contribution to its trigger kind.
+                let own = perturbs(action).contains(&kind) as usize;
+                if perturbing[kind_idx(kind)] <= own {
+                    live[e] = false;
+                    for k in perturbs(action) {
+                        perturbing[kind_idx(*k)] -= 1;
+                    }
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        let core: Vec<Edge> = graph
+            .edges
+            .iter()
+            .zip(&live)
+            .filter(|(_, l)| **l)
+            .map(|(e, _)| *e)
+            .collect();
+        let mut reported: Vec<usize> = Vec::new(); // states already on a reported cycle
+        while let Some(cycle) = find_cycle(graph.states.len(), &core, &reported) {
+            reported.extend(cycle.iter().map(|e| e.from));
+            let rules: Vec<usize> = cycle.iter().map(|e| e.rule).collect();
+            let max_cooldown = rules
+                .iter()
+                .map(|&r| self.policy.rules[r].cooldown)
+                .max()
+                .unwrap_or(0);
+            let period = (max_cooldown + 1).max(2);
+            let mut path = graph.states[cycle[0].from].render();
+            for e in &cycle {
+                path.push_str(&format!(
+                    " -(rule {}: {})-> {}",
+                    e.rule,
+                    self.rule_text(e.rule),
+                    graph.states[e.to].render()
+                ));
+            }
+            findings.push(
+                LintFinding::error(
+                    LintKind::SwapCycle,
+                    format!(
+                        "rules {rules:?} form a self-sustaining configuration \
+                         cycle: {path}; every trigger on the cycle is \
+                         re-created by another cycle action, so the \
+                         condition-clear requirement is satisfied by the loop \
+                         itself and cooldown only bounds the flap period \
+                         (>= {period} window(s) per revolution) — hysteresis \
+                         cannot break it",
+                    ),
+                )
+                .at(cycle[0].rule, self.rule_text(cycle[0].rule)),
+            );
+        }
+    }
+}
+
+/// Find one directed cycle in `edges`, avoiding states already on a
+/// reported cycle (so each oscillation core is reported once). Returns
+/// the cycle's edges in path order.
+fn find_cycle(n_states: usize, edges: &[Edge], skip: &[usize]) -> Option<Vec<Edge>> {
+    // 0 = white, 1 = on the current DFS path, 2 = done.
+    let mut color = vec![0u8; n_states];
+    for s in skip {
+        color[*s] = 2;
+    }
+    let mut path: Vec<Edge> = Vec::new();
+    for start in 0..n_states {
+        if color[start] != 0 {
+            continue;
+        }
+        if let Some(c) = dfs_cycle(start, edges, &mut color, &mut path) {
+            return Some(c);
+        }
+    }
+    None
+}
+
+fn dfs_cycle(
+    node: usize,
+    edges: &[Edge],
+    color: &mut Vec<u8>,
+    path: &mut Vec<Edge>,
+) -> Option<Vec<Edge>> {
+    color[node] = 1;
+    for e in edges.iter().filter(|e| e.from == node) {
+        match color[e.to] {
+            1 => {
+                // Back edge: the cycle is the path suffix from `e.to`.
+                let mut cycle: Vec<Edge> = path
+                    .iter()
+                    .skip_while(|p| p.from != e.to)
+                    .copied()
+                    .collect();
+                cycle.push(*e);
+                return Some(cycle);
+            }
+            0 => {
+                path.push(*e);
+                if let Some(c) = dfs_cycle(e.to, edges, color, path) {
+                    return Some(c);
+                }
+                path.pop();
+            }
+            _ => {}
+        }
+    }
+    color[node] = 2;
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::BnnModel;
+    use crate::controlplane::Policy;
+
+    fn bank() -> ModelBank {
+        ModelBank::new("day", BnnModel::random(32, &[64, 32], 1))
+            .with_model("attack", BnnModel::random(32, &[64, 32], 2))
+    }
+
+    fn lint(policy_text: &str) -> LintReport {
+        let policy = Policy::parse(policy_text).unwrap();
+        let b = bank();
+        Linter::new(&policy)
+            .with_bank(&b)
+            .with_tier_shape(2, BackendKind::Batched)
+            .lint()
+    }
+
+    #[test]
+    fn default_shaped_policy_is_clean() {
+        let r = lint(
+            "on ddos-ramp do swap attack cooldown=4\n\
+             on overload do alert cooldown=8\n\
+             on drift do alert cooldown=8\n\
+             on imbalance do alert cooldown=8\n\
+             on latency-slo do alert cooldown=8\n",
+        );
+        assert!(r.is_clean(), "{}", r.render());
+        assert!(r.ok(true));
+    }
+
+    #[test]
+    fn ping_pong_swap_cycle_is_an_error() {
+        let r = lint(
+            "on ddos-ramp do swap attack cooldown=0\n\
+             on drift do fallback cooldown=0\n",
+        );
+        assert_eq!(r.n_errors(), 1, "{}", r.render());
+        assert_eq!(r.findings[0].kind, LintKind::SwapCycle);
+        assert!(r.findings[0].message.contains("self-sustaining"));
+        assert!(!r.ok(false));
+    }
+
+    #[test]
+    fn externally_driven_cycle_is_provably_broken() {
+        // attack -> day is driven by latency-slo, which no model swap
+        // perturbs: the loop cannot re-create its own trigger, so
+        // hysteresis (one action per external episode) breaks it.
+        let r = lint(
+            "on ddos-ramp do swap attack cooldown=6\n\
+             on latency-slo do fallback cooldown=8\n",
+        );
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn backend_flip_flop_is_a_cycle() {
+        let r = lint(
+            "on overload do backend scalar\n\
+             on latency-slo do backend batched\n",
+        );
+        assert_eq!(r.n_errors(), 1, "{}", r.render());
+        assert_eq!(r.findings[0].kind, LintKind::SwapCycle);
+    }
+
+    #[test]
+    fn unknown_swap_target_and_reshard_range() {
+        let r = lint("on ddos-ramp do swap nightshift\n");
+        assert_eq!(r.findings[0].kind, LintKind::UnknownSwapTarget);
+        assert!(r.findings[0].message.contains("nightshift"));
+        let r = lint("on imbalance do reshard 65\n");
+        assert_eq!(r.findings[0].kind, LintKind::ReshardRange);
+        assert!(r.findings[0].message.contains("1..=64"), "{}", r.render());
+    }
+
+    #[test]
+    fn incompatible_swap_target_is_proven_statically() {
+        let policy = Policy::parse("on ddos-ramp do swap attack\n").unwrap();
+        let day = BnnModel::random(32, &[64, 32], 1);
+        let b = ModelBank::new("day", day.clone())
+            .with_model("attack", BnnModel::random(64, &[32, 8], 2));
+        let r = Linter::new(&policy)
+            .with_bank(&b)
+            .with_deployed(&day.spec)
+            .with_tier_shape(2, BackendKind::Batched)
+            .lint();
+        assert_eq!(r.findings[0].kind, LintKind::IncompatibleSwapTarget);
+        assert!(r.findings[0].message.contains("64b"), "{}", r.render());
+        // And the rejected swap contributes no graph edge, so there is
+        // no phantom cycle with a later fallback rule.
+        assert_eq!(r.n_errors(), 1, "{}", r.render());
+    }
+
+    #[test]
+    fn keyed_deployment_outlaws_specialized_and_reference() {
+        let policy = Policy::parse(
+            "on latency-slo do backend specialized\n\
+             on overload do backend reference\n",
+        )
+        .unwrap();
+        let b = bank();
+        let r = Linter::new(&policy)
+            .with_bank(&b)
+            .with_tier_shape(2, BackendKind::Batched)
+            .keyed()
+            .lint();
+        let kinds: Vec<LintKind> = r.findings.iter().map(|f| f.kind).collect();
+        assert!(kinds.contains(&LintKind::KeyedSpecialized), "{}", r.render());
+        assert!(kinds.contains(&LintKind::KeyedReference), "{}", r.render());
+    }
+
+    #[test]
+    fn shadowed_rule_on_same_kind_and_dimension() {
+        let r = lint(
+            "on overload do reshard 8\n\
+             on overload min-severity=0.5 do reshard 8\n",
+        );
+        assert_eq!(r.n_warnings(), 1, "{}", r.render());
+        assert_eq!(r.findings[0].kind, LintKind::ShadowedRule);
+        assert_eq!(r.findings[0].rule, Some(1));
+        assert!(r.ok(false) && !r.ok(true), "deny-warnings flips it");
+    }
+
+    #[test]
+    fn cross_dimension_rules_on_one_kind_are_not_shadowed() {
+        let r = lint(
+            "on overload do overflow drop\n\
+             on overload min-severity=0.5 do reshard 8\n",
+        );
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn unreachable_severity_and_missing_detector() {
+        let r = lint("on drift min-severity=1.5 do alert\n");
+        assert_eq!(r.findings[0].kind, LintKind::UnreachableRule);
+        assert!(r.findings[0].message.contains("1.5"), "{}", r.render());
+
+        let policy = Policy::parse("on imbalance do alert\n").unwrap();
+        let b = bank();
+        let r = Linter::new(&policy)
+            .with_bank(&b)
+            .with_tier_shape(4, BackendKind::Batched)
+            .with_detector_kinds(vec![SignalKind::DdosRamp, SignalKind::Overload])
+            .lint();
+        assert_eq!(r.findings[0].kind, LintKind::UnreachableRule);
+        assert!(r.findings[0].message.contains("no imbalance detector"));
+    }
+
+    #[test]
+    fn single_shard_tier_cannot_be_imbalanced_until_a_reshard_reaches_it() {
+        let policy = Policy::parse("on imbalance do alert\n").unwrap();
+        let b = bank();
+        let r = Linter::new(&policy)
+            .with_bank(&b)
+            .with_tier_shape(1, BackendKind::Batched)
+            .lint();
+        assert_eq!(r.findings[0].kind, LintKind::UnreachableRule);
+        assert!(r.findings[0].message.contains("single-shard"));
+
+        // An overload-driven reshard makes >=2 shards reachable, and
+        // the imbalance rule with it.
+        let policy = Policy::parse(
+            "on overload do reshard 4\non imbalance do alert\n",
+        )
+        .unwrap();
+        let r = Linter::new(&policy)
+            .with_bank(&b)
+            .with_tier_shape(1, BackendKind::Batched)
+            .lint();
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn slo_always_and_never_fires_report_computed_bounds() {
+        let slo = ModeledSlo { fill_cycles: 410, slots_per_packet: 1, clock_hz: 960e6 };
+        let policy = Policy::parse("on latency-slo do alert\n").unwrap();
+        let b = bank();
+        // Floor is ~427 ns; a 100 ns limit fires on every window.
+        let r = Linter::new(&policy)
+            .with_bank(&b)
+            .with_tier_shape(2, BackendKind::Batched)
+            .with_modeled_slo(SloBounds {
+                slo,
+                p50_limit_ns: 100.0,
+                p99_limit_ns: 100.0,
+                window_packets: 512,
+            })
+            .lint();
+        assert_eq!(r.findings[0].kind, LintKind::SloAlwaysFires);
+        assert!(r.findings[0].message.contains("427"), "{}", r.render());
+        // Worst reachable drain is ~960 ns (512 pkts on one shard); a
+        // 1 ms limit can never be breached.
+        let r = Linter::new(&policy)
+            .with_bank(&b)
+            .with_tier_shape(2, BackendKind::Batched)
+            .with_modeled_slo(SloBounds {
+                slo,
+                p50_limit_ns: 1e6,
+                p99_limit_ns: 1e6,
+                window_packets: 512,
+            })
+            .lint();
+        assert_eq!(r.findings[0].kind, LintKind::SloNeverFires);
+        assert!(r.findings[0].message.contains("dead"), "{}", r.render());
+        assert!(r.ok(false) && !r.ok(true));
+    }
+
+    #[test]
+    fn report_renders_like_the_verify_layer() {
+        let r = lint("on ddos-ramp do swap nightshift\n");
+        let rendered = r.render();
+        assert!(rendered.contains("error[unknown-swap-target] rule 0"));
+        assert!(rendered.contains("lint: 1 error(s), 0 warning(s)"));
+        assert!(!r.digest().is_empty());
+        let clean = lint("on overload do alert\n");
+        assert_eq!(clean.render(), "lint: clean — no findings\n");
+    }
+}

@@ -37,6 +37,14 @@
 //! * [`policy`] — declarative [`Policy`] rules (condition → action)
 //!   evaluated by a [`PolicyEngine`] with hysteresis and cooldown, so
 //!   a sustained condition acts once and the loop never flaps.
+//! * [`lint`] — the static policy analyzer (DESIGN.md §19): proves a
+//!   [`Policy`] sane against the bank, detector set, deployed program,
+//!   and tier shape WITHOUT executing a window — swap-oscillation /
+//!   reachability / shadowing over an abstract configuration-state
+//!   graph, target-legality proofs, and modeled-SLO threshold sanity —
+//!   reported as structured [`lint::LintFinding`]s (`n2net lint`; also
+//!   the pre-flight gate refusing bad policies before adaptive serving
+//!   spawns the controller).
 //! * [`controller`] — the [`Controller`]: tick(snapshot) → detections →
 //!   firings → actions executed through a
 //!   [`SwapHandle`](crate::deploy::SwapHandle) against a [`ModelBank`]
@@ -59,12 +67,16 @@
 
 pub mod controller;
 pub mod detect;
+pub mod lint;
 pub mod live;
 pub mod policy;
 pub mod signal;
 pub mod sim;
 
-pub use controller::{ControlEvent, Controller, ModelBank, Outcome, TickReport};
+pub use controller::{
+    check_action, ControlEvent, Controller, ModelBank, Outcome, TickReport,
+};
+pub use lint::{LintFinding, LintKind, LintReport, Linter, SloBounds};
 pub use detect::{
     DdosRampDetector, Detection, Detector, DriftDetector, ImbalanceDetector,
     LatencySloDetector, LatencySource, OverloadDetector, SignalKind,

@@ -99,8 +99,18 @@ impl Policy {
             if line.is_empty() {
                 continue;
             }
+            // Every grammar error names the 1-based line and the
+            // offending token — a policy is edited mid-incident, and
+            // "something somewhere is wrong" is not a diagnostic.
             let err = |msg: String| {
                 Error::Config(format!("policy line {}: {msg}", lineno + 1))
+            };
+            // Vocabulary errors from the shared parsers (detector /
+            // backend / overflow names) come back without provenance;
+            // re-wrap them under this line's prefix.
+            let reword = |e: Error| match e {
+                Error::Config(msg) => err(msg),
+                other => err(other.to_string()),
             };
             let mut tokens = line.split_whitespace();
             if tokens.next() != Some("on") {
@@ -108,9 +118,21 @@ impl Policy {
             }
             let kind = SignalKind::parse(
                 tokens.next().ok_or_else(|| err("missing detector name".into()))?,
-            )?;
-            if tokens.next() != Some("do") {
-                return Err(err("expected `do` after the detector name".into()));
+            )
+            .map_err(reword)?;
+            match tokens.next() {
+                Some("do") => {}
+                Some(other) => {
+                    return Err(err(format!(
+                        "expected `do` after the detector name, got {other:?}"
+                    )))
+                }
+                None => {
+                    return Err(err(
+                        "expected `do` after the detector name, got end of line"
+                            .into(),
+                    ))
+                }
             }
             let action = match tokens.next() {
                 Some("swap") => Action::SwapModel(
@@ -133,16 +155,18 @@ impl Policy {
                     }
                     Action::Reshard(n)
                 }
-                Some("backend") => Action::SwitchBackend(BackendKind::parse(
-                    tokens
-                        .next()
-                        .ok_or_else(|| err("`backend` needs a backend kind".into()))?,
-                )?),
-                Some("overflow") => Action::Overflow(OverflowPolicy::parse(
-                    tokens.next().ok_or_else(|| {
+                Some("backend") => Action::SwitchBackend(
+                    BackendKind::parse(tokens.next().ok_or_else(|| {
+                        err("`backend` needs a backend kind".into())
+                    })?)
+                    .map_err(reword)?,
+                ),
+                Some("overflow") => Action::Overflow(
+                    OverflowPolicy::parse(tokens.next().ok_or_else(|| {
                         err("`overflow` needs a policy (block|drop)".into())
-                    })?,
-                )?),
+                    })?)
+                    .map_err(reword)?,
+                ),
                 other => {
                     return Err(err(format!(
                         "unknown action {other:?} (expected swap <model>|fallback|\
@@ -388,6 +412,112 @@ mod tests {
         assert!(Policy::parse("on drift do alert volume=11").is_err());
         let err = Policy::parse("on latency do alert").unwrap_err().to_string();
         assert!(err.contains("ddos-ramp"), "kind error enumerates names: {err}");
+    }
+
+    /// Satellite (ISSUE 10): every grammar error arm names the 1-based
+    /// line AND the offending token, including the vocabulary errors
+    /// that bubble up from the shared detector/backend/overflow parsers.
+    #[test]
+    fn every_grammar_error_reports_line_and_token() {
+        let cases: &[(&str, &str)] = &[
+            // (bad second line, fragment the error must carry)
+            ("when drift do alert", "\"when drift do alert\""),
+            ("on", "missing detector name"),
+            ("on latency do alert", "unknown detector \"latency\""),
+            ("on drift", "got end of line"),
+            ("on drift then alert", "got \"then\""),
+            ("on drift alert", "got \"alert\""),
+            ("on drift do", "unknown action None"),
+            ("on drift do reboot", "unknown action Some(\"reboot\")"),
+            ("on drift do swap", "`swap` needs a bank model name"),
+            ("on drift do reshard", "`reshard` needs a shard count"),
+            ("on drift do reshard x", "reshard count \"x\" is not an integer"),
+            ("on drift do reshard 0", "reshard count must be >= 1"),
+            ("on drift do backend", "`backend` needs a backend kind"),
+            ("on drift do backend gpu", "unknown backend"),
+            ("on drift do overflow", "`overflow` needs a policy"),
+            ("on drift do overflow spill", "unknown overflow policy \"spill\""),
+            ("on drift do alert cooldown=x", "cooldown=\"x\" is not an integer"),
+            ("on drift do alert min-severity=y", "min-severity=\"y\" is not a number"),
+            ("on drift do alert volume=11", "unknown option \"volume=11\""),
+        ];
+        for (bad, fragment) in cases {
+            // A clean first line proves the reported number is the BAD
+            // line's, not just "line 1".
+            let text = format!("on overload do alert\n{bad}\n");
+            let e = Policy::parse(&text)
+                .expect_err(&format!("{bad:?} must be rejected"))
+                .to_string();
+            assert!(
+                e.contains("policy line 2"),
+                "{bad:?}: error must carry the 1-based line: {e}"
+            );
+            assert!(
+                e.contains(fragment),
+                "{bad:?}: error must carry the offending token {fragment:?}: {e}"
+            );
+        }
+        // The empty-policy error is policy-wide: no line to blame.
+        let e = Policy::parse("# only comments\n").unwrap_err().to_string();
+        assert!(e.contains("empty policy"), "{e}");
+        assert!(!e.contains("policy line"), "{e}");
+        // Vocabulary errors still enumerate the legal names.
+        let e = Policy::parse("on latency do alert").unwrap_err().to_string();
+        assert!(e.contains("policy line 1"), "{e}");
+        assert!(e.contains("ddos-ramp|drift|overload|imbalance|latency-slo"), "{e}");
+        let e = Policy::parse("on drift do backend gpu").unwrap_err().to_string();
+        assert!(e.contains("policy line 1") && e.contains("\"gpu\""), "{e}");
+    }
+
+    /// Satellite (ISSUE 10): `cooldown=0` re-arm audit. With no
+    /// cooldown the ONLY hysteresis is the condition-clear requirement
+    /// — a sustained episode still fires exactly once, and the fastest
+    /// legal flap is fire / clear / fire (every other window).
+    #[test]
+    fn cooldown_zero_still_needs_a_clear_window() {
+        let p = Policy::parse("on ddos-ramp do swap attack cooldown=0").unwrap();
+        let mut e = PolicyEngine::new(p);
+        assert_eq!(e.decide(0, &[det(SignalKind::DdosRamp, 0.5, 0)]).len(), 1);
+        // Sustained condition: cooldown elapsed instantly, but the
+        // condition never cleared — one action per episode holds.
+        for w in 1..5 {
+            assert!(
+                e.decide(w, &[det(SignalKind::DdosRamp, 0.5, w)]).is_empty(),
+                "window {w}: disarmed until a clear window"
+            );
+        }
+        // Clear at 5 re-arms (0-cooldown passed long ago); the next
+        // detection starts a NEW episode.
+        assert!(e.decide(5, &[]).is_empty());
+        assert_eq!(e.decide(6, &[det(SignalKind::DdosRamp, 0.5, 6)]).len(), 1);
+    }
+
+    /// Satellite (ISSUE 10): the exactly-at-cooldown boundary is
+    /// INCLUSIVE — `window >= last_fired + cooldown` — so a clear
+    /// window landing exactly `cooldown` windows after the firing
+    /// re-arms, and one window earlier does not.
+    #[test]
+    fn rearm_boundary_is_inclusive_at_exactly_cooldown() {
+        let text = "on overload do alert cooldown=5";
+        // One window early: cleared at 7 = fired(3) + 4 < 8 — still
+        // cooling, so the detection at 8 does not fire.
+        let mut e = PolicyEngine::new(Policy::parse(text).unwrap());
+        assert_eq!(e.decide(3, &[det(SignalKind::Overload, 1.0, 3)]).len(), 1);
+        assert!(e.decide(7, &[]).is_empty());
+        assert!(
+            e.decide(8, &[det(SignalKind::Overload, 1.0, 8)]).is_empty(),
+            "cleared one window before the boundary must NOT re-arm"
+        );
+        // Exactly at the boundary: cleared at 8 = fired(3) + 5 — the
+        // >= comparison re-arms, and window 9 fires a new episode.
+        let mut e = PolicyEngine::new(Policy::parse(text).unwrap());
+        assert_eq!(e.decide(3, &[det(SignalKind::Overload, 1.0, 3)]).len(), 1);
+        assert!(e.decide(8, &[]).is_empty());
+        assert_eq!(
+            e.decide(9, &[det(SignalKind::Overload, 1.0, 9)]).len(),
+            1,
+            "clear exactly at last_fired + cooldown re-arms"
+        );
     }
 
     #[test]

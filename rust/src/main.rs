@@ -13,6 +13,8 @@
 //!               [--schedule] [--p4 FILE] [--seed S]
 //! n2net check   [--in-bits N] [--layers 64,32] [--native-popcnt]
 //!               [--seed S] [--prefix-classifier] [--deny-warnings] [--help]
+//! n2net lint    [--policy FILE] [--deny-warnings] [--keyed] [--shards S]
+//!               [--window N] [--modeled-slo [--slo-limit-ns N]] [--help]
 //! n2net timing  [--in-bits N] [--layers 64,32] [--native-popcnt]
 //!               [--seed S] [--packets N] [--help]
 //! n2net run     [--packets N] [--workers W] [--seed S] [--artifacts DIR]
@@ -47,8 +49,8 @@ use n2net::bnn::{self, BnnModel, PackedBits};
 use n2net::compiler::{p4gen, render_table1, Compiler, CompilerOptions};
 use n2net::controlplane::{
     prefix_classifier, sim_ddos, spawn_live, ControlEvent, Controller, Detector,
-    LatencySloDetector, LiveConfig, ManualClock, ModelBank, Outcome, Policy, Sim,
-    SimConfig,
+    LatencySloDetector, Linter, LiveConfig, ManualClock, ModelBank, Outcome,
+    Policy, Sim, SimConfig, SloBounds,
 };
 use n2net::coordinator::{BatchPolicy, RouterPolicy};
 use n2net::deploy::{Deployment, DeploymentBuilder, FieldExtractor, SwapHandle};
@@ -67,7 +69,7 @@ const VALUE_OPTS: &[&str] = &[
     "in-bits", "layers", "seed", "packets", "workers", "router", "artifacts",
     "p4", "steps", "backend", "batch-size", "models", "extract", "swaps",
     "shards", "scenario", "sequence", "window", "policy", "metrics-file",
-    "trace",
+    "trace", "slo-limit-ns",
 ];
 
 fn main() {
@@ -91,7 +93,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: n2net <report|compile|check|timing|run|serve|autopilot|obs|swap|selftest> [options]\n\
+        "usage: n2net <report|compile|check|lint|timing|run|serve|autopilot|obs|swap|selftest> [options]\n\
          see `n2net report all` for every paper artifact and\n\
          `n2net serve --help` / `n2net autopilot --help` / `n2net obs --help`\n\
          for serving and observability options"
@@ -103,6 +105,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("report") => cmd_report(args),
         Some("compile") => cmd_compile(args),
         Some("check") => cmd_check(args),
+        Some("lint") => cmd_lint(args),
         Some("timing") => cmd_timing(args),
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
@@ -384,6 +387,107 @@ fn cmd_check(args: &Args) -> anyhow::Result<()> {
         report.n_errors(),
         report.n_warnings(),
         if deny { ", warnings denied" } else { "" },
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// lint — static policy/config verification (controlplane::lint, DESIGN.md §19)
+// ---------------------------------------------------------------------------
+
+fn lint_help() -> String {
+    "usage: n2net lint [options]\n\
+     static policy verification (n2net::controlplane::lint, DESIGN.md §19):\n\
+     cross-check a policy against the model bank, detector set, deployed\n\
+     program, and tier shape WITHOUT executing a single window. Analyses:\n\
+     swap-oscillation cycles not provably broken by hysteresis, unreachable\n\
+     and shadowed rules over the abstract configuration-state graph, target\n\
+     legality (swap-cycle, unreachable-rule, shadowed-rule,\n\
+     unknown-swap-target, incompatible-swap-target, reshard-range,\n\
+     lut-switch-target, keyed-specialized, keyed-reference), and modeled-SLO\n\
+     threshold sanity (slo-always-fires, slo-never-fires). Exits non-zero on\n\
+     any error (or any warning under --deny-warnings), for CI smoke use.\n\
+     The same analyses gate `serve --adaptive` and `autopilot` pre-flight.\n\
+     \x20 --policy FILE         policy to lint (default: the built-in\n\
+     \x20                       adaptive-serving policy)\n\
+     \x20 --deny-warnings       treat warnings as failures\n\
+     \x20 --keyed               lint as a keyed (multi-model) deployment,\n\
+     \x20                       where specialized|reference are illegal\n\
+     \x20 --shards S            initial tier shard count (default 2)\n\
+     \x20 --window N            frames per control window (default 512)\n\
+     \x20 --modeled-slo         judge latency-slo thresholds against the\n\
+     \x20                       program's ASIC cycle model (n2net::timing)\n\
+     \x20 --slo-limit-ns N      override the modeled p50/p99 limit (ns);\n\
+     \x20                       requires --modeled-slo\n\
+     \x20 --backend scalar|batched|reference|specialized\n\
+     \x20 --artifacts DIR       trained weights (falls back to the crafted\n\
+     \x20                       subnet classifier, like adaptive serving)\n\
+     \x20 --seed S              synthetic-model seed"
+        .into()
+}
+
+/// `n2net lint` — run the static policy analyzer against the same
+/// bank/deployment shape adaptive serving would build, and exit
+/// non-zero on error findings (or any finding under `--deny-warnings`).
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    if args.has_flag("help") {
+        println!("{}", lint_help());
+        return Ok(());
+    }
+    ensure!(
+        args.opt("slo-limit-ns").is_none() || args.has_flag("modeled-slo"),
+        "--slo-limit-ns judges the MODELED thresholds; pass --modeled-slo too"
+    );
+    let seed = args.opt_u64("seed", 3)?;
+    let shards = args.opt_usize("shards", 2)?.max(1);
+    let window = args.opt_usize("window", 512)?.max(1);
+    let backend = backend_for(args)?;
+    let policy = policy_for(args)?;
+    // The same bank shape adaptive serving builds: the live model as
+    // the "day" default plus a same-architecture "attack" candidate.
+    let path = artifacts_dir(args).join("weights.json");
+    let (live, attack, _ddos) =
+        adaptive_models(&path.to_string_lossy(), seed, false)?;
+    let spec = live.spec.clone();
+    let bank = ModelBank::new("day", live.clone()).with_model("attack", attack);
+    println!(
+        "lint {} against bank {:?} ({}b -> {:?}), {shards} shard(s), \
+         backend {}{}",
+        args.opt("policy")
+            .map(|p| format!("--policy {p}"))
+            .unwrap_or_else(|| "the built-in default policy".into()),
+        bank.names(),
+        spec.in_bits,
+        spec.layer_sizes,
+        backend.name(),
+        if args.has_flag("keyed") { ", keyed deployment" } else { "" },
+    );
+    let mut linter = Linter::new(&policy)
+        .with_bank(&bank)
+        .with_deployed(&spec)
+        .with_tier_shape(shards, backend);
+    if args.has_flag("keyed") {
+        linter = linter.keyed();
+    }
+    if args.has_flag("modeled-slo") {
+        let deployment = std::sync::Arc::new(
+            configure_builder(Deployment::builder(), args)?
+                .model("lint", live)
+                .build()?,
+        );
+        linter = linter
+            .with_modeled_slo(slo_bounds_for(args, &deployment, "lint", window, shards)?);
+    }
+    let report = linter.lint();
+    print!("{}", report.render());
+    let deny = args.has_flag("deny-warnings");
+    ensure!(
+        report.ok(deny),
+        "lint failed ({} error(s), {} warning(s){}): {}",
+        report.n_errors(),
+        report.n_warnings(),
+        if deny { ", warnings denied" } else { "" },
+        report.digest(),
     );
     Ok(())
 }
@@ -724,6 +828,73 @@ fn detectors_for(
     Ok(Controller::detectors_with_latency(detector))
 }
 
+/// The modeled-SLO bounds the static linter judges `latency-slo`
+/// thresholds against: the deployed program's cycle model plus the
+/// limit `detectors_for` would hand the live detector (overridable via
+/// `--slo-limit-ns` for threshold experiments).
+fn slo_bounds_for(
+    args: &Args,
+    deployment: &std::sync::Arc<Deployment>,
+    model_name: &str,
+    window_packets: usize,
+    shards: usize,
+) -> anyhow::Result<SloBounds> {
+    let compiled = deployment.compiled(model_name)?;
+    let t = ChipTiming::for_chip(&compiled.chip);
+    let report = timing::analyze_compiled(&compiled, &t)?;
+    let slo = report.slo();
+    let nominal = (window_packets / shards.max(1)).max(1) as u64;
+    let limit = match args.opt_u64("slo-limit-ns", 0)? {
+        0 => slo.limit_ns(nominal, MODELED_SLO_HEADROOM).max(1.0),
+        n => n as f64,
+    };
+    Ok(SloBounds {
+        slo,
+        p50_limit_ns: limit,
+        p99_limit_ns: limit,
+        window_packets: window_packets as u64,
+    })
+}
+
+/// Pre-flight gate (DESIGN.md §19): statically lint the policy against
+/// the bank, tier shape, and — under `--modeled-slo` — the program's
+/// cycle model BEFORE any controller or tier exists. Error-severity
+/// findings refuse the run; warnings print and proceed.
+fn preflight_lint(
+    args: &Args,
+    deployment: &std::sync::Arc<Deployment>,
+    model_name: &str,
+    bank: &ModelBank,
+    policy: &Policy,
+    shards: usize,
+    window_packets: usize,
+) -> anyhow::Result<()> {
+    let spec = bank.default_model().spec.clone();
+    let mut linter = Linter::new(policy)
+        .with_bank(bank)
+        .with_deployed(&spec)
+        .with_tier_shape(shards.max(1), backend_for(args)?);
+    if args.has_flag("modeled-slo") {
+        linter = linter.with_modeled_slo(slo_bounds_for(
+            args,
+            deployment,
+            model_name,
+            window_packets,
+            shards,
+        )?);
+    }
+    let report = linter.lint();
+    if !report.is_clean() {
+        print!("{}", report.render());
+    }
+    ensure!(
+        !report.has_errors(),
+        "policy refused by pre-flight lint: {}",
+        report.digest()
+    );
+    Ok(())
+}
+
 /// Closed-loop serving shared by `serve --adaptive` and `autopilot`:
 /// run the controller over a sequence trace and print the loop report.
 fn run_adaptive(
@@ -742,6 +913,10 @@ fn run_adaptive(
         window_packets: args.opt_usize("window", 512)?.max(1),
         seed,
     };
+    preflight_lint(
+        args, deployment, model_name, &bank, &policy, cfg.n_shards,
+        cfg.window_packets,
+    )?;
     let detectors =
         detectors_for(args, deployment, model_name, cfg.window_packets, cfg.n_shards)?;
     let mut sim =
@@ -782,6 +957,10 @@ fn run_live(
     let policy = policy_for(args)?;
     println!("policy:\n{}", policy.render());
     let window = args.opt_usize("window", 512)?.max(1);
+    // Refuse a statically-unsound policy BEFORE the tier or the
+    // controller thread exists — an oscillating policy never gets to
+    // touch a running data plane.
+    preflight_lint(args, deployment, model_name, &bank, &policy, shards, window)?;
     let engine = deployment.live_sharded_engine(model_name, shards.max(1))?;
     // Observability: share the tier's tracer, register its metrics, and
     // give the live controller thread the span log — detections on the

@@ -267,6 +267,173 @@ fn obs_expose_and_serve_metrics_file_share_the_registry_format() {
     assert!(exposed.contains("# TYPE deploy_model_serve_version gauge"), "{exposed}");
 }
 
+fn policy_path(rel: &str) -> String {
+    format!("{}/../examples/policies/{rel}", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn lint_help_documents_the_analyses_and_knobs() {
+    let out = n2net(&["lint", "--help"]);
+    assert!(out.status.success(), "lint --help failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for flag in
+        ["--policy", "--deny-warnings", "--keyed", "--modeled-slo", "--slo-limit-ns"]
+    {
+        assert!(stdout.contains(flag), "lint --help missing {flag}:\n{stdout}");
+    }
+    for code in ["swap-cycle", "shadowed-rule", "unreachable-rule", "slo-always-fires"]
+    {
+        assert!(stdout.contains(code), "lint --help missing {code:?}:\n{stdout}");
+    }
+    assert!(stdout.contains("static policy verification"), "{stdout}");
+}
+
+#[test]
+fn lint_passes_the_builtin_default_and_the_good_corpus() {
+    // ISSUE 10 acceptance: every shipped example policy AND the
+    // built-in default pass `lint --deny-warnings`. Hermetic: the
+    // crafted subnet classifier stands in for trained weights.
+    let mut runs: Vec<Vec<String>> = vec![vec![]]; // no --policy = built-in
+    for name in ["good/default.policy", "good/escalation.policy", "good/recovery.policy"]
+    {
+        runs.push(vec!["--policy".into(), policy_path(name)]);
+    }
+    for extra in runs {
+        let mut args: Vec<String> = vec![
+            "lint".into(),
+            "--deny-warnings".into(),
+            "--artifacts".into(),
+            "/nonexistent-n2net-artifacts".into(),
+        ];
+        args.extend(extra.iter().cloned());
+        let argv: Vec<&str> = args.iter().map(String::as_str).collect();
+        let out = n2net(&argv);
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "lint {extra:?} failed:\n{stdout}\n{stderr}");
+        assert!(stdout.contains("lint: clean"), "lint {extra:?}:\n{stdout}");
+    }
+}
+
+#[test]
+fn lint_rejects_an_oscillating_policy_with_the_diagnostic_on_stderr() {
+    let path = policy_path("bad/oscillate.policy");
+    let out = n2net(&[
+        "lint",
+        "--policy",
+        &path,
+        "--artifacts",
+        "/nonexistent-n2net-artifacts",
+    ]);
+    assert!(!out.status.success(), "oscillating policy must fail lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stdout.contains("error[swap-cycle]"), "{stdout}");
+    assert!(
+        stderr.contains("swap-cycle"),
+        "the diagnostic must reach stderr:\n{stderr}"
+    );
+}
+
+#[test]
+fn lint_deny_warnings_flips_a_warning_only_run_to_failure() {
+    let path = policy_path("bad/shadowed.policy");
+    let base = [
+        "lint",
+        "--policy",
+        path.as_str(),
+        "--artifacts",
+        "/nonexistent-n2net-artifacts",
+    ];
+    let out = n2net(&base);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "warning-only policy passes plain lint:\n{stdout}"
+    );
+    assert!(stdout.contains("warning[shadowed-rule]"), "{stdout}");
+
+    let mut deny = base.to_vec();
+    deny.push("--deny-warnings");
+    let out = n2net(&deny);
+    assert!(!out.status.success(), "--deny-warnings must flip it to failure");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("shadowed-rule"), "{stderr}");
+    assert!(stderr.contains("warnings denied"), "{stderr}");
+}
+
+#[test]
+fn lint_modeled_slo_judges_thresholds_against_the_cycle_model() {
+    // A 1 ns limit sits below any program's drain floor: always-fires,
+    // an error even without --deny-warnings.
+    let out = n2net(&[
+        "lint",
+        "--modeled-slo",
+        "--slo-limit-ns",
+        "1",
+        "--artifacts",
+        "/nonexistent-n2net-artifacts",
+    ]);
+    assert!(!out.status.success(), "sub-floor SLO limit must fail lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stdout.contains("error[slo-always-fires]"), "{stdout}");
+    assert!(stderr.contains("slo-always-fires"), "{stderr}");
+
+    // A 1-second limit exceeds any reachable queue's drain: the rule is
+    // dead — a warning that only --deny-warnings escalates.
+    let base = [
+        "lint",
+        "--modeled-slo",
+        "--slo-limit-ns",
+        "999999999",
+        "--artifacts",
+        "/nonexistent-n2net-artifacts",
+    ];
+    let out = n2net(&base);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "never-fires is advisory:\n{stdout}");
+    assert!(stdout.contains("warning[slo-never-fires]"), "{stdout}");
+    let mut deny = base.to_vec();
+    deny.push("--deny-warnings");
+    let out = n2net(&deny);
+    assert!(!out.status.success(), "--deny-warnings escalates slo-never-fires");
+}
+
+#[test]
+fn serve_adaptive_refuses_an_oscillating_policy_before_the_loop_spawns() {
+    // ISSUE 10 acceptance: the pre-flight gate refuses error-severity
+    // findings BEFORE the live controller thread (or tier) exists — no
+    // window is ever served under an oscillating policy.
+    let path = policy_path("bad/oscillate.policy");
+    let out = n2net(&[
+        "serve",
+        "--adaptive",
+        "--live",
+        "--sequence",
+        "uniform:256",
+        "--window",
+        "128",
+        "--shards",
+        "2",
+        "--seed",
+        "5",
+        "--policy",
+        &path,
+        "--artifacts",
+        "/nonexistent-n2net-artifacts",
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!out.status.success(), "oscillating policy must be refused");
+    assert!(stdout.contains("error[swap-cycle]"), "{stdout}");
+    assert!(stderr.contains("policy refused by pre-flight lint"), "{stderr}");
+    assert!(
+        !stdout.contains("live loop:") && !stdout.contains("live stream:"),
+        "refusal must land before serving starts:\n{stdout}"
+    );
+}
+
 #[test]
 fn tiny_autopilot_run_completes_without_artifacts() {
     // --artifacts pointing nowhere forces the crafted subnet

@@ -1,0 +1,227 @@
+//! Golden diagnostics for `controlplane::lint` (ISSUE 10 acceptance):
+//! every shipped example policy produces exactly the findings its
+//! header comment promises — the good corpus is clean under
+//! `deny_warnings`, and each bad policy trips its named code — and the
+//! structured codes cover swap-cycle oscillation, shadowed rule,
+//! unreachable rule, unknown swap target, keyed+specialized
+//! illegality, and both modeled-SLO threshold pathologies.
+
+use n2net::backend::BackendKind;
+use n2net::bnn::BnnModel;
+use n2net::controlplane::{LintKind, LintReport, Linter, ModelBank, Policy, SloBounds};
+use n2net::timing::ModeledSlo;
+
+fn corpus(rel: &str) -> String {
+    let path = format!(
+        "{}/../examples/policies/{rel}",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("corpus file {path}: {e}"))
+}
+
+/// The adaptive-serving shape `n2net lint` builds: a "day" default plus
+/// a same-architecture "attack" candidate, 2 shards, batched.
+fn bank() -> (ModelBank, BnnModel) {
+    let day = BnnModel::random(32, &[64, 32], 1);
+    let bank = ModelBank::new("day", day.clone())
+        .with_model("attack", BnnModel::random(32, &[64, 32], 2));
+    (bank, day)
+}
+
+fn lint_text(text: &str, keyed: bool) -> LintReport {
+    let policy = Policy::parse(text).expect("corpus policy parses");
+    let (bank, day) = bank();
+    let mut linter = Linter::new(&policy)
+        .with_bank(&bank)
+        .with_deployed(&day.spec)
+        .with_tier_shape(2, BackendKind::Batched);
+    if keyed {
+        linter = linter.keyed();
+    }
+    linter.lint()
+}
+
+fn codes(report: &LintReport) -> Vec<&'static str> {
+    report.findings.iter().map(|f| f.kind.code()).collect()
+}
+
+#[test]
+fn good_corpus_and_builtin_default_are_clean_under_deny_warnings() {
+    // The built-in default policy (main.rs `policy_for`) ships as
+    // good/default.policy — this test pins that the copy IS the
+    // built-in (same rules after parsing) and that every good policy
+    // lints clean, warnings included.
+    for name in ["good/default.policy", "good/escalation.policy", "good/recovery.policy"]
+    {
+        let report = lint_text(&corpus(name), false);
+        assert!(
+            report.is_clean(),
+            "{name} must lint clean:\n{}",
+            report.render()
+        );
+        assert!(report.ok(true), "{name} must pass --deny-warnings");
+    }
+    let builtin = "on ddos-ramp do swap attack cooldown=4\n\
+                   on overload do alert cooldown=8\n\
+                   on drift do alert cooldown=8\n\
+                   on imbalance do alert cooldown=8\n\
+                   on latency-slo do alert cooldown=8\n";
+    let from_file = Policy::parse(&corpus("good/default.policy")).unwrap();
+    let from_builtin = Policy::parse(builtin).unwrap();
+    assert_eq!(from_file.render(), from_builtin.render(),
+        "good/default.policy must stay in sync with the built-in policy");
+}
+
+#[test]
+fn oscillate_policy_is_a_swap_cycle_error() {
+    let report = lint_text(&corpus("bad/oscillate.policy"), false);
+    assert_eq!(codes(&report), vec!["swap-cycle"], "{}", report.render());
+    assert!(report.has_errors());
+    let f = &report.findings[0];
+    assert!(f.message.contains("self-sustaining"), "{}", f.message);
+    assert!(
+        f.message.contains("cooldown only bounds the flap period"),
+        "the hysteresis argument must be spelled out: {}",
+        f.message
+    );
+    // The rendered line carries the kebab code and the rule provenance.
+    let line = f.to_string();
+    assert!(line.starts_with("error[swap-cycle] rule "), "{line}");
+    assert!(line.contains("on ddos-ramp do swap attack"), "{line}");
+}
+
+#[test]
+fn shadowed_policy_is_a_warning_that_deny_warnings_flips() {
+    let report = lint_text(&corpus("bad/shadowed.policy"), false);
+    assert_eq!(codes(&report), vec!["shadowed-rule"], "{}", report.render());
+    assert!(!report.has_errors());
+    assert!(report.ok(false), "warning-only run passes plain lint");
+    assert!(!report.ok(true), "--deny-warnings flips it to failure");
+    let f = &report.findings[0];
+    assert_eq!(f.rule, Some(1), "the LATER rule is the shadowed one");
+    assert!(f.message.contains("shadowed by rule 0"), "{}", f.message);
+}
+
+#[test]
+fn unreachable_policy_warns_per_dead_rule_with_the_bound() {
+    let report = lint_text(&corpus("bad/unreachable.policy"), false);
+    assert_eq!(
+        codes(&report),
+        vec!["unreachable-rule", "unreachable-rule", "unreachable-rule"],
+        "{}",
+        report.render()
+    );
+    let msgs: Vec<&str> =
+        report.findings.iter().map(|f| f.message.as_str()).collect();
+    assert!(msgs[0].contains("1.5") && msgs[0].contains("drift severity 1"), "{}", msgs[0]);
+    assert!(msgs[1].contains("ddos-ramp severity 1"), "{}", msgs[1]);
+    assert!(msgs[2].contains("imbalance severity 2"), "{}", msgs[2]);
+}
+
+#[test]
+fn unknown_swap_target_reuses_the_controller_message() {
+    let report = lint_text(&corpus("bad/unknown-target.policy"), false);
+    assert_eq!(codes(&report), vec!["unknown-swap-target"], "{}", report.render());
+    let f = &report.findings[0];
+    assert!(
+        f.message.contains("\"nightshift\"") && f.message.contains("model bank"),
+        "must carry the Controller's own wording: {}",
+        f.message
+    );
+}
+
+#[test]
+fn keyed_specialized_is_only_illegal_when_keyed() {
+    let text = corpus("bad/keyed-specialized.policy");
+    let isolated = lint_text(&text, false);
+    assert!(isolated.is_clean(), "isolated deployment:\n{}", isolated.render());
+    let keyed = lint_text(&text, true);
+    assert_eq!(codes(&keyed), vec!["keyed-specialized"], "{}", keyed.render());
+    assert!(keyed.has_errors());
+    assert!(
+        keyed.findings[0].message.contains("per-packet model ids"),
+        "{}",
+        keyed.findings[0].message
+    );
+}
+
+#[test]
+fn lut_and_reshard_range_are_construction_grade_errors() {
+    let report = lint_text(&corpus("bad/lut.policy"), false);
+    assert_eq!(codes(&report), vec!["lut-switch-target"], "{}", report.render());
+    assert!(report.findings[0].message.contains("exact-match table"));
+
+    let report = lint_text(&corpus("bad/reshard-range.policy"), false);
+    assert_eq!(codes(&report), vec!["reshard-range"], "{}", report.render());
+    assert!(report.findings[0].message.contains("1..=64"));
+}
+
+#[test]
+fn incompatible_swap_target_is_an_architecture_proof() {
+    // Not corpus-expressible (needs a mismatched bank): a bank whose
+    // "attack" artifact has a different architecture than the deployed
+    // program turns `swap attack` into a statically-provable no-op.
+    let day = BnnModel::random(32, &[64, 32], 1);
+    let bank = ModelBank::new("day", day.clone())
+        .with_model("attack", BnnModel::random(64, &[32, 8], 2));
+    let policy = Policy::parse(&corpus("good/recovery.policy")).unwrap();
+    let report = Linter::new(&policy)
+        .with_bank(&bank)
+        .with_deployed(&day.spec)
+        .with_tier_shape(2, BackendKind::Batched)
+        .lint();
+    assert_eq!(
+        codes(&report),
+        vec!["incompatible-swap-target"],
+        "{}",
+        report.render()
+    );
+    assert!(report.findings[0].message.contains("publish gate"));
+}
+
+#[test]
+fn modeled_slo_thresholds_always_and_never_fire_with_computed_bounds() {
+    // A 30-stage single-pass program on the stock chip: fill 410
+    // cycles at 960 MHz → floor ≈ 427 ns; 512 packets on one shard
+    // drain in ≈ 960 ns.
+    let slo = ModeledSlo { fill_cycles: 410, slots_per_packet: 1, clock_hz: 960e6 };
+    let policy = Policy::parse("on latency-slo do alert cooldown=8\n").unwrap();
+    let (bank, day) = bank();
+    let with_limit = |limit: f64| {
+        Linter::new(&policy)
+            .with_bank(&bank)
+            .with_deployed(&day.spec)
+            .with_tier_shape(2, BackendKind::Batched)
+            .with_modeled_slo(SloBounds {
+                slo,
+                p50_limit_ns: limit,
+                p99_limit_ns: limit,
+                window_packets: 512,
+            })
+            .lint()
+    };
+    // Below the drain floor: fires on every window — an ERROR.
+    let report = with_limit(100.0);
+    assert_eq!(codes(&report), vec!["slo-always-fires"], "{}", report.render());
+    assert!(report.has_errors());
+    assert!(
+        report.findings[0].message.contains("427"),
+        "computed floor must be in the message: {}",
+        report.findings[0].message
+    );
+    // Above any reachable queue depth: never fires — a WARNING.
+    let report = with_limit(1e6);
+    assert_eq!(codes(&report), vec!["slo-never-fires"], "{}", report.render());
+    assert!(!report.has_errors() && !report.ok(true));
+    assert!(
+        report.findings[0].message.contains("960"),
+        "computed worst drain must be in the message: {}",
+        report.findings[0].message
+    );
+    // A sane limit between the two bounds: clean.
+    let report = with_limit(700.0);
+    assert!(report.is_clean(), "{}", report.render());
+    assert_eq!(report.findings.len(), 0);
+    assert_eq!(LintKind::SloAlwaysFires.code(), "slo-always-fires");
+}
